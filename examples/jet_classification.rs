@@ -1,0 +1,60 @@
+//! End-to-end driver: the paper's full jet-classification experiment.
+//!
+//! Runs the complete SNAC-Pack pipeline — surrogate training on HLS
+//! simulator labels, baseline training, NAC and SNAC-Pack global searches,
+//! §4 selection, local search (IMP + QAT), synthesis — and regenerates
+//! Tables 2–3 and Figures 1–4 into `results/`.
+//!
+//! ```bash
+//! cargo run --release --example jet_classification           # ci preset
+//! cargo run --release --example jet_classification -- paper  # full scale
+//! ```
+//!
+//! This is the EXPERIMENTS.md reference run: the loss curves of every
+//! trained candidate, the Pareto fronts, and the paper-vs-measured table
+//! comparisons all come from here.
+
+use anyhow::Result;
+use snac_pack::config::Preset;
+use snac_pack::coordinator::run_pipeline;
+use snac_pack::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let preset_name = std::env::args().nth(1).unwrap_or_else(|| "ci".to_string());
+    let preset = Preset::by_name(&preset_name)?;
+    let out = std::path::PathBuf::from("results");
+    eprintln!(
+        "[jet-classification] preset `{}`: {} trials × {} epochs, pop {}",
+        preset.name, preset.search.trials, preset.search.epochs, preset.search.population
+    );
+    let rt = Runtime::load(std::path::Path::new("artifacts"))?;
+    let summary = run_pipeline(&rt, &preset, &out)?;
+
+    println!("{}", summary.table2);
+    println!("{}", summary.table3);
+    println!("## Final models");
+    for m in &summary.models {
+        println!(
+            "  {:<18} {} | search acc {:.4} → final test acc {:.4} | sparsity {:.2} | \
+             {} LUT, {} DSP, {} BRAM, {} cc",
+            m.name,
+            m.genome.label(&snac_pack::nn::SearchSpace::table1()),
+            m.search_accuracy,
+            m.final_accuracy,
+            m.sparsity,
+            m.synth.lut,
+            m.synth.dsp,
+            m.synth.bram36,
+            m.synth.latency_cc
+        );
+    }
+    println!("\n## Stage timings");
+    let mut total = 0.0;
+    for (stage, secs) in &summary.timings {
+        println!("  {stage:<32} {secs:>8.1}s");
+        total += secs;
+    }
+    println!("  {:<32} {total:>8.1}s", "TOTAL");
+    println!("\nreports: results/table2.md, table3.md, fig1..4.csv/.txt, trials_*.json");
+    Ok(())
+}

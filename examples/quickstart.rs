@@ -1,0 +1,76 @@
+//! Quickstart: the smallest end-to-end SNAC-Pack run.
+//!
+//! Loads the AOT artifacts, generates a tiny jet dataset, runs a miniature
+//! NAC-objective global search, and prints the Pareto front.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use snac_pack::config::Preset;
+use snac_pack::coordinator::{global_search, GlobalSearchConfig};
+use snac_pack::data::Dataset;
+use snac_pack::hls::FpgaDevice;
+use snac_pack::nn::SearchSpace;
+use snac_pack::objectives::{ObjectiveContext, ObjectiveKind};
+use snac_pack::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let rt = Runtime::load(std::path::Path::new("artifacts"))?;
+    println!("PJRT platform: {}", rt.platform());
+
+    let preset = Preset::by_name("quickstart")?;
+    let ds = Dataset::generate(
+        preset.data.n_train,
+        preset.data.n_val,
+        preset.data.n_test,
+        preset.data.seed,
+    );
+    let space = SearchSpace::table1();
+    let device = FpgaDevice::vu13p();
+    println!(
+        "search space: {} architectures; dataset: {} train jets",
+        space.architecture_count(),
+        preset.data.n_train
+    );
+
+    let outcome = global_search(
+        &rt,
+        &ds,
+        &space,
+        GlobalSearchConfig {
+            objectives: ObjectiveKind::nac_set(),
+            ctx: ObjectiveContext {
+                space: &space,
+                device: &device,
+                surrogate: None,
+                bits: 8,
+                sparsity: 0.5,
+            },
+            nsga2: preset.nsga2(),
+            trials: preset.search.trials,
+            epochs: preset.search.epochs,
+            seed: preset.seed,
+            accuracy_threshold: 0.0,
+            progress: Some(Box::new(|i, n, r| {
+                println!("  trial {i:>2}/{n}: {:<28} acc={:.4}", r.label, r.accuracy);
+            })),
+        },
+    )?;
+
+    println!("\nPareto front (accuracy vs BOPs):");
+    for &i in &outcome.front {
+        let r = &outcome.records[i];
+        println!(
+            "  {:<28} acc={:.4}  bops={:>8.0}",
+            r.label, r.accuracy, r.bops
+        );
+    }
+    println!(
+        "\n{} trials in {:.1}s — see examples/jet_classification.rs for the full pipeline",
+        outcome.records.len(),
+        outcome.wall_seconds
+    );
+    Ok(())
+}

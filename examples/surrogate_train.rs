@@ -1,0 +1,71 @@
+//! Surrogate training demo: the rule4ml-style estimator in isolation.
+//!
+//! Trains the resource/latency surrogate on HLS-simulator labels and then
+//! quantifies its held-out fidelity per target (the paper's §5 point:
+//! estimation error shapes what the search finds).
+//!
+//! ```bash
+//! cargo run --release --example surrogate_train
+//! ```
+
+use anyhow::Result;
+use snac_pack::hls::{synthesize, FpgaDevice, HlsConfig, NetworkSpec};
+use snac_pack::nn::SearchSpace;
+use snac_pack::runtime::Runtime;
+use snac_pack::surrogate::{train_surrogate, SurrogatePredictor, SurrogateTrainConfig};
+use snac_pack::util::{OnlineStats, Rng};
+
+fn main() -> Result<()> {
+    let rt = Runtime::load(std::path::Path::new("artifacts"))?;
+    let space = SearchSpace::table1();
+    let device = FpgaDevice::vu13p();
+    let hls = HlsConfig::default();
+    let cfg = SurrogateTrainConfig::default();
+    println!(
+        "training surrogate on {} simulator-labelled architectures, {} epochs…",
+        cfg.dataset_size, cfg.epochs
+    );
+    let t0 = std::time::Instant::now();
+    let (params, mse) = train_surrogate(&rt, &space, &cfg, &hls, &device)?;
+    println!(
+        "trained in {:.1}s; final MSE {mse:.5} (log1p space)",
+        t0.elapsed().as_secs_f64()
+    );
+
+    // ---- held-out evaluation: fresh genomes the trainer never saw ----
+    let sur = SurrogatePredictor::new(&rt, params);
+    let mut rng = Rng::new(2077);
+    let names = ["BRAM", "DSP", "FF", "LUT", "latency_cc", "II"];
+    let mut stats: Vec<OnlineStats> = (0..6).map(|_| OnlineStats::new()).collect();
+    let n = 200;
+    for _ in 0..n {
+        let g = space.sample(&mut rng);
+        let bits = *rng.choose(&[4u32, 6, 8, 12]);
+        let sparsity = rng.uniform() * 0.9;
+        let est = sur.predict(&g, &space, bits, sparsity)?;
+        let truth = synthesize(&NetworkSpec::from_genome(&g, &space, bits, sparsity), &hls, &device);
+        let truths = [
+            truth.bram36 as f64,
+            truth.dsp as f64,
+            truth.ff as f64,
+            truth.lut as f64,
+            truth.latency_cc as f64,
+            truth.ii_cc as f64,
+        ];
+        let ests = [est.bram, est.dsp, est.ff, est.lut, est.latency_cc, est.ii_cc];
+        for k in 0..6 {
+            stats[k].push((ests[k] - truths[k]).abs() / (truths[k] + 1.0));
+        }
+    }
+    println!("\nheld-out mean relative error over {n} fresh architectures:");
+    for (name, s) in names.iter().zip(&stats) {
+        println!(
+            "  {name:<10} {:>6.1}%  (max {:>6.1}%)",
+            s.mean() * 100.0,
+            s.max() * 100.0
+        );
+    }
+    println!("\n(rule4ml reports ~10-30% resource errors on real synthesis — the");
+    println!(" surrogate is intentionally imperfect; SNAC-Pack searches on estimates.)");
+    Ok(())
+}

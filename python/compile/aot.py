@@ -1,0 +1,168 @@
+"""AOT lowering: JAX graphs → HLO *text* artifacts + an ABI manifest.
+
+Run once at build time (``make artifacts``); Python is never on the search
+path. Each entry point in :mod:`compile.model` is jitted, lowered to
+StableHLO, converted to an XlaComputation, and dumped as **HLO text**.
+
+Text — NOT ``lowered.compile()``/``.serialize()`` — is the interchange
+format on purpose: jax ≥ 0.5 serialises HloModuleProto with 64-bit
+instruction ids, which the ``xla`` crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``). The HLO *text* parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+``manifest.json`` records, for every artifact, the ordered input and output
+names/shapes — the ABI contract that ``rust/src/runtime/artifacts.rs``
+validates at load time so a drifted Python build fails fast instead of
+producing garbage numerics.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+F32 = jnp.float32
+
+
+def _s(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+# (name, shape) per input, in ABI order. Shapes use the model constants so
+# a constant change here automatically propagates to the manifest.
+L, P, I, O = M.NUM_LAYERS, M.PAD, M.IN_DIM, M.OUT_DIM
+
+SUPERNET_PARAMS = [
+    ("w0", (I, P)), ("wh", (L - 1, P, P)), ("b", (L, P)),
+    ("gamma", (L, P)), ("beta", (L, P)), ("wo", (P, O)), ("bo", (O,)),
+]
+SUPERNET_MASKS = [
+    ("unit", (L, P)), ("p0", (I, P)), ("ph", (L - 1, P, P)), ("po", (P, O)),
+]
+SUPERNET_ARCH = [("gates", (L,)), ("act_sel", (3,))]
+
+SUR_PARAMS = [
+    ("sw1", M.SUR_PARAM_SHAPES[0]), ("sb1", M.SUR_PARAM_SHAPES[1]),
+    ("sw2", M.SUR_PARAM_SHAPES[2]), ("sb2", M.SUR_PARAM_SHAPES[3]),
+    ("sw3", M.SUR_PARAM_SHAPES[4]), ("sb3", M.SUR_PARAM_SHAPES[5]),
+]
+
+
+def _adam_triplet(params):
+    out = list(params)
+    out += [("m_" + n, s) for n, s in params]
+    out += [("v_" + n, s) for n, s in params]
+    return out
+
+
+ARTIFACTS = {
+    "train_step": {
+        "fn": M.train_step,
+        "inputs": _adam_triplet(SUPERNET_PARAMS)
+        + SUPERNET_MASKS
+        + SUPERNET_ARCH
+        + [
+            ("hp", (M.HP_LEN,)),
+            ("run_mean", (L, P)), ("run_var", (L, P)),
+            ("x", (M.BATCH, I)), ("y1h", (M.BATCH, O)),
+        ],
+        "outputs": [n for n, _ in SUPERNET_PARAMS]
+        + ["m_" + n for n, _ in SUPERNET_PARAMS]
+        + ["v_" + n for n, _ in SUPERNET_PARAMS]
+        + ["loss", "correct", "run_mean", "run_var"],
+    },
+    "eval_step": {
+        "fn": M.eval_step,
+        "inputs": SUPERNET_PARAMS
+        + SUPERNET_MASKS
+        + SUPERNET_ARCH
+        + [
+            ("ehp", (M.EHP_LEN,)),
+            ("run_mean", (L, P)), ("run_var", (L, P)),
+            ("x", (M.EVAL_BATCH, I)), ("y1h", (M.EVAL_BATCH, O)),
+        ],
+        "outputs": ["correct", "loss", "logits"],
+    },
+    "surrogate_train": {
+        "fn": M.surrogate_train_step,
+        "inputs": _adam_triplet(SUR_PARAMS)
+        + [
+            ("x", (M.SUR_BATCH, M.SUR_FEATS)),
+            ("y", (M.SUR_BATCH, M.SUR_OUT)),
+            ("shp", (M.SHP_LEN,)),
+        ],
+        "outputs": [n for n, _ in SUR_PARAMS]
+        + ["m_" + n for n, _ in SUR_PARAMS]
+        + ["v_" + n for n, _ in SUR_PARAMS]
+        + ["loss"],
+    },
+    "surrogate_predict": {
+        "fn": M.surrogate_predict,
+        "inputs": SUR_PARAMS + [("x", (M.SUR_BATCH, M.SUR_FEATS))],
+        "outputs": ["pred"],
+    },
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple for rust unwrap)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_artifact(name: str) -> str:
+    spec = ARTIFACTS[name]
+    args = [_s(*shape) for _, shape in spec["inputs"]]
+    return to_hlo_text(jax.jit(spec["fn"]).lower(*args))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", nargs="*", help="subset of artifact names")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {
+        "abi_version": 1,
+        "constants": {
+            "pad": P, "num_layers": L, "in_dim": I, "out_dim": O,
+            "batch": M.BATCH, "eval_batch": M.EVAL_BATCH,
+            "hp_len": M.HP_LEN, "ehp_len": M.EHP_LEN, "bn_eps": M.BN_EPS,
+            "sur_feats": M.SUR_FEATS, "sur_hidden": M.SUR_HIDDEN,
+            "sur_out": M.SUR_OUT, "sur_batch": M.SUR_BATCH,
+            "shp_len": M.SHP_LEN,
+        },
+        "artifacts": {},
+    }
+    names = args.only or list(ARTIFACTS)
+    for name in names:
+        spec = ARTIFACTS[name]
+        text = lower_artifact(name)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [
+                {"name": n, "shape": list(s)} for n, s in spec["inputs"]
+            ],
+            "outputs": spec["outputs"],
+        }
+        print(f"wrote {path} ({len(text)} chars, {len(spec['inputs'])} inputs)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

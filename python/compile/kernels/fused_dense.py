@@ -1,0 +1,321 @@
+"""Layer-1 Pallas kernels: the supernet's compute hot-spot.
+
+Two fused kernels cover >95 % of the supernet's FLOPs, in *both*
+directions (forward and hand-written backward wired via
+``jax.custom_vjp`` — ``pallas_call`` itself is not differentiable):
+
+``masked_dense``
+    ``z = (x @ (w ⊙ mask_col)) + b ⊙ mask``  — the padded-supernet dense
+    layer. The unit mask zeroes inactive output units so every candidate
+    architecture of the Table 1 space is a runtime input of ONE compiled
+    graph (see DESIGN.md "Why a supernet?").
+
+``affine_act``
+    ``a = act_blend(z ⊙ scale + shift)`` — the folded BatchNorm affine +
+    one-hot activation blend over {ReLU, tanh, sigmoid}.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): tiles are chosen so a
+(TILE_B × PAD) activation block plus a (PAD × PAD) weight block fit VMEM
+comfortably with double buffering, and the inner ``jnp.dot`` hits the MXU's
+native 128×128 tile. On this image Pallas must run ``interpret=True`` (the
+CPU PJRT plugin cannot execute Mosaic custom-calls); correctness is checked
+against ``ref.py`` and real-TPU performance is estimated analytically in
+EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Batch tile. The supernet trains with B=128; a single (128, PAD) block per
+# grid step keeps the grid tiny (interpret-mode per-step overhead is large)
+# while matching the MXU-native 128-row tile on real hardware.
+TILE_B = 128
+
+# Pallas must be interpreted on CPU PJRT — see module docstring.
+INTERPRET = True
+
+
+def _grid(batch):
+    return (max(1, (batch + TILE_B - 1) // TILE_B),)
+
+
+# --------------------------------------------------------------------------
+# masked_dense: z = x @ (w * mask) + b * mask
+# --------------------------------------------------------------------------
+
+
+def _masked_dense_fwd_kernel(x_ref, w_ref, b_ref, m_ref, z_ref):
+    """One batch tile: masked matmul + masked bias, f32 accumulate."""
+    w = w_ref[...] * m_ref[...][None, :]
+    acc = jnp.dot(x_ref[...], w, preferred_element_type=jnp.float32)
+    z_ref[...] = acc + (b_ref[...] * m_ref[...])[None, :]
+
+
+def _row_validity(batch, rows):
+    """{0,1} column vector marking rows of this tile that are in-bounds.
+
+    When ``batch % TILE_B != 0`` the trailing tile is padded; padded rows
+    hold *uninitialised* data in interpret mode and must not contribute to
+    the dw/db batch reductions.
+    """
+    row = pl.program_id(0) * TILE_B + jax.lax.broadcasted_iota(jnp.int32, (rows, 1), 0)
+    return row < batch
+
+
+def _zero_invalid(valid, a):
+    """Zero rows outside the batch. ``where``, not multiply: padded rows are
+    *uninitialised* and may be NaN, and ``NaN * 0 == NaN``."""
+    return jnp.where(valid, a, 0.0)
+
+
+def _masked_dense_bwd_kernel(batch, x_ref, w_ref, m_ref, g_ref, dx_ref, dw_ref, db_ref):
+    """Backward tile: dx = ḡ@(w⊙m)ᵀ, dw += xᵀ@ḡ, db += Σḡ  (ḡ = g⊙m).
+
+    dw/db are accumulated across the batch grid: the first grid step
+    initialises, later steps add (grid iterations run sequentially over the
+    batch dimension, so the accumulation is race-free).
+    """
+    valid = _row_validity(batch, g_ref.shape[0])
+    gm = _zero_invalid(valid, g_ref[...]) * m_ref[...][None, :]
+    wm = w_ref[...] * m_ref[...][None, :]
+    dx_ref[...] = jnp.dot(gm, wm.T, preferred_element_type=jnp.float32)
+    # gm is already zeroed on padded rows, so x's padded garbage is annihilated.
+    dw_tile = jnp.dot(_zero_invalid(valid, x_ref[...]).T, gm, preferred_element_type=jnp.float32)
+    db_tile = jnp.sum(gm, axis=0)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        dw_ref[...] = dw_tile
+        db_ref[...] = db_tile
+
+    @pl.when(pl.program_id(0) != 0)
+    def _acc():
+        dw_ref[...] += dw_tile
+        db_ref[...] += db_tile
+
+
+def _masked_dense_fwd_call(x, w, b, mask):
+    batch, n_in = x.shape
+    n_out = w.shape[1]
+    return pl.pallas_call(
+        _masked_dense_fwd_kernel,
+        grid=_grid(batch),
+        in_specs=[
+            pl.BlockSpec((TILE_B, n_in), lambda i: (i, 0)),
+            pl.BlockSpec((n_in, n_out), lambda i: (0, 0)),
+            pl.BlockSpec((n_out,), lambda i: (0,)),
+            pl.BlockSpec((n_out,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((TILE_B, n_out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, n_out), x.dtype),
+        interpret=INTERPRET,
+    )(x, w, b, mask)
+
+
+def _masked_dense_bwd_call(x, w, mask, g):
+    batch, n_in = x.shape
+    n_out = w.shape[1]
+    return pl.pallas_call(
+        functools.partial(_masked_dense_bwd_kernel, batch),
+        grid=_grid(batch),
+        in_specs=[
+            pl.BlockSpec((TILE_B, n_in), lambda i: (i, 0)),
+            pl.BlockSpec((n_in, n_out), lambda i: (0, 0)),
+            pl.BlockSpec((n_out,), lambda i: (0,)),
+            pl.BlockSpec((TILE_B, n_out), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((TILE_B, n_in), lambda i: (i, 0)),
+            pl.BlockSpec((n_in, n_out), lambda i: (0, 0)),
+            pl.BlockSpec((n_out,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((batch, n_in), x.dtype),
+            jax.ShapeDtypeStruct((n_in, n_out), w.dtype),
+            jax.ShapeDtypeStruct((n_out,), w.dtype),
+        ],
+        interpret=INTERPRET,
+    )(x, w, mask, g)
+
+
+@jax.custom_vjp
+def masked_dense(x, w, b, mask):
+    """Masked dense layer ``z = x @ (w ⊙ mask) + b ⊙ mask`` (Pallas fwd+bwd).
+
+    Args:
+      x: ``(batch, n_in)`` activations.
+      w: ``(n_in, n_out)`` weights.
+      b: ``(n_out,)`` bias.
+      mask: ``(n_out,)`` {0,1} unit mask — non-differentiable.
+    """
+    return _masked_dense_fwd_call(x, w, b, mask)
+
+
+def _masked_dense_vjp_fwd(x, w, b, mask):
+    return _masked_dense_fwd_call(x, w, b, mask), (x, w, mask)
+
+
+def _masked_dense_vjp_bwd(res, g):
+    x, w, mask = res
+    dx, dw, db = _masked_dense_bwd_call(x, w, mask, g)
+    # db already includes the mask factor (ḡ = g⊙m); dw gets it column-wise.
+    return dx, dw * mask[None, :], db, jnp.zeros_like(mask)
+
+
+masked_dense.defvjp(_masked_dense_vjp_fwd, _masked_dense_vjp_bwd)
+
+
+# --------------------------------------------------------------------------
+# affine_act: a = blend(relu/tanh/sigmoid)(z * scale + shift)
+# --------------------------------------------------------------------------
+
+
+def _affine_act_fwd_kernel(z_ref, sc_ref, sh_ref, sel_ref, a_ref):
+    u = z_ref[...] * sc_ref[...][None, :] + sh_ref[...][None, :]
+    sel = sel_ref[...]
+    a_ref[...] = (
+        sel[0] * jnp.maximum(u, 0.0)
+        + sel[1] * jnp.tanh(u)
+        + sel[2] * jax.nn.sigmoid(u)
+    )
+
+
+def _affine_act_bwd_kernel(
+    batch, z_ref, sc_ref, sh_ref, sel_ref, g_ref, dz_ref, dsc_ref, dsh_ref, dsel_ref
+):
+    valid = _row_validity(batch, g_ref.shape[0])
+    z = _zero_invalid(valid, z_ref[...])
+    g = _zero_invalid(valid, g_ref[...])
+    sel = sel_ref[...]
+    u = z * sc_ref[...][None, :] + sh_ref[...][None, :]
+    sig = jax.nn.sigmoid(u)
+    th = jnp.tanh(u)
+    dadu = (
+        sel[0] * (u > 0.0).astype(u.dtype)
+        + sel[1] * (1.0 - th * th)
+        + sel[2] * sig * (1.0 - sig)
+    )
+    gu = g * dadu
+    dz_ref[...] = gu * sc_ref[...][None, :]
+    dsc_tile = jnp.sum(gu * z, axis=0)
+    dsh_tile = jnp.sum(gu, axis=0)
+    dsel_tile = jnp.stack(
+        [
+            jnp.sum(g * jnp.maximum(u, 0.0)),
+            jnp.sum(g * th),
+            jnp.sum(g * sig),
+        ]
+    )
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        dsc_ref[...] = dsc_tile
+        dsh_ref[...] = dsh_tile
+        dsel_ref[...] = dsel_tile
+
+    @pl.when(pl.program_id(0) != 0)
+    def _acc():
+        dsc_ref[...] += dsc_tile
+        dsh_ref[...] += dsh_tile
+        dsel_ref[...] += dsel_tile
+
+
+def _affine_act_fwd_call(z, scale, shift, sel):
+    batch, n = z.shape
+    return pl.pallas_call(
+        _affine_act_fwd_kernel,
+        grid=_grid(batch),
+        in_specs=[
+            pl.BlockSpec((TILE_B, n), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((3,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((TILE_B, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, n), z.dtype),
+        interpret=INTERPRET,
+    )(z, scale, shift, sel)
+
+
+def _affine_act_bwd_call(z, scale, shift, sel, g):
+    batch, n = z.shape
+    return pl.pallas_call(
+        functools.partial(_affine_act_bwd_kernel, batch),
+        grid=_grid(batch),
+        in_specs=[
+            pl.BlockSpec((TILE_B, n), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((3,), lambda i: (0,)),
+            pl.BlockSpec((TILE_B, n), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((TILE_B, n), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((3,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((batch, n), z.dtype),
+            jax.ShapeDtypeStruct((n,), z.dtype),
+            jax.ShapeDtypeStruct((n,), z.dtype),
+            jax.ShapeDtypeStruct((3,), z.dtype),
+        ],
+        interpret=INTERPRET,
+    )(z, scale, shift, sel, g)
+
+
+@jax.custom_vjp
+def affine_act(z, scale, shift, sel):
+    """Folded-BN affine + blended activation (Pallas fwd+bwd).
+
+    Args:
+      z: ``(batch, n)`` pre-activations.
+      scale, shift: ``(n,)`` affine (BatchNorm folded, or 1/0 identity).
+      sel: ``(3,)`` activation one-hot over {ReLU, tanh, sigmoid}.
+    """
+    return _affine_act_fwd_call(z, scale, shift, sel)
+
+
+def _affine_act_vjp_fwd(z, scale, shift, sel):
+    return _affine_act_fwd_call(z, scale, shift, sel), (z, scale, shift, sel)
+
+
+def _affine_act_vjp_bwd(res, g):
+    z, scale, shift, sel = res
+    return _affine_act_bwd_call(z, scale, shift, sel, g)
+
+
+affine_act.defvjp(_affine_act_vjp_fwd, _affine_act_vjp_bwd)
+
+
+# --------------------------------------------------------------------------
+# fake_quant: symmetric per-tensor fake quantisation with a straight-through
+# estimator. The rounding itself is elementwise and cheap; STE is the point,
+# so this stays a custom_vjp over jnp (no kernel needed — it fuses into the
+# surrounding HLO).
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=())
+def fake_quant(w, bits):
+    """Fake-quantise ``w`` to ``bits`` (runtime scalar) with an STE."""
+    levels = jnp.exp2(bits - 1.0) - 1.0
+    max_abs = jnp.maximum(jnp.max(jnp.abs(w)), 1e-8)
+    delta = max_abs / levels
+    return jnp.clip(jnp.round(w / delta), -levels - 1.0, levels) * delta
+
+
+def _fake_quant_fwd(w, bits):
+    return fake_quant(w, bits), None
+
+
+def _fake_quant_bwd(_, g):
+    # Straight-through: quantisation is treated as identity for gradients.
+    return g, jnp.zeros(())
+
+
+fake_quant.defvjp(_fake_quant_fwd, _fake_quant_bwd)

@@ -1,0 +1,100 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every Pallas kernel in this package has an exact pure-`jax.numpy`
+counterpart here. The pytest suite (``python/tests/test_kernels.py``)
+asserts ``assert_allclose`` between the Pallas implementation (run in
+``interpret=True`` mode) and these oracles over hypothesis-generated shape
+and value sweeps — this is the CORE correctness signal for Layer 1.
+
+The reference functions are also used by ``test_supernet_equiv.py`` to
+build an independent per-architecture MLP against which the masked
+supernet is checked end-to-end.
+"""
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "masked_dense_ref",
+    "masked_dense_vjp_ref",
+    "affine_act_ref",
+    "affine_act_vjp_ref",
+    "fake_quant_ref",
+]
+
+
+def masked_dense_ref(x, w, b, mask):
+    """``z = (x @ (w * mask)) + b * mask``.
+
+    ``mask`` is a per-output-unit {0,1} vector of shape ``(n_out,)``. Masked
+    (inactive) units produce exactly 0 so downstream layers see a clean
+    sub-network of the padded supernet.
+    """
+    return (x @ (w * mask[None, :])) + (b * mask)[None, :]
+
+
+def masked_dense_vjp_ref(x, w, b, mask, g):
+    """Reference cotangents of :func:`masked_dense_ref`.
+
+    Returns ``(dx, dw, db)``; the mask is non-differentiable.
+    """
+    gm = g * mask[None, :]
+    dx = gm @ (w * mask[None, :]).T
+    dw = (x.T @ gm) * mask[None, :]
+    db = jnp.sum(gm, axis=0) * mask
+    return dx, dw, db
+
+
+def _act_blend(u, sel):
+    """One-hot blend of {ReLU, tanh, sigmoid} — the Table 1 activation set."""
+    return (
+        sel[0] * jax.nn.relu(u)
+        + sel[1] * jnp.tanh(u)
+        + sel[2] * jax.nn.sigmoid(u)
+    )
+
+
+def affine_act_ref(z, scale, shift, sel):
+    """``a = act_blend(z * scale + shift)``.
+
+    ``scale``/``shift`` of shape ``(n_out,)`` fold in BatchNorm (or identity
+    when BN is gated off); ``sel`` of shape ``(3,)`` is the activation
+    one-hot (blendable, so activation choice is a *runtime* input of the
+    AOT-compiled supernet).
+    """
+    u = z * scale[None, :] + shift[None, :]
+    return _act_blend(u, sel)
+
+
+def affine_act_vjp_ref(z, scale, shift, sel, g):
+    """Reference cotangents ``(dz, dscale, dshift, dsel)``."""
+    u = z * scale[None, :] + shift[None, :]
+    sig = jax.nn.sigmoid(u)
+    th = jnp.tanh(u)
+    dadu = sel[0] * (u > 0).astype(u.dtype) + sel[1] * (1.0 - th * th) + sel[2] * sig * (1.0 - sig)
+    gu = g * dadu
+    dz = gu * scale[None, :]
+    dscale = jnp.sum(gu * z, axis=0)
+    dshift = jnp.sum(gu, axis=0)
+    dsel = jnp.stack(
+        [
+            jnp.sum(g * jax.nn.relu(u)),
+            jnp.sum(g * th),
+            jnp.sum(g * sig),
+        ]
+    )
+    return dz, dscale, dshift, dsel
+
+
+def fake_quant_ref(w, bits):
+    """Symmetric per-tensor fake quantisation (forward value only).
+
+    ``bits`` is a *runtime* float scalar (QAT bit-width). Levels are
+    ``2^(bits-1) - 1``; the scale is max-abs. Matches hls4ml's
+    ``ap_fixed``-style symmetric weight quantisation closely enough for
+    QAT-in-the-loop (see DESIGN.md substitution #1).
+    """
+    levels = jnp.exp2(bits - 1.0) - 1.0
+    max_abs = jnp.maximum(jnp.max(jnp.abs(w)), 1e-8)
+    delta = max_abs / levels
+    return jnp.clip(jnp.round(w / delta), -levels - 1.0, levels) * delta

@@ -1,0 +1,332 @@
+"""Layer-2 JAX graphs: the SNAC-Pack supernet and the rule4ml-style surrogate.
+
+The *supernet* covers the paper's entire Table 1 MLP search space in one
+compiled graph. Eight padded dense layers (max width ``PAD``) are always
+computed; a candidate architecture is expressed purely through runtime
+inputs:
+
+  * ``unit``  — per-layer {0,1} unit masks selecting the hidden width,
+  * ``gates`` — per-layer {0,1} scalars; a gated-off layer passes its input
+    through unchanged (variable depth 4–8),
+  * ``act_sel`` — one-hot over {ReLU, tanh, sigmoid},
+  * ``hp``   — packed hyperparameter scalars (BN gate, dropout rate, QAT
+    gate + bit-width, Adam schedule, L1 strength, RNG seed),
+  * ``p0/ph/po`` — elementwise pruning masks (local-search IMP).
+
+This makes every candidate a *data* change, so the Rust coordinator drives
+the full NSGA-II search against ONE AOT-compiled HLO artifact with no
+Python anywhere on the search path. Equivalence with literal per-candidate
+MLPs is asserted by ``python/tests/test_supernet_equiv.py``.
+
+All tensor compute flows through the Layer-1 Pallas kernels
+(:mod:`compile.kernels.fused_dense`) in both directions.
+
+Input/output orders here are the ABI contract with ``rust/src/runtime/``;
+``aot.py`` serialises them into ``artifacts/manifest.json`` which the Rust
+side validates at load time.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.fused_dense import affine_act, fake_quant, masked_dense
+
+# ---------------------------------------------------------------------------
+# Shape constants (the ABI; mirrored in rust/src/nn/space.rs and checked via
+# artifacts/manifest.json).
+# ---------------------------------------------------------------------------
+
+PAD = 128          # padded hidden width (max of Table 1: layer 1 ∈ {64,120,128})
+NUM_LAYERS = 8     # max depth of Table 1
+IN_DIM = 24        # 8 constituents × (pT, η, φ) — hls4ml LHC jet MLP input
+OUT_DIM = 5        # q / g / W / Z / t
+BATCH = 128        # paper: "All training is performed with a batch size of 128"
+EVAL_BATCH = 512   # evaluation tile; Rust pads the tail batch
+
+# hp vector layout (train_step)
+HP_BN_GATE = 0      # 1.0 → BatchNorm on
+HP_DROPOUT = 1      # dropout rate ∈ {0, 0.05, 0.1}
+HP_QAT_GATE = 2     # 1.0 → fake-quant weights
+HP_BITS = 3         # QAT bit-width (e.g. 8)
+HP_LR = 4           # Adam learning rate
+HP_L1 = 5           # L1 regularisation strength
+HP_BETA1 = 6        # Adam β1
+HP_BETA2 = 7        # Adam β2
+HP_EPS = 8          # Adam ε
+HP_BETA1_POW = 9    # β1^t (bias correction, computed by the Rust trainer)
+HP_BETA2_POW = 10   # β2^t
+HP_SEED = 11        # dropout PRNG seed (integer-valued f32, < 2^24)
+HP_BN_MOM = 12      # BN running-stat EMA momentum (weight of the new batch)
+HP_LEN = 13
+
+# hp vector layout (eval)
+EHP_BN_GATE = 0
+EHP_QAT_GATE = 1
+EHP_BITS = 2
+EHP_LEN = 3
+
+BN_EPS = 1e-3      # matches Keras/hls4ml BatchNorm default epsilon scale
+
+# Surrogate (rule4ml-style) shapes
+SUR_FEATS = 72     # 8 layers × 8 per-layer features + 8 global features
+SUR_HIDDEN = 128
+SUR_OUT = 6        # BRAM, DSP, FF, LUT, latency-cycles, II  (rule4ml's targets)
+SUR_BATCH = 256
+
+# surrogate hp layout
+SHP_LR = 0
+SHP_BETA1 = 1
+SHP_BETA2 = 2
+SHP_EPS = 3
+SHP_BETA1_POW = 4
+SHP_BETA2_POW = 5
+SHP_LEN = 6
+
+
+# ---------------------------------------------------------------------------
+# Supernet forward
+# ---------------------------------------------------------------------------
+
+
+def _effective_weight(w, prune, qat_gate, bits):
+    """Pruned + (gated) fake-quantised weight — the hls4ml-deployable value."""
+    wp = w * prune
+    return qat_gate * fake_quant(wp, bits) + (1.0 - qat_gate) * wp
+
+
+def supernet_forward(params, masks, arch, bn_gate, qat_gate, bits,
+                     x, *, bn_stats=None, dropout=None):
+    """Run the padded supernet.
+
+    Args:
+      params: dict with ``w0 (IN,PAD)``, ``wh (L-1,PAD,PAD)``, ``b (L,PAD)``,
+        ``gamma (L,PAD)``, ``beta (L,PAD)``, ``wo (PAD,OUT)``, ``bo (OUT,)``.
+      masks: dict with ``unit (L,PAD)``, ``p0``, ``ph``, ``po`` prune masks.
+      arch: dict with ``gates (L,)`` and ``act_sel (3,)``.
+      bn_stats: ``None`` → training mode (batch statistics; also returned);
+        ``(run_mean, run_var)`` → eval mode with running statistics.
+      dropout: ``None`` or ``(rate, key)`` — training-mode dropout.
+
+    Returns:
+      ``(logits, l1_of_active_weights, batch_means, batch_vars)``.
+    """
+    gates = arch["gates"]
+    act_sel = arch["act_sel"]
+    unit = masks["unit"]
+    h = x
+    means, variances = [], []
+    l1_acc = 0.0
+    for i in range(NUM_LAYERS):
+        w = params["w0"] if i == 0 else params["wh"][i - 1]
+        prune = masks["p0"] if i == 0 else masks["ph"][i - 1]
+        w_eff = _effective_weight(w, prune, qat_gate, bits)
+        z = masked_dense(h, w_eff, params["b"][i], unit[i])
+        if bn_stats is None:
+            mean = jnp.sum(z, axis=0) / z.shape[0]
+            var = jnp.sum(jnp.square(z - mean[None, :]), axis=0) / z.shape[0]
+        else:
+            mean = bn_stats[0][i]
+            var = bn_stats[1][i]
+        means.append(mean)
+        variances.append(var)
+        bn_scale = params["gamma"][i] * jax.lax.rsqrt(var + BN_EPS)
+        bn_shift = params["beta"][i] - mean * bn_scale
+        scale = bn_gate * bn_scale + (1.0 - bn_gate)
+        shift = bn_gate * bn_shift
+        a = affine_act(z, scale, shift, act_sel)
+        # affine_act shifts masked-off units away from 0 (act(shift) ≠ 0);
+        # re-mask so gated layers expose a clean sub-network.
+        a = a * unit[i][None, :]
+        if dropout is not None:
+            rate, key = dropout
+            u = jax.random.uniform(jax.random.fold_in(key, i), a.shape)
+            # inverted dropout with a *runtime* rate; rate=0 → keep ≡ 1.
+            a = a * (u >= rate).astype(a.dtype) / (1.0 - rate)
+        if i == 0:
+            # Layer 1 always exists (Table 1 depth ≥ 4); no pass-through is
+            # possible here since h still has IN_DIM columns.
+            h = a
+        else:
+            h = gates[i] * a + (1.0 - gates[i]) * h
+        l1_acc = l1_acc + gates[i] * jnp.sum(jnp.abs(w_eff * unit[i][None, :]))
+    wo_eff = _effective_weight(params["wo"], masks["po"], qat_gate, bits)
+    logits = masked_dense(h, wo_eff, params["bo"], jnp.ones((OUT_DIM,), x.dtype))
+    l1_acc = l1_acc + jnp.sum(jnp.abs(wo_eff))
+    return logits, l1_acc, jnp.stack(means), jnp.stack(variances)
+
+
+def _ce_and_correct(logits, y1h):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ce = -jnp.mean(jnp.sum(y1h * logp, axis=-1))
+    correct = jnp.sum(
+        (jnp.argmax(logits, axis=-1) == jnp.argmax(y1h, axis=-1)).astype(jnp.float32)
+    )
+    return ce, correct
+
+
+# ---------------------------------------------------------------------------
+# Adam
+# ---------------------------------------------------------------------------
+
+
+def adam_update(params, grads, m, v, lr, beta1, beta2, eps, b1_pow, b2_pow):
+    """One Adam step with external bias-correction powers (β^t from Rust)."""
+    new_p, new_m, new_v = {}, {}, {}
+    for k in params:
+        g = grads[k]
+        mk = beta1 * m[k] + (1.0 - beta1) * g
+        vk = beta2 * v[k] + (1.0 - beta2) * jnp.square(g)
+        mhat = mk / (1.0 - b1_pow)
+        vhat = vk / (1.0 - b2_pow)
+        new_p[k] = params[k] - lr * mhat / (jnp.sqrt(vhat) + eps)
+        new_m[k] = mk
+        new_v[k] = vk
+    return new_p, new_m, new_v
+
+
+# ---------------------------------------------------------------------------
+# AOT entry points (exact input order = the Rust ABI; see aot.py manifest)
+# ---------------------------------------------------------------------------
+
+PARAM_KEYS = ("w0", "wh", "b", "gamma", "beta", "wo", "bo")
+
+
+def _unpack(w0, wh, b, gamma, beta, wo, bo):
+    return {
+        "w0": w0, "wh": wh, "b": b,
+        "gamma": gamma, "beta": beta, "wo": wo, "bo": bo,
+    }
+
+
+def train_step(
+    w0, wh, b, gamma, beta, wo, bo,
+    m_w0, m_wh, m_b, m_gamma, m_beta, m_wo, m_bo,
+    v_w0, v_wh, v_b, v_gamma, v_beta, v_wo, v_bo,
+    unit, p0, ph, po, gates, act_sel, hp, run_mean, run_var, x, y1h,
+):
+    """One fused training step: fwd + bwd + Adam + BN running-stat EMA.
+
+    Returns (in order): the 7 updated params, 7 Adam m, 7 Adam v, then
+    ``loss``, ``correct``, ``run_mean (L,PAD)``, ``run_var (L,PAD)``.
+
+    The BN running statistics are updated *in-graph*
+    (``new = (1−mom)·old + mom·batch``) — both because it removes a
+    host-side loop from the hot path and because xla_extension 0.5.1's
+    StableHLO→XLA converter mis-lowers outputs that are bare
+    ``concatenate`` results used only by the return tuple (it replaces
+    them with echo parameters); the EMA arithmetic keeps the outputs as
+    real computations.
+    """
+    params = _unpack(w0, wh, b, gamma, beta, wo, bo)
+    m = _unpack(m_w0, m_wh, m_b, m_gamma, m_beta, m_wo, m_bo)
+    v = _unpack(v_w0, v_wh, v_b, v_gamma, v_beta, v_wo, v_bo)
+    masks = {"unit": unit, "p0": p0, "ph": ph, "po": po}
+    arch = {"gates": gates, "act_sel": act_sel}
+    key = jax.random.PRNGKey(hp[HP_SEED].astype(jnp.uint32))
+
+    def loss_fn(p):
+        logits, l1, means, variances = supernet_forward(
+            p, masks, arch, hp[HP_BN_GATE], hp[HP_QAT_GATE], hp[HP_BITS], x,
+            dropout=(hp[HP_DROPOUT], key),
+        )
+        ce, correct = _ce_and_correct(logits, y1h)
+        return ce + hp[HP_L1] * l1, (correct, means, variances)
+
+    (loss, (correct, means, variances)), grads = jax.value_and_grad(
+        loss_fn, has_aux=True
+    )(params)
+    new_p, new_m, new_v = adam_update(
+        params, grads, m, v,
+        hp[HP_LR], hp[HP_BETA1], hp[HP_BETA2], hp[HP_EPS],
+        hp[HP_BETA1_POW], hp[HP_BETA2_POW],
+    )
+    # Keep pruned coordinates exactly zero (IMP invariant): Adam momentum
+    # accumulated before a weight was pruned must not resurrect it.
+    new_p["w0"] = new_p["w0"] * p0
+    new_p["wh"] = new_p["wh"] * ph
+    new_p["wo"] = new_p["wo"] * po
+    mom = hp[HP_BN_MOM]
+    new_run_mean = (1.0 - mom) * run_mean + mom * means
+    new_run_var = (1.0 - mom) * run_var + mom * variances
+    return tuple(new_p[k] for k in PARAM_KEYS) + tuple(
+        new_m[k] for k in PARAM_KEYS
+    ) + tuple(new_v[k] for k in PARAM_KEYS) + (
+        loss, correct, new_run_mean, new_run_var,
+    )
+
+
+def eval_step(
+    w0, wh, b, gamma, beta, wo, bo,
+    unit, p0, ph, po, gates, act_sel, ehp, run_mean, run_var, x, y1h,
+):
+    """Eval-mode forward: running BN stats, no dropout.
+
+    Returns ``(correct, loss, logits)``.
+    """
+    params = _unpack(w0, wh, b, gamma, beta, wo, bo)
+    masks = {"unit": unit, "p0": p0, "ph": ph, "po": po}
+    arch = {"gates": gates, "act_sel": act_sel}
+    logits, _, _, _ = supernet_forward(
+        params, masks, arch, ehp[EHP_BN_GATE], ehp[EHP_QAT_GATE], ehp[EHP_BITS],
+        x, bn_stats=(run_mean, run_var),
+    )
+    ce, correct = _ce_and_correct(logits, y1h)
+    return correct, ce, logits
+
+
+# ---------------------------------------------------------------------------
+# rule4ml-style surrogate: arch features → 6 resource/latency targets.
+# Reuses the same Pallas kernels (masks = ones, act = ReLU one-hot).
+# ---------------------------------------------------------------------------
+
+SUR_PARAM_SHAPES = (
+    (SUR_FEATS, SUR_HIDDEN), (SUR_HIDDEN,),
+    (SUR_HIDDEN, SUR_HIDDEN), (SUR_HIDDEN,),
+    (SUR_HIDDEN, SUR_OUT), (SUR_OUT,),
+)
+
+
+def surrogate_forward(sp, x):
+    """Three-layer ReLU MLP through the Pallas kernels."""
+    relu = jnp.asarray([1.0, 0.0, 0.0], x.dtype)
+    ones_h = jnp.ones((SUR_HIDDEN,), x.dtype)
+    one_sc = jnp.ones((SUR_HIDDEN,), x.dtype)
+    zero_sh = jnp.zeros((SUR_HIDDEN,), x.dtype)
+    h = masked_dense(x, sp[0], sp[1], ones_h)
+    h = affine_act(h, one_sc, zero_sh, relu)
+    h = masked_dense(h, sp[2], sp[3], ones_h)
+    h = affine_act(h, one_sc, zero_sh, relu)
+    return masked_dense(h, sp[4], sp[5], jnp.ones((SUR_OUT,), x.dtype))
+
+
+def surrogate_train_step(
+    w1, b1, w2, b2, w3, b3,
+    m1, mb1, m2, mb2, m3, mb3,
+    v1, vb1, v2, vb2, v3, vb3,
+    x, y, shp,
+):
+    """One MSE + Adam step of the surrogate. Returns params, m, v, loss."""
+    sp = (w1, b1, w2, b2, w3, b3)
+    m = (m1, mb1, m2, mb2, m3, mb3)
+    v = (v1, vb1, v2, vb2, v3, vb3)
+
+    def loss_fn(sp):
+        pred = surrogate_forward(sp, x)
+        return jnp.mean(jnp.square(pred - y))
+
+    loss, grads = jax.value_and_grad(loss_fn)(sp)
+    lr, beta1, beta2 = shp[SHP_LR], shp[SHP_BETA1], shp[SHP_BETA2]
+    eps, b1p, b2p = shp[SHP_EPS], shp[SHP_BETA1_POW], shp[SHP_BETA2_POW]
+    out_p, out_m, out_v = [], [], []
+    for p, g, mk, vk in zip(sp, grads, m, v):
+        nm = beta1 * mk + (1.0 - beta1) * g
+        nv = beta2 * vk + (1.0 - beta2) * jnp.square(g)
+        out_p.append(p - lr * (nm / (1.0 - b1p)) / (jnp.sqrt(nv / (1.0 - b2p)) + eps))
+        out_m.append(nm)
+        out_v.append(nv)
+    return tuple(out_p) + tuple(out_m) + tuple(out_v) + (loss,)
+
+
+def surrogate_predict(w1, b1, w2, b2, w3, b3, x):
+    """Surrogate inference: ``(SUR_BATCH, SUR_FEATS) → (SUR_BATCH, SUR_OUT)``."""
+    return (surrogate_forward((w1, b1, w2, b2, w3, b3), x),)

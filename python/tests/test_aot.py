@@ -1,0 +1,67 @@
+"""AOT pipeline: every artifact lowers to valid HLO text and the manifest
+is a faithful ABI description (input counts/orders/shapes)."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+from compile import model as M
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.mark.parametrize("name", list(aot.ARTIFACTS))
+def test_artifact_lowers_to_hlo_text(name):
+    text = aot.lower_artifact(name)
+    assert text.startswith("HloModule"), "expected HLO text, got something else"
+    assert "ENTRY" in text
+    # the CPU path must not contain Mosaic custom-calls (interpret=True)
+    assert "tpu_custom_call" not in text
+    assert "mosaic" not in text.lower()
+
+
+def test_manifest_input_counts_match_signatures():
+    import inspect
+
+    for name, spec in aot.ARTIFACTS.items():
+        n_sig = len(inspect.signature(spec["fn"]).parameters)
+        assert n_sig == len(spec["inputs"]), name
+
+
+def test_manifest_constants_match_model():
+    spec = aot.ARTIFACTS["train_step"]["inputs"]
+    by_name = dict(spec)
+    assert by_name["x"] == (M.BATCH, M.IN_DIM)
+    assert by_name["y1h"] == (M.BATCH, M.OUT_DIM)
+    assert by_name["hp"] == (M.HP_LEN,)
+    assert by_name["wh"] == (M.NUM_LAYERS - 1, M.PAD, M.PAD)
+    ev = dict(aot.ARTIFACTS["eval_step"]["inputs"])
+    assert ev["x"] == (M.EVAL_BATCH, M.IN_DIM)
+    assert ev["run_mean"] == (M.NUM_LAYERS, M.PAD)
+
+
+def test_train_step_abi_param_adam_alignment():
+    """params, m, v blocks must be three identically-shaped groups of 7."""
+    inputs = aot.ARTIFACTS["train_step"]["inputs"]
+    p, m, v = inputs[:7], inputs[7:14], inputs[14:21]
+    for (pn, ps), (mn, ms), (vn, vs) in zip(p, m, v):
+        assert ms == ps and vs == ps
+        assert mn == "m_" + pn and vn == "v_" + pn
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART_DIR, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_built_manifest_is_current():
+    with open(os.path.join(ART_DIR, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["constants"]["pad"] == M.PAD
+    assert man["constants"]["batch"] == M.BATCH
+    for name, spec in aot.ARTIFACTS.items():
+        got = man["artifacts"][name]["inputs"]
+        want = [{"name": n, "shape": list(s)} for n, s in spec["inputs"]]
+        assert got == want, f"manifest drift for {name}: rebuild artifacts"
+        assert os.path.exists(os.path.join(ART_DIR, man["artifacts"][name]["file"]))

@@ -1,0 +1,178 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracles in ref.py.
+
+Hypothesis sweeps shapes (including non-TILE_B-multiple batches, which
+exercise the padded-row masking) and value distributions; every property
+asserts allclose between the interpret-mode Pallas kernel and the oracle,
+for the forward value AND all cotangents.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fused_dense as fd
+from compile.kernels import ref
+
+# interpret-mode pallas is slow; keep example counts moderate but useful.
+COMMON = dict(deadline=None, max_examples=25)
+
+dims = st.integers(min_value=1, max_value=160)
+batches = st.integers(min_value=1, max_value=300)
+seeds = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.randn(*shape), jnp.float32)
+
+
+# ---------------------------------------------------------------------- #
+# masked_dense
+# ---------------------------------------------------------------------- #
+
+
+@settings(**COMMON)
+@given(b=batches, ni=dims, no=dims, seed=seeds, keep=st.floats(0.0, 1.0))
+def test_masked_dense_forward_matches_ref(b, ni, no, seed, keep):
+    rng = np.random.RandomState(seed)
+    x, w, bias = _rand(rng, b, ni), _rand(rng, ni, no), _rand(rng, no)
+    mask = jnp.asarray((rng.rand(no) < keep).astype(np.float32))
+    got = fd.masked_dense(x, w, bias, mask)
+    want = ref.masked_dense_ref(x, w, bias, mask)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@settings(**COMMON)
+@given(b=batches, ni=dims, no=dims, seed=seeds)
+def test_masked_dense_grads_match_ref(b, ni, no, seed):
+    rng = np.random.RandomState(seed)
+    x, w, bias = _rand(rng, b, ni), _rand(rng, ni, no), _rand(rng, no)
+    mask = jnp.asarray((rng.rand(no) < 0.7).astype(np.float32))
+    g = _rand(rng, b, no)
+
+    def f(x, w, bias):
+        return jnp.sum(fd.masked_dense(x, w, bias, mask) * g)
+
+    dx, dw, db = jax.grad(f, (0, 1, 2))(x, w, bias)
+    rx, rw, rb = ref.masked_dense_vjp_ref(x, w, bias, mask, g)
+    np.testing.assert_allclose(dx, rx, rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(dw, rw, rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(db, rb, rtol=3e-4, atol=3e-4)
+
+
+def test_masked_dense_masked_units_are_exactly_zero():
+    rng = np.random.RandomState(0)
+    x, w, bias = _rand(rng, 64, 32), _rand(rng, 32, 48), _rand(rng, 48)
+    mask = np.ones(48, np.float32)
+    mask[10:] = 0.0
+    z = np.asarray(fd.masked_dense(x, w, bias, jnp.asarray(mask)))
+    assert (z[:, 10:] == 0.0).all()
+
+
+def test_masked_dense_mask_gets_no_gradient():
+    rng = np.random.RandomState(1)
+    x, w, bias = _rand(rng, 8, 4), _rand(rng, 4, 4), _rand(rng, 4)
+    mask = jnp.ones((4,), jnp.float32)
+    dm = jax.grad(lambda m: jnp.sum(fd.masked_dense(x, w, bias, m)))(mask)
+    np.testing.assert_array_equal(np.asarray(dm), 0.0)
+
+
+# ---------------------------------------------------------------------- #
+# affine_act
+# ---------------------------------------------------------------------- #
+
+
+def _sel_strategy():
+    # one-hot corners + arbitrary blends (the supernet always uses one-hots,
+    # but the kernel contract is any convex weights).
+    return st.one_of(
+        st.sampled_from([(1.0, 0.0, 0.0), (0.0, 1.0, 0.0), (0.0, 0.0, 1.0)]),
+        st.tuples(st.floats(0, 1), st.floats(0, 1), st.floats(0, 1)),
+    )
+
+
+@settings(**COMMON)
+@given(b=batches, n=dims, seed=seeds, sel=_sel_strategy())
+def test_affine_act_forward_matches_ref(b, n, seed, sel):
+    rng = np.random.RandomState(seed)
+    z = _rand(rng, b, n)
+    sc = jnp.asarray(rng.rand(n).astype(np.float32) + 0.25)
+    sh = _rand(rng, n)
+    selv = jnp.asarray(sel, jnp.float32)
+    got = fd.affine_act(z, sc, sh, selv)
+    want = ref.affine_act_ref(z, sc, sh, selv)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@settings(**COMMON)
+@given(b=batches, n=dims, seed=seeds, sel=_sel_strategy())
+def test_affine_act_grads_match_ref(b, n, seed, sel):
+    rng = np.random.RandomState(seed)
+    z = _rand(rng, b, n)
+    sc = jnp.asarray(rng.rand(n).astype(np.float32) + 0.25)
+    sh = _rand(rng, n)
+    selv = jnp.asarray(sel, jnp.float32)
+    g = _rand(rng, b, n)
+
+    def f(z, sc, sh, selv):
+        return jnp.sum(fd.affine_act(z, sc, sh, selv) * g)
+
+    grads = jax.grad(f, (0, 1, 2, 3))(z, sc, sh, selv)
+    refs = ref.affine_act_vjp_ref(z, sc, sh, selv, g)
+    for got, want in zip(grads, refs):
+        np.testing.assert_allclose(got, want, rtol=5e-4, atol=5e-4)
+
+
+def test_affine_act_identity_affine_relu_is_relu():
+    rng = np.random.RandomState(2)
+    z = _rand(rng, 32, 16)
+    a = fd.affine_act(
+        z, jnp.ones((16,)), jnp.zeros((16,)), jnp.asarray([1.0, 0.0, 0.0])
+    )
+    np.testing.assert_allclose(a, jax.nn.relu(z), rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------- #
+# fake_quant
+# ---------------------------------------------------------------------- #
+
+
+@settings(**COMMON)
+@given(
+    seed=seeds,
+    bits=st.sampled_from([2.0, 4.0, 6.0, 8.0, 12.0, 16.0]),
+    scale=st.floats(1e-3, 1e3),
+)
+def test_fake_quant_level_count_and_range(seed, bits, scale):
+    rng = np.random.RandomState(seed)
+    w = jnp.asarray(rng.randn(64, 64).astype(np.float32) * scale)
+    q = np.asarray(fd.fake_quant(w, jnp.float32(bits)))
+    levels = 2 ** (bits - 1) - 1
+    # quantised values live on the uniform grid and within the clip range
+    assert len(np.unique(q)) <= 2**bits
+    assert np.abs(q).max() <= float(np.abs(np.asarray(w)).max()) * (1 + 1e-5) * (
+        (levels + 1) / levels
+    )
+    np.testing.assert_allclose(q, ref.fake_quant_ref(w, jnp.float32(bits)), rtol=1e-6)
+
+
+def test_fake_quant_ste_gradient_is_identity():
+    w = jnp.asarray(np.linspace(-2, 2, 64, dtype=np.float32).reshape(8, 8))
+    dw = jax.grad(lambda w: jnp.sum(fd.fake_quant(w, jnp.float32(8.0))))(w)
+    np.testing.assert_array_equal(np.asarray(dw), 1.0)
+
+
+def test_fake_quant_preserves_zero():
+    w = jnp.zeros((16, 16), jnp.float32)
+    w = w.at[0, 0].set(1.0)  # avoid degenerate all-zero scale
+    q = np.asarray(fd.fake_quant(w, jnp.float32(8.0)))
+    assert (q[1:] == 0.0).all()
+
+
+def test_fake_quant_idempotent():
+    rng = np.random.RandomState(3)
+    w = jnp.asarray(rng.randn(32, 32), jnp.float32)
+    q1 = fd.fake_quant(w, jnp.float32(8.0))
+    q2 = fd.fake_quant(q1, jnp.float32(8.0))
+    np.testing.assert_allclose(q1, q2, rtol=1e-5, atol=1e-7)

@@ -1,0 +1,294 @@
+"""L2 correctness: the padded supernet is EXACTLY the candidate MLP.
+
+The entire reproduction hinges on one claim (DESIGN.md "Why a supernet?"):
+evaluating the masked/gated supernet with a genome's masks equals
+evaluating that genome's literal MLP. These tests build independent
+per-architecture reference networks with sliced (unpadded) weights and
+assert equivalence of logits and of training dynamics over the full
+Table 1 hyperparameter grid (depth, widths, activation, BN on/off).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+
+L, P, I, O = M.NUM_LAYERS, M.PAD, M.IN_DIM, M.OUT_DIM
+
+# Table 1 width choices per hidden layer
+WIDTH_CHOICES = [
+    [64, 120, 128], [32, 60, 64], [16, 32], [32, 64],
+    [32, 64], [32, 64], [16, 32], [32, 44, 64],
+]
+
+genomes = st.fixed_dictionaries(
+    {
+        "n_layers": st.integers(4, 8),
+        "width_idx": st.tuples(*[st.integers(0, len(c) - 1) for c in WIDTH_CHOICES]),
+        "act": st.integers(0, 2),
+        "bn": st.booleans(),
+        "seed": st.integers(0, 2**31 - 1),
+    }
+)
+
+
+def make_inputs(g):
+    """Genome → supernet mask/gate inputs + the sliced width list."""
+    widths = [WIDTH_CHOICES[i][g["width_idx"][i]] for i in range(L)]
+    unit = np.zeros((L, P), np.float32)
+    gates = np.zeros((L,), np.float32)
+    for i in range(g["n_layers"]):
+        unit[i, : widths[i]] = 1.0
+        gates[i] = 1.0
+    act = np.zeros((3,), np.float32)
+    act[g["act"]] = 1.0
+    return (
+        jnp.asarray(unit),
+        jnp.asarray(gates),
+        jnp.asarray(act),
+        widths[: g["n_layers"]],
+    )
+
+
+def make_params(rng):
+    return {
+        "w0": jnp.asarray(rng.randn(I, P).astype(np.float32) / np.sqrt(I)),
+        "wh": jnp.asarray(rng.randn(L - 1, P, P).astype(np.float32) / np.sqrt(P)),
+        "b": jnp.asarray(rng.randn(L, P).astype(np.float32) * 0.1),
+        "gamma": jnp.asarray(1.0 + 0.1 * rng.randn(L, P).astype(np.float32)),
+        "beta": jnp.asarray(0.1 * rng.randn(L, P).astype(np.float32)),
+        "wo": jnp.asarray(rng.randn(P, O).astype(np.float32) / np.sqrt(P)),
+        "bo": jnp.asarray(rng.randn(O).astype(np.float32) * 0.1),
+    }
+
+
+ACTS = [jax.nn.relu, jnp.tanh, jax.nn.sigmoid]
+
+
+def literal_mlp(params, g, widths, x, bn):
+    """Independent NumPy/jnp reference: the *sliced* candidate network."""
+    act = ACTS[g["act"]]
+    h = x
+    prev = I
+    for i, wdt in enumerate(widths):
+        w = (params["w0"] if i == 0 else params["wh"][i - 1])[:prev, :wdt]
+        bias = params["b"][i][:wdt]
+        z = h @ w + bias[None, :]
+        if bn:
+            mean = z.mean(axis=0)
+            var = ((z - mean) ** 2).mean(axis=0)
+            zn = (z - mean) / jnp.sqrt(var + M.BN_EPS)
+            z = params["gamma"][i][:wdt] * zn + params["beta"][i][:wdt]
+        h = act(z)
+        prev = wdt
+    w = params["wo"][:prev, :]
+    return h @ w + params["bo"][None, :]
+
+
+def ones_masks():
+    return (
+        jnp.ones((I, P), jnp.float32),
+        jnp.ones((L - 1, P, P), jnp.float32),
+        jnp.ones((P, O), jnp.float32),
+    )
+
+
+@settings(deadline=None, max_examples=20)
+@given(g=genomes)
+def test_supernet_forward_equals_literal_mlp(g):
+    rng = np.random.RandomState(g["seed"])
+    params = make_params(rng)
+    unit, gates, act_sel, widths = make_inputs(g)
+    p0, ph, po = ones_masks()
+    x = jnp.asarray(rng.randn(64, I).astype(np.float32))
+    masks = {"unit": unit, "p0": p0, "ph": ph, "po": po}
+    arch = {"gates": gates, "act_sel": act_sel}
+    bn = 1.0 if g["bn"] else 0.0
+    logits, _, _, _ = M.supernet_forward(
+        params, masks, arch, bn, 0.0, 8.0, x, dropout=None
+    )
+    want = literal_mlp(params, g, widths, x, g["bn"])
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def _default_hp(t, lr=2e-3, l1=0.0, bn=1.0, drop=0.0, qat=0.0, bits=8.0, mom=0.1):
+    b1, b2 = 0.9, 0.999
+    return jnp.asarray(
+        [bn, drop, qat, bits, lr, l1, b1, b2, 1e-8, b1**t, b2**t, float(t), mom],
+        jnp.float32,
+    )
+
+
+def _init_state(rng):
+    params = make_params(rng)
+    p = [params[k] for k in M.PARAM_KEYS]
+    zeros = [jnp.zeros_like(a) for a in p]
+    return p, list(zeros), list(zeros)
+
+
+def _toy_data(rng, n):
+    w_true = rng.randn(I, O)
+    x = rng.randn(n, I).astype(np.float32)
+    y = (x @ w_true + 0.5 * rng.randn(n, O)).argmax(1)
+    return x, np.eye(O, dtype=np.float32)[y]
+
+
+@pytest.fixture(scope="module")
+def jitted_train_step():
+    return jax.jit(M.train_step)
+
+
+def _run_training(jitted, hp_fn, steps=40, seed=0, prune=None):
+    rng = np.random.RandomState(seed)
+    p, m, v = _init_state(rng)
+    g = {"n_layers": 4, "width_idx": (0, 0, 0, 0, 0, 0, 0, 0), "act": 0,
+         "bn": True, "seed": seed}
+    unit, gates, act_sel, _ = make_inputs(g)
+    p0, ph, po = prune if prune is not None else ones_masks()
+    x, y1h = _toy_data(rng, M.BATCH)
+    rm = jnp.zeros((L, P), jnp.float32)
+    rv = jnp.ones((L, P), jnp.float32)
+    losses = []
+    for t in range(1, steps + 1):
+        out = jitted(
+            *p, *m, *v, unit, p0, ph, po, gates, act_sel, hp_fn(t), rm, rv,
+            jnp.asarray(x), jnp.asarray(y1h),
+        )
+        p, m, v = list(out[:7]), list(out[7:14]), list(out[14:21])
+        losses.append(float(out[21]))
+        rm, rv = out[23], out[24]
+    return p, losses
+
+
+def test_train_step_reduces_loss(jitted_train_step):
+    _, losses = _run_training(jitted_train_step, lambda t: _default_hp(t))
+    assert losses[-1] < 0.5 * losses[0]
+
+
+def test_train_step_qat_reduces_loss(jitted_train_step):
+    _, losses = _run_training(
+        jitted_train_step, lambda t: _default_hp(t, qat=1.0, bits=8.0)
+    )
+    assert losses[-1] < 0.7 * losses[0]
+
+
+def test_pruned_weights_stay_exactly_zero(jitted_train_step):
+    rng = np.random.RandomState(7)
+    p0 = (rng.rand(I, P) > 0.5).astype(np.float32)
+    ph = (rng.rand(L - 1, P, P) > 0.5).astype(np.float32)
+    po = (rng.rand(P, O) > 0.5).astype(np.float32)
+    prune = (jnp.asarray(p0), jnp.asarray(ph), jnp.asarray(po))
+    p, _ = _run_training(jitted_train_step, lambda t: _default_hp(t), prune=prune)
+    assert (np.asarray(p[0])[p0 == 0] == 0.0).all()
+    assert (np.asarray(p[1])[ph == 0] == 0.0).all()
+    assert (np.asarray(p[5])[po == 0] == 0.0).all()
+
+
+def test_l1_regularisation_shrinks_weights(jitted_train_step):
+    p_plain, _ = _run_training(jitted_train_step, lambda t: _default_hp(t), steps=30)
+    p_l1, _ = _run_training(
+        jitted_train_step, lambda t: _default_hp(t, l1=1e-3), steps=30
+    )
+    assert np.abs(np.asarray(p_l1[0])).sum() < np.abs(np.asarray(p_plain[0])).sum()
+
+
+def test_inactive_layer_weights_get_no_update(jitted_train_step):
+    """Gated-off layers (depth < 8) must not train: their weights are
+    untouched by the data path, and L1 is gated too."""
+    rng = np.random.RandomState(3)
+    p, m, v = _init_state(rng)
+    g = {"n_layers": 4, "width_idx": (0,) * 8, "act": 0, "bn": False, "seed": 3}
+    unit, gates, act_sel, _ = make_inputs(g)
+    p0, ph, po = ones_masks()
+    x, y1h = _toy_data(rng, M.BATCH)
+    wh_before = np.asarray(p[1]).copy()
+    out = jitted_train_step(
+        *p, *m, *v, unit, p0, ph, po, gates, act_sel, _default_hp(1, l1=1e-4),
+        jnp.zeros((L, P)), jnp.ones((L, P)),
+        jnp.asarray(x), jnp.asarray(y1h),
+    )
+    wh_after = np.asarray(out[1])
+    # layers 5..8 are gated off → rows 4..6 of wh (wh[i] serves layer i+1)
+    np.testing.assert_array_equal(wh_after[4:], wh_before[4:])
+    # layer 2 (wh[0]) is active → it must have moved
+    assert np.abs(wh_after[0] - wh_before[0]).max() > 0
+
+
+def test_eval_step_consistent_with_forward():
+    rng = np.random.RandomState(11)
+    params = make_params(rng)
+    g = {"n_layers": 5, "width_idx": (1, 1, 1, 1, 1, 1, 1, 1), "act": 1,
+         "bn": True, "seed": 11}
+    unit, gates, act_sel, widths = make_inputs(g)
+    p0, ph, po = ones_masks()
+    x = np.zeros((M.EVAL_BATCH, I), np.float32)
+    x[:256] = rng.randn(256, I)
+    y = rng.randint(0, O, M.EVAL_BATCH)
+    y1h = np.eye(O, dtype=np.float32)[y]
+    run_mean = jnp.asarray(0.01 * rng.randn(L, P).astype(np.float32))
+    run_var = jnp.asarray(1.0 + 0.1 * rng.rand(L, P).astype(np.float32))
+    p = [params[k] for k in M.PARAM_KEYS]
+    correct, loss, logits = jax.jit(M.eval_step)(
+        *p, unit, p0, ph, po, gates, act_sel,
+        jnp.asarray([1.0, 0.0, 8.0], jnp.float32), run_mean, run_var,
+        jnp.asarray(x), jnp.asarray(y1h),
+    )
+    # independent recomputation with the running stats
+    masks = {"unit": unit, "p0": p0, "ph": ph, "po": po}
+    arch = {"gates": gates, "act_sel": act_sel}
+    want, _, _, _ = M.supernet_forward(
+        params, masks, arch, 1.0, 0.0, 8.0, jnp.asarray(x),
+        bn_stats=(run_mean, run_var),
+    )
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(want), rtol=1e-5, atol=1e-5)
+    acc = (np.asarray(want).argmax(1) == y).sum()
+    assert float(correct) == pytest.approx(acc)
+
+
+def test_dropout_zero_rate_is_identity():
+    rng = np.random.RandomState(5)
+    params = make_params(rng)
+    g = {"n_layers": 4, "width_idx": (0,) * 8, "act": 0, "bn": False, "seed": 5}
+    unit, gates, act_sel, widths = make_inputs(g)
+    p0, ph, po = ones_masks()
+    x = jnp.asarray(rng.randn(32, I).astype(np.float32))
+    masks = {"unit": unit, "p0": p0, "ph": ph, "po": po}
+    arch = {"gates": gates, "act_sel": act_sel}
+    key = jax.random.PRNGKey(0)
+    with_drop, _, _, _ = M.supernet_forward(
+        params, masks, arch, 0.0, 0.0, 8.0, x, dropout=(jnp.float32(0.0), key)
+    )
+    without, _, _, _ = M.supernet_forward(
+        params, masks, arch, 0.0, 0.0, 8.0, x, dropout=None
+    )
+    np.testing.assert_allclose(np.asarray(with_drop), np.asarray(without), rtol=1e-6)
+
+
+def test_dropout_scales_expectation():
+    rng = np.random.RandomState(6)
+    params = make_params(rng)
+    g = {"n_layers": 4, "width_idx": (2, 2, 1, 1, 0, 0, 0, 0), "act": 0,
+         "bn": False, "seed": 6}
+    unit, gates, act_sel, _ = make_inputs(g)
+    p0, ph, po = ones_masks()
+    x = jnp.asarray(rng.randn(M.BATCH, I).astype(np.float32))
+    masks = {"unit": unit, "p0": p0, "ph": ph, "po": po}
+    arch = {"gates": gates, "act_sel": act_sel}
+    outs = []
+    for s in range(30):
+        o, _, _, _ = M.supernet_forward(
+            params, masks, arch, 0.0, 0.0, 8.0, x,
+            dropout=(jnp.float32(0.1), jax.random.PRNGKey(s)),
+        )
+        outs.append(np.asarray(o))
+    mean_drop = np.mean(outs, axis=0)
+    base, _, _, _ = M.supernet_forward(
+        params, masks, arch, 0.0, 0.0, 8.0, x, dropout=None
+    )
+    # inverted dropout: E[output] ≈ deterministic output (loose tolerance —
+    # nonlinearities break exact equality; this guards the 1/(1-p) scaling)
+    corr = np.corrcoef(mean_drop.ravel(), np.asarray(base).ravel())[0, 1]
+    assert corr > 0.98

@@ -1,0 +1,45 @@
+//! Minimal bench harness (criterion is unavailable offline — see
+//! Cargo.toml): warmup + timed iterations with mean/min/p50 reporting.
+
+use std::time::Instant;
+
+/// Time `f` for `iters` iterations after `warmup` untimed runs, printing a
+/// criterion-style line. Returns mean seconds.
+pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> f64 {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(f64::total_cmp);
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let p50 = samples[samples.len() / 2];
+    let min = samples[0];
+    println!(
+        "bench {name:<40} mean {:>10}  p50 {:>10}  min {:>10}  ({iters} iters)",
+        fmt(mean),
+        fmt(p50),
+        fmt(min)
+    );
+    mean
+}
+
+/// Human-readable seconds.
+pub fn fmt(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.2}s")
+    } else if secs >= 1e-3 {
+        format!("{:.2}ms", secs * 1e3)
+    } else {
+        format!("{:.1}µs", secs * 1e6)
+    }
+}
+
+/// Throughput helper.
+pub fn per_sec(count: usize, secs: f64) -> String {
+    format!("{:.0}/s", count as f64 / secs)
+}

@@ -1,0 +1,88 @@
+//! Bench: regenerate Figures 1–4 (Pareto scatter plots).
+//!
+//! Reuses the trial databases produced by the pipeline when present
+//! (`results/trials_{nac,snac}.json`); otherwise runs a miniature pair of
+//! searches first. Times the figure/report generation itself as well.
+
+mod common;
+
+use snac_pack::config::Preset;
+use snac_pack::coordinator::{global_search, GlobalSearchConfig, TrialRecord};
+use snac_pack::data::Dataset;
+use snac_pack::hls::{FpgaDevice, HlsConfig};
+use snac_pack::nn::SearchSpace;
+use snac_pack::objectives::{ObjectiveContext, ObjectiveKind};
+use snac_pack::report::write_figures;
+use snac_pack::runtime::Runtime;
+use snac_pack::surrogate::{train_surrogate, SurrogatePredictor};
+
+fn main() -> anyhow::Result<()> {
+    let space = SearchSpace::table1();
+    let results = std::path::Path::new("results");
+    let (snac_records, nac_records) = if results.join("trials_snac.json").exists() {
+        println!("== figures bench: reusing results/trials_*.json ==");
+        (
+            TrialRecord::load_all(&results.join("trials_snac.json"), &space)?,
+            TrialRecord::load_all(&results.join("trials_nac.json"), &space)?,
+        )
+    } else {
+        println!("== figures bench: no saved trials; running mini searches ==");
+        let preset = Preset::by_name("quickstart")?;
+        let rt = Runtime::load(std::path::Path::new("artifacts"))?;
+        let ds = Dataset::generate(
+            preset.data.n_train,
+            preset.data.n_val,
+            preset.data.n_test,
+            preset.data.seed,
+        );
+        let device = FpgaDevice::vu13p();
+        let (sp, _) = train_surrogate(
+            &rt,
+            &space,
+            &preset.surrogate,
+            &HlsConfig::default(),
+            &device,
+        )?;
+        let surrogate = SurrogatePredictor::new(&rt, sp);
+        let mut run = |objs: Vec<ObjectiveKind>, use_sur: bool| -> anyhow::Result<Vec<TrialRecord>> {
+            Ok(global_search(
+                &rt,
+                &ds,
+                &space,
+                GlobalSearchConfig {
+                    objectives: objs,
+                    ctx: ObjectiveContext {
+                        space: &space,
+                        device: &device,
+                        surrogate: use_sur.then_some(&surrogate),
+                        bits: 8,
+                        sparsity: 0.5,
+                    },
+                    nsga2: preset.nsga2(),
+                    trials: preset.search.trials,
+                    epochs: preset.search.epochs,
+                    seed: preset.seed,
+                    accuracy_threshold: 0.0,
+                    progress: None,
+                },
+            )?
+            .records)
+        };
+        let nac = run(ObjectiveKind::nac_set(), false)?;
+        let snac = run(ObjectiveKind::snac_set(), true)?;
+        (snac, nac)
+    };
+
+    println!(
+        "trial clouds: SNAC {} points, NAC {} points",
+        snac_records.len(),
+        nac_records.len()
+    );
+    let out = std::path::Path::new("results/bench_figures");
+    let mut rendered = String::new();
+    common::bench("figures/write_fig1-4", 2, 20, || {
+        rendered = write_figures(&snac_records, &nac_records, out).unwrap();
+    });
+    println!("{rendered}");
+    Ok(())
+}

@@ -1,0 +1,129 @@
+//! Perf micro-benchmarks: the hot paths behind EXPERIMENTS.md §Perf.
+//!
+//! * `train_step` execution (the dominant cost: one fused fwd+bwd+Adam HLO
+//!   call per minibatch);
+//! * `eval_step` execution;
+//! * surrogate prediction (priced once per candidate);
+//! * literal packing overhead (host → PJRT buffer);
+//! * NSGA-II generation machinery (sort + crowding + breeding);
+//! * HLS simulator throughput;
+//! * jet generation throughput.
+
+mod common;
+
+use snac_pack::data::{Dataset, Split};
+use snac_pack::hls::{synthesize, FpgaDevice, HlsConfig, NetworkSpec};
+use snac_pack::nn::{PruneMasks, SearchSpace, SupernetInputs, BATCH};
+use snac_pack::runtime::Runtime;
+use snac_pack::search::{EvaluatedIndividual, Nsga2, Nsga2Config};
+use snac_pack::surrogate::{train_surrogate, SurrogatePredictor, SurrogateTrainConfig};
+use snac_pack::trainer::{TrainConfig, Trainer};
+use snac_pack::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    println!("== SNAC-Pack perf benches ==");
+    let space = SearchSpace::table1();
+    let device = FpgaDevice::vu13p();
+    let hls = HlsConfig::default();
+
+    // ---------- pure-rust paths ----------
+    let mut rng = Rng::new(1);
+    common::bench("perf/jet_generation_1k", 2, 20, || {
+        Dataset::generate(1000, 0, 0, rng.next_u64())
+    });
+
+    let genomes: Vec<_> = (0..1000).map(|_| space.sample(&mut rng)).collect();
+    common::bench("perf/hls_synthesize_1k", 2, 20, || {
+        genomes
+            .iter()
+            .map(|g| synthesize(&NetworkSpec::from_genome(g, &space, 8, 0.5), &hls, &device).lut)
+            .sum::<u64>()
+    });
+
+    let pts: Vec<EvaluatedIndividual> = genomes
+        .iter()
+        .take(100)
+        .map(|g| EvaluatedIndividual {
+            genome: g.clone(),
+            objectives: vec![
+                -(g.num_weights(&space) as f64 / 20000.0).tanh(),
+                g.num_weights(&space) as f64,
+                g.n_layers as f64,
+            ],
+        })
+        .collect();
+    common::bench("perf/nsga2_generation_pop100", 2, 50, || {
+        let mut engine = Nsga2::new(
+            space.clone(),
+            Nsga2Config {
+                population: 100,
+                ..Default::default()
+            },
+        );
+        let mut r = Rng::new(7);
+        engine.next_generation(pts.clone(), &mut r)
+    });
+
+    // ---------- runtime paths ----------
+    let rt = Runtime::load(std::path::Path::new("artifacts"))?;
+    let ds = Dataset::generate(BATCH * 4, 512, 512, 7);
+    let trainer = Trainer::new(&rt, &ds);
+    let genome = space.baseline();
+    let inputs = SupernetInputs::compile(&genome, &space);
+    let prune = PruneMasks::ones();
+    let cfg = TrainConfig {
+        epochs: 1,
+        ..Default::default()
+    };
+    let mut model = trainer.init_model(&mut rng);
+
+    // one epoch = 4 train_step executions (batch 128)
+    let mean = common::bench("perf/train_epoch_4steps_b128", 1, 15, || {
+        trainer
+            .train(&mut model, &inputs, &prune, &cfg, &mut rng)
+            .unwrap()
+    });
+    println!(
+        "  → per train_step: {}  ({} jets/s)",
+        common::fmt(mean / 4.0),
+        common::per_sec(4 * BATCH, mean)
+    );
+
+    let mean = common::bench("perf/eval_512_jets", 1, 15, || {
+        trainer
+            .evaluate(&model, &inputs, &prune, &cfg, Split::Val)
+            .unwrap()
+    });
+    println!("  → {} jets/s", common::per_sec(512, mean));
+
+    let (sp, _) = train_surrogate(
+        &rt,
+        &space,
+        &SurrogateTrainConfig {
+            dataset_size: 256,
+            epochs: 3,
+            ..Default::default()
+        },
+        &hls,
+        &device,
+    )?;
+    let sur = SurrogatePredictor::new(&rt, sp);
+    let fresh: Vec<_> = (0..64).map(|_| space.sample(&mut rng)).collect();
+    let mean = common::bench("perf/surrogate_predict_64_uncached", 1, 10, || {
+        // vary sparsity to bust the cache: measures the true predict path
+        let s = rng.uniform();
+        fresh
+            .iter()
+            .map(|g| sur.predict(g, &space, 8, s).unwrap().lut)
+            .sum::<f64>()
+    });
+    println!("  → {} candidates/s", common::per_sec(64, mean));
+
+    common::bench("perf/surrogate_predict_cached", 1, 50, || {
+        fresh
+            .iter()
+            .map(|g| sur.predict(g, &space, 8, 0.5).unwrap().lut)
+            .sum::<f64>()
+    });
+    Ok(())
+}

@@ -1,0 +1,34 @@
+//! Bench: regenerate Table 2 (global-search comparison) at bench scale.
+//!
+//! Runs the three-way comparison — baseline, NAC objectives, SNAC-Pack
+//! objectives — on a scaled-down budget and prints the Table 2 rows plus
+//! the wall-clock cost of each search. `--full` (or BENCH_PRESET=ci/paper)
+//! scales up.
+
+mod common;
+
+use snac_pack::config::Preset;
+use snac_pack::coordinator::run_pipeline;
+use snac_pack::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let preset_name =
+        std::env::var("BENCH_PRESET").unwrap_or_else(|_| "quickstart".to_string());
+    let preset = Preset::by_name(&preset_name)?;
+    println!(
+        "== Table 2 bench (preset `{}`: {} trials × {} epochs) ==",
+        preset.name, preset.search.trials, preset.search.epochs
+    );
+    let rt = Runtime::load(std::path::Path::new("artifacts"))?;
+    let t0 = std::time::Instant::now();
+    let summary = run_pipeline(&rt, &preset, std::path::Path::new("results/bench_table2"))?;
+    println!("{}", summary.table2);
+    for (stage, secs) in &summary.timings {
+        println!("bench table2/{stage:<30} {:>10}", common::fmt(*secs));
+    }
+    println!(
+        "bench table2/TOTAL {:>45}",
+        common::fmt(t0.elapsed().as_secs_f64())
+    );
+    Ok(())
+}

@@ -1,0 +1,245 @@
+//! Local search (§3/§4): model compression of a selected architecture.
+//!
+//! Paper protocol: "a 5 epoch warm-up, followed by 10 iterations of
+//! iterative magnitude pruning, each 10 epochs, with 20 % pruned per
+//! iteration, with QAT at 8-bit precision." We snapshot the model at every
+//! sparsity level so a deployment point (~50 % in Table 3) can be selected
+//! afterwards, and count the exact multiplier work HLS will synthesise
+//! (pruned + quantised-to-zero weights are elided).
+
+use anyhow::Result;
+
+use crate::data::Split;
+use crate::nn::{
+    quant, Genome, PruneMasks, SearchSpace, SupernetInputs, SupernetParams, IN_DIM,
+    NUM_LAYERS, OUT_DIM, PAD,
+};
+use crate::trainer::{TrainConfig, TrainedModel, Trainer};
+use crate::util::Rng;
+
+/// Local-search schedule.
+#[derive(Debug, Clone)]
+pub struct LocalSearchConfig {
+    /// Dense warm-up epochs before pruning starts (paper: 5).
+    pub warmup_epochs: usize,
+    /// IMP iterations (paper: 10).
+    pub imp_iterations: usize,
+    /// Training epochs per IMP iteration (paper: 10).
+    pub epochs_per_iteration: usize,
+    /// Fraction of surviving weights pruned per iteration (paper: 0.2).
+    pub prune_fraction: f64,
+    /// QAT precision (paper: 8-bit).
+    pub bits: u32,
+    /// Deployment sparsity to select from the sweep (paper: ~0.5).
+    pub target_sparsity: f64,
+}
+
+impl Default for LocalSearchConfig {
+    fn default() -> Self {
+        LocalSearchConfig {
+            warmup_epochs: 5,
+            imp_iterations: 10,
+            epochs_per_iteration: 10,
+            prune_fraction: 0.2,
+            bits: 8,
+            target_sparsity: 0.5,
+        }
+    }
+}
+
+/// One point of the IMP sweep.
+#[derive(Debug, Clone)]
+pub struct ImpRecord {
+    /// IMP iteration (0 = dense warm-up).
+    pub iteration: usize,
+    /// Mask sparsity over active coordinates.
+    pub sparsity: f64,
+    /// Validation accuracy at this point (QAT eval mode).
+    pub val_accuracy: f64,
+    /// Validation CE loss.
+    pub val_loss: f64,
+}
+
+/// Local-search output: the selected deployment point plus the full sweep.
+pub struct LocalSearchResult {
+    /// Model at the selected sparsity.
+    pub model: TrainedModel,
+    /// Prune masks at the selected sparsity.
+    pub masks: PruneMasks,
+    /// Selected iteration index into `history`.
+    pub selected: usize,
+    /// The sparsity/accuracy sweep (one record per iteration).
+    pub history: Vec<ImpRecord>,
+}
+
+/// Run the paper's local search on one architecture.
+pub fn local_search(
+    trainer: &Trainer<'_>,
+    genome: &Genome,
+    space: &SearchSpace,
+    cfg: &LocalSearchConfig,
+    rng: &mut Rng,
+) -> Result<LocalSearchResult> {
+    let inputs = SupernetInputs::compile(genome, space);
+    let mut masks = PruneMasks::ones();
+    let mut model = trainer.init_model(rng);
+
+    // ---- dense warm-up (no QAT, per the lottery-ticket recipe) ----
+    let warm_cfg = TrainConfig {
+        epochs: cfg.warmup_epochs,
+        qat: false,
+        bits: cfg.bits,
+        ..Default::default()
+    };
+    trainer.train(&mut model, &inputs, &masks, &warm_cfg, rng)?;
+    let qat_cfg = TrainConfig {
+        epochs: cfg.epochs_per_iteration,
+        qat: true,
+        bits: cfg.bits,
+        ..Default::default()
+    };
+    let (acc0, loss0) = trainer.evaluate(&model, &inputs, &masks, &qat_cfg, Split::Val)?;
+    let mut history = vec![ImpRecord {
+        iteration: 0,
+        sparsity: 0.0,
+        val_accuracy: acc0,
+        val_loss: loss0,
+    }];
+    let mut snapshots = vec![(model.clone(), masks.clone())];
+
+    // ---- iterative magnitude pruning with QAT retraining ----
+    for iter in 1..=cfg.imp_iterations {
+        masks.prune_step(&model.params, &inputs, cfg.prune_fraction);
+        trainer.train(&mut model, &inputs, &masks, &qat_cfg, rng)?;
+        let (acc, loss) = trainer.evaluate(&model, &inputs, &masks, &qat_cfg, Split::Val)?;
+        history.push(ImpRecord {
+            iteration: iter,
+            sparsity: masks.sparsity(&inputs),
+            val_accuracy: acc,
+            val_loss: loss,
+        });
+        snapshots.push((model.clone(), masks.clone()));
+    }
+
+    // ---- select the deployment point closest to the target sparsity ----
+    let selected = history
+        .iter()
+        .enumerate()
+        .min_by(|(_, a), (_, b)| {
+            (a.sparsity - cfg.target_sparsity)
+                .abs()
+                .total_cmp(&(b.sparsity - cfg.target_sparsity).abs())
+        })
+        .map(|(i, _)| i)
+        .unwrap();
+    let (model, masks) = snapshots.swap_remove(selected);
+    Ok(LocalSearchResult {
+        model,
+        masks,
+        selected,
+        history,
+    })
+}
+
+/// Per-dense-layer non-zero multiplier counts as HLS will see them:
+/// a weight survives if its prune mask is 1 AND its quantised value ≠ 0.
+///
+/// Quantisation deltas mirror the graph exactly: per-*tensor* max-abs over
+/// the whole pruned padded tensor (w0 / wh-stack / wo), not per layer.
+pub fn synthesis_nnz(
+    params: &SupernetParams,
+    masks: &PruneMasks,
+    _inputs: &SupernetInputs,
+    genome: &Genome,
+    space: &SearchSpace,
+    bits: u32,
+) -> Vec<usize> {
+    let pruned =
+        |w: &[f32], m: &[f32]| -> Vec<f32> { w.iter().zip(m).map(|(a, b)| a * b).collect() };
+    let q0 = quant::fake_quant(&pruned(&params.w0, &masks.p0), bits);
+    let qh = quant::fake_quant(&pruned(&params.wh, &masks.ph), bits);
+    let qo = quant::fake_quant(&pruned(&params.wo, &masks.po), bits);
+
+    let widths = genome.widths(space);
+    let mut out = Vec::with_capacity(genome.n_layers + 1);
+    // layer 0: w0 (IN_DIM × PAD), active cols < widths[0]
+    let w0_nnz = (0..IN_DIM)
+        .flat_map(|r| (0..widths[0]).map(move |c| (r, c)))
+        .filter(|&(r, c)| q0[r * PAD + c] != 0.0)
+        .count();
+    out.push(w0_nnz);
+    // layers 1..n-1: wh[i-1], rows < widths[i-1], cols < widths[i]
+    for i in 1..genome.n_layers {
+        let base = (i - 1) * PAD * PAD;
+        let nnz = (0..widths[i - 1])
+            .flat_map(|r| (0..widths[i]).map(move |c| (r, c)))
+            .filter(|&(r, c)| qh[base + r * PAD + c] != 0.0)
+            .count();
+        out.push(nnz);
+    }
+    // head: wo (PAD × OUT_DIM), rows < last width
+    let last = widths[genome.n_layers - 1];
+    let head_nnz = (0..last)
+        .flat_map(|r| (0..OUT_DIM).map(move |c| (r, c)))
+        .filter(|&(r, c)| qo[r * OUT_DIM + c] != 0.0)
+        .count();
+    out.push(head_nnz);
+    debug_assert_eq!(out.len(), genome.layer_dims(space).len());
+    let _ = NUM_LAYERS;
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn synthesis_nnz_counts_active_slices_only() {
+        let space = SearchSpace::table1();
+        let genome = space.baseline(); // dims (24,64)(64,32)(32,32)(32,32)(32,5)
+        let inputs = SupernetInputs::compile(&genome, &space);
+        let params = SupernetParams::init(&mut Rng::new(0));
+        let masks = PruneMasks::ones();
+        let nnz = synthesis_nnz(&params, &masks, &inputs, &genome, &space, 8);
+        assert_eq!(nnz.len(), 5);
+        // dense random init: nearly everything survives 8-bit quantisation
+        let dims = genome.layer_dims(&space);
+        for (n, (i, o)) in nnz.iter().zip(dims) {
+            assert!(*n <= i * o);
+            assert!(*n as f64 > 0.9 * (i * o) as f64, "{n} of {}", i * o);
+        }
+    }
+
+    #[test]
+    fn pruning_reduces_synthesis_nnz() {
+        let space = SearchSpace::table1();
+        let genome = space.baseline();
+        let inputs = SupernetInputs::compile(&genome, &space);
+        let params = SupernetParams::init(&mut Rng::new(1));
+        let mut masks = PruneMasks::ones();
+        let dense: usize =
+            synthesis_nnz(&params, &masks, &inputs, &genome, &space, 8).iter().sum();
+        masks.prune_step(&params, &inputs, 0.5);
+        let sparse: usize =
+            synthesis_nnz(&params, &masks, &inputs, &genome, &space, 8).iter().sum();
+        assert!(
+            (sparse as f64) < 0.55 * dense as f64,
+            "pruning halves mults: {sparse} vs {dense}"
+        );
+    }
+
+    #[test]
+    fn low_precision_elides_more_weights() {
+        let space = SearchSpace::table1();
+        let genome = space.baseline();
+        let inputs = SupernetInputs::compile(&genome, &space);
+        let params = SupernetParams::init(&mut Rng::new(2));
+        let masks = PruneMasks::ones();
+        let n8: usize =
+            synthesis_nnz(&params, &masks, &inputs, &genome, &space, 8).iter().sum();
+        let n2: usize =
+            synthesis_nnz(&params, &masks, &inputs, &genome, &space, 2).iter().sum();
+        assert!(n2 < n8, "2-bit grid zeroes more weights: {n2} vs {n8}");
+    }
+}

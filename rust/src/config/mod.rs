@@ -1,0 +1,198 @@
+//! Experiment configuration: presets + simple key=value overrides.
+//!
+//! Three presets scale the same pipeline:
+//! * `paper`      — the paper's settings (500 trials, pop 20, 5 epochs,
+//!   10×10-epoch IMP). Hours of compute on this single-core box.
+//! * `ci`         — the default for `make experiments`: same structure,
+//!   scaled to finish in minutes; all shapes of the paper's tables/figures
+//!   are preserved.
+//! * `quickstart` — seconds; used by `examples/quickstart.rs`.
+
+use anyhow::{bail, Result};
+
+use crate::compress::LocalSearchConfig;
+use crate::search::Nsga2Config;
+use crate::surrogate::SurrogateTrainConfig;
+
+/// Dataset sizing.
+#[derive(Debug, Clone)]
+pub struct DataConfig {
+    /// Training examples.
+    pub n_train: usize,
+    /// Validation examples (accuracy objective).
+    pub n_val: usize,
+    /// Test examples (final tables).
+    pub n_test: usize,
+    /// Generator seed.
+    pub seed: u64,
+}
+
+/// Global-search sizing.
+#[derive(Debug, Clone)]
+pub struct SearchBudget {
+    /// Total candidate evaluations ("trials" in the paper).
+    pub trials: usize,
+    /// NSGA-II population (paper: 20).
+    pub population: usize,
+    /// Training epochs per trial (paper: 5).
+    pub epochs: usize,
+}
+
+/// A full experiment preset.
+#[derive(Debug, Clone)]
+pub struct Preset {
+    /// Preset name.
+    pub name: String,
+    /// Dataset sizing.
+    pub data: DataConfig,
+    /// Global-search budget.
+    pub search: SearchBudget,
+    /// Surrogate training.
+    pub surrogate: SurrogateTrainConfig,
+    /// Local-search schedule.
+    pub local: LocalSearchConfig,
+    /// Master seed for search/training RNG streams.
+    pub seed: u64,
+}
+
+impl Preset {
+    /// Look up a preset by name.
+    pub fn by_name(name: &str) -> Result<Preset> {
+        match name {
+            "paper" => Ok(Preset {
+                name: name.into(),
+                data: DataConfig {
+                    n_train: 16_384,
+                    n_val: 4_096,
+                    n_test: 4_096,
+                    seed: 7,
+                },
+                search: SearchBudget {
+                    trials: 500,
+                    population: 20,
+                    epochs: 5,
+                },
+                surrogate: SurrogateTrainConfig::default(),
+                local: LocalSearchConfig::default(),
+                seed: 1,
+            }),
+            "ci" => Ok(Preset {
+                name: name.into(),
+                data: DataConfig {
+                    n_train: 4_096,
+                    n_val: 1_024,
+                    n_test: 1_024,
+                    seed: 7,
+                },
+                search: SearchBudget {
+                    trials: 64,
+                    population: 16,
+                    epochs: 5,
+                },
+                surrogate: SurrogateTrainConfig::default(),
+                local: LocalSearchConfig {
+                    warmup_epochs: 3,
+                    imp_iterations: 8,
+                    epochs_per_iteration: 3,
+                    ..Default::default()
+                },
+                seed: 1,
+            }),
+            "quickstart" => Ok(Preset {
+                name: name.into(),
+                data: DataConfig {
+                    n_train: 1_280,
+                    n_val: 384,
+                    n_test: 384,
+                    seed: 7,
+                },
+                search: SearchBudget {
+                    trials: 12,
+                    population: 6,
+                    epochs: 2,
+                },
+                surrogate: SurrogateTrainConfig {
+                    dataset_size: 1024,
+                    epochs: 12,
+                    ..Default::default()
+                },
+                local: LocalSearchConfig {
+                    warmup_epochs: 1,
+                    imp_iterations: 4,
+                    epochs_per_iteration: 1,
+                    ..Default::default()
+                },
+                seed: 1,
+            }),
+            other => bail!("unknown preset `{other}` (paper | ci | quickstart)"),
+        }
+    }
+
+    /// NSGA-II config slice of this preset.
+    pub fn nsga2(&self) -> Nsga2Config {
+        Nsga2Config {
+            population: self.search.population,
+            ..Default::default()
+        }
+    }
+
+    /// Apply a `key=value` override (CLI `--set`).
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        let uint = || -> Result<usize> { Ok(value.parse()?) };
+        match key {
+            "trials" => self.search.trials = uint()?,
+            "population" => self.search.population = uint()?,
+            "epochs" => self.search.epochs = uint()?,
+            "n_train" => self.data.n_train = uint()?,
+            "n_val" => self.data.n_val = uint()?,
+            "n_test" => self.data.n_test = uint()?,
+            "surrogate_size" => self.surrogate.dataset_size = uint()?,
+            "surrogate_epochs" => self.surrogate.epochs = uint()?,
+            "imp_iterations" => self.local.imp_iterations = uint()?,
+            "imp_epochs" => self.local.epochs_per_iteration = uint()?,
+            "warmup_epochs" => self.local.warmup_epochs = uint()?,
+            "target_sparsity" => self.local.target_sparsity = value.parse()?,
+            "seed" => self.seed = value.parse()?,
+            other => bail!("unknown override `{other}`"),
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolve() {
+        for name in ["paper", "ci", "quickstart"] {
+            let p = Preset::by_name(name).unwrap();
+            assert_eq!(p.name, name);
+            assert!(p.search.trials >= p.search.population);
+        }
+        assert!(Preset::by_name("nope").is_err());
+    }
+
+    #[test]
+    fn paper_preset_matches_section4() {
+        let p = Preset::by_name("paper").unwrap();
+        assert_eq!(p.search.trials, 500);
+        assert_eq!(p.search.population, 20);
+        assert_eq!(p.search.epochs, 5);
+        assert_eq!(p.local.warmup_epochs, 5);
+        assert_eq!(p.local.imp_iterations, 10);
+        assert_eq!(p.local.epochs_per_iteration, 10);
+        assert_eq!(p.local.prune_fraction, 0.2);
+        assert_eq!(p.local.bits, 8);
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let mut p = Preset::by_name("ci").unwrap();
+        p.set("trials", "99").unwrap();
+        p.set("target_sparsity", "0.7").unwrap();
+        assert_eq!(p.search.trials, 99);
+        assert_eq!(p.local.target_sparsity, 0.7);
+        assert!(p.set("bogus", "1").is_err());
+    }
+}

@@ -1,0 +1,21 @@
+//! The coordination layer — SNAC-Pack's system contribution.
+//!
+//! `global_search` drives NSGA-II generations: every candidate genome is
+//! compiled to supernet inputs, trained for a few epochs against the AOT
+//! `train_step` artifact, scored on the validation split, priced by the
+//! configured objective set (BOPs for NAC, surrogate estimates for
+//! SNAC-Pack), and fed back to the evolutionary engine. A trial database
+//! records every evaluation for the report layer (Figures 1–4) and can be
+//! checkpointed to JSON.
+//!
+//! `pipeline` (in `main.rs`) composes the full paper flow:
+//! surrogate training → global search (×2 objective sets) → §4 selection →
+//! local search → synthesis → Tables 2–3.
+
+pub mod pipeline;
+pub mod search_loop;
+pub mod trial_db;
+
+pub use pipeline::{run_pipeline, PipelineSummary, ProcessedModel};
+pub use search_loop::{global_search, GlobalSearchConfig, SearchOutcome};
+pub use trial_db::TrialRecord;

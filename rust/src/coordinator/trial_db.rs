@@ -1,0 +1,205 @@
+//! Trial records: one row per evaluated candidate, JSON round-trippable.
+
+use anyhow::{Context, Result};
+
+use crate::nn::{Activation, Genome, SearchSpace, NUM_LAYERS};
+use crate::util::Json;
+
+/// One evaluated candidate (a point in Figures 1–4).
+#[derive(Debug, Clone)]
+pub struct TrialRecord {
+    /// Sequential trial id.
+    pub id: usize,
+    /// NSGA-II generation index.
+    pub generation: usize,
+    /// The candidate.
+    pub genome: Genome,
+    /// Human-readable architecture label.
+    pub label: String,
+    /// Validation accuracy after the trial's training budget.
+    pub accuracy: f64,
+    /// BOPs at the assumed deployment point (always recorded for Table 2).
+    pub bops: f64,
+    /// Surrogate estimate: mean utilisation % (when a surrogate ran).
+    pub est_avg_resources: Option<f64>,
+    /// Surrogate estimate: latency cycles (when a surrogate ran).
+    pub est_clock_cycles: Option<f64>,
+    /// The minimised objective vector used by the search.
+    pub objectives: Vec<f64>,
+    /// Wall-clock seconds spent training+evaluating this trial.
+    pub train_seconds: f64,
+}
+
+fn genome_to_json(g: &Genome) -> Json {
+    Json::obj(vec![
+        ("n_layers", Json::Num(g.n_layers as f64)),
+        (
+            "width_idx",
+            Json::nums(g.width_idx.iter().map(|&w| w as f64)),
+        ),
+        ("act", Json::Num(g.act.index() as f64)),
+        ("batch_norm", Json::Bool(g.batch_norm)),
+        ("lr_idx", Json::Num(g.lr_idx as f64)),
+        ("l1_idx", Json::Num(g.l1_idx as f64)),
+        ("dropout_idx", Json::Num(g.dropout_idx as f64)),
+    ])
+}
+
+fn genome_from_json(j: &Json) -> Result<Genome> {
+    let num = |k: &str| -> Result<usize> {
+        j.get(k)
+            .and_then(Json::as_usize)
+            .with_context(|| format!("genome missing `{k}`"))
+    };
+    let mut width_idx = [0usize; NUM_LAYERS];
+    for (i, item) in j
+        .get("width_idx")
+        .context("genome missing width_idx")?
+        .items()
+        .iter()
+        .enumerate()
+        .take(NUM_LAYERS)
+    {
+        width_idx[i] = item.as_usize().context("bad width idx")?;
+    }
+    Ok(Genome {
+        n_layers: num("n_layers")?,
+        width_idx,
+        act: Activation::ALL[num("act")?.min(2)],
+        batch_norm: j
+            .get("batch_norm")
+            .and_then(Json::as_bool)
+            .context("genome missing batch_norm")?,
+        lr_idx: num("lr_idx")?,
+        l1_idx: num("l1_idx")?,
+        dropout_idx: num("dropout_idx")?,
+    })
+}
+
+impl TrialRecord {
+    /// Serialise to JSON.
+    pub fn to_json(&self) -> Json {
+        let opt = |v: Option<f64>| v.map(Json::Num).unwrap_or(Json::Null);
+        Json::obj(vec![
+            ("id", Json::Num(self.id as f64)),
+            ("generation", Json::Num(self.generation as f64)),
+            ("genome", genome_to_json(&self.genome)),
+            ("label", Json::Str(self.label.clone())),
+            ("accuracy", Json::Num(self.accuracy)),
+            ("bops", Json::Num(self.bops)),
+            ("est_avg_resources", opt(self.est_avg_resources)),
+            ("est_clock_cycles", opt(self.est_clock_cycles)),
+            ("objectives", Json::nums(self.objectives.iter().copied())),
+            ("train_seconds", Json::Num(self.train_seconds)),
+        ])
+    }
+
+    /// Parse back from JSON.
+    pub fn from_json(j: &Json, space: &SearchSpace) -> Result<TrialRecord> {
+        let genome = genome_from_json(j.get("genome").context("missing genome")?)?;
+        anyhow::ensure!(space.contains(&genome), "genome outside search space");
+        let f = |k: &str| -> Result<f64> {
+            j.get(k)
+                .and_then(Json::as_f64)
+                .with_context(|| format!("missing `{k}`"))
+        };
+        let optf = |k: &str| j.get(k).and_then(Json::as_f64);
+        Ok(TrialRecord {
+            id: f("id")? as usize,
+            generation: f("generation")? as usize,
+            label: genome.label(space),
+            genome,
+            accuracy: f("accuracy")?,
+            bops: f("bops")?,
+            est_avg_resources: optf("est_avg_resources"),
+            est_clock_cycles: optf("est_clock_cycles"),
+            objectives: j
+                .get("objectives")
+                .context("missing objectives")?
+                .items()
+                .iter()
+                .filter_map(Json::as_f64)
+                .collect(),
+            train_seconds: f("train_seconds")?,
+        })
+    }
+
+    /// Save a whole trial database.
+    pub fn save_all(records: &[TrialRecord], path: &std::path::Path) -> Result<()> {
+        let arr = Json::Arr(records.iter().map(TrialRecord::to_json).collect());
+        std::fs::write(path, arr.to_string())?;
+        Ok(())
+    }
+
+    /// Load a trial database.
+    pub fn load_all(path: &std::path::Path, space: &SearchSpace) -> Result<Vec<TrialRecord>> {
+        let text = std::fs::read_to_string(path)?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        j.items()
+            .iter()
+            .map(|item| TrialRecord::from_json(item, space))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn record_roundtrips_through_json() {
+        let space = SearchSpace::table1();
+        let mut rng = Rng::new(0);
+        let genome = space.sample(&mut rng);
+        let rec = TrialRecord {
+            id: 3,
+            generation: 1,
+            label: genome.label(&space),
+            genome,
+            accuracy: 0.6412,
+            bops: 12_345.0,
+            est_avg_resources: Some(3.25),
+            est_clock_cycles: None,
+            objectives: vec![-0.6412, 3.25],
+            train_seconds: 1.5,
+        };
+        let parsed = TrialRecord::from_json(&rec.to_json(), &space).unwrap();
+        assert_eq!(parsed.genome, rec.genome);
+        assert_eq!(parsed.accuracy, rec.accuracy);
+        assert_eq!(parsed.est_avg_resources, Some(3.25));
+        assert_eq!(parsed.est_clock_cycles, None);
+        assert_eq!(parsed.objectives, rec.objectives);
+    }
+
+    #[test]
+    fn database_save_load() {
+        let space = SearchSpace::table1();
+        let mut rng = Rng::new(1);
+        let records: Vec<TrialRecord> = (0..10)
+            .map(|i| {
+                let genome = space.sample(&mut rng);
+                TrialRecord {
+                    id: i,
+                    generation: i / 4,
+                    label: genome.label(&space),
+                    genome,
+                    accuracy: 0.6 + 0.001 * i as f64,
+                    bops: 1000.0 * i as f64,
+                    est_avg_resources: Some(i as f64),
+                    est_clock_cycles: Some(40.0 + i as f64),
+                    objectives: vec![-0.6, i as f64],
+                    train_seconds: 0.1,
+                }
+            })
+            .collect();
+        let dir = std::env::temp_dir().join("snac_trialdb_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trials.json");
+        TrialRecord::save_all(&records, &path).unwrap();
+        let loaded = TrialRecord::load_all(&path, &space).unwrap();
+        assert_eq!(loaded.len(), 10);
+        assert_eq!(loaded[7].genome, records[7].genome);
+        assert_eq!(loaded[7].est_clock_cycles, Some(47.0));
+    }
+}

@@ -1,0 +1,287 @@
+//! Dataset container: generation, standardisation, splits, minibatching.
+
+use super::jets::{JetClass, JetGenerator, N_FEATURES};
+use crate::nn::{BATCH, IN_DIM, OUT_DIM};
+use crate::util::Rng;
+
+/// Which split to read.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Val,
+    Test,
+}
+
+/// One minibatch in the supernet's input layout.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    /// `(BATCH, IN_DIM)` features, row-major.
+    pub x: Vec<f32>,
+    /// `(BATCH, OUT_DIM)` one-hot labels.
+    pub y1h: Vec<f32>,
+    /// Number of *real* rows (tail batches are zero-padded).
+    pub rows: usize,
+}
+
+/// In-memory standardised jet dataset with train/val/test splits.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    features: Vec<f32>, // (n, IN_DIM)
+    labels: Vec<u8>,
+    n_train: usize,
+    n_val: usize,
+    n_test: usize,
+    /// per-feature standardisation (fit on train only)
+    pub mean: Vec<f32>,
+    pub std: Vec<f32>,
+}
+
+impl Dataset {
+    /// Generate a balanced dataset and standardise with train-split stats,
+    /// mirroring the Odagiu et al. preprocessing ("data processed and
+    /// normalized as done there").
+    pub fn generate(n_train: usize, n_val: usize, n_test: usize, seed: u64) -> Self {
+        assert_eq!(N_FEATURES, IN_DIM);
+        let gen = JetGenerator::default();
+        let mut rng = Rng::new(seed);
+        let total = n_train + n_val + n_test;
+        let mut features = Vec::with_capacity(total * IN_DIM);
+        let mut labels = Vec::with_capacity(total);
+        for i in 0..total {
+            let class = JetClass::ALL[i % OUT_DIM];
+            features.extend_from_slice(&gen.generate(class, &mut rng));
+            labels.push(class as u8);
+        }
+        // shuffle rows so splits are class-balanced in expectation but not
+        // block-structured
+        let perm = rng.permutation(total);
+        let mut shuf_f = vec![0.0f32; total * IN_DIM];
+        let mut shuf_l = vec![0u8; total];
+        for (dst, &src) in perm.iter().enumerate() {
+            shuf_f[dst * IN_DIM..(dst + 1) * IN_DIM]
+                .copy_from_slice(&features[src * IN_DIM..(src + 1) * IN_DIM]);
+            shuf_l[dst] = labels[src];
+        }
+        let mut ds = Dataset {
+            features: shuf_f,
+            labels: shuf_l,
+            n_train,
+            n_val,
+            n_test,
+            mean: vec![0.0; IN_DIM],
+            std: vec![1.0; IN_DIM],
+        };
+        ds.fit_standardiser();
+        ds.apply_standardiser();
+        ds
+    }
+
+    fn fit_standardiser(&mut self) {
+        let n = self.n_train.max(1);
+        for j in 0..IN_DIM {
+            let mut m = 0.0f64;
+            for i in 0..n {
+                m += self.features[i * IN_DIM + j] as f64;
+            }
+            m /= n as f64;
+            let mut v = 0.0f64;
+            for i in 0..n {
+                let d = self.features[i * IN_DIM + j] as f64 - m;
+                v += d * d;
+            }
+            v /= n as f64;
+            self.mean[j] = m as f32;
+            self.std[j] = (v.sqrt() as f32).max(1e-6);
+        }
+    }
+
+    fn apply_standardiser(&mut self) {
+        let total = self.labels.len();
+        for i in 0..total {
+            for j in 0..IN_DIM {
+                let v = &mut self.features[i * IN_DIM + j];
+                *v = (*v - self.mean[j]) / self.std[j];
+            }
+        }
+    }
+
+    fn split_range(&self, split: Split) -> (usize, usize) {
+        match split {
+            Split::Train => (0, self.n_train),
+            Split::Val => (self.n_train, self.n_train + self.n_val),
+            Split::Test => (
+                self.n_train + self.n_val,
+                self.n_train + self.n_val + self.n_test,
+            ),
+        }
+    }
+
+    /// Number of examples in a split.
+    pub fn len(&self, split: Split) -> usize {
+        let (a, b) = self.split_range(split);
+        b - a
+    }
+
+    /// True if the split is empty.
+    pub fn is_empty(&self, split: Split) -> bool {
+        self.len(split) == 0
+    }
+
+    /// Row accessors (standardised features, label).
+    pub fn row(&self, split: Split, i: usize) -> (&[f32], u8) {
+        let (a, _) = self.split_range(split);
+        let idx = a + i;
+        (
+            &self.features[idx * IN_DIM..(idx + 1) * IN_DIM],
+            self.labels[idx],
+        )
+    }
+
+    /// Shuffled epoch of training minibatches (drops the ragged tail, as
+    /// the usual `drop_last=True` training loader does).
+    pub fn train_epoch(&self, rng: &mut Rng) -> Vec<Batch> {
+        let n = self.len(Split::Train);
+        let perm = rng.permutation(n);
+        let n_batches = n / BATCH;
+        let mut out = Vec::with_capacity(n_batches);
+        for b in 0..n_batches {
+            let mut x = vec![0.0f32; BATCH * IN_DIM];
+            let mut y = vec![0.0f32; BATCH * OUT_DIM];
+            for r in 0..BATCH {
+                let (feat, label) = self.row(Split::Train, perm[b * BATCH + r]);
+                x[r * IN_DIM..(r + 1) * IN_DIM].copy_from_slice(feat);
+                y[r * OUT_DIM + label as usize] = 1.0;
+            }
+            out.push(Batch { x, y1h: y, rows: BATCH });
+        }
+        out
+    }
+
+    /// Sequential fixed-size tiles over a split, zero-padding the tail
+    /// (`rows` records the real count for correct accuracy accounting).
+    pub fn eval_tiles(&self, split: Split, tile: usize) -> Vec<Batch> {
+        let n = self.len(split);
+        let mut out = Vec::with_capacity(n.div_ceil(tile));
+        let mut i = 0;
+        while i < n {
+            let rows = tile.min(n - i);
+            let mut x = vec![0.0f32; tile * IN_DIM];
+            let mut y = vec![0.0f32; tile * OUT_DIM];
+            for r in 0..rows {
+                let (feat, label) = self.row(split, i + r);
+                x[r * IN_DIM..(r + 1) * IN_DIM].copy_from_slice(feat);
+                y[r * OUT_DIM + label as usize] = 1.0;
+            }
+            // padded rows keep an all-zero one-hot; argmax(0-vector) == class
+            // 0 == argmax(logits of zero input) only by accident, so rust
+            // discounts them via `rows` instead of trusting the graph.
+            out.push(Batch { x, y1h: y, rows });
+            i += rows;
+        }
+        out
+    }
+
+    /// Class balance of a split (fractions, label order).
+    pub fn class_balance(&self, split: Split) -> [f64; OUT_DIM] {
+        let n = self.len(split);
+        let mut counts = [0usize; OUT_DIM];
+        for i in 0..n {
+            counts[self.row(split, i).1 as usize] += 1;
+        }
+        let mut out = [0.0; OUT_DIM];
+        for (o, c) in out.iter_mut().zip(counts) {
+            *o = c as f64 / n.max(1) as f64;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Dataset {
+        Dataset::generate(1280, 320, 320, 7)
+    }
+
+    #[test]
+    fn splits_have_requested_sizes() {
+        let ds = small();
+        assert_eq!(ds.len(Split::Train), 1280);
+        assert_eq!(ds.len(Split::Val), 320);
+        assert_eq!(ds.len(Split::Test), 320);
+    }
+
+    #[test]
+    fn train_features_are_standardised() {
+        let ds = small();
+        for j in 0..IN_DIM {
+            let n = ds.len(Split::Train);
+            let mut m = 0.0f64;
+            let mut v = 0.0f64;
+            for i in 0..n {
+                m += ds.row(Split::Train, i).0[j] as f64;
+            }
+            m /= n as f64;
+            for i in 0..n {
+                let d = ds.row(Split::Train, i).0[j] as f64 - m;
+                v += d * d;
+            }
+            v /= n as f64;
+            assert!(m.abs() < 1e-4, "feature {j} mean {m}");
+            assert!((v - 1.0).abs() < 1e-3, "feature {j} var {v}");
+        }
+    }
+
+    #[test]
+    fn classes_are_balanced() {
+        let ds = small();
+        for f in ds.class_balance(Split::Train) {
+            assert!((f - 0.2).abs() < 0.06, "balance {f}");
+        }
+    }
+
+    #[test]
+    fn train_epoch_batches_are_onehot() {
+        let ds = small();
+        let mut rng = Rng::new(0);
+        let batches = ds.train_epoch(&mut rng);
+        assert_eq!(batches.len(), 1280 / BATCH);
+        for b in &batches {
+            assert_eq!(b.rows, BATCH);
+            for r in 0..BATCH {
+                let s: f32 = b.y1h[r * OUT_DIM..(r + 1) * OUT_DIM].iter().sum();
+                assert_eq!(s, 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn epochs_are_reshuffled() {
+        let ds = small();
+        let mut rng = Rng::new(0);
+        let a = ds.train_epoch(&mut rng);
+        let b = ds.train_epoch(&mut rng);
+        assert_ne!(a[0].x, b[0].x, "shuffling must change batch composition");
+    }
+
+    #[test]
+    fn eval_tiles_cover_split_exactly_once() {
+        let ds = small();
+        let tiles = ds.eval_tiles(Split::Test, 512);
+        let total: usize = tiles.iter().map(|t| t.rows).sum();
+        assert_eq!(total, 320);
+        assert_eq!(tiles.len(), 1);
+        // padded tail rows are zero
+        let t = &tiles[0];
+        assert!(t.x[320 * IN_DIM..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a = Dataset::generate(256, 64, 64, 3);
+        let b = Dataset::generate(256, 64, 64, 3);
+        assert_eq!(a.features, b.features);
+        assert_eq!(a.labels, b.labels);
+    }
+}

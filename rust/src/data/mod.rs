@@ -1,0 +1,14 @@
+//! Jet-classification data substrate.
+//!
+//! The paper uses the hls4ml LHC jet dataset (Zenodo 3602260), which is not
+//! available here; `jets.rs` implements a physics-inspired synthetic
+//! generator with the same interface contract: 5 classes (q, g, W, Z, t),
+//! 8 leading constituents × (pT, η, φ) = 24 standardised features
+//! (DESIGN.md substitution #3). `dataset.rs` handles splits, normalisation
+//! and minibatching.
+
+pub mod dataset;
+pub mod jets;
+
+pub use dataset::{Batch, Dataset, Split};
+pub use jets::{JetClass, JetGenerator};

@@ -1,0 +1,49 @@
+//! FPGA device models (resource capacities for utilisation percentages).
+
+
+/// An FPGA part's resource capacities.
+#[derive(Debug, Clone)]
+pub struct FpgaDevice {
+    /// Part name.
+    pub name: String,
+    /// DSP48 slices.
+    pub dsp: u64,
+    /// Logic LUTs.
+    pub lut: u64,
+    /// Flip-flops.
+    pub ff: u64,
+    /// BRAM36 blocks.
+    pub bram36: u64,
+    /// Target clock period in nanoseconds.
+    pub clock_ns: f64,
+}
+
+impl FpgaDevice {
+    /// Xilinx Virtex UltraScale+ VU13P — the paper's target, at the 200 MHz
+    /// clock implied by Table 3 (105 ns / 21 cc = 5 ns).
+    pub fn vu13p() -> Self {
+        FpgaDevice {
+            name: "xcvu13p".to_string(),
+            dsp: 12_288,
+            lut: 1_728_000,
+            ff: 3_456_000,
+            bram36: 2_688,
+            clock_ns: 5.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vu13p_percentages_match_paper_scale() {
+        let d = FpgaDevice::vu13p();
+        // Table 3 anchors: 262 DSP = 2.1 %, 155080 LUT = 9.0 %,
+        // 25714 FF = 0.7 %
+        assert!((262.0 / d.dsp as f64 * 100.0 - 2.1).abs() < 0.1);
+        assert!((155_080.0 / d.lut as f64 * 100.0 - 9.0).abs() < 0.1);
+        assert!((25_714.0 / d.ff as f64 * 100.0 - 0.7).abs() < 0.1);
+    }
+}

@@ -1,0 +1,19 @@
+//! hls4ml-style FPGA synthesis **simulator** (DESIGN.md substitution #1).
+//!
+//! The paper synthesises its final models with hls4ml (`io_parallel`,
+//! `latency` strategy, `reuse_factor = 1`) and Vivado on a Xilinx Virtex
+//! UltraScale+ VU13P. Neither tool is available here, so this module is an
+//! analytic model of that exact pipeline: per-layer multiplier enumeration
+//! with pruned-weight elision, bitwidth-dependent DSP-vs-LUT multiplier
+//! mapping, adder trees, pipeline registers, activation-table BRAMs, and a
+//! per-layer pipeline-depth latency model. It is the *ground truth* that
+//! the rule4ml-style surrogate is trained to predict, and it generates
+//! Table 3.
+
+pub mod cost;
+pub mod device;
+pub mod network;
+
+pub use cost::{synthesize, HlsConfig};
+pub use device::FpgaDevice;
+pub use network::{LayerSpec, NetworkSpec, SynthReport};

@@ -1,0 +1,208 @@
+//! Network descriptors fed to the synthesis simulator, and its report type.
+
+
+use super::device::FpgaDevice;
+use crate::nn::genome::{Activation, Genome};
+use crate::nn::space::SearchSpace;
+
+/// One dense(+BN)(+activation) stage as hls4ml sees it.
+#[derive(Debug, Clone)]
+pub struct LayerSpec {
+    /// Fan-in.
+    pub n_in: usize,
+    /// Fan-out.
+    pub n_out: usize,
+    /// Weight bit-width (ap_fixed total bits).
+    pub weight_bits: u32,
+    /// Activation-datapath bit-width.
+    pub act_bits: u32,
+    /// Non-zero multiplies after pruning/quantisation elision.
+    pub nnz: usize,
+    /// Nonlinearity following the dense (None for the classifier head).
+    pub activation: Option<Activation>,
+    /// Unfused BatchNorm affine after the dense.
+    pub batch_norm: bool,
+}
+
+impl LayerSpec {
+    /// Weight sparsity of this layer.
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.nnz as f64 / (self.n_in * self.n_out) as f64
+    }
+}
+
+/// A whole network for synthesis.
+#[derive(Debug, Clone)]
+pub struct NetworkSpec {
+    /// Dense stages, input → head.
+    pub layers: Vec<LayerSpec>,
+    /// Synthesize a stable softmax head (exp/inv BRAM tables). The legacy
+    /// baseline config [12] keeps it; NAC/SNAC deployments use argmax.
+    pub softmax_head: bool,
+    /// Fold BatchNorm affines into the preceding Dense (hls4ml's
+    /// `fuse_batch_norm` pass — free in hardware). Modern QAT flows get
+    /// this; the legacy baseline synthesis kept BN as a separate 16-bit
+    /// stage, which is where its DSP usage comes from (Table 3).
+    pub fuse_batch_norm: bool,
+}
+
+impl NetworkSpec {
+    /// Dense network from a genome at uniform precision and sparsity
+    /// (global-search estimates, where no trained weights exist yet).
+    pub fn from_genome(
+        genome: &Genome,
+        space: &SearchSpace,
+        bits: u32,
+        sparsity: f64,
+    ) -> Self {
+        let dims = genome.layer_dims(space);
+        let n_layers = dims.len();
+        let layers = dims
+            .iter()
+            .enumerate()
+            .map(|(i, &(n_in, n_out))| LayerSpec {
+                n_in,
+                n_out,
+                weight_bits: bits,
+                act_bits: bits + 2, // hls4ml default: a little headroom on the datapath
+                nnz: ((n_in * n_out) as f64 * (1.0 - sparsity)).round() as usize,
+                activation: if i + 1 < n_layers { Some(genome.act) } else { None },
+                batch_norm: genome.batch_norm && i + 1 < n_layers,
+            })
+            .collect();
+        NetworkSpec {
+            layers,
+            softmax_head: false,
+            fuse_batch_norm: true,
+        }
+    }
+
+    /// As [`NetworkSpec::from_genome`] but with exact per-layer non-zero
+    /// counts (post-IMP, post-QAT — weights whose quantised value is zero
+    /// are elided by HLS constant folding).
+    pub fn from_genome_with_nnz(
+        genome: &Genome,
+        space: &SearchSpace,
+        bits: u32,
+        nnz: &[usize],
+    ) -> Self {
+        let mut spec = Self::from_genome(genome, space, bits, 0.0);
+        assert_eq!(nnz.len(), spec.layers.len(), "one nnz per dense layer");
+        for (layer, &n) in spec.layers.iter_mut().zip(nnz) {
+            layer.nnz = n.min(layer.n_in * layer.n_out);
+        }
+        spec
+    }
+
+    /// Total multiplies before pruning.
+    pub fn total_macs(&self) -> usize {
+        self.layers.iter().map(|l| l.n_in * l.n_out).sum()
+    }
+
+    /// Total surviving multiplies.
+    pub fn total_nnz(&self) -> usize {
+        self.layers.iter().map(|l| l.nnz).sum()
+    }
+}
+
+/// Post-synthesis resources and timing (Table 3 row).
+#[derive(Debug, Clone, Default)]
+pub struct SynthReport {
+    /// DSP48 slices.
+    pub dsp: u64,
+    /// Logic LUTs.
+    pub lut: u64,
+    /// Flip-flops.
+    pub ff: u64,
+    /// BRAM36 blocks.
+    pub bram36: u64,
+    /// Pipeline latency in clock cycles.
+    pub latency_cc: u64,
+    /// Initiation interval in clock cycles.
+    pub ii_cc: u64,
+    /// Clock period used for ns conversions.
+    pub clock_ns: f64,
+}
+
+impl SynthReport {
+    /// Latency in nanoseconds.
+    pub fn latency_ns(&self) -> f64 {
+        self.latency_cc as f64 * self.clock_ns
+    }
+
+    /// II in nanoseconds.
+    pub fn ii_ns(&self) -> f64 {
+        self.ii_cc as f64 * self.clock_ns
+    }
+
+    /// Utilisation percentages `(dsp, lut, ff, bram)` on a device.
+    pub fn utilisation(&self, device: &FpgaDevice) -> [f64; 4] {
+        [
+            self.dsp as f64 / device.dsp as f64 * 100.0,
+            self.lut as f64 / device.lut as f64 * 100.0,
+            self.ff as f64 / device.ff as f64 * 100.0,
+            self.bram36 as f64 / device.bram36 as f64 * 100.0,
+        ]
+    }
+
+    /// The paper's "average resources" scalar: mean of the four
+    /// utilisation percentages.
+    pub fn avg_resources(&self, device: &FpgaDevice) -> f64 {
+        self.utilisation(device).iter().sum::<f64>() / 4.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn baseline_spec() -> NetworkSpec {
+        let space = SearchSpace::table1();
+        NetworkSpec::from_genome(&space.baseline(), &space, 8, 0.5)
+    }
+
+    #[test]
+    fn from_genome_builds_all_stages() {
+        let spec = baseline_spec();
+        assert_eq!(spec.layers.len(), 5); // 4 hidden + head
+        assert!(spec.layers[..4].iter().all(|l| l.activation.is_some()));
+        assert!(spec.layers[4].activation.is_none());
+        assert!(spec.layers[..4].iter().all(|l| l.batch_norm));
+        assert!(!spec.layers[4].batch_norm);
+    }
+
+    #[test]
+    fn nnz_respects_sparsity() {
+        let spec = baseline_spec();
+        let total = spec.total_macs();
+        let nnz = spec.total_nnz();
+        assert!((nnz as f64 / total as f64 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn with_nnz_overrides_counts() {
+        let space = SearchSpace::table1();
+        let g = space.baseline();
+        let spec = NetworkSpec::from_genome_with_nnz(&g, &space, 8, &[100, 90, 80, 70, 60]);
+        assert_eq!(spec.total_nnz(), 400);
+    }
+
+    #[test]
+    fn utilisation_scales() {
+        let d = FpgaDevice::vu13p();
+        let r = SynthReport {
+            dsp: 262,
+            lut: 155_080,
+            ff: 25_714,
+            bram36: 4,
+            latency_cc: 21,
+            ii_cc: 1,
+            clock_ns: 5.0,
+        };
+        let u = r.utilisation(&d);
+        assert!((u[0] - 2.13).abs() < 0.05);
+        assert!((u[1] - 8.97).abs() < 0.05);
+        assert_eq!(r.latency_ns(), 105.0);
+        assert!(r.avg_resources(&d) > 0.0);
+    }
+}

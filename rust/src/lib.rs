@@ -1,0 +1,36 @@
+//! # SNAC-Pack — Surrogate Neural Architecture Codesign Package (reproduction)
+//!
+//! A full reimplementation of the SNAC-Pack system (Weitz et al., ML4PS @
+//! NeurIPS 2025): multi-stage neural architecture codesign for FPGA
+//! deployment, with a rule4ml-style *surrogate* resource/latency estimator
+//! in the search loop instead of proxy BOPs.
+//!
+//! Architecture (see DESIGN.md):
+//! * **Layer 3 (this crate)** — the coordination contribution: NSGA-II
+//!   global search, trial scheduling, local search (iterative magnitude
+//!   pruning + QAT), the surrogate trainer, the hls4ml-style synthesis
+//!   simulator, and the report machinery that regenerates every table and
+//!   figure of the paper.
+//! * **Layer 2 (python/compile/model.py)** — the padded *supernet* covering
+//!   the entire Table 1 search space, AOT-lowered once to HLO text.
+//! * **Layer 1 (python/compile/kernels/)** — Pallas kernels for the fused
+//!   masked dense layer (forward + backward).
+//!
+//! Python never runs at search time: [`runtime`] loads the AOT artifacts via
+//! the PJRT C API and every candidate architecture is expressed as runtime
+//! *inputs* (masks/gates/hyperparameter scalars) to one compiled graph.
+
+pub mod compress;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod hls;
+pub mod nn;
+pub mod objectives;
+pub mod pareto;
+pub mod report;
+pub mod runtime;
+pub mod search;
+pub mod surrogate;
+pub mod trainer;
+pub mod util;

@@ -1,0 +1,222 @@
+//! `snac-pack` — the Layer-3 coordinator CLI.
+//!
+//! Python never runs here: all compute executes through the AOT-compiled
+//! HLO artifacts in `artifacts/` (build them once with `make artifacts`).
+//!
+//! ```text
+//! snac-pack pipeline  --preset ci --out results          # full paper flow
+//! snac-pack search    --preset ci --objectives acc,bops  # one global search
+//! snac-pack surrogate --preset ci                        # surrogate train/eval
+//! snac-pack synth                                        # Table-3 style synthesis demo
+//! snac-pack info                                         # runtime/artifact info
+//! ```
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use snac_pack::config::Preset;
+use snac_pack::coordinator::{self, GlobalSearchConfig, TrialRecord};
+use snac_pack::data::Dataset;
+use snac_pack::hls::{synthesize, FpgaDevice, HlsConfig, NetworkSpec};
+use snac_pack::nn::SearchSpace;
+use snac_pack::objectives::{ObjectiveContext, ObjectiveKind};
+use snac_pack::runtime::Runtime;
+use snac_pack::surrogate::{train_surrogate, SurrogatePredictor};
+
+/// Parsed command line.
+struct Cli {
+    command: String,
+    preset: Preset,
+    out: PathBuf,
+    artifacts: PathBuf,
+    objectives: Vec<ObjectiveKind>,
+}
+
+fn parse_cli() -> Result<Cli> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(command) = args.first().cloned() else {
+        bail!(
+            "usage: snac-pack <pipeline|search|surrogate|synth|info> \
+             [--preset paper|ci|quickstart] [--out DIR] [--artifacts DIR] \
+             [--objectives acc,bops] [--set key=value ...]"
+        );
+    };
+    let mut preset = Preset::by_name("ci")?;
+    let mut out = PathBuf::from("results");
+    let mut artifacts = PathBuf::from("artifacts");
+    let mut objectives = ObjectiveKind::nac_set();
+    let mut i = 1;
+    while i < args.len() {
+        let flag = &args[i];
+        let value = || -> Result<&String> {
+            args.get(i + 1)
+                .with_context(|| format!("flag {flag} needs a value"))
+        };
+        match flag.as_str() {
+            "--preset" => preset = Preset::by_name(value()?)?,
+            "--out" => out = PathBuf::from(value()?),
+            "--artifacts" => artifacts = PathBuf::from(value()?),
+            "--objectives" => objectives = ObjectiveKind::parse_set(value()?)?,
+            "--set" => {
+                let kv = value()?;
+                let (k, v) = kv
+                    .split_once('=')
+                    .with_context(|| format!("--set expects key=value, got {kv}"))?;
+                preset.set(k, v)?;
+            }
+            other => bail!("unknown flag `{other}`"),
+        }
+        i += 2;
+    }
+    Ok(Cli {
+        command,
+        preset,
+        out,
+        artifacts,
+        objectives,
+    })
+}
+
+fn main() -> Result<()> {
+    let cli = parse_cli()?;
+    match cli.command.as_str() {
+        "info" => {
+            let rt = Runtime::load(&cli.artifacts)?;
+            println!("platform: {}", rt.platform());
+            for (name, spec) in &rt.manifest().artifacts {
+                println!(
+                    "artifact {name}: {} inputs / {} outputs ({})",
+                    spec.inputs.len(),
+                    spec.outputs.len(),
+                    spec.file
+                );
+            }
+        }
+        "pipeline" => {
+            let rt = Runtime::load(&cli.artifacts)?;
+            let summary = coordinator::run_pipeline(&rt, &cli.preset, &cli.out)?;
+            println!("{}", summary.table2);
+            println!("{}", summary.table3);
+            println!("stage timings:");
+            for (stage, secs) in &summary.timings {
+                println!("  {stage:<28} {secs:>8.1}s");
+            }
+            println!("reports written to {}", cli.out.display());
+        }
+        "search" => {
+            let rt = Runtime::load(&cli.artifacts)?;
+            let space = SearchSpace::table1();
+            let device = FpgaDevice::vu13p();
+            let ds = Dataset::generate(
+                cli.preset.data.n_train,
+                cli.preset.data.n_val,
+                cli.preset.data.n_test,
+                cli.preset.data.seed,
+            );
+            let needs_surrogate = cli
+                .objectives
+                .iter()
+                .any(|o| matches!(o, ObjectiveKind::EstAvgResources | ObjectiveKind::EstClockCycles));
+            let sur = if needs_surrogate {
+                let (p, mse) = train_surrogate(
+                    &rt,
+                    &space,
+                    &cli.preset.surrogate,
+                    &HlsConfig::default(),
+                    &device,
+                )?;
+                eprintln!("surrogate MSE: {mse:.5}");
+                Some(SurrogatePredictor::new(&rt, p))
+            } else {
+                None
+            };
+            let outcome = coordinator::global_search(
+                &rt,
+                &ds,
+                &space,
+                GlobalSearchConfig {
+                    objectives: cli.objectives.clone(),
+                    ctx: ObjectiveContext {
+                        space: &space,
+                        device: &device,
+                        surrogate: sur.as_ref(),
+                        bits: cli.preset.local.bits,
+                        sparsity: cli.preset.local.target_sparsity,
+                    },
+                    nsga2: cli.preset.nsga2(),
+                    trials: cli.preset.search.trials,
+                    epochs: cli.preset.search.epochs,
+                    seed: cli.preset.seed,
+                    accuracy_threshold: 0.0,
+                    progress: Some(Box::new(|i, n, r: &TrialRecord| {
+                        eprintln!("trial {i}/{n}: {} acc={:.4}", r.label, r.accuracy);
+                    })),
+                },
+            )?;
+            std::fs::create_dir_all(&cli.out)?;
+            TrialRecord::save_all(&outcome.records, &cli.out.join("trials.json"))?;
+            println!(
+                "{} trials in {:.1}s; front size {}; trials.json written to {}",
+                outcome.records.len(),
+                outcome.wall_seconds,
+                outcome.front.len(),
+                cli.out.display()
+            );
+            for &i in &outcome.front {
+                let r = &outcome.records[i];
+                println!("  front: {} acc={:.4} obj={:?}", r.label, r.accuracy, r.objectives);
+            }
+        }
+        "surrogate" => {
+            let rt = Runtime::load(&cli.artifacts)?;
+            let space = SearchSpace::table1();
+            let device = FpgaDevice::vu13p();
+            let hls = HlsConfig::default();
+            let (params, mse) =
+                train_surrogate(&rt, &space, &cli.preset.surrogate, &hls, &device)?;
+            println!("surrogate trained: final MSE {mse:.5} (compressed space)");
+            // held-out sanity: compare predictions against the simulator
+            let sur = SurrogatePredictor::new(&rt, params);
+            let mut rng = snac_pack::util::Rng::new(999);
+            let mut rel_err = [0.0f64; 2];
+            let n = 64;
+            for _ in 0..n {
+                let g = space.sample(&mut rng);
+                let est = sur.predict(&g, &space, 8, 0.5)?;
+                let spec = NetworkSpec::from_genome(&g, &space, 8, 0.5);
+                let truth = synthesize(&spec, &hls, &device);
+                rel_err[0] +=
+                    ((est.lut - truth.lut as f64) / (truth.lut as f64 + 1.0)).abs();
+                rel_err[1] += ((est.latency_cc - truth.latency_cc as f64)
+                    / (truth.latency_cc as f64 + 1.0))
+                    .abs();
+            }
+            println!(
+                "held-out mean relative error: LUT {:.1}%, latency {:.1}%",
+                rel_err[0] / n as f64 * 100.0,
+                rel_err[1] / n as f64 * 100.0
+            );
+        }
+        "synth" => {
+            // Table-3-style synthesis of the baseline at several sparsities
+            let space = SearchSpace::table1();
+            let device = FpgaDevice::vu13p();
+            let hls = HlsConfig::default();
+            println!("baseline [12] synthesis sweep on {}:", device.name);
+            println!("sparsity  DSP    LUT      FF     BRAM  lat(cc)");
+            for s in [0.0, 0.25, 0.5, 0.75] {
+                let mut spec = NetworkSpec::from_genome(&space.baseline(), &space, 8, s);
+                spec.softmax_head = true;
+                spec.fuse_batch_norm = false; // legacy [12] synthesis
+                let r = synthesize(&spec, &hls, &device);
+                println!(
+                    "{s:>7.2}  {:>4}  {:>6}  {:>6}  {:>4}  {:>6}",
+                    r.dsp, r.lut, r.ff, r.bram36, r.latency_cc
+                );
+            }
+        }
+        other => bail!("unknown command `{other}`"),
+    }
+    Ok(())
+}

@@ -1,0 +1,58 @@
+//! Shape constants shared with the AOT-compiled JAX graphs.
+//!
+//! These mirror `python/compile/model.py`; `runtime::artifacts` validates
+//! them against `artifacts/manifest.json` at load time so any drift between
+//! the Python build and this crate fails fast.
+
+/// Padded hidden width of the supernet (max Table 1 width).
+pub const PAD: usize = 128;
+/// Maximum depth of the Table 1 space.
+pub const NUM_LAYERS: usize = 8;
+/// Input features: 8 constituents × (pT, η, φ).
+pub const IN_DIM: usize = 24;
+/// Output classes: q, g, W, Z, t.
+pub const OUT_DIM: usize = 5;
+/// Training batch size (paper: 128).
+pub const BATCH: usize = 128;
+/// Evaluation tile size; Rust pads the tail batch.
+pub const EVAL_BATCH: usize = 512;
+
+/// BatchNorm epsilon baked into the graph.
+pub const BN_EPS: f32 = 1e-3;
+
+// ---- `hp` vector layout for the train_step artifact ----
+pub const HP_BN_GATE: usize = 0;
+pub const HP_DROPOUT: usize = 1;
+pub const HP_QAT_GATE: usize = 2;
+pub const HP_BITS: usize = 3;
+pub const HP_LR: usize = 4;
+pub const HP_L1: usize = 5;
+pub const HP_BETA1: usize = 6;
+pub const HP_BETA2: usize = 7;
+pub const HP_EPS: usize = 8;
+pub const HP_BETA1_POW: usize = 9;
+pub const HP_BETA2_POW: usize = 10;
+pub const HP_SEED: usize = 11;
+pub const HP_BN_MOM: usize = 12;
+pub const HP_LEN: usize = 13;
+
+// ---- `ehp` vector layout for the eval_step artifact ----
+pub const EHP_BN_GATE: usize = 0;
+pub const EHP_QAT_GATE: usize = 1;
+pub const EHP_BITS: usize = 2;
+pub const EHP_LEN: usize = 3;
+
+// ---- surrogate shapes ----
+pub const SUR_FEATS: usize = 72;
+pub const SUR_HIDDEN: usize = 128;
+pub const SUR_OUT: usize = 6;
+pub const SUR_BATCH: usize = 256;
+
+// ---- surrogate `shp` layout ----
+pub const SHP_LR: usize = 0;
+pub const SHP_BETA1: usize = 1;
+pub const SHP_BETA2: usize = 2;
+pub const SHP_EPS: usize = 3;
+pub const SHP_BETA1_POW: usize = 4;
+pub const SHP_BETA2_POW: usize = 5;
+pub const SHP_LEN: usize = 6;

@@ -1,0 +1,77 @@
+//! Bit operations (BOPs) — the proxy metric NAC optimises and SNAC-Pack
+//! replaces with surrogate estimates (the paper's central comparison).
+//!
+//! We use the standard accounting of Baskin et al. (adopted by the NAC
+//! paper): for a dense layer with `n` inputs, `m` outputs, weight bits
+//! `b_w`, activation bits `b_a` and weight sparsity `s`:
+//!
+//! ```text
+//! BOPs = m·n·( (1−s)·b_w·b_a + b_a + b_w + log2(n) )
+//! ```
+//!
+//! Absolute values depend on accounting conventions, so EXPERIMENTS.md
+//! compares *ratios* (baseline vs NAC vs SNAC-Pack) against Table 2.
+
+use super::genome::Genome;
+use super::space::SearchSpace;
+
+/// BOPs of one dense layer.
+pub fn layer_bops(n_in: usize, n_out: usize, bw: u32, ba: u32, sparsity: f64) -> f64 {
+    let n = n_in as f64;
+    let m = n_out as f64;
+    m * n * ((1.0 - sparsity) * (bw as f64) * (ba as f64) + ba as f64 + bw as f64 + n.log2())
+}
+
+/// BOPs of a whole genome at uniform precision/sparsity.
+pub fn genome_bops(g: &Genome, space: &SearchSpace, bw: u32, ba: u32, sparsity: f64) -> f64 {
+    g.layer_dims(space)
+        .iter()
+        .map(|&(i, o)| layer_bops(i, o, bw, ba, sparsity))
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::genome::Activation;
+
+    #[test]
+    fn layer_bops_formula() {
+        // 16 in, 8 out, 8w8a, dense
+        let b = layer_bops(16, 8, 8, 8, 0.0);
+        assert_eq!(b, 8.0 * 16.0 * (64.0 + 8.0 + 8.0 + 4.0));
+    }
+
+    #[test]
+    fn sparsity_reduces_bops() {
+        let dense = layer_bops(64, 64, 8, 8, 0.0);
+        let half = layer_bops(64, 64, 8, 8, 0.5);
+        assert!(half < dense);
+        assert!(half > 0.4 * dense);
+    }
+
+    #[test]
+    fn lower_precision_reduces_bops() {
+        assert!(layer_bops(64, 64, 4, 8, 0.0) < layer_bops(64, 64, 8, 8, 0.0));
+    }
+
+    #[test]
+    fn baseline_exceeds_small_net() {
+        let space = SearchSpace::table1();
+        let baseline = space.baseline();
+        let small = Genome {
+            n_layers: 4,
+            width_idx: [0, 0, 0, 0, 0, 0, 0, 0],
+            act: Activation::ReLU,
+            batch_norm: false,
+            lr_idx: 0,
+            l1_idx: 0,
+            dropout_idx: 0,
+        };
+        // baseline widths 64-32-32-32 vs 64-32-16-32 → strictly more BOPs
+        assert!(
+            genome_bops(&baseline, &space, 8, 8, 0.0)
+                > genome_bops(&small, &space, 8, 8, 0.0)
+        );
+    }
+}

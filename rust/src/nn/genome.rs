@@ -1,0 +1,168 @@
+//! Genome: one point of the Table 1 search space.
+
+
+use super::abi::{IN_DIM, NUM_LAYERS, OUT_DIM};
+use super::space::SearchSpace;
+
+/// Activation function choice (Table 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Activation {
+    ReLU,
+    Tanh,
+    Sigmoid,
+}
+
+impl Activation {
+    /// All choices, index-aligned with the supernet's one-hot selector.
+    pub const ALL: [Activation; 3] = [Activation::ReLU, Activation::Tanh, Activation::Sigmoid];
+
+    /// Index into the one-hot selector.
+    pub fn index(self) -> usize {
+        match self {
+            Activation::ReLU => 0,
+            Activation::Tanh => 1,
+            Activation::Sigmoid => 2,
+        }
+    }
+
+    /// Whether hls4ml implements this with a BRAM lookup table.
+    pub fn needs_table(self) -> bool {
+        !matches!(self, Activation::ReLU)
+    }
+}
+
+/// A sampled MLP architecture + training hyperparameters (Table 1 point).
+///
+/// Width/lr/l1/dropout are stored as *indices* into the [`SearchSpace`]
+/// choice lists so crossover/mutation stay within the discrete space.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Genome {
+    /// Depth, 4..=8 (Table 1 "Number of layers").
+    pub n_layers: usize,
+    /// Per-layer index into `SearchSpace::width_choices[i]`.
+    pub width_idx: [usize; NUM_LAYERS],
+    /// Activation used throughout the network.
+    pub act: Activation,
+    /// BatchNorm after every hidden dense layer.
+    pub batch_norm: bool,
+    /// Index into `SearchSpace::lr_choices`.
+    pub lr_idx: usize,
+    /// Index into `SearchSpace::l1_choices`.
+    pub l1_idx: usize,
+    /// Index into `SearchSpace::dropout_choices`.
+    pub dropout_idx: usize,
+}
+
+impl Genome {
+    /// Hidden widths of the *active* layers.
+    pub fn widths(&self, space: &SearchSpace) -> Vec<usize> {
+        (0..self.n_layers)
+            .map(|i| space.width_choices[i][self.width_idx[i]])
+            .collect()
+    }
+
+    /// All dense layer shapes `(n_in, n_out)` including the classifier head.
+    pub fn layer_dims(&self, space: &SearchSpace) -> Vec<(usize, usize)> {
+        let widths = self.widths(space);
+        let mut dims = Vec::with_capacity(self.n_layers + 1);
+        let mut prev = IN_DIM;
+        for &w in &widths {
+            dims.push((prev, w));
+            prev = w;
+        }
+        dims.push((prev, OUT_DIM));
+        dims
+    }
+
+    /// Total weight count (no biases), the classic "parameters" number.
+    pub fn num_weights(&self, space: &SearchSpace) -> usize {
+        self.layer_dims(space).iter().map(|&(i, o)| i * o).sum()
+    }
+
+    /// Learning rate value.
+    pub fn lr(&self, space: &SearchSpace) -> f32 {
+        space.lr_choices[self.lr_idx]
+    }
+
+    /// L1 regularisation strength.
+    pub fn l1(&self, space: &SearchSpace) -> f32 {
+        space.l1_choices[self.l1_idx]
+    }
+
+    /// Dropout rate.
+    pub fn dropout(&self, space: &SearchSpace) -> f32 {
+        space.dropout_choices[self.dropout_idx]
+    }
+
+    /// Compact human-readable id, e.g. `d5-64.32.16.32.32-relu-bn`.
+    pub fn label(&self, space: &SearchSpace) -> String {
+        let widths: Vec<String> = self.widths(space).iter().map(|w| w.to_string()).collect();
+        format!(
+            "d{}-{}-{}{}",
+            self.n_layers,
+            widths.join("."),
+            match self.act {
+                Activation::ReLU => "relu",
+                Activation::Tanh => "tanh",
+                Activation::Sigmoid => "sig",
+            },
+            if self.batch_norm { "-bn" } else { "" }
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn space() -> SearchSpace {
+        SearchSpace::table1()
+    }
+
+    fn genome() -> Genome {
+        Genome {
+            n_layers: 5,
+            width_idx: [0; NUM_LAYERS],
+            act: Activation::ReLU,
+            batch_norm: true,
+            lr_idx: 0,
+            l1_idx: 0,
+            dropout_idx: 0,
+        }
+    }
+
+    #[test]
+    fn layer_dims_chain() {
+        let g = genome();
+        let dims = g.layer_dims(&space());
+        assert_eq!(dims.len(), 6); // 5 hidden + head
+        assert_eq!(dims[0].0, IN_DIM);
+        assert_eq!(dims.last().unwrap().1, OUT_DIM);
+        for w in dims.windows(2) {
+            assert_eq!(w[0].1, w[1].0, "consecutive dims must chain");
+        }
+    }
+
+    #[test]
+    fn widths_respect_depth() {
+        let mut g = genome();
+        g.n_layers = 4;
+        assert_eq!(g.widths(&space()).len(), 4);
+        g.n_layers = 8;
+        assert_eq!(g.widths(&space()).len(), 8);
+    }
+
+    #[test]
+    fn num_weights_matches_dims() {
+        let g = genome();
+        let s = space();
+        let manual: usize = g.layer_dims(&s).iter().map(|&(a, b)| a * b).sum();
+        assert_eq!(g.num_weights(&s), manual);
+    }
+
+    #[test]
+    fn label_is_stable() {
+        let g = genome();
+        assert_eq!(g.label(&space()), "d5-64.32.16.32.32-relu-bn");
+    }
+}

@@ -1,0 +1,128 @@
+//! Genome → supernet runtime inputs.
+//!
+//! This is the bridge that makes the whole AOT design work: a candidate
+//! architecture is *compiled* into the mask/gate/hyperparameter tensors the
+//! fixed train/eval HLO graphs consume (see `python/compile/model.py`).
+
+use super::abi::{NUM_LAYERS, PAD};
+use super::genome::Genome;
+use super::space::SearchSpace;
+
+/// Dense (row-major) runtime inputs selecting one candidate inside the
+/// padded supernet.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SupernetInputs {
+    /// `(NUM_LAYERS, PAD)` unit mask — 1 for active hidden units.
+    pub unit: Vec<f32>,
+    /// `(NUM_LAYERS,)` layer gates — 1 for active layers.
+    pub gates: Vec<f32>,
+    /// `(3,)` activation one-hot (ReLU/tanh/sigmoid).
+    pub act_sel: Vec<f32>,
+    /// BatchNorm gate (1.0 = on).
+    pub bn_gate: f32,
+    /// Dropout rate.
+    pub dropout: f32,
+    /// Learning rate.
+    pub lr: f32,
+    /// L1 strength.
+    pub l1: f32,
+}
+
+impl SupernetInputs {
+    /// Compile a genome against the search space.
+    pub fn compile(genome: &Genome, space: &SearchSpace) -> Self {
+        let widths = genome.widths(space);
+        let mut unit = vec![0.0f32; NUM_LAYERS * PAD];
+        let mut gates = vec![0.0f32; NUM_LAYERS];
+        for (i, &w) in widths.iter().enumerate() {
+            debug_assert!(w <= PAD);
+            for u in 0..w {
+                unit[i * PAD + u] = 1.0;
+            }
+            gates[i] = 1.0;
+        }
+        let mut act_sel = vec![0.0f32; 3];
+        act_sel[genome.act.index()] = 1.0;
+        SupernetInputs {
+            unit,
+            gates,
+            act_sel,
+            bn_gate: if genome.batch_norm { 1.0 } else { 0.0 },
+            dropout: genome.dropout(space),
+            lr: genome.lr(space),
+            l1: genome.l1(space),
+        }
+    }
+
+    /// Active width of layer `i` (number of set units).
+    pub fn active_width(&self, i: usize) -> usize {
+        self.unit[i * PAD..(i + 1) * PAD]
+            .iter()
+            .filter(|&&u| u != 0.0)
+            .count()
+    }
+
+    /// Number of active layers.
+    pub fn depth(&self) -> usize {
+        self.gates.iter().filter(|&&g| g != 0.0).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::genome::Activation;
+
+    fn genome(n_layers: usize) -> Genome {
+        Genome {
+            n_layers,
+            width_idx: [1, 2, 0, 1, 0, 1, 0, 2],
+            act: Activation::Tanh,
+            batch_norm: false,
+            lr_idx: 1,
+            l1_idx: 2,
+            dropout_idx: 1,
+        }
+    }
+
+    #[test]
+    fn masks_match_widths() {
+        let space = SearchSpace::table1();
+        let g = genome(6);
+        let inputs = SupernetInputs::compile(&g, &space);
+        let widths = g.widths(&space);
+        for (i, &w) in widths.iter().enumerate() {
+            assert_eq!(inputs.active_width(i), w, "layer {i}");
+            // contiguity: prefix of ones then zeros
+            let row = &inputs.unit[i * PAD..(i + 1) * PAD];
+            assert!(row[..w].iter().all(|&u| u == 1.0));
+            assert!(row[w..].iter().all(|&u| u == 0.0));
+        }
+        // inactive layers fully zero
+        for i in 6..NUM_LAYERS {
+            assert_eq!(inputs.active_width(i), 0);
+            assert_eq!(inputs.gates[i], 0.0);
+        }
+        assert_eq!(inputs.depth(), 6);
+    }
+
+    #[test]
+    fn hyperparameters_resolve() {
+        let space = SearchSpace::table1();
+        let inputs = SupernetInputs::compile(&genome(4), &space);
+        assert_eq!(inputs.lr, 0.0015);
+        assert_eq!(inputs.l1, 1e-5);
+        assert_eq!(inputs.dropout, 0.05);
+        assert_eq!(inputs.bn_gate, 0.0);
+        assert_eq!(inputs.act_sel, vec![0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn depth_bounds() {
+        let space = SearchSpace::table1();
+        for d in 4..=8 {
+            let inputs = SupernetInputs::compile(&genome(d), &space);
+            assert_eq!(inputs.depth(), d);
+        }
+    }
+}

@@ -1,0 +1,19 @@
+//! Neural-architecture domain types: the Table 1 search space, genomes,
+//! the genome→supernet mask compiler, parameter stores, pruning masks, and
+//! the BOPs proxy metric.
+
+pub mod abi;
+pub mod bops;
+pub mod genome;
+pub mod masks;
+pub mod params;
+pub mod prune;
+pub mod quant;
+pub mod space;
+
+pub use abi::*;
+pub use genome::{Activation, Genome};
+pub use masks::SupernetInputs;
+pub use params::SupernetParams;
+pub use prune::PruneMasks;
+pub use space::SearchSpace;

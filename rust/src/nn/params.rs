@@ -1,0 +1,125 @@
+//! Flat parameter/optimiser-state stores for the supernet.
+//!
+//! Everything lives in plain `Vec<f32>` in the exact row-major layouts the
+//! AOT graphs expect, so literal packing in `runtime::executor` is a
+//! straight memcpy — no reshaping on the hot path.
+
+use super::abi::{IN_DIM, NUM_LAYERS, OUT_DIM, PAD};
+use crate::util::Rng;
+
+/// Sizes of the 7 supernet parameter tensors, ABI order.
+pub const PARAM_SHAPES: [(&str, usize); 7] = [
+    ("w0", IN_DIM * PAD),
+    ("wh", (NUM_LAYERS - 1) * PAD * PAD),
+    ("b", NUM_LAYERS * PAD),
+    ("gamma", NUM_LAYERS * PAD),
+    ("beta", NUM_LAYERS * PAD),
+    ("wo", PAD * OUT_DIM),
+    ("bo", OUT_DIM),
+];
+
+/// The supernet parameter set (or an Adam moment set — same layout).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SupernetParams {
+    /// `(IN_DIM, PAD)` input-layer weights.
+    pub w0: Vec<f32>,
+    /// `(NUM_LAYERS-1, PAD, PAD)` hidden-layer weights.
+    pub wh: Vec<f32>,
+    /// `(NUM_LAYERS, PAD)` biases.
+    pub b: Vec<f32>,
+    /// `(NUM_LAYERS, PAD)` BatchNorm gamma.
+    pub gamma: Vec<f32>,
+    /// `(NUM_LAYERS, PAD)` BatchNorm beta.
+    pub beta: Vec<f32>,
+    /// `(PAD, OUT_DIM)` classifier weights.
+    pub wo: Vec<f32>,
+    /// `(OUT_DIM,)` classifier bias.
+    pub bo: Vec<f32>,
+}
+
+impl SupernetParams {
+    /// All-zero state (Adam moments).
+    pub fn zeros() -> Self {
+        SupernetParams {
+            w0: vec![0.0; IN_DIM * PAD],
+            wh: vec![0.0; (NUM_LAYERS - 1) * PAD * PAD],
+            b: vec![0.0; NUM_LAYERS * PAD],
+            gamma: vec![0.0; NUM_LAYERS * PAD],
+            beta: vec![0.0; NUM_LAYERS * PAD],
+            wo: vec![0.0; PAD * OUT_DIM],
+            bo: vec![0.0; OUT_DIM],
+        }
+    }
+
+    /// He-initialised weights, identity BatchNorm, zero biases.
+    pub fn init(rng: &mut Rng) -> Self {
+        let mut p = Self::zeros();
+        rng.fill_normal(&mut p.w0, (2.0 / IN_DIM as f32).sqrt());
+        rng.fill_normal(&mut p.wh, (2.0 / PAD as f32).sqrt());
+        rng.fill_normal(&mut p.wo, (2.0 / PAD as f32).sqrt());
+        p.gamma.fill(1.0);
+        p
+    }
+
+    /// The 7 tensors as slices, ABI order.
+    pub fn fields(&self) -> [&[f32]; 7] {
+        [
+            &self.w0, &self.wh, &self.b, &self.gamma, &self.beta, &self.wo, &self.bo,
+        ]
+    }
+
+    /// The 7 tensors as mutable slices, ABI order.
+    pub fn fields_mut(&mut self) -> [&mut Vec<f32>; 7] {
+        [
+            &mut self.w0,
+            &mut self.wh,
+            &mut self.b,
+            &mut self.gamma,
+            &mut self.beta,
+            &mut self.wo,
+            &mut self.bo,
+        ]
+    }
+
+    /// Total number of scalars.
+    pub fn len(&self) -> usize {
+        self.fields().iter().map(|f| f.len()).sum()
+    }
+
+    /// True when empty (never, but clippy insists on pairing with `len`).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_match_abi() {
+        let p = SupernetParams::zeros();
+        for ((name, size), field) in PARAM_SHAPES.iter().zip(p.fields()) {
+            assert_eq!(field.len(), *size, "{name}");
+        }
+    }
+
+    #[test]
+    fn init_statistics() {
+        let mut rng = Rng::new(0);
+        let p = SupernetParams::init(&mut rng);
+        let mean: f32 = p.wh.iter().sum::<f32>() / p.wh.len() as f32;
+        let var: f32 = p.wh.iter().map(|x| x * x).sum::<f32>() / p.wh.len() as f32;
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        assert!((var - 2.0 / PAD as f32).abs() < 0.002, "var {var}");
+        assert!(p.gamma.iter().all(|&g| g == 1.0));
+        assert!(p.b.iter().all(|&b| b == 0.0));
+    }
+
+    #[test]
+    fn init_is_deterministic() {
+        let a = SupernetParams::init(&mut Rng::new(5));
+        let b = SupernetParams::init(&mut Rng::new(5));
+        assert_eq!(a, b);
+    }
+}

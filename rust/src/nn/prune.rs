@@ -1,0 +1,236 @@
+//! Pruning masks for iterative magnitude pruning (IMP, local search).
+//!
+//! Masks share the weight tensors' layouts (`p0`/`ph`/`po` ↔ `w0`/`wh`/`wo`)
+//! and are multiplied into the weights inside the AOT graph. The magnitude
+//! threshold is computed *globally* over the architecture's active
+//! coordinates, matching the paper's "20 % pruned per iteration" of the
+//! surviving weights (Frankle & Carbin style).
+
+use super::abi::{IN_DIM, NUM_LAYERS, OUT_DIM, PAD};
+use super::masks::SupernetInputs;
+use super::params::SupernetParams;
+
+/// {0,1} masks over the three weight tensors.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PruneMasks {
+    /// `(IN_DIM, PAD)`.
+    pub p0: Vec<f32>,
+    /// `(NUM_LAYERS-1, PAD, PAD)`.
+    pub ph: Vec<f32>,
+    /// `(PAD, OUT_DIM)`.
+    pub po: Vec<f32>,
+}
+
+impl PruneMasks {
+    /// No pruning.
+    pub fn ones() -> Self {
+        PruneMasks {
+            p0: vec![1.0; IN_DIM * PAD],
+            ph: vec![1.0; (NUM_LAYERS - 1) * PAD * PAD],
+            po: vec![1.0; PAD * OUT_DIM],
+        }
+    }
+
+    /// Iterate over (mask, weight) pairs restricted to coordinates that are
+    /// *active* for the given architecture (unit-masked columns of active
+    /// layers). Only those coordinates count toward sparsity and threshold
+    /// selection — the padded supernet's dead weights are irrelevant.
+    fn active_coords<'a>(
+        &'a self,
+        inputs: &'a SupernetInputs,
+    ) -> impl Iterator<Item = usize> + 'a {
+        // encode (tensor, offset) as a single global index:
+        //   [0, len(p0)) → p0, [len(p0), +len(ph)) → ph, then po
+        let p0_len = self.p0.len();
+        let ph_len = self.ph.len();
+        let depth = inputs.depth();
+        let l0 = (0..IN_DIM * PAD).filter(move |i| {
+            let col = i % PAD;
+            inputs.unit[col] != 0.0 // layer 0 unit mask
+        });
+        let lh = (0..ph_len).filter(move |i| {
+            let layer = i / (PAD * PAD) + 1; // ph[k] serves layer k+1
+            let col = i % PAD;
+            let row = (i / PAD) % PAD;
+            layer < depth
+                && inputs.unit[layer * PAD + col] != 0.0
+                // rows beyond the previous layer's width never carry signal
+                && inputs.unit[(layer - 1) * PAD + row] != 0.0
+        });
+        let last = depth - 1;
+        let lo = (0..PAD * OUT_DIM)
+            .filter(move |i| inputs.unit[last * PAD + i / OUT_DIM] != 0.0);
+        l0.chain(lh.map(move |i| p0_len + i))
+            .chain(lo.map(move |i| p0_len + ph_len + i))
+    }
+
+    fn get(&self, gi: usize) -> f32 {
+        if gi < self.p0.len() {
+            self.p0[gi]
+        } else if gi < self.p0.len() + self.ph.len() {
+            self.ph[gi - self.p0.len()]
+        } else {
+            self.po[gi - self.p0.len() - self.ph.len()]
+        }
+    }
+
+    fn set_zero(&mut self, gi: usize) {
+        if gi < self.p0.len() {
+            self.p0[gi] = 0.0;
+        } else if gi < self.p0.len() + self.ph.len() {
+            let k = gi - self.p0.len();
+            self.ph[k] = 0.0;
+        } else {
+            let k = gi - self.p0.len() - self.ph.len();
+            self.po[k] = 0.0;
+        }
+    }
+
+    fn weight_at(params: &SupernetParams, gi: usize, p0_len: usize, ph_len: usize) -> f32 {
+        if gi < p0_len {
+            params.w0[gi]
+        } else if gi < p0_len + ph_len {
+            params.wh[gi - p0_len]
+        } else {
+            params.wo[gi - p0_len - ph_len]
+        }
+    }
+
+    /// Prune `fraction` of the currently-surviving active weights by global
+    /// magnitude. Returns the number of weights newly pruned.
+    pub fn prune_step(
+        &mut self,
+        params: &SupernetParams,
+        inputs: &SupernetInputs,
+        fraction: f64,
+    ) -> usize {
+        let p0_len = self.p0.len();
+        let ph_len = self.ph.len();
+        let mut survivors: Vec<(f32, usize)> = self
+            .active_coords(inputs)
+            .filter(|&gi| self.get(gi) != 0.0)
+            .map(|gi| (Self::weight_at(params, gi, p0_len, ph_len).abs(), gi))
+            .collect();
+        let k = (survivors.len() as f64 * fraction).floor() as usize;
+        if k == 0 {
+            return 0;
+        }
+        // partial selection: k smallest magnitudes
+        survivors.select_nth_unstable_by(k - 1, |a, b| a.0.total_cmp(&b.0));
+        for &(_, gi) in &survivors[..k] {
+            self.set_zero(gi);
+        }
+        k
+    }
+
+    /// Sparsity over the architecture's active coordinates.
+    pub fn sparsity(&self, inputs: &SupernetInputs) -> f64 {
+        let (mut total, mut zeros) = (0usize, 0usize);
+        for gi in self.active_coords(inputs) {
+            total += 1;
+            if self.get(gi) == 0.0 {
+                zeros += 1;
+            }
+        }
+        if total == 0 {
+            0.0
+        } else {
+            zeros as f64 / total as f64
+        }
+    }
+
+    /// Count of surviving (active, unpruned) weights.
+    pub fn active_nonzeros(&self, inputs: &SupernetInputs) -> usize {
+        self.active_coords(inputs)
+            .filter(|&gi| self.get(gi) != 0.0)
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::genome::{Activation, Genome};
+    use crate::nn::space::SearchSpace;
+    use crate::util::Rng;
+
+    fn setup() -> (SupernetInputs, SupernetParams) {
+        let space = SearchSpace::table1();
+        let g = Genome {
+            n_layers: 5,
+            width_idx: [0; NUM_LAYERS],
+            act: Activation::ReLU,
+            batch_norm: false,
+            lr_idx: 0,
+            l1_idx: 0,
+            dropout_idx: 0,
+        };
+        let inputs = SupernetInputs::compile(&g, &space);
+        let params = SupernetParams::init(&mut Rng::new(0));
+        (inputs, params)
+    }
+
+    #[test]
+    fn active_count_matches_architecture() {
+        let (inputs, _) = setup();
+        let masks = PruneMasks::ones();
+        // widths 64,32,16,32,32; dims (24,64)(64,32)(32,16)(16,32)(32,32)(32,5)
+        let expected = 24 * 64 + 64 * 32 + 32 * 16 + 16 * 32 + 32 * 32 + 32 * 5;
+        assert_eq!(masks.active_nonzeros(&inputs), expected);
+    }
+
+    #[test]
+    fn prune_fraction_is_respected() {
+        let (inputs, params) = setup();
+        let mut masks = PruneMasks::ones();
+        let before = masks.active_nonzeros(&inputs);
+        let pruned = masks.prune_step(&params, &inputs, 0.2);
+        assert_eq!(pruned, (before as f64 * 0.2).floor() as usize);
+        assert_eq!(masks.active_nonzeros(&inputs), before - pruned);
+        assert!((masks.sparsity(&inputs) - 0.2).abs() < 0.01);
+    }
+
+    #[test]
+    fn iterative_pruning_compounds() {
+        let (inputs, params) = setup();
+        let mut masks = PruneMasks::ones();
+        for _ in 0..10 {
+            masks.prune_step(&params, &inputs, 0.2);
+        }
+        let s = masks.sparsity(&inputs);
+        // 1 - 0.8^10 ≈ 0.8926
+        assert!((s - 0.8926).abs() < 0.01, "sparsity {s}");
+    }
+
+    #[test]
+    fn pruning_removes_smallest_magnitudes() {
+        let (inputs, params) = setup();
+        let mut masks = PruneMasks::ones();
+        masks.prune_step(&params, &inputs, 0.3);
+        // the largest surviving |w| among pruned coords must be <= the
+        // smallest |w| among survivors (global threshold property)
+        let p0_len = masks.p0.len();
+        let ph_len = masks.ph.len();
+        let mut max_pruned = 0.0f32;
+        let mut min_kept = f32::INFINITY;
+        for gi in masks.active_coords(&inputs).collect::<Vec<_>>() {
+            let w = PruneMasks::weight_at(&params, gi, p0_len, ph_len).abs();
+            if masks.get(gi) == 0.0 {
+                max_pruned = max_pruned.max(w);
+            } else {
+                min_kept = min_kept.min(w);
+            }
+        }
+        assert!(max_pruned <= min_kept + 1e-6, "{max_pruned} vs {min_kept}");
+    }
+
+    #[test]
+    fn inactive_coords_never_pruned() {
+        let (inputs, params) = setup();
+        let mut masks = PruneMasks::ones();
+        masks.prune_step(&params, &inputs, 0.5);
+        // layer 6+ (inactive) must remain all-ones
+        let start = 5 * PAD * PAD; // ph index of layer 6 == ph[5]... (layer idx 6 => ph[5])
+        assert!(masks.ph[start..].iter().all(|&m| m == 1.0));
+    }
+}

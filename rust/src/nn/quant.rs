@@ -1,0 +1,57 @@
+//! Host-side mirror of the graph's symmetric fake quantiser.
+//!
+//! Used after local search to count which weights the HLS backend will
+//! elide (quantised-to-zero) — matching `fake_quant` in
+//! `python/compile/kernels/fused_dense.py` exactly.
+
+/// Quantise a copy of `w` to `bits` (symmetric, per-tensor max-abs scale).
+pub fn fake_quant(w: &[f32], bits: u32) -> Vec<f32> {
+    let levels = ((1u64 << (bits - 1)) - 1) as f32;
+    let max_abs = w.iter().fold(0.0f32, |m, &v| m.max(v.abs())).max(1e-8);
+    let delta = max_abs / levels;
+    w.iter()
+        .map(|&v| (v / delta).round().clamp(-levels - 1.0, levels) * delta)
+        .collect()
+}
+
+/// Count entries whose quantised value is exactly zero.
+pub fn quantised_zeros(w: &[f32], bits: u32) -> usize {
+    let levels = ((1u64 << (bits - 1)) - 1) as f32;
+    let max_abs = w.iter().fold(0.0f32, |m, &v| m.max(v.abs())).max(1e-8);
+    let delta = max_abs / levels;
+    w.iter().filter(|&&v| (v / delta).round() == 0.0).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_size_respected() {
+        let w: Vec<f32> = (0..1000).map(|i| (i as f32 - 500.0) / 100.0).collect();
+        let q = fake_quant(&w, 4);
+        let mut uniq: Vec<i64> = q.iter().map(|&v| (v * 1e6) as i64).collect();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert!(uniq.len() <= 16, "4-bit grid has ≤16 levels, got {}", uniq.len());
+    }
+
+    #[test]
+    fn zeros_counted() {
+        let w = [1.0f32, 0.0, 0.001, -0.001, -1.0];
+        // at 8 bits, delta = 1/127; |0.001| rounds to 0
+        assert_eq!(quantised_zeros(&w, 8), 3);
+    }
+
+    #[test]
+    fn matches_python_reference_values() {
+        // cross-checked against compile.kernels.ref.fake_quant_ref:
+        // delta = 1/127; 0.5→64/127, -0.25→-32/127, 1.0→127/127
+        let w = [0.5f32, -0.25, 0.1, 1.0];
+        let q = fake_quant(&w, 8);
+        assert!((q[0] - 64.0 / 127.0).abs() < 1e-6, "{}", q[0]);
+        assert!((q[1] + 32.0 / 127.0).abs() < 1e-6, "{}", q[1]);
+        assert!((q[2] - 13.0 / 127.0).abs() < 1e-6, "{}", q[2]);
+        assert_eq!(q[3], 1.0);
+    }
+}

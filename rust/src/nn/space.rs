@@ -1,0 +1,226 @@
+//! The Table 1 search space and genome sampling / variation operators.
+
+
+use super::abi::NUM_LAYERS;
+use super::genome::{Activation, Genome};
+use crate::util::Rng;
+
+/// The comprehensive MLP parameter space of the paper's Table 1.
+#[derive(Debug, Clone)]
+pub struct SearchSpace {
+    /// Depth choices ({4..8} in the paper).
+    pub depth_choices: Vec<usize>,
+    /// Hidden-unit choices per layer position.
+    pub width_choices: [Vec<usize>; NUM_LAYERS],
+    /// Learning-rate choices.
+    pub lr_choices: Vec<f32>,
+    /// L1 regularisation choices.
+    pub l1_choices: Vec<f32>,
+    /// Dropout-rate choices.
+    pub dropout_choices: Vec<f32>,
+}
+
+impl SearchSpace {
+    /// The exact space of the paper's Table 1.
+    pub fn table1() -> Self {
+        SearchSpace {
+            depth_choices: vec![4, 5, 6, 7, 8],
+            width_choices: [
+                vec![64, 120, 128], // layer 1
+                vec![32, 60, 64],   // layer 2
+                vec![16, 32],       // layer 3
+                vec![32, 64],       // layer 4
+                vec![32, 64],       // layer 5
+                vec![32, 64],       // layer 6
+                vec![16, 32],       // layer 7
+                vec![32, 44, 64],   // layer 8
+            ],
+            lr_choices: vec![0.0010, 0.0015, 0.0020],
+            l1_choices: vec![0.0, 1e-6, 1e-5, 1e-4],
+            dropout_choices: vec![0.0, 0.05, 0.1],
+        }
+    }
+
+    /// Number of distinct architectures (ignoring training hyperparameters).
+    pub fn architecture_count(&self) -> u64 {
+        let mut total = 0u64;
+        for &d in &self.depth_choices {
+            let mut combos = 1u64;
+            for i in 0..d {
+                combos *= self.width_choices[i].len() as u64;
+            }
+            combos *= Activation::ALL.len() as u64 * 2; // act × bn
+            total += combos;
+        }
+        total
+    }
+
+    /// Uniform random genome.
+    pub fn sample(&self, rng: &mut Rng) -> Genome {
+        let mut width_idx = [0usize; NUM_LAYERS];
+        for (i, w) in width_idx.iter_mut().enumerate() {
+            *w = rng.below(self.width_choices[i].len());
+        }
+        Genome {
+            n_layers: *rng.choose(&self.depth_choices),
+            width_idx,
+            act: *rng.choose(&Activation::ALL),
+            batch_norm: rng.chance(0.5),
+            lr_idx: rng.below(self.lr_choices.len()),
+            l1_idx: rng.below(self.l1_choices.len()),
+            dropout_idx: rng.below(self.dropout_choices.len()),
+        }
+    }
+
+    /// Uniform (gene-wise) crossover of two parents.
+    pub fn crossover(&self, a: &Genome, b: &Genome, rng: &mut Rng) -> Genome {
+        let mut child = a.clone();
+        if rng.chance(0.5) {
+            child.n_layers = b.n_layers;
+        }
+        for i in 0..NUM_LAYERS {
+            if rng.chance(0.5) {
+                child.width_idx[i] = b.width_idx[i];
+            }
+        }
+        if rng.chance(0.5) {
+            child.act = b.act;
+        }
+        if rng.chance(0.5) {
+            child.batch_norm = b.batch_norm;
+        }
+        if rng.chance(0.5) {
+            child.lr_idx = b.lr_idx;
+        }
+        if rng.chance(0.5) {
+            child.l1_idx = b.l1_idx;
+        }
+        if rng.chance(0.5) {
+            child.dropout_idx = b.dropout_idx;
+        }
+        child
+    }
+
+    /// Per-gene reset mutation with probability `p_gene`.
+    pub fn mutate(&self, g: &mut Genome, p_gene: f64, rng: &mut Rng) {
+        if rng.chance(p_gene) {
+            g.n_layers = *rng.choose(&self.depth_choices);
+        }
+        for i in 0..NUM_LAYERS {
+            if rng.chance(p_gene) {
+                g.width_idx[i] = rng.below(self.width_choices[i].len());
+            }
+        }
+        if rng.chance(p_gene) {
+            g.act = *rng.choose(&Activation::ALL);
+        }
+        if rng.chance(p_gene) {
+            g.batch_norm = !g.batch_norm;
+        }
+        if rng.chance(p_gene) {
+            g.lr_idx = rng.below(self.lr_choices.len());
+        }
+        if rng.chance(p_gene) {
+            g.l1_idx = rng.below(self.l1_choices.len());
+        }
+        if rng.chance(p_gene) {
+            g.dropout_idx = rng.below(self.dropout_choices.len());
+        }
+    }
+
+    /// Validate that a genome's indices are all within this space.
+    pub fn contains(&self, g: &Genome) -> bool {
+        self.depth_choices.contains(&g.n_layers)
+            && g.width_idx
+                .iter()
+                .enumerate()
+                .all(|(i, &w)| w < self.width_choices[i].len())
+            && g.lr_idx < self.lr_choices.len()
+            && g.l1_idx < self.l1_choices.len()
+            && g.dropout_idx < self.dropout_choices.len()
+    }
+
+    /// The paper's comparative baseline [12]: a fixed 24→64→32→32→5 ReLU MLP
+    /// with BatchNorm (Odagiu et al.'s 8-constituent MLP), expressed in this
+    /// space's encoding. Trained by the same trainer for Table 2/3.
+    pub fn baseline(&self) -> Genome {
+        Genome {
+            n_layers: 4,
+            // widths 64, 32, 32(closest: idx over [16,32] → 32), 32
+            width_idx: [0, 0, 1, 0, 0, 0, 0, 0],
+            act: Activation::ReLU,
+            batch_norm: true,
+            lr_idx: 0,
+            l1_idx: 0,
+            dropout_idx: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_cardinalities() {
+        let s = SearchSpace::table1();
+        assert_eq!(s.depth_choices, vec![4, 5, 6, 7, 8]);
+        assert_eq!(s.width_choices[0], vec![64, 120, 128]);
+        assert_eq!(s.width_choices[7], vec![32, 44, 64]);
+        assert_eq!(s.lr_choices.len(), 3);
+        assert_eq!(s.l1_choices.len(), 4);
+        assert_eq!(s.dropout_choices.len(), 3);
+    }
+
+    #[test]
+    fn sampled_genomes_are_contained() {
+        let s = SearchSpace::table1();
+        let mut rng = Rng::new(1);
+        for _ in 0..500 {
+            let g = s.sample(&mut rng);
+            assert!(s.contains(&g));
+        }
+    }
+
+    #[test]
+    fn crossover_and_mutation_stay_in_space() {
+        let s = SearchSpace::table1();
+        let mut rng = Rng::new(2);
+        for _ in 0..200 {
+            let a = s.sample(&mut rng);
+            let b = s.sample(&mut rng);
+            let mut c = s.crossover(&a, &b, &mut rng);
+            s.mutate(&mut c, 0.3, &mut rng);
+            assert!(s.contains(&c));
+        }
+    }
+
+    #[test]
+    fn sampling_covers_depths() {
+        let s = SearchSpace::table1();
+        let mut rng = Rng::new(3);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..300 {
+            seen.insert(s.sample(&mut rng).n_layers);
+        }
+        assert_eq!(seen.len(), 5, "all depths sampled");
+    }
+
+    #[test]
+    fn baseline_matches_odagiu_dims() {
+        let s = SearchSpace::table1();
+        let b = s.baseline();
+        assert_eq!(
+            b.layer_dims(&s),
+            vec![(24, 64), (64, 32), (32, 32), (32, 32), (32, 5)]
+        );
+    }
+
+    #[test]
+    fn architecture_count_is_exact() {
+        let s = SearchSpace::table1();
+        // Σ_depth Π_{i<depth} |widths_i| × 3 activations × 2 BN
+        // = (36 + 72 + 144 + 288 + 864) × 6 = 8424
+        assert_eq!(s.architecture_count(), 8424);
+    }
+}

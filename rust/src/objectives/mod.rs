@@ -1,0 +1,175 @@
+//! Search objectives — the paper's central axis of comparison.
+//!
+//! * **NAC** optimises `{accuracy, BOPs}` (the proxy the paper argues
+//!   against);
+//! * **SNAC-Pack** optimises `{accuracy, estimated average resources,
+//!   estimated clock cycles}` via the rule4ml-style surrogate.
+//!
+//! All objectives are converted to *minimisation* (accuracy is negated)
+//! before entering NSGA-II / Pareto machinery.
+
+use anyhow::Result;
+
+use crate::hls::FpgaDevice;
+use crate::nn::{bops, Genome, SearchSpace};
+use crate::surrogate::SurrogatePredictor;
+
+/// One optimisation objective.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ObjectiveKind {
+    /// Validation accuracy (entered negated).
+    Accuracy,
+    /// Bit operations at the assumed deployment precision.
+    Bops,
+    /// Surrogate-estimated mean utilisation % over DSP/LUT/FF/BRAM.
+    EstAvgResources,
+    /// Surrogate-estimated latency in clock cycles.
+    EstClockCycles,
+}
+
+impl ObjectiveKind {
+    /// Display name (report headers).
+    pub fn name(self) -> &'static str {
+        match self {
+            ObjectiveKind::Accuracy => "accuracy",
+            ObjectiveKind::Bops => "bops",
+            ObjectiveKind::EstAvgResources => "est_avg_resources",
+            ObjectiveKind::EstClockCycles => "est_clock_cycles",
+        }
+    }
+
+    /// The paper's NAC objective set.
+    pub fn nac_set() -> Vec<ObjectiveKind> {
+        vec![ObjectiveKind::Accuracy, ObjectiveKind::Bops]
+    }
+
+    /// The paper's SNAC-Pack objective set.
+    pub fn snac_set() -> Vec<ObjectiveKind> {
+        vec![
+            ObjectiveKind::Accuracy,
+            ObjectiveKind::EstAvgResources,
+            ObjectiveKind::EstClockCycles,
+        ]
+    }
+
+    /// Parse a comma-separated list (CLI).
+    pub fn parse_set(s: &str) -> Result<Vec<ObjectiveKind>> {
+        s.split(',')
+            .map(|tok| match tok.trim() {
+                "accuracy" | "acc" => Ok(ObjectiveKind::Accuracy),
+                "bops" => Ok(ObjectiveKind::Bops),
+                "est_avg_resources" | "resources" => Ok(ObjectiveKind::EstAvgResources),
+                "est_clock_cycles" | "cycles" => Ok(ObjectiveKind::EstClockCycles),
+                other => anyhow::bail!("unknown objective `{other}`"),
+            })
+            .collect()
+    }
+}
+
+/// Static context shared by objective evaluations.
+pub struct ObjectiveContext<'a> {
+    /// Search space (for layer dims).
+    pub space: &'a SearchSpace,
+    /// Target device (utilisation percentages).
+    pub device: &'a FpgaDevice,
+    /// The trained surrogate; required for the Est* objectives.
+    pub surrogate: Option<&'a SurrogatePredictor<'a>>,
+    /// Deployment precision assumed during global search (paper: 8-bit QAT
+    /// downstream).
+    pub bits: u32,
+    /// Deployment sparsity assumed during global search (paper's local
+    /// search prunes to ~50 %).
+    pub sparsity: f64,
+}
+
+impl<'a> ObjectiveContext<'a> {
+    /// Evaluate `kinds` for a genome with measured validation `accuracy`.
+    /// Returns the minimised objective vector, plus the raw
+    /// `(est_avg_resources, est_clock_cycles)` pair when a surrogate ran.
+    pub fn evaluate(
+        &self,
+        kinds: &[ObjectiveKind],
+        genome: &Genome,
+        accuracy: f64,
+    ) -> Result<(Vec<f64>, Option<(f64, f64)>)> {
+        let mut est_pair = None;
+        let mut out = Vec::with_capacity(kinds.len());
+        for kind in kinds {
+            out.push(match kind {
+                ObjectiveKind::Accuracy => -accuracy,
+                ObjectiveKind::Bops => {
+                    bops::genome_bops(genome, self.space, self.bits, self.bits, self.sparsity)
+                }
+                ObjectiveKind::EstAvgResources | ObjectiveKind::EstClockCycles => {
+                    let sur = self.surrogate.ok_or_else(|| {
+                        anyhow::anyhow!("objective {} needs a trained surrogate", kind.name())
+                    })?;
+                    let est = sur.predict(genome, self.space, self.bits, self.sparsity)?;
+                    let pair = (est.avg_resources(self.device), est.latency_cc);
+                    est_pair = Some(pair);
+                    match kind {
+                        ObjectiveKind::EstAvgResources => pair.0,
+                        _ => pair.1,
+                    }
+                }
+            });
+        }
+        Ok((out, est_pair))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn objective_sets_match_paper() {
+        assert_eq!(ObjectiveKind::nac_set().len(), 2);
+        assert_eq!(ObjectiveKind::snac_set().len(), 3);
+        assert_eq!(ObjectiveKind::snac_set()[0], ObjectiveKind::Accuracy);
+    }
+
+    #[test]
+    fn parse_round_trips() {
+        let set = ObjectiveKind::parse_set("accuracy, bops").unwrap();
+        assert_eq!(set, ObjectiveKind::nac_set());
+        let set = ObjectiveKind::parse_set("acc,resources,cycles").unwrap();
+        assert_eq!(set, ObjectiveKind::snac_set());
+        assert!(ObjectiveKind::parse_set("nope").is_err());
+    }
+
+    #[test]
+    fn accuracy_is_negated_and_bops_positive() {
+        let space = SearchSpace::table1();
+        let device = FpgaDevice::vu13p();
+        let ctx = ObjectiveContext {
+            space: &space,
+            device: &device,
+            surrogate: None,
+            bits: 8,
+            sparsity: 0.0,
+        };
+        let (obj, est) = ctx
+            .evaluate(&ObjectiveKind::nac_set(), &space.baseline(), 0.64)
+            .unwrap();
+        assert_eq!(obj[0], -0.64);
+        assert!(obj[1] > 0.0);
+        assert!(est.is_none());
+    }
+
+    #[test]
+    fn surrogate_objectives_without_surrogate_error() {
+        let space = SearchSpace::table1();
+        let device = FpgaDevice::vu13p();
+        let ctx = ObjectiveContext {
+            space: &space,
+            device: &device,
+            surrogate: None,
+            bits: 8,
+            sparsity: 0.0,
+        };
+        assert!(ctx
+            .evaluate(&ObjectiveKind::snac_set(), &space.baseline(), 0.6)
+            .is_err());
+    }
+}

@@ -1,0 +1,311 @@
+//! Pareto machinery: dominance, front extraction, crowding distance,
+//! hypervolume, and the accuracy-threshold selection rule of §4.
+//!
+//! Convention: **all objectives are minimised**. Accuracy is negated by
+//! the objective plumbing (`objectives::`) before it gets here.
+
+/// True iff `a` Pareto-dominates `b` (≤ everywhere, < somewhere).
+pub fn dominates(a: &[f64], b: &[f64]) -> bool {
+    debug_assert_eq!(a.len(), b.len());
+    let mut strictly = false;
+    for (x, y) in a.iter().zip(b) {
+        if x > y {
+            return false;
+        }
+        if x < y {
+            strictly = true;
+        }
+    }
+    strictly
+}
+
+/// Fast non-dominated sort (Deb et al., NSGA-II). Returns fronts of indices,
+/// best front first.
+pub fn non_dominated_sort(points: &[Vec<f64>]) -> Vec<Vec<usize>> {
+    let n = points.len();
+    let mut dominated_by: Vec<Vec<usize>> = vec![Vec::new(); n]; // S_p
+    let mut counts = vec![0usize; n]; // n_p
+    let mut fronts: Vec<Vec<usize>> = vec![Vec::new()];
+    for p in 0..n {
+        for q in 0..n {
+            if p == q {
+                continue;
+            }
+            if dominates(&points[p], &points[q]) {
+                dominated_by[p].push(q);
+            } else if dominates(&points[q], &points[p]) {
+                counts[p] += 1;
+            }
+        }
+        if counts[p] == 0 {
+            fronts[0].push(p);
+        }
+    }
+    let mut i = 0;
+    while !fronts[i].is_empty() {
+        let mut next = Vec::new();
+        for &p in &fronts[i] {
+            for &q in &dominated_by[p] {
+                counts[q] -= 1;
+                if counts[q] == 0 {
+                    next.push(q);
+                }
+            }
+        }
+        i += 1;
+        fronts.push(next);
+    }
+    fronts.pop(); // drop trailing empty front
+    fronts
+}
+
+/// Indices of the (first) Pareto front.
+pub fn pareto_front(points: &[Vec<f64>]) -> Vec<usize> {
+    if points.is_empty() {
+        return Vec::new();
+    }
+    non_dominated_sort(points).remove(0)
+}
+
+/// Crowding distance of each member of a front (NSGA-II diversity measure).
+pub fn crowding_distance(front: &[Vec<f64>]) -> Vec<f64> {
+    let n = front.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let m = front[0].len();
+    let mut dist = vec![0.0f64; n];
+    if n <= 2 {
+        return vec![f64::INFINITY; n];
+    }
+    for obj in 0..m {
+        let mut idx: Vec<usize> = (0..n).collect();
+        idx.sort_by(|&a, &b| front[a][obj].total_cmp(&front[b][obj]));
+        let lo = front[idx[0]][obj];
+        let hi = front[idx[n - 1]][obj];
+        dist[idx[0]] = f64::INFINITY;
+        dist[idx[n - 1]] = f64::INFINITY;
+        let range = (hi - lo).max(1e-12);
+        for k in 1..n - 1 {
+            dist[idx[k]] += (front[idx[k + 1]][obj] - front[idx[k - 1]][obj]) / range;
+        }
+    }
+    dist
+}
+
+/// Hypervolume dominated by `points` w.r.t. `reference` (minimisation;
+/// every point must be ≤ reference coordinate-wise to contribute).
+/// Exact sweep for 2-D; WFG-style recursive slicing for higher dims
+/// (fine for the front sizes here, ≤ a few hundred points).
+pub fn hypervolume(points: &[Vec<f64>], reference: &[f64]) -> f64 {
+    let pts: Vec<Vec<f64>> = pareto_front(points)
+        .into_iter()
+        .map(|i| points[i].clone())
+        .filter(|p| p.iter().zip(reference).all(|(x, r)| x < r))
+        .collect();
+    if pts.is_empty() {
+        return 0.0;
+    }
+    hv_recursive(&pts, reference)
+}
+
+fn hv_recursive(pts: &[Vec<f64>], reference: &[f64]) -> f64 {
+    let dim = reference.len();
+    if dim == 1 {
+        let best = pts.iter().map(|p| p[0]).fold(f64::INFINITY, f64::min);
+        return (reference[0] - best).max(0.0);
+    }
+    if dim == 2 {
+        // sweep on x ascending; accumulate rectangles
+        let mut sorted = pts.to_vec();
+        sorted.sort_by(|a, b| a[0].total_cmp(&b[0]));
+        let mut hv = 0.0;
+        let mut prev_y = reference[1];
+        for p in &sorted {
+            if p[1] < prev_y {
+                hv += (reference[0] - p[0]) * (prev_y - p[1]);
+                prev_y = p[1];
+            }
+        }
+        return hv;
+    }
+    // slice on the last objective
+    let mut sorted = pts.to_vec();
+    let last = dim - 1;
+    sorted.sort_by(|a, b| a[last].total_cmp(&b[last]));
+    let mut hv = 0.0;
+    for i in 0..sorted.len() {
+        let depth = if i + 1 < sorted.len() {
+            sorted[i + 1][last] - sorted[i][last]
+        } else {
+            reference[last] - sorted[i][last]
+        };
+        if depth <= 0.0 {
+            continue;
+        }
+        let slab: Vec<Vec<f64>> = sorted[..=i]
+            .iter()
+            .map(|p| p[..last].to_vec())
+            .collect();
+        let front: Vec<Vec<f64>> = pareto_front(&slab)
+            .into_iter()
+            .map(|k| slab[k].clone())
+            .collect();
+        hv += depth * hv_recursive(&front, &reference[..last]);
+    }
+    hv
+}
+
+/// §4 selection rule: among Pareto-front members whose (max-)accuracy
+/// exceeds `threshold`, pick the one with the lowest *normalised* cost —
+/// each non-accuracy objective is divided by its maximum over the eligible
+/// set so that, e.g., latency-in-cycles (tens) cannot drown out mean
+/// utilisation (units). `acc_index` is the slot holding *negated* accuracy.
+pub fn select_above_accuracy(
+    points: &[Vec<f64>],
+    acc_index: usize,
+    threshold: f64,
+) -> Option<usize> {
+    let front = pareto_front(points);
+    let eligible: Vec<usize> = front
+        .into_iter()
+        .filter(|&i| -points[i][acc_index] >= threshold)
+        .collect();
+    if eligible.is_empty() {
+        return None;
+    }
+    let m = points[eligible[0]].len();
+    let mut scale = vec![0.0f64; m];
+    for &i in &eligible {
+        for (k, v) in points[i].iter().enumerate() {
+            scale[k] = scale[k].max(v.abs());
+        }
+    }
+    eligible.into_iter().min_by(|&a, &b| {
+        let cost = |i: usize| -> f64 {
+            points[i]
+                .iter()
+                .enumerate()
+                .filter(|&(k, _)| k != acc_index)
+                .map(|(k, v)| v / scale[k].max(1e-12))
+                .sum()
+        };
+        cost(a).total_cmp(&cost(b))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dominance_basics() {
+        assert!(dominates(&[1.0, 1.0], &[2.0, 2.0]));
+        assert!(dominates(&[1.0, 2.0], &[2.0, 2.0]));
+        assert!(!dominates(&[1.0, 3.0], &[2.0, 2.0]));
+        assert!(!dominates(&[1.0, 1.0], &[1.0, 1.0]), "equal points don't dominate");
+    }
+
+    #[test]
+    fn sort_layers_fronts_correctly() {
+        let pts = vec![
+            vec![1.0, 4.0], // front 0
+            vec![2.0, 2.0], // front 0
+            vec![4.0, 1.0], // front 0
+            vec![3.0, 3.0], // front 1 (dominated by [2,2])
+            vec![5.0, 5.0], // front 2
+        ];
+        let fronts = non_dominated_sort(&pts);
+        assert_eq!(fronts[0], vec![0, 1, 2]);
+        assert_eq!(fronts[1], vec![3]);
+        assert_eq!(fronts[2], vec![4]);
+    }
+
+    #[test]
+    fn front_members_are_mutually_nondominated() {
+        let pts: Vec<Vec<f64>> = (0..50)
+            .map(|i| {
+                let x = i as f64 * 0.17 % 3.0;
+                vec![x, (x * 7.3).sin().abs() * 2.0, ((i * 31) % 11) as f64 * 0.3]
+            })
+            .collect();
+        let front = pareto_front(&pts);
+        for &a in &front {
+            for &b in &front {
+                assert!(!dominates(&pts[a], &pts[b]));
+            }
+        }
+        // everything not on the front is dominated by someone on it
+        for i in 0..pts.len() {
+            if !front.contains(&i) {
+                assert!(front.iter().any(|&f| dominates(&pts[f], &pts[i])));
+            }
+        }
+    }
+
+    #[test]
+    fn crowding_boundary_is_infinite() {
+        let front = vec![vec![0.0, 3.0], vec![1.0, 2.0], vec![2.0, 1.0], vec![3.0, 0.0]];
+        let d = crowding_distance(&front);
+        assert!(d[0].is_infinite());
+        assert!(d[3].is_infinite());
+        assert!(d[1].is_finite() && d[1] > 0.0);
+    }
+
+    #[test]
+    fn crowding_prefers_isolated_points() {
+        // middle point 1 is crowded; point 2 sits in a gap
+        let front = vec![
+            vec![0.0, 10.0],
+            vec![0.5, 9.0],
+            vec![5.0, 5.0],
+            vec![10.0, 0.0],
+        ];
+        let d = crowding_distance(&front);
+        assert!(d[2] > d[1]);
+    }
+
+    #[test]
+    fn hypervolume_2d_exact() {
+        let pts = vec![vec![1.0, 2.0], vec![2.0, 1.0]];
+        // ref (3,3): rect1 (3-1)*(3-2)=2 + rect2 (3-2)*(2-1)=1 → 3
+        assert!((hypervolume(&pts, &[3.0, 3.0]) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hypervolume_3d_box() {
+        let pts = vec![vec![0.0, 0.0, 0.0]];
+        assert!((hypervolume(&pts, &[2.0, 3.0, 4.0]) - 24.0).abs() < 1e-9);
+        // two disjoint-ish boxes
+        let pts = vec![vec![0.0, 1.0, 1.0], vec![1.0, 0.0, 1.0]];
+        let hv = hypervolume(&pts, &[2.0, 2.0, 2.0]);
+        // union = 2*1*1 + 1*2*1 - 1*1*1 = 3
+        assert!((hv - 3.0).abs() < 1e-9, "hv={hv}");
+    }
+
+    #[test]
+    fn hypervolume_monotone_in_points() {
+        let a = vec![vec![2.0, 2.0]];
+        let mut b = a.clone();
+        b.push(vec![1.0, 3.0]);
+        let r = [4.0, 4.0];
+        assert!(hypervolume(&b, &r) >= hypervolume(&a, &r));
+    }
+
+    #[test]
+    fn selection_respects_threshold() {
+        // objectives: [-accuracy, cost]
+        let pts = vec![
+            vec![-0.70, 10.0], // accurate but costly
+            vec![-0.65, 3.0],  // good trade-off
+            vec![-0.60, 1.0],  // cheap but below threshold
+        ];
+        let sel = select_above_accuracy(&pts, 0, 0.638).unwrap();
+        assert_eq!(sel, 1);
+        // raising the bar forces the expensive one
+        let sel = select_above_accuracy(&pts, 0, 0.68).unwrap();
+        assert_eq!(sel, 0);
+        // impossible bar → none
+        assert!(select_above_accuracy(&pts, 0, 0.99).is_none());
+    }
+}

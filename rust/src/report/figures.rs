@@ -1,0 +1,177 @@
+//! Figures 1–4: CSV point clouds + ASCII scatters from a trial database.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use super::scatter::Scatter;
+use super::write_csv;
+use crate::coordinator::TrialRecord;
+use crate::pareto;
+
+/// Figure spec: which record fields go on which axis.
+struct FigSpec {
+    /// Output stem, e.g. `fig1`.
+    stem: &'static str,
+    title: &'static str,
+    x: &'static str,
+    y: &'static str,
+    log_x: bool,
+    get: fn(&TrialRecord) -> Option<(f64, f64)>,
+    /// objectives used for the front overlay (minimised)
+    front_objs: fn(&TrialRecord) -> Option<Vec<f64>>,
+}
+
+const FIGS_SNAC: [FigSpec; 3] = [
+    FigSpec {
+        stem: "fig1",
+        title: "Figure 1 — SNAC-Pack: est. average resources vs est. clock cycles",
+        x: "est_clock_cycles",
+        y: "est_avg_resources",
+        log_x: false,
+        get: |r| Some((r.est_clock_cycles?, r.est_avg_resources?)),
+        front_objs: |r| Some(vec![r.est_clock_cycles?, r.est_avg_resources?]),
+    },
+    FigSpec {
+        stem: "fig2",
+        title: "Figure 2 — SNAC-Pack: est. average resources vs accuracy",
+        x: "est_avg_resources",
+        y: "accuracy",
+        log_x: false,
+        get: |r| Some((r.est_avg_resources?, r.accuracy)),
+        front_objs: |r| Some(vec![r.est_avg_resources?, -r.accuracy]),
+    },
+    FigSpec {
+        stem: "fig3",
+        title: "Figure 3 — SNAC-Pack: est. clock cycles vs accuracy",
+        x: "est_clock_cycles",
+        y: "accuracy",
+        log_x: false,
+        get: |r| Some((r.est_clock_cycles?, r.accuracy)),
+        front_objs: |r| Some(vec![r.est_clock_cycles?, -r.accuracy]),
+    },
+];
+
+const FIG_NAC: FigSpec = FigSpec {
+    stem: "fig4",
+    title: "Figure 4 — NAC: BOPs vs accuracy",
+    x: "bops",
+    y: "accuracy",
+    log_x: true,
+    get: |r| Some((r.bops, r.accuracy)),
+    front_objs: |r| Some(vec![r.bops, -r.accuracy]),
+};
+
+fn emit(spec: &FigSpec, records: &[TrialRecord], dir: &Path) -> Result<String> {
+    // pairwise front over the two plotted quantities (matches the paper's
+    // per-figure fronts, which are 2-D projections)
+    let pts: Vec<(usize, Vec<f64>)> = records
+        .iter()
+        .enumerate()
+        .filter_map(|(i, r)| Some((i, (spec.front_objs)(r)?)))
+        .collect();
+    let objs: Vec<Vec<f64>> = pts.iter().map(|(_, o)| o.clone()).collect();
+    let front_local = pareto::pareto_front(&objs);
+    let front: std::collections::HashSet<usize> =
+        front_local.iter().map(|&k| pts[k].0).collect();
+
+    let mut rows = Vec::new();
+    let mut plot = Scatter::new(spec.title, spec.x, spec.y);
+    if spec.log_x {
+        plot = plot.log_x();
+    }
+    for (i, r) in records.iter().enumerate() {
+        let Some((x, y)) = (spec.get)(r) else { continue };
+        let on_front = front.contains(&i);
+        rows.push(vec![
+            r.id.to_string(),
+            r.label.clone(),
+            format!("{x}"),
+            format!("{y}"),
+            (on_front as u8).to_string(),
+        ]);
+        plot.push(x, y, on_front);
+    }
+    write_csv(
+        &dir.join(format!("{}.csv", spec.stem)),
+        &format!("trial,label,{},{},pareto", spec.x, spec.y),
+        &rows,
+    )?;
+    let text = plot.render(72, 20);
+    std::fs::write(dir.join(format!("{}.txt", spec.stem)), &text)?;
+    Ok(text)
+}
+
+/// Write Figures 1–3 from the SNAC trial DB and Figure 4 from the NAC
+/// trial DB. Returns the concatenated ASCII renderings.
+pub fn write_figures(
+    snac_records: &[TrialRecord],
+    nac_records: &[TrialRecord],
+    dir: &Path,
+) -> Result<String> {
+    std::fs::create_dir_all(dir)?;
+    let mut all = String::new();
+    for spec in &FIGS_SNAC {
+        all.push_str(&emit(spec, snac_records, dir)?);
+        all.push('\n');
+    }
+    all.push_str(&emit(&FIG_NAC, nac_records, dir)?);
+    Ok(all)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::SearchSpace;
+    use crate::util::Rng;
+
+    fn fake_records(n: usize, with_est: bool) -> Vec<TrialRecord> {
+        let space = SearchSpace::table1();
+        let mut rng = Rng::new(0);
+        (0..n)
+            .map(|i| {
+                let genome = space.sample(&mut rng);
+                TrialRecord {
+                    id: i,
+                    generation: 0,
+                    label: genome.label(&space),
+                    genome,
+                    accuracy: 0.5 + 0.1 * rng.uniform(),
+                    bops: 1e4 * (1.0 + rng.uniform()),
+                    est_avg_resources: with_est.then(|| 2.0 + rng.uniform()),
+                    est_clock_cycles: with_est.then(|| 30.0 + 40.0 * rng.uniform()),
+                    objectives: vec![],
+                    train_seconds: 0.0,
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn writes_all_four_figures() {
+        let dir = std::env::temp_dir().join("snac_fig_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let snac = fake_records(40, true);
+        let nac = fake_records(40, false);
+        let text = write_figures(&snac, &nac, &dir).unwrap();
+        for stem in ["fig1", "fig2", "fig3", "fig4"] {
+            assert!(dir.join(format!("{stem}.csv")).exists(), "{stem}.csv");
+            assert!(dir.join(format!("{stem}.txt")).exists(), "{stem}.txt");
+        }
+        assert!(text.contains("Figure 1"));
+        assert!(text.contains("Figure 4"));
+        // fig1 csv has a pareto column with at least one front point
+        let csv = std::fs::read_to_string(dir.join("fig1.csv")).unwrap();
+        assert!(csv.lines().skip(1).any(|l| l.ends_with(",1")));
+    }
+
+    #[test]
+    fn records_without_estimates_skip_snac_figures() {
+        let dir = std::env::temp_dir().join("snac_fig_test2");
+        let _ = std::fs::remove_dir_all(&dir);
+        let nac_only = fake_records(10, false);
+        let text = write_figures(&nac_only, &nac_only, &dir).unwrap();
+        // figs 1-3 have no points but must not crash
+        assert!(text.contains("no points"));
+    }
+}

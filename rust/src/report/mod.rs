@@ -1,0 +1,53 @@
+//! Report layer: regenerates every table and figure of the paper.
+//!
+//! * Figures 1–4 — CSV point clouds (+ Pareto flags) and ASCII scatter
+//!   renderings of the trial database;
+//! * Table 2 — global-search comparison (accuracy / BOPs / est. resources /
+//!   est. clock cycles) for Baseline, NAC, SNAC-Pack;
+//! * Table 3 — post-synthesis resources/latency from the HLS simulator.
+
+pub mod figures;
+pub mod scatter;
+pub mod tables;
+
+pub use figures::write_figures;
+pub use scatter::Scatter;
+pub use tables::{render_table2, render_table3, Table2Row, Table3Row};
+
+use anyhow::Result;
+use std::path::Path;
+
+/// Write rows of comma-separated values with a header line.
+pub fn write_csv(path: &Path, header: &str, rows: &[Vec<String>]) -> Result<()> {
+    let mut out = String::with_capacity(rows.len() * 32 + header.len() + 1);
+    out.push_str(header);
+    out.push('\n');
+    for row in rows {
+        out.push_str(&row.join(","));
+        out.push('\n');
+    }
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, out)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_writes_header_and_rows() {
+        let dir = std::env::temp_dir().join("snac_report_test");
+        let path = dir.join("t.csv");
+        write_csv(
+            &path,
+            "a,b",
+            &[vec!["1".into(), "2".into()], vec!["3".into(), "4".into()]],
+        )
+        .unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,2\n3,4\n");
+    }
+}

@@ -1,0 +1,161 @@
+//! ASCII scatter plots — the terminal rendering of Figures 1–4.
+
+/// A small fixed-grid scatter renderer. Points marked `*`; Pareto-front
+/// members marked `o`; axes are linear or log10.
+
+pub struct Scatter {
+    title: String,
+    x_label: String,
+    y_label: String,
+    log_x: bool,
+    log_y: bool,
+    points: Vec<(f64, f64, bool)>, // (x, y, on_front)
+}
+
+impl Scatter {
+    /// New plot.
+    pub fn new(title: &str, x_label: &str, y_label: &str) -> Self {
+        Scatter {
+            title: title.to_string(),
+            x_label: x_label.to_string(),
+            y_label: y_label.to_string(),
+            log_x: false,
+            log_y: false,
+            points: Vec::new(),
+        }
+    }
+
+    /// Use log10 on the x axis.
+    pub fn log_x(mut self) -> Self {
+        self.log_x = true;
+        self
+    }
+
+    /// Use log10 on the y axis.
+    pub fn log_y(mut self) -> Self {
+        self.log_y = true;
+        self
+    }
+
+    /// Add a point; `front` marks Pareto membership.
+    pub fn push(&mut self, x: f64, y: f64, front: bool) {
+        self.points.push((x, y, front));
+    }
+
+    fn transform(v: f64, log: bool) -> f64 {
+        if log {
+            v.max(1e-12).log10()
+        } else {
+            v
+        }
+    }
+
+    /// Render to text (width×height character grid plus legend).
+    pub fn render(&self, width: usize, height: usize) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("## {}\n", self.title));
+        if self.points.is_empty() {
+            out.push_str("(no points)\n");
+            return out;
+        }
+        let tx: Vec<f64> = self
+            .points
+            .iter()
+            .map(|p| Self::transform(p.0, self.log_x))
+            .collect();
+        let ty: Vec<f64> = self
+            .points
+            .iter()
+            .map(|p| Self::transform(p.1, self.log_y))
+            .collect();
+        let (x0, x1) = min_max(&tx);
+        let (y0, y1) = min_max(&ty);
+        let xr = (x1 - x0).max(1e-12);
+        let yr = (y1 - y0).max(1e-12);
+        let mut grid = vec![vec![' '; width]; height];
+        // draw dominated points first so front markers stay visible
+        let mut order: Vec<usize> = (0..self.points.len()).collect();
+        order.sort_by_key(|&i| self.points[i].2 as u8);
+        for i in order {
+            let col = (((tx[i] - x0) / xr) * (width - 1) as f64).round() as usize;
+            let row = height - 1 - (((ty[i] - y0) / yr) * (height - 1) as f64).round() as usize;
+            grid[row][col] = if self.points[i].2 { 'o' } else { '*' };
+        }
+        let fmt = |v: f64, log: bool| -> String {
+            let raw = if log { 10f64.powf(v) } else { v };
+            if raw.abs() >= 1000.0 {
+                format!("{raw:.0}")
+            } else {
+                format!("{raw:.3}")
+            }
+        };
+        out.push_str(&format!(
+            "y: {} [{} .. {}]{}\n",
+            self.y_label,
+            fmt(y0, self.log_y),
+            fmt(y1, self.log_y),
+            if self.log_y { " (log)" } else { "" }
+        ));
+        for row in grid {
+            out.push('|');
+            out.extend(row);
+            out.push('\n');
+        }
+        out.push('+');
+        out.push_str(&"-".repeat(width));
+        out.push('\n');
+        out.push_str(&format!(
+            "x: {} [{} .. {}]{}   * trial   o Pareto front\n",
+            self.x_label,
+            fmt(x0, self.log_x),
+            fmt(x1, self.log_x),
+            if self.log_x { " (log)" } else { "" }
+        ));
+        out
+    }
+}
+
+fn min_max(v: &[f64]) -> (f64, f64) {
+    v.iter()
+        .fold((f64::INFINITY, f64::NEG_INFINITY), |(lo, hi), &x| {
+            (lo.min(x), hi.max(x))
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_points_and_front_markers() {
+        let mut s = Scatter::new("t", "x", "y");
+        s.push(1.0, 1.0, false);
+        s.push(2.0, 2.0, true);
+        let text = s.render(20, 10);
+        assert!(text.contains('*'));
+        assert!(text.contains('o'));
+        assert!(text.contains("Pareto front"));
+    }
+
+    #[test]
+    fn log_axes_render() {
+        let mut s = Scatter::new("t", "bops", "acc").log_x();
+        s.push(100.0, 0.5, false);
+        s.push(100_000.0, 0.6, true);
+        let text = s.render(30, 8);
+        assert!(text.contains("(log)"));
+    }
+
+    #[test]
+    fn empty_plot_is_safe() {
+        let s = Scatter::new("t", "x", "y");
+        assert!(s.render(10, 5).contains("no points"));
+    }
+
+    #[test]
+    fn single_point_no_panic() {
+        let mut s = Scatter::new("t", "x", "y");
+        s.push(3.0, 4.0, true);
+        let _ = s.render(10, 5);
+    }
+}

@@ -1,0 +1,174 @@
+//! The AOT ABI manifest (`artifacts/manifest.json`).
+//!
+//! `python/compile/aot.py` records the ordered input/output names and
+//! shapes of every artifact; this module parses it and cross-checks the
+//! constants against `nn::abi` so a drifted Python build fails fast at
+//! load time instead of producing garbage numerics.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::nn;
+use crate::util::Json;
+
+/// One artifact's ABI.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    /// HLO text filename relative to the artifact dir.
+    pub file: String,
+    /// Ordered `(name, shape)` inputs.
+    pub inputs: Vec<(String, Vec<usize>)>,
+    /// Ordered output names.
+    pub outputs: Vec<String>,
+}
+
+impl ArtifactSpec {
+    /// Total input element count.
+    pub fn input_elems(&self) -> usize {
+        self.inputs
+            .iter()
+            .map(|(_, s)| s.iter().product::<usize>())
+            .sum()
+    }
+
+    /// Index of a named input.
+    pub fn input_index(&self, name: &str) -> Option<usize> {
+        self.inputs.iter().position(|(n, _)| n == name)
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// ABI version tag.
+    pub abi_version: usize,
+    /// Artifact name → spec.
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+fn get_usize(j: &Json, key: &str) -> Result<usize> {
+    j.get(key)
+        .and_then(Json::as_usize)
+        .with_context(|| format!("manifest missing numeric `{key}`"))
+}
+
+impl Manifest {
+    /// Load and validate `manifest.json` from an artifact directory.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parsing {path:?}: {e}"))?;
+
+        // --- constant cross-check (the ABI contract) ---
+        let c = j.get("constants").context("manifest missing `constants`")?;
+        let checks: [(&str, usize); 10] = [
+            ("pad", nn::PAD),
+            ("num_layers", nn::NUM_LAYERS),
+            ("in_dim", nn::IN_DIM),
+            ("out_dim", nn::OUT_DIM),
+            ("batch", nn::BATCH),
+            ("eval_batch", nn::EVAL_BATCH),
+            ("hp_len", nn::HP_LEN),
+            ("sur_feats", nn::SUR_FEATS),
+            ("sur_out", nn::SUR_OUT),
+            ("sur_batch", nn::SUR_BATCH),
+        ];
+        for (key, expected) in checks {
+            let got = get_usize(c, key)?;
+            if got != expected {
+                bail!(
+                    "ABI drift: manifest `{key}` = {got} but this binary was \
+                     built for {expected}; re-run `make artifacts`"
+                );
+            }
+        }
+
+        // --- artifact specs ---
+        let mut artifacts = BTreeMap::new();
+        let arts = j.get("artifacts").context("manifest missing `artifacts`")?;
+        if let Json::Obj(m) = arts {
+            for (name, spec) in m {
+                let file = spec
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .context("artifact missing `file`")?
+                    .to_string();
+                let mut inputs = Vec::new();
+                for inp in spec.get("inputs").context("missing inputs")?.items() {
+                    let n = inp
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .context("input missing name")?;
+                    let shape: Vec<usize> = inp
+                        .get("shape")
+                        .context("input missing shape")?
+                        .items()
+                        .iter()
+                        .filter_map(Json::as_usize)
+                        .collect();
+                    inputs.push((n.to_string(), shape));
+                }
+                let outputs = spec
+                    .get("outputs")
+                    .context("missing outputs")?
+                    .items()
+                    .iter()
+                    .filter_map(Json::as_str)
+                    .map(str::to_string)
+                    .collect();
+                artifacts.insert(name.clone(), ArtifactSpec { file, inputs, outputs });
+            }
+        }
+        for required in ["train_step", "eval_step", "surrogate_train", "surrogate_predict"] {
+            if !artifacts.contains_key(required) {
+                bail!("manifest missing required artifact `{required}`");
+            }
+        }
+        Ok(Manifest {
+            abi_version: get_usize(&j, "abi_version")?,
+            artifacts,
+        })
+    }
+
+    /// Spec of a named artifact.
+    pub fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("unknown artifact `{name}`"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn art_dir() -> std::path::PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        if !art_dir().join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&art_dir()).unwrap();
+        assert_eq!(m.abi_version, 1);
+        let ts = m.spec("train_step").unwrap();
+        assert_eq!(ts.inputs.len(), 32);
+        assert_eq!(ts.inputs[0].0, "w0");
+        assert_eq!(ts.inputs[0].1, vec![nn::IN_DIM, nn::PAD]);
+        assert_eq!(ts.outputs.len(), 25);
+        assert_eq!(ts.input_index("x"), Some(30));
+    }
+
+    #[test]
+    fn missing_dir_is_a_clean_error() {
+        let err = Manifest::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

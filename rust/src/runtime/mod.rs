@@ -1,0 +1,18 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them.
+//!
+//! This is the only place the `xla` crate appears. The flow mirrors
+//! /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. HLO *text* is the interchange format (the
+//! bundled xla_extension 0.5.1 rejects jax ≥ 0.5 serialized protos — see
+//! python/compile/aot.py).
+//!
+//! Python never runs here; after `make artifacts` the binary is fully
+//! self-contained.
+
+pub mod manifest;
+#[allow(clippy::module_inception)]
+pub mod runtime;
+
+pub use manifest::{ArtifactSpec, Manifest};
+pub use runtime::{Runtime, TensorArg};

@@ -1,0 +1,197 @@
+//! The executor: compiled artifacts + shape-checked execution.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::Manifest;
+
+/// A borrowed input tensor (shape checked against the manifest).
+pub struct TensorArg<'a> {
+    /// Input name (must match the manifest, in order).
+    pub name: &'a str,
+    /// Row-major f32 data.
+    pub data: &'a [f32],
+}
+
+/// Convenience constructor used all over the trainer.
+pub fn arg<'a>(name: &'a str, data: &'a [f32]) -> TensorArg<'a> {
+    TensorArg { name, data }
+}
+
+/// Loaded PJRT runtime: one compiled executable per artifact.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    exes: BTreeMap<String, xla::PjRtLoadedExecutable>,
+}
+
+
+impl Runtime {
+    /// Load every artifact in `dir` (validated against `manifest.json`)
+    /// and compile it on the PJRT CPU client.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut exes = BTreeMap::new();
+        for (name, spec) in &manifest.artifacts {
+            let path = dir.join(&spec.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact `{name}`"))?;
+            exes.insert(name.clone(), exe);
+        }
+        Ok(Runtime {
+            client,
+            manifest,
+            exes,
+        })
+    }
+
+    /// The ABI manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Execute an artifact. `args` must match the manifest's input order,
+    /// names, and element counts exactly; outputs are returned as flat
+    /// `Vec<f32>`s in the manifest's output order.
+    pub fn run(&self, name: &str, args: &[TensorArg<'_>]) -> Result<Vec<Vec<f32>>> {
+        let spec = self.manifest.spec(name)?;
+        if args.len() != spec.inputs.len() {
+            bail!(
+                "artifact `{name}` expects {} inputs, got {}",
+                spec.inputs.len(),
+                args.len()
+            );
+        }
+        // Inputs go up as PjRtBuffers we own (freed on drop). This matters:
+        // the crate's Literal-based `execute` path leaks its device-side
+        // input copies in the C wrapper (`release()` with no post-Execute
+        // free), which OOMs a 20k-step search. `execute_b` borrows our
+        // buffers instead.
+        let mut buffers = Vec::with_capacity(args.len());
+        for (a, (want_name, shape)) in args.iter().zip(&spec.inputs) {
+            if a.name != want_name {
+                bail!("artifact `{name}`: input `{}` out of order (expected `{want_name}`)", a.name);
+            }
+            let want: usize = shape.iter().product();
+            if a.data.len() != want {
+                bail!(
+                    "artifact `{name}`: input `{}` has {} elements, expected {} {shape:?}",
+                    a.name,
+                    a.data.len(),
+                    want
+                );
+            }
+            buffers.push(
+                self.client
+                    .buffer_from_host_buffer::<f32>(a.data, shape, None)
+                    .with_context(|| format!("uploading `{}`", a.name))?,
+            );
+        }
+        let exe = self.exes.get(name).unwrap();
+        let result = exe
+            .execute_b(&buffers)
+            .with_context(|| format!("executing `{name}`"))?;
+        // single replica; the graph was lowered with return_tuple=True
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .context("downloading result")?;
+        let leaves = tuple.to_tuple().context("untupling result")?;
+        if leaves.len() != spec.outputs.len() {
+            bail!(
+                "artifact `{name}` returned {} outputs, manifest says {}",
+                leaves.len(),
+                spec.outputs.len()
+            );
+        }
+        leaves
+            .into_iter()
+            .map(|l| l.to_vec::<f32>().context("downloading output"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn;
+
+    fn art_dir() -> std::path::PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn runtime() -> Option<Runtime> {
+        if !art_dir().join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(Runtime::load(&art_dir()).expect("runtime load"))
+    }
+
+    #[test]
+    fn surrogate_predict_runs_and_is_linear_at_zero_weights() {
+        let Some(rt) = runtime() else { return };
+        let z1 = vec![0.0f32; nn::SUR_FEATS * nn::SUR_HIDDEN];
+        let zb1 = vec![0.0f32; nn::SUR_HIDDEN];
+        let z2 = vec![0.0f32; nn::SUR_HIDDEN * nn::SUR_HIDDEN];
+        let zb2 = vec![0.0f32; nn::SUR_HIDDEN];
+        let z3 = vec![0.0f32; nn::SUR_HIDDEN * nn::SUR_OUT];
+        let mut zb3 = vec![0.0f32; nn::SUR_OUT];
+        zb3.copy_from_slice(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let x = vec![0.5f32; nn::SUR_BATCH * nn::SUR_FEATS];
+        let out = rt
+            .run(
+                "surrogate_predict",
+                &[
+                    arg("sw1", &z1),
+                    arg("sb1", &zb1),
+                    arg("sw2", &z2),
+                    arg("sb2", &zb2),
+                    arg("sw3", &z3),
+                    arg("sb3", &zb3),
+                    arg("x", &x),
+                ],
+            )
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        let pred = &out[0];
+        assert_eq!(pred.len(), nn::SUR_BATCH * nn::SUR_OUT);
+        // all-zero weights → prediction == output bias everywhere
+        for row in pred.chunks(nn::SUR_OUT) {
+            assert_eq!(row, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        }
+    }
+
+    #[test]
+    fn wrong_input_order_is_rejected() {
+        let Some(rt) = runtime() else { return };
+        let z = vec![0.0f32; 4];
+        let err = rt
+            .run("surrogate_predict", &[arg("sb1", &z)])
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("expects"));
+    }
+
+    #[test]
+    fn wrong_element_count_is_rejected() {
+        let Some(rt) = runtime() else { return };
+        let short = vec![0.0f32; 3];
+        let args: Vec<TensorArg> = ["sw1", "sb1", "sw2", "sb2", "sw3", "sb3", "x"]
+            .iter()
+            .map(|n| arg(n, &short))
+            .collect();
+        let err = rt.run("surrogate_predict", &args).unwrap_err();
+        assert!(format!("{err:#}").contains("elements"));
+    }
+}

@@ -1,0 +1,5 @@
+//! Global-search strategy: NSGA-II over the Table 1 genome space.
+
+pub mod nsga2;
+
+pub use nsga2::{EvaluatedIndividual, Nsga2, Nsga2Config};

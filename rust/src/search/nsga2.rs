@@ -1,0 +1,303 @@
+//! NSGA-II (Deb et al. 2002) — the paper's global-search algorithm.
+//!
+//! Evaluation is expensive (each candidate trains for several epochs on the
+//! PJRT runtime), so the algorithm is factored as a *generational state
+//! machine*: the coordinator asks for a population, evaluates it (possibly
+//! concurrently), hands the results back, and receives the next population.
+//! All randomness flows through the injected [`Rng`].
+
+
+use crate::nn::{Genome, SearchSpace};
+use crate::pareto::{crowding_distance, non_dominated_sort};
+use crate::util::Rng;
+
+/// A genome with its (minimised) objective vector.
+#[derive(Debug, Clone)]
+pub struct EvaluatedIndividual {
+    /// The architecture/hyperparameter point.
+    pub genome: Genome,
+    /// Minimised objectives (accuracy enters negated).
+    pub objectives: Vec<f64>,
+}
+
+/// Evolution parameters.
+#[derive(Debug, Clone)]
+pub struct Nsga2Config {
+    /// Population size (paper: 20).
+    pub population: usize,
+    /// Per-gene mutation probability.
+    pub p_mutation: f64,
+    /// Probability of applying crossover (else clone a parent).
+    pub p_crossover: f64,
+}
+
+impl Default for Nsga2Config {
+    fn default() -> Self {
+        Nsga2Config {
+            population: 20,
+            p_mutation: 0.15,
+            p_crossover: 0.9,
+        }
+    }
+}
+
+/// The NSGA-II engine.
+pub struct Nsga2 {
+    space: SearchSpace,
+    cfg: Nsga2Config,
+    /// current parent pool (evaluated)
+    parents: Vec<EvaluatedIndividual>,
+}
+
+impl Nsga2 {
+    /// New engine over a space.
+    pub fn new(space: SearchSpace, cfg: Nsga2Config) -> Self {
+        Nsga2 {
+            space,
+            cfg,
+            parents: Vec::new(),
+        }
+    }
+
+    /// The search space.
+    pub fn space(&self) -> &SearchSpace {
+        &self.space
+    }
+
+    /// Random initial population.
+    pub fn initial_population(&self, rng: &mut Rng) -> Vec<Genome> {
+        (0..self.cfg.population)
+            .map(|_| self.space.sample(rng))
+            .collect()
+    }
+
+    /// (front rank, crowding distance) for every member of `pop`.
+    fn rank_and_crowd(pop: &[EvaluatedIndividual]) -> Vec<(usize, f64)> {
+        let pts: Vec<Vec<f64>> = pop.iter().map(|e| e.objectives.clone()).collect();
+        let fronts = non_dominated_sort(&pts);
+        let mut out = vec![(0usize, 0.0f64); pop.len()];
+        for (rank, front) in fronts.iter().enumerate() {
+            let front_pts: Vec<Vec<f64>> = front.iter().map(|&i| pts[i].clone()).collect();
+            let crowd = crowding_distance(&front_pts);
+            for (k, &i) in front.iter().enumerate() {
+                out[i] = (rank, crowd[k]);
+            }
+        }
+        out
+    }
+
+    /// Binary tournament on (rank, crowding).
+    fn tournament<'a>(
+        pop: &'a [EvaluatedIndividual],
+        meta: &[(usize, f64)],
+        rng: &mut Rng,
+    ) -> &'a Genome {
+        let a = rng.below(pop.len());
+        let b = rng.below(pop.len());
+        let better = if meta[a].0 != meta[b].0 {
+            if meta[a].0 < meta[b].0 {
+                a
+            } else {
+                b
+            }
+        } else if meta[a].1 > meta[b].1 {
+            a
+        } else {
+            b
+        };
+        &pop[better].genome
+    }
+
+    /// Absorb evaluated individuals: environmental selection (elitist
+    /// μ+λ truncation by rank then crowding) over parents ∪ offspring,
+    /// then breed the next generation of genomes to evaluate.
+    pub fn next_generation(
+        &mut self,
+        evaluated: Vec<EvaluatedIndividual>,
+        rng: &mut Rng,
+    ) -> Vec<Genome> {
+        // --- environmental selection ---
+        let mut pool = std::mem::take(&mut self.parents);
+        pool.extend(evaluated);
+        let meta = Self::rank_and_crowd(&pool);
+        let mut order: Vec<usize> = (0..pool.len()).collect();
+        order.sort_by(|&a, &b| {
+            meta[a]
+                .0
+                .cmp(&meta[b].0)
+                .then(meta[b].1.total_cmp(&meta[a].1))
+        });
+        order.truncate(self.cfg.population);
+        self.parents = order.into_iter().map(|i| pool[i].clone()).collect();
+
+        // --- variation ---
+        let meta = Self::rank_and_crowd(&self.parents);
+        let mut offspring = Vec::with_capacity(self.cfg.population);
+        while offspring.len() < self.cfg.population {
+            let p1 = Self::tournament(&self.parents, &meta, rng);
+            let p2 = Self::tournament(&self.parents, &meta, rng);
+            let mut child = if rng.chance(self.cfg.p_crossover) {
+                self.space.crossover(p1, p2, rng)
+            } else {
+                p1.clone()
+            };
+            self.space.mutate(&mut child, self.cfg.p_mutation, rng);
+            offspring.push(child);
+        }
+        offspring
+    }
+
+    /// Current elite pool (after the last `next_generation` call).
+    pub fn parents(&self) -> &[EvaluatedIndividual] {
+        &self.parents
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::Activation;
+
+    /// Synthetic objective: accuracy ∝ capacity (diminishing), cost ∝ size.
+    /// A known trade-off with a computable front.
+    fn toy_objectives(g: &Genome, space: &SearchSpace) -> Vec<f64> {
+        let weights = g.num_weights(space) as f64;
+        let acc = 1.0 - (-weights / 4000.0).exp();
+        vec![-acc, weights]
+    }
+
+    fn run_generations(gens: usize, seed: u64) -> (Nsga2, Vec<EvaluatedIndividual>) {
+        let space = SearchSpace::table1();
+        let mut engine = Nsga2::new(space.clone(), Nsga2Config::default());
+        let mut rng = Rng::new(seed);
+        let mut pop = engine.initial_population(&mut rng);
+        let mut last = Vec::new();
+        for _ in 0..gens {
+            let evaluated: Vec<EvaluatedIndividual> = pop
+                .iter()
+                .map(|g| EvaluatedIndividual {
+                    genome: g.clone(),
+                    objectives: toy_objectives(g, engine.space()),
+                })
+                .collect();
+            last = evaluated.clone();
+            pop = engine.next_generation(evaluated, &mut rng);
+        }
+        (engine, last)
+    }
+
+    #[test]
+    fn population_size_is_stable() {
+        let (engine, _) = run_generations(5, 0);
+        assert_eq!(engine.parents().len(), 20);
+    }
+
+    #[test]
+    fn evolution_improves_hypervolume() {
+        let space = SearchSpace::table1();
+        let mut engine = Nsga2::new(space.clone(), Nsga2Config::default());
+        let mut rng = Rng::new(1);
+        let mut pop = engine.initial_population(&mut rng);
+        let reference = [0.0, 60_000.0]; // worst acc, huge cost
+        let mut hv_first = None;
+        let mut hv_last = 0.0;
+        for gen in 0..15 {
+            let evaluated: Vec<EvaluatedIndividual> = pop
+                .iter()
+                .map(|g| EvaluatedIndividual {
+                    genome: g.clone(),
+                    objectives: toy_objectives(g, &space),
+                })
+                .collect();
+            pop = engine.next_generation(evaluated, &mut rng);
+            let pts: Vec<Vec<f64>> = engine
+                .parents()
+                .iter()
+                .map(|e| e.objectives.clone())
+                .collect();
+            let hv = crate::pareto::hypervolume(&pts, &reference);
+            if gen == 0 {
+                hv_first = Some(hv);
+            }
+            hv_last = hv;
+        }
+        assert!(
+            hv_last >= hv_first.unwrap() * 1.001,
+            "hypervolume should grow: {hv_first:?} → {hv_last}"
+        );
+    }
+
+    #[test]
+    fn elitism_never_loses_the_best() {
+        let space = SearchSpace::table1();
+        let mut engine = Nsga2::new(space.clone(), Nsga2Config::default());
+        let mut rng = Rng::new(2);
+        let mut pop = engine.initial_population(&mut rng);
+        let mut best_acc: f64 = f64::INFINITY; // minimised -acc
+        for _ in 0..10 {
+            let evaluated: Vec<EvaluatedIndividual> = pop
+                .iter()
+                .map(|g| EvaluatedIndividual {
+                    genome: g.clone(),
+                    objectives: toy_objectives(g, &space),
+                })
+                .collect();
+            pop = engine.next_generation(evaluated, &mut rng);
+            let gen_best = engine
+                .parents()
+                .iter()
+                .map(|e| e.objectives[0])
+                .fold(f64::INFINITY, f64::min);
+            assert!(gen_best <= best_acc + 1e-12, "elite regressed");
+            best_acc = best_acc.min(gen_best);
+        }
+    }
+
+    #[test]
+    fn offspring_are_valid_genomes() {
+        let (engine, _) = run_generations(3, 3);
+        let mut rng = Rng::new(4);
+        let mut e2 = Nsga2::new(engine.space().clone(), Nsga2Config::default());
+        let pop = e2.initial_population(&mut rng);
+        let evaluated: Vec<EvaluatedIndividual> = pop
+            .iter()
+            .map(|g| EvaluatedIndividual {
+                genome: g.clone(),
+                objectives: toy_objectives(g, e2.space()),
+            })
+            .collect();
+        for g in e2.next_generation(evaluated, &mut rng) {
+            assert!(e2.space().contains(&g));
+        }
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let (_, a) = run_generations(5, 9);
+        let (_, b) = run_generations(5, 9);
+        let ga: Vec<_> = a.iter().map(|e| e.genome.clone()).collect();
+        let gb: Vec<_> = b.iter().map(|e| e.genome.clone()).collect();
+        assert_eq!(ga, gb);
+    }
+
+    #[test]
+    fn search_finds_small_accurate_nets() {
+        // with the toy objective the front should include genuinely small nets
+        let (engine, _) = run_generations(12, 5);
+        let smallest = engine
+            .parents()
+            .iter()
+            .map(|e| e.objectives[1])
+            .fold(f64::INFINITY, f64::min);
+        // random Table 1 nets are ~5-20k weights; the front must reach low
+        assert!(smallest < 6_000.0, "smallest on front: {smallest}");
+        // and the space should still retain a high-accuracy member
+        let best_acc = engine
+            .parents()
+            .iter()
+            .map(|e| -e.objectives[0])
+            .fold(0.0f64, f64::max);
+        assert!(best_acc > 0.9, "best acc {best_acc}");
+        let _ = Activation::ReLU; // keep import used
+    }
+}

@@ -1,0 +1,153 @@
+//! Feature and target encodings for the surrogate.
+//!
+//! Mirrors rule4ml's descriptor approach: fixed-size per-layer descriptors
+//! (padded to `NUM_LAYERS`) plus global features. The 6 targets match
+//! rule4ml's outputs: BRAM, DSP, FF, LUT, latency cycles, II — compressed
+//! with `log1p` and a uniform scale so the MSE loss is well-conditioned.
+
+use crate::hls::SynthReport;
+use crate::nn::{Genome, SearchSpace, NUM_LAYERS, SUR_FEATS, SUR_OUT};
+
+/// log1p compression scale for all six targets.
+pub const TARGET_SCALE: f64 = 10.0;
+
+/// Encode a genome (at a given deployment precision/sparsity) into the
+/// `SUR_FEATS`-dim surrogate input.
+pub fn genome_features(
+    genome: &Genome,
+    space: &SearchSpace,
+    bits: u32,
+    sparsity: f64,
+) -> Vec<f32> {
+    let dims = genome.layer_dims(space);
+    let mut f = vec![0.0f32; SUR_FEATS];
+    let keep = 1.0 - sparsity;
+    // 8 per-layer slots × 8 features (hidden layers; the head folds into
+    // the globals). Inactive layers stay all-zero — the "active" flag lets
+    // the MLP tell a zero feature from a missing layer. Like rule4ml, the
+    // descriptors are *engineered*: surviving-multiplier counts rather than
+    // raw dims, so the network doesn't have to learn the sparsity product.
+    for i in 0..NUM_LAYERS.min(dims.len().saturating_sub(1)) {
+        let (n_in, n_out) = dims[i];
+        let nnz = (n_in * n_out) as f64 * keep;
+        let base = i * 8;
+        f[base] = n_in as f32 / 128.0;
+        f[base + 1] = n_out as f32 / 128.0;
+        f[base + 2] = (nnz as f32).ln_1p() / 12.0;
+        f[base + 3 + genome.act.index()] = 1.0; // act one-hot (3 slots)
+        f[base + 6] = if genome.batch_norm { 1.0 } else { 0.0 };
+        f[base + 7] = 1.0; // active flag
+    }
+    // globals (again engineered toward the targets: DSP-threshold flag,
+    // BN channel count, table count — the mechanisms of the cost model)
+    let g = NUM_LAYERS * 8;
+    let total_macs: usize = dims.iter().map(|&(i, o)| i * o).sum();
+    let total_nnz = total_macs as f64 * keep;
+    let (head_in, head_out) = *dims.last().unwrap();
+    let bn_channels: usize = if genome.batch_norm {
+        genome.widths(space).iter().sum()
+    } else {
+        0
+    };
+    let n_tables = if genome.act.needs_table() {
+        genome.n_layers
+    } else {
+        0
+    };
+    f[g] = genome.n_layers as f32 / 8.0;
+    f[g + 1] = (total_nnz as f32).ln_1p() / 12.0;
+    f[g + 2] = bits as f32 / 16.0;
+    f[g + 3] = sparsity as f32;
+    f[g + 4] = ((head_in * head_out) as f64 * keep) as f32 / 640.0;
+    f[g + 5] = n_tables as f32 / 8.0;
+    f[g + 6] = if bits > 9 { 1.0 } else { 0.0 }; // DSP-mapped multiplies
+    f[g + 7] = (bn_channels as f32).ln_1p() / 8.0;
+    f
+}
+
+/// Compress a synthesis report into the 6 training targets.
+pub fn targets_from_report(r: &SynthReport) -> [f32; SUR_OUT] {
+    [
+        compress(r.bram36 as f64),
+        compress(r.dsp as f64),
+        compress(r.ff as f64),
+        compress(r.lut as f64),
+        compress(r.latency_cc as f64),
+        compress(r.ii_cc as f64),
+    ]
+}
+
+/// Invert [`targets_from_report`] for a prediction vector:
+/// `(bram, dsp, ff, lut, latency_cc, ii_cc)` in raw units.
+pub fn raw_from_targets(t: &[f32]) -> [f64; SUR_OUT] {
+    let mut out = [0.0f64; SUR_OUT];
+    for (o, &v) in out.iter_mut().zip(t) {
+        *o = expand(v);
+    }
+    out
+}
+
+fn compress(v: f64) -> f32 {
+    (v.ln_1p() / TARGET_SCALE) as f32
+}
+
+fn expand(v: f32) -> f64 {
+    ((v as f64) * TARGET_SCALE).exp_m1().max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hls::{synthesize, FpgaDevice, HlsConfig, NetworkSpec};
+    use crate::nn::Activation;
+    use crate::util::Rng;
+
+    #[test]
+    fn feature_vector_has_fixed_length_and_range() {
+        let space = SearchSpace::table1();
+        let mut rng = Rng::new(0);
+        for _ in 0..100 {
+            let g = space.sample(&mut rng);
+            let f = genome_features(&g, &space, 8, 0.3);
+            assert_eq!(f.len(), SUR_FEATS);
+            assert!(f.iter().all(|v| v.is_finite() && *v >= 0.0 && *v <= 2.5));
+        }
+    }
+
+    #[test]
+    fn depth_is_visible_in_features() {
+        let space = SearchSpace::table1();
+        let mut g = space.baseline();
+        let f4 = genome_features(&g, &space, 8, 0.0);
+        g.n_layers = 8;
+        let f8 = genome_features(&g, &space, 8, 0.0);
+        // layer-5 active flag differs
+        assert_eq!(f4[4 * 8 + 7], 0.0);
+        assert_eq!(f8[4 * 8 + 7], 1.0);
+    }
+
+    #[test]
+    fn activation_onehot_is_exclusive() {
+        let space = SearchSpace::table1();
+        let mut g = space.baseline();
+        for act in Activation::ALL {
+            g.act = act;
+            let f = genome_features(&g, &space, 8, 0.0);
+            let hot: f32 = f[3..6].iter().sum();
+            assert_eq!(hot, 1.0);
+            assert_eq!(f[3 + act.index()], 1.0);
+        }
+    }
+
+    #[test]
+    fn target_roundtrip() {
+        let space = SearchSpace::table1();
+        let spec = NetworkSpec::from_genome(&space.baseline(), &space, 8, 0.5);
+        let r = synthesize(&spec, &HlsConfig::default(), &FpgaDevice::vu13p());
+        let t = targets_from_report(&r);
+        let raw = raw_from_targets(&t);
+        assert!((raw[1] - r.dsp as f64).abs() / (r.dsp as f64 + 1.0) < 0.01);
+        assert!((raw[3] - r.lut as f64).abs() / (r.lut as f64 + 1.0) < 0.01);
+        assert!((raw[4] - r.latency_cc as f64).abs() < 0.5);
+    }
+}

@@ -1,0 +1,122 @@
+//! Batched, cached surrogate inference used by the search objectives.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use super::features::{genome_features, raw_from_targets};
+use super::trainer::SurrogateParams;
+use crate::hls::FpgaDevice;
+use crate::nn::{Genome, SearchSpace, SUR_BATCH, SUR_FEATS, SUR_OUT};
+use crate::runtime::runtime::arg;
+use crate::runtime::Runtime;
+
+/// Raw (uncompressed) surrogate outputs for one architecture.
+#[derive(Debug, Clone, Copy)]
+pub struct ResourceEstimate {
+    /// BRAM36 blocks.
+    pub bram: f64,
+    /// DSP slices.
+    pub dsp: f64,
+    /// Flip-flops.
+    pub ff: f64,
+    /// LUTs.
+    pub lut: f64,
+    /// Latency in clock cycles.
+    pub latency_cc: f64,
+    /// Initiation interval in clock cycles.
+    pub ii_cc: f64,
+}
+
+impl ResourceEstimate {
+    /// The paper's "estimated average resources": mean of the four
+    /// utilisation percentages on a device.
+    pub fn avg_resources(&self, device: &FpgaDevice) -> f64 {
+        (self.dsp / device.dsp as f64
+            + self.lut / device.lut as f64
+            + self.ff / device.ff as f64
+            + self.bram / device.bram36 as f64)
+            * 100.0
+            / 4.0
+    }
+}
+
+/// Trained surrogate + prediction cache.
+pub struct SurrogatePredictor<'a> {
+    rt: &'a Runtime,
+    params: SurrogateParams,
+    /// memoised by feature-vector bits (genomes repeat across generations)
+    cache: RefCell<HashMap<Vec<u32>, ResourceEstimate>>,
+}
+
+impl<'a> SurrogatePredictor<'a> {
+    /// Wrap trained parameters.
+    pub fn new(rt: &'a Runtime, params: SurrogateParams) -> Self {
+        SurrogatePredictor {
+            rt,
+            params,
+            cache: RefCell::new(HashMap::new()),
+        }
+    }
+
+    /// Predict resources for one genome at a deployment point.
+    pub fn predict(
+        &self,
+        genome: &Genome,
+        space: &SearchSpace,
+        bits: u32,
+        sparsity: f64,
+    ) -> Result<ResourceEstimate> {
+        let feats = genome_features(genome, space, bits, sparsity);
+        let key: Vec<u32> = feats.iter().map(|f| f.to_bits()).collect();
+        if let Some(hit) = self.cache.borrow().get(&key) {
+            return Ok(*hit);
+        }
+        let est = self.predict_batch(&[feats])?[0];
+        self.cache.borrow_mut().insert(key, est);
+        Ok(est)
+    }
+
+    /// Predict a batch of feature vectors (padded to `SUR_BATCH` rows).
+    pub fn predict_batch(&self, feats: &[Vec<f32>]) -> Result<Vec<ResourceEstimate>> {
+        let mut out = Vec::with_capacity(feats.len());
+        for chunk in feats.chunks(SUR_BATCH) {
+            let mut xbuf = vec![0.0f32; SUR_BATCH * SUR_FEATS];
+            for (i, f) in chunk.iter().enumerate() {
+                xbuf[i * SUR_FEATS..(i + 1) * SUR_FEATS].copy_from_slice(f);
+            }
+            let p = &self.params;
+            let result = self.rt.run(
+                "surrogate_predict",
+                &[
+                    arg("sw1", &p.w1),
+                    arg("sb1", &p.b1),
+                    arg("sw2", &p.w2),
+                    arg("sb2", &p.b2),
+                    arg("sw3", &p.w3),
+                    arg("sb3", &p.b3),
+                    arg("x", &xbuf),
+                ],
+            )?;
+            let pred = &result[0];
+            for i in 0..chunk.len() {
+                let raw = raw_from_targets(&pred[i * SUR_OUT..(i + 1) * SUR_OUT]);
+                out.push(ResourceEstimate {
+                    bram: raw[0],
+                    dsp: raw[1],
+                    ff: raw[2],
+                    lut: raw[3],
+                    latency_cc: raw[4],
+                    ii_cc: raw[5],
+                });
+            }
+        }
+        Ok(out)
+    }
+
+    /// Number of memoised predictions (diagnostics).
+    pub fn cache_len(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}

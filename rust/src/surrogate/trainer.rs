@@ -1,0 +1,222 @@
+//! Surrogate training driver: labels from the HLS simulator, SGD via the
+//! AOT `surrogate_train` artifact.
+
+use anyhow::Result;
+
+use super::features::{genome_features, targets_from_report};
+use crate::hls::{synthesize, FpgaDevice, HlsConfig, NetworkSpec};
+use crate::nn::{
+    SearchSpace, SHP_LEN, SUR_BATCH, SUR_FEATS, SUR_HIDDEN, SUR_OUT,
+};
+use crate::runtime::runtime::arg;
+use crate::runtime::Runtime;
+use crate::util::Rng;
+
+/// The six weight/bias tensors of the surrogate MLP (ABI order).
+#[derive(Debug, Clone)]
+pub struct SurrogateParams {
+    /// `(SUR_FEATS, SUR_HIDDEN)`.
+    pub w1: Vec<f32>,
+    /// `(SUR_HIDDEN,)`.
+    pub b1: Vec<f32>,
+    /// `(SUR_HIDDEN, SUR_HIDDEN)`.
+    pub w2: Vec<f32>,
+    /// `(SUR_HIDDEN,)`.
+    pub b2: Vec<f32>,
+    /// `(SUR_HIDDEN, SUR_OUT)`.
+    pub w3: Vec<f32>,
+    /// `(SUR_OUT,)`.
+    pub b3: Vec<f32>,
+}
+
+impl SurrogateParams {
+    /// He-initialised.
+    pub fn init(rng: &mut Rng) -> Self {
+        let mut p = SurrogateParams {
+            w1: vec![0.0; SUR_FEATS * SUR_HIDDEN],
+            b1: vec![0.0; SUR_HIDDEN],
+            w2: vec![0.0; SUR_HIDDEN * SUR_HIDDEN],
+            b2: vec![0.0; SUR_HIDDEN],
+            w3: vec![0.0; SUR_HIDDEN * SUR_OUT],
+            b3: vec![0.0; SUR_OUT],
+        };
+        rng.fill_normal(&mut p.w1, (2.0 / SUR_FEATS as f32).sqrt());
+        rng.fill_normal(&mut p.w2, (2.0 / SUR_HIDDEN as f32).sqrt());
+        rng.fill_normal(&mut p.w3, (2.0 / SUR_HIDDEN as f32).sqrt());
+        p
+    }
+
+    fn fields(&self) -> [&[f32]; 6] {
+        [&self.w1, &self.b1, &self.w2, &self.b2, &self.w3, &self.b3]
+    }
+
+    fn fields_mut(&mut self) -> [&mut Vec<f32>; 6] {
+        [
+            &mut self.w1,
+            &mut self.b1,
+            &mut self.w2,
+            &mut self.b2,
+            &mut self.w3,
+            &mut self.b3,
+        ]
+    }
+
+    /// All-zero clone (Adam state).
+    pub fn zeros_like(&self) -> Self {
+        let mut z = self.clone();
+        for f in z.fields_mut() {
+            f.fill(0.0);
+        }
+        z
+    }
+}
+
+/// Surrogate training configuration.
+#[derive(Debug, Clone)]
+pub struct SurrogateTrainConfig {
+    /// Number of labelled architectures to sample.
+    pub dataset_size: usize,
+    /// Training epochs.
+    pub epochs: usize,
+    /// Adam learning rate.
+    pub lr: f32,
+    /// Gaussian label noise (relative, in compressed space) — models the
+    /// irreducible synthesis variance rule4ml also faces.
+    pub label_noise: f32,
+    /// RNG seed.
+    pub seed: u64,
+}
+
+impl Default for SurrogateTrainConfig {
+    fn default() -> Self {
+        SurrogateTrainConfig {
+            dataset_size: 4096,
+            epochs: 150,
+            lr: 1e-3,
+            label_noise: 0.01,
+            seed: 104,
+        }
+    }
+}
+
+/// Labelled surrogate dataset: (features, compressed targets).
+pub fn build_dataset(
+    space: &SearchSpace,
+    cfg: &SurrogateTrainConfig,
+    hls: &HlsConfig,
+    device: &FpgaDevice,
+) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(cfg.seed);
+    let mut xs = Vec::with_capacity(cfg.dataset_size * SUR_FEATS);
+    let mut ys = Vec::with_capacity(cfg.dataset_size * SUR_OUT);
+    for _ in 0..cfg.dataset_size {
+        let g = space.sample(&mut rng);
+        // sample deployment points the search will actually query:
+        // global search estimates at 8-bit dense; local search at 4–8 bit,
+        // up to ~90 % sparse
+        let bits = *rng.choose(&[4u32, 6, 8, 8, 8, 12]);
+        let sparsity = rng.uniform() * 0.9;
+        let spec = NetworkSpec::from_genome(&g, space, bits, sparsity);
+        let report = synthesize(&spec, hls, device);
+        xs.extend_from_slice(&genome_features(&g, space, bits, sparsity));
+        for t in targets_from_report(&report) {
+            ys.push(t + cfg.label_noise * rng.normal_f32());
+        }
+    }
+    (xs, ys)
+}
+
+/// Train the surrogate on simulator labels. Returns the trained params and
+/// the final-epoch mean MSE (compressed space).
+pub fn train_surrogate(
+    rt: &Runtime,
+    space: &SearchSpace,
+    cfg: &SurrogateTrainConfig,
+    hls: &HlsConfig,
+    device: &FpgaDevice,
+) -> Result<(SurrogateParams, f64)> {
+    let (xs, ys) = build_dataset(space, cfg, hls, device);
+    let n = cfg.dataset_size;
+    let mut rng = Rng::new(cfg.seed ^ 0xdead_beef);
+    let mut params = SurrogateParams::init(&mut rng);
+    let mut m = params.zeros_like();
+    let mut v = params.zeros_like();
+    let mut shp = [0.0f32; SHP_LEN];
+    shp[crate::nn::SHP_BETA1] = 0.9;
+    shp[crate::nn::SHP_BETA2] = 0.999;
+    shp[crate::nn::SHP_EPS] = 1e-8;
+    let mut t = 0i32;
+    let mut last_epoch_loss = f64::NAN;
+    let mut xbuf = vec![0.0f32; SUR_BATCH * SUR_FEATS];
+    let mut ybuf = vec![0.0f32; SUR_BATCH * SUR_OUT];
+    for epoch in 0..cfg.epochs {
+        // step-decay lr schedule (lr is a runtime input of the AOT graph,
+        // so the schedule lives host-side): ×0.3 at 50 % and 80 %.
+        let frac = epoch as f64 / cfg.epochs.max(1) as f64;
+        shp[crate::nn::SHP_LR] = cfg.lr
+            * if frac < 0.5 {
+                1.0
+            } else if frac < 0.8 {
+                0.3
+            } else {
+                0.09
+            };
+        let perm = rng.permutation(n);
+        let mut loss_sum = 0.0;
+        let mut batches = 0;
+        for chunk in perm.chunks(SUR_BATCH) {
+            // tail chunk: wrap around (training only, harmless)
+            for (slot, &src) in chunk.iter().chain(perm.iter()).take(SUR_BATCH).enumerate()
+            {
+                xbuf[slot * SUR_FEATS..(slot + 1) * SUR_FEATS]
+                    .copy_from_slice(&xs[src * SUR_FEATS..(src + 1) * SUR_FEATS]);
+                ybuf[slot * SUR_OUT..(slot + 1) * SUR_OUT]
+                    .copy_from_slice(&ys[src * SUR_OUT..(src + 1) * SUR_OUT]);
+            }
+            t += 1;
+            shp[crate::nn::SHP_BETA1_POW] = 0.9f32.powi(t);
+            shp[crate::nn::SHP_BETA2_POW] = 0.999f32.powi(t);
+            let out = rt.run(
+                "surrogate_train",
+                &[
+                    arg("sw1", &params.w1),
+                    arg("sb1", &params.b1),
+                    arg("sw2", &params.w2),
+                    arg("sb2", &params.b2),
+                    arg("sw3", &params.w3),
+                    arg("sb3", &params.b3),
+                    arg("m_sw1", &m.w1),
+                    arg("m_sb1", &m.b1),
+                    arg("m_sw2", &m.w2),
+                    arg("m_sb2", &m.b2),
+                    arg("m_sw3", &m.w3),
+                    arg("m_sb3", &m.b3),
+                    arg("v_sw1", &v.w1),
+                    arg("v_sb1", &v.b1),
+                    arg("v_sw2", &v.w2),
+                    arg("v_sb2", &v.b2),
+                    arg("v_sw3", &v.w3),
+                    arg("v_sb3", &v.b3),
+                    arg("x", &xbuf),
+                    arg("y", &ybuf),
+                    arg("shp", &shp),
+                ],
+            )?;
+            let mut it = out.into_iter();
+            for f in params.fields_mut() {
+                *f = it.next().unwrap();
+            }
+            for f in m.fields_mut() {
+                *f = it.next().unwrap();
+            }
+            for f in v.fields_mut() {
+                *f = it.next().unwrap();
+            }
+            loss_sum += it.next().unwrap()[0] as f64;
+            batches += 1;
+        }
+        last_epoch_loss = loss_sum / batches.max(1) as f64;
+    }
+    let _ = params.fields(); // keep accessor used
+    Ok((params, last_epoch_loss))
+}

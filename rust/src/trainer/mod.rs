@@ -1,0 +1,6 @@
+//! Supernet training driver: the hot loop that feeds the AOT `train_step`
+//! artifact and maintains optimiser/BN state on the host.
+
+pub mod supernet;
+
+pub use supernet::{EpochMetrics, TrainConfig, TrainedModel, Trainer};

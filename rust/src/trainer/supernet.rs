@@ -1,0 +1,358 @@
+//! Training/evaluation of one candidate architecture inside the supernet.
+//!
+//! Every candidate is trained against the SAME compiled `train_step` HLO:
+//! the genome only changes the mask/gate/hyperparameter *inputs*
+//! (`nn::SupernetInputs`). The trainer owns the Adam state, the Adam
+//! bias-correction schedule (β^t is computed host-side and passed in `hp`),
+//! and the BatchNorm running statistics used by `eval_step`.
+
+use anyhow::Result;
+
+use crate::data::{Dataset, Split};
+use crate::nn::{
+    self, PruneMasks, SupernetInputs, SupernetParams, EVAL_BATCH, HP_LEN, NUM_LAYERS,
+    OUT_DIM, PAD,
+};
+use crate::runtime::runtime::arg;
+use crate::runtime::Runtime;
+use crate::util::Rng;
+
+/// Training-run configuration (per candidate).
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Number of epochs over the train split.
+    pub epochs: usize,
+    /// Quantisation-aware training enabled.
+    pub qat: bool,
+    /// QAT bit-width.
+    pub bits: u32,
+    /// Adam β1.
+    pub beta1: f32,
+    /// Adam β2.
+    pub beta2: f32,
+    /// Adam ε.
+    pub eps: f32,
+    /// BN running-stat EMA momentum (fraction of the *new* batch stat).
+    pub bn_momentum: f32,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            epochs: 5, // paper: 5 epochs per global-search trial
+            qat: false,
+            bits: 8,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            bn_momentum: 0.1,
+        }
+    }
+}
+
+/// Per-epoch training metrics.
+#[derive(Debug, Clone)]
+pub struct EpochMetrics {
+    /// Mean train loss over the epoch.
+    pub loss: f64,
+    /// Train accuracy over the epoch.
+    pub accuracy: f64,
+}
+
+/// A trained candidate: parameters + BN statistics + history.
+#[derive(Debug, Clone)]
+pub struct TrainedModel {
+    /// Final supernet parameters.
+    pub params: SupernetParams,
+    /// BN running means `(L, PAD)` for eval.
+    pub run_mean: Vec<f32>,
+    /// BN running variances `(L, PAD)` for eval.
+    pub run_var: Vec<f32>,
+    /// Loss/accuracy per epoch.
+    pub history: Vec<EpochMetrics>,
+    /// Total train steps taken (continues across resume calls).
+    pub steps: u64,
+    /// Adam first-moment state (kept for resume during local search).
+    pub adam_m: SupernetParams,
+    /// Adam second-moment state.
+    pub adam_v: SupernetParams,
+}
+
+/// The training driver. Holds only borrowed context; all heavy state lives
+/// in [`TrainedModel`] so local search can resume training after pruning.
+pub struct Trainer<'a> {
+    rt: &'a Runtime,
+    ds: &'a Dataset,
+}
+
+impl<'a> Trainer<'a> {
+    /// New trainer over a runtime and dataset.
+    pub fn new(rt: &'a Runtime, ds: &'a Dataset) -> Self {
+        Trainer { rt, ds }
+    }
+
+    /// Fresh state for a candidate (He init, zero Adam, identity BN stats).
+    pub fn init_model(&self, rng: &mut Rng) -> TrainedModel {
+        TrainedModel {
+            params: SupernetParams::init(rng),
+            run_mean: vec![0.0; NUM_LAYERS * PAD],
+            run_var: vec![1.0; NUM_LAYERS * PAD],
+            history: Vec::new(),
+            steps: 0,
+            adam_m: SupernetParams::zeros(),
+            adam_v: SupernetParams::zeros(),
+        }
+    }
+
+    /// Train `model` in place for `cfg.epochs` epochs.
+    pub fn train(
+        &self,
+        model: &mut TrainedModel,
+        inputs: &SupernetInputs,
+        prune: &PruneMasks,
+        cfg: &TrainConfig,
+        rng: &mut Rng,
+    ) -> Result<()> {
+        let qat_gate = if cfg.qat { 1.0 } else { 0.0 };
+        let mut hp = [0.0f32; HP_LEN];
+        hp[nn::HP_BN_GATE] = inputs.bn_gate;
+        hp[nn::HP_DROPOUT] = inputs.dropout;
+        hp[nn::HP_QAT_GATE] = qat_gate;
+        hp[nn::HP_BITS] = cfg.bits as f32;
+        hp[nn::HP_LR] = inputs.lr;
+        hp[nn::HP_L1] = inputs.l1;
+        hp[nn::HP_BETA1] = cfg.beta1;
+        hp[nn::HP_BETA2] = cfg.beta2;
+        hp[nn::HP_EPS] = cfg.eps;
+        hp[nn::HP_BN_MOM] = cfg.bn_momentum;
+
+        for _epoch in 0..cfg.epochs {
+            let batches = self.ds.train_epoch(rng);
+            let mut loss_sum = 0.0f64;
+            let mut correct_sum = 0.0f64;
+            let mut rows = 0usize;
+            for batch in &batches {
+                model.steps += 1;
+                let t = model.steps as i32;
+                hp[nn::HP_BETA1_POW] = cfg.beta1.powi(t);
+                hp[nn::HP_BETA2_POW] = cfg.beta2.powi(t);
+                // dropout seed: deterministic per step, < 2^24 for exact f32
+                hp[nn::HP_SEED] = (model.steps % (1 << 24)) as f32;
+
+                let p = &model.params;
+                let m = &model.adam_m;
+                let v = &model.adam_v;
+                let out = self.rt.run(
+                    "train_step",
+                    &[
+                        arg("w0", &p.w0),
+                        arg("wh", &p.wh),
+                        arg("b", &p.b),
+                        arg("gamma", &p.gamma),
+                        arg("beta", &p.beta),
+                        arg("wo", &p.wo),
+                        arg("bo", &p.bo),
+                        arg("m_w0", &m.w0),
+                        arg("m_wh", &m.wh),
+                        arg("m_b", &m.b),
+                        arg("m_gamma", &m.gamma),
+                        arg("m_beta", &m.beta),
+                        arg("m_wo", &m.wo),
+                        arg("m_bo", &m.bo),
+                        arg("v_w0", &v.w0),
+                        arg("v_wh", &v.wh),
+                        arg("v_b", &v.b),
+                        arg("v_gamma", &v.gamma),
+                        arg("v_beta", &v.beta),
+                        arg("v_wo", &v.wo),
+                        arg("v_bo", &v.bo),
+                        arg("unit", &inputs.unit),
+                        arg("p0", &prune.p0),
+                        arg("ph", &prune.ph),
+                        arg("po", &prune.po),
+                        arg("gates", &inputs.gates),
+                        arg("act_sel", &inputs.act_sel),
+                        arg("hp", &hp),
+                        arg("run_mean", &model.run_mean),
+                        arg("run_var", &model.run_var),
+                        arg("x", &batch.x),
+                        arg("y1h", &batch.y1h),
+                    ],
+                )?;
+                let mut it = out.into_iter();
+                // 7 params, 7 m, 7 v — same field order as PARAM_SHAPES
+                for field in model.params.fields_mut() {
+                    *field = it.next().unwrap();
+                }
+                for field in model.adam_m.fields_mut() {
+                    *field = it.next().unwrap();
+                }
+                for field in model.adam_v.fields_mut() {
+                    *field = it.next().unwrap();
+                }
+                let loss = it.next().unwrap()[0] as f64;
+                let correct = it.next().unwrap()[0] as f64;
+                // BN running statistics: EMA computed in-graph
+                model.run_mean = it.next().unwrap();
+                model.run_var = it.next().unwrap();
+                loss_sum += loss;
+                correct_sum += correct;
+                rows += batch.rows;
+            }
+            model.history.push(EpochMetrics {
+                loss: loss_sum / batches.len().max(1) as f64,
+                accuracy: correct_sum / rows.max(1) as f64,
+            });
+        }
+        Ok(())
+    }
+
+    /// Accuracy and mean CE loss on a split (eval mode: running BN stats,
+    /// no dropout; padded tail rows are discounted host-side).
+    pub fn evaluate(
+        &self,
+        model: &TrainedModel,
+        inputs: &SupernetInputs,
+        prune: &PruneMasks,
+        cfg: &TrainConfig,
+        split: Split,
+    ) -> Result<(f64, f64)> {
+        let qat_gate = if cfg.qat { 1.0 } else { 0.0 };
+        let ehp = [inputs.bn_gate, qat_gate, cfg.bits as f32];
+        let p = &model.params;
+        let mut correct = 0usize;
+        let mut loss_sum = 0.0f64;
+        let mut rows_total = 0usize;
+        for tile in self.ds.eval_tiles(split, EVAL_BATCH) {
+            let out = self.rt.run(
+                "eval_step",
+                &[
+                    arg("w0", &p.w0),
+                    arg("wh", &p.wh),
+                    arg("b", &p.b),
+                    arg("gamma", &p.gamma),
+                    arg("beta", &p.beta),
+                    arg("wo", &p.wo),
+                    arg("bo", &p.bo),
+                    arg("unit", &inputs.unit),
+                    arg("p0", &prune.p0),
+                    arg("ph", &prune.ph),
+                    arg("po", &prune.po),
+                    arg("gates", &inputs.gates),
+                    arg("act_sel", &inputs.act_sel),
+                    arg("ehp", &ehp),
+                    arg("run_mean", &model.run_mean),
+                    arg("run_var", &model.run_var),
+                    arg("x", &tile.x),
+                    arg("y1h", &tile.y1h),
+                ],
+            )?;
+            let logits = &out[2];
+            for r in 0..tile.rows {
+                let row = &logits[r * OUT_DIM..(r + 1) * OUT_DIM];
+                let pred = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.total_cmp(b.1))
+                    .map(|(i, _)| i)
+                    .unwrap();
+                let label = tile.y1h[r * OUT_DIM..(r + 1) * OUT_DIM]
+                    .iter()
+                    .position(|&v| v == 1.0)
+                    .unwrap();
+                if pred == label {
+                    correct += 1;
+                }
+                // numerically-stable CE from logits (host side, f64)
+                let max = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v)) as f64;
+                let lse = max
+                    + row
+                        .iter()
+                        .map(|&v| ((v as f64) - max).exp())
+                        .sum::<f64>()
+                        .ln();
+                loss_sum += lse - row[label] as f64;
+            }
+            rows_total += tile.rows;
+        }
+        Ok((
+            correct as f64 / rows_total.max(1) as f64,
+            loss_sum / rows_total.max(1) as f64,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::SearchSpace;
+    use std::path::Path;
+
+    fn art_dir() -> std::path::PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    /// One shared end-to-end integration test (runtime compiles are slow on
+    /// this box, so a single test covers train → eval → prune-resume).
+    #[test]
+    fn trains_evaluates_and_resumes_end_to_end() {
+        if !art_dir().join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = Runtime::load(&art_dir()).unwrap();
+        let ds = Dataset::generate(1280, 256, 256, 11);
+        let space = SearchSpace::table1();
+        let genome = space.baseline();
+        let inputs = SupernetInputs::compile(&genome, &space);
+        let prune = PruneMasks::ones();
+        let trainer = Trainer::new(&rt, &ds);
+        let cfg = TrainConfig {
+            epochs: 3,
+            ..Default::default()
+        };
+        let mut rng = Rng::new(0);
+        let mut model = trainer.init_model(&mut rng);
+        trainer
+            .train(&mut model, &inputs, &prune, &cfg, &mut rng)
+            .unwrap();
+        assert_eq!(model.history.len(), 3);
+        let first = model.history.first().unwrap().loss;
+        let last = model.history.last().unwrap().loss;
+        assert!(last < first, "loss should fall: {first} → {last}");
+        assert!(
+            last < 1.55,
+            "3 epochs should beat the 5-class random loss 1.609, got {last}"
+        );
+
+        // eval mode beats chance on held-out data
+        let (acc, loss) = trainer
+            .evaluate(&model, &inputs, &prune, &cfg, Split::Test)
+            .unwrap();
+        assert!(acc > 0.30, "test accuracy {acc} should beat 0.2 chance");
+        assert!(loss < 1.6, "test loss {loss}");
+
+        // prune 20% and resume with QAT — the IMP inner loop
+        let mut masks = PruneMasks::ones();
+        masks.prune_step(&model.params, &inputs, 0.2);
+        let qat_cfg = TrainConfig {
+            epochs: 1,
+            qat: true,
+            bits: 8,
+            ..Default::default()
+        };
+        trainer
+            .train(&mut model, &inputs, &masks, &qat_cfg, &mut rng)
+            .unwrap();
+        // pruned coordinates stay exactly zero through resumed training
+        for (w, m) in model.params.w0.iter().zip(&masks.p0) {
+            if *m == 0.0 {
+                assert_eq!(*w, 0.0);
+            }
+        }
+        let (acc_q, _) = trainer
+            .evaluate(&model, &inputs, &masks, &qat_cfg, Split::Test)
+            .unwrap();
+        assert!(acc_q > 0.30, "pruned+QAT accuracy {acc_q}");
+    }
+}

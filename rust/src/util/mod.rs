@@ -1,0 +1,13 @@
+//! Small shared utilities: deterministic RNG and streaming statistics.
+//!
+//! The whole reproduction is seeded end-to-end; we use our own SplitMix64 /
+//! xoshiro256** instead of an external crate so that every published number
+//! is bit-reproducible from a single `u64` seed across platforms.
+
+pub mod json;
+mod rng;
+mod stats;
+
+pub use json::Json;
+pub use rng::Rng;
+pub use stats::OnlineStats;

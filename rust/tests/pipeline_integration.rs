@@ -1,0 +1,91 @@
+//! Full-system integration: the complete SNAC-Pack pipeline at micro scale.
+//!
+//! Exercises every layer together — PJRT runtime, supernet trainer,
+//! surrogate (train + predict), NSGA-II searches with both objective sets,
+//! §4 selection, local search, synthesis simulator, and the report layer —
+//! and asserts the structural invariants of the outputs.
+
+use snac_pack::config::Preset;
+use snac_pack::coordinator::{run_pipeline, TrialRecord};
+use snac_pack::nn::SearchSpace;
+use snac_pack::runtime::Runtime;
+
+fn artifacts() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[test]
+fn micro_pipeline_end_to_end() {
+    if !artifacts().join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let rt = Runtime::load(&artifacts()).unwrap();
+    let mut preset = Preset::by_name("quickstart").unwrap();
+    // micro budget: exercise everything, spend seconds not minutes
+    preset.set("trials", "6").unwrap();
+    preset.set("population", "3").unwrap();
+    preset.set("epochs", "1").unwrap();
+    preset.set("n_train", "640").unwrap();
+    preset.set("n_val", "256").unwrap();
+    preset.set("n_test", "256").unwrap();
+    preset.set("surrogate_size", "512").unwrap();
+    preset.set("surrogate_epochs", "20").unwrap();
+    preset.set("imp_iterations", "3").unwrap();
+    preset.set("imp_epochs", "1").unwrap();
+    preset.set("warmup_epochs", "1").unwrap();
+    let out = std::env::temp_dir().join("snac_pipeline_itest");
+    let _ = std::fs::remove_dir_all(&out);
+    let summary = run_pipeline(&rt, &preset, &out).unwrap();
+
+    // --- three processed models in paper order ---
+    assert_eq!(summary.models.len(), 3);
+    assert_eq!(summary.models[0].name, "Baseline [12]");
+    assert_eq!(summary.models[1].name, "Optimal NAC");
+    assert_eq!(summary.models[2].name, "Optimal SNAC-Pack");
+    for m in &summary.models {
+        assert!(m.final_accuracy > 0.2, "{}: beats chance", m.name);
+        assert!(
+            (m.sparsity - 0.5).abs() < 0.2,
+            "{}: deployment point near 50% ({})",
+            m.name,
+            m.sparsity
+        );
+        assert!(m.synth.lut > 0 && m.synth.latency_cc > 0);
+        assert_eq!(m.synth.ii_cc, 1, "RF=1 pipeline");
+    }
+    // baseline keeps its softmax head (4 BRAM) per the legacy [12] config
+    assert!(summary.models[0].synth.bram36 >= 4);
+
+    // --- trial databases: saved, loadable, SNAC rows carry estimates ---
+    let space = SearchSpace::table1();
+    let nac = TrialRecord::load_all(&out.join("trials_nac.json"), &space).unwrap();
+    let snac = TrialRecord::load_all(&out.join("trials_snac.json"), &space).unwrap();
+    assert_eq!(nac.len(), 6);
+    assert_eq!(snac.len(), 6);
+    assert!(nac.iter().all(|r| r.est_avg_resources.is_none()));
+    assert!(snac.iter().all(|r| r.est_avg_resources.is_some()
+        && r.est_clock_cycles.is_some()
+        && r.objectives.len() == 3));
+
+    // --- reports on disk ---
+    for file in [
+        "table2.md",
+        "table3.md",
+        "figures.txt",
+        "fig1.csv",
+        "fig2.csv",
+        "fig3.csv",
+        "fig4.csv",
+        "fig1.txt",
+        "fig4.txt",
+    ] {
+        assert!(out.join(file).exists(), "{file} missing");
+    }
+    assert!(summary.table2.contains("Optimal SNAC-Pack"));
+    assert!(summary.table3.contains("| Baseline [12] |"));
+
+    // figure CSVs have one row per trial (+header)
+    let fig4 = std::fs::read_to_string(out.join("fig4.csv")).unwrap();
+    assert_eq!(fig4.lines().count(), 1 + 6);
+}
