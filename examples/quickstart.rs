@@ -52,6 +52,7 @@ fn main() -> Result<()> {
             trials: preset.search.trials,
             epochs: preset.search.epochs,
             seed: preset.seed,
+            workers: preset.search.workers,
             accuracy_threshold: 0.0,
             progress: Some(Box::new(|i, n, r| {
                 println!("  trial {i:>2}/{n}: {:<28} acc={:.4}", r.label, r.accuracy);

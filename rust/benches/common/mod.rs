@@ -1,6 +1,9 @@
 //! Minimal bench harness (criterion is unavailable offline — see
 //! Cargo.toml): warmup + timed iterations with mean/min/p50 reporting.
 
+// each bench target compiles this module separately and uses a subset
+#![allow(dead_code)]
+
 use std::time::Instant;
 
 /// Time `f` for `iters` iterations after `warmup` untimed runs, printing a

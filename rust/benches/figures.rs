@@ -62,6 +62,7 @@ fn main() -> anyhow::Result<()> {
                     trials: preset.search.trials,
                     epochs: preset.search.epochs,
                     seed: preset.seed,
+                    workers: preset.search.workers,
                     accuracy_threshold: 0.0,
                     progress: None,
                 },

@@ -1,0 +1,156 @@
+//! Bench: global-search trial throughput vs evaluation worker count.
+//!
+//! Drives the real search machinery — NSGA-II, the generation scheduler,
+//! the genome-keyed evaluation cache — through `global_search_with` with a
+//! simulated trial evaluator whose cost is CPU-bound work in the HLS
+//! synthesis simulator (no runtime artifacts required, so this runs
+//! anywhere and stays comparable across PRs). Verifies that every worker
+//! count produces the identical trial stream, then reports trials/sec at
+//! `workers ∈ {1, 2, 4}` and writes `BENCH_search.json` for the perf
+//! trajectory.
+//!
+//! Runs with `progress: None` (whole-generation batches); production runs
+//! attach a progress sink, which dispatches in worker-sized chunks for
+//! liveness — so these numbers are an upper bound on pipeline throughput.
+
+mod common;
+
+use std::time::Instant;
+
+use snac_pack::coordinator::{global_search_with, SearchLoopConfig, SearchOutcome};
+use snac_pack::eval::{ParallelEvaluator, TrialEvaluation, TrialEvaluator};
+use snac_pack::hls::{synthesize, FpgaDevice, HlsConfig, NetworkSpec};
+use snac_pack::nn::{Genome, SearchSpace};
+use snac_pack::search::Nsga2Config;
+use snac_pack::util::{Json, Rng};
+
+const TRIALS: usize = 48;
+const POPULATION: usize = 8;
+const SEED: u64 = 17;
+/// Simulator passes per trial — sized so one trial costs milliseconds,
+/// like a (very) small training run, dwarfing scheduling overhead.
+const SIM_PASSES: usize = 300;
+
+/// Stand-in for the train-and-score path: deterministic accuracy with a
+/// real size/accuracy trade-off, priced by a CPU-bound simulator loop.
+struct SimulatedTrainer {
+    space: SearchSpace,
+    hls: HlsConfig,
+    device: FpgaDevice,
+}
+
+impl TrialEvaluator for SimulatedTrainer {
+    fn evaluate(&self, genome: &Genome, rng: &mut Rng) -> anyhow::Result<TrialEvaluation> {
+        let t0 = Instant::now();
+        let mut lut_sum = 0u64;
+        for pass in 0..SIM_PASSES {
+            let sparsity = (pass % 8) as f64 / 16.0;
+            let spec = NetworkSpec::from_genome(genome, &self.space, 8, sparsity);
+            lut_sum += std::hint::black_box(synthesize(&spec, &self.hls, &self.device)).lut;
+        }
+        std::hint::black_box(lut_sum);
+        let weights = genome.num_weights(&self.space) as f64;
+        let accuracy = (1.0 - (-weights / 4000.0).exp()) * (0.9 + 0.1 * rng.uniform());
+        Ok(TrialEvaluation {
+            accuracy,
+            bops: weights,
+            est_avg_resources: None,
+            est_clock_cycles: None,
+            objectives: vec![-accuracy, weights],
+            train_seconds: t0.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+fn run(workers: usize) -> (SearchOutcome, f64, usize, usize) {
+    let space = SearchSpace::table1();
+    let pool = ParallelEvaluator::new(
+        SimulatedTrainer {
+            space: space.clone(),
+            hls: HlsConfig::default(),
+            device: FpgaDevice::vu13p(),
+        },
+        workers,
+    );
+    let t0 = Instant::now();
+    let outcome = global_search_with(
+        &pool,
+        &space,
+        SearchLoopConfig {
+            nsga2: Nsga2Config {
+                population: POPULATION,
+                ..Default::default()
+            },
+            trials: TRIALS,
+            seed: SEED,
+            accuracy_threshold: 0.0,
+            progress: None,
+        },
+    )
+    .expect("simulated search");
+    let secs = t0.elapsed().as_secs_f64();
+    (outcome, secs, pool.evaluations(), pool.cache_hits())
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("== SNAC-Pack search-throughput bench ==");
+    println!(
+        "budget: {TRIALS} trials, population {POPULATION}, {SIM_PASSES} simulator passes/trial"
+    );
+
+    let mut results = Vec::new();
+    let mut serial_genomes: Option<Vec<Genome>> = None;
+    let mut serial_secs = 0.0f64;
+    for workers in [1usize, 2, 4] {
+        // warm-up + best-of-3, matching the in-repo harness style
+        run(workers);
+        let mut samples: Vec<(SearchOutcome, f64, usize, usize)> =
+            (0..3).map(|_| run(workers)).collect();
+        samples.sort_by(|a, b| a.1.total_cmp(&b.1));
+        let (outcome, secs, evaluations, cache_hits) = samples.remove(0);
+        let genomes: Vec<Genome> = outcome.records.iter().map(|r| r.genome.clone()).collect();
+        match &serial_genomes {
+            None => {
+                serial_genomes = Some(genomes);
+                serial_secs = secs;
+            }
+            Some(expected) => assert_eq!(
+                expected, &genomes,
+                "worker count must not change the trial stream"
+            ),
+        }
+        let tps = TRIALS as f64 / secs;
+        let speedup = serial_secs / secs;
+        println!(
+            "bench search/workers_{workers:<2} {:>10}  {tps:>7.1} trials/s  \
+             speedup {speedup:>5.2}x  ({evaluations} trained, {cache_hits} cache hits)",
+            common::fmt(secs)
+        );
+        results.push(Json::obj(vec![
+            ("workers", Json::Num(workers as f64)),
+            ("seconds", Json::Num(secs)),
+            ("trials_per_sec", Json::Num(tps)),
+            ("speedup_vs_serial", Json::Num(speedup)),
+            ("evaluations", Json::Num(evaluations as f64)),
+            ("cache_hits", Json::Num(cache_hits as f64)),
+        ]));
+    }
+    println!("determinism: trial streams identical across worker counts");
+
+    let report = Json::obj(vec![
+        ("bench", Json::Str("search_throughput".to_string())),
+        (
+            "budget",
+            Json::obj(vec![
+                ("trials", Json::Num(TRIALS as f64)),
+                ("population", Json::Num(POPULATION as f64)),
+                ("sim_passes_per_trial", Json::Num(SIM_PASSES as f64)),
+                ("seed", Json::Num(SEED as f64)),
+            ]),
+        ),
+        ("results", Json::Arr(results)),
+    ]);
+    std::fs::write("BENCH_search.json", report.to_string())?;
+    println!("wrote BENCH_search.json");
+    Ok(())
+}

@@ -36,6 +36,10 @@ pub struct SearchBudget {
     pub population: usize,
     /// Training epochs per trial (paper: 5).
     pub epochs: usize,
+    /// Trial-evaluation workers (0 = all available parallelism). Genomes,
+    /// objectives, and selection are identical for every value; only the
+    /// recorded wall-clock timings change.
+    pub workers: usize,
 }
 
 /// A full experiment preset.
@@ -71,6 +75,7 @@ impl Preset {
                     trials: 500,
                     population: 20,
                     epochs: 5,
+                    workers: 0,
                 },
                 surrogate: SurrogateTrainConfig::default(),
                 local: LocalSearchConfig::default(),
@@ -88,6 +93,7 @@ impl Preset {
                     trials: 64,
                     population: 16,
                     epochs: 5,
+                    workers: 0,
                 },
                 surrogate: SurrogateTrainConfig::default(),
                 local: LocalSearchConfig {
@@ -110,6 +116,7 @@ impl Preset {
                     trials: 12,
                     population: 6,
                     epochs: 2,
+                    workers: 0,
                 },
                 surrogate: SurrogateTrainConfig {
                     dataset_size: 1024,
@@ -143,6 +150,7 @@ impl Preset {
             "trials" => self.search.trials = uint()?,
             "population" => self.search.population = uint()?,
             "epochs" => self.search.epochs = uint()?,
+            "workers" => self.search.workers = uint()?,
             "n_train" => self.data.n_train = uint()?,
             "n_val" => self.data.n_val = uint()?,
             "n_test" => self.data.n_test = uint()?,
@@ -191,8 +199,10 @@ mod tests {
         let mut p = Preset::by_name("ci").unwrap();
         p.set("trials", "99").unwrap();
         p.set("target_sparsity", "0.7").unwrap();
+        p.set("workers", "4").unwrap();
         assert_eq!(p.search.trials, 99);
         assert_eq!(p.local.target_sparsity, 0.7);
+        assert_eq!(p.search.workers, 4);
         assert!(p.set("bogus", "1").is_err());
     }
 }

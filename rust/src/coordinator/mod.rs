@@ -1,12 +1,13 @@
 //! The coordination layer — SNAC-Pack's system contribution.
 //!
 //! `global_search` drives NSGA-II generations: every candidate genome is
-//! compiled to supernet inputs, trained for a few epochs against the AOT
-//! `train_step` artifact, scored on the validation split, priced by the
-//! configured objective set (BOPs for NAC, surrogate estimates for
-//! SNAC-Pack), and fed back to the evolutionary engine. A trial database
-//! records every evaluation for the report layer (Figures 1–4) and can be
-//! checkpointed to JSON.
+//! handed to the [`crate::eval`] subsystem (train against the AOT
+//! `train_step` artifact, score on the validation split, price with the
+//! configured objective set — BOPs for NAC, surrogate estimates for
+//! SNAC-Pack), concurrently across a configurable worker pool with
+//! genome-keyed memoisation, and the objective vectors are fed back to
+//! the evolutionary engine. A trial database records every evaluation for
+//! the report layer (Figures 1–4) and can be checkpointed to JSON.
 //!
 //! `pipeline` (in `main.rs`) composes the full paper flow:
 //! surrogate training → global search (×2 objective sets) → §4 selection →
@@ -17,5 +18,7 @@ pub mod search_loop;
 pub mod trial_db;
 
 pub use pipeline::{run_pipeline, PipelineSummary, ProcessedModel};
-pub use search_loop::{global_search, GlobalSearchConfig, SearchOutcome};
+pub use search_loop::{
+    global_search, global_search_with, GlobalSearchConfig, SearchLoopConfig, SearchOutcome,
+};
 pub use trial_db::TrialRecord;

@@ -9,6 +9,11 @@
 //! 6. local search (warm-up + IMP + QAT) on baseline and both winners;
 //! 7. synthesis via the HLS simulator;
 //! 8. emit Tables 2–3, Figures 1–4, and the trial databases.
+//!
+//! Every candidate evaluation — the baseline's trial-protocol training,
+//! both global searches, and the three independent local-search + synthesis
+//! stages — goes through the [`crate::eval`] subsystem, so one
+//! `--workers` knob controls the pipeline's parallelism end to end.
 
 use std::path::Path;
 use std::time::Instant;
@@ -20,12 +25,11 @@ use super::trial_db::TrialRecord;
 use crate::compress::{local_search, synthesis_nnz, LocalSearchResult};
 use crate::config::Preset;
 use crate::data::{Dataset, Split};
+use crate::eval::{parallel_map, resolve_workers, SupernetEvaluator, TrialEvaluator};
 use crate::hls::{synthesize, FpgaDevice, HlsConfig, NetworkSpec, SynthReport};
 use crate::nn::{bops, Genome, SearchSpace, SupernetInputs};
 use crate::objectives::{ObjectiveContext, ObjectiveKind};
-use crate::report::{
-    render_table2, render_table3, write_figures, Table2Row, Table3Row,
-};
+use crate::report::{render_table2, render_table3, write_figures, Table2Row, Table3Row};
 use crate::runtime::Runtime;
 use crate::surrogate::{train_surrogate, SurrogatePredictor};
 use crate::trainer::{TrainConfig, Trainer};
@@ -86,6 +90,8 @@ pub fn run_pipeline(rt: &Runtime, preset: &Preset, out_dir: &Path) -> Result<Pip
     let space = SearchSpace::table1();
     let device = FpgaDevice::vu13p();
     let hls = HlsConfig::default();
+    let workers = resolve_workers(preset.search.workers);
+    eprintln!("[pipeline] evaluation workers: {workers}");
     let ds = timed(&mut timings, "dataset", || {
         Ok(Dataset::generate(
             preset.data.n_train,
@@ -103,23 +109,31 @@ pub fn run_pipeline(rt: &Runtime, preset: &Preset, out_dir: &Path) -> Result<Pip
     eprintln!("[pipeline] surrogate final MSE (compressed space): {sur_mse:.5}");
     let surrogate = SurrogatePredictor::new(rt, sur_params);
 
-    // ---- baseline (trial protocol) ----
+    // ---- baseline (trial protocol, via the shared evaluator) ----
     let baseline_genome = space.baseline();
-    let (baseline_model, baseline_inputs, baseline_acc) =
-        timed(&mut timings, "baseline-train", || {
-            let inputs = SupernetInputs::compile(&baseline_genome, &space);
-            let cfg = TrainConfig {
+    let baseline_acc = timed(&mut timings, "baseline-train", || {
+        let objectives = ObjectiveKind::nac_set();
+        let ctx = ObjectiveContext {
+            space: &space,
+            device: &device,
+            surrogate: None,
+            bits: preset.local.bits,
+            sparsity: preset.local.target_sparsity,
+        };
+        let evaluator = SupernetEvaluator::new(
+            rt,
+            &ds,
+            &space,
+            &objectives,
+            &ctx,
+            TrainConfig {
                 epochs: preset.search.epochs,
                 ..Default::default()
-            };
-            let mut rng = Rng::new(preset.seed ^ 0xba5e_11);
-            let mut model = trainer.init_model(&mut rng);
-            let prune = crate::nn::PruneMasks::ones();
-            trainer.train(&mut model, &inputs, &prune, &cfg, &mut rng)?;
-            let (acc, _) = trainer.evaluate(&model, &inputs, &prune, &cfg, Split::Val)?;
-            Ok((model, inputs, acc))
-        })?;
-    let _ = (&baseline_model, &baseline_inputs);
+            },
+        );
+        let mut rng = Rng::new(preset.seed ^ 0xba5e_11);
+        Ok(evaluator.evaluate(&baseline_genome, &mut rng)?.accuracy)
+    })?;
     eprintln!("[pipeline] baseline val accuracy: {baseline_acc:.4}");
     // §4: "accuracy value selected to ensure it meets or exceeds the baseline"
     let threshold = baseline_acc;
@@ -148,6 +162,7 @@ pub fn run_pipeline(rt: &Runtime, preset: &Preset, out_dir: &Path) -> Result<Pip
                     trials: preset.search.trials,
                     epochs: preset.search.epochs,
                     seed: preset.seed,
+                    workers,
                     accuracy_threshold: threshold,
                     progress: Some(Box::new({
                         let stage = stage.to_string();
@@ -198,15 +213,20 @@ pub fn run_pipeline(rt: &Runtime, preset: &Preset, out_dir: &Path) -> Result<Pip
     );
 
     // ---- local search + synthesis for all three ----
-    let mut models = Vec::new();
+    // The three models are independent, so they fan out through the same
+    // worker pool as trial evaluation; per-entry RNGs are seeded exactly
+    // as the serial flow seeded them, so results are schedule-invariant.
     let entries: [(&str, &Genome, f64, Option<(f64, f64)>, bool); 3] = [
         ("Baseline [12]", &baseline_genome, baseline_acc, None, true),
         ("Optimal NAC", &nac_genome, nac_acc, None, false),
         ("Optimal SNAC-Pack", &snac_genome, snac_acc, snac_est, false),
     ];
-    for (name, genome, search_acc, est, softmax_head) in entries {
-        let stage = format!("local+synth {name}");
-        let processed = timed(&mut timings, &stage, || {
+    let t_local = Instant::now();
+    let processed = parallel_map(
+        workers,
+        Vec::from(entries),
+        |_, (name, genome, search_acc, est, softmax_head)| -> Result<(ProcessedModel, f64)> {
+            let t0 = Instant::now();
             let mut rng = Rng::new(preset.seed ^ 0x10ca1);
             let ls: LocalSearchResult =
                 local_search(&trainer, genome, &space, &preset.local, &mut rng)?;
@@ -232,22 +252,35 @@ pub fn run_pipeline(rt: &Runtime, preset: &Preset, out_dir: &Path) -> Result<Pip
             // the legacy [12] baseline synthesis also kept BN unfused
             spec.fuse_batch_norm = !softmax_head;
             let synth = synthesize(&spec, &hls, &device);
-            Ok(ProcessedModel {
-                name: name.to_string(),
-                genome: genome.clone(),
-                search_accuracy: search_acc,
-                est,
-                final_accuracy: test_acc,
-                sparsity: ls.history[ls.selected].sparsity,
-                synth,
-            })
-        })?;
+            Ok((
+                ProcessedModel {
+                    name: name.to_string(),
+                    genome: genome.clone(),
+                    search_accuracy: search_acc,
+                    est,
+                    final_accuracy: test_acc,
+                    sparsity: ls.history[ls.selected].sparsity,
+                    synth,
+                },
+                t0.elapsed().as_secs_f64(),
+            ))
+        },
+    );
+    // one summable wall-clock entry for the fan-out (the stages overlap,
+    // so per-model durations go to the log, not to `timings`)
+    let local_secs = t_local.elapsed().as_secs_f64();
+    let mut models = Vec::new();
+    for result in processed {
+        let (model, secs) = result?;
+        eprintln!("[pipeline] local+synth {}: {secs:.1}s in-stage", model.name);
         eprintln!(
-            "[pipeline] {name}: test acc {:.4}, sparsity {:.2}, LUT {}",
-            processed.final_accuracy, processed.sparsity, processed.synth.lut
+            "[pipeline] {}: test acc {:.4}, sparsity {:.2}, LUT {}",
+            model.name, model.final_accuracy, model.sparsity, model.synth.lut
         );
-        models.push(processed);
+        models.push(model);
     }
+    eprintln!("[pipeline] local+synth (all models): {local_secs:.1}s");
+    timings.push(("local+synth (all models)".to_string(), local_secs));
 
     // ---- tables ----
     let assumed_sparsity = preset.local.target_sparsity;

@@ -1,17 +1,26 @@
-//! The global-search loop: NSGA-II generations over trained candidates.
+//! The global-search loop: NSGA-II generations over evaluated candidates.
+//!
+//! Candidate scoring lives in [`crate::eval`]; this module owns the
+//! generational control flow — fork per-trial RNG streams in trial-id
+//! order, hand whole generations to the evaluation pool, commit results in
+//! trial-id order, and feed the objective vectors back to NSGA-II. The
+//! trial database is therefore identical for every worker count under a
+//! fixed seed, in everything except the recorded wall-clock timings
+//! (`train_seconds` is live measurement and varies run to run).
 
 use std::time::Instant;
 
 use anyhow::Result;
 
 use super::trial_db::TrialRecord;
-use crate::data::{Dataset, Split};
-use crate::nn::{bops, PruneMasks, SearchSpace, SupernetInputs};
+use crate::data::Dataset;
+use crate::eval::{EvalRequest, ParallelEvaluator, SupernetEvaluator, TrialEvaluator};
+use crate::nn::SearchSpace;
 use crate::objectives::{ObjectiveContext, ObjectiveKind};
 use crate::pareto;
 use crate::runtime::Runtime;
 use crate::search::{EvaluatedIndividual, Nsga2, Nsga2Config};
-use crate::trainer::{TrainConfig, Trainer};
+use crate::trainer::TrainConfig;
 use crate::util::Rng;
 
 /// Global-search configuration.
@@ -28,10 +37,29 @@ pub struct GlobalSearchConfig<'a> {
     pub epochs: usize,
     /// Master seed.
     pub seed: u64,
+    /// Evaluation workers (0 = all available parallelism). Genomes,
+    /// objectives, and selection are identical for every value; only the
+    /// recorded wall-clock timings change.
+    pub workers: usize,
     /// §4 selection: accuracy threshold for picking off the front
     /// (the paper uses 0.638 ≈ the baseline's accuracy).
     pub accuracy_threshold: f64,
     /// Progress sink (trial id, total, record) — e.g. a log line.
+    pub progress: Option<Box<dyn FnMut(usize, usize, &TrialRecord)>>,
+}
+
+/// The evaluator-independent slice of the search configuration, used by
+/// [`global_search_with`] to drive any [`TrialEvaluator`].
+pub struct SearchLoopConfig {
+    /// NSGA-II parameters.
+    pub nsga2: Nsga2Config,
+    /// Total trials (candidate evaluations).
+    pub trials: usize,
+    /// Master seed.
+    pub seed: u64,
+    /// §4 selection threshold (objective slot 0 must be negated accuracy).
+    pub accuracy_threshold: f64,
+    /// Progress sink (trial id, total, record).
     pub progress: Option<Box<dyn FnMut(usize, usize, &TrialRecord)>>,
 }
 
@@ -47,58 +75,128 @@ pub struct SearchOutcome {
     pub wall_seconds: f64,
 }
 
-/// Run the paper's global search stage.
+/// Run the paper's global search stage: train-and-score evaluation over
+/// the supernet runtime, parallelised and memoised per
+/// [`crate::eval::ParallelEvaluator`].
 pub fn global_search(
     rt: &Runtime,
     ds: &Dataset,
     space: &SearchSpace,
-    mut cfg: GlobalSearchConfig<'_>,
+    cfg: GlobalSearchConfig<'_>,
+) -> Result<SearchOutcome> {
+    let GlobalSearchConfig {
+        objectives,
+        ctx,
+        nsga2,
+        trials,
+        epochs,
+        seed,
+        workers,
+        accuracy_threshold,
+        progress,
+    } = cfg;
+    // objective slot 0 is always (negated) accuracy by construction
+    debug_assert_eq!(objectives[0], ObjectiveKind::Accuracy);
+    let train = TrainConfig {
+        epochs,
+        ..Default::default()
+    };
+    let evaluator = SupernetEvaluator::new(rt, ds, space, &objectives, &ctx, train);
+    let pool = ParallelEvaluator::new(evaluator, workers);
+    global_search_with(
+        &pool,
+        space,
+        SearchLoopConfig {
+            nsga2,
+            trials,
+            seed,
+            accuracy_threshold,
+            progress,
+        },
+    )
+}
+
+/// Drive the NSGA-II loop over any evaluation pool. Exposed so tests and
+/// benches can exercise the search machinery with synthetic evaluators
+/// (no runtime artifacts required).
+pub fn global_search_with<E: TrialEvaluator>(
+    pool: &ParallelEvaluator<E>,
+    space: &SearchSpace,
+    mut cfg: SearchLoopConfig,
 ) -> Result<SearchOutcome> {
     let start = Instant::now();
     let mut rng = Rng::new(cfg.seed);
     let mut engine = Nsga2::new(space.clone(), cfg.nsga2.clone());
-    let trainer = Trainer::new(rt, ds);
-    let prune = PruneMasks::ones(); // global search trains dense models
     let mut records: Vec<TrialRecord> = Vec::with_capacity(cfg.trials);
     let mut population = engine.initial_population(&mut rng);
     let mut generation = 0usize;
 
     while records.len() < cfg.trials {
-        let mut evaluated = Vec::with_capacity(population.len());
-        for genome in population.drain(..) {
-            if records.len() >= cfg.trials {
+        // Fork every trial's RNG serially, in trial-id order, from the
+        // master stream — the exact per-trial streams the serial loop
+        // produced — then let the pool schedule freely.
+        let take = population.len().min(cfg.trials - records.len());
+        let base_id = records.len();
+        let requests: Vec<EvalRequest> = population
+            .drain(..)
+            .take(take)
+            .enumerate()
+            .map(|(k, genome)| EvalRequest {
+                trial_id: base_id + k,
+                rng: rng.fork((base_id + k) as u64),
+                genome,
+            })
+            .collect();
+        // With a progress sink attached, feed the pool ~one worker-load at
+        // a time so progress streams during the generation instead of
+        // flushing at its end. The chunk boundary is a barrier, so heavy
+        // per-trial cost skew idles workers there — liveness is bought
+        // with a little utilisation (streaming commits would need a Send
+        // progress sink; see ROADMAP). Results are chunking-invariant:
+        // RNG forks already happened above, chunks preserve trial order,
+        // and a duplicate genome in a later chunk hits the cache with
+        // exactly the evaluation its first occurrence produced.
+        let chunk_size = if cfg.progress.is_some() {
+            pool.workers().max(1)
+        } else {
+            take.max(1)
+        };
+        let mut evaluated = Vec::with_capacity(take);
+        let mut queued = requests.into_iter();
+        loop {
+            let chunk: Vec<EvalRequest> = queued.by_ref().take(chunk_size).collect();
+            if chunk.is_empty() {
                 break;
             }
-            let t0 = Instant::now();
-            let inputs = SupernetInputs::compile(&genome, space);
-            let train_cfg = TrainConfig {
-                epochs: cfg.epochs,
-                ..Default::default()
-            };
-            let mut trial_rng = rng.fork(records.len() as u64);
-            let mut model = trainer.init_model(&mut trial_rng);
-            trainer.train(&mut model, &inputs, &prune, &train_cfg, &mut trial_rng)?;
-            let (accuracy, _val_loss) =
-                trainer.evaluate(&model, &inputs, &prune, &train_cfg, Split::Val)?;
-            let (objectives, est_pair) =
-                cfg.ctx.evaluate(&cfg.objectives, &genome, accuracy)?;
-            let record = TrialRecord {
-                id: records.len(),
-                generation,
-                label: genome.label(space),
-                accuracy,
-                bops: bops::genome_bops(&genome, space, cfg.ctx.bits, cfg.ctx.bits, cfg.ctx.sparsity),
-                est_avg_resources: est_pair.map(|p| p.0),
-                est_clock_cycles: est_pair.map(|p| p.1),
-                objectives: objectives.clone(),
-                train_seconds: t0.elapsed().as_secs_f64(),
-                genome: genome.clone(),
-            };
-            if let Some(progress) = cfg.progress.as_mut() {
-                progress(record.id + 1, cfg.trials, &record);
+            for trial in pool.evaluate_batch(chunk)? {
+                let record = TrialRecord {
+                    id: trial.trial_id,
+                    generation,
+                    label: trial.genome.label(space),
+                    accuracy: trial.evaluation.accuracy,
+                    bops: trial.evaluation.bops,
+                    est_avg_resources: trial.evaluation.est_avg_resources,
+                    est_clock_cycles: trial.evaluation.est_clock_cycles,
+                    objectives: trial.evaluation.objectives.clone(),
+                    // cache hits cost (essentially) nothing; recording zero
+                    // keeps the trial database worker-count-invariant in
+                    // everything but live timing
+                    train_seconds: if trial.cached {
+                        0.0
+                    } else {
+                        trial.evaluation.train_seconds
+                    },
+                    genome: trial.genome.clone(),
+                };
+                if let Some(progress) = cfg.progress.as_mut() {
+                    progress(record.id + 1, cfg.trials, &record);
+                }
+                records.push(record);
+                evaluated.push(EvaluatedIndividual {
+                    genome: trial.genome,
+                    objectives: trial.evaluation.objectives,
+                });
             }
-            records.push(record);
-            evaluated.push(EvaluatedIndividual { genome, objectives });
         }
         population = engine.next_generation(evaluated, &mut rng);
         generation += 1;
@@ -106,8 +204,6 @@ pub fn global_search(
 
     let points: Vec<Vec<f64>> = records.iter().map(|r| r.objectives.clone()).collect();
     let front = pareto::pareto_front(&points);
-    // objective slot 0 is always (negated) accuracy by construction
-    debug_assert_eq!(cfg.objectives[0], ObjectiveKind::Accuracy);
     let selected = pareto::select_above_accuracy(&points, 0, cfg.accuracy_threshold);
     Ok(SearchOutcome {
         records,
@@ -120,10 +216,151 @@ pub fn global_search(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::eval::TrialEvaluation;
     use crate::hls::FpgaDevice;
+    use crate::nn::Genome;
+    use crate::util::Json;
+
+    /// Synthetic evaluator with a real accuracy/size trade-off; accuracy
+    /// mixes in the trial RNG so the tests pin the fork-per-trial-id
+    /// discipline end to end.
+    struct ToyEvaluator {
+        space: SearchSpace,
+    }
+
+    impl TrialEvaluator for ToyEvaluator {
+        fn evaluate(&self, genome: &Genome, rng: &mut Rng) -> Result<TrialEvaluation> {
+            let weights = genome.num_weights(&self.space) as f64;
+            let accuracy = (1.0 - (-weights / 4000.0).exp()) * (0.95 + 0.05 * rng.uniform());
+            Ok(TrialEvaluation {
+                accuracy,
+                bops: weights,
+                est_avg_resources: None,
+                est_clock_cycles: None,
+                objectives: vec![-accuracy, weights],
+                train_seconds: 0.001,
+            })
+        }
+    }
+
+    fn toy_outcome(workers: usize, trials: usize, seed: u64) -> SearchOutcome {
+        let space = SearchSpace::table1();
+        let pool = ParallelEvaluator::new(
+            ToyEvaluator {
+                space: space.clone(),
+            },
+            workers,
+        );
+        global_search_with(
+            &pool,
+            &space,
+            SearchLoopConfig {
+                nsga2: Nsga2Config {
+                    population: 6,
+                    ..Default::default()
+                },
+                trials,
+                seed,
+                accuracy_threshold: 0.0,
+                progress: None,
+            },
+        )
+        .unwrap()
+    }
+
+    /// Acceptance criterion: `workers=1` and `workers=N` produce
+    /// byte-identical trial databases under a fixed seed (modulo live
+    /// wall-clock timing, which we zero before serialising).
+    #[test]
+    fn parallel_and_serial_searches_are_byte_identical() {
+        let serial = toy_outcome(1, 30, 42);
+        let parallel = toy_outcome(4, 30, 42);
+        assert_eq!(serial.records.len(), 30);
+        let db = |outcome: &SearchOutcome| -> String {
+            let rows: Vec<Json> = outcome
+                .records
+                .iter()
+                .map(|r| {
+                    let mut r = r.clone();
+                    r.train_seconds = 0.0;
+                    r.to_json()
+                })
+                .collect();
+            Json::Arr(rows).to_string()
+        };
+        assert_eq!(db(&serial), db(&parallel), "trial databases must match");
+        assert_eq!(serial.front, parallel.front);
+        assert_eq!(serial.selected, parallel.selected);
+    }
+
+    /// Attaching a progress sink switches the driver to worker-sized
+    /// chunks for liveness; the trial stream must not change, and every
+    /// trial must be reported exactly once, in order.
+    #[test]
+    fn progress_chunking_does_not_change_results() {
+        use std::cell::RefCell;
+        use std::rc::Rc;
+        let space = SearchSpace::table1();
+        let pool = ParallelEvaluator::new(
+            ToyEvaluator {
+                space: space.clone(),
+            },
+            4,
+        );
+        let reported = Rc::new(RefCell::new(Vec::new()));
+        let sink = Rc::clone(&reported);
+        let chunked = global_search_with(
+            &pool,
+            &space,
+            SearchLoopConfig {
+                nsga2: Nsga2Config {
+                    population: 6,
+                    ..Default::default()
+                },
+                trials: 30,
+                seed: 42,
+                accuracy_threshold: 0.0,
+                progress: Some(Box::new(move |i, _, _| sink.borrow_mut().push(i))),
+            },
+        )
+        .unwrap();
+        let plain = toy_outcome(4, 30, 42);
+        let g1: Vec<_> = chunked.records.iter().map(|r| r.genome.clone()).collect();
+        let g2: Vec<_> = plain.records.iter().map(|r| r.genome.clone()).collect();
+        assert_eq!(g1, g2, "chunking must not change the trial stream");
+        assert_eq!(*reported.borrow(), (1..=30).collect::<Vec<usize>>());
+    }
+
+    /// The driver records every trial (cache hits included) and keeps ids
+    /// sequential and generations monotone.
+    #[test]
+    fn records_are_sequential_and_generations_monotone() {
+        let outcome = toy_outcome(3, 25, 9);
+        assert_eq!(outcome.records.len(), 25);
+        for (i, r) in outcome.records.iter().enumerate() {
+            assert_eq!(r.id, i);
+        }
+        for w in outcome.records.windows(2) {
+            assert!(w[1].generation >= w[0].generation);
+        }
+        // the front is actually non-dominated
+        let pts: Vec<Vec<f64>> = outcome
+            .records
+            .iter()
+            .map(|r| r.objectives.clone())
+            .collect();
+        for &a in &outcome.front {
+            for &b in &outcome.front {
+                assert!(!crate::pareto::dominates(&pts[a], &pts[b]));
+            }
+        }
+    }
 
     /// End-to-end NAC-objective search on a tiny budget (uses the real
     /// runtime + dataset; one test to amortise artifact compilation).
+    /// Runs the first search with a worker pool and the replay serially,
+    /// so the determinism assertion also pins worker-count invariance on
+    /// the real train-and-score path.
     #[test]
     fn tiny_global_search_end_to_end() {
         let art = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -151,6 +388,7 @@ mod tests {
             trials: 8,
             epochs: 1,
             seed: 42,
+            workers: 4,
             accuracy_threshold: 0.0,
             progress: None,
         };
@@ -172,7 +410,8 @@ mod tests {
                 assert!(!crate::pareto::dominates(&pts[a], &pts[b]));
             }
         }
-        // determinism: same seed → same trial genomes
+        // determinism: same seed → same trial genomes, even across worker
+        // counts (the replay runs serially)
         let cfg2 = GlobalSearchConfig {
             objectives: ObjectiveKind::nac_set(),
             ctx: ObjectiveContext {
@@ -189,6 +428,7 @@ mod tests {
             trials: 8,
             epochs: 1,
             seed: 42,
+            workers: 1,
             accuracy_threshold: 0.0,
             progress: None,
         };

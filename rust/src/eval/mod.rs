@@ -1,0 +1,93 @@
+//! The trial-evaluation subsystem: how candidate architectures get scored.
+//!
+//! The global-search loop used to train-and-score every NSGA-II candidate
+//! inline and strictly serially. This module factors that block into a
+//! reusable subsystem shared by both search stages, the CLI, and the
+//! benches:
+//!
+//! * [`TrialEvaluator`] — the interface: genome + per-trial RNG in,
+//!   [`TrialEvaluation`] (accuracy, BOPs, surrogate estimates, minimised
+//!   objective vector, timing) out.
+//! * [`SupernetEvaluator`] — the paper's train-and-score path, extracted
+//!   from the old `coordinator::search_loop` body: compile the genome to
+//!   supernet inputs, train for the trial budget, evaluate on the
+//!   validation split, price with the configured objective set.
+//! * [`ParallelEvaluator`] — a scoped-thread pool that evaluates a whole
+//!   generation concurrently with a configurable worker count, plus a
+//!   genome-keyed memoisation cache so a duplicate genome proposed across
+//!   generations is trained once and recorded per-trial.
+//!
+//! # Determinism
+//!
+//! Results are *identical for every worker count* (everything except the
+//! recorded wall-clock timings, which are live measurement). Three rules
+//! make that hold:
+//!
+//! 1. per-trial RNGs are forked from the master stream **serially, in
+//!    trial-id order**, before anything is dispatched (exactly the old
+//!    `rng.fork(records.len() as u64)` sequence);
+//! 2. within a batch, duplicate genomes are collapsed *before* dispatch —
+//!    a genome is always evaluated with the RNG of its **first** trial id,
+//!    regardless of scheduling;
+//! 3. results are committed in trial-id order.
+//!
+//! # Thread-safety
+//!
+//! Workers share one `&Runtime` (and its loaded executables) plus the
+//! surrogate predictor; per-trial state (model parameters, Adam moments,
+//! BN statistics) is created per evaluation, so nothing mutable is shared.
+//! PJRT clients are thread-safe for concurrent execution and the offline
+//! facade is plain data; if a future backend is not, load one `Runtime`
+//! per worker or run with `workers = 1` (see `rust/xla/README.md`).
+
+mod parallel;
+mod supernet;
+
+use anyhow::Result;
+
+use crate::nn::Genome;
+use crate::util::Rng;
+
+pub use parallel::{parallel_map, resolve_workers, EvaluatedTrial, ParallelEvaluator};
+pub use supernet::SupernetEvaluator;
+
+/// Everything a single trial evaluation produces.
+#[derive(Debug, Clone)]
+pub struct TrialEvaluation {
+    /// Validation accuracy after the trial's training budget.
+    pub accuracy: f64,
+    /// BOPs at the assumed deployment point (always computed — Table 2).
+    pub bops: f64,
+    /// Surrogate estimate: mean utilisation % (when a surrogate ran).
+    pub est_avg_resources: Option<f64>,
+    /// Surrogate estimate: latency cycles (when a surrogate ran).
+    pub est_clock_cycles: Option<f64>,
+    /// The minimised objective vector fed back to NSGA-II
+    /// (slot 0 is negated accuracy by convention).
+    pub objectives: Vec<f64>,
+    /// Wall-clock seconds this evaluation cost.
+    pub train_seconds: f64,
+}
+
+/// One candidate scheduled for evaluation.
+///
+/// The RNG must already be forked from the master stream, keyed on
+/// `trial_id` — the scheduler never touches the master stream itself, so
+/// worker scheduling cannot perturb determinism.
+#[derive(Debug, Clone)]
+pub struct EvalRequest {
+    /// Sequential trial id (stable across worker counts).
+    pub trial_id: usize,
+    /// The candidate architecture.
+    pub genome: Genome,
+    /// The trial's private RNG stream.
+    pub rng: Rng,
+}
+
+/// Scores one genome. Implementations must be cheap to share across
+/// threads (`Sync`); all per-trial mutable state belongs inside
+/// `evaluate`.
+pub trait TrialEvaluator: Sync {
+    /// Evaluate one candidate with its pre-forked trial RNG.
+    fn evaluate(&self, genome: &Genome, rng: &mut Rng) -> Result<TrialEvaluation>;
+}

@@ -1,0 +1,339 @@
+//! Scoped-thread evaluation pool + genome-keyed memoisation.
+
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use crate::nn::Genome;
+use crate::util::Rng;
+
+use super::{EvalRequest, TrialEvaluation, TrialEvaluator};
+
+/// Resolve a requested worker count: `0` means "use all available
+/// parallelism" (the CLI default).
+pub fn resolve_workers(requested: usize) -> usize {
+    if requested > 0 {
+        requested
+    } else {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    }
+}
+
+/// Run `f` over `items` on up to `workers` scoped threads, returning the
+/// results **in input order**. A shared work queue keeps all workers busy
+/// regardless of per-item cost skew; `workers <= 1` runs inline with zero
+/// threading overhead. Also used by the pipeline to fan out the
+/// independent local-search + synthesis stages.
+pub fn parallel_map<T, R, F>(workers: usize, items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, T) -> R + Sync,
+{
+    let n = items.len();
+    let workers = resolve_workers(workers).min(n.max(1));
+    if workers <= 1 {
+        return items
+            .into_iter()
+            .enumerate()
+            .map(|(i, item)| f(i, item))
+            .collect();
+    }
+    let queue: Mutex<VecDeque<(usize, T)>> = Mutex::new(items.into_iter().enumerate().collect());
+    let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let next = queue.lock().unwrap().pop_front();
+                let Some((i, item)) = next else { break };
+                let result = f(i, item);
+                *slots[i].lock().unwrap() = Some(result);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|slot| {
+            slot.into_inner()
+                .unwrap()
+                .expect("every queued item was processed")
+        })
+        .collect()
+}
+
+/// One scheduled trial, scored.
+#[derive(Debug, Clone)]
+pub struct EvaluatedTrial {
+    /// Sequential trial id (from the request).
+    pub trial_id: usize,
+    /// The candidate.
+    pub genome: Genome,
+    /// The (possibly memoised) evaluation.
+    pub evaluation: TrialEvaluation,
+    /// True if this trial reused a previous evaluation of the same genome
+    /// (earlier batch, or an earlier trial id within this batch).
+    pub cached: bool,
+}
+
+/// Evaluates batches of trials concurrently over scoped threads, memoising
+/// by genome so duplicate candidates proposed across generations are
+/// trained exactly once.
+///
+/// Determinism contract (see the module docs): duplicate genomes within a
+/// batch are collapsed *before* dispatch and always evaluated with the RNG
+/// of their first trial id, and outputs are returned in trial order — so
+/// results are identical for every worker count.
+pub struct ParallelEvaluator<E: TrialEvaluator> {
+    inner: E,
+    workers: usize,
+    cache: Mutex<HashMap<Genome, TrialEvaluation>>,
+    evaluations: AtomicUsize,
+    hits: AtomicUsize,
+}
+
+impl<E: TrialEvaluator> ParallelEvaluator<E> {
+    /// Wrap an evaluator. `workers == 0` resolves to available parallelism.
+    pub fn new(inner: E, workers: usize) -> Self {
+        ParallelEvaluator {
+            inner,
+            workers: resolve_workers(workers),
+            cache: Mutex::new(HashMap::new()),
+            evaluations: AtomicUsize::new(0),
+            hits: AtomicUsize::new(0),
+        }
+    }
+
+    /// The resolved worker count.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Total *successful* inner evaluations committed to the cache so far
+    /// (failed evaluations are not counted).
+    pub fn evaluations(&self) -> usize {
+        self.evaluations.load(Ordering::Relaxed)
+    }
+
+    /// Total trials served from the cache so far.
+    pub fn cache_hits(&self) -> usize {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Distinct genomes memoised so far.
+    pub fn cache_len(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    /// The wrapped evaluator.
+    pub fn inner(&self) -> &E {
+        &self.inner
+    }
+
+    /// Evaluate one generation's worth of trials. Requests must carry
+    /// pre-forked RNGs keyed on their trial ids; results come back in
+    /// request (= trial) order.
+    pub fn evaluate_batch(&self, requests: Vec<EvalRequest>) -> Result<Vec<EvaluatedTrial>> {
+        // ---- collapse to first-occurrence, uncached genomes ----
+        let mut pending: Vec<(Genome, Rng)> = Vec::new();
+        let mut fresh: HashSet<Genome> = HashSet::new();
+        {
+            let cache = self.cache.lock().unwrap();
+            for req in &requests {
+                if cache.contains_key(&req.genome) || fresh.contains(&req.genome) {
+                    continue;
+                }
+                fresh.insert(req.genome.clone());
+                pending.push((req.genome.clone(), req.rng.clone()));
+            }
+        }
+
+        // ---- score unique genomes concurrently ----
+        let results = parallel_map(self.workers, pending, |_, (genome, mut rng)| {
+            let evaluation = self.inner.evaluate(&genome, &mut rng);
+            (genome, evaluation)
+        });
+
+        // ---- commit in dispatch order (first error wins, deterministically) ----
+        {
+            let mut cache = self.cache.lock().unwrap();
+            for (genome, evaluation) in results {
+                cache.insert(genome, evaluation?);
+                self.evaluations.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+
+        // ---- emit per-trial results in trial order ----
+        let cache = self.cache.lock().unwrap();
+        let mut out = Vec::with_capacity(requests.len());
+        for req in requests {
+            let cached = !fresh.remove(&req.genome);
+            if cached {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+            }
+            let evaluation = cache
+                .get(&req.genome)
+                .expect("evaluated or cached above")
+                .clone();
+            out.push(EvaluatedTrial {
+                trial_id: req.trial_id,
+                genome: req.genome,
+                evaluation,
+                cached,
+            });
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::SearchSpace;
+
+    /// Deterministic mock: accuracy derives from the trial RNG so tests
+    /// catch any perturbation of the fork-per-trial-id discipline.
+    struct MockEval {
+        space: SearchSpace,
+        calls: AtomicUsize,
+        fail: bool,
+    }
+
+    impl MockEval {
+        fn new() -> Self {
+            MockEval {
+                space: SearchSpace::table1(),
+                calls: AtomicUsize::new(0),
+                fail: false,
+            }
+        }
+    }
+
+    impl TrialEvaluator for MockEval {
+        fn evaluate(&self, genome: &Genome, rng: &mut Rng) -> Result<TrialEvaluation> {
+            self.calls.fetch_add(1, Ordering::SeqCst);
+            if self.fail {
+                anyhow::bail!("mock evaluator failure");
+            }
+            let accuracy = 0.5 + 0.4 * rng.uniform();
+            let bops = genome.num_weights(&self.space) as f64;
+            Ok(TrialEvaluation {
+                accuracy,
+                bops,
+                est_avg_resources: None,
+                est_clock_cycles: None,
+                objectives: vec![-accuracy, bops],
+                train_seconds: 0.0,
+            })
+        }
+    }
+
+    fn requests(genomes: &[Genome], seed: u64) -> Vec<EvalRequest> {
+        let mut root = Rng::new(seed);
+        genomes
+            .iter()
+            .enumerate()
+            .map(|(trial_id, genome)| EvalRequest {
+                trial_id,
+                genome: genome.clone(),
+                rng: root.fork(trial_id as u64),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn parallel_map_preserves_order_and_covers_all_items() {
+        let items: Vec<usize> = (0..97).collect();
+        let doubled = parallel_map(4, items.clone(), |i, x| {
+            assert_eq!(i, x);
+            x * 2
+        });
+        assert_eq!(doubled, items.iter().map(|x| x * 2).collect::<Vec<_>>());
+        // inline path agrees
+        let inline = parallel_map(1, items.clone(), |_, x| x * 2);
+        assert_eq!(doubled, inline);
+    }
+
+    #[test]
+    fn resolve_workers_is_at_least_one() {
+        assert!(resolve_workers(0) >= 1);
+        assert_eq!(resolve_workers(3), 3);
+    }
+
+    #[test]
+    fn duplicate_genomes_are_evaluated_once_but_recorded_per_trial() {
+        let space = SearchSpace::table1();
+        let mut rng = Rng::new(5);
+        let a = space.sample(&mut rng);
+        let b = space.sample(&mut rng);
+        assert_ne!(a, b);
+        // trials 0 and 2 and 3 share genome `a`
+        let genomes = vec![a.clone(), b.clone(), a.clone(), a.clone()];
+        let pool = ParallelEvaluator::new(MockEval::new(), 3);
+        let batch = pool
+            .evaluate_batch(requests(&genomes, 11))
+            .unwrap();
+
+        assert_eq!(batch.len(), 4, "every trial gets a record");
+        assert_eq!(pool.evaluations(), 2, "only unique genomes are trained");
+        assert_eq!(pool.cache_hits(), 2);
+        assert_eq!(pool.cache_len(), 2);
+        assert!(!batch[0].cached && !batch[1].cached);
+        assert!(batch[2].cached && batch[3].cached);
+        // duplicates reuse the FIRST trial's evaluation exactly
+        assert_eq!(batch[0].evaluation.accuracy, batch[2].evaluation.accuracy);
+        assert_eq!(batch[0].evaluation.accuracy, batch[3].evaluation.accuracy);
+        // trial ids and genomes are preserved in order
+        assert_eq!(
+            batch.iter().map(|t| t.trial_id).collect::<Vec<_>>(),
+            vec![0, 1, 2, 3]
+        );
+        assert_eq!(batch[3].genome, a);
+
+        // a later batch with the same genomes is served fully from cache
+        let again = pool
+            .evaluate_batch(requests(&[a.clone(), b.clone()], 99))
+            .unwrap();
+        assert_eq!(pool.evaluations(), 2, "no re-training across batches");
+        assert!(again.iter().all(|t| t.cached));
+        assert_eq!(again[0].evaluation.accuracy, batch[0].evaluation.accuracy);
+    }
+
+    #[test]
+    fn worker_count_does_not_change_results() {
+        let space = SearchSpace::table1();
+        let mut rng = Rng::new(21);
+        let genomes: Vec<Genome> = (0..24).map(|_| space.sample(&mut rng)).collect();
+        let serial = ParallelEvaluator::new(MockEval::new(), 1)
+            .evaluate_batch(requests(&genomes, 7))
+            .unwrap();
+        let parallel = ParallelEvaluator::new(MockEval::new(), 4)
+            .evaluate_batch(requests(&genomes, 7))
+            .unwrap();
+        for (s, p) in serial.iter().zip(&parallel) {
+            assert_eq!(s.trial_id, p.trial_id);
+            assert_eq!(s.genome, p.genome);
+            assert_eq!(s.evaluation.accuracy, p.evaluation.accuracy);
+            assert_eq!(s.evaluation.objectives, p.evaluation.objectives);
+            assert_eq!(s.cached, p.cached);
+        }
+    }
+
+    #[test]
+    fn evaluator_errors_propagate() {
+        let space = SearchSpace::table1();
+        let mut rng = Rng::new(3);
+        let genomes: Vec<Genome> = (0..6).map(|_| space.sample(&mut rng)).collect();
+        let mut mock = MockEval::new();
+        mock.fail = true;
+        let pool = ParallelEvaluator::new(mock, 2);
+        let err = pool
+            .evaluate_batch(requests(&genomes, 1))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("mock evaluator failure"));
+        assert_eq!(pool.evaluations(), 0, "failures are not counted as trained");
+    }
+}

@@ -1,0 +1,81 @@
+//! The train-and-score evaluator: the paper's per-trial protocol.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::data::{Dataset, Split};
+use crate::nn::{bops, Genome, PruneMasks, SearchSpace, SupernetInputs};
+use crate::objectives::{ObjectiveContext, ObjectiveKind};
+use crate::runtime::Runtime;
+use crate::trainer::{TrainConfig, Trainer};
+use crate::util::Rng;
+
+use super::{TrialEvaluation, TrialEvaluator};
+
+/// Trains a candidate inside the supernet for the trial budget, scores it
+/// on the validation split, and prices it with the configured objective
+/// set. This is the block that used to live inline in
+/// `coordinator::search_loop::global_search` (and, for the baseline, in
+/// `coordinator::pipeline`).
+pub struct SupernetEvaluator<'a> {
+    trainer: Trainer<'a>,
+    space: &'a SearchSpace,
+    objectives: &'a [ObjectiveKind],
+    ctx: &'a ObjectiveContext<'a>,
+    train: TrainConfig,
+    /// Global search trains dense models.
+    prune: PruneMasks,
+}
+
+impl<'a> SupernetEvaluator<'a> {
+    /// New evaluator over a runtime, dataset, objective set, and training
+    /// budget. `space` must be the space genomes are sampled from — it is
+    /// what candidates are compiled against (`ctx.space` only prices
+    /// objectives, mirroring the pre-refactor split).
+    pub fn new(
+        rt: &'a Runtime,
+        ds: &'a Dataset,
+        space: &'a SearchSpace,
+        objectives: &'a [ObjectiveKind],
+        ctx: &'a ObjectiveContext<'a>,
+        train: TrainConfig,
+    ) -> Self {
+        SupernetEvaluator {
+            trainer: Trainer::new(rt, ds),
+            space,
+            objectives,
+            ctx,
+            train,
+            prune: PruneMasks::ones(),
+        }
+    }
+}
+
+impl TrialEvaluator for SupernetEvaluator<'_> {
+    fn evaluate(&self, genome: &Genome, rng: &mut Rng) -> Result<TrialEvaluation> {
+        let t0 = Instant::now();
+        let inputs = SupernetInputs::compile(genome, self.space);
+        let mut model = self.trainer.init_model(rng);
+        self.trainer
+            .train(&mut model, &inputs, &self.prune, &self.train, rng)?;
+        let (accuracy, _val_loss) =
+            self.trainer
+                .evaluate(&model, &inputs, &self.prune, &self.train, Split::Val)?;
+        let (objectives, est_pair) = self.ctx.evaluate(self.objectives, genome, accuracy)?;
+        Ok(TrialEvaluation {
+            accuracy,
+            bops: bops::genome_bops(
+                genome,
+                self.space,
+                self.ctx.bits,
+                self.ctx.bits,
+                self.ctx.sparsity,
+            ),
+            est_avg_resources: est_pair.map(|p| p.0),
+            est_clock_cycles: est_pair.map(|p| p.1),
+            objectives,
+            train_seconds: t0.elapsed().as_secs_f64(),
+        })
+    }
+}

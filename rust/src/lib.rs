@@ -24,6 +24,7 @@ pub mod compress;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod eval;
 pub mod hls;
 pub mod nn;
 pub mod objectives;

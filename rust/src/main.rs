@@ -39,13 +39,25 @@ fn parse_cli() -> Result<Cli> {
         bail!(
             "usage: snac-pack <pipeline|search|surrogate|synth|info> \
              [--preset paper|ci|quickstart] [--out DIR] [--artifacts DIR] \
-             [--objectives acc,bops] [--set key=value ...]"
+             [--objectives acc,bops] [--workers N] [--set key=value ...]\n\
+             --preset picks the base regardless of position; \
+             --workers/--set overrides then apply left to right"
         );
     };
     let mut preset = Preset::by_name("ci")?;
     let mut out = PathBuf::from("results");
     let mut artifacts = PathBuf::from("artifacts");
     let mut objectives = ObjectiveKind::nac_set();
+    // --preset resolves first so `--workers 8 --preset paper` keeps the 8:
+    // the preset is the base, every other flag is an override on top.
+    let mut i = 1;
+    while i < args.len() {
+        if args[i] == "--preset" {
+            let name = args.get(i + 1).context("flag --preset needs a value")?;
+            preset = Preset::by_name(name)?;
+        }
+        i += 2;
+    }
     let mut i = 1;
     while i < args.len() {
         let flag = &args[i];
@@ -54,10 +66,13 @@ fn parse_cli() -> Result<Cli> {
                 .with_context(|| format!("flag {flag} needs a value"))
         };
         match flag.as_str() {
-            "--preset" => preset = Preset::by_name(value()?)?,
+            "--preset" => {} // consumed in the first pass
             "--out" => out = PathBuf::from(value()?),
             "--artifacts" => artifacts = PathBuf::from(value()?),
             "--objectives" => objectives = ObjectiveKind::parse_set(value()?)?,
+            "--workers" => preset
+                .set("workers", value()?)
+                .context("--workers expects a count")?,
             "--set" => {
                 let kv = value()?;
                 let (k, v) = kv
@@ -114,11 +129,7 @@ fn main() -> Result<()> {
                 cli.preset.data.n_test,
                 cli.preset.data.seed,
             );
-            let needs_surrogate = cli
-                .objectives
-                .iter()
-                .any(|o| matches!(o, ObjectiveKind::EstAvgResources | ObjectiveKind::EstClockCycles));
-            let sur = if needs_surrogate {
+            let sur = if ObjectiveKind::needs_surrogate(&cli.objectives) {
                 let (p, mse) = train_surrogate(
                     &rt,
                     &space,
@@ -148,6 +159,7 @@ fn main() -> Result<()> {
                     trials: cli.preset.search.trials,
                     epochs: cli.preset.search.epochs,
                     seed: cli.preset.seed,
+                    workers: cli.preset.search.workers,
                     accuracy_threshold: 0.0,
                     progress: Some(Box::new(|i, n, r: &TrialRecord| {
                         eprintln!("trial {i}/{n}: {} acc={:.4}", r.label, r.accuracy);
@@ -157,9 +169,12 @@ fn main() -> Result<()> {
             std::fs::create_dir_all(&cli.out)?;
             TrialRecord::save_all(&outcome.records, &cli.out.join("trials.json"))?;
             println!(
-                "{} trials in {:.1}s; front size {}; trials.json written to {}",
+                "{} trials in {:.1}s ({:.2} trials/s, {} workers); front size {}; \
+                 trials.json written to {}",
                 outcome.records.len(),
                 outcome.wall_seconds,
+                outcome.records.len() as f64 / outcome.wall_seconds.max(1e-9),
+                snac_pack::eval::resolve_workers(cli.preset.search.workers),
                 outcome.front.len(),
                 cli.out.display()
             );

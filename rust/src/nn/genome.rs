@@ -5,7 +5,7 @@ use super::abi::{IN_DIM, NUM_LAYERS, OUT_DIM};
 use super::space::SearchSpace;
 
 /// Activation function choice (Table 1).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Activation {
     ReLU,
     Tanh,
@@ -35,7 +35,9 @@ impl Activation {
 ///
 /// Width/lr/l1/dropout are stored as *indices* into the [`SearchSpace`]
 /// choice lists so crossover/mutation stay within the discrete space.
-#[derive(Debug, Clone, PartialEq, Eq)]
+/// `Hash`/`Eq` make a genome directly usable as an evaluation-cache key
+/// (see `eval::ParallelEvaluator`).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct Genome {
     /// Depth, 4..=8 (Table 1 "Number of layers").
     pub n_layers: usize,

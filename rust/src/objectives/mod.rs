@@ -52,6 +52,14 @@ impl ObjectiveKind {
         ]
     }
 
+    /// True if any objective in `kinds` needs the trained surrogate
+    /// (used by callers to decide whether to train one before searching).
+    pub fn needs_surrogate(kinds: &[ObjectiveKind]) -> bool {
+        kinds
+            .iter()
+            .any(|k| matches!(k, ObjectiveKind::EstAvgResources | ObjectiveKind::EstClockCycles))
+    }
+
     /// Parse a comma-separated list (CLI).
     pub fn parse_set(s: &str) -> Result<Vec<ObjectiveKind>> {
         s.split(',')
@@ -67,6 +75,11 @@ impl ObjectiveKind {
 }
 
 /// Static context shared by objective evaluations.
+///
+/// One context is shared by reference across every evaluation worker
+/// (`eval::ParallelEvaluator`); it is immutable here, and the surrogate
+/// predictor's memo cache is internally synchronised, so evaluation may
+/// run concurrently without coordination.
 pub struct ObjectiveContext<'a> {
     /// Search space (for layer dims).
     pub space: &'a SearchSpace,
@@ -127,6 +140,16 @@ mod tests {
         assert_eq!(ObjectiveKind::nac_set().len(), 2);
         assert_eq!(ObjectiveKind::snac_set().len(), 3);
         assert_eq!(ObjectiveKind::snac_set()[0], ObjectiveKind::Accuracy);
+    }
+
+    #[test]
+    fn needs_surrogate_flags_estimate_objectives() {
+        assert!(!ObjectiveKind::needs_surrogate(&ObjectiveKind::nac_set()));
+        assert!(ObjectiveKind::needs_surrogate(&ObjectiveKind::snac_set()));
+        assert!(ObjectiveKind::needs_surrogate(&[
+            ObjectiveKind::Accuracy,
+            ObjectiveKind::EstClockCycles,
+        ]));
     }
 
     #[test]

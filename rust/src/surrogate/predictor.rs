@@ -1,7 +1,7 @@
 //! Batched, cached surrogate inference used by the search objectives.
 
-use std::cell::RefCell;
 use std::collections::HashMap;
+use std::sync::Mutex;
 
 use anyhow::Result;
 
@@ -43,11 +43,15 @@ impl ResourceEstimate {
 }
 
 /// Trained surrogate + prediction cache.
+///
+/// The predictor is shared by reference across the evaluation worker
+/// threads (`eval::ParallelEvaluator`), so the memo cache is behind a
+/// `Mutex` — contention is negligible next to a `surrogate_predict` call.
 pub struct SurrogatePredictor<'a> {
     rt: &'a Runtime,
     params: SurrogateParams,
     /// memoised by feature-vector bits (genomes repeat across generations)
-    cache: RefCell<HashMap<Vec<u32>, ResourceEstimate>>,
+    cache: Mutex<HashMap<Vec<u32>, ResourceEstimate>>,
 }
 
 impl<'a> SurrogatePredictor<'a> {
@@ -56,7 +60,7 @@ impl<'a> SurrogatePredictor<'a> {
         SurrogatePredictor {
             rt,
             params,
-            cache: RefCell::new(HashMap::new()),
+            cache: Mutex::new(HashMap::new()),
         }
     }
 
@@ -70,11 +74,11 @@ impl<'a> SurrogatePredictor<'a> {
     ) -> Result<ResourceEstimate> {
         let feats = genome_features(genome, space, bits, sparsity);
         let key: Vec<u32> = feats.iter().map(|f| f.to_bits()).collect();
-        if let Some(hit) = self.cache.borrow().get(&key) {
+        if let Some(hit) = self.cache.lock().unwrap().get(&key) {
             return Ok(*hit);
         }
         let est = self.predict_batch(&[feats])?[0];
-        self.cache.borrow_mut().insert(key, est);
+        self.cache.lock().unwrap().insert(key, est);
         Ok(est)
     }
 
@@ -117,6 +121,6 @@ impl<'a> SurrogatePredictor<'a> {
 
     /// Number of memoised predictions (diagnostics).
     pub fn cache_len(&self) -> usize {
-        self.cache.borrow().len()
+        self.cache.lock().unwrap().len()
     }
 }

@@ -1,0 +1,203 @@
+//! Offline facade of the `xla-rs` PJRT API surface used by `snac-pack`.
+//!
+//! The coordinator executes every candidate architecture through
+//! AOT-compiled HLO artifacts via the PJRT C API. The real bindings
+//! (`xla-rs` + the bundled `xla_extension`) require a native XLA build that
+//! is not fetchable in offline/CI environments, so this crate provides the
+//! exact API *shape* the coordinator compiles against:
+//!
+//! * every type the coordinator names ([`PjRtClient`], [`PjRtBuffer`],
+//!   [`PjRtLoadedExecutable`], [`HloModuleProto`], [`XlaComputation`],
+//!   [`Literal`]) with the same method signatures;
+//! * all types are `Send + Sync` (plain data, no FFI handles), which is the
+//!   thread-safety contract `snac_pack::eval::ParallelEvaluator` relies on —
+//!   real PJRT clients are thread-safe for concurrent `Execute` calls, so a
+//!   drop-in replacement keeps that contract;
+//! * every operation that would need the native runtime returns a clear
+//!   [`Error`] instead, so `Runtime::load` fails fast with an actionable
+//!   message while everything host-side (search, surrogate features, HLS
+//!   simulator, reports, all artifact-gated tests) builds and runs.
+//!
+//! See `README.md` in this directory for how to swap in the real bindings.
+
+use std::fmt;
+use std::path::Path;
+
+/// Facade error: the native PJRT runtime is not linked into this build.
+#[derive(Debug)]
+pub struct Error {
+    message: String,
+}
+
+impl Error {
+    fn unavailable(op: &str) -> Error {
+        Error {
+            message: format!(
+                "{op}: the XLA PJRT runtime is not available in this build \
+                 (the `xla` dependency is the offline facade; see \
+                 rust/xla/README.md to link the real bindings)"
+            ),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.message)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Facade result type (mirrors `xla_rs::Result`).
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types accepted by [`PjRtClient::buffer_from_host_buffer`].
+pub trait ElementType: Copy + Send + Sync + 'static {}
+impl ElementType for f32 {}
+impl ElementType for f64 {}
+impl ElementType for i32 {}
+impl ElementType for i64 {}
+impl ElementType for u8 {}
+
+/// A PJRT device handle.
+#[derive(Debug, Clone, Copy)]
+pub struct PjRtDevice;
+
+/// A parsed HLO module (text interchange format).
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    /// Parse an HLO module from its text serialisation on disk.
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        let path = path.as_ref();
+        // Validate what we can host-side so missing-artifact errors stay
+        // precise even without the native parser.
+        if !path.exists() {
+            return Err(Error {
+                message: format!("HLO text file {path:?} does not exist"),
+            });
+        }
+        Err(Error::unavailable("parsing HLO text"))
+    }
+}
+
+/// An XLA computation ready for compilation.
+#[derive(Debug)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    /// Wrap a parsed HLO module.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// A device-side buffer.
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    /// Download the buffer to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable("downloading buffer"))
+    }
+}
+
+/// A host-side literal (possibly a tuple).
+#[derive(Debug)]
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    /// Destructure a tuple literal into its leaves.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error::unavailable("untupling literal"))
+    }
+
+    /// Copy the literal out as a flat host vector.
+    pub fn to_vec<T: ElementType>(&self) -> Result<Vec<T>> {
+        Err(Error::unavailable("reading literal"))
+    }
+}
+
+/// A compiled, loaded executable.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute against borrowed input buffers (the leak-free path: inputs
+    /// stay owned by the caller and are freed on drop).
+    pub fn execute_b(&self, _args: &[PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("executing"))
+    }
+}
+
+/// A PJRT client.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// Create a CPU client.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::unavailable("creating PJRT CPU client"))
+    }
+
+    /// Platform name, e.g. `cpu`.
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Compile a computation for this client's platform.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable("compiling"))
+    }
+
+    /// Upload a host slice as a device buffer with the given dimensions.
+    pub fn buffer_from_host_buffer<T: ElementType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<&PjRtDevice>,
+    ) -> Result<PjRtBuffer> {
+        Err(Error::unavailable("uploading buffer"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The whole point of the facade: the types are shareable across the
+    // evaluation thread pool.
+    fn assert_send_sync<T: Send + Sync>() {}
+
+    #[test]
+    fn facade_types_are_send_sync() {
+        assert_send_sync::<PjRtClient>();
+        assert_send_sync::<PjRtLoadedExecutable>();
+        assert_send_sync::<PjRtBuffer>();
+        assert_send_sync::<Literal>();
+        assert_send_sync::<Error>();
+    }
+
+    #[test]
+    fn unavailable_operations_error_cleanly() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("not available"));
+        let err = HloModuleProto::from_text_file("/nonexistent/a.hlo.txt").unwrap_err();
+        assert!(err.to_string().contains("does not exist"));
+    }
+}
