@@ -5,7 +5,12 @@
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example quickstart
+//! # run it twice with a cache snapshot: the second run retrains nothing
+//! cargo run --release --example quickstart -- --cache-path /tmp/snac_cache.json
+//! cargo run --release --example quickstart -- --cache-path /tmp/snac_cache.json
 //! ```
+
+use std::path::PathBuf;
 
 use anyhow::Result;
 use snac_pack::config::Preset;
@@ -17,6 +22,15 @@ use snac_pack::objectives::{ObjectiveContext, ObjectiveKind};
 use snac_pack::runtime::Runtime;
 
 fn main() -> Result<()> {
+    // sole optional flag: `--cache-path FILE` persists the evaluation
+    // cache, so a second quickstart run reports pure cache hits
+    let args: Vec<String> = std::env::args().collect();
+    let cache_path: Option<PathBuf> = args
+        .iter()
+        .position(|a| a == "--cache-path")
+        .and_then(|i| args.get(i + 1))
+        .map(PathBuf::from);
+
     let rt = Runtime::load(std::path::Path::new("artifacts"))?;
     println!("PJRT platform: {}", rt.platform());
 
@@ -57,6 +71,7 @@ fn main() -> Result<()> {
             progress: Some(Box::new(|i, n, r| {
                 println!("  trial {i:>2}/{n}: {:<28} acc={:.4}", r.label, r.accuracy);
             })),
+            cache_path,
         },
     )?;
 
@@ -69,7 +84,11 @@ fn main() -> Result<()> {
         );
     }
     println!(
-        "\n{} trials in {:.1}s — see examples/jet_classification.rs for the full pipeline",
+        "\ncache: {} trained, {} cache hits, {} restored from snapshot",
+        outcome.evaluations, outcome.cache_hits, outcome.cache_restored
+    );
+    println!(
+        "{} trials in {:.1}s — see examples/jet_classification.rs for the full pipeline",
         outcome.records.len(),
         outcome.wall_seconds
     );

@@ -65,6 +65,7 @@ fn main() -> anyhow::Result<()> {
                     workers: preset.search.workers,
                     accuracy_threshold: 0.0,
                     progress: None,
+                    cache_path: None,
                 },
             )?
             .records)

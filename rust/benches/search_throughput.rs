@@ -1,24 +1,32 @@
 //! Bench: global-search trial throughput vs evaluation worker count.
 //!
-//! Drives the real search machinery — NSGA-II, the generation scheduler,
-//! the genome-keyed evaluation cache — through `global_search_with` with a
-//! simulated trial evaluator whose cost is CPU-bound work in the HLS
-//! synthesis simulator (no runtime artifacts required, so this runs
-//! anywhere and stays comparable across PRs). Verifies that every worker
-//! count produces the identical trial stream, then reports trials/sec at
-//! `workers ∈ {1, 2, 4}` and writes `BENCH_search.json` for the perf
-//! trajectory.
+//! Drives the real search machinery — NSGA-II, the streaming evaluation
+//! pool, the genome-keyed evaluation cache — through `global_search_with`
+//! with a simulated trial evaluator whose cost is CPU-bound work in the
+//! HLS synthesis simulator (no runtime artifacts required, so this runs
+//! anywhere and stays comparable across PRs). Three phases:
 //!
-//! Runs with `progress: None` (whole-generation batches); production runs
-//! attach a progress sink, which dispatches in worker-sized chunks for
-//! liveness — so these numbers are an upper bound on pipeline throughput.
+//! 1. **Worker scaling** — trials/sec at `workers ∈ {1, 2, 4}`, verifying
+//!    the identical trial stream for every worker count.
+//! 2. **Streaming vs chunked dispatch** — under heavy per-trial cost
+//!    skew, compares the streaming completion queue against the old
+//!    chunked-barrier dispatch (reproduced here), asserting the stream
+//!    produces identical results at no higher wall-clock cost.
+//! 3. **Cache persistence** — runs the same search twice against one
+//!    `EvalCache` snapshot file and asserts the warm run retrains
+//!    nothing.
+//!
+//! Writes `BENCH_search.json` for the per-commit perf trajectory.
 
 mod common;
 
+use std::path::Path;
 use std::time::Instant;
 
 use snac_pack::coordinator::{global_search_with, SearchLoopConfig, SearchOutcome};
-use snac_pack::eval::{ParallelEvaluator, TrialEvaluation, TrialEvaluator};
+use snac_pack::eval::{
+    EvalCache, EvalRequest, ParallelEvaluator, TrialEvaluation, TrialEvaluator,
+};
 use snac_pack::hls::{synthesize, FpgaDevice, HlsConfig, NetworkSpec};
 use snac_pack::nn::{Genome, SearchSpace};
 use snac_pack::search::Nsga2Config;
@@ -30,6 +38,9 @@ const SEED: u64 = 17;
 /// Simulator passes per trial — sized so one trial costs milliseconds,
 /// like a (very) small training run, dwarfing scheduling overhead.
 const SIM_PASSES: usize = 300;
+/// Trial count / worker count for the dispatch-strategy comparison.
+const SKEW_TRIALS: usize = 48;
+const SKEW_WORKERS: usize = 4;
 
 /// Stand-in for the train-and-score path: deterministic accuracy with a
 /// real size/accuracy trade-off, priced by a CPU-bound simulator loop.
@@ -37,6 +48,27 @@ struct SimulatedTrainer {
     space: SearchSpace,
     hls: HlsConfig,
     device: FpgaDevice,
+}
+
+fn simulated_trainer() -> SimulatedTrainer {
+    SimulatedTrainer {
+        space: SearchSpace::table1(),
+        hls: HlsConfig::default(),
+        device: FpgaDevice::vu13p(),
+    }
+}
+
+fn score(genome: &Genome, space: &SearchSpace, rng: &mut Rng, t0: Instant) -> TrialEvaluation {
+    let weights = genome.num_weights(space) as f64;
+    let accuracy = (1.0 - (-weights / 4000.0).exp()) * (0.9 + 0.1 * rng.uniform());
+    TrialEvaluation {
+        accuracy,
+        bops: weights,
+        est_avg_resources: None,
+        est_clock_cycles: None,
+        objectives: vec![-accuracy, weights],
+        train_seconds: t0.elapsed().as_secs_f64(),
+    }
 }
 
 impl TrialEvaluator for SimulatedTrainer {
@@ -49,29 +81,50 @@ impl TrialEvaluator for SimulatedTrainer {
             lut_sum += std::hint::black_box(synthesize(&spec, &self.hls, &self.device)).lut;
         }
         std::hint::black_box(lut_sum);
-        let weights = genome.num_weights(&self.space) as f64;
-        let accuracy = (1.0 - (-weights / 4000.0).exp()) * (0.9 + 0.1 * rng.uniform());
-        Ok(TrialEvaluation {
-            accuracy,
-            bops: weights,
-            est_avg_resources: None,
-            est_clock_cycles: None,
-            objectives: vec![-accuracy, weights],
-            train_seconds: t0.elapsed().as_secs_f64(),
-        })
+        Ok(score(genome, &self.space, rng, t0))
     }
 }
 
-fn run(workers: usize) -> (SearchOutcome, f64, usize, usize) {
+/// Same workload with a deterministic per-genome cost skew (~16x between
+/// the cheapest and dearest trial): exactly the regime where a chunked
+/// dispatch idles workers at every chunk barrier.
+struct SkewedTrainer {
+    space: SearchSpace,
+    hls: HlsConfig,
+    device: FpgaDevice,
+}
+
+fn skewed_trainer() -> SkewedTrainer {
+    SkewedTrainer {
+        space: SearchSpace::table1(),
+        hls: HlsConfig::default(),
+        device: FpgaDevice::vu13p(),
+    }
+}
+
+impl TrialEvaluator for SkewedTrainer {
+    fn evaluate(&self, genome: &Genome, rng: &mut Rng) -> anyhow::Result<TrialEvaluation> {
+        let t0 = Instant::now();
+        let weights = genome.num_weights(&self.space);
+        let passes = 40 + weights.wrapping_mul(7919) % 600;
+        let mut lut_sum = 0u64;
+        for pass in 0..passes {
+            let sparsity = (pass % 8) as f64 / 16.0;
+            let spec = NetworkSpec::from_genome(genome, &self.space, 8, sparsity);
+            lut_sum += std::hint::black_box(synthesize(&spec, &self.hls, &self.device)).lut;
+        }
+        std::hint::black_box(lut_sum);
+        Ok(score(genome, &self.space, rng, t0))
+    }
+}
+
+fn run(workers: usize) -> (SearchOutcome, f64) {
+    run_with_cache(workers, EvalCache::in_memory())
+}
+
+fn run_with_cache(workers: usize, cache: EvalCache) -> (SearchOutcome, f64) {
     let space = SearchSpace::table1();
-    let pool = ParallelEvaluator::new(
-        SimulatedTrainer {
-            space: space.clone(),
-            hls: HlsConfig::default(),
-            device: FpgaDevice::vu13p(),
-        },
-        workers,
-    );
+    let pool = ParallelEvaluator::with_cache(simulated_trainer(), workers, cache);
     let t0 = Instant::now();
     let outcome = global_search_with(
         &pool,
@@ -88,8 +141,59 @@ fn run(workers: usize) -> (SearchOutcome, f64, usize, usize) {
         },
     )
     .expect("simulated search");
-    let secs = t0.elapsed().as_secs_f64();
-    (outcome, secs, pool.evaluations(), pool.cache_hits())
+    (outcome, t0.elapsed().as_secs_f64())
+}
+
+fn requests(genomes: &[Genome], seed: u64) -> Vec<EvalRequest> {
+    let mut root = Rng::new(seed);
+    genomes
+        .iter()
+        .enumerate()
+        .map(|(trial_id, genome)| EvalRequest {
+            trial_id,
+            genome: genome.clone(),
+            rng: root.fork(trial_id as u64),
+        })
+        .collect()
+}
+
+fn distinct_genomes(n: usize, seed: u64) -> Vec<Genome> {
+    let space = SearchSpace::table1();
+    let mut rng = Rng::new(seed);
+    let mut out: Vec<Genome> = Vec::new();
+    while out.len() < n {
+        let g = space.sample(&mut rng);
+        if !out.contains(&g) {
+            out.push(g);
+        }
+    }
+    out
+}
+
+/// The old (pre-streaming) driver: worker-sized chunks with a barrier at
+/// every chunk boundary. Kept here as the reference the streaming path
+/// must beat (or at worst match).
+fn dispatch_chunked(pool: &ParallelEvaluator<SkewedTrainer>, reqs: Vec<EvalRequest>) -> Vec<f64> {
+    let chunk_size = pool.workers().max(1);
+    let mut accs = Vec::with_capacity(reqs.len());
+    let mut queued = reqs.into_iter();
+    loop {
+        let chunk: Vec<EvalRequest> = queued.by_ref().take(chunk_size).collect();
+        if chunk.is_empty() {
+            break;
+        }
+        for trial in pool.evaluate_batch(chunk).expect("chunked dispatch") {
+            accs.push(trial.evaluation.accuracy);
+        }
+    }
+    accs
+}
+
+fn dispatch_streaming(pool: &ParallelEvaluator<SkewedTrainer>, reqs: Vec<EvalRequest>) -> Vec<f64> {
+    let mut accs = Vec::with_capacity(reqs.len());
+    pool.evaluate_stream(reqs, |trial| accs.push(trial.evaluation.accuracy))
+        .expect("streaming dispatch");
+    accs
 }
 
 fn main() -> anyhow::Result<()> {
@@ -98,16 +202,16 @@ fn main() -> anyhow::Result<()> {
         "budget: {TRIALS} trials, population {POPULATION}, {SIM_PASSES} simulator passes/trial"
     );
 
+    // ---- phase 1: worker scaling ----
     let mut results = Vec::new();
     let mut serial_genomes: Option<Vec<Genome>> = None;
     let mut serial_secs = 0.0f64;
     for workers in [1usize, 2, 4] {
         // warm-up + best-of-3, matching the in-repo harness style
         run(workers);
-        let mut samples: Vec<(SearchOutcome, f64, usize, usize)> =
-            (0..3).map(|_| run(workers)).collect();
+        let mut samples: Vec<(SearchOutcome, f64)> = (0..3).map(|_| run(workers)).collect();
         samples.sort_by(|a, b| a.1.total_cmp(&b.1));
-        let (outcome, secs, evaluations, cache_hits) = samples.remove(0);
+        let (outcome, secs) = samples.remove(0);
         let genomes: Vec<Genome> = outcome.records.iter().map(|r| r.genome.clone()).collect();
         match &serial_genomes {
             None => {
@@ -123,19 +227,89 @@ fn main() -> anyhow::Result<()> {
         let speedup = serial_secs / secs;
         println!(
             "bench search/workers_{workers:<2} {:>10}  {tps:>7.1} trials/s  \
-             speedup {speedup:>5.2}x  ({evaluations} trained, {cache_hits} cache hits)",
-            common::fmt(secs)
+             speedup {speedup:>5.2}x  ({} trained, {} cache hits)",
+            common::fmt(secs),
+            outcome.evaluations,
+            outcome.cache_hits
         );
         results.push(Json::obj(vec![
             ("workers", Json::Num(workers as f64)),
             ("seconds", Json::Num(secs)),
             ("trials_per_sec", Json::Num(tps)),
             ("speedup_vs_serial", Json::Num(speedup)),
-            ("evaluations", Json::Num(evaluations as f64)),
-            ("cache_hits", Json::Num(cache_hits as f64)),
+            ("evaluations", Json::Num(outcome.evaluations as f64)),
+            ("cache_hits", Json::Num(outcome.cache_hits as f64)),
         ]));
     }
     println!("determinism: trial streams identical across worker counts");
+
+    // ---- phase 2: streaming vs chunked dispatch under cost skew ----
+    let skew_genomes = distinct_genomes(SKEW_TRIALS, 23);
+    let mut chunked_secs = f64::INFINITY;
+    let mut chunked_accs = Vec::new();
+    let mut streaming_secs = f64::INFINITY;
+    let mut streaming_accs = Vec::new();
+    for _ in 0..3 {
+        // fresh pools each run: both strategies start from an empty cache
+        let pool = ParallelEvaluator::new(skewed_trainer(), SKEW_WORKERS);
+        let t0 = Instant::now();
+        chunked_accs = dispatch_chunked(&pool, requests(&skew_genomes, 5));
+        chunked_secs = chunked_secs.min(t0.elapsed().as_secs_f64());
+
+        let pool = ParallelEvaluator::new(skewed_trainer(), SKEW_WORKERS);
+        let t0 = Instant::now();
+        streaming_accs = dispatch_streaming(&pool, requests(&skew_genomes, 5));
+        streaming_secs = streaming_secs.min(t0.elapsed().as_secs_f64());
+    }
+    assert_eq!(
+        chunked_accs, streaming_accs,
+        "dispatch strategy must not change trial results"
+    );
+    println!(
+        "bench search/dispatch_chunked   {:>10}  ({SKEW_TRIALS} skewed trials, {SKEW_WORKERS} workers)",
+        common::fmt(chunked_secs)
+    );
+    println!(
+        "bench search/dispatch_streaming {:>10}  (speedup {:.2}x over chunk barriers)",
+        common::fmt(streaming_secs),
+        chunked_secs / streaming_secs
+    );
+    // Correctness gate with generous headroom for noisy shared CI
+    // runners: streaming genuinely beats chunk barriers under this skew,
+    // so 1.25x only trips on a real dispatch regression. The precise
+    // ratio is recorded in BENCH_search.json for trajectory tracking.
+    assert!(
+        streaming_secs <= chunked_secs * 1.25,
+        "streaming dispatch must not be slower than the chunked path \
+         (streaming {streaming_secs:.3}s vs chunked {chunked_secs:.3}s)"
+    );
+
+    // ---- phase 3: cache persistence across runs ----
+    let cache_dir = std::env::temp_dir().join("snac_bench_cache");
+    std::fs::create_dir_all(&cache_dir)?;
+    let cache_path = cache_dir.join("BENCH_eval_cache.json");
+    let _ = std::fs::remove_file(&cache_path);
+    let space = SearchSpace::table1();
+    let load = |path: &Path| EvalCache::load(path, &space, "bench");
+    let (cold, cold_secs) = run_with_cache(4, load(&cache_path));
+    let (warm, warm_secs) = run_with_cache(4, load(&cache_path));
+    assert_eq!(warm.evaluations, 0, "second run must retrain nothing");
+    assert_eq!(warm.cache_hits, TRIALS, "every trial served from the snapshot");
+    assert_eq!(warm.cache_restored, cold.evaluations);
+    let cold_genomes: Vec<&Genome> = cold.records.iter().map(|r| &r.genome).collect();
+    let warm_genomes: Vec<&Genome> = warm.records.iter().map(|r| &r.genome).collect();
+    assert_eq!(cold_genomes, warm_genomes, "identical trial records across runs");
+    println!(
+        "bench search/cache_cold         {:>10}  ({} trained)",
+        common::fmt(cold_secs),
+        cold.evaluations
+    );
+    println!(
+        "bench search/cache_warm         {:>10}  (0 trained, {} cache hits, {} restored)",
+        common::fmt(warm_secs),
+        warm.cache_hits,
+        warm.cache_restored
+    );
 
     let report = Json::obj(vec![
         ("bench", Json::Str("search_throughput".to_string())),
@@ -149,6 +323,30 @@ fn main() -> anyhow::Result<()> {
             ]),
         ),
         ("results", Json::Arr(results)),
+        (
+            "streaming_vs_chunked",
+            Json::obj(vec![
+                ("trials", Json::Num(SKEW_TRIALS as f64)),
+                ("workers", Json::Num(SKEW_WORKERS as f64)),
+                ("chunked_seconds", Json::Num(chunked_secs)),
+                ("streaming_seconds", Json::Num(streaming_secs)),
+                (
+                    "speedup",
+                    Json::Num(chunked_secs / streaming_secs),
+                ),
+            ]),
+        ),
+        (
+            "cache_persistence",
+            Json::obj(vec![
+                ("cold_seconds", Json::Num(cold_secs)),
+                ("warm_seconds", Json::Num(warm_secs)),
+                ("cold_evaluations", Json::Num(cold.evaluations as f64)),
+                ("warm_evaluations", Json::Num(warm.evaluations as f64)),
+                ("warm_cache_hits", Json::Num(warm.cache_hits as f64)),
+                ("warm_cache_restored", Json::Num(warm.cache_restored as f64)),
+            ]),
+        ),
     ]);
     std::fs::write("BENCH_search.json", report.to_string())?;
     println!("wrote BENCH_search.json");

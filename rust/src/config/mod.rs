@@ -57,6 +57,10 @@ pub struct Preset {
     pub local: LocalSearchConfig,
     /// Master seed for search/training RNG streams.
     pub seed: u64,
+    /// Evaluation-cache snapshot file (`--cache-path`): restored on start
+    /// and written through on every commit, so repeated runs never
+    /// retrain a previously evaluated genome. `None` = in-memory only.
+    pub cache_path: Option<String>,
 }
 
 impl Preset {
@@ -80,6 +84,7 @@ impl Preset {
                 surrogate: SurrogateTrainConfig::default(),
                 local: LocalSearchConfig::default(),
                 seed: 1,
+                cache_path: None,
             }),
             "ci" => Ok(Preset {
                 name: name.into(),
@@ -103,6 +108,7 @@ impl Preset {
                     ..Default::default()
                 },
                 seed: 1,
+                cache_path: None,
             }),
             "quickstart" => Ok(Preset {
                 name: name.into(),
@@ -130,6 +136,7 @@ impl Preset {
                     ..Default::default()
                 },
                 seed: 1,
+                cache_path: None,
             }),
             other => bail!("unknown preset `{other}` (paper | ci | quickstart)"),
         }
@@ -161,6 +168,7 @@ impl Preset {
             "warmup_epochs" => self.local.warmup_epochs = uint()?,
             "target_sparsity" => self.local.target_sparsity = value.parse()?,
             "seed" => self.seed = value.parse()?,
+            "cache_path" => self.cache_path = Some(value.to_string()),
             other => bail!("unknown override `{other}`"),
         }
         Ok(())
@@ -200,9 +208,11 @@ mod tests {
         p.set("trials", "99").unwrap();
         p.set("target_sparsity", "0.7").unwrap();
         p.set("workers", "4").unwrap();
+        p.set("cache_path", "results/eval_cache.json").unwrap();
         assert_eq!(p.search.trials, 99);
         assert_eq!(p.local.target_sparsity, 0.7);
         assert_eq!(p.search.workers, 4);
+        assert_eq!(p.cache_path.as_deref(), Some("results/eval_cache.json"));
         assert!(p.set("bogus", "1").is_err());
     }
 }

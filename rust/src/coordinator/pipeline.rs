@@ -25,7 +25,10 @@ use super::trial_db::TrialRecord;
 use crate::compress::{local_search, synthesis_nnz, LocalSearchResult};
 use crate::config::Preset;
 use crate::data::{Dataset, Split};
-use crate::eval::{parallel_map, resolve_workers, SupernetEvaluator, TrialEvaluator};
+use crate::eval::{
+    parallel_map, resolve_workers, EvalCache, EvalRequest, ParallelEvaluator,
+    SupernetEvaluator,
+};
 use crate::hls::{synthesize, FpgaDevice, HlsConfig, NetworkSpec, SynthReport};
 use crate::nn::{bops, Genome, SearchSpace, SupernetInputs};
 use crate::objectives::{ObjectiveContext, ObjectiveKind};
@@ -92,6 +95,12 @@ pub fn run_pipeline(rt: &Runtime, preset: &Preset, out_dir: &Path) -> Result<Pip
     let hls = HlsConfig::default();
     let workers = resolve_workers(preset.search.workers);
     eprintln!("[pipeline] evaluation workers: {workers}");
+    // One snapshot file can back every stage: each loads its own protocol
+    // scope, so the baseline and both searches share it safely.
+    let cache_path = preset.cache_path.as_ref().map(std::path::PathBuf::from);
+    if let Some(p) = &cache_path {
+        eprintln!("[pipeline] evaluation cache: {}", p.display());
+    }
     let ds = timed(&mut timings, "dataset", || {
         Ok(Dataset::generate(
             preset.data.n_train,
@@ -109,7 +118,7 @@ pub fn run_pipeline(rt: &Runtime, preset: &Preset, out_dir: &Path) -> Result<Pip
     eprintln!("[pipeline] surrogate final MSE (compressed space): {sur_mse:.5}");
     let surrogate = SurrogatePredictor::new(rt, sur_params);
 
-    // ---- baseline (trial protocol, via the shared evaluator) ----
+    // ---- baseline (trial protocol, via the shared evaluation pool) ----
     let baseline_genome = space.baseline();
     let baseline_acc = timed(&mut timings, "baseline-train", || {
         let objectives = ObjectiveKind::nac_set();
@@ -131,8 +140,34 @@ pub fn run_pipeline(rt: &Runtime, preset: &Preset, out_dir: &Path) -> Result<Pip
                 ..Default::default()
             },
         );
-        let mut rng = Rng::new(preset.seed ^ 0xba5e_11);
-        Ok(evaluator.evaluate(&baseline_genome, &mut rng)?.accuracy)
+        // The baseline trains with its own RNG stream (derived from the
+        // master seed), so it caches under its own seed-pinned scope; a
+        // re-run with the same --cache-path and configuration skips this
+        // training entirely, while a different seed retrains.
+        let scope = format!(
+            "baseline|epochs={}|seed={}|train={}x{}",
+            preset.search.epochs,
+            preset.seed,
+            ds.len(Split::Train),
+            ds.len(Split::Val)
+        );
+        let pool = ParallelEvaluator::with_cache(
+            evaluator,
+            1,
+            EvalCache::open(cache_path.as_deref(), &space, &scope),
+        );
+        let trial = pool
+            .evaluate_batch(vec![EvalRequest {
+                trial_id: 0,
+                genome: baseline_genome.clone(),
+                rng: Rng::new(preset.seed ^ 0xba5e_11),
+            }])?
+            .pop()
+            .expect("one baseline trial");
+        if trial.cached {
+            eprintln!("[pipeline] baseline evaluation restored from cache");
+        }
+        Ok(trial.evaluation.accuracy)
     })?;
     eprintln!("[pipeline] baseline val accuracy: {baseline_acc:.4}");
     // §4: "accuracy value selected to ensure it meets or exceeds the baseline"
@@ -175,12 +210,19 @@ pub fn run_pipeline(rt: &Runtime, preset: &Preset, out_dir: &Path) -> Result<Pip
                             }
                         }
                     })),
+                    cache_path: cache_path.clone(),
                 },
             )
         })
     };
     let nac = run_search(ObjectiveKind::nac_set(), false, &mut timings, "search-nac")?;
     let snac = run_search(ObjectiveKind::snac_set(), true, &mut timings, "search-snac")?;
+    for (stage, outcome) in [("search-nac", &nac), ("search-snac", &snac)] {
+        eprintln!(
+            "[{stage}] {} trained, {} cache hits ({} restored from snapshot)",
+            outcome.evaluations, outcome.cache_hits, outcome.cache_restored
+        );
+    }
     TrialRecord::save_all(&nac.records, &out_dir.join("trials_nac.json"))?;
     TrialRecord::save_all(&snac.records, &out_dir.join("trials_snac.json"))?;
 

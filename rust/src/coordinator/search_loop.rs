@@ -2,19 +2,23 @@
 //!
 //! Candidate scoring lives in [`crate::eval`]; this module owns the
 //! generational control flow — fork per-trial RNG streams in trial-id
-//! order, hand whole generations to the evaluation pool, commit results in
-//! trial-id order, and feed the objective vectors back to NSGA-II. The
-//! trial database is therefore identical for every worker count under a
-//! fixed seed, in everything except the recorded wall-clock timings
-//! (`train_seconds` is live measurement and varies run to run).
+//! order, hand whole generations to the evaluation pool, and feed the
+//! objective vectors back to NSGA-II. The pool streams each finished
+//! trial back in trial-id order (no chunk barriers), and the driver
+//! commits the record and fires the progress sink per completion with an
+//! explicit completed-trials counter. The trial database is therefore
+//! identical for every worker count under a fixed seed, in everything
+//! except the recorded wall-clock timings (`train_seconds` is live
+//! measurement and varies run to run).
 
+use std::path::PathBuf;
 use std::time::Instant;
 
 use anyhow::Result;
 
 use super::trial_db::TrialRecord;
-use crate::data::Dataset;
-use crate::eval::{EvalRequest, ParallelEvaluator, SupernetEvaluator, TrialEvaluator};
+use crate::data::{Dataset, Split};
+use crate::eval::{EvalCache, EvalRequest, ParallelEvaluator, SupernetEvaluator, TrialEvaluator};
 use crate::nn::SearchSpace;
 use crate::objectives::{ObjectiveContext, ObjectiveKind};
 use crate::pareto;
@@ -44,8 +48,13 @@ pub struct GlobalSearchConfig<'a> {
     /// §4 selection: accuracy threshold for picking off the front
     /// (the paper uses 0.638 ≈ the baseline's accuracy).
     pub accuracy_threshold: f64,
-    /// Progress sink (trial id, total, record) — e.g. a log line.
+    /// Progress sink (completed trials, total, record) — e.g. a log line.
+    /// Fires once per trial, in trial order, as completions stream in.
     pub progress: Option<Box<dyn FnMut(usize, usize, &TrialRecord)>>,
+    /// Persist the evaluation cache to this snapshot file, restoring it
+    /// on start so previously evaluated genomes are never retrained.
+    /// `None` keeps the cache in-memory for this run only.
+    pub cache_path: Option<PathBuf>,
 }
 
 /// The evaluator-independent slice of the search configuration, used by
@@ -59,7 +68,8 @@ pub struct SearchLoopConfig {
     pub seed: u64,
     /// §4 selection threshold (objective slot 0 must be negated accuracy).
     pub accuracy_threshold: f64,
-    /// Progress sink (trial id, total, record).
+    /// Progress sink (completed trials, total, record); fires per trial,
+    /// in trial order, as completions stream in.
     pub progress: Option<Box<dyn FnMut(usize, usize, &TrialRecord)>>,
 }
 
@@ -73,6 +83,12 @@ pub struct SearchOutcome {
     pub selected: Option<usize>,
     /// Total search wall-clock seconds.
     pub wall_seconds: f64,
+    /// Trials actually trained (cache misses).
+    pub evaluations: usize,
+    /// Trials served from the evaluation cache (snapshot hits included).
+    pub cache_hits: usize,
+    /// Cache entries restored from a `--cache-path` snapshot at start.
+    pub cache_restored: usize,
 }
 
 /// Run the paper's global search stage: train-and-score evaluation over
@@ -94,6 +110,7 @@ pub fn global_search(
         workers,
         accuracy_threshold,
         progress,
+        cache_path,
     } = cfg;
     // objective slot 0 is always (negated) accuracy by construction
     debug_assert_eq!(objectives[0], ObjectiveKind::Accuracy);
@@ -101,8 +118,26 @@ pub fn global_search(
         epochs,
         ..Default::default()
     };
+    // An evaluation is only reusable under the same training protocol, so
+    // the snapshot scope pins everything that changes what a trial returns:
+    // the objective set, the per-trial epoch budget, the dataset size, and
+    // the master seed (per-trial RNG streams fork from it — a different
+    // seed must retrain rather than silently replay another run's scores).
+    let scope = format!(
+        "search|{objectives:?}|epochs={epochs}|seed={seed}|train={}x{}",
+        ds.len(Split::Train),
+        ds.len(Split::Val)
+    );
+    let cache = EvalCache::open(cache_path.as_deref(), space, &scope);
+    if let (true, Some(path)) = (cache.restored() > 0, cache.path()) {
+        eprintln!(
+            "[search] restored {} cached evaluations from {}",
+            cache.restored(),
+            path.display()
+        );
+    }
     let evaluator = SupernetEvaluator::new(rt, ds, space, &objectives, &ctx, train);
-    let pool = ParallelEvaluator::new(evaluator, workers);
+    let pool = ParallelEvaluator::with_cache(evaluator, workers, cache);
     global_search_with(
         &pool,
         space,
@@ -130,6 +165,11 @@ pub fn global_search_with<E: TrialEvaluator>(
     let mut records: Vec<TrialRecord> = Vec::with_capacity(cfg.trials);
     let mut population = engine.initial_population(&mut rng);
     let mut generation = 0usize;
+    // Explicit completed-trials counter for the progress sink: emission is
+    // in trial order, so this always equals `record.id + 1` — but the
+    // count is now truthful by construction instead of an artifact of
+    // commit ordering.
+    let mut completed = 0usize;
 
     while records.len() < cfg.trials {
         // Fork every trial's RNG serially, in trial-id order, from the
@@ -147,57 +187,43 @@ pub fn global_search_with<E: TrialEvaluator>(
                 genome,
             })
             .collect();
-        // With a progress sink attached, feed the pool ~one worker-load at
-        // a time so progress streams during the generation instead of
-        // flushing at its end. The chunk boundary is a barrier, so heavy
-        // per-trial cost skew idles workers there — liveness is bought
-        // with a little utilisation (streaming commits would need a Send
-        // progress sink; see ROADMAP). Results are chunking-invariant:
-        // RNG forks already happened above, chunks preserve trial order,
-        // and a duplicate genome in a later chunk hits the cache with
-        // exactly the evaluation its first occurrence produced.
-        let chunk_size = if cfg.progress.is_some() {
-            pool.workers().max(1)
-        } else {
-            take.max(1)
-        };
+        // The pool streams each finished trial back the moment it (and
+        // every earlier trial) completes: workers never idle at a barrier,
+        // and the progress sink fires per trial, live, on this thread.
+        // Results are dispatch-invariant: RNG forks already happened
+        // above, emission preserves trial order, and a duplicate genome
+        // reuses exactly the evaluation its first occurrence produced.
         let mut evaluated = Vec::with_capacity(take);
-        let mut queued = requests.into_iter();
-        loop {
-            let chunk: Vec<EvalRequest> = queued.by_ref().take(chunk_size).collect();
-            if chunk.is_empty() {
-                break;
+        pool.evaluate_stream(requests, |trial| {
+            let record = TrialRecord {
+                id: trial.trial_id,
+                generation,
+                label: trial.genome.label(space),
+                accuracy: trial.evaluation.accuracy,
+                bops: trial.evaluation.bops,
+                est_avg_resources: trial.evaluation.est_avg_resources,
+                est_clock_cycles: trial.evaluation.est_clock_cycles,
+                objectives: trial.evaluation.objectives.clone(),
+                // cache hits cost (essentially) nothing; recording zero
+                // keeps the trial database worker-count-invariant in
+                // everything but live timing
+                train_seconds: if trial.cached {
+                    0.0
+                } else {
+                    trial.evaluation.train_seconds
+                },
+                genome: trial.genome.clone(),
+            };
+            completed += 1;
+            if let Some(progress) = cfg.progress.as_mut() {
+                progress(completed, cfg.trials, &record);
             }
-            for trial in pool.evaluate_batch(chunk)? {
-                let record = TrialRecord {
-                    id: trial.trial_id,
-                    generation,
-                    label: trial.genome.label(space),
-                    accuracy: trial.evaluation.accuracy,
-                    bops: trial.evaluation.bops,
-                    est_avg_resources: trial.evaluation.est_avg_resources,
-                    est_clock_cycles: trial.evaluation.est_clock_cycles,
-                    objectives: trial.evaluation.objectives.clone(),
-                    // cache hits cost (essentially) nothing; recording zero
-                    // keeps the trial database worker-count-invariant in
-                    // everything but live timing
-                    train_seconds: if trial.cached {
-                        0.0
-                    } else {
-                        trial.evaluation.train_seconds
-                    },
-                    genome: trial.genome.clone(),
-                };
-                if let Some(progress) = cfg.progress.as_mut() {
-                    progress(record.id + 1, cfg.trials, &record);
-                }
-                records.push(record);
-                evaluated.push(EvaluatedIndividual {
-                    genome: trial.genome,
-                    objectives: trial.evaluation.objectives,
-                });
-            }
-        }
+            records.push(record);
+            evaluated.push(EvaluatedIndividual {
+                genome: trial.genome,
+                objectives: trial.evaluation.objectives,
+            });
+        })?;
         population = engine.next_generation(evaluated, &mut rng);
         generation += 1;
     }
@@ -210,6 +236,9 @@ pub fn global_search_with<E: TrialEvaluator>(
         front,
         selected,
         wall_seconds: start.elapsed().as_secs_f64(),
+        evaluations: pool.evaluations(),
+        cache_hits: pool.cache_hits(),
+        cache_restored: pool.cache().restored(),
     })
 }
 
@@ -293,11 +322,13 @@ mod tests {
         assert_eq!(serial.selected, parallel.selected);
     }
 
-    /// Attaching a progress sink switches the driver to worker-sized
-    /// chunks for liveness; the trial stream must not change, and every
-    /// trial must be reported exactly once, in order.
+    /// Attaching a progress sink must not change the trial stream (the
+    /// pool streams completions either way), and every trial must be
+    /// reported exactly once, in order, with a truthful completed count.
+    /// (This is the old `progress_chunking_does_not_change_results`
+    /// equivalence test, pointed at the streaming dispatch path.)
     #[test]
-    fn progress_chunking_does_not_change_results() {
+    fn streaming_progress_does_not_change_results() {
         use std::cell::RefCell;
         use std::rc::Rc;
         let space = SearchSpace::table1();
@@ -307,9 +338,11 @@ mod tests {
             },
             4,
         );
+        // Rc sink: progress closures run on the driver thread and need
+        // not be Send — the streaming rework must preserve that.
         let reported = Rc::new(RefCell::new(Vec::new()));
         let sink = Rc::clone(&reported);
-        let chunked = global_search_with(
+        let streamed = global_search_with(
             &pool,
             &space,
             SearchLoopConfig {
@@ -320,15 +353,76 @@ mod tests {
                 trials: 30,
                 seed: 42,
                 accuracy_threshold: 0.0,
-                progress: Some(Box::new(move |i, _, _| sink.borrow_mut().push(i))),
+                progress: Some(Box::new(move |i, n, r| {
+                    assert_eq!(n, 30);
+                    assert_eq!(i, r.id + 1, "completed count stays truthful");
+                    sink.borrow_mut().push(i);
+                })),
             },
         )
         .unwrap();
         let plain = toy_outcome(4, 30, 42);
-        let g1: Vec<_> = chunked.records.iter().map(|r| r.genome.clone()).collect();
+        let g1: Vec<_> = streamed.records.iter().map(|r| r.genome.clone()).collect();
         let g2: Vec<_> = plain.records.iter().map(|r| r.genome.clone()).collect();
-        assert_eq!(g1, g2, "chunking must not change the trial stream");
+        assert_eq!(g1, g2, "a progress sink must not change the trial stream");
         assert_eq!(*reported.borrow(), (1..=30).collect::<Vec<usize>>());
+    }
+
+    /// A second search over the same `--cache-path` snapshot retrains
+    /// nothing and reproduces the identical trial database.
+    #[test]
+    fn persisted_cache_is_shared_across_runs() {
+        let space = SearchSpace::table1();
+        let dir = std::env::temp_dir().join("snac_search_cache_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("eval_cache.json");
+        let _ = std::fs::remove_file(&path);
+
+        let run = |workers: usize| {
+            let pool = ParallelEvaluator::with_cache(
+                ToyEvaluator {
+                    space: space.clone(),
+                },
+                workers,
+                crate::eval::EvalCache::load(&path, &space, "toy"),
+            );
+            global_search_with(
+                &pool,
+                &space,
+                SearchLoopConfig {
+                    nsga2: Nsga2Config {
+                        population: 6,
+                        ..Default::default()
+                    },
+                    trials: 25,
+                    seed: 13,
+                    accuracy_threshold: 0.0,
+                    progress: None,
+                },
+            )
+            .unwrap()
+        };
+
+        let cold = run(4);
+        assert!(cold.evaluations > 0);
+        assert_eq!(cold.cache_restored, 0);
+
+        // second run (even at a different worker count): zero retraining,
+        // every trial a cache hit, identical records
+        let warm = run(1);
+        assert_eq!(warm.evaluations, 0, "no retraining on the second run");
+        assert_eq!(warm.cache_restored, cold.evaluations);
+        assert_eq!(warm.cache_hits, 25);
+        assert_eq!(warm.records.len(), cold.records.len());
+        for (a, b) in cold.records.iter().zip(&warm.records) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.generation, b.generation);
+            assert_eq!(a.genome, b.genome);
+            assert_eq!(a.accuracy, b.accuracy);
+            assert_eq!(a.objectives, b.objectives);
+        }
+        assert_eq!(cold.front, warm.front);
+        assert_eq!(cold.selected, warm.selected);
     }
 
     /// The driver records every trial (cache hits included) and keeps ids
@@ -391,6 +485,7 @@ mod tests {
             workers: 4,
             accuracy_threshold: 0.0,
             progress: None,
+            cache_path: None,
         };
         let outcome = global_search(&rt, &ds, &space, cfg).unwrap();
         assert_eq!(outcome.records.len(), 8);
@@ -431,6 +526,7 @@ mod tests {
             workers: 1,
             accuracy_threshold: 0.0,
             progress: None,
+            cache_path: None,
         };
         let outcome2 = global_search(&rt, &ds, &space, cfg2).unwrap();
         let g1: Vec<_> = outcome.records.iter().map(|r| r.genome.clone()).collect();

@@ -2,7 +2,7 @@
 
 use anyhow::{Context, Result};
 
-use crate::nn::{Activation, Genome, SearchSpace, NUM_LAYERS};
+use crate::nn::{Genome, SearchSpace};
 use crate::util::Json;
 
 /// One evaluated candidate (a point in Figures 1–4).
@@ -30,52 +30,6 @@ pub struct TrialRecord {
     pub train_seconds: f64,
 }
 
-fn genome_to_json(g: &Genome) -> Json {
-    Json::obj(vec![
-        ("n_layers", Json::Num(g.n_layers as f64)),
-        (
-            "width_idx",
-            Json::nums(g.width_idx.iter().map(|&w| w as f64)),
-        ),
-        ("act", Json::Num(g.act.index() as f64)),
-        ("batch_norm", Json::Bool(g.batch_norm)),
-        ("lr_idx", Json::Num(g.lr_idx as f64)),
-        ("l1_idx", Json::Num(g.l1_idx as f64)),
-        ("dropout_idx", Json::Num(g.dropout_idx as f64)),
-    ])
-}
-
-fn genome_from_json(j: &Json) -> Result<Genome> {
-    let num = |k: &str| -> Result<usize> {
-        j.get(k)
-            .and_then(Json::as_usize)
-            .with_context(|| format!("genome missing `{k}`"))
-    };
-    let mut width_idx = [0usize; NUM_LAYERS];
-    for (i, item) in j
-        .get("width_idx")
-        .context("genome missing width_idx")?
-        .items()
-        .iter()
-        .enumerate()
-        .take(NUM_LAYERS)
-    {
-        width_idx[i] = item.as_usize().context("bad width idx")?;
-    }
-    Ok(Genome {
-        n_layers: num("n_layers")?,
-        width_idx,
-        act: Activation::ALL[num("act")?.min(2)],
-        batch_norm: j
-            .get("batch_norm")
-            .and_then(Json::as_bool)
-            .context("genome missing batch_norm")?,
-        lr_idx: num("lr_idx")?,
-        l1_idx: num("l1_idx")?,
-        dropout_idx: num("dropout_idx")?,
-    })
-}
-
 impl TrialRecord {
     /// Serialise to JSON.
     pub fn to_json(&self) -> Json {
@@ -83,7 +37,7 @@ impl TrialRecord {
         Json::obj(vec![
             ("id", Json::Num(self.id as f64)),
             ("generation", Json::Num(self.generation as f64)),
-            ("genome", genome_to_json(&self.genome)),
+            ("genome", self.genome.to_json()),
             ("label", Json::Str(self.label.clone())),
             ("accuracy", Json::Num(self.accuracy)),
             ("bops", Json::Num(self.bops)),
@@ -96,7 +50,7 @@ impl TrialRecord {
 
     /// Parse back from JSON.
     pub fn from_json(j: &Json, space: &SearchSpace) -> Result<TrialRecord> {
-        let genome = genome_from_json(j.get("genome").context("missing genome")?)?;
+        let genome = Genome::from_json(j.get("genome").context("missing genome")?)?;
         anyhow::ensure!(space.contains(&genome), "genome outside search space");
         let f = |k: &str| -> Result<f64> {
             j.get(k)
@@ -170,6 +124,30 @@ mod tests {
         assert_eq!(parsed.est_avg_resources, Some(3.25));
         assert_eq!(parsed.est_clock_cycles, None);
         assert_eq!(parsed.objectives, rec.objectives);
+
+        // every None/Some estimate combination survives the round trip
+        for (res, cc) in [
+            (None, None),
+            (Some(1.5), None),
+            (None, Some(42.0)),
+            (Some(1.5), Some(42.0)),
+        ] {
+            let mut r = rec.clone();
+            r.est_avg_resources = res;
+            r.est_clock_cycles = cc;
+            let parsed = TrialRecord::from_json(&r.to_json(), &space).unwrap();
+            assert_eq!(parsed.est_avg_resources, res);
+            assert_eq!(parsed.est_clock_cycles, cc);
+        }
+    }
+
+    #[test]
+    fn corrupted_database_is_an_error() {
+        let dir = std::env::temp_dir().join("snac_trialdb_corrupt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trials.json");
+        std::fs::write(&path, "[{\"id\": 0, \"genome\": {").unwrap();
+        assert!(TrialRecord::load_all(&path, &SearchSpace::table1()).is_err());
     }
 
     #[test]

@@ -1,0 +1,376 @@
+//! Persistent genome-keyed evaluation cache.
+//!
+//! The memoisation table that [`super::ParallelEvaluator`] commits trial
+//! evaluations into, promoted to a first-class subsystem: an [`EvalCache`]
+//! can snapshot itself to a JSON file (write-through on every commit) and
+//! restore from it on start, so repeated searches share prior training
+//! work across runs instead of retraining identical candidates.
+//!
+//! # Snapshot layout
+//!
+//! One cache file holds several **scopes** — independent entry sets keyed
+//! by a caller-chosen string (objective set, epoch budget, …):
+//!
+//! ```json
+//! {"search|[Accuracy, Bops]|epochs=5": [{"genome": {...}, "accuracy": 0.64, ...}],
+//!  "baseline|epochs=5": [...]}
+//! ```
+//!
+//! Scopes exist because an evaluation is only reusable under the *same*
+//! training protocol: the NAC and SNAC searches record different objective
+//! vectors for the same genome, and the baseline protocol trains with its
+//! own RNG stream. Each stage loads exactly its scope; the other scopes
+//! are preserved verbatim on save, so the whole pipeline can point at one
+//! `--cache-path`.
+//!
+//! A missing file is an empty cache; a corrupted file is an empty cache
+//! plus a warning (the search must never abort over a bad snapshot — the
+//! next commit rewrites it). Saves go through a temp-file rename so a
+//! crash mid-write cannot destroy the previous snapshot.
+
+use std::collections::{BTreeMap, HashMap};
+use std::path::{Path, PathBuf};
+use std::sync::{Mutex, MutexGuard};
+
+use anyhow::{Context, Result};
+
+use crate::nn::{Genome, SearchSpace};
+use crate::util::Json;
+
+use super::TrialEvaluation;
+
+/// Lock a mutex, recovering the data from a poisoned lock. A worker panic
+/// already surfaces through `std::thread::scope`; turning every later
+/// lock into an opaque `PoisonError` unwrap far from the root cause would
+/// only hide it.
+pub(crate) fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Where and under which scope a cache persists.
+struct Persist {
+    path: PathBuf,
+    scope: String,
+    /// Entry arrays of *other* scopes found in the snapshot, carried
+    /// through every save untouched.
+    others: BTreeMap<String, Json>,
+}
+
+/// Genome-keyed evaluation memo, optionally backed by a JSON snapshot.
+pub struct EvalCache {
+    entries: Mutex<HashMap<Genome, TrialEvaluation>>,
+    restored: usize,
+    persist: Option<Persist>,
+}
+
+impl EvalCache {
+    /// A process-lifetime cache with no backing file (the PR-1 behaviour).
+    pub fn in_memory() -> EvalCache {
+        EvalCache {
+            entries: Mutex::new(HashMap::new()),
+            restored: 0,
+            persist: None,
+        }
+    }
+
+    /// Open `path` and restore this `scope`'s entries. Missing file →
+    /// empty cache; corrupted file → empty cache + a warning on stderr.
+    /// Either way the cache stays attached to `path` and writes through
+    /// on every insert.
+    pub fn load(path: &Path, space: &SearchSpace, scope: &str) -> EvalCache {
+        let mut entries = HashMap::new();
+        let mut others = BTreeMap::new();
+        if let Ok(text) = std::fs::read_to_string(path) {
+            match parse_snapshot(&text, space, scope) {
+                Ok((own, rest)) => {
+                    entries = own;
+                    others = rest;
+                }
+                Err(e) => eprintln!(
+                    "[eval-cache] warning: ignoring corrupted cache file {}: {e:#}",
+                    path.display()
+                ),
+            }
+        }
+        let restored = entries.len();
+        EvalCache {
+            entries: Mutex::new(entries),
+            restored,
+            persist: Some(Persist {
+                path: path.to_path_buf(),
+                scope: scope.to_string(),
+                others,
+            }),
+        }
+    }
+
+    /// [`EvalCache::load`] when a path is configured, else
+    /// [`EvalCache::in_memory`].
+    pub fn open(path: Option<&Path>, space: &SearchSpace, scope: &str) -> EvalCache {
+        match path {
+            Some(p) => EvalCache::load(p, space, scope),
+            None => EvalCache::in_memory(),
+        }
+    }
+
+    /// Is this genome already evaluated?
+    pub fn contains(&self, genome: &Genome) -> bool {
+        lock_unpoisoned(&self.entries).contains_key(genome)
+    }
+
+    /// The memoised evaluation for `genome`, if any.
+    pub fn lookup(&self, genome: &Genome) -> Option<TrialEvaluation> {
+        lock_unpoisoned(&self.entries).get(genome).cloned()
+    }
+
+    /// Commit one evaluation, writing the snapshot through when a path is
+    /// attached. Persistence failures warn rather than fail: losing the
+    /// snapshot must not lose the search.
+    pub fn insert(&self, genome: Genome, evaluation: TrialEvaluation) {
+        let mut entries = lock_unpoisoned(&self.entries);
+        entries.insert(genome, evaluation);
+        if let Some(persist) = &self.persist {
+            if let Err(e) = save_snapshot(persist, &entries) {
+                eprintln!(
+                    "[eval-cache] warning: could not persist to {}: {e}",
+                    persist.path.display()
+                );
+            }
+        }
+    }
+
+    /// Distinct genomes memoised so far.
+    pub fn len(&self) -> usize {
+        lock_unpoisoned(&self.entries).len()
+    }
+
+    /// True when nothing is memoised yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// How many entries were restored from the snapshot at load time.
+    pub fn restored(&self) -> usize {
+        self.restored
+    }
+
+    /// The backing snapshot path, if persistent.
+    pub fn path(&self) -> Option<&Path> {
+        self.persist.as_ref().map(|p| p.path.as_path())
+    }
+}
+
+fn entry_to_json(genome: &Genome, e: &TrialEvaluation) -> Json {
+    let opt = |v: Option<f64>| v.map(Json::Num).unwrap_or(Json::Null);
+    Json::obj(vec![
+        ("genome", genome.to_json()),
+        ("accuracy", Json::Num(e.accuracy)),
+        ("bops", Json::Num(e.bops)),
+        ("est_avg_resources", opt(e.est_avg_resources)),
+        ("est_clock_cycles", opt(e.est_clock_cycles)),
+        ("objectives", Json::nums(e.objectives.iter().copied())),
+        ("train_seconds", Json::Num(e.train_seconds)),
+    ])
+}
+
+fn entry_from_json(j: &Json, space: &SearchSpace) -> Result<(Genome, TrialEvaluation)> {
+    let genome = Genome::from_json(j.get("genome").context("cache entry missing genome")?)?;
+    anyhow::ensure!(space.contains(&genome), "cached genome outside the search space");
+    let f = |k: &str| -> Result<f64> {
+        j.get(k)
+            .and_then(Json::as_f64)
+            .with_context(|| format!("cache entry missing `{k}`"))
+    };
+    let optf = |k: &str| j.get(k).and_then(Json::as_f64);
+    let objectives: Vec<f64> = j
+        .get("objectives")
+        .context("cache entry missing objectives")?
+        .items()
+        .iter()
+        .filter_map(Json::as_f64)
+        .collect();
+    anyhow::ensure!(!objectives.is_empty(), "cache entry has an empty objective vector");
+    Ok((
+        genome,
+        TrialEvaluation {
+            accuracy: f("accuracy")?,
+            bops: f("bops")?,
+            est_avg_resources: optf("est_avg_resources"),
+            est_clock_cycles: optf("est_clock_cycles"),
+            objectives,
+            train_seconds: f("train_seconds")?,
+        },
+    ))
+}
+
+type Scoped = (HashMap<Genome, TrialEvaluation>, BTreeMap<String, Json>);
+
+fn parse_snapshot(text: &str, space: &SearchSpace, scope: &str) -> Result<Scoped> {
+    let doc = Json::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let Json::Obj(map) = doc else {
+        anyhow::bail!("cache snapshot must be a JSON object keyed by scope");
+    };
+    let mut entries = HashMap::new();
+    let mut others = BTreeMap::new();
+    for (key, value) in map {
+        if key == scope {
+            for item in value.items() {
+                let (genome, evaluation) = entry_from_json(item, space)?;
+                entries.insert(genome, evaluation);
+            }
+        } else {
+            others.insert(key, value);
+        }
+    }
+    Ok((entries, others))
+}
+
+/// Cheap total order over genomes (the snapshot sort key): the snapshot
+/// bytes stay deterministic regardless of hash-map iteration order,
+/// without serialising every entry twice.
+fn genome_key(g: &Genome) -> (usize, [usize; crate::nn::NUM_LAYERS], usize, bool, usize, usize, usize) {
+    (
+        g.n_layers,
+        g.width_idx,
+        g.act.index(),
+        g.batch_norm,
+        g.lr_idx,
+        g.l1_idx,
+        g.dropout_idx,
+    )
+}
+
+fn save_snapshot(
+    persist: &Persist,
+    entries: &HashMap<Genome, TrialEvaluation>,
+) -> std::io::Result<()> {
+    let mut rows: Vec<(&Genome, &TrialEvaluation)> = entries.iter().collect();
+    rows.sort_by_key(|(g, _)| genome_key(g));
+    let mut map = persist.others.clone();
+    map.insert(
+        persist.scope.clone(),
+        Json::Arr(rows.into_iter().map(|(g, e)| entry_to_json(g, e)).collect()),
+    );
+    if let Some(dir) = persist.path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let tmp = persist.path.with_extension("tmp");
+    std::fs::write(&tmp, Json::Obj(map).to_string())?;
+    std::fs::rename(&tmp, &persist.path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn evaluation(acc: f64, res: Option<f64>, cc: Option<f64>) -> TrialEvaluation {
+        TrialEvaluation {
+            accuracy: acc,
+            bops: 1234.0,
+            est_avg_resources: res,
+            est_clock_cycles: cc,
+            objectives: vec![-acc, 1234.0],
+            train_seconds: 0.25,
+        }
+    }
+
+    fn tmp_path(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("snac_eval_cache_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn snapshot_roundtrips_including_optional_estimates() {
+        let space = SearchSpace::table1();
+        let mut rng = Rng::new(41);
+        let path = tmp_path("roundtrip.json");
+        let _ = std::fs::remove_file(&path);
+
+        let a = space.sample(&mut rng);
+        let b = space.sample(&mut rng);
+        let cache = EvalCache::load(&path, &space, "test");
+        assert_eq!(cache.restored(), 0);
+        cache.insert(a.clone(), evaluation(0.61, None, None));
+        cache.insert(b.clone(), evaluation(0.66, Some(3.5), Some(41.0)));
+
+        let reloaded = EvalCache::load(&path, &space, "test");
+        assert_eq!(reloaded.restored(), 2);
+        assert_eq!(reloaded.len(), 2);
+        let ea = reloaded.lookup(&a).unwrap();
+        assert_eq!(ea.accuracy, 0.61);
+        assert_eq!(ea.est_avg_resources, None);
+        assert_eq!(ea.est_clock_cycles, None);
+        assert_eq!(ea.objectives, vec![-0.61, 1234.0]);
+        assert_eq!(ea.train_seconds, 0.25);
+        let eb = reloaded.lookup(&b).unwrap();
+        assert_eq!(eb.est_avg_resources, Some(3.5));
+        assert_eq!(eb.est_clock_cycles, Some(41.0));
+    }
+
+    #[test]
+    fn scopes_are_isolated_but_share_one_file() {
+        let space = SearchSpace::table1();
+        let mut rng = Rng::new(42);
+        let path = tmp_path("scopes.json");
+        let _ = std::fs::remove_file(&path);
+
+        let g = space.sample(&mut rng);
+        let nac = EvalCache::load(&path, &space, "nac");
+        nac.insert(g.clone(), evaluation(0.6, None, None));
+
+        // a different scope sees none of nac's entries...
+        let snac = EvalCache::load(&path, &space, "snac");
+        assert_eq!(snac.restored(), 0);
+        assert!(!snac.contains(&g));
+        snac.insert(g.clone(), evaluation(0.7, Some(1.0), Some(2.0)));
+
+        // ...and saving it preserved nac's entries verbatim
+        let nac2 = EvalCache::load(&path, &space, "nac");
+        assert_eq!(nac2.restored(), 1);
+        assert_eq!(nac2.lookup(&g).unwrap().accuracy, 0.6);
+        let snac2 = EvalCache::load(&path, &space, "snac");
+        assert_eq!(snac2.lookup(&g).unwrap().accuracy, 0.7);
+    }
+
+    #[test]
+    fn corrupted_snapshot_falls_back_to_empty_and_recovers() {
+        let space = SearchSpace::table1();
+        let mut rng = Rng::new(43);
+        let path = tmp_path("corrupt.json");
+        for garbage in ["{\"test\": [{]", "[1,2,3]", "{\"test\": [{\"genome\": 7}]}"] {
+            std::fs::write(&path, garbage).unwrap();
+            // load warns but must not abort
+            let cache = EvalCache::load(&path, &space, "test");
+            assert_eq!(cache.restored(), 0);
+            assert!(cache.is_empty());
+            // the cache stays usable: the next commit rewrites the file
+            let g = space.sample(&mut rng);
+            cache.insert(g.clone(), evaluation(0.5, None, None));
+            let reloaded = EvalCache::load(&path, &space, "test");
+            assert_eq!(reloaded.restored(), 1);
+            assert!(reloaded.contains(&g));
+        }
+    }
+
+    #[test]
+    fn missing_file_is_an_empty_cache() {
+        let space = SearchSpace::table1();
+        let path = tmp_path("never_written.json");
+        let _ = std::fs::remove_file(&path);
+        let cache = EvalCache::load(&path, &space, "test");
+        assert_eq!(cache.restored(), 0);
+        assert!(cache.is_empty());
+        assert!(!path.exists(), "load alone must not create the file");
+    }
+
+    #[test]
+    fn in_memory_cache_has_no_path() {
+        let cache = EvalCache::in_memory();
+        assert!(cache.path().is_none());
+        assert_eq!(cache.restored(), 0);
+    }
+}

@@ -13,9 +13,14 @@
 //!   supernet inputs, train for the trial budget, evaluate on the
 //!   validation split, price with the configured objective set.
 //! * [`ParallelEvaluator`] — a scoped-thread pool that evaluates a whole
-//!   generation concurrently with a configurable worker count, plus a
-//!   genome-keyed memoisation cache so a duplicate genome proposed across
-//!   generations is trained once and recorded per-trial.
+//!   generation concurrently with a configurable worker count, streaming
+//!   each finished trial to the driver in trial order (no chunk barriers),
+//!   plus a genome-keyed memoisation cache so a duplicate genome proposed
+//!   across generations is trained once and recorded per-trial.
+//! * [`EvalCache`] — that memoisation table as a first-class persistent
+//!   subsystem: JSON snapshot/restore keyed by protocol scope
+//!   (`--cache-path`), write-through on every commit, so repeated runs
+//!   share prior training work instead of retraining identical genomes.
 //!
 //! # Determinism
 //!
@@ -29,7 +34,12 @@
 //! 2. within a batch, duplicate genomes are collapsed *before* dispatch —
 //!    a genome is always evaluated with the RNG of its **first** trial id,
 //!    regardless of scheduling;
-//! 3. results are committed in trial-id order.
+//! 3. per-trial results are *emitted* in trial-id order: workers push
+//!    completions to a driver-side channel in whatever order they finish,
+//!    and the driver holds each trial back until every earlier trial has
+//!    been emitted — so callers (and their progress sinks, which run on
+//!    the driver thread and need not be `Send`) always observe the same
+//!    stream.
 //!
 //! # Thread-safety
 //!
@@ -40,6 +50,7 @@
 //! facade is plain data; if a future backend is not, load one `Runtime`
 //! per worker or run with `workers = 1` (see `rust/xla/README.md`).
 
+mod cache;
 mod parallel;
 mod supernet;
 
@@ -48,6 +59,7 @@ use anyhow::Result;
 use crate::nn::Genome;
 use crate::util::Rng;
 
+pub use cache::EvalCache;
 pub use parallel::{parallel_map, resolve_workers, EvaluatedTrial, ParallelEvaluator};
 pub use supernet::SupernetEvaluator;
 

@@ -1,14 +1,24 @@
-//! Scoped-thread evaluation pool + genome-keyed memoisation.
+//! Scoped-thread evaluation pool: streaming completions + genome memo.
+//!
+//! Workers pull trials from a shared queue and push finished evaluations
+//! into an `mpsc` completion channel as they finish; the **driver** (the
+//! calling thread) commits each completion to the evaluation cache the
+//! moment it arrives and emits per-trial results strictly in trial-id
+//! order. There are no chunk barriers anywhere — a worker that finishes a
+//! cheap trial immediately starts the next one, even while an expensive
+//! sibling is still training — and because the driver loop runs on the
+//! calling thread, progress sinks need not be `Send`.
 
-use std::collections::{HashMap, HashSet, VecDeque};
+use std::collections::{HashSet, VecDeque};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{mpsc, Mutex};
 
 use anyhow::Result;
 
 use crate::nn::Genome;
 use crate::util::Rng;
 
+use super::cache::{lock_unpoisoned, EvalCache};
 use super::{EvalRequest, TrialEvaluation, TrialEvaluator};
 
 /// Resolve a requested worker count: `0` means "use all available
@@ -48,10 +58,10 @@ where
     std::thread::scope(|s| {
         for _ in 0..workers {
             s.spawn(|| loop {
-                let next = queue.lock().unwrap().pop_front();
+                let next = lock_unpoisoned(&queue).pop_front();
                 let Some((i, item)) = next else { break };
                 let result = f(i, item);
-                *slots[i].lock().unwrap() = Some(result);
+                *lock_unpoisoned(&slots[i]) = Some(result);
             });
         }
     });
@@ -59,7 +69,7 @@ where
         .into_iter()
         .map(|slot| {
             slot.into_inner()
-                .unwrap()
+                .unwrap_or_else(|poisoned| poisoned.into_inner())
                 .expect("every queued item was processed")
         })
         .collect()
@@ -75,33 +85,42 @@ pub struct EvaluatedTrial {
     /// The (possibly memoised) evaluation.
     pub evaluation: TrialEvaluation,
     /// True if this trial reused a previous evaluation of the same genome
-    /// (earlier batch, or an earlier trial id within this batch).
+    /// (a restored snapshot, an earlier batch, or an earlier trial id
+    /// within this batch).
     pub cached: bool,
 }
 
 /// Evaluates batches of trials concurrently over scoped threads, memoising
-/// by genome so duplicate candidates proposed across generations are
-/// trained exactly once.
+/// by genome — through an [`EvalCache`], optionally persistent — so
+/// duplicate candidates are trained exactly once per cache lifetime.
 ///
 /// Determinism contract (see the module docs): duplicate genomes within a
 /// batch are collapsed *before* dispatch and always evaluated with the RNG
-/// of their first trial id, and outputs are returned in trial order — so
-/// results are identical for every worker count.
+/// of their first trial id, and outputs are emitted in trial order — so
+/// results are identical for every worker count, whatever order the
+/// completion channel delivers them in.
 pub struct ParallelEvaluator<E: TrialEvaluator> {
     inner: E,
     workers: usize,
-    cache: Mutex<HashMap<Genome, TrialEvaluation>>,
+    cache: EvalCache,
     evaluations: AtomicUsize,
     hits: AtomicUsize,
 }
 
 impl<E: TrialEvaluator> ParallelEvaluator<E> {
-    /// Wrap an evaluator. `workers == 0` resolves to available parallelism.
+    /// Wrap an evaluator with a fresh in-memory cache. `workers == 0`
+    /// resolves to available parallelism.
     pub fn new(inner: E, workers: usize) -> Self {
+        Self::with_cache(inner, workers, EvalCache::in_memory())
+    }
+
+    /// Wrap an evaluator around an existing cache — typically one restored
+    /// from a `--cache-path` snapshot, so prior runs' training is reused.
+    pub fn with_cache(inner: E, workers: usize, cache: EvalCache) -> Self {
         ParallelEvaluator {
             inner,
             workers: resolve_workers(workers),
-            cache: Mutex::new(HashMap::new()),
+            cache,
             evaluations: AtomicUsize::new(0),
             hits: AtomicUsize::new(0),
         }
@@ -118,14 +137,20 @@ impl<E: TrialEvaluator> ParallelEvaluator<E> {
         self.evaluations.load(Ordering::Relaxed)
     }
 
-    /// Total trials served from the cache so far.
+    /// Total trials served from the cache so far (snapshot-restored
+    /// entries included).
     pub fn cache_hits(&self) -> usize {
         self.hits.load(Ordering::Relaxed)
     }
 
     /// Distinct genomes memoised so far.
     pub fn cache_len(&self) -> usize {
-        self.cache.lock().unwrap().len()
+        self.cache.len()
+    }
+
+    /// The evaluation cache.
+    pub fn cache(&self) -> &EvalCache {
+        &self.cache
     }
 
     /// The wrapped evaluator.
@@ -133,59 +158,139 @@ impl<E: TrialEvaluator> ParallelEvaluator<E> {
         &self.inner
     }
 
-    /// Evaluate one generation's worth of trials. Requests must carry
-    /// pre-forked RNGs keyed on their trial ids; results come back in
-    /// request (= trial) order.
+    /// Evaluate one generation's worth of trials, collecting the per-trial
+    /// results in request (= trial) order. Requests must carry pre-forked
+    /// RNGs keyed on their trial ids.
     pub fn evaluate_batch(&self, requests: Vec<EvalRequest>) -> Result<Vec<EvaluatedTrial>> {
-        // ---- collapse to first-occurrence, uncached genomes ----
-        let mut pending: Vec<(Genome, Rng)> = Vec::new();
-        let mut fresh: HashSet<Genome> = HashSet::new();
-        {
-            let cache = self.cache.lock().unwrap();
-            for req in &requests {
-                if cache.contains_key(&req.genome) || fresh.contains(&req.genome) {
-                    continue;
-                }
-                fresh.insert(req.genome.clone());
-                pending.push((req.genome.clone(), req.rng.clone()));
-            }
-        }
-
-        // ---- score unique genomes concurrently ----
-        let results = parallel_map(self.workers, pending, |_, (genome, mut rng)| {
-            let evaluation = self.inner.evaluate(&genome, &mut rng);
-            (genome, evaluation)
-        });
-
-        // ---- commit in dispatch order (first error wins, deterministically) ----
-        {
-            let mut cache = self.cache.lock().unwrap();
-            for (genome, evaluation) in results {
-                cache.insert(genome, evaluation?);
-                self.evaluations.fetch_add(1, Ordering::Relaxed);
-            }
-        }
-
-        // ---- emit per-trial results in trial order ----
-        let cache = self.cache.lock().unwrap();
         let mut out = Vec::with_capacity(requests.len());
-        for req in requests {
+        self.evaluate_stream(requests, |trial| out.push(trial))?;
+        Ok(out)
+    }
+
+    /// Evaluate a batch, streaming each finished trial to `on_trial` in
+    /// trial-id order as soon as it (and every earlier trial) completes —
+    /// no chunk barriers, so workers stay busy under any per-trial cost
+    /// skew while the caller still observes a deterministic stream.
+    ///
+    /// `on_trial` runs on the calling thread (the driver side of the
+    /// completion channel), so it may borrow non-`Send` state freely.
+    ///
+    /// Error contract: every successfully evaluated genome is committed to
+    /// the cache — completed training work survives a failed sibling — and
+    /// the error of the *first failed dispatch* (first occurrence order,
+    /// which is worker-count-invariant) is returned after the whole batch
+    /// has drained.
+    pub fn evaluate_stream<F>(&self, requests: Vec<EvalRequest>, mut on_trial: F) -> Result<()>
+    where
+        F: FnMut(EvaluatedTrial),
+    {
+        // ---- collapse to first-occurrence, uncached genomes ----
+        let mut pending: VecDeque<(usize, Genome, Rng)> = VecDeque::new();
+        let mut fresh: HashSet<Genome> = HashSet::new();
+        for req in &requests {
+            if self.cache.contains(&req.genome) || fresh.contains(&req.genome) {
+                continue;
+            }
+            fresh.insert(req.genome.clone());
+            pending.push_back((pending.len(), req.genome.clone(), req.rng.clone()));
+        }
+
+        let mut errors: Vec<(usize, anyhow::Error)> = Vec::new();
+        let mut next = 0usize;
+        let workers = self.workers.min(pending.len().max(1));
+
+        if workers <= 1 {
+            // Inline driver: completions arrive in dispatch order on this
+            // thread, interleaving evaluation with in-order emission (so a
+            // progress sink streams even at `--workers 1`).
+            while let Some((idx, genome, mut rng)) = pending.pop_front() {
+                match self.inner.evaluate(&genome, &mut rng) {
+                    Ok(evaluation) => {
+                        self.commit(genome, evaluation);
+                        self.drain_ready(&requests, &mut fresh, &mut next, &mut on_trial);
+                    }
+                    Err(e) => errors.push((idx, e)),
+                }
+            }
+        } else {
+            // Streaming pool: workers push completions into the channel
+            // the moment they finish; the driver loop below commits them
+            // and advances the in-order emission cursor.
+            let queue = Mutex::new(pending);
+            let queue = &queue;
+            let (tx, rx) = mpsc::channel::<(usize, Genome, Result<TrialEvaluation>)>();
+            std::thread::scope(|s| {
+                for _ in 0..workers {
+                    let tx = tx.clone();
+                    s.spawn(move || loop {
+                        let item = lock_unpoisoned(queue).pop_front();
+                        let Some((idx, genome, mut rng)) = item else { break };
+                        let result = self.inner.evaluate(&genome, &mut rng);
+                        if tx.send((idx, genome, result)).is_err() {
+                            break;
+                        }
+                    });
+                }
+                // the workers hold the only remaining senders, so the
+                // receive loop ends exactly when the queue is drained
+                drop(tx);
+                for (idx, genome, result) in rx {
+                    match result {
+                        Ok(evaluation) => {
+                            self.commit(genome, evaluation);
+                            self.drain_ready(&requests, &mut fresh, &mut next, &mut on_trial);
+                        }
+                        Err(e) => errors.push((idx, e)),
+                    }
+                }
+            });
+        }
+
+        // batches served entirely from cache never enter the loops above
+        self.drain_ready(&requests, &mut fresh, &mut next, &mut on_trial);
+
+        if let Some((_, err)) = errors.into_iter().min_by_key(|&(idx, _)| idx) {
+            return Err(err);
+        }
+        debug_assert_eq!(next, requests.len(), "every trial emitted exactly once");
+        Ok(())
+    }
+
+    /// Commit one successful evaluation (write-through when persistent).
+    fn commit(&self, genome: Genome, evaluation: TrialEvaluation) {
+        self.cache.insert(genome, evaluation);
+        self.evaluations.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Emit every not-yet-emitted trial whose genome has an evaluation,
+    /// in trial order, stopping at the first still-pending (or failed)
+    /// genome.
+    fn drain_ready<F>(
+        &self,
+        requests: &[EvalRequest],
+        fresh: &mut HashSet<Genome>,
+        next: &mut usize,
+        on_trial: &mut F,
+    ) where
+        F: FnMut(EvaluatedTrial),
+    {
+        while *next < requests.len() {
+            let req = &requests[*next];
+            let Some(evaluation) = self.cache.lookup(&req.genome) else {
+                break;
+            };
             let cached = !fresh.remove(&req.genome);
             if cached {
                 self.hits.fetch_add(1, Ordering::Relaxed);
             }
-            let evaluation = cache
-                .get(&req.genome)
-                .expect("evaluated or cached above")
-                .clone();
-            out.push(EvaluatedTrial {
+            on_trial(EvaluatedTrial {
                 trial_id: req.trial_id,
-                genome: req.genome,
+                genome: req.genome.clone(),
                 evaluation,
                 cached,
             });
+            *next += 1;
         }
-        Ok(out)
     }
 }
 
@@ -199,7 +304,8 @@ mod tests {
     struct MockEval {
         space: SearchSpace,
         calls: AtomicUsize,
-        fail: bool,
+        fail_all: bool,
+        fail_on: Vec<Genome>,
     }
 
     impl MockEval {
@@ -207,7 +313,8 @@ mod tests {
             MockEval {
                 space: SearchSpace::table1(),
                 calls: AtomicUsize::new(0),
-                fail: false,
+                fail_all: false,
+                fail_on: Vec::new(),
             }
         }
     }
@@ -215,8 +322,11 @@ mod tests {
     impl TrialEvaluator for MockEval {
         fn evaluate(&self, genome: &Genome, rng: &mut Rng) -> Result<TrialEvaluation> {
             self.calls.fetch_add(1, Ordering::SeqCst);
-            if self.fail {
+            if self.fail_all {
                 anyhow::bail!("mock evaluator failure");
+            }
+            if let Some(i) = self.fail_on.iter().position(|g| g == genome) {
+                anyhow::bail!("mock failure #{i}");
             }
             let accuracy = 0.5 + 0.4 * rng.uniform();
             let bops = genome.num_weights(&self.space) as f64;
@@ -242,6 +352,21 @@ mod tests {
                 rng: root.fork(trial_id as u64),
             })
             .collect()
+    }
+
+    /// Sample `n` pairwise-distinct genomes so call/cache-count assertions
+    /// cannot be perturbed by a lucky sampling collision.
+    fn distinct_genomes(n: usize, seed: u64) -> Vec<Genome> {
+        let space = SearchSpace::table1();
+        let mut rng = Rng::new(seed);
+        let mut out: Vec<Genome> = Vec::new();
+        while out.len() < n {
+            let g = space.sample(&mut rng);
+            if !out.contains(&g) {
+                out.push(g);
+            }
+        }
+        out
     }
 
     #[test]
@@ -273,9 +398,7 @@ mod tests {
         // trials 0 and 2 and 3 share genome `a`
         let genomes = vec![a.clone(), b.clone(), a.clone(), a.clone()];
         let pool = ParallelEvaluator::new(MockEval::new(), 3);
-        let batch = pool
-            .evaluate_batch(requests(&genomes, 11))
-            .unwrap();
+        let batch = pool.evaluate_batch(requests(&genomes, 11)).unwrap();
 
         assert_eq!(batch.len(), 4, "every trial gets a record");
         assert_eq!(pool.evaluations(), 2, "only unique genomes are trained");
@@ -323,17 +446,161 @@ mod tests {
     }
 
     #[test]
+    fn stream_emits_every_trial_in_order() {
+        let mut genomes = distinct_genomes(12, 12);
+        genomes[7] = genomes[2].clone(); // duplicate inside the batch
+        let pool = ParallelEvaluator::new(MockEval::new(), 4);
+        let mut seen: Vec<(usize, bool)> = Vec::new();
+        pool.evaluate_stream(requests(&genomes, 5), |t| seen.push((t.trial_id, t.cached)))
+            .unwrap();
+        assert_eq!(
+            seen.iter().map(|&(id, _)| id).collect::<Vec<_>>(),
+            (0..12).collect::<Vec<_>>(),
+            "streamed trials arrive in trial order"
+        );
+        assert!(seen[7].1, "duplicate genome is served from the in-batch memo");
+        assert!(seen.iter().take(7).all(|&(_, cached)| !cached));
+        assert_eq!(pool.evaluations(), 11);
+        assert_eq!(pool.cache_hits(), 1);
+    }
+
+    #[test]
     fn evaluator_errors_propagate() {
         let space = SearchSpace::table1();
         let mut rng = Rng::new(3);
         let genomes: Vec<Genome> = (0..6).map(|_| space.sample(&mut rng)).collect();
         let mut mock = MockEval::new();
-        mock.fail = true;
+        mock.fail_all = true;
         let pool = ParallelEvaluator::new(mock, 2);
-        let err = pool
-            .evaluate_batch(requests(&genomes, 1))
-            .unwrap_err();
+        let err = pool.evaluate_batch(requests(&genomes, 1)).unwrap_err();
         assert!(format!("{err:#}").contains("mock evaluator failure"));
         assert_eq!(pool.evaluations(), 0, "failures are not counted as trained");
+    }
+
+    /// Regression (the PR-1 batch-failure bug): one failed trial must not
+    /// discard the completed training work of its successful siblings, and
+    /// the propagated error must be the first in dispatch order for every
+    /// worker count.
+    #[test]
+    fn failed_trial_keeps_successful_siblings_cached() {
+        let genomes = distinct_genomes(6, 8);
+        for workers in [1usize, 3] {
+            let mut mock = MockEval::new();
+            // trials 1 and 4 fail; dispatch order == trial order here, so
+            // trial 1's error must win deterministically
+            mock.fail_on = vec![genomes[1].clone(), genomes[4].clone()];
+            let pool = ParallelEvaluator::new(mock, workers);
+            let err = pool.evaluate_batch(requests(&genomes, 2)).unwrap_err();
+            assert!(
+                format!("{err:#}").contains("mock failure #0"),
+                "first dispatch-order error wins (workers={workers}): {err:#}"
+            );
+            // the four successful siblings were committed, not discarded
+            assert_eq!(pool.evaluations(), 4, "workers={workers}");
+            assert_eq!(pool.cache_len(), 4);
+            assert_eq!(pool.inner().calls.load(Ordering::SeqCst), 6);
+            // retrying without the failing genomes is served from cache
+            let ok = vec![
+                genomes[0].clone(),
+                genomes[2].clone(),
+                genomes[3].clone(),
+                genomes[5].clone(),
+            ];
+            let again = pool.evaluate_batch(requests(&ok, 2)).unwrap();
+            assert!(again.iter().all(|t| t.cached));
+            assert_eq!(
+                pool.inner().calls.load(Ordering::SeqCst),
+                6,
+                "no retraining after the failed batch"
+            );
+        }
+    }
+
+    /// Evaluator panic in a worker: the original panic surfaces (via the
+    /// thread scope), and later batches run normally instead of hitting
+    /// an opaque `PoisonError` unwrap far from the root cause.
+    #[test]
+    fn worker_panic_does_not_poison_later_batches() {
+        struct PanickingEval {
+            bad: Genome,
+            space: SearchSpace,
+        }
+        impl TrialEvaluator for PanickingEval {
+            fn evaluate(&self, genome: &Genome, rng: &mut Rng) -> Result<TrialEvaluation> {
+                if *genome == self.bad {
+                    panic!("original worker panic");
+                }
+                let accuracy = 0.5 + 0.4 * rng.uniform();
+                let bops = genome.num_weights(&self.space) as f64;
+                Ok(TrialEvaluation {
+                    accuracy,
+                    bops,
+                    est_avg_resources: None,
+                    est_clock_cycles: None,
+                    objectives: vec![-accuracy, bops],
+                    train_seconds: 0.0,
+                })
+            }
+        }
+
+        let genomes = distinct_genomes(6, 77);
+        for workers in [1usize, 4] {
+            let pool = ParallelEvaluator::new(
+                PanickingEval {
+                    bad: genomes[2].clone(),
+                    space: SearchSpace::table1(),
+                },
+                workers,
+            );
+            let panicked = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let _ = pool.evaluate_batch(requests(&genomes, 1));
+            }));
+            assert!(panicked.is_err(), "the original panic must surface");
+            // locks recover: a later batch over the healthy genomes works
+            let good: Vec<Genome> = genomes
+                .iter()
+                .filter(|g| **g != genomes[2])
+                .cloned()
+                .collect();
+            let batch = pool.evaluate_batch(requests(&good, 1)).unwrap();
+            assert_eq!(batch.len(), 5, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn persistent_cache_skips_retraining_across_pools() {
+        let space = SearchSpace::table1();
+        let genomes = distinct_genomes(5, 6);
+        let dir = std::env::temp_dir().join("snac_parallel_cache_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("eval_cache.json");
+        let _ = std::fs::remove_file(&path);
+
+        let pool = ParallelEvaluator::with_cache(
+            MockEval::new(),
+            2,
+            EvalCache::load(&path, &space, "t"),
+        );
+        let first = pool.evaluate_batch(requests(&genomes, 3)).unwrap();
+        assert_eq!(pool.evaluations(), 5);
+
+        // a fresh pool (≈ a new process) restores the snapshot and
+        // retrains nothing
+        let pool2 = ParallelEvaluator::with_cache(
+            MockEval::new(),
+            2,
+            EvalCache::load(&path, &space, "t"),
+        );
+        assert_eq!(pool2.cache().restored(), 5);
+        let second = pool2.evaluate_batch(requests(&genomes, 3)).unwrap();
+        assert_eq!(pool2.evaluations(), 0, "second run retrains nothing");
+        assert_eq!(pool2.cache_hits(), 5);
+        assert!(second.iter().all(|t| t.cached));
+        for (a, b) in first.iter().zip(&second) {
+            assert_eq!(a.trial_id, b.trial_id);
+            assert_eq!(a.genome, b.genome);
+            assert_eq!(a.evaluation.accuracy, b.evaluation.accuracy);
+            assert_eq!(a.evaluation.objectives, b.evaluation.objectives);
+        }
     }
 }

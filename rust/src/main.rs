@@ -39,9 +39,12 @@ fn parse_cli() -> Result<Cli> {
         bail!(
             "usage: snac-pack <pipeline|search|surrogate|synth|info> \
              [--preset paper|ci|quickstart] [--out DIR] [--artifacts DIR] \
-             [--objectives acc,bops] [--workers N] [--set key=value ...]\n\
+             [--objectives acc,bops] [--workers N] [--cache-path FILE] \
+             [--set key=value ...]\n\
              --preset picks the base regardless of position; \
-             --workers/--set overrides then apply left to right"
+             --workers/--cache-path/--set overrides then apply left to right\n\
+             --cache-path persists the evaluation cache across runs: a \
+             re-run never retrains a previously evaluated genome"
         );
     };
     let mut preset = Preset::by_name("ci")?;
@@ -73,6 +76,9 @@ fn parse_cli() -> Result<Cli> {
             "--workers" => preset
                 .set("workers", value()?)
                 .context("--workers expects a count")?,
+            "--cache-path" => preset
+                .set("cache_path", value()?)
+                .context("--cache-path expects a file path")?,
             "--set" => {
                 let kv = value()?;
                 let (k, v) = kv
@@ -164,6 +170,7 @@ fn main() -> Result<()> {
                     progress: Some(Box::new(|i, n, r: &TrialRecord| {
                         eprintln!("trial {i}/{n}: {} acc={:.4}", r.label, r.accuracy);
                     })),
+                    cache_path: cli.preset.cache_path.as_ref().map(PathBuf::from),
                 },
             )?;
             std::fs::create_dir_all(&cli.out)?;
@@ -177,6 +184,10 @@ fn main() -> Result<()> {
                 snac_pack::eval::resolve_workers(cli.preset.search.workers),
                 outcome.front.len(),
                 cli.out.display()
+            );
+            println!(
+                "cache: {} trained, {} cache hits, {} restored from snapshot",
+                outcome.evaluations, outcome.cache_hits, outcome.cache_restored
             );
             for &i in &outcome.front {
                 let r = &outcome.records[i];

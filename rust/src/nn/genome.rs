@@ -1,8 +1,10 @@
 //! Genome: one point of the Table 1 search space.
 
+use anyhow::{Context, Result};
 
 use super::abi::{IN_DIM, NUM_LAYERS, OUT_DIM};
 use super::space::SearchSpace;
+use crate::util::Json;
 
 /// Activation function choice (Table 1).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -96,6 +98,54 @@ impl Genome {
         space.dropout_choices[self.dropout_idx]
     }
 
+    /// Serialise to JSON (the shared trial-db / eval-cache genome codec).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("n_layers", Json::Num(self.n_layers as f64)),
+            (
+                "width_idx",
+                Json::nums(self.width_idx.iter().map(|&w| w as f64)),
+            ),
+            ("act", Json::Num(self.act.index() as f64)),
+            ("batch_norm", Json::Bool(self.batch_norm)),
+            ("lr_idx", Json::Num(self.lr_idx as f64)),
+            ("l1_idx", Json::Num(self.l1_idx as f64)),
+            ("dropout_idx", Json::Num(self.dropout_idx as f64)),
+        ])
+    }
+
+    /// Parse back from JSON.
+    pub fn from_json(j: &Json) -> Result<Genome> {
+        let num = |k: &str| -> Result<usize> {
+            j.get(k)
+                .and_then(Json::as_usize)
+                .with_context(|| format!("genome missing `{k}`"))
+        };
+        let mut width_idx = [0usize; NUM_LAYERS];
+        for (i, item) in j
+            .get("width_idx")
+            .context("genome missing width_idx")?
+            .items()
+            .iter()
+            .enumerate()
+            .take(NUM_LAYERS)
+        {
+            width_idx[i] = item.as_usize().context("bad width idx")?;
+        }
+        Ok(Genome {
+            n_layers: num("n_layers")?,
+            width_idx,
+            act: Activation::ALL[num("act")?.min(2)],
+            batch_norm: j
+                .get("batch_norm")
+                .and_then(Json::as_bool)
+                .context("genome missing batch_norm")?,
+            lr_idx: num("lr_idx")?,
+            l1_idx: num("l1_idx")?,
+            dropout_idx: num("dropout_idx")?,
+        })
+    }
+
     /// Compact human-readable id, e.g. `d5-64.32.16.32.32-relu-bn`.
     pub fn label(&self, space: &SearchSpace) -> String {
         let widths: Vec<String> = self.widths(space).iter().map(|w| w.to_string()).collect();
@@ -166,5 +216,28 @@ mod tests {
     fn label_is_stable() {
         let g = genome();
         assert_eq!(g.label(&space()), "d5-64.32.16.32.32-relu-bn");
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let mut g = genome();
+        g.act = Activation::Tanh;
+        g.width_idx[2] = 1;
+        let parsed = Genome::from_json(&g.to_json()).unwrap();
+        assert_eq!(parsed, g);
+        // reparsing the emitted text also round-trips (on-disk form)
+        let text = g.to_json().to_string();
+        let parsed = Genome::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(parsed, g);
+    }
+
+    #[test]
+    fn json_rejects_missing_fields() {
+        assert!(Genome::from_json(&Json::obj(vec![])).is_err());
+        let mut j = genome().to_json();
+        if let Json::Obj(m) = &mut j {
+            m.remove("batch_norm");
+        }
+        assert!(Genome::from_json(&j).is_err());
     }
 }
