@@ -27,7 +27,11 @@ fn main() -> Result<()> {
         "[jet-classification] preset `{}`: {} trials × {} epochs, pop {}",
         preset.name, preset.search.trials, preset.search.epochs, preset.search.population
     );
-    let rt = Runtime::load(std::path::Path::new("artifacts"))?;
+    // ./artifacts when present, else whatever this build can load (real
+    // AOT artifacts or the checked-in HLO fixtures executed by the
+    // rust/xla interpreter)
+    let art = snac_pack::runtime::resolve_artifact_dir(std::path::Path::new("artifacts"));
+    let rt = Runtime::load(&art)?;
     let summary = run_pipeline(&rt, &preset, &out)?;
 
     println!("{}", summary.table2);

@@ -19,7 +19,11 @@ use snac_pack::trainer::Trainer;
 use snac_pack::util::Rng;
 
 fn main() -> Result<()> {
-    let rt = Runtime::load(std::path::Path::new("artifacts"))?;
+    // ./artifacts when present, else whatever this build can load (real
+    // AOT artifacts or the checked-in HLO fixtures executed by the
+    // rust/xla interpreter)
+    let art = snac_pack::runtime::resolve_artifact_dir(std::path::Path::new("artifacts"));
+    let rt = Runtime::load(&art)?;
     let ds = Dataset::generate(2560, 640, 640, 7);
     let space = SearchSpace::table1();
     let genome = space.baseline();

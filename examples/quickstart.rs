@@ -31,7 +31,11 @@ fn main() -> Result<()> {
         .and_then(|i| args.get(i + 1))
         .map(PathBuf::from);
 
-    let rt = Runtime::load(std::path::Path::new("artifacts"))?;
+    // ./artifacts when present, else whatever this build can load (real
+    // AOT artifacts or the checked-in HLO fixtures executed by the
+    // rust/xla interpreter)
+    let art = snac_pack::runtime::resolve_artifact_dir(std::path::Path::new("artifacts"));
+    let rt = Runtime::load(&art)?;
     println!("PJRT platform: {}", rt.platform());
 
     let preset = Preset::by_name("quickstart")?;

@@ -16,7 +16,11 @@ use snac_pack::surrogate::{train_surrogate, SurrogatePredictor, SurrogateTrainCo
 use snac_pack::util::{OnlineStats, Rng};
 
 fn main() -> Result<()> {
-    let rt = Runtime::load(std::path::Path::new("artifacts"))?;
+    // ./artifacts when present, else whatever this build can load (real
+    // AOT artifacts or the checked-in HLO fixtures executed by the
+    // rust/xla interpreter)
+    let art = snac_pack::runtime::resolve_artifact_dir(std::path::Path::new("artifacts"));
+    let rt = Runtime::load(&art)?;
     let space = SearchSpace::table1();
     let device = FpgaDevice::vu13p();
     let hls = HlsConfig::default();

@@ -1,0 +1,729 @@
+"""End-to-end numeric validation of the rust/xla HLO-text fixtures.
+
+Unlike the other files in this directory, this needs **numpy only** (no
+JAX): it re-implements, bit-faithfully, the Rust side's PRNG
+(`rust/src/util/rng.rs`), jet generator + dataset
+(`rust/src/data/{jets,dataset}.rs`) and training driver
+(`rust/src/trainer/supernet.rs`), interprets the checked-in HLO fixtures
+under `rust/xla/tests/fixtures/` with a small numpy HLO evaluator that
+mirrors `rust/xla/src/interp.rs` semantics, and asserts the *same
+thresholds* the Rust runtime-gated tests assert:
+
+* `train_step`: 3 epochs on `Dataset::generate(1280, 256, 256, 11)` —
+  loss falls, final epoch < 1.55;
+* `eval_step`: test accuracy > 0.30 for the baseline genome;
+* prune-20% + 1 resumed epoch keeps pruned `w0` coordinates exactly 0
+  and accuracy > 0.30;
+* `surrogate_predict`: zero weights → prediction == output bias (the
+  linear-at-zero-weights property of runtime.rs);
+* `surrogate_train`: Adam steps reduce the MSE loss;
+* the micro local-search budget (warm-up 1 + 3 IMP epochs on the
+  `quickstart` 640-row split) still beats chance at ~50 % sparsity.
+
+Run directly (`python3 python/tests/test_fixture_numerics.py`) or via
+pytest. If thresholds drift, regenerate fixtures with
+`rust/xla/tests/fixtures/generate.py` and re-run this file first.
+"""
+
+import math
+import os
+import re
+import sys
+
+import numpy as np
+
+FIXTURES = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "..", "..", "rust", "xla", "tests", "fixtures"
+)
+
+MASK64 = (1 << 64) - 1
+
+# ---------------------------------------------------------------------------
+# rust/src/util/rng.rs — xoshiro256** + SplitMix64, bit-exact
+# ---------------------------------------------------------------------------
+
+
+def _splitmix64(state):
+    state = (state + 0x9E3779B97F4A7C15) & MASK64
+    z = state
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+    return state, (z ^ (z >> 31)) & MASK64
+
+
+def _rotl(x, k):
+    return ((x << k) | (x >> (64 - k))) & MASK64
+
+
+class Rng:
+    def __init__(self, seed):
+        sm = seed & MASK64
+        s = []
+        for _ in range(4):
+            sm, v = _splitmix64(sm)
+            s.append(v)
+        self.s = s
+        self.spare = None
+
+    def next_u64(self):
+        s = self.s
+        result = (_rotl((s[1] * 5) & MASK64, 7) * 9) & MASK64
+        t = (s[1] << 17) & MASK64
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = _rotl(s[3], 45)
+        return result
+
+    def uniform(self):
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def below(self, n):
+        return (self.next_u64() * n) >> 64
+
+    def chance(self, p):
+        return self.uniform() < p
+
+    def normal(self):
+        if self.spare is not None:
+            z, self.spare = self.spare, None
+            return z
+        u1 = 1.0 - self.uniform()
+        u2 = self.uniform()
+        r = math.sqrt(-2.0 * math.log(u1))
+        theta = 2.0 * math.pi * u2
+        self.spare = r * math.sin(theta)
+        return r * math.cos(theta)
+
+    def normal_f32(self):
+        return np.float32(self.normal())
+
+    def fill_normal(self, n, sigma):
+        sigma = np.float32(sigma)
+        return np.array([self.normal_f32() * sigma for _ in range(n)], dtype=np.float32)
+
+    def choose(self, items):
+        return items[self.below(len(items))]
+
+    def shuffle(self, items):
+        for i in range(len(items) - 1, 0, -1):
+            j = self.below(i + 1)
+            items[i], items[j] = items[j], items[i]
+
+    def permutation(self, n):
+        idx = list(range(n))
+        self.shuffle(idx)
+        return idx
+
+
+# ---------------------------------------------------------------------------
+# rust/src/data/jets.rs + dataset.rs
+# ---------------------------------------------------------------------------
+
+N_CONST, IN_DIM, OUT_DIM = 8, 24, 5
+PAD, L, BATCH, EVAL_BATCH, HP_LEN = 128, 8, 128, 512, 13
+TAU = 2.0 * math.pi
+
+
+def _two_body(mass, pt, rng):
+    dr = 2.0 * mass / pt * (1.0 + 0.18 * rng.normal())
+    axis = rng.uniform() * TAU
+    z = 0.35 + 0.3 * rng.uniform()
+    return [
+        [dr * (1.0 - z) * math.cos(axis), dr * (1.0 - z) * math.sin(axis), z, 0.03],
+        [-dr * z * math.cos(axis), -dr * z * math.sin(axis), 1.0 - z, 0.03],
+    ]
+
+
+def _prongs(cls, pt, rng):
+    if cls == 0:
+        return [[0.0, 0.0, 1.0, 0.04]]
+    if cls == 1:
+        return [[0.0, 0.0, 1.0, 0.10]]
+    if cls == 2:
+        return _two_body(80.4, pt, rng)
+    if cls == 3:
+        return _two_body(91.2, pt, rng)
+    p = _two_body(80.4, pt, rng)
+    dr_b = 2.0 * 172.8 / pt * (1.0 + 0.15 * rng.normal())
+    axis = rng.uniform() * TAU
+    for prong in p:
+        prong[0] += 0.55 * dr_b * math.cos(axis)
+        prong[1] += 0.55 * dr_b * math.sin(axis)
+        prong[2] *= 0.65
+    p.append([-0.45 * dr_b * math.cos(axis), -0.45 * dr_b * math.sin(axis), 0.35, 0.04])
+    return p
+
+
+def generate_jet(cls, rng, pt_range=(800.0, 1200.0), smear=0.025, soft_fraction=0.25):
+    pt = pt_range[0] + (pt_range[1] - pt_range[0]) * rng.uniform()
+    prongs = _prongs(cls, pt, rng)
+    n_pieces = 14 if cls == 1 else (9 if cls == 0 else 12)
+    consts = []
+    for k in range(n_pieces):
+        u = rng.uniform()
+        prong = prongs[0]
+        for p in prongs:
+            if u < p[2]:
+                prong = p
+                break
+            u -= p[2]
+        if k < len(prongs):
+            frac = 0.5 + 0.2 * rng.uniform()
+        else:
+            frac = -math.log(max(rng.uniform(), 1e-9)) * 0.08
+        c_pt = pt * (1.0 - soft_fraction) * frac * prong[2]
+        eta = prong[0] + prong[3] * rng.normal() + smear * rng.normal()
+        phi = prong[1] + prong[3] * rng.normal() + smear * rng.normal()
+        consts.append((c_pt, eta, phi))
+    for _ in range(4):
+        c_pt = pt * soft_fraction * (-math.log(max(rng.uniform(), 1e-9))) * 0.12
+        consts.append((c_pt, 0.35 * rng.normal(), 0.35 * rng.normal()))
+    consts.sort(key=lambda c: c[0], reverse=True)
+    consts = consts[:N_CONST]
+    total_pt = sum(c[0] for c in consts)
+    out = np.zeros(IN_DIM, dtype=np.float32)
+    for i, (c_pt, eta, phi) in enumerate(consts):
+        out[i * 3] = np.float32(c_pt / total_pt)
+        out[i * 3 + 1] = np.float32(eta)
+        out[i * 3 + 2] = np.float32(phi)
+    return out
+
+
+class Dataset:
+    def __init__(self, n_train, n_val, n_test, seed):
+        rng = Rng(seed)
+        total = n_train + n_val + n_test
+        feats = np.zeros((total, IN_DIM), dtype=np.float32)
+        labels = np.zeros(total, dtype=np.int64)
+        for i in range(total):
+            cls = i % OUT_DIM
+            feats[i] = generate_jet(cls, rng)
+            labels[i] = cls
+        perm = rng.permutation(total)
+        feats = feats[perm]
+        labels = labels[perm]
+        # standardise on the train split (f64 stats, applied in f32)
+        tr = feats[:n_train].astype(np.float64)
+        mean = tr.mean(axis=0).astype(np.float32)
+        std = np.maximum(np.sqrt(tr.var(axis=0)).astype(np.float32), np.float32(1e-6))
+        self.features = ((feats - mean) / std).astype(np.float32)
+        self.labels = labels
+        self.n_train, self.n_val, self.n_test = n_train, n_val, n_test
+
+    def split(self, which):
+        a = {"train": 0, "val": self.n_train, "test": self.n_train + self.n_val}[which]
+        b = a + {"train": self.n_train, "val": self.n_val, "test": self.n_test}[which]
+        return a, b
+
+    def train_epoch(self, rng):
+        n = self.n_train
+        perm = rng.permutation(n)
+        batches = []
+        for b in range(n // BATCH):
+            idx = perm[b * BATCH : (b + 1) * BATCH]
+            x = self.features[idx]
+            y = np.zeros((BATCH, OUT_DIM), dtype=np.float32)
+            y[np.arange(BATCH), self.labels[idx]] = 1.0
+            batches.append((x, y, BATCH))
+        return batches
+
+    def eval_tiles(self, which, tile):
+        a, b = self.split(which)
+        out = []
+        i = a
+        while i < b:
+            rows = min(tile, b - i)
+            x = np.zeros((tile, IN_DIM), dtype=np.float32)
+            y = np.zeros((tile, OUT_DIM), dtype=np.float32)
+            x[:rows] = self.features[i : i + rows]
+            y[np.arange(rows), self.labels[i : i + rows]] = 1.0
+            out.append((x, y, rows))
+            i += rows
+        return out
+
+
+# ---------------------------------------------------------------------------
+# numpy HLO interpreter (mirrors rust/xla/src/{parser,interp}.rs semantics)
+# ---------------------------------------------------------------------------
+
+INSTR_RE = re.compile(r"^\s*(ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+)$")
+
+
+def _parse_shape(s, pos):
+    while s[pos] == " ":
+        pos += 1
+    if s[pos] == "(":
+        shapes = []
+        pos += 1
+        while s[pos] != ")":
+            sh, pos = _parse_shape(s, pos)
+            shapes.append(sh)
+            while s[pos] in ", ":
+                pos += 1
+        return ("tuple", shapes), pos + 1
+    m = re.match(r"(\w+)\[([\d,\s]*)\]", s[pos:])
+    dtype = m.group(1)
+    dims = tuple(int(d) for d in m.group(2).split(",") if d.strip())
+    pos += m.end()
+    if pos < len(s) and s[pos] == "{":  # layout — skip
+        pos = s.index("}", pos) + 1
+    return (dtype, dims), pos
+
+
+def _split_top(s):
+    parts, depth, start = [], 0, 0
+    for i, c in enumerate(s):
+        if c in "{[(":
+            depth += 1
+        elif c in "}])":
+            depth -= 1
+        elif c == "," and depth == 0:
+            parts.append(s[start:i])
+            start = i + 1
+    parts.append(s[start:])
+    return [p.strip() for p in parts if p.strip()]
+
+
+def _int_list(v):
+    return [int(t) for t in v.strip().strip("{}").split(",") if t.strip()]
+
+
+class Computation:
+    def __init__(self, name):
+        self.name = name
+        self.instrs = []  # (name, shape, opcode, operands, attrs, root)
+        self.root = None
+
+
+def parse_hlo(text):
+    comps, current = {}, None
+    entry = None
+    for line in text.splitlines():
+        line = line.rstrip()
+        if not line or line.startswith("HloModule"):
+            continue
+        stripped = line.strip()
+        if stripped == "}":
+            current = None
+            continue
+        if current is None:
+            name = stripped.split("(")[0].strip()
+            is_entry = name.startswith("ENTRY")
+            name = name.replace("ENTRY", "").strip().lstrip("%").split()[0]
+            current = Computation(name)
+            comps[name] = current
+            if is_entry:
+                entry = name
+            continue
+        m = INSTR_RE.match(line)
+        root, name, rest = bool(m.group(1)), m.group(2), m.group(3)
+        shape, pos = _parse_shape(rest, 0)
+        rest = rest[pos:].strip()
+        opcode = re.match(r"[\w\-]+", rest).group(0)
+        rest = rest[len(opcode) :]
+        # balanced-paren operand section
+        depth, end = 0, 0
+        for i, c in enumerate(rest):
+            if c == "(":
+                depth += 1
+            elif c == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operand_raw = rest[1:end]
+        attr_raw = rest[end + 1 :].lstrip(", ")
+        attrs = {}
+        for part in _split_top(attr_raw):
+            k, _, v = part.partition("=")
+            attrs[k.strip()] = v.strip()
+        current.instrs.append((name, shape, opcode, operand_raw, attrs, root))
+        if root:
+            current.root = len(current.instrs) - 1
+    return comps, entry
+
+
+_F32 = np.float32
+
+
+def _run_computation(comps, comp, args):
+    env = {}
+    result = None
+    for name, shape, opcode, raw, attrs, root in comp.instrs:
+        ops = [env[t.split()[-1].lstrip("%")] for t in _split_top(raw)] if opcode not in (
+            "parameter",
+            "constant",
+        ) else []
+        if opcode == "parameter":
+            v = args[int(raw)]
+        elif opcode == "constant":
+            toks = [t for t in re.split(r"[{},\s]+", raw) if t]
+            vals = [
+                {"true": 1.0, "false": 0.0, "inf": np.inf, "-inf": -np.inf, "nan": np.nan}.get(
+                    t, None
+                )
+                if not re.match(r"^[-+0-9.eE]+$", t)
+                else float(t)
+                for t in toks
+            ]
+            v = np.array(vals, dtype=_F32).reshape(shape[1])
+        elif opcode in ("add", "subtract", "multiply", "divide", "maximum", "minimum", "power"):
+            a, b = ops
+            v = {
+                "add": np.add,
+                "subtract": np.subtract,
+                "multiply": np.multiply,
+                "divide": np.divide,
+                "maximum": np.maximum,
+                "minimum": np.minimum,
+                "power": np.power,
+            }[opcode](a, b).astype(_F32)
+        elif opcode in ("negate", "abs", "exponential", "log", "sqrt", "rsqrt", "tanh"):
+            (a,) = ops
+            v = {
+                "negate": lambda x: -x,
+                "abs": np.abs,
+                "exponential": np.exp,
+                "log": np.log,
+                "sqrt": np.sqrt,
+                "rsqrt": lambda x: np.float32(1.0) / np.sqrt(x),
+                "tanh": np.tanh,
+            }[opcode](a).astype(_F32)
+        elif opcode == "compare":
+            a, b = ops
+            v = {
+                "EQ": np.equal, "NE": np.not_equal, "LT": np.less,
+                "LE": np.less_equal, "GT": np.greater, "GE": np.greater_equal,
+            }[attrs["direction"]](a, b)
+        elif opcode == "select":
+            p, t, f = ops
+            v = np.where(p, t, f).astype(_F32)
+        elif opcode == "convert":
+            v = ops[0].astype(_F32)
+        elif opcode == "broadcast":
+            (a,) = ops
+            out_dims = shape[1]
+            dims = _int_list(attrs.get("dimensions", "{}"))
+            if a.ndim == 0 or a.size == 1:
+                v = np.broadcast_to(np.asarray(a, dtype=_F32).reshape(()), out_dims).astype(_F32)
+            else:
+                tmp = [1] * len(out_dims)
+                for i, d in enumerate(dims):
+                    tmp[d] = a.shape[i]
+                v = np.broadcast_to(a.reshape(tmp), out_dims).astype(_F32)
+        elif opcode == "reshape":
+            v = ops[0].reshape(shape[1])
+        elif opcode == "transpose":
+            v = np.transpose(ops[0], _int_list(attrs["dimensions"]))
+        elif opcode == "slice":
+            spec = [
+                tuple(int(x) for x in p.strip("[]").split(":"))
+                for p in _split_top(attrs["slice"].strip("{}"))
+            ]
+            idx = tuple(
+                slice(s[0], s[1], s[2] if len(s) == 3 else 1) for s in spec
+            )
+            v = ops[0][idx]
+        elif opcode == "concatenate":
+            v = np.concatenate(ops, axis=_int_list(attrs["dimensions"])[0])
+        elif opcode == "dot":
+            a, b = ops
+            lc = _int_list(attrs.get("lhs_contracting_dims", "{}"))
+            rc = _int_list(attrs.get("rhs_contracting_dims", "{}"))
+            v = np.tensordot(a, b, axes=(lc, rc)).astype(_F32)
+        elif opcode == "reduce":
+            a, init = ops
+            dims = tuple(_int_list(attrs["dimensions"]))
+            region = comps[attrs["to_apply"].lstrip("%")]
+            op = region.instrs[region.root][2]
+            fn = {"add": np.sum, "maximum": np.max, "minimum": np.min, "multiply": np.prod}[op]
+            v = fn(a, axis=dims).astype(_F32)
+            if op == "add":
+                v = (v + init).astype(_F32)
+            # (max/min with -inf/+inf init: identity)
+        elif opcode == "tuple":
+            v = tuple(ops)
+        elif opcode == "get-tuple-element":
+            v = ops[0][int(attrs["index"])]
+        else:
+            raise ValueError(f"unsupported opcode {opcode}")
+        # mirror the Rust evaluator's strictness: every non-tuple result
+        # must match its declared shape exactly, and binary ops only accept
+        # equal sizes or a scalar operand (numpy would silently broadcast)
+        if opcode in ("add", "subtract", "multiply", "divide", "maximum", "minimum", "power"):
+            a, b = ops
+            assert (
+                np.asarray(a).size == np.asarray(b).size
+                or np.asarray(a).size == 1
+                or np.asarray(b).size == 1
+            ), f"%{name}: rust interpreter would reject operand sizes {np.asarray(a).shape} vs {np.asarray(b).shape}"
+        if shape[0] != "tuple" and opcode != "parameter":
+            declared = tuple(shape[1])
+            got = tuple(np.asarray(v).shape)
+            n_declared = int(np.prod(declared)) if declared else 1
+            assert np.asarray(v).size == n_declared, (
+                f"%{name}: declared {declared}, produced {got}"
+            )
+        env[name] = v
+        if root:
+            result = v
+    return result if result is not None else env[comp.instrs[-1][0]]
+
+
+class Executable:
+    def __init__(self, path):
+        with open(path) as f:
+            self.comps, self.entry = parse_hlo(f.read())
+
+    def run(self, args):
+        args = [np.asarray(a, dtype=_F32) for a in args]
+        return _run_computation(self.comps, self.comps[self.entry], args)
+
+
+# ---------------------------------------------------------------------------
+# trainer / genome ports
+# ---------------------------------------------------------------------------
+
+
+def baseline_inputs():
+    widths = [64, 32, 32, 32]
+    unit = np.zeros((L, PAD), dtype=np.float32)
+    gates = np.zeros(L, dtype=np.float32)
+    for i, w in enumerate(widths):
+        unit[i, :w] = 1.0
+        gates[i] = 1.0
+    act_sel = np.array([1.0, 0.0, 0.0], dtype=np.float32)
+    return dict(unit=unit, gates=gates, act_sel=act_sel, bn_gate=1.0, dropout=0.0,
+                lr=0.001, l1=0.0, widths=widths, depth=4)
+
+
+def init_model(rng):
+    w0 = rng.fill_normal(24 * PAD, math.sqrt(2.0 / 24)).reshape(24, PAD)
+    wh = rng.fill_normal((L - 1) * PAD * PAD, math.sqrt(2.0 / PAD)).reshape(L - 1, PAD, PAD)
+    wo = rng.fill_normal(PAD * OUT_DIM, math.sqrt(2.0 / PAD)).reshape(PAD, OUT_DIM)
+    z = lambda *s: np.zeros(s, dtype=np.float32)
+    params = dict(w0=w0, wh=wh, b=z(L, PAD), gamma=np.ones((L, PAD), np.float32),
+                  beta=z(L, PAD), wo=wo, bo=z(OUT_DIM))
+    return dict(params=params,
+                m={k: np.zeros_like(v) for k, v in params.items()},
+                v={k: np.zeros_like(v) for k, v in params.items()},
+                run_mean=z(L, PAD), run_var=np.ones((L, PAD), np.float32),
+                steps=0, history=[])
+
+
+def ones_masks():
+    return dict(p0=np.ones((24, PAD), np.float32),
+                ph=np.ones((L - 1, PAD, PAD), np.float32),
+                po=np.ones((PAD, OUT_DIM), np.float32))
+
+
+PARAM_ORDER = ["w0", "wh", "b", "gamma", "beta", "wo", "bo"]
+
+
+def train(exe, ds, model, inputs, masks, epochs, rng, qat=False):
+    hp = np.zeros(HP_LEN, dtype=np.float32)
+    hp[0] = inputs["bn_gate"]
+    hp[1] = inputs["dropout"]
+    hp[2] = 1.0 if qat else 0.0
+    hp[3] = 8.0
+    hp[4] = inputs["lr"]
+    hp[5] = inputs["l1"]
+    hp[6], hp[7], hp[8] = 0.9, 0.999, 1e-8
+    hp[12] = 0.1
+    for _ in range(epochs):
+        batches = ds.train_epoch(rng)
+        loss_sum, correct_sum, rows = 0.0, 0.0, 0
+        for x, y1h, nrows in batches:
+            model["steps"] += 1
+            t = model["steps"]
+            hp[9] = np.float32(0.9) ** t
+            hp[10] = np.float32(0.999) ** t
+            hp[11] = float(model["steps"] % (1 << 24))
+            p, m, v = model["params"], model["m"], model["v"]
+            args = (
+                [p[k] for k in PARAM_ORDER]
+                + [m[k] for k in PARAM_ORDER]
+                + [v[k] for k in PARAM_ORDER]
+                + [inputs["unit"], masks["p0"], masks["ph"], masks["po"],
+                   inputs["gates"], inputs["act_sel"], hp.copy(),
+                   model["run_mean"], model["run_var"], x, y1h]
+            )
+            out = exe.run(args)
+            for i, k in enumerate(PARAM_ORDER):
+                p[k] = out[i].reshape(p[k].shape)
+                m[k] = out[7 + i].reshape(m[k].shape)
+                v[k] = out[14 + i].reshape(v[k].shape)
+            loss_sum += float(out[21])
+            correct_sum += float(out[22])
+            model["run_mean"] = out[23].reshape(L, PAD)
+            model["run_var"] = out[24].reshape(L, PAD)
+            rows += nrows
+        model["history"].append((loss_sum / max(len(batches), 1), correct_sum / max(rows, 1)))
+
+
+def evaluate(exe, ds, model, inputs, masks, which, qat=False):
+    ehp = np.array([inputs["bn_gate"], 1.0 if qat else 0.0, 8.0], dtype=np.float32)
+    p = model["params"]
+    correct, loss_sum, total = 0, 0.0, 0
+    for x, y1h, rows in ds.eval_tiles(which, EVAL_BATCH):
+        args = ([p[k] for k in PARAM_ORDER]
+                + [inputs["unit"], masks["p0"], masks["ph"], masks["po"],
+                   inputs["gates"], inputs["act_sel"], ehp,
+                   model["run_mean"], model["run_var"], x, y1h])
+        out = exe.run(args)
+        logits = np.asarray(out[2], dtype=np.float64).reshape(EVAL_BATCH, OUT_DIM)
+        for r in range(rows):
+            row = logits[r]
+            pred = int(np.argmax(row))
+            label = int(np.argmax(y1h[r]))
+            if pred == label:
+                correct += 1
+            mx = row.max()
+            lse = mx + math.log(np.exp(row - mx).sum())
+            loss_sum += lse - row[label]
+        total += rows
+    return correct / max(total, 1), loss_sum / max(total, 1)
+
+
+def active_coords(inputs):
+    """Global indices of active (tensor-order p0, ph, po) coordinates."""
+    unit, depth = inputs["unit"], inputs["depth"]
+    p0_len, ph_len = 24 * PAD, (L - 1) * PAD * PAD
+    out = []
+    for i in range(p0_len):
+        if unit[0, i % PAD] != 0:
+            out.append(i)
+    for i in range(ph_len):
+        layer = i // (PAD * PAD) + 1
+        col = i % PAD
+        row = (i // PAD) % PAD
+        if layer < depth and unit[layer, col] != 0 and unit[layer - 1, row] != 0:
+            out.append(p0_len + i)
+    last = depth - 1
+    for i in range(PAD * OUT_DIM):
+        if unit[last, i // OUT_DIM] != 0:
+            out.append(p0_len + ph_len + i)
+    return np.array(out)
+
+
+def prune_step(masks, params, inputs, fraction):
+    p0_len, ph_len = 24 * PAD, (L - 1) * PAD * PAD
+    flat_w = np.concatenate([params["w0"].ravel(), params["wh"].ravel(), params["wo"].ravel()])
+    flat_m = np.concatenate([masks["p0"].ravel(), masks["ph"].ravel(), masks["po"].ravel()])
+    act = active_coords(inputs)
+    surv = act[flat_m[act] != 0]
+    k = int(len(surv) * fraction)
+    if k:
+        order = np.argsort(np.abs(flat_w[surv]), kind="stable")
+        flat_m[surv[order[:k]]] = 0.0
+    masks["p0"] = flat_m[:p0_len].reshape(24, PAD)
+    masks["ph"] = flat_m[p0_len : p0_len + ph_len].reshape(L - 1, PAD, PAD)
+    masks["po"] = flat_m[p0_len + ph_len :].reshape(PAD, OUT_DIM)
+
+
+# ---------------------------------------------------------------------------
+# the actual checks
+# ---------------------------------------------------------------------------
+
+
+def test_surrogate_predict_linear_at_zero_weights():
+    exe = Executable(os.path.join(FIXTURES, "surrogate_predict.hlo.txt"))
+    z = np.zeros
+    args = [z((72, 128)), z(128), z((128, 128)), z(128), z((128, 6)),
+            np.array([1, 2, 3, 4, 5, 6], dtype=np.float32),
+            np.full((256, 72), 0.5, dtype=np.float32)]
+    (pred,) = exe.run(args)
+    assert pred.shape == (256, 6)
+    assert np.array_equal(pred, np.tile(np.arange(1, 7, dtype=np.float32), (256, 1)))
+    print("surrogate_predict: linear at zero weights OK")
+
+
+def test_surrogate_train_reduces_loss():
+    exe = Executable(os.path.join(FIXTURES, "surrogate_train.hlo.txt"))
+    rng = Rng(123)
+    params = [
+        rng.fill_normal(72 * 128, math.sqrt(2.0 / 72)).reshape(72, 128),
+        np.zeros(128, np.float32),
+        rng.fill_normal(128 * 128, math.sqrt(2.0 / 128)).reshape(128, 128),
+        np.zeros(128, np.float32),
+        rng.fill_normal(128 * 6, math.sqrt(2.0 / 128)).reshape(128, 6),
+        np.zeros(6, np.float32),
+    ]
+    m = [np.zeros_like(p) for p in params]
+    v = [np.zeros_like(p) for p in params]
+    x = rng.fill_normal(256 * 72, 1.0).reshape(256, 72)
+    # targets: a fixed random linear map of the features (learnable)
+    w_true = rng.fill_normal(72 * 6, 0.3).reshape(72, 6)
+    y = (x @ w_true).astype(np.float32)
+    losses = []
+    for t in range(1, 41):
+        shp = np.array([1e-3, 0.9, 0.999, 1e-8,
+                        np.float32(0.9) ** t, np.float32(0.999) ** t], dtype=np.float32)
+        out = exe.run(params + m + v + [x, y, shp])
+        params = [np.asarray(o) for o in out[0:6]]
+        m = [np.asarray(o) for o in out[6:12]]
+        v = [np.asarray(o) for o in out[12:18]]
+        losses.append(float(out[18]))
+    print(f"surrogate_train: loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+    assert losses[-1] < 0.5 * losses[0], (losses[0], losses[-1])
+
+
+def test_train_eval_prune_resume_thresholds():
+    train_exe = Executable(os.path.join(FIXTURES, "train_step.hlo.txt"))
+    eval_exe = Executable(os.path.join(FIXTURES, "eval_step.hlo.txt"))
+    ds = Dataset(1280, 256, 256, 11)
+    inputs = baseline_inputs()
+    masks = ones_masks()
+    rng = Rng(0)
+    model = init_model(rng)
+    train(train_exe, ds, model, inputs, masks, 3, rng)
+    losses = [h[0] for h in model["history"]]
+    print(f"train_step: epoch losses {['%.4f' % l for l in losses]}")
+    assert losses[-1] < losses[0], "loss should fall"
+    assert losses[-1] < 1.55, losses[-1]
+    acc, loss = evaluate(eval_exe, ds, model, inputs, masks, "test")
+    print(f"eval_step: test acc {acc:.4f}, loss {loss:.4f}")
+    assert acc > 0.30, acc
+    assert loss < 1.6, loss
+
+    prune_step(masks, model["params"], inputs, 0.2)
+    train(train_exe, ds, model, inputs, masks, 1, rng, qat=True)
+    w0, p0 = model["params"]["w0"], masks["p0"]
+    assert np.all(w0[p0 == 0.0] == 0.0), "pruned coordinates must stay zero"
+    acc_q, _ = evaluate(eval_exe, ds, model, inputs, masks, "test", qat=True)
+    print(f"pruned+resumed: test acc {acc_q:.4f}")
+    assert acc_q > 0.30, acc_q
+
+
+def test_micro_local_search_budget_beats_chance():
+    """The pipeline integration budget: quickstart data (640 train rows),
+    warm-up 1 epoch + 3 IMP iterations x 1 epoch, deployment ~50 %."""
+    train_exe = Executable(os.path.join(FIXTURES, "train_step.hlo.txt"))
+    eval_exe = Executable(os.path.join(FIXTURES, "eval_step.hlo.txt"))
+    ds = Dataset(640, 256, 256, 7)
+    inputs = baseline_inputs()
+    masks = ones_masks()
+    rng = Rng(1 ^ 0x10CA1)
+    model = init_model(rng)
+    train(train_exe, ds, model, inputs, masks, 1, rng)  # warm-up
+    sweep = []
+    for it in range(3):
+        prune_step(masks, model["params"], inputs, 0.2)
+        train(train_exe, ds, model, inputs, masks, 1, rng, qat=True)
+        acc, _ = evaluate(eval_exe, ds, model, inputs, masks, "val", qat=True)
+        sweep.append(acc)
+    acc, _ = evaluate(eval_exe, ds, model, inputs, masks, "test", qat=True)
+    print(f"micro local search: val sweep {['%.4f' % a for a in sweep]}, test {acc:.4f}")
+    assert acc > 0.2, acc
+
+
+if __name__ == "__main__":
+    test_surrogate_predict_linear_at_zero_weights()
+    test_surrogate_train_reduces_loss()
+    test_train_eval_prune_resume_thresholds()
+    test_micro_local_search_budget_beats_chance()
+    print("all fixture numerics OK")
+    sys.exit(0)

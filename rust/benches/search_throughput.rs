@@ -15,6 +15,10 @@
 //! 3. **Cache persistence** — runs the same search twice against one
 //!    `EvalCache` snapshot file and asserts the warm run retrains
 //!    nothing.
+//! 4. **Interpreter execute throughput** — loads the PJRT runtime against
+//!    the checked-in HLO fixtures (or real AOT artifacts when built) and
+//!    times `surrogate_predict`/`train_step` executions through the
+//!    `rust/xla` HLO interpreter.
 //!
 //! Writes `BENCH_search.json` for the per-commit perf trajectory.
 
@@ -28,7 +32,9 @@ use snac_pack::eval::{
     EvalCache, EvalRequest, ParallelEvaluator, TrialEvaluation, TrialEvaluator,
 };
 use snac_pack::hls::{synthesize, FpgaDevice, HlsConfig, NetworkSpec};
-use snac_pack::nn::{Genome, SearchSpace};
+use snac_pack::nn::{self, Genome, SearchSpace};
+use snac_pack::runtime::runtime::arg;
+use snac_pack::runtime::Runtime;
 use snac_pack::search::Nsga2Config;
 use snac_pack::util::{Json, Rng};
 
@@ -196,6 +202,144 @@ fn dispatch_streaming(pool: &ParallelEvaluator<SkewedTrainer>, reqs: Vec<EvalReq
     accs
 }
 
+/// Phase 4: time HLO executions through the `rust/xla` interpreter (or
+/// real PJRT bindings when the native artifacts are built). Returns the
+/// JSON block for `BENCH_search.json`.
+fn bench_interpreter() -> anyhow::Result<Json> {
+    let dir = snac_pack::runtime::artifact_dir()
+        .ok_or_else(|| anyhow::anyhow!("no artifact/fixture manifest in this tree"))?;
+    let t0 = Instant::now();
+    let rt = Runtime::load(&dir)?;
+    let load_secs = t0.elapsed().as_secs_f64();
+    let mut rng = Rng::new(99);
+
+    // surrogate_predict: the per-generation estimate batch
+    let mut sw1 = vec![0.0f32; nn::SUR_FEATS * nn::SUR_HIDDEN];
+    let mut sw2 = vec![0.0f32; nn::SUR_HIDDEN * nn::SUR_HIDDEN];
+    let mut sw3 = vec![0.0f32; nn::SUR_HIDDEN * nn::SUR_OUT];
+    rng.fill_normal(&mut sw1, 0.1);
+    rng.fill_normal(&mut sw2, 0.1);
+    rng.fill_normal(&mut sw3, 0.1);
+    let sb1 = vec![0.0f32; nn::SUR_HIDDEN];
+    let sb2 = vec![0.0f32; nn::SUR_HIDDEN];
+    let sb3 = vec![0.0f32; nn::SUR_OUT];
+    let mut x = vec![0.0f32; nn::SUR_BATCH * nn::SUR_FEATS];
+    rng.fill_normal(&mut x, 1.0);
+    let predict_args = [
+        arg("sw1", &sw1),
+        arg("sb1", &sb1),
+        arg("sw2", &sw2),
+        arg("sb2", &sb2),
+        arg("sw3", &sw3),
+        arg("sb3", &sb3),
+        arg("x", &x),
+    ];
+    const PREDICT_EXECS: usize = 32;
+    rt.run("surrogate_predict", &predict_args)?; // warm-up
+    let t0 = Instant::now();
+    for _ in 0..PREDICT_EXECS {
+        std::hint::black_box(rt.run("surrogate_predict", &predict_args)?);
+    }
+    let predict_secs = t0.elapsed().as_secs_f64();
+
+    // train_step: the trial-training hot path
+    let space = SearchSpace::table1();
+    let genome = space.baseline();
+    let inputs = snac_pack::nn::SupernetInputs::compile(&genome, &space);
+    let masks = snac_pack::nn::PruneMasks::ones();
+    let params = snac_pack::nn::SupernetParams::init(&mut rng);
+    let adam = snac_pack::nn::SupernetParams::zeros();
+    let mut hp = [0.0f32; nn::HP_LEN];
+    hp[nn::HP_BN_GATE] = inputs.bn_gate;
+    hp[nn::HP_LR] = inputs.lr;
+    hp[nn::HP_BITS] = 8.0;
+    hp[nn::HP_BETA1] = 0.9;
+    hp[nn::HP_BETA2] = 0.999;
+    hp[nn::HP_EPS] = 1e-8;
+    hp[nn::HP_BETA1_POW] = 0.9;
+    hp[nn::HP_BETA2_POW] = 0.999;
+    hp[nn::HP_BN_MOM] = 0.1;
+    let run_mean = vec![0.0f32; nn::NUM_LAYERS * nn::PAD];
+    let run_var = vec![1.0f32; nn::NUM_LAYERS * nn::PAD];
+    let mut xb = vec![0.0f32; nn::BATCH * nn::IN_DIM];
+    rng.fill_normal(&mut xb, 1.0);
+    let mut y1h = vec![0.0f32; nn::BATCH * nn::OUT_DIM];
+    for r in 0..nn::BATCH {
+        y1h[r * nn::OUT_DIM + r % nn::OUT_DIM] = 1.0;
+    }
+    let train_args = [
+        arg("w0", &params.w0),
+        arg("wh", &params.wh),
+        arg("b", &params.b),
+        arg("gamma", &params.gamma),
+        arg("beta", &params.beta),
+        arg("wo", &params.wo),
+        arg("bo", &params.bo),
+        arg("m_w0", &adam.w0),
+        arg("m_wh", &adam.wh),
+        arg("m_b", &adam.b),
+        arg("m_gamma", &adam.gamma),
+        arg("m_beta", &adam.beta),
+        arg("m_wo", &adam.wo),
+        arg("m_bo", &adam.bo),
+        arg("v_w0", &adam.w0),
+        arg("v_wh", &adam.wh),
+        arg("v_b", &adam.b),
+        arg("v_gamma", &adam.gamma),
+        arg("v_beta", &adam.beta),
+        arg("v_wo", &adam.wo),
+        arg("v_bo", &adam.bo),
+        arg("unit", &inputs.unit),
+        arg("p0", &masks.p0),
+        arg("ph", &masks.ph),
+        arg("po", &masks.po),
+        arg("gates", &inputs.gates),
+        arg("act_sel", &inputs.act_sel),
+        arg("hp", &hp),
+        arg("run_mean", &run_mean),
+        arg("run_var", &run_var),
+        arg("x", &xb),
+        arg("y1h", &y1h),
+    ];
+    const TRAIN_EXECS: usize = 32;
+    rt.run("train_step", &train_args)?; // warm-up
+    let t0 = Instant::now();
+    for _ in 0..TRAIN_EXECS {
+        std::hint::black_box(rt.run("train_step", &train_args)?);
+    }
+    let train_secs = t0.elapsed().as_secs_f64();
+
+    println!(
+        "bench search/interpreter_load   {:>10}  (platform `{}`, {} artifacts)",
+        common::fmt(load_secs),
+        rt.platform(),
+        rt.manifest().artifacts.len()
+    );
+    println!(
+        "bench search/interpreter_pred   {:>10}  {:>7.1} execs/s (surrogate_predict)",
+        common::fmt(predict_secs / PREDICT_EXECS as f64),
+        PREDICT_EXECS as f64 / predict_secs
+    );
+    println!(
+        "bench search/interpreter_train  {:>10}  {:>7.1} execs/s (train_step)",
+        common::fmt(train_secs / TRAIN_EXECS as f64),
+        TRAIN_EXECS as f64 / train_secs
+    );
+    Ok(Json::obj(vec![
+        ("platform", Json::Str(rt.platform())),
+        ("artifact_dir", Json::Str(dir.display().to_string())),
+        ("load_seconds", Json::Num(load_secs)),
+        (
+            "surrogate_predict_execs_per_sec",
+            Json::Num(PREDICT_EXECS as f64 / predict_secs),
+        ),
+        (
+            "train_step_execs_per_sec",
+            Json::Num(TRAIN_EXECS as f64 / train_secs),
+        ),
+    ]))
+}
+
 fn main() -> anyhow::Result<()> {
     println!("== SNAC-Pack search-throughput bench ==");
     println!(
@@ -311,8 +455,12 @@ fn main() -> anyhow::Result<()> {
         warm.cache_restored
     );
 
+    // ---- phase 4: interpreter execute throughput ----
+    let interpreter = bench_interpreter()?;
+
     let report = Json::obj(vec![
         ("bench", Json::Str("search_throughput".to_string())),
+        ("interpreter", interpreter),
         (
             "budget",
             Json::obj(vec![

@@ -52,9 +52,12 @@ impl TrialRecord {
     pub fn from_json(j: &Json, space: &SearchSpace) -> Result<TrialRecord> {
         let genome = Genome::from_json(j.get("genome").context("missing genome")?)?;
         anyhow::ensure!(space.contains(&genome), "genome outside search space");
+        // required fields read `null` back as NaN (the writer serialises
+        // non-finite numbers as `null` — see util::Json); optional
+        // estimates keep `as_f64`, where `null` means "not estimated"
         let f = |k: &str| -> Result<f64> {
             j.get(k)
-                .and_then(Json::as_f64)
+                .and_then(Json::as_f64_or_nan)
                 .with_context(|| format!("missing `{k}`"))
         };
         let optf = |k: &str| j.get(k).and_then(Json::as_f64);
@@ -72,7 +75,7 @@ impl TrialRecord {
                 .context("missing objectives")?
                 .items()
                 .iter()
-                .filter_map(Json::as_f64)
+                .filter_map(Json::as_f64_or_nan)
                 .collect(),
             train_seconds: f("train_seconds")?,
         })
@@ -139,6 +142,32 @@ mod tests {
             assert_eq!(parsed.est_avg_resources, res);
             assert_eq!(parsed.est_clock_cycles, cc);
         }
+    }
+
+    #[test]
+    fn nan_fields_round_trip_as_nan_not_missing() {
+        // the writer serialises NaN as `null`; a NaN accuracy/objective
+        // must read back as NaN (same shape), not drop or fail the record
+        let space = SearchSpace::table1();
+        let mut rng = Rng::new(7);
+        let genome = space.sample(&mut rng);
+        let rec = TrialRecord {
+            id: 1,
+            generation: 0,
+            label: genome.label(&space),
+            genome,
+            accuracy: f64::NAN,
+            bops: 10.0,
+            est_avg_resources: None,
+            est_clock_cycles: None,
+            objectives: vec![f64::NAN, 10.0],
+            train_seconds: 0.1,
+        };
+        let parsed = TrialRecord::from_json(&rec.to_json(), &space).unwrap();
+        assert!(parsed.accuracy.is_nan());
+        assert_eq!(parsed.objectives.len(), 2);
+        assert!(parsed.objectives[0].is_nan());
+        assert_eq!(parsed.objectives[1], 10.0);
     }
 
     #[test]

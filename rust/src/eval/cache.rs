@@ -176,9 +176,12 @@ fn entry_to_json(genome: &Genome, e: &TrialEvaluation) -> Json {
 fn entry_from_json(j: &Json, space: &SearchSpace) -> Result<(Genome, TrialEvaluation)> {
     let genome = Genome::from_json(j.get("genome").context("cache entry missing genome")?)?;
     anyhow::ensure!(space.contains(&genome), "cached genome outside the search space");
+    // required fields read `null` back as NaN (the writer serialises
+    // non-finite numbers as `null`); optional estimates keep `as_f64`,
+    // where `null` legitimately means "not estimated"
     let f = |k: &str| -> Result<f64> {
         j.get(k)
-            .and_then(Json::as_f64)
+            .and_then(Json::as_f64_or_nan)
             .with_context(|| format!("cache entry missing `{k}`"))
     };
     let optf = |k: &str| j.get(k).and_then(Json::as_f64);
@@ -187,7 +190,7 @@ fn entry_from_json(j: &Json, space: &SearchSpace) -> Result<(Genome, TrialEvalua
         .context("cache entry missing objectives")?
         .items()
         .iter()
-        .filter_map(Json::as_f64)
+        .filter_map(Json::as_f64_or_nan)
         .collect();
     anyhow::ensure!(!objectives.is_empty(), "cache entry has an empty objective vector");
     Ok((
@@ -354,6 +357,43 @@ mod tests {
             assert_eq!(reloaded.restored(), 1);
             assert!(reloaded.contains(&g));
         }
+    }
+
+    #[test]
+    fn nan_objective_round_trips_without_poisoning_the_snapshot() {
+        // regression: `write!`-serialised NaN/inf produced `NaN`/`inf`
+        // tokens Json::parse rejects, so one bad objective made the whole
+        // snapshot read back as "corrupted" and silently discarded every
+        // cached evaluation on the next run.
+        let space = SearchSpace::table1();
+        let mut rng = Rng::new(44);
+        let path = tmp_path("nan_objective.json");
+        let _ = std::fs::remove_file(&path);
+
+        let good = space.sample(&mut rng);
+        let bad = space.sample(&mut rng);
+        let cache = EvalCache::load(&path, &space, "test");
+        cache.insert(good.clone(), evaluation(0.62, Some(2.0), Some(7.0)));
+        let mut poisoned = evaluation(f64::NAN, None, None);
+        poisoned.objectives = vec![f64::NAN, 1234.0];
+        cache.insert(bad.clone(), poisoned);
+
+        let reloaded = EvalCache::load(&path, &space, "test");
+        assert_eq!(
+            reloaded.restored(),
+            2,
+            "NaN entry must not discard the snapshot"
+        );
+        // the good sibling is fully intact...
+        let g = reloaded.lookup(&good).unwrap();
+        assert_eq!(g.accuracy, 0.62);
+        assert_eq!(g.objectives, vec![-0.62, 1234.0]);
+        // ...and the NaN entry reads back as NaN with its full shape
+        let b = reloaded.lookup(&bad).unwrap();
+        assert!(b.accuracy.is_nan());
+        assert_eq!(b.objectives.len(), 2);
+        assert!(b.objectives[0].is_nan());
+        assert_eq!(b.objectives[1], 1234.0);
     }
 
     #[test]

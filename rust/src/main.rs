@@ -11,7 +11,7 @@
 //! snac-pack info                                         # runtime/artifact info
 //! ```
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
@@ -29,8 +29,21 @@ struct Cli {
     command: String,
     preset: Preset,
     out: PathBuf,
-    artifacts: PathBuf,
+    /// `--artifacts DIR` override; `None` resolves lazily (only for
+    /// commands that actually load the runtime, so e.g. `synth` never
+    /// prints the fixture-fallback notice).
+    artifacts: Option<PathBuf>,
     objectives: Vec<ObjectiveKind>,
+}
+
+impl Cli {
+    /// The artifact directory this invocation should load.
+    fn artifacts_dir(&self) -> PathBuf {
+        match &self.artifacts {
+            Some(dir) => dir.clone(),
+            None => snac_pack::runtime::resolve_artifact_dir(Path::new("artifacts")),
+        }
+    }
 }
 
 fn parse_cli() -> Result<Cli> {
@@ -49,7 +62,11 @@ fn parse_cli() -> Result<Cli> {
     };
     let mut preset = Preset::by_name("ci")?;
     let mut out = PathBuf::from("results");
-    let mut artifacts = PathBuf::from("artifacts");
+    // default (no --artifacts): resolved lazily by Cli::artifacts_dir —
+    // ./artifacts when present, else whatever this build can load (real
+    // AOT artifacts, falling back to the checked-in HLO fixtures the
+    // rust/xla interpreter executes)
+    let mut artifacts: Option<PathBuf> = None;
     let mut objectives = ObjectiveKind::nac_set();
     // --preset resolves first so `--workers 8 --preset paper` keeps the 8:
     // the preset is the base, every other flag is an override on top.
@@ -71,7 +88,7 @@ fn parse_cli() -> Result<Cli> {
         match flag.as_str() {
             "--preset" => {} // consumed in the first pass
             "--out" => out = PathBuf::from(value()?),
-            "--artifacts" => artifacts = PathBuf::from(value()?),
+            "--artifacts" => artifacts = Some(PathBuf::from(value()?)),
             "--objectives" => objectives = ObjectiveKind::parse_set(value()?)?,
             "--workers" => preset
                 .set("workers", value()?)
@@ -103,7 +120,7 @@ fn main() -> Result<()> {
     let cli = parse_cli()?;
     match cli.command.as_str() {
         "info" => {
-            let rt = Runtime::load(&cli.artifacts)?;
+            let rt = Runtime::load(&cli.artifacts_dir())?;
             println!("platform: {}", rt.platform());
             for (name, spec) in &rt.manifest().artifacts {
                 println!(
@@ -115,7 +132,7 @@ fn main() -> Result<()> {
             }
         }
         "pipeline" => {
-            let rt = Runtime::load(&cli.artifacts)?;
+            let rt = Runtime::load(&cli.artifacts_dir())?;
             let summary = coordinator::run_pipeline(&rt, &cli.preset, &cli.out)?;
             println!("{}", summary.table2);
             println!("{}", summary.table3);
@@ -126,7 +143,7 @@ fn main() -> Result<()> {
             println!("reports written to {}", cli.out.display());
         }
         "search" => {
-            let rt = Runtime::load(&cli.artifacts)?;
+            let rt = Runtime::load(&cli.artifacts_dir())?;
             let space = SearchSpace::table1();
             let device = FpgaDevice::vu13p();
             let ds = Dataset::generate(
@@ -195,7 +212,7 @@ fn main() -> Result<()> {
             }
         }
         "surrogate" => {
-            let rt = Runtime::load(&cli.artifacts)?;
+            let rt = Runtime::load(&cli.artifacts_dir())?;
             let space = SearchSpace::table1();
             let device = FpgaDevice::vu13p();
             let hls = HlsConfig::default();

@@ -16,3 +16,56 @@ pub mod runtime;
 
 pub use manifest::{ArtifactSpec, Manifest};
 pub use runtime::{Runtime, TensorArg};
+
+use std::path::{Path, PathBuf};
+
+/// Locate an artifact directory this build can load, in preference order:
+///
+/// 1. `rust/artifacts/` — real AOT artifacts produced by `make artifacts`
+///    (the JAX lowering); always wins when present.
+/// 2. `rust/xla/tests/fixtures/` — the checked-in hand-authored HLO
+///    fixtures executed by the `rust/xla` interpreter, so the runtime path
+///    works out of a fresh clone with no Python at all.
+///
+/// Returns `None` only when neither contains a `manifest.json` (e.g. a
+/// stripped release tree), so callers can emit a precise error.
+///
+/// Note the preference is unconditional: a tree with real AOT artifacts is
+/// expected to also link the real PJRT bindings (rust/xla/README.md) — the
+/// interpreter rejects ops outside its documented set at `Runtime::load`
+/// rather than falling back to fixtures, so real-artifact breakage is loud
+/// instead of silently masked by simplified fixtures.
+pub fn artifact_dir() -> Option<PathBuf> {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    [root.join("artifacts"), root.join("xla/tests/fixtures")]
+        .into_iter()
+        .find(|d| d.join("manifest.json").exists())
+}
+
+/// CLI-style resolution: `preferred` (conventionally `./artifacts`) when it
+/// holds a manifest, else whatever this build can load via
+/// [`artifact_dir`], else `preferred` unchanged so the eventual
+/// `Runtime::load` error still names the conventional path.
+///
+/// Falling back is *announced* on stderr: the fixture artifacts are a
+/// simplified supernet (see rust/xla/tests/fixtures/README.md), so a user
+/// who forgot `make artifacts` must be able to see their numbers came from
+/// interpreted fixtures, not the real AOT graphs.
+pub fn resolve_artifact_dir(preferred: &Path) -> PathBuf {
+    if preferred.join("manifest.json").exists() {
+        return preferred.to_path_buf();
+    }
+    match artifact_dir() {
+        Some(dir) => {
+            eprintln!(
+                "[runtime] no manifest in {}; loading artifacts from {} \
+                 (checked-in fixtures run through the rust/xla interpreter — \
+                 run `make artifacts` for the real AOT graphs)",
+                preferred.display(),
+                dir.display()
+            );
+            dir
+        }
+        None => preferred.to_path_buf(),
+    }
+}

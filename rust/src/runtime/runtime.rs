@@ -99,15 +99,34 @@ impl Runtime {
                     .with_context(|| format!("uploading `{}`", a.name))?,
             );
         }
-        let exe = self.exes.get(name).unwrap();
+        // `spec()` above proves `name` is in the manifest, and `load`
+        // compiles every manifest artifact — but keep this a typed error
+        // (not a panic) so a future partial-load path fails with context.
+        let exe = self.exes.get(name).with_context(|| {
+            format!(
+                "artifact `{name}` is in the manifest but was never compiled \
+                 (loaded: {:?})",
+                self.exes.keys().collect::<Vec<_>>()
+            )
+        })?;
         let result = exe
             .execute_b(&buffers)
             .with_context(|| format!("executing `{name}`"))?;
         // single replica; the graph was lowered with return_tuple=True
-        let tuple = result[0][0]
+        let replica = result
+            .into_iter()
+            .next()
+            .with_context(|| format!("artifact `{name}` returned no replica outputs"))?;
+        let out = replica
+            .into_iter()
+            .next()
+            .with_context(|| format!("artifact `{name}` returned no output buffer"))?;
+        let tuple = out
             .to_literal_sync()
-            .context("downloading result")?;
-        let leaves = tuple.to_tuple().context("untupling result")?;
+            .with_context(|| format!("downloading result of `{name}`"))?;
+        let leaves = tuple
+            .to_tuple()
+            .with_context(|| format!("untupling result of `{name}`"))?;
         if leaves.len() != spec.outputs.len() {
             bail!(
                 "artifact `{name}` returned {} outputs, manifest says {}",
@@ -127,21 +146,24 @@ mod tests {
     use super::*;
     use crate::nn;
 
-    fn art_dir() -> std::path::PathBuf {
-        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    /// Real AOT artifacts when built, else the checked-in HLO fixtures —
+    /// never skipped: a clone with neither is a broken clone.
+    fn runtime() -> Runtime {
+        let dir = crate::runtime::artifact_dir()
+            .expect("no artifacts/ and no xla/tests/fixtures/ manifest — fixtures are checked in, so this tree is incomplete");
+        Runtime::load(&dir).expect("runtime load")
     }
 
-    fn runtime() -> Option<Runtime> {
-        if !art_dir().join("manifest.json").exists() {
-            eprintln!("skipping: artifacts not built");
-            return None;
-        }
-        Some(Runtime::load(&art_dir()).expect("runtime load"))
+    #[test]
+    fn loads_from_fixtures_and_reports_platform() {
+        let rt = runtime();
+        assert!(!rt.platform().is_empty());
+        assert!(rt.manifest().artifacts.contains_key("surrogate_predict"));
     }
 
     #[test]
     fn surrogate_predict_runs_and_is_linear_at_zero_weights() {
-        let Some(rt) = runtime() else { return };
+        let rt = runtime();
         let z1 = vec![0.0f32; nn::SUR_FEATS * nn::SUR_HIDDEN];
         let zb1 = vec![0.0f32; nn::SUR_HIDDEN];
         let z2 = vec![0.0f32; nn::SUR_HIDDEN * nn::SUR_HIDDEN];
@@ -174,8 +196,15 @@ mod tests {
     }
 
     #[test]
+    fn unknown_artifact_is_a_typed_error_with_the_name() {
+        let rt = runtime();
+        let err = rt.run("nonexistent", &[]).unwrap_err();
+        assert!(format!("{err:#}").contains("nonexistent"));
+    }
+
+    #[test]
     fn wrong_input_order_is_rejected() {
-        let Some(rt) = runtime() else { return };
+        let rt = runtime();
         let z = vec![0.0f32; 4];
         let err = rt
             .run("surrogate_predict", &[arg("sb1", &z)])
@@ -185,7 +214,7 @@ mod tests {
 
     #[test]
     fn wrong_element_count_is_rejected() {
-        let Some(rt) = runtime() else { return };
+        let rt = runtime();
         let short = vec![0.0f32; 3];
         let args: Vec<TensorArg> = ["sw1", "sb1", "sw2", "sb2", "sw3", "sb3", "x"]
             .iter()

@@ -60,6 +60,19 @@ impl Json {
         }
     }
 
+    /// Numeric value honouring the writer's non-finite convention: this
+    /// module emits NaN/±inf as `null` (JSON has no such literals), so
+    /// readers of *required* numeric fields map `null` back to NaN rather
+    /// than shrinking arrays or failing the whole document. Readers of
+    /// *optional* fields keep [`Json::as_f64`], where `null` means absent.
+    pub fn as_f64_or_nan(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            Json::Null => Some(f64::NAN),
+            _ => None,
+        }
+    }
+
     /// Integer value (rounded).
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|f| f.round() as usize)
@@ -95,7 +108,14 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                if !n.is_finite() {
+                    // JSON has no NaN/Infinity literal; `write!` would emit
+                    // `NaN`/`inf`, which `Json::parse` rejects — one such
+                    // value used to poison a whole document (the persistent
+                    // eval-cache snapshot). Emit `null`; readers that care
+                    // map it back to NaN (see eval/cache.rs).
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
                     let _ = write!(out, "{}", *n as i64);
                 } else {
                     let _ = write!(out, "{n}");
@@ -330,15 +350,21 @@ mod tests {
 
     #[test]
     fn parses_the_real_manifest() {
-        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/manifest.json");
-        if let Ok(text) = std::fs::read_to_string(path) {
-            let man = Json::parse(&text).unwrap();
-            assert_eq!(
-                man.get("constants").unwrap().get("pad").unwrap().as_usize(),
-                Some(128)
-            );
-            assert!(man.get("artifacts").unwrap().get("train_step").is_some());
-        }
+        // real AOT manifest when built, else the always-present fixture one
+        let real = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/manifest.json");
+        let fixture = concat!(
+            env!("CARGO_MANIFEST_DIR"),
+            "/xla/tests/fixtures/manifest.json"
+        );
+        let text = std::fs::read_to_string(real)
+            .or_else(|_| std::fs::read_to_string(fixture))
+            .expect("no manifest.json found (fixtures are checked in)");
+        let man = Json::parse(&text).unwrap();
+        assert_eq!(
+            man.get("constants").unwrap().get("pad").unwrap().as_usize(),
+            Some(128)
+        );
+        assert!(man.get("artifacts").unwrap().get("train_step").is_some());
     }
 
     #[test]
@@ -366,6 +392,20 @@ mod tests {
     fn integers_emit_without_fraction() {
         assert_eq!(Json::Num(128.0).to_string(), "128");
         assert_eq!(Json::Num(0.5).to_string(), "0.5");
+    }
+
+    #[test]
+    fn non_finite_numbers_emit_null_and_stay_parseable() {
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let doc = Json::obj(vec![("v", Json::Num(bad)), ("ok", Json::Num(1.5))]);
+            let text = doc.to_string();
+            // the document as a whole must survive a round trip
+            let back = Json::parse(&text).unwrap_or_else(|e| {
+                panic!("non-finite {bad} produced unparseable JSON `{text}`: {e}")
+            });
+            assert_eq!(back.get("v"), Some(&Json::Null));
+            assert_eq!(back.get("ok").and_then(Json::as_f64), Some(1.5));
+        }
     }
 
     #[test]

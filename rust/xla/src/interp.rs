@@ -1,0 +1,815 @@
+//! Evaluator for parsed HLO modules.
+//!
+//! Values are host-side `f32` buffers (`pred` is stored as 0.0/1.0,
+//! integers as their rounded value — exact below 2^24, far beyond anything
+//! the SNAC-Pack artifacts index). Tuples are trees of arrays. Each
+//! instruction is evaluated once in program order (HLO text is
+//! topologically sorted by construction), so evaluation is a single linear
+//! pass with no recursion except `reduce`'s `to_apply` regions.
+//!
+//! Performance notes: `dot` is the only hot operation. It is implemented
+//! as a general dot-general (batch + contracting + free dims) using
+//! additive offset tables, with the innermost loop running over the rhs
+//! free dimensions so the accumulator row and the rhs row are both walked
+//! contiguously for the row-major rank-2 matmuls the artifacts consist of.
+
+use crate::parser::{BinaryOp, CmpDir, Computation, DType, Module, Op, Shape, UnaryOp};
+use crate::{Error, Result};
+
+/// A host-side array value.
+#[derive(Debug, Clone)]
+pub struct ArrayValue {
+    pub shape: Shape,
+    pub data: Vec<f32>,
+}
+
+impl ArrayValue {
+    /// New array, validating the element count.
+    pub fn new(shape: Shape, data: Vec<f32>) -> Result<ArrayValue> {
+        if shape.elems() != data.len() {
+            return Err(Error::msg(format!(
+                "shape {:?} holds {} elements, got {}",
+                shape.dims,
+                shape.elems(),
+                data.len()
+            )));
+        }
+        Ok(ArrayValue { shape, data })
+    }
+
+    fn scalar(v: f32, dtype: DType) -> ArrayValue {
+        ArrayValue {
+            shape: Shape { dtype, dims: vec![] },
+            data: vec![v],
+        }
+    }
+
+    fn is_scalar(&self) -> bool {
+        self.data.len() == 1 && self.shape.dims.iter().all(|&d| d == 1)
+    }
+}
+
+/// An array or a tuple of values (tuples nest, matching HLO).
+#[derive(Debug, Clone)]
+pub enum Value {
+    Array(ArrayValue),
+    Tuple(Vec<Value>),
+}
+
+impl Value {
+    /// The array, or an error for tuples.
+    pub fn array(&self) -> Result<&ArrayValue> {
+        match self {
+            Value::Array(a) => Ok(a),
+            Value::Tuple(_) => Err(Error::msg("expected an array value, found a tuple")),
+        }
+    }
+}
+
+/// Run a computation of `module` on the given arguments.
+pub fn evaluate(module: &Module, comp_idx: usize, args: &[Value]) -> Result<Value> {
+    let comp = &module.computations[comp_idx];
+    if args.len() != comp.params.len() {
+        return Err(Error::msg(format!(
+            "computation `{}` takes {} parameters, got {} arguments",
+            comp.name,
+            comp.params.len(),
+            args.len()
+        )));
+    }
+    let mut slots: Vec<Option<Value>> = vec![None; comp.instrs.len()];
+    for (idx, instr) in comp.instrs.iter().enumerate() {
+        let value = eval_instr(module, comp, idx, &slots, args).map_err(|e| {
+            Error::msg(format!(
+                "evaluating `%{}` in computation `{}`: {e}",
+                instr.name, comp.name
+            ))
+        })?;
+        slots[idx] = Some(value);
+    }
+    slots[comp.root]
+        .take()
+        .ok_or_else(|| Error::msg("root instruction produced no value"))
+}
+
+fn get<'a>(slots: &'a [Option<Value>], idx: usize) -> Result<&'a Value> {
+    slots
+        .get(idx)
+        .and_then(|v| v.as_ref())
+        .ok_or_else(|| Error::msg("operand evaluated out of order"))
+}
+
+fn get_array<'a>(slots: &'a [Option<Value>], idx: usize) -> Result<&'a ArrayValue> {
+    get(slots, idx)?.array()
+}
+
+fn out_shape(comp: &Computation, idx: usize) -> Result<&Shape> {
+    comp.instrs[idx].shape.array()
+}
+
+fn eval_instr(
+    module: &Module,
+    comp: &Computation,
+    idx: usize,
+    slots: &[Option<Value>],
+    args: &[Value],
+) -> Result<Value> {
+    let instr = &comp.instrs[idx];
+    match &instr.op {
+        Op::Parameter(n) => {
+            let arg = args
+                .get(*n)
+                .ok_or_else(|| Error::msg(format!("missing argument {n}")))?;
+            if let (Ok(decl), Value::Array(a)) = (instr.shape.array(), arg) {
+                if decl.elems() != a.data.len() {
+                    return Err(Error::msg(format!(
+                        "parameter {n} expects shape {:?} ({} elements), argument has {}",
+                        decl.dims,
+                        decl.elems(),
+                        a.data.len()
+                    )));
+                }
+                // dims must match too: equal element counts with different
+                // dims (e.g. a transposed manifest entry) would otherwise
+                // flow into downstream ops as silently wrong numerics
+                if decl.dims != a.shape.dims {
+                    return Err(Error::msg(format!(
+                        "parameter {n} expects dims {:?}, argument uploaded as {:?}",
+                        decl.dims, a.shape.dims
+                    )));
+                }
+            }
+            Ok(arg.clone())
+        }
+        Op::Constant(data) => {
+            let shape = out_shape(comp, idx)?.clone();
+            Ok(Value::Array(ArrayValue::new(shape, data.clone())?))
+        }
+        Op::Unary(op, a) => {
+            let a = get_array(slots, *a)?;
+            let data = a.data.iter().map(|&v| unary(*op, v)).collect();
+            Ok(Value::Array(ArrayValue {
+                shape: out_shape(comp, idx)?.clone(),
+                data,
+            }))
+        }
+        Op::Binary(op, a, b) => {
+            let (a, b) = (get_array(slots, *a)?, get_array(slots, *b)?);
+            let shape = out_shape(comp, idx)?.clone();
+            Ok(Value::Array(binary_elementwise(*op, a, b, shape)?))
+        }
+        Op::Compare { dir, lhs, rhs } => {
+            let (a, b) = (get_array(slots, *lhs)?, get_array(slots, *rhs)?);
+            let shape = out_shape(comp, idx)?.clone();
+            let out = zip_broadcast(a, b, shape, |x, y| {
+                let r = match dir {
+                    CmpDir::Eq => x == y,
+                    CmpDir::Ne => x != y,
+                    CmpDir::Lt => x < y,
+                    CmpDir::Le => x <= y,
+                    CmpDir::Gt => x > y,
+                    CmpDir::Ge => x >= y,
+                };
+                if r {
+                    1.0
+                } else {
+                    0.0
+                }
+            })?;
+            Ok(Value::Array(out))
+        }
+        Op::Select {
+            pred,
+            on_true,
+            on_false,
+        } => {
+            let p = get_array(slots, *pred)?;
+            let t = get_array(slots, *on_true)?;
+            let f = get_array(slots, *on_false)?;
+            if t.data.len() != f.data.len() {
+                return Err(Error::msg("select branches have mismatched sizes"));
+            }
+            let shape = out_shape(comp, idx)?.clone();
+            let data: Vec<f32> = if p.is_scalar() {
+                if p.data[0] != 0.0 {
+                    t.data.clone()
+                } else {
+                    f.data.clone()
+                }
+            } else {
+                if p.data.len() != t.data.len() {
+                    return Err(Error::msg("select predicate has mismatched size"));
+                }
+                p.data
+                    .iter()
+                    .zip(t.data.iter().zip(&f.data))
+                    .map(|(&p, (&t, &f))| if p != 0.0 { t } else { f })
+                    .collect()
+            };
+            Ok(Value::Array(ArrayValue::new(shape, data)?))
+        }
+        Op::Broadcast { operand, dims } => {
+            let a = get_array(slots, *operand)?;
+            let shape = out_shape(comp, idx)?.clone();
+            Ok(Value::Array(broadcast(a, dims, shape)?))
+        }
+        Op::Reshape(operand) | Op::Copy(operand) => {
+            let a = get_array(slots, *operand)?;
+            let shape = out_shape(comp, idx)?.clone();
+            ArrayValue::new(shape, a.data.clone()).map(Value::Array)
+        }
+        Op::Convert(operand) => {
+            let a = get_array(slots, *operand)?;
+            let shape = out_shape(comp, idx)?.clone();
+            let data = if shape.dtype.is_integer() {
+                a.data.iter().map(|v| v.trunc()).collect()
+            } else if shape.dtype == DType::Pred {
+                a.data
+                    .iter()
+                    .map(|&v| if v != 0.0 { 1.0 } else { 0.0 })
+                    .collect()
+            } else {
+                a.data.clone()
+            };
+            ArrayValue::new(shape, data).map(Value::Array)
+        }
+        Op::Transpose { operand, perm } => {
+            let a = get_array(slots, *operand)?;
+            let shape = out_shape(comp, idx)?.clone();
+            Ok(Value::Array(transpose(a, perm, shape)?))
+        }
+        Op::Slice {
+            operand,
+            starts,
+            limits,
+            strides,
+        } => {
+            let a = get_array(slots, *operand)?;
+            let shape = out_shape(comp, idx)?.clone();
+            Ok(Value::Array(slice(a, starts, limits, strides, shape)?))
+        }
+        Op::Concat { operands, dim } => {
+            let parts: Vec<&ArrayValue> = operands
+                .iter()
+                .map(|&i| get_array(slots, i))
+                .collect::<Result<_>>()?;
+            let shape = out_shape(comp, idx)?.clone();
+            Ok(Value::Array(concat(&parts, *dim, shape)?))
+        }
+        Op::Iota { dim } => {
+            let shape = out_shape(comp, idx)?.clone();
+            if *dim >= shape.dims.len() {
+                return Err(Error::msg(format!(
+                    "iota_dimension {dim} out of range for shape {:?}",
+                    shape.dims
+                )));
+            }
+            let strides = shape.strides();
+            let n = shape.elems();
+            let (size, stride) = (shape.dims[*dim], strides[*dim]);
+            let mut data = vec![0.0f32; n];
+            for (i, v) in data.iter_mut().enumerate() {
+                *v = ((i / stride) % size) as f32;
+            }
+            ArrayValue::new(shape, data).map(Value::Array)
+        }
+        Op::Dot {
+            lhs,
+            rhs,
+            lhs_contracting,
+            rhs_contracting,
+            lhs_batch,
+            rhs_batch,
+        } => {
+            let (a, b) = (get_array(slots, *lhs)?, get_array(slots, *rhs)?);
+            let shape = out_shape(comp, idx)?.clone();
+            Ok(Value::Array(dot_general(
+                a,
+                b,
+                lhs_contracting,
+                rhs_contracting,
+                lhs_batch,
+                rhs_batch,
+                shape,
+            )?))
+        }
+        Op::Reduce {
+            operand,
+            init,
+            dims,
+            to_apply,
+        } => {
+            let a = get_array(slots, *operand)?;
+            let init = get_array(slots, *init)?;
+            if init.data.len() != 1 {
+                return Err(Error::msg("reduce init value must be a scalar"));
+            }
+            let shape = out_shape(comp, idx)?.clone();
+            Ok(Value::Array(reduce(
+                module, *to_apply, a, init.data[0], dims, shape,
+            )?))
+        }
+        Op::Tuple(operands) => {
+            let elems = operands
+                .iter()
+                .map(|&i| get(slots, i).cloned())
+                .collect::<Result<Vec<_>>>()?;
+            Ok(Value::Tuple(elems))
+        }
+        Op::GetTupleElement { operand, index } => match get(slots, *operand)? {
+            Value::Tuple(elems) => elems
+                .get(*index)
+                .cloned()
+                .ok_or_else(|| Error::msg(format!("tuple has no element {index}"))),
+            Value::Array(_) => Err(Error::msg("get-tuple-element of a non-tuple")),
+        },
+    }
+}
+
+fn unary(op: UnaryOp, v: f32) -> f32 {
+    match op {
+        UnaryOp::Negate => -v,
+        UnaryOp::Abs => v.abs(),
+        UnaryOp::Exp => v.exp(),
+        UnaryOp::Expm1 => v.exp_m1(),
+        UnaryOp::Log => v.ln(),
+        UnaryOp::Log1p => v.ln_1p(),
+        UnaryOp::Sqrt => v.sqrt(),
+        UnaryOp::Rsqrt => 1.0 / v.sqrt(),
+        UnaryOp::Tanh => v.tanh(),
+        UnaryOp::Floor => v.floor(),
+        UnaryOp::Ceil => v.ceil(),
+        UnaryOp::RoundAfz => v.round(),
+        UnaryOp::RoundEven => {
+            // ties-to-even without `round_ties_even` (stable only ≥ 1.77):
+            // `round` rounds half away from zero; pull exact .5 ties back
+            // to the even neighbour.
+            let r = v.round();
+            if (r - v).abs() == 0.5 && r % 2.0 != 0.0 {
+                r - (r - v).signum()
+            } else {
+                r
+            }
+        }
+        UnaryOp::Sign => {
+            if v > 0.0 {
+                1.0
+            } else if v < 0.0 {
+                -1.0
+            } else {
+                v // preserves ±0 and propagates NaN like XLA's sign
+            }
+        }
+        UnaryOp::Cos => v.cos(),
+        UnaryOp::Sin => v.sin(),
+        UnaryOp::Logistic => 1.0 / (1.0 + (-v).exp()),
+        UnaryOp::Not => {
+            if v != 0.0 {
+                0.0
+            } else {
+                1.0
+            }
+        }
+    }
+}
+
+fn binary_scalar(op: BinaryOp, x: f32, y: f32) -> f32 {
+    match op {
+        BinaryOp::Add => x + y,
+        BinaryOp::Sub => x - y,
+        BinaryOp::Mul => x * y,
+        BinaryOp::Div => x / y,
+        BinaryOp::Max => x.max(y),
+        BinaryOp::Min => x.min(y),
+        BinaryOp::Pow => x.powf(y),
+        BinaryOp::Rem => x % y,
+        BinaryOp::And => {
+            if x != 0.0 && y != 0.0 {
+                1.0
+            } else {
+                0.0
+            }
+        }
+        BinaryOp::Or => {
+            if x != 0.0 || y != 0.0 {
+                1.0
+            } else {
+                0.0
+            }
+        }
+        BinaryOp::Xor => {
+            if (x != 0.0) != (y != 0.0) {
+                1.0
+            } else {
+                0.0
+            }
+        }
+    }
+}
+
+/// Elementwise combine with implicit *scalar* broadcasting: HLO proper
+/// requires explicit `broadcast` for rank mismatches, but accepting a
+/// rank-0 operand directly keeps the hand-authored fixtures readable (see
+/// tests/fixtures/README.md) and matches what an explicit broadcast would
+/// compute.
+fn zip_broadcast(
+    a: &ArrayValue,
+    b: &ArrayValue,
+    shape: Shape,
+    f: impl Fn(f32, f32) -> f32,
+) -> Result<ArrayValue> {
+    let data: Vec<f32> = if a.data.len() == b.data.len() {
+        a.data.iter().zip(&b.data).map(|(&x, &y)| f(x, y)).collect()
+    } else if a.is_scalar() {
+        let x = a.data[0];
+        b.data.iter().map(|&y| f(x, y)).collect()
+    } else if b.is_scalar() {
+        let y = b.data[0];
+        a.data.iter().map(|&x| f(x, y)).collect()
+    } else {
+        return Err(Error::msg(format!(
+            "elementwise operands have mismatched sizes {} vs {}",
+            a.data.len(),
+            b.data.len()
+        )));
+    };
+    ArrayValue::new(shape, data)
+}
+
+fn binary_elementwise(
+    op: BinaryOp,
+    a: &ArrayValue,
+    b: &ArrayValue,
+    shape: Shape,
+) -> Result<ArrayValue> {
+    zip_broadcast(a, b, shape, |x, y| binary_scalar(op, x, y))
+}
+
+/// `broadcast(operand), dimensions={...}`: `dims[i]` is the output
+/// dimension that operand dimension `i` maps to.
+fn broadcast(a: &ArrayValue, dims: &[usize], shape: Shape) -> Result<ArrayValue> {
+    if dims.len() != a.shape.dims.len() {
+        return Err(Error::msg(format!(
+            "broadcast dimensions {:?} do not match operand rank {}",
+            dims,
+            a.shape.dims.len()
+        )));
+    }
+    let out_strides = shape.strides();
+    for (i, &d) in dims.iter().enumerate() {
+        if d >= shape.dims.len() || shape.dims[d] != a.shape.dims[i] {
+            return Err(Error::msg(format!(
+                "broadcast maps operand dim {i} (size {}) to output dim {d} of {:?}",
+                a.shape.dims[i], shape.dims
+            )));
+        }
+    }
+    let n = shape.elems();
+    let mut data = vec![0.0f32; n];
+    if a.data.len() == 1 {
+        data.fill(a.data[0]);
+        return ArrayValue::new(shape, data);
+    }
+    // operand index = Σ_i out_coord[dims[i]] * a_stride[i]
+    let a_strides = a.shape.strides();
+    for (out_idx, v) in data.iter_mut().enumerate() {
+        let mut a_idx = 0usize;
+        for (i, &d) in dims.iter().enumerate() {
+            let coord = (out_idx / out_strides[d]) % shape.dims[d];
+            a_idx += coord * a_strides[i];
+        }
+        *v = a.data[a_idx];
+    }
+    ArrayValue::new(shape, data)
+}
+
+/// `transpose(operand), dimensions={perm}`: output dim `i` is operand dim
+/// `perm[i]`.
+fn transpose(a: &ArrayValue, perm: &[usize], shape: Shape) -> Result<ArrayValue> {
+    if perm.len() != a.shape.dims.len() {
+        return Err(Error::msg("transpose permutation rank mismatch"));
+    }
+    let mut seen = vec![false; perm.len()];
+    for (i, &p) in perm.iter().enumerate() {
+        if p >= a.shape.dims.len() || std::mem::replace(&mut seen[p], true) {
+            return Err(Error::msg(format!("transpose dimensions {perm:?} are not a permutation")));
+        }
+        if shape.dims.get(i) != Some(&a.shape.dims[p]) {
+            return Err(Error::msg(format!(
+                "transpose output dim {i} should be {} (operand dim {p}), declared {:?}",
+                a.shape.dims[p], shape.dims
+            )));
+        }
+    }
+    let out_strides = shape.strides();
+    let a_strides = a.shape.strides();
+    let n = shape.elems();
+    let mut data = vec![0.0f32; n];
+    for (out_idx, v) in data.iter_mut().enumerate() {
+        let mut a_idx = 0usize;
+        for (i, &p) in perm.iter().enumerate() {
+            let coord = (out_idx / out_strides[i]) % shape.dims[i];
+            a_idx += coord * a_strides[p];
+        }
+        *v = a.data[a_idx];
+    }
+    ArrayValue::new(shape, data)
+}
+
+fn slice(
+    a: &ArrayValue,
+    starts: &[usize],
+    limits: &[usize],
+    strides: &[usize],
+    shape: Shape,
+) -> Result<ArrayValue> {
+    let rank = a.shape.dims.len();
+    if starts.len() != rank || limits.len() != rank || strides.len() != rank {
+        return Err(Error::msg("slice spec rank mismatch"));
+    }
+    for d in 0..rank {
+        if limits[d] > a.shape.dims[d] || starts[d] > limits[d] || strides[d] == 0 {
+            return Err(Error::msg(format!(
+                "slice [{}:{}:{}] out of bounds for dim {d} (size {})",
+                starts[d], limits[d], strides[d], a.shape.dims[d]
+            )));
+        }
+        let produced = (limits[d] - starts[d]).div_ceil(strides[d]);
+        if shape.dims.get(d) != Some(&produced) {
+            return Err(Error::msg(format!(
+                "slice [{}:{}:{}] produces {produced} elements along dim {d}, \
+                 declared shape says {:?}",
+                starts[d], limits[d], strides[d], shape.dims
+            )));
+        }
+    }
+    let out_strides = shape.strides();
+    let a_strides = a.shape.strides();
+    let n = shape.elems();
+    let mut data = vec![0.0f32; n];
+    for (out_idx, v) in data.iter_mut().enumerate() {
+        let mut a_idx = 0usize;
+        for d in 0..rank {
+            let coord = (out_idx / out_strides[d]) % shape.dims[d];
+            a_idx += (starts[d] + coord * strides[d]) * a_strides[d];
+        }
+        *v = a.data[a_idx];
+    }
+    ArrayValue::new(shape, data)
+}
+
+fn concat(parts: &[&ArrayValue], dim: usize, shape: Shape) -> Result<ArrayValue> {
+    if parts.is_empty() {
+        return Err(Error::msg("concatenate of zero operands"));
+    }
+    let rank = parts[0].shape.dims.len();
+    if dim >= rank {
+        return Err(Error::msg("concatenate dimension out of range"));
+    }
+    // every operand must agree on all dimensions except `dim`
+    for (i, p) in parts.iter().enumerate() {
+        if p.shape.dims.len() != rank
+            || p.shape
+                .dims
+                .iter()
+                .zip(&parts[0].shape.dims)
+                .enumerate()
+                .any(|(d, (a, b))| d != dim && a != b)
+        {
+            return Err(Error::msg(format!(
+                "concatenate operand {i} has shape {:?}, incompatible with {:?} along dim {dim}",
+                p.shape.dims, parts[0].shape.dims
+            )));
+        }
+    }
+    // outer = product of dims before `dim`; inner = product after
+    let outer: usize = parts[0].shape.dims[..dim].iter().product();
+    let inner: usize = parts[0].shape.dims[dim + 1..].iter().product();
+    let mut data = Vec::with_capacity(shape.elems());
+    for o in 0..outer {
+        for p in parts {
+            let rows = p.shape.dims[dim];
+            let chunk = rows * inner;
+            data.extend_from_slice(&p.data[o * chunk..(o + 1) * chunk]);
+        }
+    }
+    ArrayValue::new(shape, data)
+}
+
+/// Additive offset table for a subset of dimensions: enumerates the
+/// coordinates of `dims` (by size) in row-major order and returns each
+/// combination's contribution Σ coord·stride to a flat index.
+fn offset_table(sizes: &[usize], strides: &[usize]) -> Vec<usize> {
+    let total: usize = sizes.iter().product();
+    let mut out = Vec::with_capacity(total.max(1));
+    out.push(0);
+    for (&size, &stride) in sizes.iter().zip(strides) {
+        let prev = std::mem::take(&mut out);
+        out = Vec::with_capacity(prev.len() * size);
+        for base in prev {
+            for c in 0..size {
+                out.push(base + c * stride);
+            }
+        }
+    }
+    out
+}
+
+#[allow(clippy::too_many_arguments)]
+fn dot_general(
+    a: &ArrayValue,
+    b: &ArrayValue,
+    lhs_c: &[usize],
+    rhs_c: &[usize],
+    lhs_b: &[usize],
+    rhs_b: &[usize],
+    shape: Shape,
+) -> Result<ArrayValue> {
+    if lhs_c.len() != rhs_c.len() || lhs_b.len() != rhs_b.len() {
+        return Err(Error::msg("dot contracting/batch dimension arity mismatch"));
+    }
+    for &d in lhs_c.iter().chain(lhs_b) {
+        if d >= a.shape.dims.len() {
+            return Err(Error::msg(format!("dot lhs dimension {d} out of range")));
+        }
+    }
+    for &d in rhs_c.iter().chain(rhs_b) {
+        if d >= b.shape.dims.len() {
+            return Err(Error::msg(format!("dot rhs dimension {d} out of range")));
+        }
+    }
+    let a_strides = a.shape.strides();
+    let b_strides = b.shape.strides();
+    let pick = |dims: &[usize], from: &[usize]| -> Vec<usize> {
+        dims.iter().map(|&d| from[d]).collect()
+    };
+    for (&l, &r) in lhs_c.iter().zip(rhs_c) {
+        if a.shape.dims[l] != b.shape.dims[r] {
+            return Err(Error::msg(format!(
+                "dot contracting sizes differ: lhs dim {l} = {}, rhs dim {r} = {}",
+                a.shape.dims[l], b.shape.dims[r]
+            )));
+        }
+    }
+    for (&l, &r) in lhs_b.iter().zip(rhs_b) {
+        if a.shape.dims[l] != b.shape.dims[r] {
+            return Err(Error::msg("dot batch sizes differ"));
+        }
+    }
+    let lhs_free: Vec<usize> = (0..a.shape.dims.len())
+        .filter(|d| !lhs_c.contains(d) && !lhs_b.contains(d))
+        .collect();
+    let rhs_free: Vec<usize> = (0..b.shape.dims.len())
+        .filter(|d| !rhs_c.contains(d) && !rhs_b.contains(d))
+        .collect();
+
+    let batch_sizes = pick(lhs_b, &a.shape.dims);
+    let contract_sizes = pick(lhs_c, &a.shape.dims);
+    let lf_sizes = pick(&lhs_free, &a.shape.dims);
+    let rf_sizes = pick(&rhs_free, &b.shape.dims);
+
+    let bl = offset_table(&batch_sizes, &pick(lhs_b, &a_strides));
+    let br = offset_table(&batch_sizes, &pick(rhs_b, &b_strides));
+    let cl = offset_table(&contract_sizes, &pick(lhs_c, &a_strides));
+    let cr = offset_table(&contract_sizes, &pick(rhs_c, &b_strides));
+    let lf = offset_table(&lf_sizes, &pick(&lhs_free, &a_strides));
+    let rf = offset_table(&rf_sizes, &pick(&rhs_free, &b_strides));
+
+    let expected: usize = bl.len() * lf.len() * rf.len();
+    if expected != shape.elems() {
+        return Err(Error::msg(format!(
+            "dot output shape {:?} has {} elements, computation produces {expected}",
+            shape.dims,
+            shape.elems()
+        )));
+    }
+    let mut data = vec![0.0f32; expected];
+    let nrf = rf.len();
+    // contiguous fast path: rhs free offsets are 0,1,2,... (free dims are
+    // the trailing dims) — the overwhelmingly common case here
+    let rf_contiguous = rf.iter().enumerate().all(|(i, &o)| o == i);
+    for (bi, (&bl_off, &br_off)) in bl.iter().zip(&br).enumerate() {
+        for (li, &lf_off) in lf.iter().enumerate() {
+            let row_start = (bi * lf.len() + li) * nrf;
+            let row = &mut data[row_start..row_start + nrf];
+            for (&cl_off, &cr_off) in cl.iter().zip(&cr) {
+                let x = a.data[bl_off + lf_off + cl_off];
+                if x == 0.0 {
+                    // Skipping zero lhs terms is a large win for the
+                    // unit/prune-masked supernet (whole masked columns are
+                    // zero). Documented deviation: XLA would propagate
+                    // 0·inf/0·NaN as NaN; a run whose rhs already holds
+                    // non-finite values is diverged either way.
+                    continue;
+                }
+                let rbase = br_off + cr_off;
+                if rf_contiguous {
+                    let rrow = &b.data[rbase..rbase + nrf];
+                    for (acc, &y) in row.iter_mut().zip(rrow) {
+                        *acc += x * y;
+                    }
+                } else {
+                    for (acc, &roff) in row.iter_mut().zip(&rf) {
+                        *acc += x * b.data[rbase + roff];
+                    }
+                }
+            }
+        }
+    }
+    ArrayValue::new(shape, data)
+}
+
+/// A `to_apply` region recognised as a plain scalar binary op. The
+/// swapped-operand form (`op(%p1, %p0)`) only qualifies when `op` is
+/// commutative — `subtract(%p1, %p0)` must fall through to the general
+/// interpreter, which evaluates the region as written.
+fn fast_reducer(module: &Module, comp_idx: usize) -> Option<BinaryOp> {
+    let comp = module.computations.get(comp_idx)?;
+    if comp.params.len() != 2 {
+        return None;
+    }
+    let root = &comp.instrs[comp.root];
+    if let Op::Binary(op, a, b) = &root.op {
+        let is_params = |x: usize, y: usize| {
+            matches!(comp.instrs[x].op, Op::Parameter(0))
+                && matches!(comp.instrs[y].op, Op::Parameter(1))
+        };
+        let commutative = matches!(
+            op,
+            BinaryOp::Add
+                | BinaryOp::Mul
+                | BinaryOp::Max
+                | BinaryOp::Min
+                | BinaryOp::And
+                | BinaryOp::Or
+                | BinaryOp::Xor
+        );
+        if is_params(*a, *b) || (commutative && is_params(*b, *a)) {
+            return Some(*op);
+        }
+    }
+    None
+}
+
+fn reduce(
+    module: &Module,
+    to_apply: usize,
+    a: &ArrayValue,
+    init: f32,
+    dims: &[usize],
+    shape: Shape,
+) -> Result<ArrayValue> {
+    let rank = a.shape.dims.len();
+    for &d in dims {
+        if d >= rank {
+            return Err(Error::msg("reduce dimension out of range"));
+        }
+    }
+    let kept: Vec<usize> = (0..rank).filter(|d| !dims.contains(d)).collect();
+    let kept_sizes: Vec<usize> = kept.iter().map(|&d| a.shape.dims[d]).collect();
+    let out_elems: usize = kept_sizes.iter().product();
+    if out_elems != shape.elems() {
+        return Err(Error::msg(format!(
+            "reduce output shape {:?} does not match kept dimensions {kept_sizes:?}",
+            shape.dims
+        )));
+    }
+    let a_strides = a.shape.strides();
+    let kept_offsets = offset_table(&kept_sizes, &kept.iter().map(|&d| a_strides[d]).collect::<Vec<_>>());
+    let red_sizes: Vec<usize> = dims.iter().map(|&d| a.shape.dims[d]).collect();
+    let red_offsets = offset_table(&red_sizes, &dims.iter().map(|&d| a_strides[d]).collect::<Vec<_>>());
+
+    let fast = fast_reducer(module, to_apply);
+    let mut data = vec![init; out_elems];
+    match fast {
+        Some(op) => {
+            for (out, &ko) in data.iter_mut().zip(&kept_offsets) {
+                let mut acc = *out;
+                for &ro in &red_offsets {
+                    acc = binary_scalar(op, acc, a.data[ko + ro]);
+                }
+                *out = acc;
+            }
+        }
+        None => {
+            // general path: interpret the region per element
+            let dtype = a.shape.dtype;
+            for (out, &ko) in data.iter_mut().zip(&kept_offsets) {
+                let mut acc = *out;
+                for &ro in &red_offsets {
+                    let r = evaluate(
+                        module,
+                        to_apply,
+                        &[
+                            Value::Array(ArrayValue::scalar(acc, dtype)),
+                            Value::Array(ArrayValue::scalar(a.data[ko + ro], dtype)),
+                        ],
+                    )?;
+                    acc = r.array()?.data[0];
+                }
+                *out = acc;
+            }
+        }
+    }
+    ArrayValue::new(shape, data)
+}

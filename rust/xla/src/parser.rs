@@ -1,0 +1,1050 @@
+//! Recursive-descent parser for the HLO *text* format.
+//!
+//! Covers the subset of the grammar that `python/compile/aot.py` emits
+//! (`jax.jit(...).lower()` → StableHLO → `XlaComputation.as_hlo_text()`)
+//! plus the hand-authored fixtures under `tests/fixtures/`:
+//!
+//! ```text
+//! HloModule name[, module attributes...]
+//!
+//! %helper (a: f32[], b: f32[]) -> f32[] {
+//!   %a = f32[] parameter(0)
+//!   %b = f32[] parameter(1)
+//!   ROOT %add.1 = f32[] add(f32[] %a, f32[] %b)
+//! }
+//!
+//! ENTRY %main (Arg_0.1: f32[2,3]) -> (f32[2,3]) {
+//!   %Arg_0.1 = f32[2,3]{1,0} parameter(0)
+//!   ...
+//!   ROOT %tuple.9 = (f32[2,3]) tuple(%Arg_0.1)
+//! }
+//! ```
+//!
+//! Layout annotations (`{1,0}`), inline operand shapes, and decorative
+//! attributes (`metadata=`, `sharding=`, `backend_config=`, …) are parsed
+//! and discarded. Unknown *opcodes* are a hard error at parse time so an
+//! artifact outside the interpreter's op set fails at `Runtime::load`
+//! with the op's name instead of producing garbage numerics later.
+
+use crate::{Error, Result};
+
+/// Element type of an array shape. Everything is *stored* as `f32`
+/// host-side; the tag drives `convert`, comparison results (`pred`) and
+/// integer rounding semantics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    F64,
+    Bf16,
+    F16,
+    Pred,
+    S8,
+    S32,
+    S64,
+    U8,
+    U32,
+    U64,
+}
+
+impl DType {
+    fn from_str(s: &str) -> Option<DType> {
+        Some(match s {
+            "f32" => DType::F32,
+            "f64" => DType::F64,
+            "bf16" => DType::Bf16,
+            "f16" => DType::F16,
+            "pred" => DType::Pred,
+            "s8" => DType::S8,
+            "s32" => DType::S32,
+            "s64" => DType::S64,
+            "u8" => DType::U8,
+            "u32" => DType::U32,
+            "u64" => DType::U64,
+            _ => return None,
+        })
+    }
+
+    /// Integer types round toward zero on `convert`.
+    pub fn is_integer(self) -> bool {
+        matches!(
+            self,
+            DType::S8 | DType::S32 | DType::S64 | DType::U8 | DType::U32 | DType::U64
+        )
+    }
+}
+
+/// An array shape: element type + dimensions (scalar = empty dims).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Shape {
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+}
+
+impl Shape {
+    /// Total element count.
+    pub fn elems(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    /// Row-major strides.
+    pub fn strides(&self) -> Vec<usize> {
+        let mut s = vec![1usize; self.dims.len()];
+        for i in (0..self.dims.len().saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * self.dims[i + 1];
+        }
+        s
+    }
+}
+
+/// Declared result shape of an instruction (tuples appear only on `tuple`
+/// roots in our artifacts, but nesting is represented anyway).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ShapeDecl {
+    Array(Shape),
+    Tuple(Vec<ShapeDecl>),
+}
+
+impl ShapeDecl {
+    /// The array shape, or an error for tuples.
+    pub fn array(&self) -> Result<&Shape> {
+        match self {
+            ShapeDecl::Array(s) => Ok(s),
+            ShapeDecl::Tuple(_) => Err(Error::msg("expected array shape, found tuple")),
+        }
+    }
+}
+
+/// Comparison direction of a `compare` instruction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CmpDir {
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+}
+
+/// Elementwise unary operations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UnaryOp {
+    Negate,
+    Abs,
+    Exp,
+    Expm1,
+    Log,
+    Log1p,
+    Sqrt,
+    Rsqrt,
+    Tanh,
+    Floor,
+    Ceil,
+    RoundAfz,
+    RoundEven,
+    Sign,
+    Cos,
+    Sin,
+    Logistic,
+    Not,
+}
+
+/// Elementwise binary operations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BinaryOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Max,
+    Min,
+    Pow,
+    Rem,
+    And,
+    Or,
+    Xor,
+}
+
+/// One parsed instruction. Operand values are instruction indices within
+/// the owning computation.
+#[derive(Debug, Clone)]
+pub enum Op {
+    Parameter(usize),
+    Constant(Vec<f32>),
+    Unary(UnaryOp, usize),
+    Binary(BinaryOp, usize, usize),
+    Compare {
+        dir: CmpDir,
+        lhs: usize,
+        rhs: usize,
+    },
+    Select {
+        pred: usize,
+        on_true: usize,
+        on_false: usize,
+    },
+    Broadcast {
+        operand: usize,
+        dims: Vec<usize>,
+    },
+    Reshape(usize),
+    Copy(usize),
+    Convert(usize),
+    Transpose {
+        operand: usize,
+        perm: Vec<usize>,
+    },
+    Slice {
+        operand: usize,
+        starts: Vec<usize>,
+        limits: Vec<usize>,
+        strides: Vec<usize>,
+    },
+    Concat {
+        operands: Vec<usize>,
+        dim: usize,
+    },
+    Iota {
+        dim: usize,
+    },
+    Dot {
+        lhs: usize,
+        rhs: usize,
+        lhs_contracting: Vec<usize>,
+        rhs_contracting: Vec<usize>,
+        lhs_batch: Vec<usize>,
+        rhs_batch: Vec<usize>,
+    },
+    Reduce {
+        operand: usize,
+        init: usize,
+        dims: Vec<usize>,
+        /// Computation index into [`Module::computations`].
+        to_apply: usize,
+    },
+    Tuple(Vec<usize>),
+    GetTupleElement {
+        operand: usize,
+        index: usize,
+    },
+}
+
+/// A named instruction with its declared result shape.
+#[derive(Debug, Clone)]
+pub struct Instr {
+    pub name: String,
+    pub shape: ShapeDecl,
+    pub op: Op,
+}
+
+/// One computation (the entry or a `to_apply` region).
+#[derive(Debug, Clone)]
+pub struct Computation {
+    pub name: String,
+    pub instrs: Vec<Instr>,
+    /// Index of the ROOT instruction.
+    pub root: usize,
+    /// Instruction index of parameter `i`, for each `i`.
+    pub params: Vec<usize>,
+}
+
+/// A parsed HLO module.
+#[derive(Debug, Clone)]
+pub struct Module {
+    pub name: String,
+    pub computations: Vec<Computation>,
+    /// Index of the ENTRY computation.
+    pub entry: usize,
+}
+
+impl Module {
+    /// The ENTRY computation.
+    pub fn entry_computation(&self) -> &Computation {
+        &self.computations[self.entry]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// cursor utilities
+// ---------------------------------------------------------------------------
+
+struct Cursor<'a> {
+    s: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(s: &'a str) -> Cursor<'a> {
+        Cursor { s: s.as_bytes(), pos: 0 }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.s.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) -> Option<u8> {
+        let c = self.peek();
+        if c.is_some() {
+            self.pos += 1;
+        }
+        c
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ') | Some(b'\t')) {
+            self.pos += 1;
+        }
+    }
+
+    fn eat(&mut self, c: u8) -> bool {
+        self.skip_ws();
+        if self.peek() == Some(c) {
+            self.pos += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn expect(&mut self, c: u8, what: &str) -> Result<()> {
+        if self.eat(c) {
+            Ok(())
+        } else {
+            Err(Error::msg(format!(
+                "expected `{}` {what} at byte {} of line",
+                c as char, self.pos
+            )))
+        }
+    }
+
+    /// Identifier: letters, digits, `_`, `.`, `-` (opcodes use hyphens,
+    /// instruction names use dots).
+    fn ident(&mut self) -> String {
+        self.skip_ws();
+        let start = self.pos;
+        while let Some(c) = self.peek() {
+            if c.is_ascii_alphanumeric() || matches!(c, b'_' | b'.' | b'-') {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+        String::from_utf8_lossy(&self.s[start..self.pos]).into_owned()
+    }
+
+    fn integer(&mut self) -> Result<usize> {
+        self.skip_ws();
+        let start = self.pos;
+        while self.peek().is_some_and(|c| c.is_ascii_digit()) {
+            self.pos += 1;
+        }
+        if start == self.pos {
+            return Err(Error::msg(format!("expected integer at byte {start} of line")));
+        }
+        std::str::from_utf8(&self.s[start..self.pos])
+            .ok()
+            .and_then(|t| t.parse().ok())
+            .ok_or_else(|| Error::msg("bad integer"))
+    }
+
+    /// Consume a balanced `{...}` block (quote-aware), returning its inner
+    /// text. The cursor must be at `{`.
+    fn balanced_braces(&mut self) -> Result<String> {
+        self.skip_ws();
+        self.expect(b'{', "opening attribute block")?;
+        let start = self.pos;
+        let mut depth = 1usize;
+        let mut in_str = false;
+        while let Some(c) = self.bump() {
+            match c {
+                b'"' => in_str = !in_str,
+                b'\\' if in_str => {
+                    self.bump();
+                }
+                b'{' if !in_str => depth += 1,
+                b'}' if !in_str => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return Ok(String::from_utf8_lossy(&self.s[start..self.pos - 1])
+                            .into_owned());
+                    }
+                }
+                _ => {}
+            }
+        }
+        Err(Error::msg("unterminated `{...}` block"))
+    }
+
+    /// Consume the raw parenthesized section after an opcode, tracking
+    /// nesting; the cursor must be at `(`. Returns the inner text.
+    fn balanced_parens(&mut self) -> Result<String> {
+        self.skip_ws();
+        self.expect(b'(', "operand list")?;
+        let start = self.pos;
+        let mut depth = 1usize;
+        let mut in_str = false;
+        while let Some(c) = self.bump() {
+            match c {
+                b'"' => in_str = !in_str,
+                b'\\' if in_str => {
+                    self.bump();
+                }
+                b'(' if !in_str => depth += 1,
+                b')' if !in_str => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return Ok(String::from_utf8_lossy(&self.s[start..self.pos - 1])
+                            .into_owned());
+                    }
+                }
+                _ => {}
+            }
+        }
+        Err(Error::msg("unterminated `(...)` operand list"))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// shape parsing
+// ---------------------------------------------------------------------------
+
+fn parse_array_shape(cur: &mut Cursor<'_>) -> Result<Shape> {
+    let dtype_tok = cur.ident();
+    let dtype = DType::from_str(&dtype_tok)
+        .ok_or_else(|| Error::msg(format!("unsupported element type `{dtype_tok}`")))?;
+    cur.expect(b'[', "shape dimensions")?;
+    let mut dims = Vec::new();
+    cur.skip_ws();
+    if cur.peek() != Some(b']') {
+        loop {
+            dims.push(cur.integer()?);
+            if !cur.eat(b',') {
+                break;
+            }
+        }
+    }
+    cur.expect(b']', "closing shape dimensions")?;
+    // optional layout annotation, e.g. `{1,0}` — parsed and discarded
+    cur.skip_ws();
+    if cur.peek() == Some(b'{') {
+        cur.balanced_braces()?;
+    }
+    Ok(Shape { dtype, dims })
+}
+
+fn parse_shape_decl(cur: &mut Cursor<'_>) -> Result<ShapeDecl> {
+    cur.skip_ws();
+    if cur.peek() == Some(b'(') {
+        cur.bump();
+        let mut elems = Vec::new();
+        cur.skip_ws();
+        if cur.peek() != Some(b')') {
+            loop {
+                elems.push(parse_shape_decl(cur)?);
+                if !cur.eat(b',') {
+                    break;
+                }
+            }
+        }
+        cur.expect(b')', "closing tuple shape")?;
+        Ok(ShapeDecl::Tuple(elems))
+    } else {
+        Ok(ShapeDecl::Array(parse_array_shape(cur)?))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// attribute parsing
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Default)]
+struct Attrs {
+    raw: Vec<(String, String)>,
+}
+
+impl Attrs {
+    fn get(&self, key: &str) -> Option<&str> {
+        self.raw
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// `{1,0}` (or a bare integer) → vec of integers.
+    fn int_list(&self, key: &str) -> Result<Vec<usize>> {
+        let v = self
+            .get(key)
+            .ok_or_else(|| Error::msg(format!("missing attribute `{key}`")))?;
+        parse_int_list(v)
+    }
+
+    fn int(&self, key: &str) -> Result<usize> {
+        let v = self
+            .get(key)
+            .ok_or_else(|| Error::msg(format!("missing attribute `{key}`")))?;
+        v.trim()
+            .parse()
+            .map_err(|_| Error::msg(format!("attribute `{key}`: bad integer `{v}`")))
+    }
+}
+
+fn parse_int_list(v: &str) -> Result<Vec<usize>> {
+    let inner = v.trim().trim_start_matches('{').trim_end_matches('}');
+    let mut out = Vec::new();
+    for tok in inner.split(',') {
+        let tok = tok.trim();
+        if tok.is_empty() {
+            continue;
+        }
+        out.push(
+            tok.parse()
+                .map_err(|_| Error::msg(format!("bad integer `{tok}` in `{v}`")))?,
+        );
+    }
+    Ok(out)
+}
+
+/// `{[0:1], [0:128]}` or `{[0:10:2]}` → (starts, limits, strides).
+fn parse_slice_spec(v: &str) -> Result<(Vec<usize>, Vec<usize>, Vec<usize>)> {
+    let inner = v.trim().trim_start_matches('{').trim_end_matches('}');
+    let (mut starts, mut limits, mut strides) = (Vec::new(), Vec::new(), Vec::new());
+    for part in inner.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let part = part.trim_start_matches('[').trim_end_matches(']');
+        let nums: Vec<&str> = part.split(':').collect();
+        if nums.len() < 2 || nums.len() > 3 {
+            return Err(Error::msg(format!("bad slice range `[{part}]`")));
+        }
+        let parse = |t: &str| -> Result<usize> {
+            t.trim()
+                .parse()
+                .map_err(|_| Error::msg(format!("bad slice bound `{t}`")))
+        };
+        starts.push(parse(nums[0])?);
+        limits.push(parse(nums[1])?);
+        strides.push(if nums.len() == 3 { parse(nums[2])? } else { 1 });
+    }
+    Ok((starts, limits, strides))
+}
+
+fn parse_attrs(cur: &mut Cursor<'_>) -> Result<Attrs> {
+    let mut attrs = Attrs::default();
+    loop {
+        cur.skip_ws();
+        if !cur.eat(b',') {
+            break;
+        }
+        let key = cur.ident();
+        if key.is_empty() {
+            return Err(Error::msg("empty attribute name"));
+        }
+        cur.expect(b'=', "attribute value")?;
+        cur.skip_ws();
+        let value = match cur.peek() {
+            Some(b'{') => {
+                let inner = cur.balanced_braces()?;
+                format!("{{{inner}}}")
+            }
+            Some(b'"') => {
+                cur.bump();
+                let start = cur.pos;
+                while let Some(c) = cur.bump() {
+                    if c == b'\\' {
+                        cur.bump();
+                    } else if c == b'"' {
+                        break;
+                    }
+                }
+                String::from_utf8_lossy(&cur.s[start..cur.pos.saturating_sub(1)]).into_owned()
+            }
+            _ => {
+                // bare token (direction=GT, index=0, to_apply=%add.1)
+                let start = cur.pos;
+                while let Some(c) = cur.peek() {
+                    if c == b',' {
+                        break;
+                    }
+                    cur.pos += 1;
+                }
+                String::from_utf8_lossy(&cur.s[start..cur.pos])
+                    .trim()
+                    .to_string()
+            }
+        };
+        attrs.raw.push((key, value));
+    }
+    Ok(attrs)
+}
+
+// ---------------------------------------------------------------------------
+// literal parsing (constant payloads)
+// ---------------------------------------------------------------------------
+
+fn parse_literal(raw: &str, name: &str) -> Result<Vec<f32>> {
+    let mut out = Vec::new();
+    // Flatten the nested-brace form by scanning numeric / boolean tokens.
+    for tok in raw.split(|c: char| matches!(c, '{' | '}' | ',' | ' ' | '\t')) {
+        let tok = tok.trim();
+        if tok.is_empty() {
+            continue;
+        }
+        let v = match tok {
+            "true" => 1.0,
+            "false" => 0.0,
+            "inf" => f32::INFINITY,
+            "-inf" => f32::NEG_INFINITY,
+            "nan" | "-nan" => f32::NAN,
+            _ => tok.parse::<f32>().map_err(|_| {
+                Error::msg(format!("constant `%{name}`: bad literal token `{tok}`"))
+            })?,
+        };
+        out.push(v);
+    }
+    if out.is_empty() {
+        return Err(Error::msg(format!("constant `%{name}` has an empty literal")));
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// instruction / module parsing
+// ---------------------------------------------------------------------------
+
+fn strip_pct(tok: &str) -> &str {
+    tok.trim().trim_start_matches('%')
+}
+
+/// Split a raw operand section at top-level commas and resolve each
+/// operand's *last* whitespace token (inline shapes are discarded).
+fn resolve_operands(
+    raw: &str,
+    by_name: &std::collections::HashMap<String, usize>,
+    instr: &str,
+) -> Result<Vec<usize>> {
+    let mut out = Vec::new();
+    let mut depth = 0i32;
+    let mut start = 0usize;
+    let bytes = raw.as_bytes();
+    let mut parts: Vec<&str> = Vec::new();
+    for (i, &c) in bytes.iter().enumerate() {
+        match c {
+            b'{' | b'[' | b'(' => depth += 1,
+            b'}' | b']' | b')' => depth -= 1,
+            b',' if depth == 0 => {
+                parts.push(&raw[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&raw[start..]);
+    for part in parts {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let name = strip_pct(part.split_whitespace().last().unwrap_or(part));
+        let idx = by_name.get(name).ok_or_else(|| {
+            Error::msg(format!("instruction `%{instr}` references unknown operand `%{name}`"))
+        })?;
+        out.push(*idx);
+    }
+    Ok(out)
+}
+
+fn unary_opcode(op: &str) -> Option<UnaryOp> {
+    Some(match op {
+        "negate" => UnaryOp::Negate,
+        "abs" => UnaryOp::Abs,
+        "exponential" => UnaryOp::Exp,
+        "exponential-minus-one" => UnaryOp::Expm1,
+        "log" => UnaryOp::Log,
+        "log-plus-one" => UnaryOp::Log1p,
+        "sqrt" => UnaryOp::Sqrt,
+        "rsqrt" => UnaryOp::Rsqrt,
+        "tanh" => UnaryOp::Tanh,
+        "floor" => UnaryOp::Floor,
+        "ceil" => UnaryOp::Ceil,
+        "round-nearest-afz" => UnaryOp::RoundAfz,
+        "round-nearest-even" => UnaryOp::RoundEven,
+        "sign" => UnaryOp::Sign,
+        "cosine" => UnaryOp::Cos,
+        "sine" => UnaryOp::Sin,
+        "logistic" => UnaryOp::Logistic,
+        "not" => UnaryOp::Not,
+        _ => return None,
+    })
+}
+
+fn binary_opcode(op: &str) -> Option<BinaryOp> {
+    Some(match op {
+        "add" => BinaryOp::Add,
+        "subtract" => BinaryOp::Sub,
+        "multiply" => BinaryOp::Mul,
+        "divide" => BinaryOp::Div,
+        "maximum" => BinaryOp::Max,
+        "minimum" => BinaryOp::Min,
+        "power" => BinaryOp::Pow,
+        "remainder" => BinaryOp::Rem,
+        "and" => BinaryOp::And,
+        "or" => BinaryOp::Or,
+        "xor" => BinaryOp::Xor,
+        _ => return None,
+    })
+}
+
+fn compare_dir(s: &str) -> Result<CmpDir> {
+    Ok(match s {
+        "EQ" => CmpDir::Eq,
+        "NE" => CmpDir::Ne,
+        "LT" => CmpDir::Lt,
+        "LE" => CmpDir::Le,
+        "GT" => CmpDir::Gt,
+        "GE" => CmpDir::Ge,
+        other => return Err(Error::msg(format!("unknown compare direction `{other}`"))),
+    })
+}
+
+struct PendingComputation {
+    name: String,
+    instrs: Vec<Instr>,
+    /// `(instr index, to_apply computation name)` fix-ups.
+    apply_fixups: Vec<(usize, String)>,
+    root: Option<usize>,
+    by_name: std::collections::HashMap<String, usize>,
+}
+
+/// Parse one instruction line into the pending computation.
+fn parse_instruction(line: &str, comp: &mut PendingComputation) -> Result<()> {
+    let mut cur = Cursor::new(line);
+    cur.skip_ws();
+    let mut is_root = false;
+    if cur.peek() == Some(b'%') {
+        cur.bump();
+    }
+    // the first identifier is either the ROOT marker or the name itself
+    let mut name = cur.ident();
+    if name == "ROOT" {
+        is_root = true;
+        cur.skip_ws();
+        if cur.peek() == Some(b'%') {
+            cur.bump();
+        }
+        name = cur.ident();
+    }
+    if name.is_empty() {
+        return Err(Error::msg(format!("bad instruction line `{}`", line.trim())));
+    }
+    cur.expect(b'=', "instruction assignment")?;
+    let shape = parse_shape_decl(&mut cur)?;
+    let opcode = cur.ident();
+    if opcode.is_empty() {
+        return Err(Error::msg(format!("missing opcode in `{}`", line.trim())));
+    }
+    let raw_operands = cur.balanced_parens()?;
+    let attrs = parse_attrs(&mut cur)?;
+
+    let idx = comp.instrs.len();
+    let operands = |n: usize| -> Result<Vec<usize>> {
+        let ops = resolve_operands(&raw_operands, &comp.by_name, &name)?;
+        if ops.len() != n {
+            return Err(Error::msg(format!(
+                "`{opcode}` (%{name}) expects {n} operands, found {}",
+                ops.len()
+            )));
+        }
+        Ok(ops)
+    };
+
+    let op = match opcode.as_str() {
+        "parameter" => {
+            let n: usize = raw_operands.trim().parse().map_err(|_| {
+                Error::msg(format!("parameter `%{name}`: bad index `{raw_operands}`"))
+            })?;
+            Op::Parameter(n)
+        }
+        "constant" => Op::Constant(parse_literal(&raw_operands, &name)?),
+        "compare" => {
+            let ops = operands(2)?;
+            Op::Compare {
+                dir: compare_dir(
+                    attrs
+                        .get("direction")
+                        .ok_or_else(|| Error::msg("compare missing `direction`"))?,
+                )?,
+                lhs: ops[0],
+                rhs: ops[1],
+            }
+        }
+        "select" => {
+            let ops = operands(3)?;
+            Op::Select {
+                pred: ops[0],
+                on_true: ops[1],
+                on_false: ops[2],
+            }
+        }
+        "broadcast" => Op::Broadcast {
+            operand: operands(1)?[0],
+            dims: attrs.int_list("dimensions").unwrap_or_default(),
+        },
+        "reshape" => Op::Reshape(operands(1)?[0]),
+        "copy" => Op::Copy(operands(1)?[0]),
+        "convert" => Op::Convert(operands(1)?[0]),
+        "transpose" => Op::Transpose {
+            operand: operands(1)?[0],
+            perm: attrs.int_list("dimensions")?,
+        },
+        "slice" => {
+            let spec = attrs
+                .get("slice")
+                .ok_or_else(|| Error::msg("slice missing `slice={...}`"))?;
+            let (starts, limits, strides) = parse_slice_spec(spec)?;
+            Op::Slice {
+                operand: operands(1)?[0],
+                starts,
+                limits,
+                strides,
+            }
+        }
+        "concatenate" => {
+            let ops = resolve_operands(&raw_operands, &comp.by_name, &name)?;
+            let dims = attrs.int_list("dimensions")?;
+            if dims.len() != 1 {
+                return Err(Error::msg("concatenate needs exactly one dimension"));
+            }
+            Op::Concat {
+                operands: ops,
+                dim: dims[0],
+            }
+        }
+        "iota" => Op::Iota {
+            dim: attrs.int("iota_dimension")?,
+        },
+        "dot" => {
+            let ops = operands(2)?;
+            Op::Dot {
+                lhs: ops[0],
+                rhs: ops[1],
+                lhs_contracting: attrs.int_list("lhs_contracting_dims").unwrap_or_default(),
+                rhs_contracting: attrs.int_list("rhs_contracting_dims").unwrap_or_default(),
+                lhs_batch: attrs.int_list("lhs_batch_dims").unwrap_or_default(),
+                rhs_batch: attrs.int_list("rhs_batch_dims").unwrap_or_default(),
+            }
+        }
+        "reduce" => {
+            let ops = operands(2)?;
+            let apply = attrs
+                .get("to_apply")
+                .ok_or_else(|| Error::msg("reduce missing `to_apply`"))?;
+            comp.apply_fixups
+                .push((idx, strip_pct(apply).to_string()));
+            Op::Reduce {
+                operand: ops[0],
+                init: ops[1],
+                dims: attrs.int_list("dimensions")?,
+                to_apply: usize::MAX, // patched in `finish_module`
+            }
+        }
+        "tuple" => Op::Tuple(resolve_operands(&raw_operands, &comp.by_name, &name)?),
+        "get-tuple-element" => Op::GetTupleElement {
+            operand: operands(1)?[0],
+            index: attrs.int("index")?,
+        },
+        other => {
+            if let Some(u) = unary_opcode(other) {
+                Op::Unary(u, operands(1)?[0])
+            } else if let Some(b) = binary_opcode(other) {
+                let ops = operands(2)?;
+                Op::Binary(b, ops[0], ops[1])
+            } else {
+                return Err(Error::msg(format!(
+                    "unsupported HLO opcode `{other}` (instruction `%{name}`) — \
+                     the interpreter covers the op set emitted by \
+                     python/compile/aot.py; see rust/xla/README.md"
+                )));
+            }
+        }
+    };
+
+    if comp.by_name.insert(name.clone(), idx).is_some() {
+        return Err(Error::msg(format!(
+            "duplicate instruction name `%{name}` — later operand references \
+             would silently bind to the wrong definition"
+        )));
+    }
+    if is_root {
+        comp.root = Some(idx);
+    }
+    comp.instrs.push(Instr { name, shape, op });
+    Ok(())
+}
+
+fn finish_computation(pending: PendingComputation) -> Result<Computation> {
+    if pending.instrs.is_empty() {
+        return Err(Error::msg(format!("computation `{}` is empty", pending.name)));
+    }
+    let root = pending.root.unwrap_or(pending.instrs.len() - 1);
+    // parameter table: index i → instruction
+    let mut params: Vec<Option<usize>> = Vec::new();
+    for (i, instr) in pending.instrs.iter().enumerate() {
+        if let Op::Parameter(n) = instr.op {
+            if params.len() <= n {
+                params.resize(n + 1, None);
+            }
+            if params[n].replace(i).is_some() {
+                return Err(Error::msg(format!(
+                    "computation `{}` declares parameter {n} twice",
+                    pending.name
+                )));
+            }
+        }
+    }
+    let params: Vec<usize> = params
+        .into_iter()
+        .enumerate()
+        .map(|(n, p)| {
+            p.ok_or_else(|| {
+                Error::msg(format!(
+                    "computation `{}` is missing parameter {n}",
+                    pending.name
+                ))
+            })
+        })
+        .collect::<Result<_>>()?;
+    Ok(Computation {
+        name: pending.name,
+        instrs: pending.instrs,
+        root,
+        params,
+    })
+}
+
+/// Parse an HLO module from its text serialisation.
+pub fn parse_module(text: &str) -> Result<Module> {
+    // strip /* ... */ comments (some dump modes interleave them)
+    let text = strip_block_comments(text);
+
+    let mut module_name = String::from("module");
+    let mut pendings: Vec<PendingComputation> = Vec::new();
+    let mut current: Option<PendingComputation> = None;
+    let mut entry_name: Option<String> = None;
+
+    for (lineno, raw_line) in text.lines().enumerate() {
+        let line = raw_line.trim();
+        if line.is_empty() || line.starts_with("//") {
+            continue;
+        }
+        let err_ctx = |e: Error| Error::msg(format!("line {}: {e}", lineno + 1));
+        if line.starts_with("HloModule") {
+            module_name = line["HloModule".len()..]
+                .trim()
+                .split([',', ' '])
+                .next()
+                .unwrap_or("module")
+                .to_string();
+            continue;
+        }
+        if current.is_none() {
+            // computation header: `[ENTRY ]%name (...) -> ... {`
+            if !line.ends_with('{') {
+                return Err(Error::msg(format!(
+                    "line {}: expected computation header, found `{line}`",
+                    lineno + 1
+                )));
+            }
+            let mut rest = line;
+            let is_entry = if let Some(r) = rest.strip_prefix("ENTRY") {
+                rest = r.trim_start();
+                true
+            } else {
+                false
+            };
+            let name = strip_pct(rest.split(['(', ' ']).next().unwrap_or("")).to_string();
+            if name.is_empty() {
+                return Err(Error::msg(format!(
+                    "line {}: computation header has no name",
+                    lineno + 1
+                )));
+            }
+            if is_entry {
+                entry_name = Some(name.clone());
+            }
+            current = Some(PendingComputation {
+                name,
+                instrs: Vec::new(),
+                apply_fixups: Vec::new(),
+                root: None,
+                by_name: std::collections::HashMap::new(),
+            });
+            continue;
+        }
+        if line == "}" {
+            let pending = current.take().expect("inside computation");
+            pendings.push(pending);
+            continue;
+        }
+        let comp = current.as_mut().expect("inside computation");
+        parse_instruction(line, comp).map_err(err_ctx)?;
+    }
+    if current.is_some() {
+        return Err(Error::msg("unterminated computation (missing `}`)"));
+    }
+    if pendings.is_empty() {
+        return Err(Error::msg("no computations found in HLO text"));
+    }
+
+    // resolve computation order + to_apply references
+    let names: Vec<String> = pendings.iter().map(|p| p.name.clone()).collect();
+    let find = |n: &str| -> Result<usize> {
+        names
+            .iter()
+            .position(|c| c == n)
+            .ok_or_else(|| Error::msg(format!("to_apply references unknown computation `{n}`")))
+    };
+    let entry = match entry_name {
+        Some(n) => find(&n)?,
+        // single-computation modules may omit ENTRY
+        None if pendings.len() == 1 => 0,
+        None => return Err(Error::msg("no ENTRY computation found")),
+    };
+    let mut computations = Vec::with_capacity(pendings.len());
+    for pending in pendings {
+        let apply: Vec<(usize, usize)> = pending
+            .apply_fixups
+            .iter()
+            .map(|(i, n)| Ok((*i, find(n)?)))
+            .collect::<Result<_>>()?;
+        let mut comp = finish_computation(pending)?;
+        for (instr_idx, comp_idx) in apply {
+            if let Op::Reduce { to_apply, .. } = &mut comp.instrs[instr_idx].op {
+                *to_apply = comp_idx;
+            }
+        }
+        computations.push(comp);
+    }
+    Ok(Module {
+        name: module_name,
+        computations,
+        entry,
+    })
+}
+
+fn strip_block_comments(text: &str) -> String {
+    let mut out = String::with_capacity(text.len());
+    let mut rest = text;
+    while let Some(start) = rest.find("/*") {
+        out.push_str(&rest[..start]);
+        match rest[start..].find("*/") {
+            Some(end) => rest = &rest[start + end + 2..],
+            None => {
+                rest = "";
+                break;
+            }
+        }
+    }
+    out.push_str(rest);
+    out
+}

@@ -1,0 +1,112 @@
+//! End-to-end check of the checked-in `surrogate_predict` HLO fixture:
+//! the same linear-at-zero-weights property `rust/src/runtime/runtime.rs`
+//! asserts through the full `Runtime`, here exercised at the crate
+//! boundary (file → parse → compile → execute → untuple).
+
+use std::path::Path;
+
+use xla::{HloModuleProto, PjRtClient, XlaComputation};
+
+const SUR_FEATS: usize = 72;
+const SUR_HIDDEN: usize = 128;
+const SUR_OUT: usize = 6;
+const SUR_BATCH: usize = 256;
+
+fn fixture(name: &str) -> std::path::PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures")
+        .join(name)
+}
+
+#[test]
+fn surrogate_predict_fixture_is_linear_at_zero_weights() {
+    let proto = HloModuleProto::from_text_file(fixture("surrogate_predict.hlo.txt"))
+        .expect("fixture parses");
+    let client = PjRtClient::cpu().unwrap();
+    let exe = client
+        .compile(&XlaComputation::from_proto(&proto))
+        .expect("fixture compiles");
+
+    let buf = |data: &[f32], dims: &[usize]| {
+        client
+            .buffer_from_host_buffer::<f32>(data, dims, None)
+            .unwrap()
+    };
+    let z1 = vec![0.0f32; SUR_FEATS * SUR_HIDDEN];
+    let zb1 = vec![0.0f32; SUR_HIDDEN];
+    let z2 = vec![0.0f32; SUR_HIDDEN * SUR_HIDDEN];
+    let zb2 = vec![0.0f32; SUR_HIDDEN];
+    let z3 = vec![0.0f32; SUR_HIDDEN * SUR_OUT];
+    let b3 = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+    let x = vec![0.5f32; SUR_BATCH * SUR_FEATS];
+    let args = [
+        buf(&z1, &[SUR_FEATS, SUR_HIDDEN]),
+        buf(&zb1, &[SUR_HIDDEN]),
+        buf(&z2, &[SUR_HIDDEN, SUR_HIDDEN]),
+        buf(&zb2, &[SUR_HIDDEN]),
+        buf(&z3, &[SUR_HIDDEN, SUR_OUT]),
+        buf(&b3, &[SUR_OUT]),
+        buf(&x, &[SUR_BATCH, SUR_FEATS]),
+    ];
+    let out = exe.execute_b(&args).expect("fixture executes");
+    let leaves = out[0][0].to_literal_sync().unwrap().to_tuple().unwrap();
+    assert_eq!(leaves.len(), 1, "surrogate_predict returns one output");
+    let pred = leaves[0].to_vec::<f32>().unwrap();
+    assert_eq!(pred.len(), SUR_BATCH * SUR_OUT);
+    // all-zero weights → prediction == output bias everywhere
+    for row in pred.chunks(SUR_OUT) {
+        assert_eq!(row, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+}
+
+#[test]
+fn surrogate_predict_fixture_responds_to_weights() {
+    // one non-zero weight path: x[., 0] = 1, w1[0,0] = 1, w2[0,0] = 1,
+    // w3[0, k] = k → pred[., k] = k (ReLU passes the positive activation)
+    let proto =
+        HloModuleProto::from_text_file(fixture("surrogate_predict.hlo.txt")).unwrap();
+    let client = PjRtClient::cpu().unwrap();
+    let exe = client
+        .compile(&XlaComputation::from_proto(&proto))
+        .unwrap();
+    let buf = |data: &[f32], dims: &[usize]| {
+        client
+            .buffer_from_host_buffer::<f32>(data, dims, None)
+            .unwrap()
+    };
+    let mut w1 = vec![0.0f32; SUR_FEATS * SUR_HIDDEN];
+    w1[0] = 1.0;
+    let mut w2 = vec![0.0f32; SUR_HIDDEN * SUR_HIDDEN];
+    w2[0] = 1.0;
+    let mut w3 = vec![0.0f32; SUR_HIDDEN * SUR_OUT];
+    for k in 0..SUR_OUT {
+        w3[k] = k as f32;
+    }
+    let zb = vec![0.0f32; SUR_HIDDEN];
+    let zb3 = vec![0.0f32; SUR_OUT];
+    let mut x = vec![0.0f32; SUR_BATCH * SUR_FEATS];
+    for r in 0..SUR_BATCH {
+        x[r * SUR_FEATS] = 1.0;
+    }
+    let args = [
+        buf(&w1, &[SUR_FEATS, SUR_HIDDEN]),
+        buf(&zb, &[SUR_HIDDEN]),
+        buf(&w2, &[SUR_HIDDEN, SUR_HIDDEN]),
+        buf(&zb, &[SUR_HIDDEN]),
+        buf(&w3, &[SUR_HIDDEN, SUR_OUT]),
+        buf(&zb3, &[SUR_OUT]),
+        buf(&x, &[SUR_BATCH, SUR_FEATS]),
+    ];
+    let out = exe.execute_b(&args).unwrap();
+    let pred = out[0][0]
+        .to_literal_sync()
+        .unwrap()
+        .to_tuple()
+        .unwrap()
+        .remove(0)
+        .to_vec::<f32>()
+        .unwrap();
+    for row in pred.chunks(SUR_OUT) {
+        assert_eq!(row, &[0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+    }
+}

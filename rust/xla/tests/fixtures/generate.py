@@ -1,0 +1,544 @@
+#!/usr/bin/env python3
+"""Emit the hand-authored HLO-text fixtures + manifest.json.
+
+These fixtures let CI exercise the full PJRT runtime path — `Runtime::load`
+→ `compile` → `execute_b` — through the `rust/xla` interpreter without JAX
+or a native XLA build. They implement a *simplified but honestly-trained*
+version of the real artifacts in `python/compile/model.py`:
+
+* ``surrogate_predict`` / ``surrogate_train`` are **faithful**: the same
+  3-layer ReLU MLP, MSE loss and Adam update as the JAX graphs.
+* ``train_step`` / ``eval_step`` keep the real ABI (32/18 inputs, same
+  shapes and order) but model **one hidden layer** of the supernet:
+  ``logits = relu(x·(w0*p0) + b[0]) * unit[0] · (wo*po) + bo`` with
+  softmax cross-entropy and Adam on ``w0``/``b[0]``/``wo``/``bo``.
+  Hidden-stack weights (``wh``), BN parameters, dropout, L1 and QAT inputs
+  are carried through untouched — enough for the trainer, IMP local
+  search and the full micro-pipeline to run with real learning dynamics,
+  while keeping the HLO text reviewable by a human.
+
+The emitted text is deliberately the *subset* of the HLO grammar that
+`rust/xla/src/parser.rs` documents, with one liberty: binary ops may take
+a rank-0 operand directly (the interpreter broadcasts scalars
+implicitly), which keeps the Adam blocks ~3x shorter than fully-explicit
+HLO. Regenerate with:  python3 generate.py
+"""
+
+import json
+import os
+
+OUT_DIR = os.path.dirname(os.path.abspath(__file__))
+
+PAD, L, I, O = 128, 8, 24, 5
+BATCH, EVAL_BATCH, HP_LEN = 128, 512, 13
+SF, SH, SO, SB, SHP_LEN = 72, 128, 6, 256, 6
+
+
+def shp(dims):
+    return "f32[" + ",".join(str(d) for d in dims) + "]"
+
+
+class Hlo:
+    """Tiny emitter: one instruction per line, unique names enforced."""
+
+    def __init__(self):
+        self.lines = []
+        self.names = set()
+
+    def emit(self, name, dims, op, root=False, dtype="f32"):
+        assert name not in self.names, f"duplicate instruction %{name}"
+        self.names.add(name)
+        s = dtype + "[" + ",".join(str(d) for d in dims) + "]"
+        prefix = "ROOT " if root else ""
+        self.lines.append(f"  {prefix}%{name} = {s} {op}")
+        return "%" + name
+
+
+def scalar_consts(h, pairs):
+    for name, value in pairs:
+        h.emit(name, [], f"constant({value})")
+
+
+def adam(h, tag, p, g, m, v, dims, lr, b1, b2, eps, omb1, omb2, omb1p, omb2p):
+    """model.py adam_update: external bias-correction powers.
+
+    Returns (%new_p, %new_m, %new_v). `tag` keeps names unique.
+    """
+    s = dims
+    mb = h.emit(f"mb_{tag}", s, f"multiply({b1}, {m})")
+    gs = h.emit(f"gs_{tag}", s, f"multiply({omb1}, {g})")
+    nm = h.emit(f"nm_{tag}", s, f"add({mb}, {gs})")
+    g2 = h.emit(f"g2_{tag}", s, f"multiply({g}, {g})")
+    vb = h.emit(f"vb_{tag}", s, f"multiply({b2}, {v})")
+    g2s = h.emit(f"g2s_{tag}", s, f"multiply({omb2}, {g2})")
+    nv = h.emit(f"nv_{tag}", s, f"add({vb}, {g2s})")
+    mhat = h.emit(f"mhat_{tag}", s, f"divide({nm}, {omb1p})")
+    vhat = h.emit(f"vhat_{tag}", s, f"divide({nv}, {omb2p})")
+    sq = h.emit(f"sq_{tag}", s, f"sqrt({vhat})")
+    den = h.emit(f"den_{tag}", s, f"add({sq}, {eps})")
+    step = h.emit(f"step_{tag}", s, f"divide({mhat}, {den})")
+    lstep = h.emit(f"lstep_{tag}", s, f"multiply({lr}, {step})")
+    newp = h.emit(f"new_{tag}", s, f"subtract({p}, {lstep})")
+    return newp, nm, nv
+
+
+def hp_scalar(h, name, vec, index):
+    sl = h.emit(f"{name}_s", [1], f"slice({vec}), slice={{[{index}:{index + 1}]}}")
+    return h.emit(name, [], f"reshape({sl})")
+
+
+REGIONS = """\
+%add_f32 (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(%a, %b)
+}
+
+%max_f32 (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] maximum(%a, %b)
+}
+"""
+
+
+def softmax_ce(h, logits, y1h, rows, tag=""):
+    """Emit softmax/CE block. Returns (%probs, %loss, %correct)."""
+    B = rows
+    rowmax = h.emit(
+        f"rowmax{tag}", [B], f"reduce({logits}, %neginf), dimensions={{1}}, to_apply=%max_f32"
+    )
+    rowmaxb = h.emit(f"rowmaxb{tag}", [B, O], f"broadcast({rowmax}), dimensions={{0}}")
+    shift = h.emit(f"shift{tag}", [B, O], f"subtract({logits}, {rowmaxb})")
+    expv = h.emit(f"expv{tag}", [B, O], f"exponential({shift})")
+    esum = h.emit(
+        f"esum{tag}", [B], f"reduce({expv}, %zero), dimensions={{1}}, to_apply=%add_f32"
+    )
+    esumb = h.emit(f"esumb{tag}", [B, O], f"broadcast({esum}), dimensions={{0}}")
+    probs = h.emit(f"probs{tag}", [B, O], f"divide({expv}, {esumb})")
+    lse = h.emit(f"lse{tag}", [B], f"log({esum})")
+    lseb = h.emit(f"lseb{tag}", [B, O], f"broadcast({lse}), dimensions={{0}}")
+    logp = h.emit(f"logp{tag}", [B, O], f"subtract({shift}, {lseb})")
+    cet = h.emit(f"cet{tag}", [B, O], f"multiply({y1h}, {logp})")
+    cesum = h.emit(
+        f"cesum{tag}", [], f"reduce({cet}, %zero), dimensions={{0,1}}, to_apply=%add_f32"
+    )
+    loss = h.emit(f"loss{tag}", [], f"multiply({cesum}, %neg_inv_rows)")
+    ismax = h.emit(
+        f"ismax{tag}", [B, O], f"compare({logits}, {rowmaxb}), direction=EQ", dtype="pred"
+    )
+    ismaxf = h.emit(f"ismaxf{tag}", [B, O], f"convert({ismax})")
+    hits = h.emit(f"hits{tag}", [B, O], f"multiply({ismaxf}, {y1h})")
+    correct = h.emit(
+        f"correct{tag}", [], f"reduce({hits}, %zero), dimensions={{0,1}}, to_apply=%add_f32"
+    )
+    return probs, loss, correct
+
+
+def supernet_forward(h, B):
+    """Shared forward for train_step/eval_step; params already emitted.
+
+    Returns (%a0 preactivation, %u0b unit mask, %h hidden, %wom, %logits).
+    """
+    w0m = h.emit("w0m", [I, PAD], "multiply(%w0, %p0)")
+    z0 = h.emit(
+        "z0", [B, PAD], "dot(%x, %w0m), lhs_contracting_dims={1}, rhs_contracting_dims={0}"
+    )
+    u0s = h.emit("u0_s", [1, PAD], f"slice(%unit), slice={{[0:1], [0:{PAD}]}}")
+    u0 = h.emit("u0", [PAD], f"reshape({u0s})")
+    u0b = h.emit("u0b", [B, PAD], f"broadcast({u0}), dimensions={{1}}")
+    b0s = h.emit("b0_s", [1, PAD], f"slice(%b), slice={{[0:1], [0:{PAD}]}}")
+    b0 = h.emit("b0", [PAD], f"reshape({b0s})")
+    b0b = h.emit("b0b", [B, PAD], f"broadcast({b0}), dimensions={{1}}")
+    a0 = h.emit("a0", [B, PAD], f"add({z0}, {b0b})")
+    zb = h.emit("zerosbb", [B, PAD], "broadcast(%zero), dimensions={}")
+    r0 = h.emit("r0", [B, PAD], f"maximum({a0}, {zb})")
+    hh = h.emit("h", [B, PAD], f"multiply({r0}, {u0b})")
+    wom = h.emit("wom", [PAD, O], "multiply(%wo, %po)")
+    zl = h.emit(
+        "zl", [B, O], f"dot({hh}, {wom}), lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}"
+    )
+    bob = h.emit("bob", [B, O], "broadcast(%bo), dimensions={1}")
+    logits = h.emit("logits", [B, O], f"add({zl}, {bob})")
+    return a0, u0b, hh, wom, logits
+
+
+def gen_train_step():
+    h = Hlo()
+    params = [
+        ("w0", [I, PAD]), ("wh", [L - 1, PAD, PAD]), ("b", [L, PAD]),
+        ("gamma", [L, PAD]), ("beta", [L, PAD]), ("wo", [PAD, O]), ("bo", [O]),
+    ]
+    inputs = (
+        params
+        + [("m_" + n, s) for n, s in params]
+        + [("v_" + n, s) for n, s in params]
+        + [
+            ("unit", [L, PAD]), ("p0", [I, PAD]), ("ph", [L - 1, PAD, PAD]),
+            ("po", [PAD, O]), ("gates", [L]), ("act_sel", [3]), ("hp", [HP_LEN]),
+            ("run_mean", [L, PAD]), ("run_var", [L, PAD]),
+            ("x", [BATCH, I]), ("y1h", [BATCH, O]),
+        ]
+    )
+    for i, (n, s) in enumerate(inputs):
+        h.emit(n, s, f"parameter({i})")
+    scalar_consts(
+        h,
+        [
+            ("zero", "0"), ("one", "1"), ("neginf", "-inf"),
+            ("inv_rows", 1.0 / BATCH), ("neg_inv_rows", -1.0 / BATCH),
+        ],
+    )
+    # hp scalars (layout: rust/src/nn/abi.rs)
+    lr = hp_scalar(h, "lr", "%hp", 4)
+    b1 = hp_scalar(h, "beta1", "%hp", 6)
+    b2 = hp_scalar(h, "beta2", "%hp", 7)
+    eps = hp_scalar(h, "eps", "%hp", 8)
+    b1p = hp_scalar(h, "b1pow", "%hp", 9)
+    b2p = hp_scalar(h, "b2pow", "%hp", 10)
+    omb1 = h.emit("omb1", [], f"subtract(%one, {b1})")
+    omb2 = h.emit("omb2", [], f"subtract(%one, {b2})")
+    omb1p = h.emit("omb1p", [], f"subtract(%one, {b1p})")
+    omb2p = h.emit("omb2p", [], f"subtract(%one, {b2p})")
+
+    a0, u0b, hh, wom, logits = supernet_forward(h, BATCH)
+    probs, loss, correct = softmax_ce(h, logits, "%y1h", BATCH)
+
+    # backward
+    dl0 = h.emit("dl0", [BATCH, O], f"subtract({probs}, %y1h)")
+    dlogits = h.emit("dlogits", [BATCH, O], f"multiply({dl0}, %inv_rows)")
+    g_wo0 = h.emit(
+        "g_wo0", [PAD, O],
+        f"dot({hh}, {dlogits}), lhs_contracting_dims={{0}}, rhs_contracting_dims={{0}}",
+    )
+    g_wo = h.emit("g_wo", [PAD, O], f"multiply({g_wo0}, %po)")
+    g_bo = h.emit(
+        "g_bo", [O], f"reduce({dlogits}, %zero), dimensions={{0}}, to_apply=%add_f32"
+    )
+    dh = h.emit(
+        "dh", [BATCH, PAD],
+        f"dot({dlogits}, {wom}), lhs_contracting_dims={{1}}, rhs_contracting_dims={{1}}",
+    )
+    rmask = h.emit("rmask", [BATCH, PAD], f"compare({a0}, %zerosbb), direction=GT", dtype="pred")
+    rmaskf = h.emit("rmaskf", [BATCH, PAD], f"convert({rmask})")
+    dr = h.emit("dr", [BATCH, PAD], f"multiply({dh}, {rmaskf})")
+    dz0 = h.emit("dz0", [BATCH, PAD], f"multiply({dr}, {u0b})")
+    g_w00 = h.emit(
+        "g_w00", [I, PAD],
+        f"dot(%x, {dz0}), lhs_contracting_dims={{0}}, rhs_contracting_dims={{0}}",
+    )
+    g_w0 = h.emit("g_w0", [I, PAD], f"multiply({g_w00}, %p0)")
+    g_b0 = h.emit(
+        "g_b0", [PAD], f"reduce({dz0}, %zero), dimensions={{0}}, to_apply=%add_f32"
+    )
+
+    sc = (lr, b1, b2, eps, omb1, omb2, omb1p, omb2p)
+    nw0, nm_w0, nv_w0 = adam(h, "w0", "%w0", g_w0, "%m_w0", "%v_w0", [I, PAD], *sc)
+    nw0m = h.emit("new_w0_masked", [I, PAD], f"multiply({nw0}, %p0)")
+    nwo, nm_wo, nv_wo = adam(h, "wo", "%wo", g_wo, "%m_wo", "%v_wo", [PAD, O], *sc)
+    nwom = h.emit("new_wo_masked", [PAD, O], f"multiply({nwo}, %po)")
+    nbo, nm_bo, nv_bo = adam(h, "bo", "%bo", g_bo, "%m_bo", "%v_bo", [O], *sc)
+    # bias row 0 of `b` trains too (Adam state rides in m_b/v_b row 0);
+    # rows 1.. pass through untouched.
+    b0v = "%b0"
+    mb0s = h.emit("m_b0_s", [1, PAD], f"slice(%m_b), slice={{[0:1], [0:{PAD}]}}")
+    mb0 = h.emit("m_b0", [PAD], f"reshape({mb0s})")
+    vb0s = h.emit("v_b0_s", [1, PAD], f"slice(%v_b), slice={{[0:1], [0:{PAD}]}}")
+    vb0 = h.emit("v_b0", [PAD], f"reshape({vb0s})")
+    nb0, nm_b0, nv_b0 = adam(h, "b0", b0v, g_b0, mb0, vb0, [PAD], *sc)
+    brest = h.emit("b_rest", [L - 1, PAD], f"slice(%b), slice={{[1:{L}], [0:{PAD}]}}")
+    nb0r = h.emit("new_b0_row", [1, PAD], f"reshape({nb0})")
+    nb = h.emit("new_b", [L, PAD], f"concatenate({nb0r}, {brest}), dimensions={{0}}")
+    mrest = h.emit("m_b_rest", [L - 1, PAD], f"slice(%m_b), slice={{[1:{L}], [0:{PAD}]}}")
+    nmb0r = h.emit("new_m_b0_row", [1, PAD], f"reshape({nm_b0})")
+    nmb = h.emit("new_m_b", [L, PAD], f"concatenate({nmb0r}, {mrest}), dimensions={{0}}")
+    vrest = h.emit("v_b_rest", [L - 1, PAD], f"slice(%v_b), slice={{[1:{L}], [0:{PAD}]}}")
+    nvb0r = h.emit("new_v_b0_row", [1, PAD], f"reshape({nv_b0})")
+    nvb = h.emit("new_v_b", [L, PAD], f"concatenate({nvb0r}, {vrest}), dimensions={{0}}")
+
+    outs = [
+        nw0m, "%wh", nb, "%gamma", "%beta", nwom, nbo,
+        nm_w0, "%m_wh", nmb, "%m_gamma", "%m_beta", nm_wo, nm_bo,
+        nv_w0, "%v_wh", nvb, "%v_gamma", "%v_beta", nv_wo, nv_bo,
+        loss, correct, "%run_mean", "%run_var",
+    ]
+    out_shapes = (
+        [shp(s) for _, s in params]
+        + [shp(s) for _, s in params]
+        + [shp(s) for _, s in params]
+        + ["f32[]", "f32[]", shp([L, PAD]), shp([L, PAD])]
+    )
+    tuple_shape = "(" + ", ".join(out_shapes) + ")"
+    h.lines.append(f"  ROOT %result = {tuple_shape} tuple({', '.join(outs)})")
+
+    sig = ", ".join(f"{n}: {shp(s)}" for n, s in inputs)
+    return (
+        "HloModule train_step\n\n"
+        + REGIONS
+        + "\n"
+        + f"ENTRY %main ({sig}) -> {tuple_shape} {{\n"
+        + "\n".join(h.lines)
+        + "\n}\n"
+    )
+
+
+def gen_eval_step():
+    h = Hlo()
+    inputs = [
+        ("w0", [I, PAD]), ("wh", [L - 1, PAD, PAD]), ("b", [L, PAD]),
+        ("gamma", [L, PAD]), ("beta", [L, PAD]), ("wo", [PAD, O]), ("bo", [O]),
+        ("unit", [L, PAD]), ("p0", [I, PAD]), ("ph", [L - 1, PAD, PAD]),
+        ("po", [PAD, O]), ("gates", [L]), ("act_sel", [3]), ("ehp", [3]),
+        ("run_mean", [L, PAD]), ("run_var", [L, PAD]),
+        ("x", [EVAL_BATCH, I]), ("y1h", [EVAL_BATCH, O]),
+    ]
+    for i, (n, s) in enumerate(inputs):
+        h.emit(n, s, f"parameter({i})")
+    scalar_consts(
+        h, [("zero", "0"), ("neginf", "-inf"), ("neg_inv_rows", -1.0 / EVAL_BATCH)]
+    )
+    _, _, _, _, logits = supernet_forward(h, EVAL_BATCH)
+    _, loss, correct = softmax_ce(h, logits, "%y1h", EVAL_BATCH)
+    tuple_shape = f"(f32[], f32[], {shp([EVAL_BATCH, O])})"
+    h.lines.append(f"  ROOT %result = {tuple_shape} tuple({correct}, {loss}, {logits})")
+    sig = ", ".join(f"{n}: {shp(s)}" for n, s in inputs)
+    return (
+        "HloModule eval_step\n\n"
+        + REGIONS
+        + "\n"
+        + f"ENTRY %main ({sig}) -> {tuple_shape} {{\n"
+        + "\n".join(h.lines)
+        + "\n}\n"
+    )
+
+
+SUR_PARAMS = [
+    ("sw1", [SF, SH]), ("sb1", [SH]), ("sw2", [SH, SH]),
+    ("sb2", [SH]), ("sw3", [SH, SO]), ("sb3", [SO]),
+]
+
+
+def sur_forward(h):
+    """Forward through the 3-layer ReLU MLP. Returns (%a1, %h1, %a2, %h2, %pred)."""
+    z1 = h.emit(
+        "z1", [SB, SH], "dot(%x, %sw1), lhs_contracting_dims={1}, rhs_contracting_dims={0}"
+    )
+    b1b = h.emit("b1b", [SB, SH], "broadcast(%sb1), dimensions={1}")
+    a1 = h.emit("a1", [SB, SH], f"add({z1}, {b1b})")
+    zh = h.emit("zeros_h", [SB, SH], "broadcast(%zero), dimensions={}")
+    h1 = h.emit("h1", [SB, SH], f"maximum({a1}, {zh})")
+    z2 = h.emit(
+        "z2", [SB, SH], f"dot({h1}, %sw2), lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}"
+    )
+    b2b = h.emit("b2b", [SB, SH], "broadcast(%sb2), dimensions={1}")
+    a2 = h.emit("a2", [SB, SH], f"add({z2}, {b2b})")
+    h2 = h.emit("h2", [SB, SH], f"maximum({a2}, {zh})")
+    z3 = h.emit(
+        "z3", [SB, SO], f"dot({h2}, %sw3), lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}"
+    )
+    b3b = h.emit("b3b", [SB, SO], "broadcast(%sb3), dimensions={1}")
+    pred = h.emit("pred", [SB, SO], f"add({z3}, {b3b})")
+    return a1, h1, a2, h2, pred
+
+
+def gen_surrogate_predict():
+    h = Hlo()
+    inputs = SUR_PARAMS + [("x", [SB, SF])]
+    for i, (n, s) in enumerate(inputs):
+        h.emit(n, s, f"parameter({i})")
+    scalar_consts(h, [("zero", "0")])
+    _, _, _, _, pred = sur_forward(h)
+    tuple_shape = f"({shp([SB, SO])})"
+    h.lines.append(f"  ROOT %result = {tuple_shape} tuple({pred})")
+    sig = ", ".join(f"{n}: {shp(s)}" for n, s in inputs)
+    return (
+        "HloModule surrogate_predict\n\n"
+        + f"ENTRY %main ({sig}) -> {tuple_shape} {{\n"
+        + "\n".join(h.lines)
+        + "\n}\n"
+    )
+
+
+def gen_surrogate_train():
+    h = Hlo()
+    inputs = (
+        SUR_PARAMS
+        + [("m_" + n, s) for n, s in SUR_PARAMS]
+        + [("v_" + n, s) for n, s in SUR_PARAMS]
+        + [("x", [SB, SF]), ("y", [SB, SO]), ("shp", [SHP_LEN])]
+    )
+    for i, (n, s) in enumerate(inputs):
+        h.emit(n, s, f"parameter({i})")
+    n_elems = SB * SO
+    scalar_consts(
+        h,
+        [
+            ("zero", "0"), ("one", "1"),
+            ("inv_n", 1.0 / n_elems), ("two_inv_n", 2.0 / n_elems),
+        ],
+    )
+    # shp scalars (layout: rust/src/nn/abi.rs SHP_*)
+    lr = hp_scalar(h, "lr", "%shp", 0)
+    b1 = hp_scalar(h, "beta1", "%shp", 1)
+    b2 = hp_scalar(h, "beta2", "%shp", 2)
+    eps = hp_scalar(h, "eps", "%shp", 3)
+    b1p = hp_scalar(h, "b1pow", "%shp", 4)
+    b2p = hp_scalar(h, "b2pow", "%shp", 5)
+    omb1 = h.emit("omb1", [], f"subtract(%one, {b1})")
+    omb2 = h.emit("omb2", [], f"subtract(%one, {b2})")
+    omb1p = h.emit("omb1p", [], f"subtract(%one, {b1p})")
+    omb2p = h.emit("omb2p", [], f"subtract(%one, {b2p})")
+
+    a1, h1, a2, h2, pred = sur_forward(h)
+    diff = h.emit("diff", [SB, SO], f"subtract({pred}, %y)")
+    sqd = h.emit("sqd", [SB, SO], f"multiply({diff}, {diff})")
+    sqsum = h.emit(
+        "sqsum", [], f"reduce({sqd}, %zero), dimensions={{0,1}}, to_apply=%add_f32"
+    )
+    loss = h.emit("loss", [], f"multiply({sqsum}, %inv_n)")
+
+    dpred = h.emit("dpred", [SB, SO], f"multiply({diff}, %two_inv_n)")
+    g_w3 = h.emit(
+        "g_w3", [SH, SO],
+        f"dot({h2}, {dpred}), lhs_contracting_dims={{0}}, rhs_contracting_dims={{0}}",
+    )
+    g_b3 = h.emit(
+        "g_b3", [SO], f"reduce({dpred}, %zero), dimensions={{0}}, to_apply=%add_f32"
+    )
+    dh2 = h.emit(
+        "dh2", [SB, SH],
+        f"dot({dpred}, %sw3), lhs_contracting_dims={{1}}, rhs_contracting_dims={{1}}",
+    )
+    m2 = h.emit("m2", [SB, SH], f"compare({a2}, %zeros_h), direction=GT", dtype="pred")
+    m2f = h.emit("m2f", [SB, SH], f"convert({m2})")
+    dz2 = h.emit("dz2", [SB, SH], f"multiply({dh2}, {m2f})")
+    g_w2 = h.emit(
+        "g_w2", [SH, SH],
+        f"dot({h1}, {dz2}), lhs_contracting_dims={{0}}, rhs_contracting_dims={{0}}",
+    )
+    g_b2 = h.emit(
+        "g_b2", [SH], f"reduce({dz2}, %zero), dimensions={{0}}, to_apply=%add_f32"
+    )
+    dh1 = h.emit(
+        "dh1", [SB, SH],
+        f"dot({dz2}, %sw2), lhs_contracting_dims={{1}}, rhs_contracting_dims={{1}}",
+    )
+    m1 = h.emit("m1", [SB, SH], f"compare({a1}, %zeros_h), direction=GT", dtype="pred")
+    m1f = h.emit("m1f", [SB, SH], f"convert({m1})")
+    dz1 = h.emit("dz1", [SB, SH], f"multiply({dh1}, {m1f})")
+    g_w1 = h.emit(
+        "g_w1", [SF, SH],
+        f"dot(%x, {dz1}), lhs_contracting_dims={{0}}, rhs_contracting_dims={{0}}",
+    )
+    g_b1 = h.emit(
+        "g_b1", [SH], f"reduce({dz1}, %zero), dimensions={{0}}, to_apply=%add_f32"
+    )
+
+    grads = {"sw1": g_w1, "sb1": g_b1, "sw2": g_w2, "sb2": g_b2, "sw3": g_w3, "sb3": g_b3}
+    sc = (lr, b1, b2, eps, omb1, omb2, omb1p, omb2p)
+    news, newms, newvs = [], [], []
+    for name, dims in SUR_PARAMS:
+        np_, nm_, nv_ = adam(
+            h, name, f"%{name}", grads[name], f"%m_{name}", f"%v_{name}", dims, *sc
+        )
+        news.append(np_)
+        newms.append(nm_)
+        newvs.append(nv_)
+
+    outs = news + newms + newvs + [loss]
+    out_shapes = [shp(s) for _, s in SUR_PARAMS] * 3 + ["f32[]"]
+    tuple_shape = "(" + ", ".join(out_shapes) + ")"
+    h.lines.append(f"  ROOT %result = {tuple_shape} tuple({', '.join(outs)})")
+    sig = ", ".join(f"{n}: {shp(s)}" for n, s in inputs)
+    return (
+        "HloModule surrogate_train\n\n"
+        + REGIONS
+        + "\n"
+        + f"ENTRY %main ({sig}) -> {tuple_shape} {{\n"
+        + "\n".join(h.lines)
+        + "\n}\n"
+    )
+
+
+def gen_manifest():
+    def art(file, inputs, outputs):
+        return {
+            "file": file,
+            "inputs": [{"name": n, "shape": s} for n, s in inputs],
+            "outputs": outputs,
+        }
+
+    params = [
+        ("w0", [I, PAD]), ("wh", [L - 1, PAD, PAD]), ("b", [L, PAD]),
+        ("gamma", [L, PAD]), ("beta", [L, PAD]), ("wo", [PAD, O]), ("bo", [O]),
+    ]
+    names = [n for n, _ in params]
+    train_inputs = (
+        params
+        + [("m_" + n, s) for n, s in params]
+        + [("v_" + n, s) for n, s in params]
+        + [
+            ("unit", [L, PAD]), ("p0", [I, PAD]), ("ph", [L - 1, PAD, PAD]),
+            ("po", [PAD, O]), ("gates", [L]), ("act_sel", [3]), ("hp", [HP_LEN]),
+            ("run_mean", [L, PAD]), ("run_var", [L, PAD]),
+            ("x", [BATCH, I]), ("y1h", [BATCH, O]),
+        ]
+    )
+    train_outputs = (
+        names + ["m_" + n for n in names] + ["v_" + n for n in names]
+        + ["loss", "correct", "run_mean", "run_var"]
+    )
+    eval_inputs = params + [
+        ("unit", [L, PAD]), ("p0", [I, PAD]), ("ph", [L - 1, PAD, PAD]),
+        ("po", [PAD, O]), ("gates", [L]), ("act_sel", [3]), ("ehp", [3]),
+        ("run_mean", [L, PAD]), ("run_var", [L, PAD]),
+        ("x", [EVAL_BATCH, I]), ("y1h", [EVAL_BATCH, O]),
+    ]
+    sur_names = [n for n, _ in SUR_PARAMS]
+    sur_train_inputs = (
+        SUR_PARAMS
+        + [("m_" + n, s) for n, s in SUR_PARAMS]
+        + [("v_" + n, s) for n, s in SUR_PARAMS]
+        + [("x", [SB, SF]), ("y", [SB, SO]), ("shp", [SHP_LEN])]
+    )
+    sur_train_outputs = (
+        sur_names + ["m_" + n for n in sur_names] + ["v_" + n for n in sur_names] + ["loss"]
+    )
+    return {
+        "abi_version": 1,
+        "generator": "rust/xla/tests/fixtures/generate.py (hand-authored interpreter fixtures)",
+        "constants": {
+            "pad": PAD, "num_layers": L, "in_dim": I, "out_dim": O,
+            "batch": BATCH, "eval_batch": EVAL_BATCH, "hp_len": HP_LEN,
+            "sur_feats": SF, "sur_out": SO, "sur_batch": SB,
+        },
+        "artifacts": {
+            "train_step": art("train_step.hlo.txt", train_inputs, train_outputs),
+            "eval_step": art("eval_step.hlo.txt", eval_inputs, ["correct", "loss", "logits"]),
+            "surrogate_train": art(
+                "surrogate_train.hlo.txt", sur_train_inputs, sur_train_outputs
+            ),
+            "surrogate_predict": art(
+                "surrogate_predict.hlo.txt", SUR_PARAMS + [("x", [SB, SF])], ["pred"]
+            ),
+        },
+    }
+
+
+def main():
+    files = {
+        "train_step.hlo.txt": gen_train_step(),
+        "eval_step.hlo.txt": gen_eval_step(),
+        "surrogate_train.hlo.txt": gen_surrogate_train(),
+        "surrogate_predict.hlo.txt": gen_surrogate_predict(),
+        "manifest.json": json.dumps(gen_manifest(), indent=1) + "\n",
+    }
+    for name, text in files.items():
+        path = os.path.join(OUT_DIR, name)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {name} ({len(text.splitlines())} lines)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,381 @@
+//! Per-op unit tests for the HLO-text interpreter: parser round-trip +
+//! numerics vs hand-computed expectations.
+
+use xla::{HloModuleProto, PjRtClient, XlaComputation};
+
+/// Parse, compile and execute a single-computation module against f32
+/// arguments, returning the flat root value.
+fn run(text: &str, args: &[(&[f32], &[usize])]) -> Vec<f32> {
+    let proto = HloModuleProto::from_text(text).expect("parse");
+    let client = PjRtClient::cpu().expect("client");
+    let exe = client
+        .compile(&XlaComputation::from_proto(&proto))
+        .expect("compile");
+    let buffers: Vec<xla::PjRtBuffer> = args
+        .iter()
+        .map(|(data, dims)| {
+            client
+                .buffer_from_host_buffer::<f32>(data, dims, None)
+                .expect("buffer")
+        })
+        .collect();
+    let out = exe.execute_b(&buffers).expect("execute");
+    out[0][0]
+        .to_literal_sync()
+        .expect("literal")
+        .to_vec::<f32>()
+        .expect("to_vec")
+}
+
+fn entry(body: &str, params: &str, ret: &str) -> String {
+    format!("HloModule t\n\nENTRY %main ({params}) -> {ret} {{\n{body}}}\n")
+}
+
+#[test]
+fn elementwise_binary_ops() {
+    for (op, expect) in [
+        ("add", [5.0f32, -1.0]),
+        ("subtract", [-1.0, 5.0]),
+        ("multiply", [6.0, -6.0]),
+        ("divide", [2.0 / 3.0, -2.0 / 3.0]),
+        ("maximum", [3.0, 2.0]),
+        ("minimum", [2.0, -3.0]),
+    ] {
+        let text = entry(
+            &format!(
+                "  %a = f32[2] parameter(0)\n  %b = f32[2] parameter(1)\n  \
+                 ROOT %r = f32[2] {op}(%a, %b)\n"
+            ),
+            "a: f32[2], b: f32[2]",
+            "f32[2]",
+        );
+        let out = run(&text, &[(&[2.0, 2.0], &[2]), (&[3.0, -3.0], &[2])]);
+        assert_eq!(out, expect, "{op}");
+    }
+}
+
+#[test]
+fn unary_ops() {
+    let text = entry(
+        "  %a = f32[4] parameter(0)\n  %e = f32[4] exponential(%a)\n  \
+         ROOT %l = f32[4] log(%e)\n",
+        "a: f32[4]",
+        "f32[4]",
+    );
+    let out = run(&text, &[(&[0.0, 1.0, -1.0, 2.5], &[4])]);
+    for (o, e) in out.iter().zip([0.0f32, 1.0, -1.0, 2.5]) {
+        assert!((o - e).abs() < 1e-6, "{o} vs {e}");
+    }
+    let text = entry(
+        "  %a = f32[3] parameter(0)\n  %n = f32[3] negate(%a)\n  \
+         ROOT %r = f32[3] abs(%n)\n",
+        "a: f32[3]",
+        "f32[3]",
+    );
+    assert_eq!(run(&text, &[(&[1.0, -2.0, 0.5], &[3])]), vec![1.0, 2.0, 0.5]);
+    let text = entry(
+        "  %a = f32[2] parameter(0)\n  ROOT %r = f32[2] rsqrt(%a)\n",
+        "a: f32[2]",
+        "f32[2]",
+    );
+    assert_eq!(run(&text, &[(&[4.0, 0.25], &[2])]), vec![0.5, 2.0]);
+}
+
+#[test]
+fn compare_select_convert() {
+    let text = entry(
+        "  %a = f32[4] parameter(0)\n  %z = f32[] constant(0)\n  \
+         %zb = f32[4] broadcast(%z), dimensions={}\n  \
+         %m = pred[4] compare(%a, %zb), direction=GT\n  \
+         %mf = f32[4] convert(%m)\n  \
+         ROOT %r = f32[4] multiply(%mf, %a)\n",
+        "a: f32[4]",
+        "f32[4]",
+    );
+    // relu via compare+convert+multiply
+    assert_eq!(
+        run(&text, &[(&[1.5, -2.0, 0.0, 3.0], &[4])]),
+        vec![1.5, 0.0, 0.0, 3.0]
+    );
+    let text = entry(
+        "  %a = f32[4] parameter(0)\n  %b = f32[4] parameter(1)\n  \
+         %m = pred[4] compare(%a, %b), direction=LE\n  \
+         ROOT %r = f32[4] select(%m, %a, %b)\n",
+        "a: f32[4], b: f32[4]",
+        "f32[4]",
+    );
+    // elementwise min via select
+    assert_eq!(
+        run(
+            &text,
+            &[(&[1.0, 5.0, -1.0, 2.0], &[4]), (&[2.0, 4.0, -2.0, 2.0], &[4])]
+        ),
+        vec![1.0, 4.0, -2.0, 2.0]
+    );
+}
+
+#[test]
+fn broadcast_vector_along_rows_and_columns() {
+    // dimensions={1}: operand indexes output dim 1 (a row vector copied
+    // down the rows)
+    let text = entry(
+        "  %v = f32[3] parameter(0)\n  \
+         ROOT %r = f32[2,3] broadcast(%v), dimensions={1}\n",
+        "v: f32[3]",
+        "f32[2,3]",
+    );
+    assert_eq!(
+        run(&text, &[(&[1.0, 2.0, 3.0], &[3])]),
+        vec![1.0, 2.0, 3.0, 1.0, 2.0, 3.0]
+    );
+    // dimensions={0}: a column vector copied across the columns
+    let text = entry(
+        "  %v = f32[2] parameter(0)\n  \
+         ROOT %r = f32[2,3] broadcast(%v), dimensions={0}\n",
+        "v: f32[2]",
+        "f32[2,3]",
+    );
+    assert_eq!(
+        run(&text, &[(&[1.0, 2.0], &[2])]),
+        vec![1.0, 1.0, 1.0, 2.0, 2.0, 2.0]
+    );
+}
+
+#[test]
+fn reshape_transpose_slice_concat_iota() {
+    let text = entry(
+        "  %a = f32[2,3] parameter(0)\n  \
+         ROOT %t = f32[3,2] transpose(%a), dimensions={1,0}\n",
+        "a: f32[2,3]",
+        "f32[3,2]",
+    );
+    assert_eq!(
+        run(&text, &[(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3])]),
+        vec![1.0, 4.0, 2.0, 5.0, 3.0, 6.0]
+    );
+    let text = entry(
+        "  %a = f32[2,4] parameter(0)\n  \
+         %s = f32[1,2] slice(%a), slice={[1:2], [1:3]}\n  \
+         ROOT %r = f32[2] reshape(%s)\n",
+        "a: f32[2,4]",
+        "f32[2]",
+    );
+    assert_eq!(
+        run(
+            &text,
+            &[(&[0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0], &[2, 4])]
+        ),
+        vec![5.0, 6.0]
+    );
+    let text = entry(
+        "  %a = f32[1,2] parameter(0)\n  %b = f32[2,2] parameter(1)\n  \
+         ROOT %c = f32[3,2] concatenate(%a, %b), dimensions={0}\n",
+        "a: f32[1,2], b: f32[2,2]",
+        "f32[3,2]",
+    );
+    assert_eq!(
+        run(&text, &[(&[9.0, 8.0], &[1, 2]), (&[1.0, 2.0, 3.0, 4.0], &[2, 2])]),
+        vec![9.0, 8.0, 1.0, 2.0, 3.0, 4.0]
+    );
+    let text = "HloModule t\n\nENTRY %main () -> f32[2,3] {\n  \
+                ROOT %i = f32[2,3] iota(), iota_dimension=1\n}\n";
+    assert_eq!(run(text, &[]), vec![0.0, 1.0, 2.0, 0.0, 1.0, 2.0]);
+}
+
+#[test]
+fn strided_slice() {
+    let text = entry(
+        "  %a = f32[6] parameter(0)\n  \
+         ROOT %s = f32[3] slice(%a), slice={[0:6:2]}\n",
+        "a: f32[6]",
+        "f32[3]",
+    );
+    assert_eq!(
+        run(&text, &[(&[0.0, 1.0, 2.0, 3.0, 4.0, 5.0], &[6])]),
+        vec![0.0, 2.0, 4.0]
+    );
+}
+
+#[test]
+fn dot_rank2_matmul() {
+    // [[1,2],[3,4]] x [[5,6],[7,8]] = [[19,22],[43,50]]
+    let text = entry(
+        "  %a = f32[2,2] parameter(0)\n  %b = f32[2,2] parameter(1)\n  \
+         ROOT %d = f32[2,2] dot(%a, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}\n",
+        "a: f32[2,2], b: f32[2,2]",
+        "f32[2,2]",
+    );
+    assert_eq!(
+        run(
+            &text,
+            &[(&[1.0, 2.0, 3.0, 4.0], &[2, 2]), (&[5.0, 6.0, 7.0, 8.0], &[2, 2])]
+        ),
+        vec![19.0, 22.0, 43.0, 50.0]
+    );
+}
+
+#[test]
+fn dot_transposed_contractions() {
+    // contracting lhs dim 0 vs rhs dim 0: aᵀ·b — the gradient pattern
+    let text = entry(
+        "  %a = f32[2,3] parameter(0)\n  %b = f32[2,2] parameter(1)\n  \
+         ROOT %d = f32[3,2] dot(%a, %b), lhs_contracting_dims={0}, rhs_contracting_dims={0}\n",
+        "a: f32[2,3], b: f32[2,2]",
+        "f32[3,2]",
+    );
+    let a = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]; // [[1,2,3],[4,5,6]]
+    let b = [1.0f32, 0.0, 0.0, 1.0]; // identity
+    assert_eq!(
+        run(&text, &[(&a, &[2, 3]), (&b, &[2, 2])]),
+        vec![1.0, 4.0, 2.0, 5.0, 3.0, 6.0] // aᵀ
+    );
+    // contracting lhs dim 1 vs rhs dim 1: a·bᵀ — the backprop-through-W
+    // pattern
+    let text = entry(
+        "  %a = f32[2,3] parameter(0)\n  %b = f32[4,3] parameter(1)\n  \
+         ROOT %d = f32[2,4] dot(%a, %b), lhs_contracting_dims={1}, rhs_contracting_dims={1}\n",
+        "a: f32[2,3], b: f32[4,3]",
+        "f32[2,4]",
+    );
+    let a = [1.0f32, 0.0, 0.0, 0.0, 1.0, 0.0]; // rows e0, e1
+    let b = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 10.0, 11.0, 12.0];
+    assert_eq!(
+        run(&text, &[(&a, &[2, 3]), (&b, &[4, 3])]),
+        vec![1.0, 4.0, 7.0, 10.0, 2.0, 5.0, 8.0, 11.0] // bᵀ's first two rows
+    );
+}
+
+#[test]
+fn dot_batched() {
+    // batch dim 0, contract lhs{2} rhs{1}: two independent 1x2 · 2x1
+    let text = entry(
+        "  %a = f32[2,1,2] parameter(0)\n  %b = f32[2,2,1] parameter(1)\n  \
+         ROOT %d = f32[2,1,1] dot(%a, %b), lhs_batch_dims={0}, rhs_batch_dims={0}, \
+         lhs_contracting_dims={2}, rhs_contracting_dims={1}\n",
+        "a: f32[2,1,2], b: f32[2,2,1]",
+        "f32[2,1,1]",
+    );
+    let a = [1.0f32, 2.0, 3.0, 4.0];
+    let b = [10.0f32, 20.0, 30.0, 40.0];
+    // batch 0: [1,2]·[10,20] = 50; batch 1: [3,4]·[30,40] = 250
+    assert_eq!(run(&text, &[(&a, &[2, 1, 2]), (&b, &[2, 2, 1])]), vec![50.0, 250.0]);
+}
+
+#[test]
+fn reduce_add_and_max_over_rows_and_all() {
+    let region = "%add_f32 (a: f32[], b: f32[]) -> f32[] {\n  \
+                  %a = f32[] parameter(0)\n  %b = f32[] parameter(1)\n  \
+                  ROOT %r = f32[] add(%a, %b)\n}\n\n\
+                  %max_f32 (c: f32[], d: f32[]) -> f32[] {\n  \
+                  %c = f32[] parameter(0)\n  %d = f32[] parameter(1)\n  \
+                  ROOT %m = f32[] maximum(%c, %d)\n}\n\n";
+    let text = format!(
+        "HloModule t\n\n{region}ENTRY %main (a: f32[2,3]) -> f32[2] {{\n  \
+         %a = f32[2,3] parameter(0)\n  %z = f32[] constant(0)\n  \
+         ROOT %s = f32[2] reduce(%a, %z), dimensions={{1}}, to_apply=%add_f32\n}}\n"
+    );
+    let data = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+    assert_eq!(run(&text, &[(&data, &[2, 3])]), vec![6.0, 15.0]);
+    let text = format!(
+        "HloModule t\n\n{region}ENTRY %main (a: f32[2,3]) -> f32[3] {{\n  \
+         %a = f32[2,3] parameter(0)\n  %n = f32[] constant(-inf)\n  \
+         ROOT %m = f32[3] reduce(%a, %n), dimensions={{0}}, to_apply=%max_f32\n}}\n"
+    );
+    assert_eq!(run(&text, &[(&data, &[2, 3])]), vec![4.0, 5.0, 6.0]);
+    let text = format!(
+        "HloModule t\n\n{region}ENTRY %main (a: f32[2,3]) -> f32[] {{\n  \
+         %a = f32[2,3] parameter(0)\n  %z = f32[] constant(0)\n  \
+         ROOT %s = f32[] reduce(%a, %z), dimensions={{0,1}}, to_apply=%add_f32\n}}\n"
+    );
+    assert_eq!(run(&text, &[(&data, &[2, 3])]), vec![21.0]);
+}
+
+#[test]
+fn reduce_nontrivial_region_falls_back_to_interpretation() {
+    // region computes a + 2b — not a recognised fast path
+    let text = "HloModule t\n\n\
+                %weird (a: f32[], b: f32[]) -> f32[] {\n  \
+                %a = f32[] parameter(0)\n  %b = f32[] parameter(1)\n  \
+                %two = f32[] constant(2)\n  %bb = f32[] multiply(%two, %b)\n  \
+                ROOT %r = f32[] add(%a, %bb)\n}\n\n\
+                ENTRY %main (a: f32[3]) -> f32[] {\n  \
+                %a = f32[3] parameter(0)\n  %z = f32[] constant(0)\n  \
+                ROOT %s = f32[] reduce(%a, %z), dimensions={0}, to_apply=%weird\n}\n";
+    // fold: ((0 + 2·1) + 2·2) + 2·3 = 12
+    assert_eq!(run(text, &[(&[1.0, 2.0, 3.0], &[3])]), vec![12.0]);
+}
+
+#[test]
+fn constants_scalar_vector_and_nested() {
+    let text = "HloModule t\n\nENTRY %main () -> f32[2,2] {\n  \
+                ROOT %c = f32[2,2] constant({ { 1, 2 }, { 3.5, -4 } })\n}\n";
+    assert_eq!(run(text, &[]), vec![1.0, 2.0, 3.5, -4.0]);
+    let text = "HloModule t\n\nENTRY %main () -> f32[3] {\n  \
+                %c = f32[3] constant({1, -2, 0.25})\n  \
+                %s = f32[] constant(2)\n  \
+                ROOT %r = f32[3] multiply(%c, %s)\n}\n";
+    assert_eq!(run(text, &[]), vec![2.0, -4.0, 0.5]);
+}
+
+#[test]
+fn tuple_roundtrip_through_get_tuple_element() {
+    let text = "HloModule t\n\nENTRY %main (a: f32[2], b: f32[3]) -> f32[3] {\n  \
+                %a = f32[2] parameter(0)\n  %b = f32[3] parameter(1)\n  \
+                %t = (f32[2], f32[3]) tuple(%a, %b)\n  \
+                ROOT %g = f32[3] get-tuple-element(%t), index=1\n}\n";
+    assert_eq!(
+        run(text, &[(&[1.0, 2.0], &[2]), (&[7.0, 8.0, 9.0], &[3])]),
+        vec![7.0, 8.0, 9.0]
+    );
+}
+
+#[test]
+fn tuple_root_untuples_into_leaves() {
+    let text = "HloModule t\n\nENTRY %main (a: f32[2]) -> (f32[2], f32[]) {\n  \
+                %a = f32[2] parameter(0)\n  %z = f32[] constant(41)\n  \
+                %one = f32[] constant(1)\n  %s = f32[] add(%z, %one)\n  \
+                ROOT %t = (f32[2], f32[]) tuple(%a, %s)\n}\n";
+    let proto = HloModuleProto::from_text(text).unwrap();
+    let client = PjRtClient::cpu().unwrap();
+    let exe = client.compile(&XlaComputation::from_proto(&proto)).unwrap();
+    let a = client
+        .buffer_from_host_buffer::<f32>(&[5.0, 6.0], &[2], None)
+        .unwrap();
+    let out = exe.execute_b(&[a]).unwrap();
+    let leaves = out[0][0].to_literal_sync().unwrap().to_tuple().unwrap();
+    assert_eq!(leaves.len(), 2);
+    assert_eq!(leaves[0].to_vec::<f32>().unwrap(), vec![5.0, 6.0]);
+    assert_eq!(leaves[1].to_vec::<f32>().unwrap(), vec![42.0]);
+}
+
+#[test]
+fn layouts_inline_shapes_and_metadata_are_tolerated() {
+    // decoration an XLA as_hlo_text dump carries: layouts on shapes,
+    // operand shape annotations, metadata attributes
+    let text = "HloModule jit_f, entry_computation_layout={(f32[2,2]{1,0})->f32[2,2]{1,0}}\n\n\
+                ENTRY %main.4 (Arg_0.1: f32[2,2]) -> f32[2,2] {\n  \
+                %Arg_0.1 = f32[2,2]{1,0} parameter(0), metadata={op_name=\"args[0]\"}\n  \
+                ROOT %multiply.3 = f32[2,2]{1,0} multiply(f32[2,2]{1,0} %Arg_0.1, f32[2,2]{1,0} %Arg_0.1), metadata={op_type=\"mul\" op_name=\"jit(f)/mul\" source_file=\"x.py\" source_line=1}\n}\n";
+    assert_eq!(
+        run(text, &[(&[1.0, 2.0, 3.0, 4.0], &[2, 2])]),
+        vec![1.0, 4.0, 9.0, 16.0]
+    );
+}
+
+#[test]
+fn power_and_tanh() {
+    let text = entry(
+        "  %a = f32[2] parameter(0)\n  %e = f32[] constant(2)\n  \
+         ROOT %p = f32[2] power(%a, %e)\n",
+        "a: f32[2]",
+        "f32[2]",
+    );
+    assert_eq!(run(&text, &[(&[3.0, -2.0], &[2])]), vec![9.0, 4.0]);
+    let text = entry(
+        "  %a = f32[1] parameter(0)\n  ROOT %t = f32[1] tanh(%a)\n",
+        "a: f32[1]",
+        "f32[1]",
+    );
+    let out = run(&text, &[(&[0.5], &[1])]);
+    assert!((out[0] - 0.5f32.tanh()).abs() < 1e-6);
+}
