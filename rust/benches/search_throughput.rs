@@ -19,20 +19,26 @@
 //!    the checked-in HLO fixtures (or real AOT artifacts when built) and
 //!    times `surrogate_predict`/`train_step` executions through the
 //!    `rust/xla` HLO interpreter.
+//! 5. **Sharded dispatch** — the same search through the multi-process
+//!    shard protocol (file-based queue + lease claims, worker loops on
+//!    threads), verifying the trial stream stays identical and recording
+//!    the protocol's throughput next to the in-process numbers.
 //!
 //! Writes `BENCH_search.json` for the per-commit perf trajectory.
 
 mod common;
 
 use std::path::Path;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use snac_pack::coordinator::{global_search_with, SearchLoopConfig, SearchOutcome};
 use snac_pack::eval::{
-    EvalCache, EvalRequest, ParallelEvaluator, TrialEvaluation, TrialEvaluator,
+    run_worker, EvalCache, EvalRequest, ParallelEvaluator, RunDir, ShardDriver, ShardTimings,
+    StageSpec, TrialEvaluation, TrialEvaluator, WorkerOptions,
 };
 use snac_pack::hls::{synthesize, FpgaDevice, HlsConfig, NetworkSpec};
 use snac_pack::nn::{self, Genome, SearchSpace};
+use snac_pack::objectives::ObjectiveKind;
 use snac_pack::runtime::runtime::arg;
 use snac_pack::runtime::Runtime;
 use snac_pack::search::Nsga2Config;
@@ -200,6 +206,85 @@ fn dispatch_streaming(pool: &ParallelEvaluator<SkewedTrainer>, reqs: Vec<EvalReq
     pool.evaluate_stream(reqs, |trial| accs.push(trial.evaluation.accuracy))
         .expect("streaming dispatch");
     accs
+}
+
+/// Phase 5: the identical search budget dispatched through the shard
+/// protocol — driver partitions each generation into `shards` files,
+/// `workers` worker loops (threads here; separate processes in
+/// production) claim and evaluate them with the same simulated trainer.
+fn run_sharded(shards: usize, workers: usize) -> (SearchOutcome, f64) {
+    let space = SearchSpace::table1();
+    let run_dir = std::env::temp_dir().join(format!(
+        "snac_bench_shard_{}_{shards}_{workers}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&run_dir);
+    let driver = ShardDriver::new(
+        &run_dir,
+        "bench",
+        StageSpec {
+            objectives: ObjectiveKind::nac_set(),
+            epochs: 1,
+        },
+        shards,
+        EvalCache::in_memory(),
+        ShardTimings {
+            poll: Duration::from_millis(2),
+            ..Default::default()
+        },
+    )
+    .expect("shard driver");
+    let opts = WorkerOptions {
+        poll: Duration::from_millis(2),
+        heartbeat: Duration::from_millis(500),
+        ..Default::default()
+    };
+    // always request shutdown — even when the driver panics — so worker
+    // threads exit and the scope can join instead of hanging the bench
+    struct ShutdownOnDrop(RunDir);
+    impl Drop for ShutdownOnDrop {
+        fn drop(&mut self) {
+            let _ = self.0.request_shutdown();
+        }
+    }
+    let t0 = Instant::now();
+    let outcome = std::thread::scope(|s| {
+        let _guard = ShutdownOnDrop(RunDir::new(&run_dir));
+        for _ in 0..workers {
+            let rd = run_dir.as_path();
+            let opts = opts.clone();
+            s.spawn(move || {
+                let trainer = simulated_trainer();
+                run_worker(rd, &opts, |_stage, reqs| {
+                    reqs.iter()
+                        .map(|req| {
+                            let mut rng = req.rng.clone();
+                            trainer.evaluate(&req.genome, &mut rng)
+                        })
+                        .collect()
+                })
+                .expect("bench worker");
+            });
+        }
+        global_search_with(
+            &driver,
+            &space,
+            SearchLoopConfig {
+                nsga2: Nsga2Config {
+                    population: POPULATION,
+                    ..Default::default()
+                },
+                trials: TRIALS,
+                seed: SEED,
+                accuracy_threshold: 0.0,
+                progress: None,
+            },
+        )
+        .expect("sharded search")
+    });
+    let secs = t0.elapsed().as_secs_f64();
+    let _ = std::fs::remove_dir_all(&run_dir);
+    (outcome, secs)
 }
 
 /// Phase 4: time HLO executions through the `rust/xla` interpreter (or
@@ -458,6 +543,35 @@ fn main() -> anyhow::Result<()> {
     // ---- phase 4: interpreter execute throughput ----
     let interpreter = bench_interpreter()?;
 
+    // ---- phase 5: sharded dispatch over the file-based work queue ----
+    let serial_genomes = serial_genomes.expect("phase 1 ran");
+    let mut sharded_results = Vec::new();
+    for (shards, workers) in [(2usize, 2usize), (4, 4)] {
+        let (outcome, secs) = run_sharded(shards, workers);
+        let genomes: Vec<Genome> = outcome.records.iter().map(|r| r.genome.clone()).collect();
+        assert_eq!(
+            serial_genomes, genomes,
+            "sharded dispatch must not change the trial stream"
+        );
+        let tps = TRIALS as f64 / secs;
+        println!(
+            "bench search/sharded_{shards}x{workers:<2}  {:>10}  {tps:>7.1} trials/s  \
+             ({} trained, {} cache hits)",
+            common::fmt(secs),
+            outcome.evaluations,
+            outcome.cache_hits
+        );
+        sharded_results.push(Json::obj(vec![
+            ("shards", Json::Num(shards as f64)),
+            ("workers", Json::Num(workers as f64)),
+            ("seconds", Json::Num(secs)),
+            ("trials_per_sec", Json::Num(tps)),
+            ("evaluations", Json::Num(outcome.evaluations as f64)),
+            ("speedup_vs_serial", Json::Num(serial_secs / secs)),
+        ]));
+    }
+    println!("determinism: sharded trial streams identical to the in-process pool");
+
     let report = Json::obj(vec![
         ("bench", Json::Str("search_throughput".to_string())),
         ("interpreter", interpreter),
@@ -495,6 +609,7 @@ fn main() -> anyhow::Result<()> {
                 ("warm_cache_restored", Json::Num(warm.cache_restored as f64)),
             ]),
         ),
+        ("sharded", Json::Arr(sharded_results)),
     ]);
     std::fs::write("BENCH_search.json", report.to_string())?;
     println!("wrote BENCH_search.json");

@@ -8,11 +8,12 @@
 //!   are preserved.
 //! * `quickstart` — seconds; used by `examples/quickstart.rs`.
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::compress::LocalSearchConfig;
 use crate::search::Nsga2Config;
 use crate::surrogate::SurrogateTrainConfig;
+use crate::util::Json;
 
 /// Dataset sizing.
 #[derive(Debug, Clone)]
@@ -40,6 +41,12 @@ pub struct SearchBudget {
     /// objectives, and selection are identical for every value; only the
     /// recorded wall-clock timings change.
     pub workers: usize,
+    /// Shards per generation for multi-process dispatch (`--shards`).
+    /// `0` = in-process evaluation (the default); `N > 0` partitions every
+    /// generation into N shard files served by `snac-pack worker`
+    /// processes over `run_dir`. Genomes, objectives, and selection are
+    /// identical for every shard count; only timings change.
+    pub shards: usize,
 }
 
 /// A full experiment preset.
@@ -61,6 +68,15 @@ pub struct Preset {
     /// and written through on every commit, so repeated runs never
     /// retrain a previously evaluated genome. `None` = in-memory only.
     pub cache_path: Option<String>,
+    /// Shared run directory for sharded dispatch (`--run-dir`). Required
+    /// when `shards > 0` for the driver; defaults to `<out>/shard-run`
+    /// in the CLI when omitted.
+    pub run_dir: Option<String>,
+    /// How many local `snac-pack worker` processes the CLI driver spawns
+    /// for a sharded run. `None` = auto (one per shard); `Some(0)` =
+    /// spawn none (workers are managed externally, e.g. on other
+    /// terminals or — in the future — other machines).
+    pub spawn_workers: Option<usize>,
 }
 
 impl Preset {
@@ -80,11 +96,14 @@ impl Preset {
                     population: 20,
                     epochs: 5,
                     workers: 0,
+                    shards: 0,
                 },
                 surrogate: SurrogateTrainConfig::default(),
                 local: LocalSearchConfig::default(),
                 seed: 1,
                 cache_path: None,
+                run_dir: None,
+                spawn_workers: None,
             }),
             "ci" => Ok(Preset {
                 name: name.into(),
@@ -99,6 +118,7 @@ impl Preset {
                     population: 16,
                     epochs: 5,
                     workers: 0,
+                    shards: 0,
                 },
                 surrogate: SurrogateTrainConfig::default(),
                 local: LocalSearchConfig {
@@ -109,6 +129,8 @@ impl Preset {
                 },
                 seed: 1,
                 cache_path: None,
+                run_dir: None,
+                spawn_workers: None,
             }),
             "quickstart" => Ok(Preset {
                 name: name.into(),
@@ -123,6 +145,7 @@ impl Preset {
                     population: 6,
                     epochs: 2,
                     workers: 0,
+                    shards: 0,
                 },
                 surrogate: SurrogateTrainConfig {
                     dataset_size: 1024,
@@ -137,6 +160,8 @@ impl Preset {
                 },
                 seed: 1,
                 cache_path: None,
+                run_dir: None,
+                spawn_workers: None,
             }),
             other => bail!("unknown preset `{other}` (paper | ci | quickstart)"),
         }
@@ -169,9 +194,98 @@ impl Preset {
             "target_sparsity" => self.local.target_sparsity = value.parse()?,
             "seed" => self.seed = value.parse()?,
             "cache_path" => self.cache_path = Some(value.to_string()),
+            "shards" => self.search.shards = uint()?,
+            "run_dir" => self.run_dir = Some(value.to_string()),
+            "spawn_workers" => {
+                self.spawn_workers = if value == "auto" {
+                    None
+                } else {
+                    Some(value.parse().context("spawn_workers expects a count or `auto`")?)
+                }
+            }
             other => bail!("unknown override `{other}`"),
         }
         Ok(())
+    }
+
+    /// Every `--set`-able key, in application order. `to_json` serialises
+    /// exactly these (plus the preset name), and `from_json` replays them
+    /// over `by_name` — so the codec's surface is the override surface by
+    /// construction, and fields outside it (e.g. surrogate learning rate)
+    /// stay pinned to the named preset on both ends.
+    const OVERRIDE_KEYS: [&str; 18] = [
+        "trials",
+        "population",
+        "epochs",
+        "workers",
+        "n_train",
+        "n_val",
+        "n_test",
+        "surrogate_size",
+        "surrogate_epochs",
+        "imp_iterations",
+        "imp_epochs",
+        "warmup_epochs",
+        "target_sparsity",
+        "seed",
+        "cache_path",
+        "shards",
+        "run_dir",
+        "spawn_workers",
+    ];
+
+    fn get(&self, key: &str) -> Option<String> {
+        let s = |v: usize| Some(v.to_string());
+        match key {
+            "trials" => s(self.search.trials),
+            "population" => s(self.search.population),
+            "epochs" => s(self.search.epochs),
+            "workers" => s(self.search.workers),
+            "n_train" => s(self.data.n_train),
+            "n_val" => s(self.data.n_val),
+            "n_test" => s(self.data.n_test),
+            "surrogate_size" => s(self.surrogate.dataset_size),
+            "surrogate_epochs" => s(self.surrogate.epochs),
+            "imp_iterations" => s(self.local.imp_iterations),
+            "imp_epochs" => s(self.local.epochs_per_iteration),
+            "warmup_epochs" => s(self.local.warmup_epochs),
+            "target_sparsity" => Some(format!("{}", self.local.target_sparsity)),
+            "seed" => Some(self.seed.to_string()),
+            "cache_path" => self.cache_path.clone(),
+            "shards" => s(self.search.shards),
+            "run_dir" => self.run_dir.clone(),
+            "spawn_workers" => self.spawn_workers.map(|v| v.to_string()),
+            _ => None,
+        }
+    }
+
+    /// Serialise this preset for a sharded run's `run.json`, so worker
+    /// processes reconstruct the exact experiment configuration.
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![("name", Json::Str(self.name.clone()))];
+        for key in Self::OVERRIDE_KEYS {
+            if let Some(value) = self.get(key) {
+                pairs.push((key, Json::Str(value)));
+            }
+        }
+        Json::obj(pairs)
+    }
+
+    /// Reconstruct a preset serialised by [`Preset::to_json`].
+    pub fn from_json(j: &Json) -> Result<Preset> {
+        let name = j
+            .get("name")
+            .and_then(Json::as_str)
+            .context("preset JSON missing `name`")?;
+        let mut preset = Preset::by_name(name)?;
+        for key in Self::OVERRIDE_KEYS {
+            if let Some(value) = j.get(key).and_then(Json::as_str) {
+                preset
+                    .set(key, value)
+                    .with_context(|| format!("restoring preset key `{key}`"))?;
+            }
+        }
+        Ok(preset)
     }
 }
 
@@ -209,10 +323,55 @@ mod tests {
         p.set("target_sparsity", "0.7").unwrap();
         p.set("workers", "4").unwrap();
         p.set("cache_path", "results/eval_cache.json").unwrap();
+        p.set("shards", "3").unwrap();
+        p.set("run_dir", "/tmp/run").unwrap();
+        p.set("spawn_workers", "2").unwrap();
         assert_eq!(p.search.trials, 99);
         assert_eq!(p.local.target_sparsity, 0.7);
         assert_eq!(p.search.workers, 4);
         assert_eq!(p.cache_path.as_deref(), Some("results/eval_cache.json"));
+        assert_eq!(p.search.shards, 3);
+        assert_eq!(p.run_dir.as_deref(), Some("/tmp/run"));
+        assert_eq!(p.spawn_workers, Some(2));
+        p.set("spawn_workers", "auto").unwrap();
+        assert_eq!(p.spawn_workers, None);
         assert!(p.set("bogus", "1").is_err());
+        assert!(p.set("spawn_workers", "lots").is_err());
+    }
+
+    /// The run.json codec: every override survives the round trip, and
+    /// preset-fixed fields come back from the named base.
+    #[test]
+    fn preset_json_round_trips_every_override() {
+        let mut p = Preset::by_name("quickstart").unwrap();
+        p.set("trials", "7").unwrap();
+        p.set("population", "5").unwrap();
+        p.set("epochs", "3").unwrap();
+        p.set("workers", "2").unwrap();
+        p.set("n_train", "777").unwrap();
+        p.set("surrogate_size", "256").unwrap();
+        p.set("target_sparsity", "0.65").unwrap();
+        p.set("seed", "99").unwrap();
+        p.set("cache_path", "/tmp/c.json").unwrap();
+        p.set("shards", "2").unwrap();
+        p.set("run_dir", "/tmp/rd").unwrap();
+        let text = p.to_json().to_string();
+        let back = Preset::from_json(&crate::util::Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.name, "quickstart");
+        assert_eq!(back.search.trials, 7);
+        assert_eq!(back.search.population, 5);
+        assert_eq!(back.search.epochs, 3);
+        assert_eq!(back.search.workers, 2);
+        assert_eq!(back.search.shards, 2);
+        assert_eq!(back.data.n_train, 777);
+        assert_eq!(back.data.n_val, 384, "untouched fields come from the base preset");
+        assert_eq!(back.data.seed, 7, "data seed is preset-fixed");
+        assert_eq!(back.surrogate.dataset_size, 256);
+        assert_eq!(back.local.target_sparsity, 0.65);
+        assert_eq!(back.seed, 99);
+        assert_eq!(back.cache_path.as_deref(), Some("/tmp/c.json"));
+        assert_eq!(back.run_dir.as_deref(), Some("/tmp/rd"));
+        // garbage is rejected with context
+        assert!(Preset::from_json(&crate::util::Json::parse("{}").unwrap()).is_err());
     }
 }

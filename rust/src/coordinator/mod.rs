@@ -19,6 +19,7 @@ pub mod trial_db;
 
 pub use pipeline::{run_pipeline, PipelineSummary, ProcessedModel};
 pub use search_loop::{
-    global_search, global_search_with, GlobalSearchConfig, SearchLoopConfig, SearchOutcome,
+    global_search, global_search_sharded, global_search_with, GlobalSearchConfig,
+    SearchLoopConfig, SearchOutcome, ShardedDispatch,
 };
 pub use trial_db::TrialRecord;

@@ -20,14 +20,16 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use super::search_loop::{global_search, GlobalSearchConfig, SearchOutcome};
+use super::search_loop::{
+    global_search, global_search_sharded, GlobalSearchConfig, SearchOutcome, ShardedDispatch,
+};
 use super::trial_db::TrialRecord;
 use crate::compress::{local_search, synthesis_nnz, LocalSearchResult};
 use crate::config::Preset;
 use crate::data::{Dataset, Split};
 use crate::eval::{
-    parallel_map, resolve_workers, EvalCache, EvalRequest, ParallelEvaluator,
-    SupernetEvaluator,
+    parallel_map, resolve_workers, EvalCache, EvalRequest, ParallelEvaluator, ShardDriver,
+    ShardTimings, StageSpec, SupernetEvaluator,
 };
 use crate::hls::{synthesize, FpgaDevice, HlsConfig, NetworkSpec, SynthReport};
 use crate::nn::{bops, Genome, SearchSpace, SupernetInputs};
@@ -101,6 +103,25 @@ pub fn run_pipeline(rt: &Runtime, preset: &Preset, out_dir: &Path) -> Result<Pip
     if let Some(p) = &cache_path {
         eprintln!("[pipeline] evaluation cache: {}", p.display());
     }
+    // Sharded dispatch: with `shards > 0` the baseline training and both
+    // global searches hand their trial batches to `snac-pack worker`
+    // processes over the shared run directory (one directory, three
+    // sequential stages under distinct labels). Results are bit-identical
+    // to the in-process path; only timings change. Local search + synthesis
+    // stay in-process — they are three fixed models, not a generation.
+    let shard_run: Option<std::path::PathBuf> = if preset.search.shards > 0 {
+        let dir = preset.run_dir.as_ref().context(
+            "sharded dispatch (shards > 0) needs a run directory — pass --run-dir \
+             (the CLI defaults it to <out>/shard-run)",
+        )?;
+        eprintln!(
+            "[pipeline] sharded dispatch: {} shards/generation over {dir}",
+            preset.search.shards
+        );
+        Some(std::path::PathBuf::from(dir))
+    } else {
+        None
+    };
     let ds = timed(&mut timings, "dataset", || {
         Ok(Dataset::generate(
             preset.data.n_train,
@@ -122,24 +143,6 @@ pub fn run_pipeline(rt: &Runtime, preset: &Preset, out_dir: &Path) -> Result<Pip
     let baseline_genome = space.baseline();
     let baseline_acc = timed(&mut timings, "baseline-train", || {
         let objectives = ObjectiveKind::nac_set();
-        let ctx = ObjectiveContext {
-            space: &space,
-            device: &device,
-            surrogate: None,
-            bits: preset.local.bits,
-            sparsity: preset.local.target_sparsity,
-        };
-        let evaluator = SupernetEvaluator::new(
-            rt,
-            &ds,
-            &space,
-            &objectives,
-            &ctx,
-            TrainConfig {
-                epochs: preset.search.epochs,
-                ..Default::default()
-            },
-        );
         // The baseline trains with its own RNG stream (derived from the
         // master seed), so it caches under its own seed-pinned scope; a
         // re-run with the same --cache-path and configuration skips this
@@ -151,19 +154,53 @@ pub fn run_pipeline(rt: &Runtime, preset: &Preset, out_dir: &Path) -> Result<Pip
             ds.len(Split::Train),
             ds.len(Split::Val)
         );
-        let pool = ParallelEvaluator::with_cache(
-            evaluator,
-            1,
-            EvalCache::open(cache_path.as_deref(), &space, &scope),
-        );
-        let trial = pool
-            .evaluate_batch(vec![EvalRequest {
-                trial_id: 0,
-                genome: baseline_genome.clone(),
-                rng: Rng::new(preset.seed ^ 0xba5e_11),
-            }])?
-            .pop()
-            .expect("one baseline trial");
+        let request = EvalRequest {
+            trial_id: 0,
+            genome: baseline_genome.clone(),
+            rng: Rng::new(preset.seed ^ 0xba5e_11),
+        };
+        let cache = EvalCache::open(cache_path.as_deref(), &space, &scope);
+        let trial = if let Some(run_dir) = &shard_run {
+            // same protocol, dispatched through the worker fleet (a
+            // single-trial generation → a single shard)
+            let driver = ShardDriver::new(
+                run_dir,
+                "baseline",
+                StageSpec {
+                    objectives,
+                    epochs: preset.search.epochs,
+                },
+                preset.search.shards,
+                cache,
+                ShardTimings::default(),
+            )?;
+            let mut out = None;
+            driver.evaluate_stream(vec![request], |t| out = Some(t))?;
+            out.expect("one baseline trial")
+        } else {
+            let ctx = ObjectiveContext {
+                space: &space,
+                device: &device,
+                surrogate: None,
+                bits: preset.local.bits,
+                sparsity: preset.local.target_sparsity,
+            };
+            let evaluator = SupernetEvaluator::new(
+                rt,
+                &ds,
+                &space,
+                &objectives,
+                &ctx,
+                TrainConfig {
+                    epochs: preset.search.epochs,
+                    ..Default::default()
+                },
+            );
+            let pool = ParallelEvaluator::with_cache(evaluator, 1, cache);
+            pool.evaluate_batch(vec![request])?
+                .pop()
+                .expect("one baseline trial")
+        };
         if trial.cached {
             eprintln!("[pipeline] baseline evaluation restored from cache");
         }
@@ -180,39 +217,51 @@ pub fn run_pipeline(rt: &Runtime, preset: &Preset, out_dir: &Path) -> Result<Pip
                       stage: &str|
      -> Result<SearchOutcome> {
         timed(timings, stage, || {
-            global_search(
-                rt,
-                &ds,
-                &space,
-                GlobalSearchConfig {
-                    objectives,
-                    ctx: ObjectiveContext {
-                        space: &space,
-                        device: &device,
-                        surrogate: use_surrogate.then_some(&surrogate),
-                        bits: preset.local.bits,
-                        sparsity: preset.local.target_sparsity,
-                    },
-                    nsga2: preset.nsga2(),
-                    trials: preset.search.trials,
-                    epochs: preset.search.epochs,
-                    seed: preset.seed,
-                    workers,
-                    accuracy_threshold: threshold,
-                    progress: Some(Box::new({
-                        let stage = stage.to_string();
-                        move |i, n, r: &TrialRecord| {
-                            if i % 10 == 0 || i == n {
-                                eprintln!(
-                                    "[{stage}] trial {i}/{n}: {} acc={:.4}",
-                                    r.label, r.accuracy
-                                );
-                            }
-                        }
-                    })),
-                    cache_path: cache_path.clone(),
+            let cfg = GlobalSearchConfig {
+                objectives,
+                ctx: ObjectiveContext {
+                    space: &space,
+                    device: &device,
+                    surrogate: use_surrogate.then_some(&surrogate),
+                    bits: preset.local.bits,
+                    sparsity: preset.local.target_sparsity,
                 },
-            )
+                nsga2: preset.nsga2(),
+                trials: preset.search.trials,
+                epochs: preset.search.epochs,
+                seed: preset.seed,
+                workers,
+                accuracy_threshold: threshold,
+                progress: Some(Box::new({
+                    let stage = stage.to_string();
+                    move |i, n, r: &TrialRecord| {
+                        if i % 10 == 0 || i == n {
+                            eprintln!(
+                                "[{stage}] trial {i}/{n}: {} acc={:.4}",
+                                r.label, r.accuracy
+                            );
+                        }
+                    }
+                })),
+                cache_path: cache_path.clone(),
+            };
+            match &shard_run {
+                // workers rebuild the evaluator stack (and, for SNAC, the
+                // surrogate — deterministically from the same preset seed,
+                // so its estimates match the driver's bit for bit)
+                Some(run_dir) => global_search_sharded(
+                    &ds,
+                    &space,
+                    cfg,
+                    &ShardedDispatch {
+                        run_dir,
+                        label: stage,
+                        shards: preset.search.shards,
+                        timings: ShardTimings::default(),
+                    },
+                ),
+                None => global_search(rt, &ds, &space, cfg),
+            }
         })
     };
     let nac = run_search(ObjectiveKind::nac_set(), false, &mut timings, "search-nac")?;

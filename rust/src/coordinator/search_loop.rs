@@ -11,14 +11,17 @@
 //! except the recorded wall-clock timings (`train_seconds` is live
 //! measurement and varies run to run).
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 use anyhow::Result;
 
 use super::trial_db::TrialRecord;
 use crate::data::{Dataset, Split};
-use crate::eval::{EvalCache, EvalRequest, ParallelEvaluator, SupernetEvaluator, TrialEvaluator};
+use crate::eval::{
+    EvalCache, EvalPool, EvalRequest, ParallelEvaluator, ShardDriver, ShardTimings, StageSpec,
+    SupernetEvaluator,
+};
 use crate::nn::SearchSpace;
 use crate::objectives::{ObjectiveContext, ObjectiveKind};
 use crate::pareto;
@@ -58,7 +61,7 @@ pub struct GlobalSearchConfig<'a> {
 }
 
 /// The evaluator-independent slice of the search configuration, used by
-/// [`global_search_with`] to drive any [`TrialEvaluator`].
+/// [`global_search_with`] to drive any [`crate::eval::EvalPool`].
 pub struct SearchLoopConfig {
     /// NSGA-II parameters.
     pub nsga2: Nsga2Config,
@@ -91,6 +94,32 @@ pub struct SearchOutcome {
     pub cache_restored: usize,
 }
 
+/// The persistent-cache scope for a global search. An evaluation is only
+/// reusable under the same training protocol, so the scope pins
+/// everything that changes what a trial returns: the objective set, the
+/// per-trial epoch budget, the dataset size, and the master seed
+/// (per-trial RNG streams fork from it — a different seed must retrain
+/// rather than silently replay another run's scores).
+fn search_scope(objectives: &[ObjectiveKind], epochs: usize, seed: u64, ds: &Dataset) -> String {
+    format!(
+        "search|{objectives:?}|epochs={epochs}|seed={seed}|train={}x{}",
+        ds.len(Split::Train),
+        ds.len(Split::Val)
+    )
+}
+
+fn open_scoped_cache(cache_path: Option<&Path>, space: &SearchSpace, scope: &str) -> EvalCache {
+    let cache = EvalCache::open(cache_path, space, scope);
+    if let (true, Some(path)) = (cache.restored() > 0, cache.path()) {
+        eprintln!(
+            "[search] restored {} cached evaluations from {}",
+            cache.restored(),
+            path.display()
+        );
+    }
+    cache
+}
+
 /// Run the paper's global search stage: train-and-score evaluation over
 /// the supernet runtime, parallelised and memoised per
 /// [`crate::eval::ParallelEvaluator`].
@@ -118,24 +147,8 @@ pub fn global_search(
         epochs,
         ..Default::default()
     };
-    // An evaluation is only reusable under the same training protocol, so
-    // the snapshot scope pins everything that changes what a trial returns:
-    // the objective set, the per-trial epoch budget, the dataset size, and
-    // the master seed (per-trial RNG streams fork from it — a different
-    // seed must retrain rather than silently replay another run's scores).
-    let scope = format!(
-        "search|{objectives:?}|epochs={epochs}|seed={seed}|train={}x{}",
-        ds.len(Split::Train),
-        ds.len(Split::Val)
-    );
-    let cache = EvalCache::open(cache_path.as_deref(), space, &scope);
-    if let (true, Some(path)) = (cache.restored() > 0, cache.path()) {
-        eprintln!(
-            "[search] restored {} cached evaluations from {}",
-            cache.restored(),
-            path.display()
-        );
-    }
+    let scope = search_scope(&objectives, epochs, seed, ds);
+    let cache = open_scoped_cache(cache_path.as_deref(), space, &scope);
     let evaluator = SupernetEvaluator::new(rt, ds, space, &objectives, &ctx, train);
     let pool = ParallelEvaluator::with_cache(evaluator, workers, cache);
     global_search_with(
@@ -151,11 +164,86 @@ pub fn global_search(
     )
 }
 
-/// Drive the NSGA-II loop over any evaluation pool. Exposed so tests and
-/// benches can exercise the search machinery with synthetic evaluators
-/// (no runtime artifacts required).
-pub fn global_search_with<E: TrialEvaluator>(
-    pool: &ParallelEvaluator<E>,
+/// Where a sharded search dispatches its generations.
+pub struct ShardedDispatch<'a> {
+    /// The shared run directory served by `snac-pack worker` processes.
+    pub run_dir: &'a Path,
+    /// File-name namespace for this search's shards (the pipeline runs
+    /// several sharded stages over one run directory, in sequence).
+    pub label: &'a str,
+    /// Shards per generation.
+    pub shards: usize,
+    /// Lease/poll/stall knobs.
+    pub timings: ShardTimings,
+}
+
+/// Run a global search whose trial evaluation is sharded across
+/// `snac-pack worker` processes instead of in-process threads. The
+/// outcome is bit-identical to [`global_search`] under the same seed and
+/// budget (only wall-clock timings differ): the NSGA-II loop, RNG
+/// forking, duplicate collapse, and trial-ordered emission are the exact
+/// same code, only the dispatch backend changes.
+///
+/// `cfg.ctx` and `cfg.workers` are unused here — workers rebuild the
+/// evaluation stack (runtime, dataset, surrogate) from the run manifest
+/// on their side, so the driver never loads a training runtime.
+pub fn global_search_sharded(
+    ds: &Dataset,
+    space: &SearchSpace,
+    cfg: GlobalSearchConfig<'_>,
+    dispatch: &ShardedDispatch<'_>,
+) -> Result<SearchOutcome> {
+    let GlobalSearchConfig {
+        objectives,
+        ctx: _,
+        nsga2,
+        trials,
+        epochs,
+        seed,
+        workers: _,
+        accuracy_threshold,
+        progress,
+        cache_path,
+    } = cfg;
+    debug_assert_eq!(objectives[0], ObjectiveKind::Accuracy);
+    let scope = search_scope(&objectives, epochs, seed, ds);
+    let cache = open_scoped_cache(cache_path.as_deref(), space, &scope);
+    let stage = StageSpec { objectives, epochs };
+    let driver = ShardDriver::new(
+        dispatch.run_dir,
+        dispatch.label,
+        stage,
+        dispatch.shards,
+        cache,
+        dispatch.timings.clone(),
+    )?;
+    let outcome = global_search_with(
+        &driver,
+        space,
+        SearchLoopConfig {
+            nsga2,
+            trials,
+            seed,
+            accuracy_threshold,
+            progress,
+        },
+    )?;
+    eprintln!(
+        "[{}] sharded dispatch: {} shards/generation over {}, {} lease reclaims",
+        dispatch.label,
+        driver.shards(),
+        dispatch.run_dir.display(),
+        driver.reclaims()
+    );
+    Ok(outcome)
+}
+
+/// Drive the NSGA-II loop over any evaluation pool — the in-process
+/// [`ParallelEvaluator`] or the multi-process [`ShardDriver`]. Exposed so
+/// tests and benches can exercise the search machinery with synthetic
+/// evaluators (no runtime artifacts required).
+pub fn global_search_with<P: EvalPool>(
+    pool: &P,
     space: &SearchSpace,
     mut cfg: SearchLoopConfig,
 ) -> Result<SearchOutcome> {
@@ -194,7 +282,7 @@ pub fn global_search_with<E: TrialEvaluator>(
         // above, emission preserves trial order, and a duplicate genome
         // reuses exactly the evaluation its first occurrence produced.
         let mut evaluated = Vec::with_capacity(take);
-        pool.evaluate_stream(requests, |trial| {
+        pool.evaluate_stream_dyn(requests, &mut |trial| {
             let record = TrialRecord {
                 id: trial.trial_id,
                 generation,
@@ -245,7 +333,7 @@ pub fn global_search_with<E: TrialEvaluator>(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::eval::TrialEvaluation;
+    use crate::eval::{TrialEvaluation, TrialEvaluator};
     use crate::hls::FpgaDevice;
     use crate::nn::Genome;
     use crate::util::Json;

@@ -25,12 +25,34 @@
 //!
 //! A missing file is an empty cache; a corrupted file is an empty cache
 //! plus a warning (the search must never abort over a bad snapshot — the
-//! next commit rewrites it). Saves go through a temp-file rename so a
-//! crash mid-write cannot destroy the previous snapshot.
+//! next commit rewrites it).
+//!
+//! # Multi-process write-through
+//!
+//! Several *processes* may write through to one snapshot path — the shard
+//! subsystem's driver plus independent runs pointed at the same
+//! `--cache-path`. Three mechanisms keep that safe:
+//!
+//! 1. every save writes a **uniquely named** temp file (pid + sequence)
+//!    and atomically renames it over the snapshot, so a reader (or a
+//!    concurrent writer's rename) can never observe a half-written file;
+//! 2. saves serialise on a **`.lock` sidecar** (`create_new`, stolen when
+//!    visibly stale), so read-merge-write cycles do not interleave;
+//! 3. each save **re-reads and merges** the on-disk snapshot under the
+//!    lock: other scopes are taken from disk (freshest wins), and for this
+//!    cache's own scope the on-disk entries are unioned with the in-memory
+//!    map (memory wins per genome) — two processes hammering one scope
+//!    converge to the union of their work instead of last-writer-wins.
+//!
+//! Lock acquisition is bounded: rather than ever losing the search to a
+//! dead writer, a save that cannot get the lock within its patience
+//! proceeds unlocked (still atomic thanks to the unique temp + rename).
 
 use std::collections::{BTreeMap, HashMap};
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Mutex, MutexGuard};
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
@@ -51,9 +73,15 @@ pub(crate) fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
 struct Persist {
     path: PathBuf,
     scope: String,
-    /// Entry arrays of *other* scopes found in the snapshot, carried
-    /// through every save untouched.
-    others: BTreeMap<String, Json>,
+    /// Entry arrays of *other* scopes, refreshed from disk whenever an
+    /// external modification is detected and falling back to the
+    /// load-time copy when the disk read fails.
+    others: Mutex<BTreeMap<String, Json>>,
+    /// `(mtime, len)` of the snapshot as this cache last wrote it. While
+    /// the on-disk file still matches, saves skip the read-merge pass —
+    /// the single-writer hot path stays O(serialise), not
+    /// O(parse whole snapshot) per commit.
+    last_saved: Mutex<Option<(std::time::SystemTime, u64)>>,
 }
 
 /// Genome-keyed evaluation memo, optionally backed by a JSON snapshot.
@@ -99,7 +127,8 @@ impl EvalCache {
             persist: Some(Persist {
                 path: path.to_path_buf(),
                 scope: scope.to_string(),
-                others,
+                others: Mutex::new(others),
+                last_saved: Mutex::new(None),
             }),
         }
     }
@@ -127,10 +156,12 @@ impl EvalCache {
     /// attached. Persistence failures warn rather than fail: losing the
     /// snapshot must not lose the search.
     pub fn insert(&self, genome: Genome, evaluation: TrialEvaluation) {
-        let mut entries = lock_unpoisoned(&self.entries);
-        entries.insert(genome, evaluation);
+        lock_unpoisoned(&self.entries).insert(genome, evaluation);
+        // the save re-acquires the entries lock only for the brief
+        // fold-and-serialise step — file I/O and cross-process lock
+        // waits never block concurrent lookups/commits
         if let Some(persist) = &self.persist {
-            if let Err(e) = save_snapshot(persist, &entries) {
+            if let Err(e) = save_snapshot(persist, &self.entries) {
                 eprintln!(
                     "[eval-cache] warning: could not persist to {}: {e}",
                     persist.path.display()
@@ -161,49 +192,19 @@ impl EvalCache {
 }
 
 fn entry_to_json(genome: &Genome, e: &TrialEvaluation) -> Json {
-    let opt = |v: Option<f64>| v.map(Json::Num).unwrap_or(Json::Null);
-    Json::obj(vec![
-        ("genome", genome.to_json()),
-        ("accuracy", Json::Num(e.accuracy)),
-        ("bops", Json::Num(e.bops)),
-        ("est_avg_resources", opt(e.est_avg_resources)),
-        ("est_clock_cycles", opt(e.est_clock_cycles)),
-        ("objectives", Json::nums(e.objectives.iter().copied())),
-        ("train_seconds", Json::Num(e.train_seconds)),
-    ])
+    // the shared TrialEvaluation codec plus the genome key
+    let Json::Obj(mut obj) = e.to_json() else {
+        unreachable!("TrialEvaluation::to_json returns an object")
+    };
+    obj.insert("genome".to_string(), genome.to_json());
+    Json::Obj(obj)
 }
 
 fn entry_from_json(j: &Json, space: &SearchSpace) -> Result<(Genome, TrialEvaluation)> {
     let genome = Genome::from_json(j.get("genome").context("cache entry missing genome")?)?;
     anyhow::ensure!(space.contains(&genome), "cached genome outside the search space");
-    // required fields read `null` back as NaN (the writer serialises
-    // non-finite numbers as `null`); optional estimates keep `as_f64`,
-    // where `null` legitimately means "not estimated"
-    let f = |k: &str| -> Result<f64> {
-        j.get(k)
-            .and_then(Json::as_f64_or_nan)
-            .with_context(|| format!("cache entry missing `{k}`"))
-    };
-    let optf = |k: &str| j.get(k).and_then(Json::as_f64);
-    let objectives: Vec<f64> = j
-        .get("objectives")
-        .context("cache entry missing objectives")?
-        .items()
-        .iter()
-        .filter_map(Json::as_f64_or_nan)
-        .collect();
-    anyhow::ensure!(!objectives.is_empty(), "cache entry has an empty objective vector");
-    Ok((
-        genome,
-        TrialEvaluation {
-            accuracy: f("accuracy")?,
-            bops: f("bops")?,
-            est_avg_resources: optf("est_avg_resources"),
-            est_clock_cycles: optf("est_clock_cycles"),
-            objectives,
-            train_seconds: f("train_seconds")?,
-        },
-    ))
+    let evaluation = TrialEvaluation::from_json(j).context("cache entry")?;
+    Ok((genome, evaluation))
 }
 
 type Scoped = (HashMap<Genome, TrialEvaluation>, BTreeMap<String, Json>);
@@ -243,25 +244,156 @@ fn genome_key(g: &Genome) -> (usize, [usize; crate::nn::NUM_LAYERS], usize, bool
     )
 }
 
+/// Advisory cross-process save lock: a `create_new` sidecar file next to
+/// the snapshot. Held for one read-merge-write cycle; removed on drop;
+/// stolen when visibly stale (a crashed writer). Acquisition is bounded —
+/// a writer that cannot get the lock proceeds unlocked rather than ever
+/// stalling the search (the unique-temp + rename below keeps even that
+/// race tear-free; only union-merging needs the lock).
+struct SnapshotLock {
+    path: PathBuf,
+}
+
+impl SnapshotLock {
+    fn acquire(snapshot: &Path) -> Option<SnapshotLock> {
+        let path = snapshot.with_extension("lock");
+        // patience (~12 s) deliberately exceeds the 10 s stale-steal
+        // threshold: a crashed writer's lock is always stolen before a
+        // competitor gives up and falls back to an unlocked save, so
+        // only a genuinely wedged (alive but >12 s) writer can force the
+        // unserialised path
+        for _ in 0..2400 {
+            match std::fs::OpenOptions::new()
+                .write(true)
+                .create_new(true)
+                .open(&path)
+            {
+                Ok(_) => return Some(SnapshotLock { path }),
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                    let stale = std::fs::metadata(&path)
+                        .and_then(|m| m.modified())
+                        .ok()
+                        .and_then(|m| m.elapsed().ok())
+                        .is_some_and(|age| age > Duration::from_secs(10));
+                    if stale {
+                        // steal by *rename*, not remove: two stealers
+                        // racing can only retire the stale lock once — a
+                        // fresh lock created by the faster stealer can
+                        // never be deleted by the slower one
+                        let stolen = path.with_extension(format!(
+                            "lock.stale.{}.{}",
+                            std::process::id(),
+                            SAVE_SEQ.fetch_add(1, Ordering::Relaxed)
+                        ));
+                        if std::fs::rename(&path, &stolen).is_ok() {
+                            let _ = std::fs::remove_file(&stolen);
+                        }
+                    } else {
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                }
+                // e.g. a read-only directory: fall through to an
+                // unlocked (still atomic) save
+                Err(_) => return None,
+            }
+        }
+        None
+    }
+}
+
+impl Drop for SnapshotLock {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+/// Per-process temp-name sequence (two caches on one path in one process
+/// may save concurrently when the lock times out).
+static SAVE_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// `(mtime, len)` fingerprint for the skip-merge fast path.
+fn file_stat(path: &Path) -> Option<(std::time::SystemTime, u64)> {
+    let meta = std::fs::metadata(path).ok()?;
+    Some((meta.modified().ok()?, meta.len()))
+}
+
 fn save_snapshot(
     persist: &Persist,
-    entries: &HashMap<Genome, TrialEvaluation>,
+    entries_mutex: &Mutex<HashMap<Genome, TrialEvaluation>>,
 ) -> std::io::Result<()> {
-    let mut rows: Vec<(&Genome, &TrialEvaluation)> = entries.iter().collect();
-    rows.sort_by_key(|(g, _)| genome_key(g));
-    let mut map = persist.others.clone();
-    map.insert(
-        persist.scope.clone(),
-        Json::Arr(rows.into_iter().map(|(g, e)| entry_to_json(g, e)).collect()),
-    );
     if let Some(dir) = persist.path.parent() {
         if !dir.as_os_str().is_empty() {
             std::fs::create_dir_all(dir)?;
         }
     }
-    let tmp = persist.path.with_extension("tmp");
+    let _lock = SnapshotLock::acquire(&persist.path);
+
+    // Merge with the freshest on-disk state when (and only when) someone
+    // else has written the snapshot since our last save: other scopes
+    // refresh from disk, and disk-only genomes of our own scope fold into
+    // the in-memory map (memory wins per genome) — two processes
+    // hammering one scope converge to the union of their work. The
+    // single-writer hot path skips all of this: the file still carries
+    // our own last write, so there is nothing to learn from re-parsing
+    // it on every commit. File reading and parsing happen *before* the
+    // entries lock is taken, so concurrent evaluation threads are never
+    // blocked on disk.
+    let stat = file_stat(&persist.path);
+    let externally_modified = stat.is_some() && stat != *lock_unpoisoned(&persist.last_saved);
+    let mut disk_own: Vec<(Genome, TrialEvaluation)> = Vec::new();
+    if externally_modified {
+        let mut others = lock_unpoisoned(&persist.others);
+        if let Ok(text) = std::fs::read_to_string(&persist.path) {
+            if let Ok(Json::Obj(map)) = Json::parse(&text).map_err(|e| e.to_string()) {
+                for (key, value) in map {
+                    if key == persist.scope {
+                        for item in value.items() {
+                            let genome = item.get("genome").map(Genome::from_json);
+                            if let (Some(Ok(genome)), Ok(evaluation)) =
+                                (genome, TrialEvaluation::from_json(item))
+                            {
+                                disk_own.push((genome, evaluation));
+                            }
+                        }
+                    } else {
+                        others.insert(key, value);
+                    }
+                }
+            }
+        }
+    }
+
+    // brief critical section: fold the disk-only genomes in (memory wins)
+    // and serialise a point-in-time view; deterministic row order
+    // regardless of hash-map iteration or which process merged last
+    let own_rows = {
+        let mut entries = lock_unpoisoned(entries_mutex);
+        for (genome, evaluation) in disk_own {
+            entries.entry(genome).or_insert(evaluation);
+        }
+        let mut rows: Vec<(&Genome, &TrialEvaluation)> = entries.iter().collect();
+        rows.sort_by_key(|(g, _)| genome_key(g));
+        Json::Arr(rows.into_iter().map(|(g, e)| entry_to_json(g, e)).collect())
+    };
+    let mut map = lock_unpoisoned(&persist.others).clone();
+    map.insert(persist.scope.clone(), own_rows);
+
+    // uniquely named temp + atomic rename: no reader or concurrent
+    // writer can ever observe (or clobber) a half-written snapshot
+    let tmp = persist.path.with_extension(format!(
+        "tmp.{}.{}",
+        std::process::id(),
+        SAVE_SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
     std::fs::write(&tmp, Json::Obj(map).to_string())?;
-    std::fs::rename(&tmp, &persist.path)
+    // fingerprint the temp file, not the destination: rename preserves
+    // the inode, so this is exactly what the destination will carry —
+    // and a concurrent writer renaming over us right after cannot be
+    // mistaken for our own write on the next save
+    let written = file_stat(&tmp);
+    std::fs::rename(&tmp, &persist.path)?;
+    *lock_unpoisoned(&persist.last_saved) = written;
+    Ok(())
 }
 
 #[cfg(test)]
@@ -412,5 +544,133 @@ mod tests {
         let cache = EvalCache::in_memory();
         assert!(cache.path().is_none());
         assert_eq!(cache.restored(), 0);
+    }
+
+    /// Two caches on one path in one process (≈ the pipeline's stages, or
+    /// a driver plus a second run): committing through both must lose
+    /// neither scope's entries and never leave a torn file.
+    #[test]
+    fn two_caches_interleaving_commits_converge_to_the_union() {
+        let space = SearchSpace::table1();
+        let path = tmp_path("interleaved.json");
+        let _ = std::fs::remove_file(&path);
+        let a = EvalCache::load(&path, &space, "ia");
+        let b = EvalCache::load(&path, &space, "ib");
+        let mut rng = Rng::new(50);
+        let mut genomes = Vec::new();
+        while genomes.len() < 8 {
+            let g = space.sample(&mut rng);
+            if !genomes.contains(&g) {
+                genomes.push(g);
+            }
+        }
+        for (i, g) in genomes.iter().enumerate() {
+            let cache = if i % 2 == 0 { &a } else { &b };
+            cache.insert(g.clone(), evaluation(0.5 + i as f64 * 0.01, None, None));
+        }
+        let ra = EvalCache::load(&path, &space, "ia");
+        let rb = EvalCache::load(&path, &space, "ib");
+        assert_eq!(ra.restored(), 4, "scope ia kept all its entries");
+        assert_eq!(rb.restored(), 4, "scope ib kept all its entries");
+    }
+
+    const HAMMER_PATH_ENV: &str = "SNAC_CACHE_HAMMER_PATH";
+    const HAMMER_SCOPE_ENV: &str = "SNAC_CACHE_HAMMER_SCOPE";
+    const HAMMER_SEED_ENV: &str = "SNAC_CACHE_HAMMER_SEED";
+    const HAMMER_ENTRIES: usize = 12;
+
+    /// Child half of the multi-process hammer below: a no-op under a
+    /// normal `cargo test` run; when the env vars are set it writes
+    /// `HAMMER_ENTRIES` distinct genomes through a persistent cache as
+    /// fast as it can.
+    #[test]
+    fn cache_hammer_child_process() {
+        let (Ok(path), Ok(scope), Ok(seed)) = (
+            std::env::var(HAMMER_PATH_ENV),
+            std::env::var(HAMMER_SCOPE_ENV),
+            std::env::var(HAMMER_SEED_ENV),
+        ) else {
+            return;
+        };
+        let space = SearchSpace::table1();
+        let cache = EvalCache::load(Path::new(&path), &space, &scope);
+        let mut rng = Rng::new(seed.parse().unwrap());
+        let mut genomes: Vec<Genome> = Vec::new();
+        while genomes.len() < HAMMER_ENTRIES {
+            let g = space.sample(&mut rng);
+            if !genomes.contains(&g) {
+                genomes.push(g);
+            }
+        }
+        for (i, g) in genomes.into_iter().enumerate() {
+            cache.insert(g, evaluation(0.4 + i as f64 * 0.001, None, None));
+        }
+    }
+
+    /// Regression for the sharded-run concurrency hazard: two *processes*
+    /// writing through to the same snapshot path must never tear it (a
+    /// reader sees either the previous or the next complete snapshot,
+    /// never a partial write) and must not clobber each other's scopes —
+    /// the file converges to the union of both processes' work.
+    #[test]
+    fn concurrent_processes_do_not_tear_the_snapshot() {
+        let space = SearchSpace::table1();
+        let path = tmp_path("hammer.json");
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_file(path.with_extension("lock"));
+
+        let exe = std::env::current_exe().unwrap();
+        let spawn = |scope: &str, seed: u64| {
+            std::process::Command::new(&exe)
+                .args([
+                    "eval::cache::tests::cache_hammer_child_process",
+                    "--exact",
+                    "--test-threads",
+                    "1",
+                ])
+                .env(HAMMER_PATH_ENV, &path)
+                .env(HAMMER_SCOPE_ENV, scope)
+                .env(HAMMER_SEED_ENV, seed.to_string())
+                .stdout(std::process::Stdio::null())
+                .stderr(std::process::Stdio::null())
+                .spawn()
+                .expect("spawn hammer child")
+        };
+        let mut children = vec![spawn("hammer-a", 101), spawn("hammer-b", 202)];
+
+        // while the children hammer, every observable file state must be a
+        // complete, parseable snapshot (this is the tear check)
+        let mut observed = 0usize;
+        loop {
+            let done = children.iter_mut().all(|c| {
+                matches!(c.try_wait(), Ok(Some(status)) if {
+                    assert!(status.success(), "hammer child failed");
+                    true
+                })
+            });
+            if let Ok(text) = std::fs::read_to_string(&path) {
+                if !text.is_empty() {
+                    Json::parse(&text).unwrap_or_else(|e| {
+                        panic!("torn snapshot observed mid-hammer: {e}\n{text}")
+                    });
+                    observed += 1;
+                }
+            }
+            if done {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        assert!(observed > 0, "the hammer ran long enough to observe the file");
+
+        // union check: both processes' scopes kept every entry
+        for scope in ["hammer-a", "hammer-b"] {
+            let reloaded = EvalCache::load(&path, &space, scope);
+            assert_eq!(
+                reloaded.restored(),
+                HAMMER_ENTRIES,
+                "scope {scope} lost entries to the concurrent writer"
+            );
+        }
     }
 }

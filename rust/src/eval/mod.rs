@@ -19,8 +19,17 @@
 //!   across generations is trained once and recorded per-trial.
 //! * [`EvalCache`] — that memoisation table as a first-class persistent
 //!   subsystem: JSON snapshot/restore keyed by protocol scope
-//!   (`--cache-path`), write-through on every commit, so repeated runs
-//!   share prior training work instead of retraining identical genomes.
+//!   (`--cache-path`), write-through on every commit — safe across
+//!   processes, not just threads — so repeated runs share prior training
+//!   work instead of retraining identical genomes.
+//! * [`ShardDriver`] / [`run_worker`] — the multi-process seam
+//!   (`eval/shard.rs`): a driver partitions each generation into a
+//!   file-based work queue under a shared `--run-dir`, `snac-pack
+//!   worker` processes claim shards by atomic rename (lease +
+//!   heartbeat, reclaimed on worker death), and the driver merges the
+//!   per-shard results back under the same determinism contract.
+//!   [`EvalPool`] abstracts over both dispatch backends so the search
+//!   loop cannot tell them apart.
 //!
 //! # Determinism
 //!
@@ -52,15 +61,20 @@
 
 mod cache;
 mod parallel;
+mod shard;
 mod supernet;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::nn::Genome;
-use crate::util::Rng;
+use crate::util::{Json, Rng};
 
 pub use cache::EvalCache;
 pub use parallel::{parallel_map, resolve_workers, EvaluatedTrial, ParallelEvaluator};
+pub use shard::{
+    manifest_fingerprint, run_worker, RunDir, ShardDriver, ShardError, ShardTimings, StageSpec,
+    WorkerOptions, WorkerSummary,
+};
 pub use supernet::SupernetEvaluator;
 
 /// Everything a single trial evaluation produces.
@@ -81,6 +95,53 @@ pub struct TrialEvaluation {
     pub train_seconds: f64,
 }
 
+impl TrialEvaluation {
+    /// Serialise to JSON — the shared codec behind the persistent
+    /// [`EvalCache`] snapshot and the shard-protocol result files, so
+    /// both round-trip numbers identically (non-finite values follow the
+    /// `util::Json` `null` convention).
+    pub fn to_json(&self) -> Json {
+        let opt = |v: Option<f64>| v.map(Json::Num).unwrap_or(Json::Null);
+        Json::obj(vec![
+            ("accuracy", Json::Num(self.accuracy)),
+            ("bops", Json::Num(self.bops)),
+            ("est_avg_resources", opt(self.est_avg_resources)),
+            ("est_clock_cycles", opt(self.est_clock_cycles)),
+            ("objectives", Json::nums(self.objectives.iter().copied())),
+            ("train_seconds", Json::Num(self.train_seconds)),
+        ])
+    }
+
+    /// Parse back from JSON. Required fields read `null` back as NaN (the
+    /// writer serialises non-finite numbers as `null`); the optional
+    /// estimates keep `as_f64`, where `null` legitimately means "not
+    /// estimated".
+    pub fn from_json(j: &Json) -> Result<TrialEvaluation> {
+        let f = |k: &str| -> Result<f64> {
+            j.get(k)
+                .and_then(Json::as_f64_or_nan)
+                .with_context(|| format!("evaluation missing `{k}`"))
+        };
+        let optf = |k: &str| j.get(k).and_then(Json::as_f64);
+        let objectives: Vec<f64> = j
+            .get("objectives")
+            .context("evaluation missing objectives")?
+            .items()
+            .iter()
+            .filter_map(Json::as_f64_or_nan)
+            .collect();
+        anyhow::ensure!(!objectives.is_empty(), "evaluation has an empty objective vector");
+        Ok(TrialEvaluation {
+            accuracy: f("accuracy")?,
+            bops: f("bops")?,
+            est_avg_resources: optf("est_avg_resources"),
+            est_clock_cycles: optf("est_clock_cycles"),
+            objectives,
+            train_seconds: f("train_seconds")?,
+        })
+    }
+}
+
 /// One candidate scheduled for evaluation.
 ///
 /// The RNG must already be forked from the master stream, keyed on
@@ -96,10 +157,64 @@ pub struct EvalRequest {
     pub rng: Rng,
 }
 
+impl EvalRequest {
+    /// Serialise for a shard task file: the exact RNG state travels with
+    /// the request so a worker process replays the identical stream.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("trial_id", Json::Num(self.trial_id as f64)),
+            ("genome", self.genome.to_json()),
+            ("rng", self.rng.to_json()),
+        ])
+    }
+
+    /// Parse back from a shard task file.
+    pub fn from_json(j: &Json) -> Result<EvalRequest> {
+        Ok(EvalRequest {
+            trial_id: j
+                .get("trial_id")
+                .and_then(Json::as_usize)
+                .context("request missing trial_id")?,
+            genome: Genome::from_json(j.get("genome").context("request missing genome")?)?,
+            rng: Rng::from_json(j.get("rng").context("request missing rng")?)?,
+        })
+    }
+}
+
 /// Scores one genome. Implementations must be cheap to share across
 /// threads (`Sync`); all per-trial mutable state belongs inside
 /// `evaluate`.
 pub trait TrialEvaluator: Sync {
     /// Evaluate one candidate with its pre-forked trial RNG.
     fn evaluate(&self, genome: &Genome, rng: &mut Rng) -> Result<TrialEvaluation>;
+}
+
+/// A driver-side evaluation pool: something that can score a whole
+/// generation of [`EvalRequest`]s and stream the per-trial results back
+/// **in trial order** under the subsystem's determinism contract.
+///
+/// Two implementations exist: [`ParallelEvaluator`] (scoped threads in
+/// this process) and [`ShardDriver`] (a file-based work queue served by
+/// `snac-pack worker` processes). `coordinator::global_search_with` is
+/// generic over this trait, so the NSGA-II loop is identical whichever
+/// dispatch backend scores its candidates.
+pub trait EvalPool {
+    /// Evaluate a batch, emitting each finished trial to `on_trial` in
+    /// trial-id order (the [`ParallelEvaluator::evaluate_stream`]
+    /// contract: successes commit even when a sibling fails, and the
+    /// first failed dispatch's error propagates after the batch drains).
+    fn evaluate_stream_dyn(
+        &self,
+        requests: Vec<EvalRequest>,
+        on_trial: &mut dyn FnMut(EvaluatedTrial),
+    ) -> Result<()>;
+
+    /// Total successful inner evaluations committed so far.
+    fn evaluations(&self) -> usize;
+
+    /// Total trials served from the cache so far.
+    fn cache_hits(&self) -> usize;
+
+    /// The evaluation cache backing this pool.
+    fn cache(&self) -> &EvalCache;
 }

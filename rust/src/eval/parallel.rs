@@ -19,7 +19,7 @@ use crate::nn::Genome;
 use crate::util::Rng;
 
 use super::cache::{lock_unpoisoned, EvalCache};
-use super::{EvalRequest, TrialEvaluation, TrialEvaluator};
+use super::{EvalPool, EvalRequest, TrialEvaluation, TrialEvaluator};
 
 /// Resolve a requested worker count: `0` means "use all available
 /// parallelism" (the CLI default).
@@ -262,9 +262,6 @@ impl<E: TrialEvaluator> ParallelEvaluator<E> {
         self.evaluations.fetch_add(1, Ordering::Relaxed);
     }
 
-    /// Emit every not-yet-emitted trial whose genome has an evaluation,
-    /// in trial order, stopping at the first still-pending (or failed)
-    /// genome.
     fn drain_ready<F>(
         &self,
         requests: &[EvalRequest],
@@ -274,23 +271,62 @@ impl<E: TrialEvaluator> ParallelEvaluator<E> {
     ) where
         F: FnMut(EvaluatedTrial),
     {
-        while *next < requests.len() {
-            let req = &requests[*next];
-            let Some(evaluation) = self.cache.lookup(&req.genome) else {
-                break;
-            };
-            let cached = !fresh.remove(&req.genome);
-            if cached {
-                self.hits.fetch_add(1, Ordering::Relaxed);
-            }
-            on_trial(EvaluatedTrial {
-                trial_id: req.trial_id,
-                genome: req.genome.clone(),
-                evaluation,
-                cached,
-            });
-            *next += 1;
+        drain_ready(&self.cache, &self.hits, requests, fresh, next, on_trial);
+    }
+}
+
+/// Emit every not-yet-emitted trial whose genome has an evaluation in
+/// `cache`, in trial order, stopping at the first still-pending (or
+/// failed) genome. Shared between [`ParallelEvaluator`] and the shard
+/// driver, so both dispatch backends observe the identical emission
+/// contract (a trial counts as a hit in `hits` unless its genome is
+/// removed from `fresh` — i.e. it was evaluated fresh in this batch).
+pub(crate) fn drain_ready(
+    cache: &EvalCache,
+    hits: &AtomicUsize,
+    requests: &[EvalRequest],
+    fresh: &mut HashSet<Genome>,
+    next: &mut usize,
+    on_trial: &mut impl FnMut(EvaluatedTrial),
+) {
+    while *next < requests.len() {
+        let req = &requests[*next];
+        let Some(evaluation) = cache.lookup(&req.genome) else {
+            break;
+        };
+        let cached = !fresh.remove(&req.genome);
+        if cached {
+            hits.fetch_add(1, Ordering::Relaxed);
         }
+        on_trial(EvaluatedTrial {
+            trial_id: req.trial_id,
+            genome: req.genome.clone(),
+            evaluation,
+            cached,
+        });
+        *next += 1;
+    }
+}
+
+impl<E: TrialEvaluator> EvalPool for ParallelEvaluator<E> {
+    fn evaluate_stream_dyn(
+        &self,
+        requests: Vec<EvalRequest>,
+        on_trial: &mut dyn FnMut(EvaluatedTrial),
+    ) -> Result<()> {
+        self.evaluate_stream(requests, |trial| on_trial(trial))
+    }
+
+    fn evaluations(&self) -> usize {
+        ParallelEvaluator::evaluations(self)
+    }
+
+    fn cache_hits(&self) -> usize {
+        ParallelEvaluator::cache_hits(self)
+    }
+
+    fn cache(&self) -> &EvalCache {
+        ParallelEvaluator::cache(self)
     }
 }
 

@@ -1,0 +1,1572 @@
+//! Multi-process generation sharding: a file-based work queue over a
+//! shared run directory.
+//!
+//! The search loop's throughput ceiling is trial evaluation, and one
+//! process only holds so many cores. This module scales the
+//! [`super::ParallelEvaluator`] batch seam past a single process: a
+//! **driver** ([`ShardDriver`]) partitions each generation's
+//! `Vec<EvalRequest>` into shard task files under a shared run directory,
+//! N `snac-pack worker` processes ([`run_worker`]) pull shards, evaluate
+//! them with their local thread pools, and publish per-shard result files
+//! that the driver merges back — in dispatch order — into the shared
+//! [`EvalCache`] and the caller's trial-ordered stream.
+//!
+//! # Run-directory layout
+//!
+//! ```text
+//! run-dir/
+//!   run.json    # written by the CLI driver: preset + artifact dir +
+//!               # timing knobs, everything a worker needs to rebuild
+//!               # the evaluator stack (see main.rs)
+//!   queue/      # pending shard task files (complete JSON; published
+//!               # via tmp/ + atomic rename)
+//!   claims/     # claimed shards (claim = rename queue/X -> claims/X;
+//!               # exactly one winner) + X.hb heartbeat sidecars
+//!   results/    # per-shard result files (tmp/ + atomic rename)
+//!   tmp/        # staging for atomic publishes
+//!   shutdown    # sentinel: workers exit when they see it
+//! ```
+//!
+//! # Lease protocol
+//!
+//! A worker *claims* a shard by renaming it from `queue/` into `claims/`
+//! — rename is atomic within a filesystem, so exactly one claimant wins
+//! and the task file travels with the claim (a reclaim needs no other
+//! state). Immediately after claiming, and then every
+//! [`WorkerOptions::heartbeat`], the worker rewrites `claims/X.hb`; the
+//! driver treats a claim whose heartbeat is older than
+//! [`ShardTimings::lease_timeout`] (or that never produced one within a
+//! lease of being first observed) as dead and *reclaims* it by renaming
+//! the claim back into `queue/`, where the next live worker picks it up.
+//! A zombie worker that later publishes its result anyway is harmless:
+//! results are deterministic, publishes are atomic renames, and the
+//! driver consumes exactly one result per shard.
+//!
+//! # Determinism
+//!
+//! The merged outcome is bit-identical to a single-process
+//! [`super::ParallelEvaluator`] run for any shard/worker count, because
+//! every decision that affects numbers is made driver-side before
+//! dispatch, exactly as the in-process pool makes it:
+//!
+//! 1. per-trial RNGs are forked in trial-id order *before* partitioning
+//!    and travel inside the shard files (exact state, hex-encoded);
+//! 2. duplicate genomes are collapsed to their first dispatch index
+//!    *before* sharding, so a duplicate never trains twice across shards;
+//! 3. shards are contiguous chunks of the collapsed dispatch list, so
+//!    "first failed dispatch" is shard-count-invariant;
+//! 4. emission routes through the same trial-ordered drain as the
+//!    in-process pool ([`super::parallel::drain_ready`]): the caller (and
+//!    its non-`Send` progress sinks) observes the identical stream.
+//!
+//! Only wall-clock timings differ. This single-machine/multi-process
+//! protocol is the seam later multi-machine scale-out builds on: nothing
+//! in it assumes a shared process, only a shared filesystem.
+
+use std::collections::HashSet;
+use std::fmt;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
+
+use anyhow::{Context, Result};
+
+use crate::nn::Genome;
+use crate::objectives::ObjectiveKind;
+use crate::util::Json;
+
+use super::parallel::drain_ready;
+use super::{EvalCache, EvalPool, EvalRequest, EvaluatedTrial, TrialEvaluation};
+
+/// What a worker must reproduce to evaluate a shard: the training
+/// protocol slice that varies per pipeline stage. Everything else
+/// (dataset, search space, device, precision) comes from the run
+/// manifest's preset and is stage-invariant.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageSpec {
+    /// Objective set to price trials with (workers train their own
+    /// surrogate — deterministically, from the preset seed — when the
+    /// set needs one).
+    pub objectives: Vec<ObjectiveKind>,
+    /// Training epochs per trial.
+    pub epochs: usize,
+}
+
+impl StageSpec {
+    /// Serialise for a shard task file.
+    pub fn to_json(&self) -> Json {
+        let names: Vec<&str> = self.objectives.iter().map(|o| o.name()).collect();
+        Json::obj(vec![
+            ("objectives", Json::Str(names.join(","))),
+            ("epochs", Json::Num(self.epochs as f64)),
+        ])
+    }
+
+    /// Parse back from a shard task file.
+    pub fn from_json(j: &Json) -> Result<StageSpec> {
+        Ok(StageSpec {
+            objectives: ObjectiveKind::parse_set(
+                j.get("objectives")
+                    .and_then(Json::as_str)
+                    .context("stage missing objectives")?,
+            )?,
+            epochs: j
+                .get("epochs")
+                .and_then(Json::as_usize)
+                .context("stage missing epochs")?,
+        })
+    }
+}
+
+/// Driver-side timing knobs for the lease protocol.
+#[derive(Debug, Clone)]
+pub struct ShardTimings {
+    /// A claim whose heartbeat is older than this is reclaimed.
+    pub lease_timeout: Duration,
+    /// Driver poll cadence while waiting on shard results.
+    pub poll: Duration,
+    /// No result, no live claim, and no fresh heartbeat for this long →
+    /// the batch fails with [`ShardError::Stalled`] instead of hanging a
+    /// search forever on a run directory nobody serves.
+    pub stall_timeout: Duration,
+}
+
+impl Default for ShardTimings {
+    fn default() -> Self {
+        ShardTimings {
+            lease_timeout: Duration::from_secs(30),
+            poll: Duration::from_millis(25),
+            stall_timeout: Duration::from_secs(600),
+        }
+    }
+}
+
+/// Typed shard-protocol failures (carried inside `anyhow::Error`;
+/// downcast to branch on them).
+#[derive(Debug)]
+pub enum ShardError {
+    /// A per-shard result file existed but could not be parsed or did not
+    /// match the shard's request list. Sibling shards' results are still
+    /// committed to the cache before this propagates.
+    CorruptResult {
+        /// The shard file name (e.g. `search-nac-b0003-s01.json`).
+        shard: String,
+        /// Why it was rejected.
+        detail: String,
+    },
+    /// A worker picked the shard up but could not evaluate it at all
+    /// (e.g. the task file was unreadable on its side).
+    WorkerFailed {
+        /// The shard file name.
+        shard: String,
+        /// The worker-reported failure.
+        detail: String,
+    },
+    /// No worker served the queue for the whole stall timeout.
+    Stalled {
+        /// The run directory nobody is serving.
+        run_dir: PathBuf,
+        /// How long the driver waited.
+        waited: Duration,
+    },
+}
+
+impl fmt::Display for ShardError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ShardError::CorruptResult { shard, detail } => {
+                write!(f, "corrupt result file for shard `{shard}`: {detail}")
+            }
+            ShardError::WorkerFailed { shard, detail } => {
+                write!(f, "worker failed on shard `{shard}`: {detail}")
+            }
+            ShardError::Stalled { run_dir, waited } => write!(
+                f,
+                "no worker served {} for {:.0?} — start one with `snac-pack worker --run-dir {}`",
+                run_dir.display(),
+                waited,
+                run_dir.display()
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ShardError {}
+
+/// The shared run directory: path helpers + the shutdown sentinel.
+#[derive(Debug, Clone)]
+pub struct RunDir {
+    root: PathBuf,
+}
+
+impl RunDir {
+    /// Wrap a root path (no I/O; see [`RunDir::ensure`]).
+    pub fn new(root: impl Into<PathBuf>) -> RunDir {
+        RunDir { root: root.into() }
+    }
+
+    /// Create the protocol subdirectories (idempotent; both driver and
+    /// workers call this so startup order does not matter).
+    pub fn ensure(&self) -> Result<()> {
+        for dir in [self.queue(), self.claims(), self.results(), self.tmp()] {
+            std::fs::create_dir_all(&dir)
+                .with_context(|| format!("creating {}", dir.display()))?;
+        }
+        Ok(())
+    }
+
+    /// The run-dir root.
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Pending shard task files.
+    pub fn queue(&self) -> PathBuf {
+        self.root.join("queue")
+    }
+
+    /// Claimed shards + heartbeat sidecars.
+    pub fn claims(&self) -> PathBuf {
+        self.root.join("claims")
+    }
+
+    /// Completed per-shard result files.
+    pub fn results(&self) -> PathBuf {
+        self.root.join("results")
+    }
+
+    /// Staging area for atomic publishes.
+    pub fn tmp(&self) -> PathBuf {
+        self.root.join("tmp")
+    }
+
+    /// The run manifest the CLI driver writes for its workers.
+    pub fn manifest_path(&self) -> PathBuf {
+        self.root.join("run.json")
+    }
+
+    fn shutdown_path(&self) -> PathBuf {
+        self.root.join("shutdown")
+    }
+
+    /// Tell every worker on this run directory to exit.
+    pub fn request_shutdown(&self) -> Result<()> {
+        std::fs::write(self.shutdown_path(), b"shutdown\n")
+            .with_context(|| format!("writing {}", self.shutdown_path().display()))
+    }
+
+    /// Has a shutdown been requested?
+    pub fn is_shutdown(&self) -> bool {
+        self.shutdown_path().exists()
+    }
+
+    /// Remove a stale shutdown sentinel (a fresh driver reusing the run
+    /// directory of a finished run must not stop its new workers).
+    pub fn clear_shutdown(&self) {
+        let _ = std::fs::remove_file(self.shutdown_path());
+    }
+
+    /// Write `text` to `dest` atomically (staged in `tmp/`, renamed into
+    /// place), so queue/result consumers never observe a partial file.
+    /// Overwrites an existing `dest`.
+    pub fn publish(&self, dest: &Path, text: &str) -> Result<()> {
+        let tmp = self.stage(dest, text)?;
+        std::fs::rename(&tmp, dest)
+            .with_context(|| format!("publishing {}", dest.display()))
+    }
+
+    /// Atomic **first-writer-wins** publish: links the staged file into
+    /// place and reports `false` (without touching `dest`) when another
+    /// publisher already won — there is no exists-then-rename window in
+    /// which a late writer could clobber a consumed result.
+    pub fn publish_new(&self, dest: &Path, text: &str) -> Result<bool> {
+        let tmp = self.stage(dest, text)?;
+        let outcome = match std::fs::hard_link(&tmp, dest) {
+            Ok(()) => Ok(true),
+            Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => Ok(false),
+            Err(e) => {
+                Err(anyhow::Error::new(e).context(format!("publishing {}", dest.display())))
+            }
+        };
+        let _ = std::fs::remove_file(&tmp);
+        outcome
+    }
+
+    fn stage(&self, dest: &Path, text: &str) -> Result<PathBuf> {
+        let base = dest
+            .file_name()
+            .map(|n| n.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "file".to_string());
+        let tmp = self
+            .tmp()
+            .join(format!("{base}.{}.tmp", std::process::id()));
+        std::fs::write(&tmp, text).with_context(|| format!("writing {}", tmp.display()))?;
+        Ok(tmp)
+    }
+}
+
+/// Cheap content fingerprint (FNV-1a) of a run manifest. The driver
+/// stamps its expectation from `run.json`; workers echo the fingerprint
+/// of the manifest they actually loaded in every result file — so a
+/// worker that booted from a stale `run.json` (reused run directory,
+/// races around driver startup) fails the batch *loudly* as a corrupt
+/// result instead of silently committing numbers computed under the
+/// wrong configuration.
+pub fn manifest_fingerprint(text: &str) -> String {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in text.as_bytes() {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    format!("{h:016x}")
+}
+
+/// Age of a file's mtime. `None` strictly means the file is missing (or
+/// unstattable); an mtime in the future — clock skew, NTP steps — reads
+/// as age zero, so a live worker's lease can never look stale because of
+/// a clock adjustment.
+fn mtime_age(path: &Path) -> Option<Duration> {
+    let modified = std::fs::metadata(path).ok()?.modified().ok()?;
+    Some(modified.elapsed().unwrap_or(Duration::ZERO))
+}
+
+// ---------------------------------------------------------------------------
+// shard task / result codecs
+// ---------------------------------------------------------------------------
+
+struct ShardTask {
+    shard: String,
+    stage: StageSpec,
+    requests: Vec<EvalRequest>,
+}
+
+impl ShardTask {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("shard", Json::Str(self.shard.clone())),
+            ("stage", self.stage.to_json()),
+            (
+                "requests",
+                Json::Arr(self.requests.iter().map(EvalRequest::to_json).collect()),
+            ),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<ShardTask> {
+        Ok(ShardTask {
+            shard: j
+                .get("shard")
+                .and_then(Json::as_str)
+                .context("task missing shard name")?
+                .to_string(),
+            stage: StageSpec::from_json(j.get("stage").context("task missing stage")?)?,
+            requests: j
+                .get("requests")
+                .context("task missing requests")?
+                .items()
+                .iter()
+                .map(EvalRequest::from_json)
+                .collect::<Result<_>>()?,
+        })
+    }
+}
+
+fn with_manifest(mut doc: Json, manifest: Option<&str>) -> Json {
+    if let (Json::Obj(map), Some(fp)) = (&mut doc, manifest) {
+        map.insert("manifest".to_string(), Json::Str(fp.to_string()));
+    }
+    doc
+}
+
+fn result_to_json(
+    shard: &str,
+    rows: &[(usize, Result<TrialEvaluation, String>)],
+    manifest: Option<&str>,
+) -> Json {
+    let rows = rows
+        .iter()
+        .map(|(trial_id, outcome)| match outcome {
+            Ok(evaluation) => Json::obj(vec![
+                ("trial_id", Json::Num(*trial_id as f64)),
+                ("evaluation", evaluation.to_json()),
+            ]),
+            Err(msg) => Json::obj(vec![
+                ("trial_id", Json::Num(*trial_id as f64)),
+                ("error", Json::Str(msg.clone())),
+            ]),
+        })
+        .collect();
+    with_manifest(
+        Json::obj(vec![
+            ("shard", Json::Str(shard.to_string())),
+            ("results", Json::Arr(rows)),
+        ]),
+        manifest,
+    )
+}
+
+fn worker_failure_to_json(shard: &str, detail: &str, manifest: Option<&str>) -> Json {
+    with_manifest(
+        Json::obj(vec![
+            ("shard", Json::Str(shard.to_string())),
+            ("failed", Json::Str(detail.to_string())),
+        ]),
+        manifest,
+    )
+}
+
+/// One parsed result row per request: the evaluation, or the worker's
+/// per-trial error message.
+type ShardRows = Vec<Result<TrialEvaluation, String>>;
+
+/// Parsed result rows, positionally aligned with the shard's requests.
+/// Inner `Err(detail)` = worker-level failure; outer `anyhow` error =
+/// corrupt file (including a manifest-fingerprint mismatch: the worker
+/// evaluated under a different run configuration).
+fn parse_result_file(
+    text: &str,
+    expected: &[EvalRequest],
+    expected_manifest: Option<&str>,
+) -> Result<Result<ShardRows, String>> {
+    let doc = Json::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+    if let Some(expect) = expected_manifest {
+        let got = doc.get("manifest").and_then(Json::as_str);
+        anyhow::ensure!(
+            got == Some(expect),
+            "result produced under a different run manifest (fingerprint {:?}, driver has \
+             {expect:?}) — a worker loaded a stale run.json",
+            got
+        );
+    }
+    if let Some(detail) = doc.get("failed").and_then(Json::as_str) {
+        return Ok(Err(detail.to_string()));
+    }
+    let rows = doc.get("results").context("result file missing `results`")?.items();
+    anyhow::ensure!(
+        rows.len() == expected.len(),
+        "result holds {} rows, shard has {} requests",
+        rows.len(),
+        expected.len()
+    );
+    let mut out = Vec::with_capacity(rows.len());
+    for (row, req) in rows.iter().zip(expected) {
+        let trial_id = row
+            .get("trial_id")
+            .and_then(Json::as_usize)
+            .context("result row missing trial_id")?;
+        anyhow::ensure!(
+            trial_id == req.trial_id,
+            "result row for trial {trial_id} does not match request trial {}",
+            req.trial_id
+        );
+        if let Some(msg) = row.get("error").and_then(Json::as_str) {
+            out.push(Err(msg.to_string()));
+        } else {
+            out.push(Ok(TrialEvaluation::from_json(
+                row.get("evaluation").context("result row missing evaluation")?,
+            )?));
+        }
+    }
+    Ok(Ok(out))
+}
+
+// ---------------------------------------------------------------------------
+// driver
+// ---------------------------------------------------------------------------
+
+/// Driver-side state for one in-flight shard.
+struct ShardState {
+    name: String,
+    /// Dispatch index of this shard's first request (shards are
+    /// contiguous chunks of the collapsed dispatch list).
+    base: usize,
+    requests: Vec<EvalRequest>,
+    resolved: bool,
+    /// When the driver first observed the current claim with no heartbeat
+    /// file — on initial claim *or* after a transient sidecar deletion —
+    /// the claimant gets one full lease of grace from this instant before
+    /// being declared dead.
+    no_hb_since: Option<Instant>,
+}
+
+/// The driver side of the shard protocol: an [`EvalPool`] whose batches
+/// are evaluated by `snac-pack worker` processes over a shared run
+/// directory, merged back into the shared [`EvalCache`] under the same
+/// determinism contract as the in-process pool.
+pub struct ShardDriver {
+    dir: RunDir,
+    label: String,
+    /// Per-driver-instance uniquifier baked into every shard file name
+    /// (pid + wall-clock millis): a reused run directory can never serve
+    /// a previous run's leftover result files as this run's — old names
+    /// simply never match (file names carry no determinism; results are
+    /// matched to requests positionally).
+    run_tag: String,
+    /// Fingerprint of `run.json` as it stood when this driver started
+    /// (`None` when the run directory has no manifest, e.g. in-process
+    /// protocol tests). Every result file must echo it.
+    manifest: Option<String>,
+    stage: StageSpec,
+    shards: usize,
+    cache: EvalCache,
+    timings: ShardTimings,
+    batch: AtomicUsize,
+    evaluations: AtomicUsize,
+    hits: AtomicUsize,
+    reclaims: AtomicUsize,
+}
+
+impl ShardDriver {
+    /// New driver over `run_dir`. `label` namespaces this driver's shard
+    /// files (the pipeline runs several drivers over one run directory —
+    /// `baseline`, `search-nac`, `search-snac` — strictly in sequence).
+    /// `shards` is the per-generation partition count (clamped to the
+    /// batch size at dispatch; `0` behaves as `1`).
+    pub fn new(
+        run_dir: &Path,
+        label: &str,
+        stage: StageSpec,
+        shards: usize,
+        cache: EvalCache,
+        timings: ShardTimings,
+    ) -> Result<ShardDriver> {
+        let dir = RunDir::new(run_dir);
+        dir.ensure()?;
+        let millis = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_millis())
+            .unwrap_or(0);
+        let manifest = std::fs::read_to_string(dir.manifest_path())
+            .ok()
+            .map(|text| manifest_fingerprint(&text));
+        Ok(ShardDriver {
+            dir,
+            label: label.to_string(),
+            run_tag: format!("{:x}-{millis:x}", std::process::id()),
+            manifest,
+            stage,
+            shards: shards.max(1),
+            cache,
+            timings,
+            batch: AtomicUsize::new(0),
+            evaluations: AtomicUsize::new(0),
+            hits: AtomicUsize::new(0),
+            reclaims: AtomicUsize::new(0),
+        })
+    }
+
+    /// Shards reclaimed from dead workers so far.
+    pub fn reclaims(&self) -> usize {
+        self.reclaims.load(Ordering::Relaxed)
+    }
+
+    /// The per-generation shard count.
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// The run directory.
+    pub fn run_dir(&self) -> &RunDir {
+        &self.dir
+    }
+
+    /// Evaluate one generation through the worker fleet, streaming
+    /// per-trial results to `on_trial` in trial-id order (the
+    /// [`super::ParallelEvaluator::evaluate_stream`] contract).
+    pub fn evaluate_stream<F>(&self, requests: Vec<EvalRequest>, mut on_trial: F) -> Result<()>
+    where
+        F: FnMut(EvaluatedTrial),
+    {
+        // ---- collapse to first-occurrence, uncached genomes (identical
+        // to the in-process pool, so shard contents are deterministic) ----
+        let mut pending: Vec<EvalRequest> = Vec::new();
+        let mut fresh: HashSet<Genome> = HashSet::new();
+        for req in &requests {
+            if self.cache.contains(&req.genome) || fresh.contains(&req.genome) {
+                continue;
+            }
+            fresh.insert(req.genome.clone());
+            pending.push(req.clone());
+        }
+
+        let mut errors: Vec<(usize, anyhow::Error)> = Vec::new();
+        let mut next = 0usize;
+
+        if !pending.is_empty() {
+            let batch = self.batch.fetch_add(1, Ordering::Relaxed);
+            // sweep this driver's stragglers before dispatching: a
+            // reclaimed zombie may have re-published a result *after*
+            // the consumed copy was deleted — nothing will ever read it,
+            // and without the sweep such orphans would accumulate in
+            // results/ across generations
+            for entry in std::fs::read_dir(self.dir.results())
+                .into_iter()
+                .flatten()
+                .flatten()
+            {
+                if entry
+                    .file_name()
+                    .to_string_lossy()
+                    .contains(&self.run_tag)
+                {
+                    let _ = std::fs::remove_file(entry.path());
+                }
+            }
+            let mut shards = self.partition(batch, pending);
+            self.dispatch(&shards)?;
+            self.collect(
+                &requests,
+                &mut shards,
+                &mut fresh,
+                &mut next,
+                &mut errors,
+                &mut on_trial,
+            )?;
+        }
+
+        // batches served entirely from cache never dispatch anything
+        drain_ready(&self.cache, &self.hits, &requests, &mut fresh, &mut next, &mut on_trial);
+
+        if let Some((_, err)) = errors.into_iter().min_by_key(|&(idx, _)| idx) {
+            return Err(err);
+        }
+        debug_assert_eq!(next, requests.len(), "every trial emitted exactly once");
+        Ok(())
+    }
+
+    /// Contiguous near-equal partition of the collapsed dispatch list.
+    fn partition(&self, batch: usize, pending: Vec<EvalRequest>) -> Vec<ShardState> {
+        let n = pending.len();
+        let count = self.shards.min(n);
+        let (chunk, extra) = (n / count, n % count);
+        let mut out = Vec::with_capacity(count);
+        let mut iter = pending.into_iter();
+        let mut base = 0usize;
+        for idx in 0..count {
+            let size = chunk + usize::from(idx < extra);
+            out.push(ShardState {
+                name: format!("{}-{}-b{batch:04}-s{idx:02}.json", self.label, self.run_tag),
+                base,
+                requests: iter.by_ref().take(size).collect(),
+                resolved: false,
+                no_hb_since: None,
+            });
+            base += size;
+        }
+        out
+    }
+
+    /// Publish every shard's task file into the queue.
+    fn dispatch(&self, shards: &[ShardState]) -> Result<()> {
+        for s in shards {
+            let task = ShardTask {
+                shard: s.name.clone(),
+                stage: self.stage.clone(),
+                requests: s.requests.clone(),
+            };
+            self.dir
+                .publish(&self.dir.queue().join(&s.name), &task.to_json().to_string())?;
+        }
+        Ok(())
+    }
+
+    /// Poll until every shard has a consumed result, committing and
+    /// draining as results land, reclaiming dead claims along the way.
+    #[allow(clippy::too_many_arguments)]
+    fn collect(
+        &self,
+        requests: &[EvalRequest],
+        shards: &mut [ShardState],
+        fresh: &mut HashSet<Genome>,
+        next: &mut usize,
+        errors: &mut Vec<(usize, anyhow::Error)>,
+        on_trial: &mut impl FnMut(EvaluatedTrial),
+    ) -> Result<()> {
+        let mut last_progress = Instant::now();
+        loop {
+            let mut progressed = false;
+            for s in shards.iter_mut().filter(|s| !s.resolved) {
+                let result_path = self.dir.results().join(&s.name);
+                let Ok(text) = std::fs::read_to_string(&result_path) else {
+                    continue;
+                };
+                match parse_result_file(&text, &s.requests, self.manifest.as_deref()) {
+                    Ok(Ok(rows)) => {
+                        for (k, (req, outcome)) in s.requests.iter().zip(rows).enumerate() {
+                            match outcome {
+                                Ok(evaluation) => {
+                                    self.cache.insert(req.genome.clone(), evaluation);
+                                    self.evaluations.fetch_add(1, Ordering::Relaxed);
+                                }
+                                // dispatch index = position in the
+                                // collapsed list (shard-count-invariant)
+                                Err(msg) => errors.push((s.base + k, anyhow::anyhow!("{msg}"))),
+                            }
+                        }
+                    }
+                    Ok(Err(detail)) => errors.push((
+                        s.base,
+                        anyhow::Error::new(ShardError::WorkerFailed {
+                            shard: s.name.clone(),
+                            detail,
+                        }),
+                    )),
+                    Err(e) => errors.push((
+                        s.base,
+                        anyhow::Error::new(ShardError::CorruptResult {
+                            shard: s.name.clone(),
+                            detail: format!("{e:#}"),
+                        }),
+                    )),
+                }
+                s.resolved = true;
+                progressed = true;
+                // Tidy every protocol file this shard leaves behind: the
+                // consumed result (names are run-unique, nothing else
+                // will ever read it — without this, results/ grows by
+                // shards × generations over a long run), a stray claim
+                // from a worker that crashed between publishing and
+                // cleanup, and the re-queued task file a reclaimed
+                // zombie's late result would otherwise leave for a live
+                // worker to re-train pointlessly.
+                let _ = std::fs::remove_file(&result_path);
+                let _ = std::fs::remove_file(self.dir.queue().join(&s.name));
+                let _ = std::fs::remove_file(self.dir.claims().join(&s.name));
+                let _ = std::fs::remove_file(self.dir.claims().join(format!("{}.hb", s.name)));
+            }
+
+            drain_ready(&self.cache, &self.hits, requests, fresh, next, &mut *on_trial);
+            if shards.iter().all(|s| s.resolved) {
+                return Ok(());
+            }
+
+            // ---- lease bookkeeping for the shards still in flight ----
+            let mut live = false;
+            for s in shards.iter_mut().filter(|s| !s.resolved) {
+                let claim = self.dir.claims().join(&s.name);
+                let hb = self.dir.claims().join(format!("{}.hb", s.name));
+                if !claim.exists() {
+                    // still queued (or between reclaim and re-claim)
+                    s.no_hb_since = None;
+                    continue;
+                }
+                let stale = match mtime_age(&hb) {
+                    Some(age) => {
+                        if age <= self.timings.lease_timeout {
+                            s.no_hb_since = None;
+                        }
+                        age > self.timings.lease_timeout
+                    }
+                    // claimed with no heartbeat file — either freshly
+                    // claimed, or the sidecar transiently vanished: one
+                    // full lease of grace from first observation
+                    None => {
+                        let since = *s.no_hb_since.get_or_insert_with(Instant::now);
+                        since.elapsed() > self.timings.lease_timeout
+                    }
+                };
+                if stale {
+                    // claim-by-rename in reverse: only one reclaimer can
+                    // win, and the task file travels back intact
+                    if std::fs::rename(&claim, self.dir.queue().join(&s.name)).is_ok() {
+                        let _ = std::fs::remove_file(&hb);
+                        self.reclaims.fetch_add(1, Ordering::Relaxed);
+                        s.no_hb_since = None;
+                        eprintln!(
+                            "[shard] reclaimed `{}` from a dead worker (stale lease)",
+                            s.name
+                        );
+                        progressed = true;
+                    }
+                } else {
+                    live = true;
+                }
+            }
+
+            if progressed || live {
+                last_progress = Instant::now();
+            } else if last_progress.elapsed() > self.timings.stall_timeout {
+                return Err(anyhow::Error::new(ShardError::Stalled {
+                    run_dir: self.dir.root().to_path_buf(),
+                    waited: last_progress.elapsed(),
+                }));
+            }
+            std::thread::sleep(self.timings.poll);
+        }
+    }
+}
+
+impl EvalPool for ShardDriver {
+    fn evaluate_stream_dyn(
+        &self,
+        requests: Vec<EvalRequest>,
+        on_trial: &mut dyn FnMut(EvaluatedTrial),
+    ) -> Result<()> {
+        self.evaluate_stream(requests, |trial| on_trial(trial))
+    }
+
+    fn evaluations(&self) -> usize {
+        self.evaluations.load(Ordering::Relaxed)
+    }
+
+    fn cache_hits(&self) -> usize {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    fn cache(&self) -> &EvalCache {
+        &self.cache
+    }
+}
+
+// ---------------------------------------------------------------------------
+// worker
+// ---------------------------------------------------------------------------
+
+/// Worker-side knobs.
+#[derive(Debug, Clone)]
+pub struct WorkerOptions {
+    /// Queue poll cadence while idle.
+    pub poll: Duration,
+    /// Heartbeat rewrite cadence while evaluating a claim (keep this well
+    /// under the driver's lease timeout).
+    pub heartbeat: Duration,
+    /// [`manifest_fingerprint`] of the `run.json` this worker's evaluator
+    /// stack was built from, echoed in every result file so the driver
+    /// rejects results computed under a stale configuration. `None` for
+    /// manifest-less harnesses (in-process tests, benches).
+    pub manifest: Option<String>,
+}
+
+impl Default for WorkerOptions {
+    fn default() -> Self {
+        WorkerOptions {
+            poll: Duration::from_millis(50),
+            heartbeat: Duration::from_secs(1),
+            manifest: None,
+        }
+    }
+}
+
+/// What a worker did before shutdown.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct WorkerSummary {
+    /// Shards claimed and published.
+    pub shards: usize,
+    /// Trials evaluated (failed evaluations included).
+    pub trials: usize,
+}
+
+/// Stops (and joins) the heartbeat thread when dropped — including on
+/// unwind out of a panicking `eval_shard`, where a leaked beat thread
+/// would keep the dead claim's lease fresh forever and the driver would
+/// hang instead of reclaiming the shard.
+struct Heartbeat {
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Heartbeat {
+    fn start(hb: PathBuf, interval: Duration) -> Heartbeat {
+        let _ = std::fs::write(&hb, b"hb\n");
+        let stop = Arc::new(AtomicBool::new(false));
+        let thread = {
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    std::thread::sleep(interval);
+                    let _ = std::fs::write(&hb, b"hb\n");
+                }
+            })
+        };
+        Heartbeat {
+            stop,
+            thread: Some(thread),
+        }
+    }
+}
+
+impl Drop for Heartbeat {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(thread) = self.thread.take() {
+            let _ = thread.join();
+        }
+    }
+}
+
+/// Serve shards from `run_dir` until a shutdown is requested.
+///
+/// `eval_shard` scores one claimed shard: it receives the stage spec and
+/// the shard's requests and must return one `Result` per request, in
+/// request order (per-request errors travel to the driver individually —
+/// the PR-2 batch-failure guarantee: a failed trial never discards a
+/// successful sibling). The claim/heartbeat/publish machinery lives here;
+/// the binary's `worker` subcommand supplies an `eval_shard` that
+/// rebuilds the full train-and-score stack, tests supply mocks.
+pub fn run_worker<F>(
+    run_dir: &Path,
+    opts: &WorkerOptions,
+    mut eval_shard: F,
+) -> Result<WorkerSummary>
+where
+    F: FnMut(&StageSpec, &[EvalRequest]) -> Vec<Result<TrialEvaluation>>,
+{
+    let dir = RunDir::new(run_dir);
+    dir.ensure()?;
+    let mut summary = WorkerSummary::default();
+    loop {
+        if dir.is_shutdown() {
+            return Ok(summary);
+        }
+        let names = queue_names(&dir);
+        let mut claimed_any = false;
+        for name in names {
+            let claim = dir.claims().join(&name);
+            // claim-by-rename: exactly one worker wins this shard
+            if std::fs::rename(dir.queue().join(&name), &claim).is_err() {
+                continue;
+            }
+            claimed_any = true;
+            let hb = dir.claims().join(format!("{name}.hb"));
+            // heartbeat thread: keeps the lease alive however long the
+            // shard trains; the guard stops it even if eval_shard panics
+            let beat = Heartbeat::start(hb.clone(), opts.heartbeat);
+            let result_path = dir.results().join(&name);
+            let text = match std::fs::read_to_string(&claim) {
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                    // the claim vanished under us: the driver resolved
+                    // this shard through another worker's result (our
+                    // lease was reclaimed while we stalled) — the shard
+                    // is no longer ours, so publish nothing
+                    drop(beat);
+                    let _ = std::fs::remove_file(&hb);
+                    continue;
+                }
+                Err(e) => Err(anyhow::Error::new(e).context(format!(
+                    "reading shard task {}",
+                    claim.display()
+                ))),
+                Ok(text) => Ok(text),
+            }
+            .and_then(|text| {
+                ShardTask::from_json(&Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?)
+            })
+            .map(|task| {
+                let outcomes = eval_shard(&task.stage, &task.requests);
+                summary.trials += outcomes.len();
+                let rows: Vec<(usize, Result<TrialEvaluation, String>)> = task
+                    .requests
+                    .iter()
+                    .zip(outcomes)
+                    .map(|(req, outcome)| (req.trial_id, outcome.map_err(|e| format!("{e:#}"))))
+                    .collect();
+                result_to_json(&task.shard, &rows, opts.manifest.as_deref()).to_string()
+            })
+            .unwrap_or_else(|e| {
+                worker_failure_to_json(&name, &format!("{e:#}"), opts.manifest.as_deref())
+                    .to_string()
+            });
+            // first-writer-wins publish: a result someone else already
+            // published (our lease was reclaimed and the replacement
+            // finished first) is never clobbered — in particular a late
+            // failure report cannot overwrite a consumed success
+            let published = dir.publish_new(&result_path, &text);
+            drop(beat);
+            published?;
+            let _ = std::fs::remove_file(&claim);
+            let _ = std::fs::remove_file(&hb);
+            summary.shards += 1;
+        }
+        if !claimed_any {
+            std::thread::sleep(opts.poll);
+        }
+    }
+}
+
+/// Sorted shard file names currently queued (a missing or unreadable
+/// queue directory reads as empty — `ensure()` recreates it).
+fn queue_names(dir: &RunDir) -> Vec<String> {
+    let mut names: Vec<String> = std::fs::read_dir(dir.queue())
+        .into_iter()
+        .flatten()
+        .flatten()
+        .filter_map(|e| e.file_name().into_string().ok())
+        .filter(|n| n.ends_with(".json"))
+        .collect();
+    names.sort();
+    names
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{global_search_with, SearchLoopConfig, SearchOutcome};
+    use crate::eval::{ParallelEvaluator, TrialEvaluator};
+    use crate::nn::SearchSpace;
+    use crate::search::Nsga2Config;
+    use crate::util::Rng;
+
+    fn toy_stage() -> StageSpec {
+        StageSpec {
+            objectives: ObjectiveKind::nac_set(),
+            epochs: 1,
+        }
+    }
+
+    fn fast_timings() -> ShardTimings {
+        ShardTimings {
+            lease_timeout: Duration::from_millis(300),
+            poll: Duration::from_millis(5),
+            stall_timeout: Duration::from_secs(30),
+        }
+    }
+
+    fn worker_opts() -> WorkerOptions {
+        WorkerOptions {
+            poll: Duration::from_millis(5),
+            heartbeat: Duration::from_millis(50),
+            manifest: None,
+        }
+    }
+
+    fn tmp_run_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join("snac_shard_tests")
+            .join(format!("{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    /// Requests shutdown when dropped, so worker threads always exit —
+    /// even when a test assertion panics mid-scope (otherwise the scope
+    /// would join forever and the failure would present as a hang).
+    struct ShutdownOnDrop(RunDir);
+
+    impl Drop for ShutdownOnDrop {
+        fn drop(&mut self) {
+            let _ = self.0.request_shutdown();
+        }
+    }
+
+    /// The deterministic toy scorer shared by driver and workers (same
+    /// rule as the search-loop tests: accuracy mixes in the trial RNG so
+    /// any perturbation of the fork/replay discipline is caught).
+    fn toy_score(space: &SearchSpace, genome: &Genome, rng: &mut Rng) -> TrialEvaluation {
+        let weights = genome.num_weights(space) as f64;
+        let accuracy = (1.0 - (-weights / 4000.0).exp()) * (0.95 + 0.05 * rng.uniform());
+        TrialEvaluation {
+            accuracy,
+            bops: weights,
+            est_avg_resources: None,
+            est_clock_cycles: None,
+            objectives: vec![-accuracy, weights],
+            train_seconds: 0.001,
+        }
+    }
+
+    struct ToyEvaluator {
+        space: SearchSpace,
+    }
+
+    impl TrialEvaluator for ToyEvaluator {
+        fn evaluate(&self, genome: &Genome, rng: &mut Rng) -> Result<TrialEvaluation> {
+            Ok(toy_score(&self.space, genome, rng))
+        }
+    }
+
+    fn requests(genomes: &[Genome], seed: u64) -> Vec<EvalRequest> {
+        let mut root = Rng::new(seed);
+        genomes
+            .iter()
+            .enumerate()
+            .map(|(trial_id, genome)| EvalRequest {
+                trial_id,
+                genome: genome.clone(),
+                rng: root.fork(trial_id as u64),
+            })
+            .collect()
+    }
+
+    fn distinct_genomes(n: usize, seed: u64) -> Vec<Genome> {
+        let space = SearchSpace::table1();
+        let mut rng = Rng::new(seed);
+        let mut out: Vec<Genome> = Vec::new();
+        while out.len() < n {
+            let g = space.sample(&mut rng);
+            if !out.contains(&g) {
+                out.push(g);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn shard_task_and_result_files_round_trip() {
+        let space = SearchSpace::table1();
+        let genomes = distinct_genomes(3, 9);
+        let task = ShardTask {
+            shard: "t-b0000-s00.json".to_string(),
+            stage: StageSpec {
+                objectives: ObjectiveKind::snac_set(),
+                epochs: 5,
+            },
+            requests: requests(&genomes, 4),
+        };
+        let text = task.to_json().to_string();
+        let back = ShardTask::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.shard, task.shard);
+        assert_eq!(back.stage, task.stage);
+        assert_eq!(back.requests.len(), 3);
+        for (a, b) in task.requests.iter().zip(&back.requests) {
+            assert_eq!(a.trial_id, b.trial_id);
+            assert_eq!(a.genome, b.genome);
+            // the RNG stream replays bit-for-bit after the round trip
+            let mut ra = a.rng.clone();
+            let mut rb = b.rng.clone();
+            for _ in 0..32 {
+                assert_eq!(ra.next_u64(), rb.next_u64());
+            }
+        }
+
+        // result rows: evaluations round-trip, per-trial errors survive
+        let mut rng = Rng::new(1);
+        let rows: Vec<(usize, Result<TrialEvaluation, String>)> = vec![
+            (0, Ok(toy_score(&space, &genomes[0], &mut rng))),
+            (1, Err("mock trial failure".to_string())),
+            (2, Ok(toy_score(&space, &genomes[2], &mut rng))),
+        ];
+        let text = result_to_json(&task.shard, &rows, Some("fp-1")).to_string();
+        let parsed = parse_result_file(&text, &task.requests, Some("fp-1"))
+            .unwrap()
+            .unwrap();
+        assert_eq!(parsed.len(), 3);
+        let (Ok(e0), Err(msg), Ok(e2)) = (&parsed[0], &parsed[1], &parsed[2]) else {
+            panic!("row shapes survived");
+        };
+        assert_eq!(e0.accuracy, rows[0].1.as_ref().unwrap().accuracy);
+        assert_eq!(e0.objectives, rows[0].1.as_ref().unwrap().objectives);
+        assert_eq!(msg, "mock trial failure");
+        assert_eq!(e2.bops, rows[2].1.as_ref().unwrap().bops);
+
+        // mismatched rows are a corrupt result, not a silent misalignment
+        assert!(parse_result_file(&text, &task.requests[..2], Some("fp-1")).is_err());
+        // a result computed under a different run manifest is rejected —
+        // a worker that booted from a stale run.json fails loudly instead
+        // of committing wrong numbers
+        let err = parse_result_file(&text, &task.requests, Some("fp-2")).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("different run manifest"),
+            "{err:#}"
+        );
+        // drivers without a manifest (in-process harnesses) skip the check
+        assert!(parse_result_file(&text, &task.requests, None).is_ok());
+        // fingerprints are content-derived and stable
+        assert_eq!(manifest_fingerprint("abc"), manifest_fingerprint("abc"));
+        assert_ne!(manifest_fingerprint("abc"), manifest_fingerprint("abd"));
+    }
+
+    /// Drive a micro search through the shard protocol with in-process
+    /// worker threads; returns the outcome.
+    fn sharded_search(
+        run_dir: &Path,
+        shards: usize,
+        workers: usize,
+        trials: usize,
+        seed: u64,
+    ) -> SearchOutcome {
+        let space = SearchSpace::table1();
+        let driver = ShardDriver::new(
+            run_dir,
+            "toy",
+            toy_stage(),
+            shards,
+            EvalCache::in_memory(),
+            fast_timings(),
+        )
+        .unwrap();
+        let outcome = std::thread::scope(|s| {
+            let _guard = ShutdownOnDrop(RunDir::new(run_dir));
+            for _ in 0..workers {
+                let space = space.clone();
+                s.spawn(move || {
+                    run_worker(run_dir, &worker_opts(), |_stage, reqs| {
+                        reqs.iter()
+                            .map(|req| {
+                                let mut rng = req.rng.clone();
+                                Ok(toy_score(&space, &req.genome, &mut rng))
+                            })
+                            .collect()
+                    })
+                    .unwrap();
+                });
+            }
+            global_search_with(
+                &driver,
+                &space,
+                SearchLoopConfig {
+                    nsga2: Nsga2Config {
+                        population: 6,
+                        ..Default::default()
+                    },
+                    trials,
+                    seed,
+                    accuracy_threshold: 0.0,
+                    progress: None,
+                },
+            )
+            .unwrap()
+        });
+        outcome
+    }
+
+    /// The acceptance matrix: the micro search pipeline at
+    /// `shards ∈ {1,2,4} × workers ∈ {1,2}` produces identical genomes,
+    /// objectives, and Pareto selection to the single-process pool for
+    /// all six configurations (timings excluded — they are live
+    /// measurement).
+    #[test]
+    fn sharded_search_matches_single_process_for_every_shard_and_worker_count() {
+        let space = SearchSpace::table1();
+        let pool = ParallelEvaluator::new(
+            ToyEvaluator {
+                space: space.clone(),
+            },
+            1,
+        );
+        let reference = global_search_with(
+            &pool,
+            &space,
+            SearchLoopConfig {
+                nsga2: Nsga2Config {
+                    population: 6,
+                    ..Default::default()
+                },
+                trials: 24,
+                seed: 42,
+                accuracy_threshold: 0.0,
+                progress: None,
+            },
+        )
+        .unwrap();
+
+        for shards in [1usize, 2, 4] {
+            for workers in [1usize, 2] {
+                let run_dir = tmp_run_dir(&format!("matrix-s{shards}-w{workers}"));
+                let outcome = sharded_search(&run_dir, shards, workers, 24, 42);
+                assert_eq!(
+                    outcome.records.len(),
+                    reference.records.len(),
+                    "shards={shards} workers={workers}"
+                );
+                for (a, b) in reference.records.iter().zip(&outcome.records) {
+                    assert_eq!(a.id, b.id, "shards={shards} workers={workers}");
+                    assert_eq!(a.genome, b.genome, "shards={shards} workers={workers}");
+                    assert_eq!(a.accuracy, b.accuracy, "shards={shards} workers={workers}");
+                    assert_eq!(
+                        a.objectives, b.objectives,
+                        "shards={shards} workers={workers}"
+                    );
+                    assert_eq!(a.generation, b.generation);
+                }
+                assert_eq!(outcome.front, reference.front, "shards={shards} workers={workers}");
+                assert_eq!(
+                    outcome.selected, reference.selected,
+                    "shards={shards} workers={workers}"
+                );
+                assert_eq!(outcome.evaluations, reference.evaluations);
+                assert_eq!(outcome.cache_hits, reference.cache_hits);
+                let _ = std::fs::remove_dir_all(&run_dir);
+            }
+        }
+    }
+
+    /// Fault injection: a worker that claims a shard and dies (stale
+    /// heartbeat) must have its shard reclaimed and re-evaluated exactly
+    /// once, with the merged outcome unchanged.
+    #[test]
+    fn dead_worker_shard_is_reclaimed_and_reevaluated_exactly_once() {
+        let space = SearchSpace::table1();
+        let genomes = distinct_genomes(8, 31);
+        let run_dir = tmp_run_dir("reclaim");
+        let driver = ShardDriver::new(
+            &run_dir,
+            "toy",
+            toy_stage(),
+            2,
+            EvalCache::in_memory(),
+            fast_timings(),
+        )
+        .unwrap();
+        let dir = RunDir::new(&run_dir);
+        let calls = AtomicUsize::new(0);
+
+        let mut streamed: Vec<usize> = Vec::new();
+        std::thread::scope(|s| {
+            let _guard = ShutdownOnDrop(dir.clone());
+            // the honest worker: starts only after the dead worker has
+            // stolen its claim, then serves everything that remains
+            let space_ref = &space;
+            let calls_ref = &calls;
+            let dir_ref = &dir;
+            let rd: &Path = run_dir.as_path();
+            s.spawn(move || {
+                // "dead" worker: claim the first queued shard, heartbeat
+                // once, then vanish without ever publishing a result
+                let queued = loop {
+                    if let Some(first) = queue_names(dir_ref).first() {
+                        break first.clone();
+                    }
+                    std::thread::sleep(Duration::from_millis(2));
+                };
+                let claim = dir_ref.claims().join(&queued);
+                if std::fs::rename(dir_ref.queue().join(&queued), &claim).is_ok() {
+                    let _ = std::fs::write(
+                        dir_ref.claims().join(format!("{queued}.hb")),
+                        b"hb\n",
+                    );
+                }
+                // died. the honest worker takes over from here.
+                run_worker(rd, &worker_opts(), |_stage, reqs| {
+                    reqs.iter()
+                        .map(|req| {
+                            calls_ref.fetch_add(1, Ordering::SeqCst);
+                            let mut rng = req.rng.clone();
+                            Ok(toy_score(space_ref, &req.genome, &mut rng))
+                        })
+                        .collect()
+                })
+                .unwrap();
+            });
+
+            driver
+                .evaluate_stream(requests(&genomes, 7), |t| streamed.push(t.trial_id))
+                .unwrap();
+            dir.request_shutdown().unwrap();
+        });
+
+        assert_eq!(driver.reclaims(), 1, "the dead worker's lease was reclaimed once");
+        assert_eq!(streamed, (0..8).collect::<Vec<_>>(), "trial order preserved");
+        assert_eq!(
+            calls.load(Ordering::SeqCst),
+            8,
+            "the reclaimed shard was re-evaluated exactly once (no double work)"
+        );
+        assert_eq!(EvalPool::evaluations(&driver), 8);
+
+        // and the merged numbers equal the in-process pool's
+        let pool = ParallelEvaluator::new(
+            ToyEvaluator {
+                space: space.clone(),
+            },
+            1,
+        );
+        let reference = pool.evaluate_batch(requests(&genomes, 7)).unwrap();
+        for r in &reference {
+            let cached = driver.cache().lookup(&r.genome).unwrap();
+            assert_eq!(cached.accuracy, r.evaluation.accuracy);
+            assert_eq!(cached.objectives, r.evaluation.objectives);
+        }
+        let _ = std::fs::remove_dir_all(&run_dir);
+    }
+
+    /// Fault injection: one corrupt per-shard result file must surface as
+    /// a typed error naming the shard, while the sibling shard's results
+    /// are still committed to the cache (the PR-2 batch-failure
+    /// guarantee, lifted to shards).
+    #[test]
+    fn corrupt_result_file_is_a_typed_error_and_siblings_commit() {
+        let genomes = distinct_genomes(8, 57);
+        let run_dir = tmp_run_dir("corrupt");
+        let driver = ShardDriver::new(
+            &run_dir,
+            "toy",
+            toy_stage(),
+            2,
+            EvalCache::in_memory(),
+            fast_timings(),
+        )
+        .unwrap();
+        let dir = RunDir::new(&run_dir);
+        let space = SearchSpace::table1();
+
+        let mut streamed: Vec<usize> = Vec::new();
+        let err = std::thread::scope(|s| {
+            let _guard = ShutdownOnDrop(dir.clone());
+            let space_ref = &space;
+            let dir_ref = &dir;
+            let rd: &Path = run_dir.as_path();
+            s.spawn(move || {
+                // sabotage the SECOND shard: steal its claim so no honest
+                // worker can serve it, then publish garbage as its result
+                let second = loop {
+                    let names = queue_names(dir_ref);
+                    if names.len() >= 2 {
+                        break names[1].clone();
+                    }
+                    std::thread::sleep(Duration::from_millis(2));
+                };
+                let _ = std::fs::rename(
+                    dir_ref.queue().join(&second),
+                    dir_ref.claims().join(&second),
+                );
+                std::fs::write(dir_ref.results().join(&second), b"{not json at all")
+                    .unwrap();
+                // honest worker serves the surviving first shard
+                run_worker(rd, &worker_opts(), |_stage, reqs| {
+                    reqs.iter()
+                        .map(|req| {
+                            let mut rng = req.rng.clone();
+                            Ok(toy_score(space_ref, &req.genome, &mut rng))
+                        })
+                        .collect()
+                })
+                .unwrap();
+            });
+
+            let err = driver
+                .evaluate_stream(requests(&genomes, 3), |t| streamed.push(t.trial_id))
+                .unwrap_err();
+            dir.request_shutdown().unwrap();
+            err
+        });
+
+        let shard_err = err
+            .downcast_ref::<ShardError>()
+            .expect("typed ShardError, not a stringly error");
+        match shard_err {
+            ShardError::CorruptResult { shard, .. } => {
+                assert!(
+                    shard.contains("-s01"),
+                    "error names the corrupt shard: {shard}"
+                );
+            }
+            other => panic!("expected CorruptResult, got {other}"),
+        }
+        // the sibling shard's four evaluations were committed, and the
+        // stream emitted exactly the prefix the sibling covers
+        assert_eq!(EvalPool::evaluations(&driver), 4);
+        assert_eq!(streamed, vec![0, 1, 2, 3]);
+        for g in &genomes[..4] {
+            assert!(driver.cache().contains(g), "sibling results committed");
+        }
+        for g in &genomes[4..] {
+            assert!(!driver.cache().contains(g));
+        }
+        let _ = std::fs::remove_dir_all(&run_dir);
+    }
+
+    /// Per-trial worker errors travel through the result file and keep
+    /// the PR-2 contract: successes commit, the first dispatch-order
+    /// error propagates.
+    #[test]
+    fn per_trial_errors_propagate_first_in_dispatch_order() {
+        let space = SearchSpace::table1();
+        let genomes = distinct_genomes(6, 91);
+        let bad = [genomes[1].clone(), genomes[4].clone()];
+        let run_dir = tmp_run_dir("trial-errors");
+        let driver = ShardDriver::new(
+            &run_dir,
+            "toy",
+            toy_stage(),
+            3,
+            EvalCache::in_memory(),
+            fast_timings(),
+        )
+        .unwrap();
+        let dir = RunDir::new(&run_dir);
+
+        let err = std::thread::scope(|s| {
+            let _guard = ShutdownOnDrop(dir.clone());
+            let space_ref = &space;
+            let bad_ref = &bad;
+            let rd: &Path = run_dir.as_path();
+            s.spawn(move || {
+                run_worker(rd, &worker_opts(), |_stage, reqs| {
+                    reqs.iter()
+                        .map(|req| {
+                            if let Some(i) = bad_ref.iter().position(|g| *g == req.genome) {
+                                anyhow::bail!("mock failure #{i}");
+                            }
+                            let mut rng = req.rng.clone();
+                            Ok(toy_score(space_ref, &req.genome, &mut rng))
+                        })
+                        .collect()
+                })
+                .unwrap();
+            });
+            let err = driver
+                .evaluate_stream(requests(&genomes, 2), |_| {})
+                .unwrap_err();
+            dir.request_shutdown().unwrap();
+            err
+        });
+
+        assert!(
+            format!("{err:#}").contains("mock failure #0"),
+            "first dispatch-order error wins: {err:#}"
+        );
+        assert_eq!(EvalPool::evaluations(&driver), 4, "successful siblings committed");
+        let _ = std::fs::remove_dir_all(&run_dir);
+    }
+
+    /// A batch served entirely from the (restored) cache dispatches no
+    /// shards at all — and a second sharded batch over the same genomes
+    /// is pure cache hits.
+    #[test]
+    fn cached_batches_skip_dispatch_entirely() {
+        let space = SearchSpace::table1();
+        let genomes = distinct_genomes(5, 14);
+        let run_dir = tmp_run_dir("cached");
+        let driver = ShardDriver::new(
+            &run_dir,
+            "toy",
+            toy_stage(),
+            2,
+            EvalCache::in_memory(),
+            fast_timings(),
+        )
+        .unwrap();
+        let dir = RunDir::new(&run_dir);
+        std::thread::scope(|s| {
+            let _guard = ShutdownOnDrop(dir.clone());
+            let space_ref = &space;
+            let rd: &Path = run_dir.as_path();
+            s.spawn(move || {
+                run_worker(rd, &worker_opts(), |_stage, reqs| {
+                    reqs.iter()
+                        .map(|req| {
+                            let mut rng = req.rng.clone();
+                            Ok(toy_score(space_ref, &req.genome, &mut rng))
+                        })
+                        .collect()
+                })
+                .unwrap();
+            });
+            let first = {
+                let mut out = Vec::new();
+                driver
+                    .evaluate_stream(requests(&genomes, 8), |t| out.push(t))
+                    .unwrap();
+                out
+            };
+            assert!(first.iter().all(|t| !t.cached));
+            // second batch: all hits, no new shard files needed (the
+            // worker could be dead by now and this would still succeed)
+            dir.request_shutdown().unwrap();
+            let second = {
+                let mut out = Vec::new();
+                driver
+                    .evaluate_stream(requests(&genomes, 8), |t| out.push(t))
+                    .unwrap();
+                out
+            };
+            assert!(second.iter().all(|t| t.cached));
+            assert_eq!(EvalPool::cache_hits(&driver), 5);
+            for (a, b) in first.iter().zip(&second) {
+                assert_eq!(a.evaluation.accuracy, b.evaluation.accuracy);
+            }
+        });
+        let _ = std::fs::remove_dir_all(&run_dir);
+    }
+}

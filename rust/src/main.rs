@@ -6,6 +6,8 @@
 //! ```text
 //! snac-pack pipeline  --preset ci --out results          # full paper flow
 //! snac-pack search    --preset ci --objectives acc,bops  # one global search
+//! snac-pack search    --shards 4 --run-dir /tmp/run      # multi-process dispatch
+//! snac-pack worker    --run-dir /tmp/run                 # serve shards for a driver
 //! snac-pack surrogate --preset ci                        # surrogate train/eval
 //! snac-pack synth                                        # Table-3 style synthesis demo
 //! snac-pack info                                         # runtime/artifact info
@@ -16,13 +18,19 @@ use std::path::{Path, PathBuf};
 use anyhow::{bail, Context, Result};
 
 use snac_pack::config::Preset;
-use snac_pack::coordinator::{self, GlobalSearchConfig, TrialRecord};
+use snac_pack::coordinator::{self, GlobalSearchConfig, ShardedDispatch, TrialRecord};
 use snac_pack::data::Dataset;
+use snac_pack::eval::{
+    parallel_map, resolve_workers, run_worker, RunDir, ShardTimings, SupernetEvaluator,
+    TrialEvaluator, WorkerOptions,
+};
 use snac_pack::hls::{synthesize, FpgaDevice, HlsConfig, NetworkSpec};
 use snac_pack::nn::SearchSpace;
 use snac_pack::objectives::{ObjectiveContext, ObjectiveKind};
 use snac_pack::runtime::Runtime;
-use snac_pack::surrogate::{train_surrogate, SurrogatePredictor};
+use snac_pack::surrogate::{train_surrogate, SurrogateParams, SurrogatePredictor};
+use snac_pack::trainer::TrainConfig;
+use snac_pack::util::Json;
 
 /// Parsed command line.
 struct Cli {
@@ -34,6 +42,9 @@ struct Cli {
     /// prints the fixture-fallback notice).
     artifacts: Option<PathBuf>,
     objectives: Vec<ObjectiveKind>,
+    /// Raw `--workers` value when one was passed (the `worker`
+    /// subcommand overrides the manifest's preset with it).
+    workers_flag: Option<usize>,
 }
 
 impl Cli {
@@ -50,14 +61,18 @@ fn parse_cli() -> Result<Cli> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let Some(command) = args.first().cloned() else {
         bail!(
-            "usage: snac-pack <pipeline|search|surrogate|synth|info> \
+            "usage: snac-pack <pipeline|search|worker|surrogate|synth|info> \
              [--preset paper|ci|quickstart] [--out DIR] [--artifacts DIR] \
              [--objectives acc,bops] [--workers N] [--cache-path FILE] \
-             [--set key=value ...]\n\
+             [--shards N] [--run-dir DIR] [--set key=value ...]\n\
              --preset picks the base regardless of position; \
              --workers/--cache-path/--set overrides then apply left to right\n\
              --cache-path persists the evaluation cache across runs: a \
-             re-run never retrains a previously evaluated genome"
+             re-run never retrains a previously evaluated genome\n\
+             --shards N dispatches each generation to N shard files served \
+             by `snac-pack worker` processes over --run-dir (auto-spawned \
+             locally unless --set spawn_workers=0); results are \
+             bit-identical to the in-process run"
         );
     };
     let mut preset = Preset::by_name("ci")?;
@@ -68,6 +83,7 @@ fn parse_cli() -> Result<Cli> {
     // rust/xla interpreter executes)
     let mut artifacts: Option<PathBuf> = None;
     let mut objectives = ObjectiveKind::nac_set();
+    let mut workers_flag = None;
     // --preset resolves first so `--workers 8 --preset paper` keeps the 8:
     // the preset is the base, every other flag is an override on top.
     let mut i = 1;
@@ -90,12 +106,22 @@ fn parse_cli() -> Result<Cli> {
             "--out" => out = PathBuf::from(value()?),
             "--artifacts" => artifacts = Some(PathBuf::from(value()?)),
             "--objectives" => objectives = ObjectiveKind::parse_set(value()?)?,
-            "--workers" => preset
-                .set("workers", value()?)
-                .context("--workers expects a count")?,
+            "--workers" => {
+                let v = value()?;
+                preset
+                    .set("workers", v)
+                    .context("--workers expects a count")?;
+                workers_flag = v.parse().ok();
+            }
             "--cache-path" => preset
                 .set("cache_path", value()?)
                 .context("--cache-path expects a file path")?,
+            "--shards" => preset
+                .set("shards", value()?)
+                .context("--shards expects a count")?,
+            "--run-dir" => preset
+                .set("run_dir", value()?)
+                .context("--run-dir expects a directory path")?,
             "--set" => {
                 let kv = value()?;
                 let (k, v) = kv
@@ -113,12 +139,231 @@ fn parse_cli() -> Result<Cli> {
         out,
         artifacts,
         objectives,
+        workers_flag,
     })
 }
 
+/// A fleet of locally spawned `snac-pack worker` processes serving one
+/// run directory. Created by the driver before a sharded run; on drop —
+/// success or error — it requests shutdown and reaps the children, so
+/// workers never outlive their driver.
+struct ShardFleet {
+    dir: RunDir,
+    children: Vec<std::process::Child>,
+}
+
+impl ShardFleet {
+    /// Prepare `run_dir` (directories + `run.json` manifest) and spawn
+    /// the local workers. `preset.spawn_workers`: `None` = one worker per
+    /// shard; `Some(0)` = none (externally managed workers).
+    fn launch(preset: &Preset, artifacts: &Path) -> Result<ShardFleet> {
+        let run_dir = PathBuf::from(
+            preset
+                .run_dir
+                .as_ref()
+                .expect("caller resolves run_dir before launching the fleet"),
+        );
+        let dir = RunDir::new(&run_dir);
+        dir.ensure()?;
+        // Clear leftovers from a previous run on this directory before
+        // any worker exists: a stale shutdown sentinel would stop the
+        // fresh workers immediately, and stale queue/result files would
+        // burn worker time on shards no driver is waiting for (this
+        // run's shard names carry a fresh per-run tag, so stale files
+        // could never be *consumed* — only wastefully served).
+        dir.clear_shutdown();
+        for proto_dir in [dir.queue(), dir.claims(), dir.results(), dir.tmp()] {
+            for entry in std::fs::read_dir(&proto_dir).into_iter().flatten().flatten() {
+                let _ = std::fs::remove_file(entry.path());
+            }
+        }
+        // absolute artifacts path: externally started workers may run
+        // from any cwd, so a relative fixture-fallback path must not
+        // leak into the manifest verbatim
+        let artifacts = artifacts
+            .canonicalize()
+            .unwrap_or_else(|_| artifacts.to_path_buf());
+        let manifest = Json::obj(vec![
+            ("preset", preset.to_json()),
+            ("artifacts", Json::Str(artifacts.display().to_string())),
+        ]);
+        // atomic publish (tmp + rename): an externally started worker
+        // polling for run.json can never read a torn manifest, and the
+        // stale one from a previous run is gone before any worker of
+        // this run could load it
+        let _ = std::fs::remove_file(dir.manifest_path());
+        dir.publish(&dir.manifest_path(), &manifest.to_string())?;
+
+        let spawn = preset.spawn_workers.unwrap_or(preset.search.shards);
+        let mut children = Vec::new();
+        if spawn > 0 {
+            // split the configured evaluation parallelism across the
+            // spawned processes instead of oversubscribing every core
+            // `spawn` times (determinism is unaffected either way)
+            let per_worker = (resolve_workers(preset.search.workers) / spawn).max(1);
+            let exe = std::env::current_exe().context("locating the snac-pack binary")?;
+            for _ in 0..spawn {
+                children.push(
+                    std::process::Command::new(&exe)
+                        .arg("worker")
+                        .arg("--run-dir")
+                        .arg(&run_dir)
+                        .arg("--workers")
+                        .arg(per_worker.to_string())
+                        .spawn()
+                        .context("spawning a local worker process")?,
+                );
+            }
+            eprintln!(
+                "[driver] spawned {spawn} local worker(s), {per_worker} eval thread(s) each, \
+                 over {}",
+                run_dir.display()
+            );
+        } else {
+            eprintln!(
+                "[driver] expecting externally managed workers: start them with \
+                 `snac-pack worker --run-dir {}`",
+                run_dir.display()
+            );
+        }
+        Ok(ShardFleet { dir, children })
+    }
+}
+
+impl Drop for ShardFleet {
+    fn drop(&mut self) {
+        let _ = self.dir.request_shutdown();
+        for child in &mut self.children {
+            let _ = child.wait();
+        }
+    }
+}
+
+/// The `worker` subcommand: rebuild the evaluation stack from the run
+/// manifest and serve shards until the driver requests shutdown.
+fn worker_main(run_dir: &Path, workers_flag: Option<usize>) -> Result<()> {
+    let wid = std::process::id();
+    let manifest_path = run_dir.join("run.json");
+    // externally started workers may race the driver's manifest write:
+    // wait for it briefly instead of failing on startup order
+    for _ in 0..600 {
+        if manifest_path.exists() {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(100));
+    }
+    let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+        format!(
+            "reading {} — is a driver running with --shards over this directory?",
+            manifest_path.display()
+        )
+    })?;
+    let manifest = Json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("parsing {}: {e}", manifest_path.display()))?;
+    let preset = Preset::from_json(manifest.get("preset").context("run.json missing `preset`")?)?;
+    let artifacts = PathBuf::from(
+        manifest
+            .get("artifacts")
+            .and_then(Json::as_str)
+            .context("run.json missing `artifacts`")?,
+    );
+
+    let rt = Runtime::load(&artifacts)?;
+    let space = SearchSpace::table1();
+    let device = FpgaDevice::vu13p();
+    let hls = HlsConfig::default();
+    let ds = Dataset::generate(
+        preset.data.n_train,
+        preset.data.n_val,
+        preset.data.n_test,
+        preset.data.seed,
+    );
+    let workers = workers_flag.unwrap_or(preset.search.workers);
+    eprintln!(
+        "[worker {wid}] serving {} with {} eval thread(s)",
+        run_dir.display(),
+        resolve_workers(workers)
+    );
+
+    // every result this worker publishes echoes the fingerprint of the
+    // manifest its evaluator stack was built from — the driver rejects
+    // results computed under a stale run.json instead of merging them
+    let opts = WorkerOptions {
+        manifest: Some(snac_pack::eval::manifest_fingerprint(&text)),
+        ..Default::default()
+    };
+    // trained lazily, once, when a stage's objective set first needs it —
+    // deterministically from the preset seed, so every worker (and the
+    // driver's reporting pass) derives the identical surrogate
+    let mut sur_params: Option<SurrogateParams> = None;
+    let summary = run_worker(run_dir, &opts, |stage, requests| {
+        let needs = ObjectiveKind::needs_surrogate(&stage.objectives);
+        if needs && sur_params.is_none() {
+            match train_surrogate(&rt, &space, &preset.surrogate, &hls, &device) {
+                Ok((params, mse)) => {
+                    eprintln!("[worker {wid}] surrogate trained (MSE {mse:.5})");
+                    sur_params = Some(params);
+                }
+                Err(e) => {
+                    let msg = format!("surrogate training failed: {e:#}");
+                    return requests.iter().map(|_| Err(anyhow::anyhow!("{msg}"))).collect();
+                }
+            }
+        }
+        let predictor = match &sur_params {
+            Some(params) if needs => Some(SurrogatePredictor::new(&rt, params.clone())),
+            _ => None,
+        };
+        let ctx = ObjectiveContext {
+            space: &space,
+            device: &device,
+            surrogate: predictor.as_ref(),
+            bits: preset.local.bits,
+            sparsity: preset.local.target_sparsity,
+        };
+        let evaluator = SupernetEvaluator::new(
+            &rt,
+            &ds,
+            &space,
+            &stage.objectives,
+            &ctx,
+            TrainConfig {
+                epochs: stage.epochs,
+                ..Default::default()
+            },
+        );
+        // the driver already collapsed duplicates and cache hits out of
+        // the shard, so a plain ordered fan-out suffices; per-request
+        // errors travel back to the driver individually
+        parallel_map(workers, requests.to_vec(), |_, req| {
+            let mut rng = req.rng.clone();
+            evaluator.evaluate(&req.genome, &mut rng)
+        })
+    })?;
+    eprintln!(
+        "[worker {wid}] shutdown: served {} shard(s), {} trial(s)",
+        summary.shards, summary.trials
+    );
+    Ok(())
+}
+
 fn main() -> Result<()> {
-    let cli = parse_cli()?;
+    let mut cli = parse_cli()?;
+    // sharded runs need a concrete run directory before the preset is
+    // shared with the pipeline and the worker manifest
+    if cli.preset.search.shards > 0 && cli.preset.run_dir.is_none() {
+        cli.preset.run_dir = Some(cli.out.join("shard-run").display().to_string());
+    }
+    let cli = cli;
     match cli.command.as_str() {
+        "worker" => {
+            let run_dir = cli
+                .preset
+                .run_dir
+                .clone()
+                .context("the worker subcommand needs --run-dir DIR")?;
+            worker_main(Path::new(&run_dir), cli.workers_flag)?;
+        }
         "info" => {
             let rt = Runtime::load(&cli.artifacts_dir())?;
             println!("platform: {}", rt.platform());
@@ -132,7 +377,13 @@ fn main() -> Result<()> {
             }
         }
         "pipeline" => {
-            let rt = Runtime::load(&cli.artifacts_dir())?;
+            let artifacts = cli.artifacts_dir();
+            let rt = Runtime::load(&artifacts)?;
+            // dropped (= shutdown + reap) when this arm finishes, success
+            // or error — workers never outlive the driver
+            let _fleet = (cli.preset.search.shards > 0)
+                .then(|| ShardFleet::launch(&cli.preset, &artifacts))
+                .transpose()?;
             let summary = coordinator::run_pipeline(&rt, &cli.preset, &cli.out)?;
             println!("{}", summary.table2);
             println!("{}", summary.table3);
@@ -143,7 +394,21 @@ fn main() -> Result<()> {
             println!("reports written to {}", cli.out.display());
         }
         "search" => {
-            let rt = Runtime::load(&cli.artifacts_dir())?;
+            let artifacts = cli.artifacts_dir();
+            let sharded = cli.preset.search.shards > 0;
+            // sharded drivers never evaluate, so they skip the (interpreter)
+            // runtime load entirely — workers load their own; a cheap
+            // manifest check still catches a bad --artifacts up front
+            let rt = if sharded {
+                anyhow::ensure!(
+                    artifacts.join("manifest.json").exists(),
+                    "no manifest.json under {} — workers could not load a runtime",
+                    artifacts.display()
+                );
+                None
+            } else {
+                Some(Runtime::load(&artifacts)?)
+            };
             let space = SearchSpace::table1();
             let device = FpgaDevice::vu13p();
             let ds = Dataset::generate(
@@ -152,44 +417,66 @@ fn main() -> Result<()> {
                 cli.preset.data.n_test,
                 cli.preset.data.seed,
             );
-            let sur = if ObjectiveKind::needs_surrogate(&cli.objectives) {
+            let fleet = sharded
+                .then(|| ShardFleet::launch(&cli.preset, &artifacts))
+                .transpose()?;
+            // in sharded mode the workers train the surrogate themselves
+            // (deterministically, from the same preset seed), so the
+            // driver skips it
+            let sur = if !sharded && ObjectiveKind::needs_surrogate(&cli.objectives) {
+                let rt = rt.as_ref().expect("runtime loaded for non-sharded search");
                 let (p, mse) = train_surrogate(
-                    &rt,
+                    rt,
                     &space,
                     &cli.preset.surrogate,
                     &HlsConfig::default(),
                     &device,
                 )?;
                 eprintln!("surrogate MSE: {mse:.5}");
-                Some(SurrogatePredictor::new(&rt, p))
+                Some(SurrogatePredictor::new(rt, p))
             } else {
                 None
             };
-            let outcome = coordinator::global_search(
-                &rt,
-                &ds,
-                &space,
-                GlobalSearchConfig {
-                    objectives: cli.objectives.clone(),
-                    ctx: ObjectiveContext {
-                        space: &space,
-                        device: &device,
-                        surrogate: sur.as_ref(),
-                        bits: cli.preset.local.bits,
-                        sparsity: cli.preset.local.target_sparsity,
-                    },
-                    nsga2: cli.preset.nsga2(),
-                    trials: cli.preset.search.trials,
-                    epochs: cli.preset.search.epochs,
-                    seed: cli.preset.seed,
-                    workers: cli.preset.search.workers,
-                    accuracy_threshold: 0.0,
-                    progress: Some(Box::new(|i, n, r: &TrialRecord| {
-                        eprintln!("trial {i}/{n}: {} acc={:.4}", r.label, r.accuracy);
-                    })),
-                    cache_path: cli.preset.cache_path.as_ref().map(PathBuf::from),
+            let cfg = GlobalSearchConfig {
+                objectives: cli.objectives.clone(),
+                ctx: ObjectiveContext {
+                    space: &space,
+                    device: &device,
+                    surrogate: sur.as_ref(),
+                    bits: cli.preset.local.bits,
+                    sparsity: cli.preset.local.target_sparsity,
                 },
-            )?;
+                nsga2: cli.preset.nsga2(),
+                trials: cli.preset.search.trials,
+                epochs: cli.preset.search.epochs,
+                seed: cli.preset.seed,
+                workers: cli.preset.search.workers,
+                accuracy_threshold: 0.0,
+                progress: Some(Box::new(|i, n, r: &TrialRecord| {
+                    eprintln!("trial {i}/{n}: {} acc={:.4}", r.label, r.accuracy);
+                })),
+                cache_path: cli.preset.cache_path.as_ref().map(PathBuf::from),
+            };
+            let outcome = if sharded {
+                let run_dir = PathBuf::from(
+                    cli.preset.run_dir.as_ref().expect("run_dir resolved above"),
+                );
+                coordinator::global_search_sharded(
+                    &ds,
+                    &space,
+                    cfg,
+                    &ShardedDispatch {
+                        run_dir: &run_dir,
+                        label: "search",
+                        shards: cli.preset.search.shards,
+                        timings: ShardTimings::default(),
+                    },
+                )?
+            } else {
+                let rt = rt.as_ref().expect("runtime loaded for non-sharded search");
+                coordinator::global_search(rt, &ds, &space, cfg)?
+            };
+            drop(fleet);
             std::fs::create_dir_all(&cli.out)?;
             TrialRecord::save_all(&outcome.records, &cli.out.join("trials.json"))?;
             println!(

@@ -4,6 +4,10 @@
 //! the search (genome sampling, crossover, mutation, data generation,
 //! weight init) derive from this so experiments replay exactly.
 
+use anyhow::{Context, Result};
+
+use super::Json;
+
 /// A seedable xoshiro256** generator.
 #[derive(Debug, Clone)]
 pub struct Rng {
@@ -132,6 +136,47 @@ impl Rng {
         self.shuffle(&mut idx);
         idx
     }
+
+    /// Serialise the exact generator state. The `u64` state words (and the
+    /// cached Box–Muller spare, when present) travel as 16-digit hex
+    /// strings because `Json::Num` is an `f64` and cannot carry 64 bits
+    /// losslessly — a shard worker replaying this stream in another
+    /// process must reproduce it bit for bit.
+    pub fn to_json(&self) -> Json {
+        let mut words: Vec<Json> = self
+            .s
+            .iter()
+            .map(|w| Json::Str(format!("{w:016x}")))
+            .collect();
+        if let Some(spare) = self.spare {
+            words.push(Json::Str(format!("{:016x}", spare.to_bits())));
+        }
+        Json::Arr(words)
+    }
+
+    /// Restore a generator serialised by [`Rng::to_json`].
+    pub fn from_json(j: &Json) -> Result<Rng> {
+        let words = j.items();
+        anyhow::ensure!(
+            words.len() == 4 || words.len() == 5,
+            "rng state must hold 4 words (+ optional spare), got {}",
+            words.len()
+        );
+        let word = |i: usize| -> Result<u64> {
+            let s = words[i]
+                .as_str()
+                .with_context(|| format!("rng state word {i} is not a string"))?;
+            u64::from_str_radix(s, 16).with_context(|| format!("rng state word {i}: `{s}`"))
+        };
+        Ok(Rng {
+            s: [word(0)?, word(1)?, word(2)?, word(3)?],
+            spare: if words.len() == 5 {
+                Some(f64::from_bits(word(4)?))
+            } else {
+                None
+            },
+        })
+    }
 }
 
 #[cfg(test)]
@@ -214,5 +259,31 @@ mod tests {
         let xs: Vec<u64> = (0..16).map(|_| a.next_u64()).collect();
         let ys: Vec<u64> = (0..16).map(|_| b.next_u64()).collect();
         assert_ne!(xs, ys);
+    }
+
+    /// A serialised generator replays the identical stream in another
+    /// process (the shard-worker contract), including mid-stream state
+    /// with a cached Box–Muller spare.
+    #[test]
+    fn json_state_round_trips_exactly() {
+        let mut r = Rng::new(77);
+        // advance into an interesting state: odd number of normals leaves
+        // a cached spare behind
+        for _ in 0..13 {
+            r.next_u64();
+        }
+        r.normal();
+        let text = r.to_json().to_string();
+        let mut back = Rng::from_json(&Json::parse(&text).unwrap()).unwrap();
+        // both draw normals first (exercises the spare), then raw words
+        for _ in 0..8 {
+            assert_eq!(r.normal().to_bits(), back.normal().to_bits());
+        }
+        for _ in 0..64 {
+            assert_eq!(r.next_u64(), back.next_u64());
+        }
+        // garbage is rejected, not panicked on
+        assert!(Rng::from_json(&Json::parse("[1,2]").unwrap()).is_err());
+        assert!(Rng::from_json(&Json::parse("[\"zz\",\"0\",\"0\",\"0\"]").unwrap()).is_err());
     }
 }

@@ -1,0 +1,144 @@
+//! Acceptance test for multi-process sharding: the micro pipeline run
+//! through real `snac-pack worker` *processes* (driver auto-spawns them)
+//! must produce bit-identical genomes, objectives, and selection to the
+//! single-process run — only wall-clock timings may differ.
+//!
+//! This is the process-level complement to the in-process protocol tests
+//! in `src/eval/shard.rs`: it exercises the actual binary (`worker`
+//! subcommand, `run.json` manifest, artifact resolution, worker-side
+//! surrogate retraining) over a real run directory.
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+use snac_pack::coordinator::TrialRecord;
+use snac_pack::nn::SearchSpace;
+
+fn out_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join("snac_sharded_itest")
+        .join(format!("{name}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Run the micro pipeline via the real binary; panics on failure and
+/// returns the combined stderr (stage logs).
+fn run_pipeline(out: &Path, extra: &[&str]) -> String {
+    let micro = [
+        "pipeline",
+        "--preset",
+        "quickstart",
+        "--set",
+        "trials=6",
+        "--set",
+        "population=3",
+        "--set",
+        "epochs=1",
+        "--set",
+        "n_train=640",
+        "--set",
+        "n_val=256",
+        "--set",
+        "n_test=256",
+        "--set",
+        "surrogate_size=512",
+        "--set",
+        "surrogate_epochs=20",
+        "--set",
+        "imp_iterations=3",
+        "--set",
+        "imp_epochs=1",
+        "--set",
+        "warmup_epochs=1",
+        "--out",
+    ];
+    let output = Command::new(env!("CARGO_BIN_EXE_snac-pack"))
+        .args(micro)
+        .arg(out)
+        .args(extra)
+        .output()
+        .expect("spawn snac-pack pipeline");
+    let stderr = String::from_utf8_lossy(&output.stderr).into_owned();
+    assert!(
+        output.status.success(),
+        "pipeline run failed ({extra:?}):\n{stderr}"
+    );
+    stderr
+}
+
+/// The trial database with live timings zeroed — everything else must be
+/// bit-identical across dispatch backends.
+fn canonical_trials(path: &Path, space: &SearchSpace) -> String {
+    let records = TrialRecord::load_all(path, space)
+        .unwrap_or_else(|e| panic!("loading {}: {e:#}", path.display()));
+    assert!(!records.is_empty(), "{} is empty", path.display());
+    let rows: Vec<snac_pack::util::Json> = records
+        .into_iter()
+        .map(|mut r| {
+            r.train_seconds = 0.0;
+            r.to_json()
+        })
+        .collect();
+    snac_pack::util::Json::Arr(rows).to_string()
+}
+
+#[test]
+fn worker_backed_micro_pipeline_is_bit_identical_to_single_process() {
+    let single = out_dir("single");
+    let sharded = out_dir("sharded");
+    let run_dir = out_dir("run");
+
+    run_pipeline(&single, &[]);
+    // --shards 2 auto-spawns two `snac-pack worker` processes over the
+    // run directory; --workers 2 keeps each worker's thread pool small
+    let log = run_pipeline(
+        &sharded,
+        &[
+            "--shards",
+            "2",
+            "--run-dir",
+            run_dir.to_str().unwrap(),
+            "--workers",
+            "2",
+        ],
+    );
+
+    let space = SearchSpace::table1();
+    for db in ["trials_nac.json", "trials_snac.json"] {
+        assert_eq!(
+            canonical_trials(&single.join(db), &space),
+            canonical_trials(&sharded.join(db), &space),
+            "{db}: sharded trial database must be bit-identical (timings excluded)"
+        );
+    }
+    // the selected architectures and their synthesis land in the tables —
+    // identical trials must yield byte-identical reports
+    for report in ["table2.md", "table3.md"] {
+        let a = std::fs::read_to_string(single.join(report)).unwrap();
+        let b = std::fs::read_to_string(sharded.join(report)).unwrap();
+        assert_eq!(a, b, "{report} differs between dispatch backends");
+    }
+    // the worker fleet actually ran: the driver logged its spawn and the
+    // sharded dispatch summary for every sharded stage, and the workers
+    // reported serving shards on shutdown (consumed protocol files are
+    // cleaned up, so the log is the evidence)
+    assert!(
+        log.contains("spawned 2 local worker(s)"),
+        "driver spawned its fleet:\n{log}"
+    );
+    for stage in ["search-nac", "search-snac"] {
+        assert!(
+            log.contains(&format!("[{stage}] sharded dispatch:")),
+            "no sharded dispatch summary for stage {stage}:\n{log}"
+        );
+    }
+    assert!(
+        log.contains("shutdown: served"),
+        "workers reported work on shutdown:\n{log}"
+    );
+
+    for dir in [&single, &sharded, &run_dir] {
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

@@ -379,3 +379,145 @@ fn power_and_tanh() {
     let out = run(&text, &[(&[0.5], &[1])]);
     assert!((out[0] - 0.5f32.tanh()).abs() < 1e-6);
 }
+
+/// Compile and execute expecting failure; returns the error message.
+fn run_err(text: &str, args: &[(&[f32], &[usize])]) -> String {
+    let proto = HloModuleProto::from_text(text).expect("parse");
+    let client = PjRtClient::cpu().expect("client");
+    let exe = client
+        .compile(&XlaComputation::from_proto(&proto))
+        .expect("compile");
+    let buffers: Vec<xla::PjRtBuffer> = args
+        .iter()
+        .map(|(data, dims)| {
+            client
+                .buffer_from_host_buffer::<f32>(data, dims, None)
+                .expect("buffer")
+        })
+        .collect();
+    exe.execute_b(&buffers)
+        .expect_err("execution must fail, not panic")
+        .to_string()
+}
+
+#[test]
+fn zero_size_dimensions_broadcast_and_reshape() {
+    // broadcasting an empty operand into an empty output is a no-op, not
+    // a panic (an empty generation shard produces exactly these shapes)
+    let text = entry(
+        "  %a = f32[0] parameter(0)\n  \
+         ROOT %b = f32[3,0] broadcast(%a), dimensions={1}\n",
+        "a: f32[0]",
+        "f32[3,0]",
+    );
+    assert_eq!(run(&text, &[(&[], &[0])]), Vec::<f32>::new());
+
+    // reshape between equally-empty shapes
+    let text = entry(
+        "  %a = f32[2,0] parameter(0)\n  ROOT %r = f32[0,4] reshape(%a)\n",
+        "a: f32[2,0]",
+        "f32[0,4]",
+    );
+    assert_eq!(run(&text, &[(&[], &[2, 0])]), Vec::<f32>::new());
+}
+
+#[test]
+fn zero_size_concatenate_contributes_nothing() {
+    // an empty operand in the middle of a concat must not shift data
+    let text = entry(
+        "  %a = f32[2,1] parameter(0)\n  %e = f32[2,0] parameter(1)\n  \
+         %b = f32[2,2] parameter(2)\n  \
+         ROOT %c = f32[2,3] concatenate(%a, %e, %b), dimensions={1}\n",
+        "a: f32[2,1], e: f32[2,0], b: f32[2,2]",
+        "f32[2,3]",
+    );
+    assert_eq!(
+        run(
+            &text,
+            &[
+                (&[1.0, 2.0], &[2, 1]),
+                (&[], &[2, 0]),
+                (&[10.0, 11.0, 20.0, 21.0], &[2, 2]),
+            ]
+        ),
+        vec![1.0, 10.0, 11.0, 2.0, 20.0, 21.0]
+    );
+
+    // all-empty concat along the concat dim yields the other operand
+    let text = entry(
+        "  %e = f32[0] parameter(0)\n  %b = f32[2] parameter(1)\n  \
+         ROOT %c = f32[2] concatenate(%e, %b), dimensions={0}\n",
+        "e: f32[0], b: f32[2]",
+        "f32[2]",
+    );
+    assert_eq!(run(&text, &[(&[], &[0]), (&[5.0, 6.0], &[2])]), vec![5.0, 6.0]);
+}
+
+#[test]
+fn single_element_reduce_folds_once() {
+    let text = "HloModule t\n\n\
+                %add (p0: f32[], p1: f32[]) -> f32[] {\n  \
+                %p0 = f32[] parameter(0)\n  %p1 = f32[] parameter(1)\n  \
+                ROOT %r = f32[] add(%p0, %p1)\n}\n\n\
+                ENTRY %main (a: f32[1]) -> f32[] {\n  \
+                %a = f32[1] parameter(0)\n  %z = f32[] constant(10)\n  \
+                ROOT %s = f32[] reduce(%a, %z), dimensions={0}, to_apply=%add\n}\n";
+    // init ⊕ the single element, exactly once
+    assert_eq!(run(text, &[(&[32.0], &[1])]), vec![42.0]);
+
+    // keeping a dimension of size one: reduce the singleton axis away
+    let text = "HloModule t\n\n\
+                %max (p0: f32[], p1: f32[]) -> f32[] {\n  \
+                %p0 = f32[] parameter(0)\n  %p1 = f32[] parameter(1)\n  \
+                ROOT %r = f32[] maximum(%p0, %p1)\n}\n\n\
+                ENTRY %main (a: f32[1,3]) -> f32[3] {\n  \
+                %a = f32[1,3] parameter(0)\n  %z = f32[] constant(-10)\n  \
+                ROOT %s = f32[3] reduce(%a, %z), dimensions={0}, to_apply=%max\n}\n";
+    assert_eq!(run(text, &[(&[3.0, -20.0, 7.0], &[1, 3])]), vec![3.0, -10.0, 7.0]);
+}
+
+#[test]
+fn out_of_range_strided_slice_is_an_error_naming_the_op() {
+    // limit beyond the dimension
+    let text = entry(
+        "  %a = f32[4] parameter(0)\n  \
+         ROOT %sl = f32[7] slice(%a), slice={[2:9:1]}\n",
+        "a: f32[4]",
+        "f32[7]",
+    );
+    let err = run_err(&text, &[(&[1.0, 2.0, 3.0, 4.0], &[4])]);
+    assert!(err.contains("%sl"), "error names the op: {err}");
+    assert!(err.contains("out of bounds"), "{err}");
+
+    // start beyond the limit
+    let text = entry(
+        "  %a = f32[4] parameter(0)\n  \
+         ROOT %sl = f32[0] slice(%a), slice={[3:1:1]}\n",
+        "a: f32[4]",
+        "f32[0]",
+    );
+    let err = run_err(&text, &[(&[1.0, 2.0, 3.0, 4.0], &[4])]);
+    assert!(err.contains("%sl"), "error names the op: {err}");
+
+    // a declared output shape that disagrees with the produced extent
+    let text = entry(
+        "  %a = f32[6] parameter(0)\n  \
+         ROOT %sl = f32[4] slice(%a), slice={[0:6:2]}\n",
+        "a: f32[6]",
+        "f32[4]",
+    );
+    let err = run_err(&text, &[(&[0.0; 6], &[6])]);
+    assert!(err.contains("%sl"), "error names the op: {err}");
+
+    // sanity: the in-range strided sibling still evaluates
+    let text = entry(
+        "  %a = f32[6] parameter(0)\n  \
+         ROOT %sl = f32[3] slice(%a), slice={[0:6:2]}\n",
+        "a: f32[6]",
+        "f32[3]",
+    );
+    assert_eq!(
+        run(&text, &[(&[0.0, 1.0, 2.0, 3.0, 4.0, 5.0], &[6])]),
+        vec![0.0, 2.0, 4.0]
+    );
+}
