@@ -23,6 +23,11 @@
 //!    shard protocol (file-based queue + lease claims, worker loops on
 //!    threads), verifying the trial stream stays identical and recording
 //!    the protocol's throughput next to the in-process numbers.
+//! 6. **Surrogate batching + serving** — rows/sec of the per-trial
+//!    (one padded execution per genome) vs generation-batched
+//!    (⌈N/`SUR_BATCH`⌉ executions) surrogate paths, and requests/sec of
+//!    the `snac-pack serve` HTTP front with concurrent clients over the
+//!    micro-batching engine.
 //!
 //! Writes `BENCH_search.json` for the per-commit perf trajectory.
 
@@ -42,6 +47,8 @@ use snac_pack::objectives::ObjectiveKind;
 use snac_pack::runtime::runtime::arg;
 use snac_pack::runtime::Runtime;
 use snac_pack::search::Nsga2Config;
+use snac_pack::serve::{http, EngineConfig, ServeContext, SurrogateEngine};
+use snac_pack::surrogate::{genome_features, SurrogateParams, SurrogatePredictor};
 use snac_pack::util::{Json, Rng};
 
 const TRIALS: usize = 48;
@@ -425,6 +432,158 @@ fn bench_interpreter() -> anyhow::Result<Json> {
     ]))
 }
 
+/// Phase 6a: the per-generation surrogate win — one padded execution
+/// per genome (the old per-trial path) vs ⌈N/`SUR_BATCH`⌉ batched
+/// executions, same rows, same (untrained but deterministic) weights.
+fn bench_surrogate_batching() -> anyhow::Result<Json> {
+    let dir = snac_pack::runtime::artifact_dir()
+        .ok_or_else(|| anyhow::anyhow!("no artifact/fixture manifest in this tree"))?;
+    let rt = Runtime::load(&dir)?;
+    let mut rng = Rng::new(42);
+    let params = SurrogateParams::init(&mut rng);
+    const ROWS: usize = 96;
+    let space = SearchSpace::table1();
+    let mut feats: Vec<Vec<f32>> = Vec::new();
+    while feats.len() < ROWS {
+        let f = genome_features(&space.sample(&mut rng), &space, 8, 0.5);
+        if !feats.contains(&f) {
+            feats.push(f);
+        }
+    }
+
+    let per_trial = SurrogatePredictor::new(&rt, params.clone());
+    let t0 = Instant::now();
+    for f in &feats {
+        std::hint::black_box(per_trial.predict_batch(std::slice::from_ref(f))?);
+    }
+    let per_trial_secs = t0.elapsed().as_secs_f64();
+    assert_eq!(per_trial.executions(), ROWS);
+
+    let batched = SurrogatePredictor::new(&rt, params.clone());
+    let t0 = Instant::now();
+    std::hint::black_box(batched.predict_batch(&feats)?);
+    let batched_secs = t0.elapsed().as_secs_f64();
+    assert_eq!(batched.executions(), ROWS.div_ceil(nn::SUR_BATCH));
+
+    println!(
+        "bench search/surrogate_per_trial {:>9}  {:>7.1} rows/s  ({ROWS} executions)",
+        common::fmt(per_trial_secs),
+        ROWS as f64 / per_trial_secs
+    );
+    println!(
+        "bench search/surrogate_batched  {:>10}  {:>7.1} rows/s  ({} executions, {:.1}x)",
+        common::fmt(batched_secs),
+        ROWS as f64 / batched_secs,
+        batched.executions(),
+        per_trial_secs / batched_secs
+    );
+    Ok(Json::obj(vec![
+        ("rows", Json::Num(ROWS as f64)),
+        ("per_trial_seconds", Json::Num(per_trial_secs)),
+        ("per_trial_executions", Json::Num(per_trial.executions() as f64)),
+        ("per_trial_rows_per_sec", Json::Num(ROWS as f64 / per_trial_secs)),
+        ("batched_seconds", Json::Num(batched_secs)),
+        ("batched_executions", Json::Num(batched.executions() as f64)),
+        ("batched_rows_per_sec", Json::Num(ROWS as f64 / batched_secs)),
+        ("speedup", Json::Num(per_trial_secs / batched_secs)),
+    ]))
+}
+
+/// Phase 6b: `snac-pack serve` request throughput — concurrent clients
+/// hammering `/estimate` over loopback, the micro-batching engine
+/// coalescing their rows behind the thread-per-connection front.
+fn bench_serve() -> anyhow::Result<Json> {
+    let dir = snac_pack::runtime::artifact_dir()
+        .ok_or_else(|| anyhow::anyhow!("no artifact/fixture manifest in this tree"))?;
+    let rt = Runtime::load(&dir)?;
+    let mut rng = Rng::new(4242);
+    let params = SurrogateParams::init(&mut rng);
+    let predictor = SurrogatePredictor::new(&rt, params);
+    let engine = SurrogateEngine::new(
+        &predictor,
+        EngineConfig {
+            deadline: Duration::from_millis(2),
+            ..Default::default()
+        },
+    );
+    let space = SearchSpace::table1();
+    let device = FpgaDevice::vu13p();
+    let ctx = ServeContext {
+        engine: &engine,
+        space: &space,
+        device: &device,
+        bits: 8,
+        sparsity: 0.5,
+        platform: rt.platform(),
+    };
+    let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?.to_string();
+
+    const CLIENTS: usize = 4;
+    const PER_CLIENT: usize = 24;
+    let genomes = distinct_genomes(CLIENTS * PER_CLIENT, 77);
+
+    let ctx_ref = &ctx;
+    let addr_ref = addr.as_str();
+    let genomes_ref = genomes.as_slice();
+    let mut secs = 0.0f64;
+    std::thread::scope(|s| -> anyhow::Result<()> {
+        let server = s.spawn(move || snac_pack::serve::serve(ctx_ref, listener));
+        // drive the clients inside a closure so the shutdown request
+        // runs on *every* exit path — otherwise a failed client would
+        // leave the accept loop alive and deadlock the scope join
+        let mut drive_clients = || -> anyhow::Result<()> {
+            let (status, _) = http::request(addr_ref, "GET", "/healthz", None)?;
+            anyhow::ensure!(status == 200, "healthz failed");
+            let t0 = Instant::now();
+            let handles: Vec<_> = (0..CLIENTS)
+                .map(|c| {
+                    s.spawn(move || -> anyhow::Result<()> {
+                        for g in &genomes_ref[c * PER_CLIENT..(c + 1) * PER_CLIENT] {
+                            let body = Json::obj(vec![("genome", g.to_json())]).to_string();
+                            let (status, resp) =
+                                http::request(addr_ref, "POST", "/estimate", Some(&body))?;
+                            anyhow::ensure!(status == 200, "estimate failed: {resp}");
+                        }
+                        Ok(())
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().expect("client thread")?;
+            }
+            secs = t0.elapsed().as_secs_f64();
+            Ok(())
+        };
+        let clients = drive_clients();
+        let shutdown = http::request(addr_ref, "POST", "/shutdown", None);
+        let server_result = server.join().expect("server thread");
+        clients?;
+        let (status, _) = shutdown?;
+        anyhow::ensure!(status == 200, "shutdown failed");
+        server_result?;
+        Ok(())
+    })?;
+
+    let requests = CLIENTS * PER_CLIENT;
+    println!(
+        "bench search/serve_requests     {:>10}  {:>7.1} reqs/s  ({CLIENTS} clients, \
+         {} flushes, {} executions)",
+        common::fmt(secs),
+        requests as f64 / secs,
+        engine.flushes(),
+        predictor.executions()
+    );
+    Ok(Json::obj(vec![
+        ("requests", Json::Num(requests as f64)),
+        ("clients", Json::Num(CLIENTS as f64)),
+        ("seconds", Json::Num(secs)),
+        ("requests_per_sec", Json::Num(requests as f64 / secs)),
+        ("flushes", Json::Num(engine.flushes() as f64)),
+        ("executions", Json::Num(predictor.executions() as f64)),
+    ]))
+}
+
 fn main() -> anyhow::Result<()> {
     println!("== SNAC-Pack search-throughput bench ==");
     println!(
@@ -572,6 +731,10 @@ fn main() -> anyhow::Result<()> {
     }
     println!("determinism: sharded trial streams identical to the in-process pool");
 
+    // ---- phase 6: surrogate batching + the estimation service ----
+    let surrogate_batching = bench_surrogate_batching()?;
+    let serve = bench_serve()?;
+
     let report = Json::obj(vec![
         ("bench", Json::Str("search_throughput".to_string())),
         ("interpreter", interpreter),
@@ -610,6 +773,8 @@ fn main() -> anyhow::Result<()> {
             ]),
         ),
         ("sharded", Json::Arr(sharded_results)),
+        ("surrogate_batching", surrogate_batching),
+        ("serve", serve),
     ]);
     std::fs::write("BENCH_search.json", report.to_string())?;
     println!("wrote BENCH_search.json");

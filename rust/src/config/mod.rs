@@ -49,6 +49,27 @@ pub struct SearchBudget {
     pub shards: usize,
 }
 
+/// `snac-pack serve` — the estimation service's knobs.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// TCP port to bind on 127.0.0.1 (`--port`; `0` = ephemeral, the
+    /// chosen port is printed on startup).
+    pub port: u16,
+    /// Micro-batching flush deadline in milliseconds
+    /// (`--batch-deadline-ms`): how long the first queued estimate waits
+    /// for co-travellers before a partial batch executes.
+    pub batch_deadline_ms: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            port: 7878,
+            batch_deadline_ms: 2,
+        }
+    }
+}
+
 /// A full experiment preset.
 #[derive(Debug, Clone)]
 pub struct Preset {
@@ -77,6 +98,8 @@ pub struct Preset {
     /// spawn none (workers are managed externally, e.g. on other
     /// terminals or — in the future — other machines).
     pub spawn_workers: Option<usize>,
+    /// Estimation-service settings (`snac-pack serve`).
+    pub serve: ServeConfig,
 }
 
 impl Preset {
@@ -104,6 +127,7 @@ impl Preset {
                 cache_path: None,
                 run_dir: None,
                 spawn_workers: None,
+                serve: ServeConfig::default(),
             }),
             "ci" => Ok(Preset {
                 name: name.into(),
@@ -131,6 +155,7 @@ impl Preset {
                 cache_path: None,
                 run_dir: None,
                 spawn_workers: None,
+                serve: ServeConfig::default(),
             }),
             "quickstart" => Ok(Preset {
                 name: name.into(),
@@ -162,6 +187,7 @@ impl Preset {
                 cache_path: None,
                 run_dir: None,
                 spawn_workers: None,
+                serve: ServeConfig::default(),
             }),
             other => bail!("unknown preset `{other}` (paper | ci | quickstart)"),
         }
@@ -194,6 +220,11 @@ impl Preset {
             "target_sparsity" => self.local.target_sparsity = value.parse()?,
             "seed" => self.seed = value.parse()?,
             "cache_path" => self.cache_path = Some(value.to_string()),
+            "port" => self.serve.port = value.parse().context("port expects a u16")?,
+            "batch_deadline_ms" => {
+                self.serve.batch_deadline_ms =
+                    value.parse().context("batch_deadline_ms expects an integer")?
+            }
             "shards" => self.search.shards = uint()?,
             "run_dir" => self.run_dir = Some(value.to_string()),
             "spawn_workers" => {
@@ -213,7 +244,7 @@ impl Preset {
     /// over `by_name` — so the codec's surface is the override surface by
     /// construction, and fields outside it (e.g. surrogate learning rate)
     /// stay pinned to the named preset on both ends.
-    const OVERRIDE_KEYS: [&str; 18] = [
+    const OVERRIDE_KEYS: [&str; 20] = [
         "trials",
         "population",
         "epochs",
@@ -229,6 +260,8 @@ impl Preset {
         "target_sparsity",
         "seed",
         "cache_path",
+        "port",
+        "batch_deadline_ms",
         "shards",
         "run_dir",
         "spawn_workers",
@@ -252,6 +285,8 @@ impl Preset {
             "target_sparsity" => Some(format!("{}", self.local.target_sparsity)),
             "seed" => Some(self.seed.to_string()),
             "cache_path" => self.cache_path.clone(),
+            "port" => Some(self.serve.port.to_string()),
+            "batch_deadline_ms" => Some(self.serve.batch_deadline_ms.to_string()),
             "shards" => s(self.search.shards),
             "run_dir" => self.run_dir.clone(),
             "spawn_workers" => self.spawn_workers.map(|v| v.to_string()),
@@ -335,8 +370,13 @@ mod tests {
         assert_eq!(p.spawn_workers, Some(2));
         p.set("spawn_workers", "auto").unwrap();
         assert_eq!(p.spawn_workers, None);
+        p.set("port", "0").unwrap();
+        p.set("batch_deadline_ms", "25").unwrap();
+        assert_eq!(p.serve.port, 0);
+        assert_eq!(p.serve.batch_deadline_ms, 25);
         assert!(p.set("bogus", "1").is_err());
         assert!(p.set("spawn_workers", "lots").is_err());
+        assert!(p.set("port", "70000").is_err(), "port must fit a u16");
     }
 
     /// The run.json codec: every override survives the round trip, and
@@ -355,6 +395,8 @@ mod tests {
         p.set("cache_path", "/tmp/c.json").unwrap();
         p.set("shards", "2").unwrap();
         p.set("run_dir", "/tmp/rd").unwrap();
+        p.set("port", "9191").unwrap();
+        p.set("batch_deadline_ms", "7").unwrap();
         let text = p.to_json().to_string();
         let back = Preset::from_json(&crate::util::Json::parse(&text).unwrap()).unwrap();
         assert_eq!(back.name, "quickstart");
@@ -371,6 +413,8 @@ mod tests {
         assert_eq!(back.seed, 99);
         assert_eq!(back.cache_path.as_deref(), Some("/tmp/c.json"));
         assert_eq!(back.run_dir.as_deref(), Some("/tmp/rd"));
+        assert_eq!(back.serve.port, 9191);
+        assert_eq!(back.serve.batch_deadline_ms, 7);
         // garbage is rejected with context
         assert!(Preset::from_json(&crate::util::Json::parse("{}").unwrap()).is_err());
     }

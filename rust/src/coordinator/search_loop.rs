@@ -538,6 +538,124 @@ mod tests {
         }
     }
 
+    /// Acceptance: the generation-batched surrogate path produces a
+    /// bit-identical trial database to the per-trial path, while
+    /// executing ≤ ⌈generation/`SUR_BATCH`⌉ `surrogate_predict` calls
+    /// per generation (the per-trial path pays one padded execution per
+    /// unique genome).
+    #[test]
+    fn batched_surrogate_objectives_match_per_trial_path() {
+        use crate::hls::HlsConfig;
+        use crate::surrogate::{train_surrogate, SurrogatePredictor, SurrogateTrainConfig};
+
+        let art = crate::runtime::artifact_dir().expect("no artifact manifest found");
+        let rt = Runtime::load(&art).unwrap();
+        let ds = Dataset::generate(640, 256, 256, 3);
+        let space = SearchSpace::table1();
+        let device = FpgaDevice::vu13p();
+        let sur_cfg = SurrogateTrainConfig {
+            dataset_size: 256,
+            epochs: 10,
+            ..Default::default()
+        };
+        let (params, _mse) =
+            train_surrogate(&rt, &space, &sur_cfg, &HlsConfig::default(), &device).unwrap();
+
+        /// Wrapper that suppresses `prepare` — exactly the pre-batching
+        /// per-trial dispatch (every trial pads its own execution).
+        struct PerTrial<'a>(SupernetEvaluator<'a>);
+        impl TrialEvaluator for PerTrial<'_> {
+            fn evaluate(&self, genome: &Genome, rng: &mut Rng) -> Result<TrialEvaluation> {
+                self.0.evaluate(genome, rng)
+            }
+        }
+
+        let run = |batched: bool| -> (SearchOutcome, usize, usize) {
+            let sur = SurrogatePredictor::new(&rt, params.clone());
+            let objectives = ObjectiveKind::snac_set();
+            let ctx = ObjectiveContext {
+                space: &space,
+                device: &device,
+                surrogate: Some(&sur),
+                bits: 8,
+                sparsity: 0.5,
+            };
+            let train = TrainConfig {
+                epochs: 1,
+                ..Default::default()
+            };
+            let evaluator = SupernetEvaluator::new(&rt, &ds, &space, &objectives, &ctx, train);
+            let cfg = || SearchLoopConfig {
+                nsga2: Nsga2Config {
+                    population: 4,
+                    ..Default::default()
+                },
+                trials: 8,
+                seed: 42,
+                accuracy_threshold: 0.0,
+                progress: None,
+            };
+            let outcome = if batched {
+                let pool = ParallelEvaluator::new(evaluator, 2);
+                global_search_with(&pool, &space, cfg()).unwrap()
+            } else {
+                // serial, so two genomes that share a feature vector
+                // (training hyperparameters are not surrogate features)
+                // can never race past the memo and double-execute —
+                // keeping the execution count deterministic
+                let pool = ParallelEvaluator::new(PerTrial(evaluator), 1);
+                global_search_with(&pool, &space, cfg()).unwrap()
+            };
+            (outcome, sur.executions(), sur.cache_len())
+        };
+
+        let (batched, batched_execs, batched_rows) = run(true);
+        let (per_trial, per_trial_execs, per_trial_rows) = run(false);
+
+        // bit-identical trial databases (live timings zeroed)
+        let db = |outcome: &SearchOutcome| -> String {
+            let rows: Vec<Json> = outcome
+                .records
+                .iter()
+                .map(|r| {
+                    let mut r = r.clone();
+                    r.train_seconds = 0.0;
+                    r.to_json()
+                })
+                .collect();
+            Json::Arr(rows).to_string()
+        };
+        assert_eq!(
+            db(&batched),
+            db(&per_trial),
+            "batched surrogate objectives must not change the trial database"
+        );
+        assert_eq!(batched.front, per_trial.front);
+        assert_eq!(batched.selected, per_trial.selected);
+
+        // the execution-count probe: the batched path coalesces each
+        // generation into ⌈generation/SUR_BATCH⌉ executions; the
+        // per-trial path pays one execution per unique genome
+        let generations = batched.records.iter().map(|r| r.generation).max().unwrap() + 1;
+        let population = 4usize;
+        assert!(
+            batched_execs <= generations * population.div_ceil(crate::nn::SUR_BATCH),
+            "batched path ran {batched_execs} surrogate executions over \
+             {generations} generations"
+        );
+        assert_eq!(batched_rows, per_trial_rows, "identical unique feature rows");
+        assert_eq!(
+            per_trial_execs, per_trial_rows,
+            "per-trial path pays one padded execution per unique genome"
+        );
+        assert!(batched_execs <= per_trial_execs);
+        // the estimates actually flowed into the objective vectors
+        for r in &batched.records {
+            assert!(r.est_avg_resources.is_some());
+            assert_eq!(r.objectives.len(), 3);
+        }
+    }
+
     /// End-to-end NAC-objective search on a tiny budget (uses the real
     /// runtime + dataset; one test to amortise artifact compilation).
     /// Runs the first search with a worker pool and the replay serially,

@@ -187,6 +187,20 @@ impl EvalRequest {
 pub trait TrialEvaluator: Sync {
     /// Evaluate one candidate with its pre-forked trial RNG.
     fn evaluate(&self, genome: &Genome, rng: &mut Rng) -> Result<TrialEvaluation>;
+
+    /// Batch-stage shared work for a whole generation before its trials
+    /// are dispatched. The pool calls this once per batch with the
+    /// collapsed (deduplicated, uncached) genome list, on the driver
+    /// thread, before any `evaluate` runs. Implementations must not
+    /// change what `evaluate` returns — only how cheaply it gets there
+    /// (e.g. [`SupernetEvaluator`] prefetches the generation's surrogate
+    /// estimates in ⌈N/`SUR_BATCH`⌉ executions instead of N per-trial
+    /// ones). Pools treat a failure as a skipped optimisation and fall
+    /// back to per-trial work, which surfaces the same error under the
+    /// normal batch error contract. The default does nothing.
+    fn prepare(&self, _genomes: &[Genome]) -> Result<()> {
+        Ok(())
+    }
 }
 
 /// A driver-side evaluation pool: something that can score a whole

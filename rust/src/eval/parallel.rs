@@ -195,6 +195,20 @@ impl<E: TrialEvaluator> ParallelEvaluator<E> {
             pending.push_back((pending.len(), req.genome.clone(), req.rng.clone()));
         }
 
+        // one generation-level staging pass over the collapsed genome
+        // list (e.g. the batched surrogate prefetch) before any trial
+        // dispatches. Staging is best-effort: on failure we fall through
+        // to per-trial work, which hits the same underlying error — so
+        // the batch error contract (cached siblings still stream, the
+        // first dispatch-order error propagates after the batch drains)
+        // is exactly the pre-batching behaviour.
+        if !pending.is_empty() {
+            let genomes: Vec<Genome> = pending.iter().map(|(_, g, _)| g.clone()).collect();
+            if let Err(e) = self.inner.prepare(&genomes) {
+                eprintln!("[eval] batch staging failed, falling back to per-trial: {e:#}");
+            }
+        }
+
         let mut errors: Vec<(usize, anyhow::Error)> = Vec::new();
         let mut next = 0usize;
         let workers = self.workers.min(pending.len().max(1));

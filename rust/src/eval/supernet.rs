@@ -53,6 +53,14 @@ impl<'a> SupernetEvaluator<'a> {
 }
 
 impl TrialEvaluator for SupernetEvaluator<'_> {
+    /// Prefetch the whole generation's surrogate estimates in
+    /// ⌈N/`SUR_BATCH`⌉ batched executions (a no-op for objective sets
+    /// without surrogate terms); the per-trial `ctx.evaluate` calls in
+    /// [`evaluate`](Self::evaluate) then hit the predictor memo.
+    fn prepare(&self, genomes: &[Genome]) -> Result<()> {
+        self.ctx.prefetch(self.objectives, genomes).map(|_| ())
+    }
+
     fn evaluate(&self, genome: &Genome, rng: &mut Rng) -> Result<TrialEvaluation> {
         let t0 = Instant::now();
         let inputs = SupernetInputs::compile(genome, self.space);

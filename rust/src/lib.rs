@@ -32,6 +32,7 @@ pub mod pareto;
 pub mod report;
 pub mod runtime;
 pub mod search;
+pub mod serve;
 pub mod surrogate;
 pub mod trainer;
 pub mod util;

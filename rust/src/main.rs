@@ -8,12 +8,15 @@
 //! snac-pack search    --preset ci --objectives acc,bops  # one global search
 //! snac-pack search    --shards 4 --run-dir /tmp/run      # multi-process dispatch
 //! snac-pack worker    --run-dir /tmp/run                 # serve shards for a driver
+//! snac-pack serve     --preset ci --port 7878            # surrogate estimation service
 //! snac-pack surrogate --preset ci                        # surrogate train/eval
 //! snac-pack synth                                        # Table-3 style synthesis demo
 //! snac-pack info                                         # runtime/artifact info
 //! ```
 
+use std::net::TcpListener;
 use std::path::{Path, PathBuf};
+use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
@@ -25,9 +28,10 @@ use snac_pack::eval::{
     TrialEvaluator, WorkerOptions,
 };
 use snac_pack::hls::{synthesize, FpgaDevice, HlsConfig, NetworkSpec};
-use snac_pack::nn::SearchSpace;
+use snac_pack::nn::{Genome, SearchSpace};
 use snac_pack::objectives::{ObjectiveContext, ObjectiveKind};
 use snac_pack::runtime::Runtime;
+use snac_pack::serve::{self, EngineConfig, ServeContext, SurrogateEngine};
 use snac_pack::surrogate::{train_surrogate, SurrogateParams, SurrogatePredictor};
 use snac_pack::trainer::TrainConfig;
 use snac_pack::util::Json;
@@ -61,10 +65,11 @@ fn parse_cli() -> Result<Cli> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let Some(command) = args.first().cloned() else {
         bail!(
-            "usage: snac-pack <pipeline|search|worker|surrogate|synth|info> \
+            "usage: snac-pack <pipeline|search|worker|serve|surrogate|synth|info> \
              [--preset paper|ci|quickstart] [--out DIR] [--artifacts DIR] \
              [--objectives acc,bops] [--workers N] [--cache-path FILE] \
-             [--shards N] [--run-dir DIR] [--set key=value ...]\n\
+             [--shards N] [--run-dir DIR] [--port N] [--batch-deadline-ms N] \
+             [--set key=value ...]\n\
              --preset picks the base regardless of position; \
              --workers/--cache-path/--set overrides then apply left to right\n\
              --cache-path persists the evaluation cache across runs: a \
@@ -72,7 +77,10 @@ fn parse_cli() -> Result<Cli> {
              --shards N dispatches each generation to N shard files served \
              by `snac-pack worker` processes over --run-dir (auto-spawned \
              locally unless --set spawn_workers=0); results are \
-             bit-identical to the in-process run"
+             bit-identical to the in-process run\n\
+             serve exposes the trained surrogate as an HTTP estimation \
+             service on 127.0.0.1:--port (0 = ephemeral), micro-batching \
+             concurrent requests with a --batch-deadline-ms flush deadline"
         );
     };
     let mut preset = Preset::by_name("ci")?;
@@ -122,6 +130,12 @@ fn parse_cli() -> Result<Cli> {
             "--run-dir" => preset
                 .set("run_dir", value()?)
                 .context("--run-dir expects a directory path")?,
+            "--port" => preset
+                .set("port", value()?)
+                .context("--port expects a TCP port")?,
+            "--batch-deadline-ms" => preset
+                .set("batch_deadline_ms", value()?)
+                .context("--batch-deadline-ms expects milliseconds")?,
             "--set" => {
                 let kv = value()?;
                 let (k, v) = kv
@@ -332,6 +346,15 @@ fn worker_main(run_dir: &Path, workers_flag: Option<usize>) -> Result<()> {
                 ..Default::default()
             },
         );
+        // mirror the in-process pool's generation staging: one batched
+        // surrogate prefetch for the whole shard (⌈N/SUR_BATCH⌉
+        // executions) instead of one padded execution per trial. Best-
+        // effort like the pool's: on failure the per-trial path below
+        // surfaces the same error per request.
+        let genomes: Vec<Genome> = requests.iter().map(|r| r.genome.clone()).collect();
+        if let Err(e) = evaluator.prepare(&genomes) {
+            eprintln!("[worker {wid}] shard staging failed, falling back to per-trial: {e:#}");
+        }
         // the driver already collapsed duplicates and cache hits out of
         // the shard, so a plain ordered fan-out suffices; per-request
         // errors travel back to the driver individually
@@ -497,6 +520,60 @@ fn main() -> Result<()> {
                 let r = &outcome.records[i];
                 println!("  front: {} acc={:.4} obj={:?}", r.label, r.accuracy, r.objectives);
             }
+        }
+        "serve" => {
+            // The estimation service: train the surrogate once (exactly
+            // the search's protocol, so served numbers match search-time
+            // estimates), then expose it over HTTP with the
+            // micro-batching engine coalescing concurrent requests.
+            let rt = Runtime::load(&cli.artifacts_dir())?;
+            let space = SearchSpace::table1();
+            let device = FpgaDevice::vu13p();
+            let (params, mse) = train_surrogate(
+                &rt,
+                &space,
+                &cli.preset.surrogate,
+                &HlsConfig::default(),
+                &device,
+            )?;
+            eprintln!("[serve] surrogate trained (MSE {mse:.5})");
+            let predictor = SurrogatePredictor::new(&rt, params);
+            let engine = SurrogateEngine::new(
+                &predictor,
+                EngineConfig {
+                    deadline: Duration::from_millis(cli.preset.serve.batch_deadline_ms),
+                    ..Default::default()
+                },
+            );
+            let listener = TcpListener::bind(("127.0.0.1", cli.preset.serve.port))
+                .with_context(|| format!("binding 127.0.0.1:{}", cli.preset.serve.port))?;
+            let addr = listener.local_addr()?;
+            let ctx = ServeContext {
+                engine: &engine,
+                space: &space,
+                device: &device,
+                bits: cli.preset.local.bits,
+                sparsity: cli.preset.local.target_sparsity,
+                platform: rt.platform(),
+            };
+            // the smoke client scrapes this line for the ephemeral port —
+            // flush it through before blocking in the accept loop
+            println!("snac-pack serve: listening on http://{addr}");
+            use std::io::Write as _;
+            std::io::stdout().flush().ok();
+            eprintln!(
+                "[serve] endpoints: GET /healthz | POST /estimate | \
+                 POST /estimate/batch | POST /shutdown \
+                 (batch deadline {}ms, device {})",
+                cli.preset.serve.batch_deadline_ms, device.name
+            );
+            serve::serve(&ctx, listener)?;
+            eprintln!(
+                "[serve] shutdown: {} flushes, {} rows, {} interpreter executions",
+                engine.flushes(),
+                engine.rows_flushed(),
+                predictor.executions()
+            );
         }
         "surrogate" => {
             let rt = Runtime::load(&cli.artifacts_dir())?;

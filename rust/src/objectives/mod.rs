@@ -96,6 +96,31 @@ pub struct ObjectiveContext<'a> {
 }
 
 impl<'a> ObjectiveContext<'a> {
+    /// Batch-prefetch surrogate estimates for a whole generation.
+    ///
+    /// When `kinds` needs the surrogate, this predicts every genome's
+    /// feature vector at this context's deployment point in
+    /// ⌈unique/`SUR_BATCH`⌉ interpreter executions (duplicates and
+    /// already-memoised genomes cost zero rows — see
+    /// [`SurrogatePredictor::predict_batch`]), priming the predictor's
+    /// memo so the per-trial [`evaluate`](Self::evaluate) calls that
+    /// follow are pure cache hits. Estimates are bit-identical to the
+    /// per-trial path, so objectives (and the trial database) do not
+    /// change — only the execution count does. Returns the number of
+    /// genomes prefetched (0 when no surrogate objective is configured).
+    pub fn prefetch(&self, kinds: &[ObjectiveKind], genomes: &[Genome]) -> Result<usize> {
+        if genomes.is_empty() || !ObjectiveKind::needs_surrogate(kinds) {
+            return Ok(0);
+        }
+        // a missing surrogate stays a per-trial error (same message,
+        // same failing trials) rather than failing the whole batch here
+        let Some(sur) = self.surrogate else {
+            return Ok(0);
+        };
+        sur.predict_genomes(genomes, self.space, self.bits, self.sparsity)?;
+        Ok(genomes.len())
+    }
+
     /// Evaluate `kinds` for a genome with measured validation `accuracy`.
     /// Returns the minimised objective vector, plus the raw
     /// `(est_avg_resources, est_clock_cycles)` pair when a surrogate ran.
@@ -178,6 +203,26 @@ mod tests {
         assert_eq!(obj[0], -0.64);
         assert!(obj[1] > 0.0);
         assert!(est.is_none());
+    }
+
+    /// `prefetch` is a no-op without surrogate objectives, and a missing
+    /// surrogate defers its error to the per-trial `evaluate` (same
+    /// failure, same message) instead of failing the batch stage.
+    #[test]
+    fn prefetch_without_surrogate_is_a_noop() {
+        let space = SearchSpace::table1();
+        let device = FpgaDevice::vu13p();
+        let ctx = ObjectiveContext {
+            space: &space,
+            device: &device,
+            surrogate: None,
+            bits: 8,
+            sparsity: 0.0,
+        };
+        let genomes = [space.baseline()];
+        assert_eq!(ctx.prefetch(&ObjectiveKind::nac_set(), &genomes).unwrap(), 0);
+        assert_eq!(ctx.prefetch(&ObjectiveKind::snac_set(), &genomes).unwrap(), 0);
+        assert_eq!(ctx.prefetch(&ObjectiveKind::snac_set(), &[]).unwrap(), 0);
     }
 
     #[test]

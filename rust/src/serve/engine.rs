@@ -1,0 +1,390 @@
+//! The micro-batching surrogate engine: coalesce concurrent estimate
+//! requests into full `SUR_BATCH`-row interpreter executions.
+//!
+//! Callers (HTTP connection handlers, or anything else holding a
+//! [`SurrogateEngine`]) submit one feature vector at a time and block
+//! until their estimate is ready. The engine accumulates the pending
+//! unique rows and a dedicated **flusher** (one thread running
+//! [`run_flusher`](SurrogateEngine::run_flusher)) executes them through
+//! [`SurrogatePredictor::predict_batch`] when either
+//!
+//! * the pending set reaches `max_rows` (flush-on-full), or
+//! * the oldest pending row has waited `deadline` (flush-on-deadline).
+//!
+//! Requests whose feature vector is already memoised return immediately
+//! without touching the batch; duplicate vectors submitted concurrently
+//! collapse to one pending row whose result every waiter shares. Results
+//! land in the predictor's memo cache (the same cache the search's
+//! per-generation prefetch fills), so the engine and the search never
+//! compute the same row twice between them — and because every path
+//! bottoms out in `predict_batch`, the estimates are bit-identical to a
+//! direct `SurrogatePredictor` call for the same inputs.
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::nn::SUR_FEATS;
+use crate::surrogate::predictor::feature_key;
+use crate::surrogate::{ResourceEstimate, SurrogatePredictor};
+
+/// Batching knobs.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Maximum time the first row of a batch waits before a partial
+    /// flush (`--batch-deadline-ms`).
+    pub deadline: Duration,
+    /// Flush as soon as this many unique rows pend (defaults to
+    /// `SUR_BATCH`, the interpreter's native batch).
+    pub max_rows: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            deadline: Duration::from_millis(2),
+            max_rows: crate::nn::SUR_BATCH,
+        }
+    }
+}
+
+/// What the flusher + waiting requesters share under one mutex.
+struct EngineState {
+    /// Unique feature rows accumulating toward the next flush.
+    rows: Vec<Vec<f32>>,
+    /// Keys of `rows` (intra-flush dedup).
+    pending: HashSet<Vec<u32>>,
+    /// Keys taken by the currently executing flush.
+    in_flight: HashSet<Vec<u32>>,
+    /// When the oldest pending row arrived (deadline anchor).
+    first_at: Option<Instant>,
+    /// Error of the most recent flush (`None` after a successful one),
+    /// so waiters can attribute a missing memo row to their flush
+    /// failing vs. eviction at the memo cap.
+    last_error: Option<String>,
+    /// Once set, new submissions are refused; the flusher drains the
+    /// pending rows and exits.
+    stopping: bool,
+}
+
+/// A micro-batching front over a shared [`SurrogatePredictor`].
+///
+/// Exactly one thread must run [`run_flusher`] while requests are being
+/// submitted (the `serve` subsystem spawns it inside its connection
+/// scope); without a flusher, [`estimate`] would block forever.
+///
+/// [`run_flusher`]: SurrogateEngine::run_flusher
+/// [`estimate`]: SurrogateEngine::estimate
+pub struct SurrogateEngine<'a> {
+    predictor: &'a SurrogatePredictor<'a>,
+    cfg: EngineConfig,
+    state: Mutex<EngineState>,
+    /// Wakes the flusher (new rows, or shutdown).
+    submitted: Condvar,
+    /// Wakes the requesters (a flush completed, or shutdown).
+    completed: Condvar,
+    flushes: AtomicUsize,
+    rows_flushed: AtomicUsize,
+}
+
+impl<'a> SurrogateEngine<'a> {
+    /// New engine over a predictor.
+    pub fn new(predictor: &'a SurrogatePredictor<'a>, cfg: EngineConfig) -> Self {
+        SurrogateEngine {
+            predictor,
+            cfg,
+            state: Mutex::new(EngineState {
+                rows: Vec::new(),
+                pending: HashSet::new(),
+                in_flight: HashSet::new(),
+                first_at: None,
+                last_error: None,
+                stopping: false,
+            }),
+            submitted: Condvar::new(),
+            completed: Condvar::new(),
+            flushes: AtomicUsize::new(0),
+            rows_flushed: AtomicUsize::new(0),
+        }
+    }
+
+    /// The predictor behind this engine (health diagnostics).
+    pub fn predictor(&self) -> &SurrogatePredictor<'a> {
+        self.predictor
+    }
+
+    /// Batches executed so far.
+    pub fn flushes(&self) -> usize {
+        self.flushes.load(Ordering::Relaxed)
+    }
+
+    /// Unique rows executed across all flushes so far.
+    pub fn rows_flushed(&self) -> usize {
+        self.rows_flushed.load(Ordering::Relaxed)
+    }
+
+    /// Estimate one feature vector, blocking until its flush completes
+    /// (immediately on a memo hit).
+    pub fn estimate(&self, feats: &[f32]) -> Result<ResourceEstimate> {
+        Ok(self.estimate_many(std::slice::from_ref(&feats.to_vec()))?[0])
+    }
+
+    /// Estimate a batch of feature vectors in one submission: all rows
+    /// join the pending set together (deduplicated against each other,
+    /// the memo, and whatever else is pending), then the caller blocks
+    /// until every row has resolved.
+    pub fn estimate_many(&self, feats: &[Vec<f32>]) -> Result<Vec<ResourceEstimate>> {
+        for f in feats {
+            anyhow::ensure!(
+                f.len() == SUR_FEATS,
+                "feature vector has {} values, expected {SUR_FEATS}",
+                f.len()
+            );
+        }
+        let keys: Vec<Vec<u32>> = feats.iter().map(|f| feature_key(f)).collect();
+        let mut out: Vec<Option<ResourceEstimate>> = vec![None; feats.len()];
+
+        // ---- submit ----
+        {
+            let mut st = self.state.lock().unwrap();
+            anyhow::ensure!(!st.stopping, "surrogate engine is shut down");
+            let mut added = false;
+            for (i, key) in keys.iter().enumerate() {
+                // memo first (lock order is always state → memo): covered
+                // rows never touch the batch
+                if let Some(hit) = self.predictor.cached_by_key(key) {
+                    out[i] = Some(hit);
+                    continue;
+                }
+                // rows someone else already queued (or that are mid-
+                // flush) are shared, not re-added
+                if st.pending.contains(key) || st.in_flight.contains(key) {
+                    continue;
+                }
+                st.pending.insert(key.clone());
+                st.rows.push(feats[i].clone());
+                st.first_at.get_or_insert_with(Instant::now);
+                added = true;
+            }
+            if added {
+                self.submitted.notify_one();
+            }
+        }
+
+        // ---- await ----
+        let mut st = self.state.lock().unwrap();
+        let mut resubmits = 0usize;
+        loop {
+            let mut waiting = false;
+            for (i, key) in keys.iter().enumerate() {
+                if out[i].is_some() {
+                    continue;
+                }
+                if let Some(hit) = self.predictor.cached_by_key(key) {
+                    out[i] = Some(hit);
+                } else if st.pending.contains(key) || st.in_flight.contains(key) {
+                    waiting = true;
+                } else if st.stopping {
+                    // the flusher may already have drained and exited; a
+                    // resubmitted row would never flush
+                    anyhow::bail!("surrogate estimate failed: engine shut down");
+                } else if let Some(msg) = st.last_error.clone() {
+                    // the row's flush failed (successful flushes clear
+                    // the error, so this is at worst one flush stale)
+                    anyhow::bail!("surrogate estimate failed: {msg}");
+                } else {
+                    // the row was committed but evicted at the memo cap
+                    // before this waiter woke — resubmit it (bounded, so
+                    // cap thrashing cannot loop forever)
+                    anyhow::ensure!(
+                        resubmits < 8,
+                        "surrogate estimate evicted {resubmits} times — memo cap thrashing"
+                    );
+                    resubmits += 1;
+                    st.pending.insert(key.clone());
+                    st.rows.push(feats[i].clone());
+                    st.first_at.get_or_insert_with(Instant::now);
+                    self.submitted.notify_one();
+                    waiting = true;
+                }
+            }
+            if !waiting {
+                return Ok(out.into_iter().map(|e| e.expect("resolved")).collect());
+            }
+            st = self.completed.wait(st).unwrap();
+        }
+    }
+
+    /// The flusher loop: run this on a dedicated thread for the life of
+    /// the engine. Returns once [`shutdown`](Self::shutdown) is called
+    /// and the pending rows have drained.
+    pub fn run_flusher(&self) {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.rows.is_empty() {
+                if st.stopping {
+                    break;
+                }
+                st = self.submitted.wait(st).unwrap();
+                continue;
+            }
+            let age = st.first_at.map(|t| t.elapsed()).unwrap_or(Duration::ZERO);
+            if st.rows.len() < self.cfg.max_rows && age < self.cfg.deadline && !st.stopping {
+                let remaining = self.cfg.deadline - age;
+                let (guard, _) = self.submitted.wait_timeout(st, remaining).unwrap();
+                st = guard;
+                continue;
+            }
+            // ---- flush: take the batch, execute it unlocked ----
+            let rows = std::mem::take(&mut st.rows);
+            st.in_flight = std::mem::take(&mut st.pending);
+            st.first_at = None;
+            drop(st);
+            let result = self.predictor.predict_batch(&rows);
+            st = self.state.lock().unwrap();
+            st.in_flight.clear();
+            self.flushes.fetch_add(1, Ordering::Relaxed);
+            self.rows_flushed.fetch_add(rows.len(), Ordering::Relaxed);
+            // a success clears the error so waiters can tell "my flush
+            // failed" apart from "my row was evicted at the memo cap"
+            st.last_error = match result {
+                Ok(_) => None,
+                Err(e) => Some(format!("{e:#}")),
+            };
+            self.completed.notify_all();
+        }
+        drop(st);
+        // anyone still blocked learns the engine stopped
+        self.completed.notify_all();
+    }
+
+    /// Stop accepting new requests and let the flusher drain and exit.
+    /// Safe to call more than once.
+    pub fn shutdown(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.stopping = true;
+        drop(st);
+        self.submitted.notify_all();
+        self.completed.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::surrogate::predictor::test_support::{feature_rows as rows, predictor, runtime};
+
+    /// Flush-on-full: with a long deadline and `max_rows = k`, `k`
+    /// concurrent callers coalesce into exactly one execution — none of
+    /// them waits for the deadline.
+    #[test]
+    fn concurrent_requests_flush_on_full() {
+        let rt = runtime();
+        let sur = predictor(&rt);
+        let k = 6usize;
+        let engine = SurrogateEngine::new(
+            &sur,
+            EngineConfig {
+                deadline: Duration::from_secs(60),
+                max_rows: k,
+            },
+        );
+        let feats = rows(k, 3);
+        let reference = predictor(&rt);
+        let expected = reference.predict_batch(&feats).unwrap();
+        let eng = &engine;
+        std::thread::scope(|s| {
+            s.spawn(move || eng.run_flusher());
+            let results: Vec<_> = feats
+                .iter()
+                .map(|f| s.spawn(move || eng.estimate(f).unwrap()))
+                .collect();
+            for (i, h) in results.into_iter().enumerate() {
+                assert_eq!(h.join().unwrap(), expected[i]);
+            }
+            eng.shutdown();
+        });
+        assert_eq!(engine.flushes(), 1, "k requests coalesced into one flush");
+        assert_eq!(engine.rows_flushed(), k);
+        assert_eq!(sur.executions(), 1);
+    }
+
+    /// Flush-on-deadline: a single request on an otherwise idle engine
+    /// is served after the deadline rather than waiting for a full batch.
+    #[test]
+    fn lone_request_flushes_on_deadline() {
+        let rt = runtime();
+        let sur = predictor(&rt);
+        let engine = SurrogateEngine::new(
+            &sur,
+            EngineConfig {
+                deadline: Duration::from_millis(20),
+                max_rows: crate::nn::SUR_BATCH,
+            },
+        );
+        let feats = rows(1, 5);
+        let reference = predictor(&rt);
+        let expected = reference.predict_batch(&feats).unwrap()[0];
+        std::thread::scope(|s| {
+            s.spawn(|| engine.run_flusher());
+            let got = engine.estimate(&feats[0]).unwrap();
+            assert_eq!(got, expected);
+            engine.shutdown();
+        });
+        assert_eq!(engine.flushes(), 1);
+        assert_eq!(engine.rows_flushed(), 1);
+    }
+
+    /// Duplicate submissions share one pending row, and memo hits skip
+    /// the batch entirely.
+    #[test]
+    fn duplicates_and_memo_hits_cost_no_extra_rows() {
+        let rt = runtime();
+        let sur = predictor(&rt);
+        let engine = SurrogateEngine::new(
+            &sur,
+            EngineConfig {
+                deadline: Duration::from_millis(5),
+                max_rows: crate::nn::SUR_BATCH,
+            },
+        );
+        let distinct = rows(3, 9);
+        let batch = [
+            distinct[0].clone(),
+            distinct[1].clone(),
+            distinct[0].clone(),
+            distinct[2].clone(),
+        ];
+        std::thread::scope(|s| {
+            s.spawn(|| engine.run_flusher());
+            let out = engine.estimate_many(&batch).unwrap();
+            assert_eq!(out.len(), 4);
+            assert_eq!(out[0], out[2]);
+            // a repeat is a pure memo hit: no new rows, no new flush
+            let flushes = engine.flushes();
+            let again = engine.estimate(&distinct[1]).unwrap();
+            assert_eq!(again, out[1]);
+            assert_eq!(engine.flushes(), flushes);
+            engine.shutdown();
+        });
+        assert_eq!(engine.rows_flushed(), 3, "duplicates collapsed");
+    }
+
+    /// Input validation and post-shutdown behaviour are typed errors,
+    /// not hangs.
+    #[test]
+    fn bad_input_and_shutdown_are_errors() {
+        let rt = runtime();
+        let sur = predictor(&rt);
+        let engine = SurrogateEngine::new(&sur, EngineConfig::default());
+        let err = engine.estimate(&[1.0, 2.0]).unwrap_err();
+        assert!(format!("{err:#}").contains("feature vector"));
+        engine.shutdown();
+        let feats = rows(1, 2);
+        let err = engine.estimate(&feats[0]).unwrap_err();
+        assert!(format!("{err:#}").contains("shut down"));
+    }
+}

@@ -1,0 +1,135 @@
+//! Minimal HTTP/1.1 framing for the estimation service.
+//!
+//! Std-only (the image has no crate network access): a blocking
+//! request reader, a response writer, and a tiny one-shot client used by
+//! `examples/estimate_client.rs`, the integration tests, and the bench.
+//! One request per connection (`Connection: close`), bodies framed by
+//! `Content-Length` — exactly what a JSON estimation endpoint needs and
+//! nothing more.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+/// Largest request body the server will read (a full `/estimate/batch`
+/// of a few thousand genomes fits in well under this).
+const MAX_BODY: usize = 8 << 20;
+
+/// Largest request line + header block the server will read. Bounding
+/// the whole pre-body region (rather than per line) also caps header
+/// count, so a client streaming endless bytes cannot grow server
+/// memory or pin a connection thread.
+const MAX_HEAD: usize = 64 << 10;
+
+/// One parsed HTTP request.
+#[derive(Debug)]
+pub struct Request {
+    /// Upper-case method (`GET`, `POST`, …).
+    pub method: String,
+    /// Path without query string.
+    pub path: String,
+    /// Raw body (empty when no `Content-Length`).
+    pub body: String,
+}
+
+/// Read one request from a connection. Fails on malformed framing, an
+/// over-long body, or a client that goes quiet mid-request (the caller
+/// sets the stream's read timeout).
+pub fn read_request(stream: &mut TcpStream) -> Result<Request> {
+    // hard cap on the pre-body region: an over-long request line or
+    // header block exhausts the budget (read_line hits EOF) and fails
+    // the request instead of ballooning `line` without bound
+    let mut reader = BufReader::new(stream.take(MAX_HEAD as u64));
+    let mut line = String::new();
+    reader.read_line(&mut line).context("reading request line")?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().context("empty request line")?.to_ascii_uppercase();
+    let target = parts.next().context("request line has no path")?;
+    let path = target.split('?').next().unwrap_or(target).to_string();
+
+    let mut content_length = 0usize;
+    loop {
+        let mut header = String::new();
+        reader.read_line(&mut header).context("reading header")?;
+        let header = header.trim_end();
+        if header.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = header.split_once(':') {
+            if name.trim().eq_ignore_ascii_case("content-length") {
+                content_length = value.trim().parse().context("unparseable Content-Length")?;
+            }
+        }
+    }
+    if content_length > MAX_BODY {
+        bail!("request body of {content_length} bytes exceeds the {MAX_BODY}-byte limit");
+    }
+    // headers consumed: widen the read budget to admit exactly the body
+    // (bytes the BufReader already buffered are paid for, so this is
+    // never under-generous)
+    reader.get_mut().set_limit(content_length as u64);
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body).context("reading request body")?;
+    Ok(Request {
+        method,
+        path,
+        body: String::from_utf8(body).context("request body is not UTF-8")?,
+    })
+}
+
+/// Reason phrase for the status codes the service emits.
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        500 => "Internal Server Error",
+        _ => "Unknown",
+    }
+}
+
+/// Write a full JSON response and flush.
+pub fn write_response(stream: &mut TcpStream, status: u16, body: &str) -> Result<()> {
+    let head = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        reason(status),
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// One-shot HTTP client: send `method path` with an optional JSON body
+/// to `addr` (e.g. `127.0.0.1:7878`) and return `(status, body)`.
+pub fn request(addr: &str, method: &str, path: &str, body: Option<&str>) -> Result<(u16, String)> {
+    let mut stream = TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+    stream.set_read_timeout(Some(Duration::from_secs(60)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(60)))?;
+    let body = body.unwrap_or("");
+    let head = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()?;
+
+    let mut response = String::new();
+    stream.read_to_string(&mut response).context("reading response")?;
+    let (head, payload) = response
+        .split_once("\r\n\r\n")
+        .context("response has no header/body separator")?;
+    let status_line = head.lines().next().context("empty response")?;
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .context("status line has no code")?
+        .parse()
+        .context("unparseable status code")?;
+    Ok((status, payload.to_string()))
+}

@@ -1,0 +1,552 @@
+//! The estimation service: SNAC-Pack's trained surrogate as a
+//! first-class serving surface.
+//!
+//! The search consumes surrogate estimates in-process; this subsystem
+//! exposes the same predictor to everything else — CI smoke clients,
+//! external tooling, future design-space dashboards — as a std-only
+//! HTTP/1.1 JSON service (`snac-pack serve`):
+//!
+//! * `GET  /healthz` — liveness + batching/cache counters;
+//! * `POST /estimate` — one genome (or raw feature vector) →
+//!   [`ResourceEstimate`] + `avg_resources` on the serving device;
+//! * `POST /estimate/batch` — `{"requests": [...]}` → `{"results": [...]}`;
+//! * `POST /shutdown` — drain and exit cleanly.
+//!
+//! A thread-per-connection front parses requests and blocks on the
+//! shared [`SurrogateEngine`] (`serve/engine.rs`), which coalesces all
+//! concurrent requests into full `SUR_BATCH`-row interpreter executions
+//! and shares the predictor's memo cache — so the service returns
+//! bit-identical numbers to an in-process
+//! [`SurrogatePredictor`](crate::surrogate::SurrogatePredictor) call
+//! for the same inputs, at batch throughput under concurrency.
+//!
+//! Request schema (`POST /estimate`; batch wraps a list of these):
+//!
+//! ```json
+//! {"genome": {"n_layers": 4, "width_idx": [0,0,0,0,0,0,0,0], "act": 0,
+//!             "batch_norm": true, "lr_idx": 0, "l1_idx": 0, "dropout_idx": 0},
+//!  "bits": 8, "sparsity": 0.5}
+//! ```
+//!
+//! `bits`/`sparsity` default to the preset's deployment point; a raw
+//! `{"features": [72 floats]}` body bypasses genome encoding entirely.
+
+pub mod engine;
+pub mod http;
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+pub use engine::{EngineConfig, SurrogateEngine};
+
+use crate::hls::FpgaDevice;
+use crate::nn::{Genome, SearchSpace, NUM_LAYERS, SUR_BATCH, SUR_FEATS};
+use crate::surrogate::{genome_features, ResourceEstimate};
+use crate::util::Json;
+
+/// Everything a connection handler needs, shared by reference across
+/// the connection threads.
+pub struct ServeContext<'a> {
+    /// The micro-batching engine (a flusher thread must be running —
+    /// [`serve`] owns that).
+    pub engine: &'a SurrogateEngine<'a>,
+    /// Search space genomes are validated against.
+    pub space: &'a SearchSpace,
+    /// Device utilisation percentages are computed for.
+    pub device: &'a FpgaDevice,
+    /// Default deployment precision when a request omits `bits`.
+    pub bits: u32,
+    /// Default deployment sparsity when a request omits `sparsity`.
+    pub sparsity: f64,
+    /// Runtime platform name (health diagnostics).
+    pub platform: String,
+}
+
+impl ServeContext<'_> {
+    /// Decode one estimate-request object into a surrogate feature
+    /// vector (either a validated genome at a deployment point, or a raw
+    /// `SUR_FEATS`-long feature list).
+    fn features_of(&self, j: &Json) -> Result<Vec<f32>> {
+        if let Some(f) = j.get("features") {
+            let items = f.items();
+            let vals: Vec<f32> = items.iter().filter_map(Json::as_f64).map(|v| v as f32).collect();
+            anyhow::ensure!(
+                vals.len() == items.len() && vals.len() == SUR_FEATS,
+                "`features` must be {SUR_FEATS} numbers, got {}",
+                items.len()
+            );
+            return Ok(vals);
+        }
+        let g = j.get("genome").context("request needs a `genome` object or a `features` array")?;
+        // the shared trial-db codec is deliberately lenient (it clamps
+        // `act` and zero-fills a short `width_idx`); a *request* with
+        // such values must 400 rather than silently describe a different
+        // architecture, so check the raw JSON before decoding
+        let act = g
+            .get("act")
+            .and_then(Json::as_f64)
+            .context("genome `act` must be a number")?;
+        anyhow::ensure!(
+            act.fract() == 0.0 && (0.0..=2.0).contains(&act),
+            "genome `act` must be an integer in 0..=2, got {act}"
+        );
+        let widths = g.get("width_idx").context("genome missing `width_idx`")?.items().len();
+        anyhow::ensure!(
+            widths == NUM_LAYERS,
+            "genome `width_idx` must have {NUM_LAYERS} entries, got {widths}"
+        );
+        let genome = Genome::from_json(g).context("parsing `genome`")?;
+        validate_genome(&genome, self.space)?;
+        // validate the raw value before any narrowing conversion: a
+        // fractional or out-of-range `bits` must 400, not silently round
+        // or wrap to a different deployment point
+        let bits = match j.get("bits") {
+            None => self.bits,
+            Some(b) => {
+                let v = b.as_f64().context("`bits` must be a number")?;
+                anyhow::ensure!(
+                    v.fract() == 0.0 && (1.0..=32.0).contains(&v),
+                    "`bits` must be an integer in 1..=32, got {v}"
+                );
+                v as u32
+            }
+        };
+        let sparsity = j
+            .get("sparsity")
+            .map(|s| s.as_f64().context("`sparsity` must be a number"))
+            .transpose()?
+            .unwrap_or(self.sparsity);
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&sparsity),
+            "`sparsity` must be in [0, 1], got {sparsity}"
+        );
+        Ok(genome_features(&genome, self.space, bits, sparsity))
+    }
+
+    /// Decode an `/estimate/batch` body into its feature vectors.
+    fn batch_features(&self, j: &Json) -> Result<Vec<Vec<f32>>> {
+        let reqs = j.get("requests").context("batch body needs a `requests` array")?;
+        anyhow::ensure!(matches!(reqs, Json::Arr(_)), "`requests` must be an array");
+        reqs.items().iter().map(|r| self.features_of(r)).collect()
+    }
+
+    /// Serialise one estimate for the wire.
+    fn estimate_json(&self, est: &ResourceEstimate) -> Json {
+        Json::obj(vec![
+            ("bram", Json::Num(est.bram)),
+            ("dsp", Json::Num(est.dsp)),
+            ("ff", Json::Num(est.ff)),
+            ("lut", Json::Num(est.lut)),
+            ("latency_cc", Json::Num(est.latency_cc)),
+            ("ii_cc", Json::Num(est.ii_cc)),
+            ("avg_resources", Json::Num(est.avg_resources(self.device))),
+        ])
+    }
+}
+
+/// Reject genomes whose indices fall outside the serving search space
+/// before they can panic a feature encoder.
+fn validate_genome(g: &Genome, space: &SearchSpace) -> Result<()> {
+    anyhow::ensure!(
+        space.depth_choices.contains(&g.n_layers),
+        "genome depth {} is outside the search space {:?}",
+        g.n_layers,
+        space.depth_choices
+    );
+    for i in 0..NUM_LAYERS {
+        anyhow::ensure!(
+            g.width_idx[i] < space.width_choices[i].len(),
+            "genome width_idx[{i}] = {} is out of range (layer has {} choices)",
+            g.width_idx[i],
+            space.width_choices[i].len()
+        );
+    }
+    anyhow::ensure!(g.lr_idx < space.lr_choices.len(), "lr_idx out of range");
+    anyhow::ensure!(g.l1_idx < space.l1_choices.len(), "l1_idx out of range");
+    anyhow::ensure!(g.dropout_idx < space.dropout_choices.len(), "dropout_idx out of range");
+    Ok(())
+}
+
+/// Outcome of one request: status, JSON body, and whether the server
+/// should stop accepting after responding.
+struct Handled {
+    status: u16,
+    body: Json,
+    shutdown: bool,
+}
+
+fn ok(body: Json) -> Handled {
+    Handled {
+        status: 200,
+        body,
+        shutdown: false,
+    }
+}
+
+fn error(status: u16, msg: impl std::fmt::Display) -> Handled {
+    Handled {
+        status,
+        body: Json::obj(vec![("error", Json::Str(msg.to_string()))]),
+        shutdown: false,
+    }
+}
+
+/// Route one parsed request. Pure except for the engine call, so the
+/// endpoint semantics are unit-testable without sockets.
+fn handle(ctx: &ServeContext<'_>, req: &http::Request) -> Handled {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => ok(Json::obj(vec![
+            ("status", Json::Str("ok".to_string())),
+            ("platform", Json::Str(ctx.platform.clone())),
+            ("device", Json::Str(ctx.device.name.clone())),
+            ("sur_batch", Json::Num(SUR_BATCH as f64)),
+            ("flushes", Json::Num(ctx.engine.flushes() as f64)),
+            ("rows_flushed", Json::Num(ctx.engine.rows_flushed() as f64)),
+            (
+                "surrogate_executions",
+                Json::Num(ctx.engine.predictor().executions() as f64),
+            ),
+            ("memo_rows", Json::Num(ctx.engine.predictor().cache_len() as f64)),
+        ])),
+        ("POST", "/estimate") => {
+            let parsed = Json::parse(&req.body)
+                .map_err(anyhow::Error::msg)
+                .and_then(|j| ctx.features_of(&j));
+            match parsed {
+                Err(e) => error(400, format!("{e:#}")),
+                Ok(feats) => match ctx.engine.estimate(&feats) {
+                    Ok(est) => ok(ctx.estimate_json(&est)),
+                    Err(e) => error(500, format!("{e:#}")),
+                },
+            }
+        }
+        ("POST", "/estimate/batch") => {
+            let parsed = Json::parse(&req.body)
+                .map_err(anyhow::Error::msg)
+                .and_then(|j| ctx.batch_features(&j));
+            match parsed {
+                Err(e) => error(400, format!("{e:#}")),
+                Ok(feats) => match ctx.engine.estimate_many(&feats) {
+                    Ok(ests) => ok(Json::obj(vec![(
+                        "results",
+                        Json::Arr(ests.iter().map(|e| ctx.estimate_json(e)).collect()),
+                    )])),
+                    Err(e) => error(500, format!("{e:#}")),
+                },
+            }
+        }
+        ("POST", "/shutdown") => Handled {
+            status: 200,
+            body: Json::obj(vec![("status", Json::Str("shutting down".to_string()))]),
+            shutdown: true,
+        },
+        (_, "/healthz") | (_, "/estimate") | (_, "/estimate/batch") | (_, "/shutdown") => {
+            error(405, format!("method {} not allowed here", req.method))
+        }
+        (_, path) => error(404, format!("no such endpoint `{path}`")),
+    }
+}
+
+/// Serve one connection: read, route, respond, close.
+fn handle_connection(ctx: &ServeContext<'_>, mut stream: TcpStream, stop: &AtomicBool) {
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(30)));
+    let handled = match http::read_request(&mut stream) {
+        Ok(req) => handle(ctx, &req),
+        Err(e) => error(400, format!("{e:#}")),
+    };
+    let _ = http::write_response(&mut stream, handled.status, &handled.body.to_string());
+    if handled.shutdown {
+        stop.store(true, Ordering::SeqCst);
+    }
+}
+
+/// Run the service on an already-bound listener until a client POSTs
+/// `/shutdown`. Owns the whole lifecycle: spawns the engine's flusher,
+/// accepts with a thread per connection, and drains the engine on the
+/// way out. Returns once every in-flight connection has been served.
+pub fn serve(ctx: &ServeContext<'_>, listener: TcpListener) -> Result<()> {
+    listener.set_nonblocking(true).context("setting the listener non-blocking")?;
+    let stop = AtomicBool::new(false);
+    let stop = &stop;
+    std::thread::scope(|s| -> Result<()> {
+        s.spawn(|| ctx.engine.run_flusher());
+        // transient accept() errors (ECONNABORTED from a client RST in
+        // the backlog, EMFILE under a connection burst, EINTR) must not
+        // take the whole service down; only a persistently failing
+        // listener is fatal
+        let mut accept_errors = 0usize;
+        const MAX_CONSECUTIVE_ACCEPT_ERRORS: usize = 100;
+        let result = loop {
+            if stop.load(Ordering::SeqCst) {
+                break Ok(());
+            }
+            match listener.accept() {
+                Ok((stream, _peer)) => {
+                    accept_errors = 0;
+                    s.spawn(move || handle_connection(ctx, stream, stop));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                Err(e) => {
+                    accept_errors += 1;
+                    if accept_errors >= MAX_CONSECUTIVE_ACCEPT_ERRORS {
+                        break Err(anyhow::Error::from(e)
+                            .context("accept failing persistently — listener unusable"));
+                    }
+                    eprintln!(
+                        "[serve] accept error ({accept_errors}/{MAX_CONSECUTIVE_ACCEPT_ERRORS}, \
+                         retrying): {e}"
+                    );
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+            }
+        };
+        // stop the engine so its flusher drains and exits; connection
+        // threads still in flight are joined by the scope below
+        ctx.engine.shutdown();
+        result
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::surrogate::predictor::test_support::{predictor, runtime};
+    use crate::util::Rng;
+
+    fn genome_request(g: &Genome, bits: u32, sparsity: f64) -> String {
+        Json::obj(vec![
+            ("genome", g.to_json()),
+            ("bits", Json::Num(bits as f64)),
+            ("sparsity", Json::Num(sparsity)),
+        ])
+        .to_string()
+    }
+
+    fn f64_field(j: &Json, k: &str) -> f64 {
+        j.get(k).and_then(Json::as_f64).unwrap_or(f64::NAN)
+    }
+
+    /// Full loopback round trip: concurrent mixed single/batch/raw-
+    /// feature requests against a live server return estimates exactly
+    /// equal to a direct `SurrogatePredictor` call, and `/shutdown`
+    /// stops the server cleanly.
+    #[test]
+    fn server_matches_the_inprocess_predictor() {
+        let rt = runtime();
+        let sur = predictor(&rt);
+        let engine = SurrogateEngine::new(
+            &sur,
+            EngineConfig {
+                deadline: Duration::from_millis(5),
+                max_rows: SUR_BATCH,
+            },
+        );
+        let space = SearchSpace::table1();
+        let device = FpgaDevice::vu13p();
+        let ctx = ServeContext {
+            engine: &engine,
+            space: &space,
+            device: &device,
+            bits: 8,
+            sparsity: 0.5,
+            platform: rt.platform(),
+        };
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+
+        // independent reference predictor with the same params
+        let reference = predictor(&rt);
+        let mut rng = Rng::new(7);
+        let genomes: Vec<Genome> = (0..6).map(|_| space.sample(&mut rng)).collect();
+
+        let ctx_ref = &ctx;
+        let addr_ref = addr.as_str();
+        std::thread::scope(|s| {
+            let server = s.spawn(move || serve(ctx_ref, listener));
+
+            // health first (also waits out any accept-loop startup)
+            let (status, body) = http::request(addr_ref, "GET", "/healthz", None).unwrap();
+            assert_eq!(status, 200, "{body}");
+            let health = Json::parse(&body).unwrap();
+            assert_eq!(health.get("status").and_then(Json::as_str), Some("ok"));
+            assert_eq!(f64_field(&health, "sur_batch") as usize, SUR_BATCH);
+
+            // concurrent single-genome estimates
+            let singles: Vec<_> = genomes
+                .iter()
+                .map(|g| {
+                    s.spawn(move || {
+                        http::request(
+                            addr_ref,
+                            "POST",
+                            "/estimate",
+                            Some(&genome_request(g, 8, 0.5)),
+                        )
+                        .unwrap()
+                    })
+                })
+                .collect();
+            // ... racing a batch estimate of the same genomes plus a raw
+            // feature-vector request
+            let batch_body = Json::obj(vec![(
+                "requests",
+                Json::Arr(
+                    genomes.iter().map(|g| Json::obj(vec![("genome", g.to_json())])).collect(),
+                ),
+            )])
+            .to_string();
+            let batch = s.spawn(move || {
+                http::request(addr_ref, "POST", "/estimate/batch", Some(&batch_body)).unwrap()
+            });
+            let raw_feats = genome_features(&genomes[0], &space, 8, 0.5);
+            let raw_body = Json::obj(vec![(
+                "features",
+                Json::nums(raw_feats.iter().map(|&v| v as f64)),
+            )])
+            .to_string();
+            let raw = s.spawn(move || {
+                http::request(addr_ref, "POST", "/estimate", Some(&raw_body)).unwrap()
+            });
+
+            for (g, handle) in genomes.iter().zip(singles) {
+                let (status, body) = handle.join().unwrap();
+                assert_eq!(status, 200, "{body}");
+                let j = Json::parse(&body).unwrap();
+                let want = reference.predict(g, &space, 8, 0.5).unwrap();
+                assert_eq!(f64_field(&j, "lut"), want.lut);
+                assert_eq!(f64_field(&j, "latency_cc"), want.latency_cc);
+                assert_eq!(f64_field(&j, "avg_resources"), want.avg_resources(&device));
+            }
+            let (status, body) = batch.join().unwrap();
+            assert_eq!(status, 200, "{body}");
+            let results = Json::parse(&body).unwrap();
+            let results = results.get("results").unwrap().items();
+            assert_eq!(results.len(), genomes.len());
+            for (g, j) in genomes.iter().zip(results) {
+                let want = reference.predict(g, &space, 8, 0.5).unwrap();
+                assert_eq!(f64_field(j, "dsp"), want.dsp);
+                assert_eq!(f64_field(j, "ff"), want.ff);
+            }
+            let (status, body) = raw.join().unwrap();
+            assert_eq!(status, 200, "{body}");
+            let j = Json::parse(&body).unwrap();
+            let want = reference.predict(&genomes[0], &space, 8, 0.5).unwrap();
+            assert_eq!(f64_field(&j, "bram"), want.bram);
+
+            // clean shutdown
+            let (status, _) = http::request(addr_ref, "POST", "/shutdown", None).unwrap();
+            assert_eq!(status, 200);
+            server.join().unwrap().unwrap();
+        });
+        // the engine coalesced: far fewer executions than requests
+        assert!(sur.executions() >= 1);
+        assert!(
+            sur.executions() <= 2 * genomes.len(),
+            "executions stay bounded by unique rows, got {}",
+            sur.executions()
+        );
+    }
+
+    /// Endpoint error semantics (no sockets needed for these framings).
+    #[test]
+    fn handler_rejects_bad_requests() {
+        let rt = runtime();
+        let sur = predictor(&rt);
+        let engine = SurrogateEngine::new(&sur, EngineConfig::default());
+        let space = SearchSpace::table1();
+        let device = FpgaDevice::vu13p();
+        let ctx = ServeContext {
+            engine: &engine,
+            space: &space,
+            device: &device,
+            bits: 8,
+            sparsity: 0.5,
+            platform: "test".to_string(),
+        };
+        let post = |path: &str, body: &str| {
+            handle(
+                &ctx,
+                &http::Request {
+                    method: "POST".to_string(),
+                    path: path.to_string(),
+                    body: body.to_string(),
+                },
+            )
+        };
+        // malformed JSON, missing keys, wrong feature arity
+        assert_eq!(post("/estimate", "{nope").status, 400);
+        assert_eq!(post("/estimate", "{}").status, 400);
+        assert_eq!(post("/estimate", r#"{"features": [1, 2, 3]}"#).status, 400);
+        assert_eq!(post("/estimate/batch", r#"{"requests": 3}"#).status, 400);
+        // an out-of-space genome is a 400, not a panic
+        let mut g = space.baseline();
+        g.width_idx[0] = 99;
+        assert_eq!(post("/estimate", &genome_request(&g, 8, 0.5)).status, 400);
+        let mut g = space.baseline();
+        g.n_layers = 99;
+        assert_eq!(post("/estimate", &genome_request(&g, 8, 0.5)).status, 400);
+        // bad deployment points: out-of-range, wrapping, and fractional
+        // bits must all 400 rather than silently serve another precision
+        let g = space.baseline();
+        assert_eq!(post("/estimate", &genome_request(&g, 0, 0.5)).status, 400);
+        assert_eq!(post("/estimate", &genome_request(&g, 8, 1.5)).status, 400);
+        let wrap = Json::obj(vec![
+            ("genome", g.to_json()),
+            ("bits", Json::Num(4_294_967_304.0)), // would wrap to 8 as u32
+        ])
+        .to_string();
+        assert_eq!(post("/estimate", &wrap).status, 400);
+        let fractional = Json::obj(vec![
+            ("genome", g.to_json()),
+            ("bits", Json::Num(8.7)), // would round to 9 via as_usize
+        ])
+        .to_string();
+        assert_eq!(post("/estimate", &fractional).status, 400);
+        // the lenient trial-db genome codec must not leak into requests:
+        // an out-of-range `act` (from_json would clamp it to Sigmoid) and
+        // a short `width_idx` (would zero-fill) are 400s, not silently
+        // different architectures
+        let mut bad_act = g.to_json();
+        if let Json::Obj(m) = &mut bad_act {
+            m.insert("act".to_string(), Json::Num(7.0));
+        }
+        let body = Json::obj(vec![("genome", bad_act)]).to_string();
+        assert_eq!(post("/estimate", &body).status, 400);
+        let mut short_widths = g.to_json();
+        if let Json::Obj(m) = &mut short_widths {
+            m.insert("width_idx".to_string(), Json::nums([0.0, 0.0].into_iter()));
+        }
+        let body = Json::obj(vec![("genome", short_widths)]).to_string();
+        assert_eq!(post("/estimate", &body).status, 400);
+        // unknown path / wrong method
+        let miss = handle(
+            &ctx,
+            &http::Request {
+                method: "GET".to_string(),
+                path: "/nope".to_string(),
+                body: String::new(),
+            },
+        );
+        assert_eq!(miss.status, 404);
+        let wrong = handle(
+            &ctx,
+            &http::Request {
+                method: "GET".to_string(),
+                path: "/estimate".to_string(),
+                body: String::new(),
+            },
+        );
+        assert_eq!(wrong.status, 405);
+        // an empty batch is fine and needs no flusher
+        let empty = post("/estimate/batch", r#"{"requests": []}"#);
+        assert_eq!(empty.status, 200);
+        assert_eq!(empty.body.get("results").unwrap().items().len(), 0);
+    }
+}

@@ -1,6 +1,21 @@
-//! Batched, cached surrogate inference used by the search objectives.
+//! Batched, cached surrogate inference used by the search objectives and
+//! the `serve` estimation service.
+//!
+//! [`SurrogatePredictor::predict_batch`] is the single choke point every
+//! caller funnels through: it memo-checks all rows in one cache pass,
+//! collapses duplicate feature vectors to one interpreter row, packs the
+//! survivors into `SUR_BATCH`-row `surrogate_predict` executions (one
+//! reused padded buffer, zeroed tail), and commits the fresh rows back to
+//! the memo in a second single pass. The per-genome [`predict`] path is a
+//! one-row batch, and the generation-level prefetch
+//! (`objectives::ObjectiveContext::prefetch`) plus the micro-batching
+//! `serve::SurrogateEngine` both ride the same code — so estimates are
+//! bit-identical whichever path asked for them.
+//!
+//! [`predict`]: SurrogatePredictor::predict
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use anyhow::Result;
@@ -13,7 +28,7 @@ use crate::runtime::runtime::arg;
 use crate::runtime::Runtime;
 
 /// Raw (uncompressed) surrogate outputs for one architecture.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ResourceEstimate {
     /// BRAM36 blocks.
     pub bram: f64,
@@ -42,16 +57,39 @@ impl ResourceEstimate {
     }
 }
 
+/// Memo key for one feature vector: the exact f32 bit patterns.
+pub(crate) fn feature_key(feats: &[f32]) -> Vec<u32> {
+    feats.iter().map(|f| f.to_bits()).collect()
+}
+
+/// Upper bound on memoised rows. A search's working set (unique genomes
+/// per run) is orders of magnitude smaller, so this only matters for a
+/// long-lived `snac-pack serve` process fed arbitrary feature vectors,
+/// where the memo would otherwise grow without bound. Eviction is
+/// deliberately coarse — a full clear when the cap would be exceeded —
+/// costing only re-prediction of rows still in use; at ~400 bytes/row
+/// the table stays around 100 MB.
+const MEMO_CAP: usize = 256 * 1024;
+
 /// Trained surrogate + prediction cache.
 ///
 /// The predictor is shared by reference across the evaluation worker
-/// threads (`eval::ParallelEvaluator`), so the memo cache is behind a
-/// `Mutex` — contention is negligible next to a `surrogate_predict` call.
+/// threads (`eval::ParallelEvaluator`) and the `serve` connection
+/// handlers, so the memo cache is behind a `Mutex` — contention is
+/// negligible next to a `surrogate_predict` call, and `predict_batch`
+/// takes the lock exactly twice per call (one memo-check pass, one
+/// commit pass), never per row.
 pub struct SurrogatePredictor<'a> {
     rt: &'a Runtime,
     params: SurrogateParams,
     /// memoised by feature-vector bits (genomes repeat across generations)
     cache: Mutex<HashMap<Vec<u32>, ResourceEstimate>>,
+    /// `surrogate_predict` executions so far — the probe the batched
+    /// objectives path is asserted against (≤ ⌈generation/`SUR_BATCH`⌉
+    /// per generation).
+    executions: AtomicUsize,
+    /// Memo size bound ([`MEMO_CAP`]; overridable in tests).
+    memo_cap: usize,
 }
 
 impl<'a> SurrogatePredictor<'a> {
@@ -61,7 +99,16 @@ impl<'a> SurrogatePredictor<'a> {
             rt,
             params,
             cache: Mutex::new(HashMap::new()),
+            executions: AtomicUsize::new(0),
+            memo_cap: MEMO_CAP,
         }
+    }
+
+    /// Shrink the memo bound (tests exercise the eviction path without
+    /// a quarter-million rows).
+    #[cfg(test)]
+    pub(crate) fn set_memo_cap(&mut self, cap: usize) {
+        self.memo_cap = cap;
     }
 
     /// Predict resources for one genome at a deployment point.
@@ -73,23 +120,75 @@ impl<'a> SurrogatePredictor<'a> {
         sparsity: f64,
     ) -> Result<ResourceEstimate> {
         let feats = genome_features(genome, space, bits, sparsity);
-        let key: Vec<u32> = feats.iter().map(|f| f.to_bits()).collect();
-        if let Some(hit) = self.cache.lock().unwrap().get(&key) {
-            return Ok(*hit);
-        }
-        let est = self.predict_batch(&[feats])?[0];
-        self.cache.lock().unwrap().insert(key, est);
-        Ok(est)
+        Ok(self.predict_batch(std::slice::from_ref(&feats))?[0])
     }
 
-    /// Predict a batch of feature vectors (padded to `SUR_BATCH` rows).
+    /// Predict a whole generation of genomes at one deployment point in
+    /// ⌈unique/`SUR_BATCH`⌉ executions (duplicates and memoised genomes
+    /// cost zero rows).
+    pub fn predict_genomes(
+        &self,
+        genomes: &[Genome],
+        space: &SearchSpace,
+        bits: u32,
+        sparsity: f64,
+    ) -> Result<Vec<ResourceEstimate>> {
+        let feats: Vec<Vec<f32>> = genomes
+            .iter()
+            .map(|g| genome_features(g, space, bits, sparsity))
+            .collect();
+        self.predict_batch(&feats)
+    }
+
+    /// The memoised estimate for a feature vector, if one exists.
+    pub fn cached(&self, feats: &[f32]) -> Option<ResourceEstimate> {
+        self.cached_by_key(&feature_key(feats))
+    }
+
+    /// Memo lookup by a precomputed [`feature_key`] (the serve engine
+    /// polls per wake-up and avoids re-hashing the floats).
+    pub(crate) fn cached_by_key(&self, key: &[u32]) -> Option<ResourceEstimate> {
+        self.cache.lock().unwrap().get(key).copied()
+    }
+
+    /// Predict a batch of feature vectors (each `SUR_FEATS` long).
+    ///
+    /// Memoised rows are never re-executed, duplicate rows within the
+    /// call collapse to one interpreter row, and the unique misses are
+    /// packed into `SUR_BATCH`-row executions through one reused padded
+    /// buffer. Outputs are positional: `out[i]` is the estimate for
+    /// `feats[i]`, bit-identical to a single-row `predict` of the same
+    /// vector.
     pub fn predict_batch(&self, feats: &[Vec<f32>]) -> Result<Vec<ResourceEstimate>> {
-        let mut out = Vec::with_capacity(feats.len());
-        for chunk in feats.chunks(SUR_BATCH) {
-            let mut xbuf = vec![0.0f32; SUR_BATCH * SUR_FEATS];
-            for (i, f) in chunk.iter().enumerate() {
-                xbuf[i * SUR_FEATS..(i + 1) * SUR_FEATS].copy_from_slice(f);
+        let keys: Vec<Vec<u32>> = feats.iter().map(|f| feature_key(f)).collect();
+        let mut out: Vec<Option<ResourceEstimate>> = vec![None; feats.len()];
+        // slot in `unique` that will resolve each not-yet-memoised row
+        let mut slot_of: HashMap<&[u32], usize> = HashMap::new();
+        // first-occurrence indices into `feats` of the rows to execute
+        let mut unique: Vec<usize> = Vec::new();
+        {
+            // single lock pass: memo check + intra-batch dedup together
+            let cache = self.cache.lock().unwrap();
+            for (i, key) in keys.iter().enumerate() {
+                if let Some(hit) = cache.get(key) {
+                    out[i] = Some(*hit);
+                } else if !slot_of.contains_key(key.as_slice()) {
+                    slot_of.insert(key.as_slice(), unique.len());
+                    unique.push(i);
+                }
             }
+        }
+
+        // one padded buffer reused across chunks; the tail rows of a
+        // short final chunk are re-zeroed so a previous chunk's rows
+        // never leak into the padding
+        let mut fresh: Vec<ResourceEstimate> = Vec::with_capacity(unique.len());
+        let mut xbuf = vec![0.0f32; SUR_BATCH * SUR_FEATS];
+        for chunk in unique.chunks(SUR_BATCH) {
+            for (slot, &fi) in chunk.iter().enumerate() {
+                xbuf[slot * SUR_FEATS..(slot + 1) * SUR_FEATS].copy_from_slice(&feats[fi]);
+            }
+            xbuf[chunk.len() * SUR_FEATS..].fill(0.0);
             let p = &self.params;
             let result = self.rt.run(
                 "surrogate_predict",
@@ -103,10 +202,11 @@ impl<'a> SurrogatePredictor<'a> {
                     arg("x", &xbuf),
                 ],
             )?;
+            self.executions.fetch_add(1, Ordering::Relaxed);
             let pred = &result[0];
             for i in 0..chunk.len() {
                 let raw = raw_from_targets(&pred[i * SUR_OUT..(i + 1) * SUR_OUT]);
-                out.push(ResourceEstimate {
+                fresh.push(ResourceEstimate {
                     bram: raw[0],
                     dsp: raw[1],
                     ff: raw[2],
@@ -116,11 +216,181 @@ impl<'a> SurrogatePredictor<'a> {
                 });
             }
         }
-        Ok(out)
+
+        if !unique.is_empty() {
+            // second (and last) lock pass: commit the fresh rows
+            let mut cache = self.cache.lock().unwrap();
+            if cache.len() + unique.len() > self.memo_cap {
+                cache.clear();
+            }
+            for (slot, &fi) in unique.iter().enumerate() {
+                cache.insert(keys[fi].clone(), fresh[slot]);
+            }
+        }
+        Ok(out
+            .into_iter()
+            .enumerate()
+            .map(|(i, hit)| hit.unwrap_or_else(|| fresh[slot_of[keys[i].as_slice()]]))
+            .collect())
     }
 
     /// Number of memoised predictions (diagnostics).
     pub fn cache_len(&self) -> usize {
         self.cache.lock().unwrap().len()
+    }
+
+    /// Total `surrogate_predict` interpreter executions so far.
+    pub fn executions(&self) -> usize {
+        self.executions.load(Ordering::Relaxed)
+    }
+}
+
+/// Shared fixtures for the predictor/engine/serve test modules: the
+/// fixture-backed runtime, an untrained (but deterministic) predictor —
+/// prediction *values* are arbitrary; tests assert identity/counting
+/// properties — and pairwise-distinct feature rows.
+#[cfg(test)]
+pub(crate) mod test_support {
+    use super::{SurrogateParams, SurrogatePredictor};
+    use crate::nn::SearchSpace;
+    use crate::runtime::Runtime;
+    use crate::surrogate::genome_features;
+    use crate::util::Rng;
+
+    pub(crate) fn runtime() -> Runtime {
+        let dir = crate::runtime::artifact_dir().expect("no artifact manifest found");
+        Runtime::load(&dir).expect("runtime load")
+    }
+
+    pub(crate) fn predictor(rt: &Runtime) -> SurrogatePredictor<'_> {
+        let mut rng = Rng::new(42);
+        SurrogatePredictor::new(rt, SurrogateParams::init(&mut rng))
+    }
+
+    pub(crate) fn feature_rows(n: usize, seed: u64) -> Vec<Vec<f32>> {
+        let space = SearchSpace::table1();
+        let mut rng = Rng::new(seed);
+        let mut out: Vec<Vec<f32>> = Vec::new();
+        while out.len() < n {
+            let f = genome_features(&space.sample(&mut rng), &space, 8, 0.5);
+            if !out.contains(&f) {
+                out.push(f);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::test_support::{feature_rows as rows, predictor, runtime};
+    use super::*;
+
+    /// Tail padding: batch lengths 1, `SUR_BATCH`, and `SUR_BATCH + 1`
+    /// all produce rows bit-identical to single-row prediction, in ⌈n/
+    /// `SUR_BATCH`⌉ executions.
+    #[test]
+    fn predict_batch_tail_padding_matches_single_row() {
+        let rt = runtime();
+        // one-row reference predictions from an independent predictor
+        let reference = predictor(&rt);
+        let all = rows(SUR_BATCH + 1, 3);
+        for n in [1usize, SUR_BATCH, SUR_BATCH + 1] {
+            let sur = predictor(&rt);
+            let batch = sur.predict_batch(&all[..n]).unwrap();
+            assert_eq!(batch.len(), n);
+            assert_eq!(sur.executions(), n.div_ceil(SUR_BATCH));
+            // spot-check head, tail, and a chunk-boundary row
+            for &i in &[0, n - 1, (n - 1).min(SUR_BATCH - 1)] {
+                let single = reference.predict_batch(&all[i..i + 1]).unwrap()[0];
+                assert_eq!(batch[i], single);
+            }
+        }
+    }
+
+    /// Duplicate rows within one call cost one interpreter row, not `k`.
+    #[test]
+    fn predict_batch_dedups_identical_rows() {
+        let rt = runtime();
+        let sur = predictor(&rt);
+        let distinct = rows(3, 7);
+        let feats = [
+            distinct[0].clone(),
+            distinct[1].clone(),
+            distinct[0].clone(),
+            distinct[2].clone(),
+            distinct[0].clone(),
+        ];
+        let out = sur.predict_batch(&feats).unwrap();
+        assert_eq!(out.len(), 5);
+        assert_eq!(sur.executions(), 1);
+        assert_eq!(sur.cache_len(), 3, "only unique rows are memoised");
+        assert_eq!(out[0], out[2]);
+        assert_eq!(out[0], out[4]);
+    }
+
+    /// Already-memoised rows are skipped inside `predict_batch`: a batch
+    /// that is fully covered by the memo executes nothing, and a partial
+    /// overlap executes only the misses.
+    #[test]
+    fn predict_batch_skips_memoised_rows() {
+        let rt = runtime();
+        let sur = predictor(&rt);
+        let all = rows(6, 11);
+        let first = sur.predict_batch(&all[..4]).unwrap();
+        assert_eq!(sur.executions(), 1);
+
+        // full overlap: zero executions, identical values
+        let again = sur.predict_batch(&all[..4]).unwrap();
+        assert_eq!(sur.executions(), 1, "memoised batch re-executes nothing");
+        assert_eq!(first, again);
+
+        // partial overlap: one more execution, memoised rows keep their
+        // original values
+        let mixed = sur.predict_batch(&all).unwrap();
+        assert_eq!(sur.executions(), 2);
+        assert_eq!(sur.cache_len(), 6);
+        assert_eq!(first, mixed[..4]);
+    }
+
+    /// The memo stays bounded: when a commit would exceed the cap the
+    /// table is cleared (coarse eviction), and evicted rows simply
+    /// re-execute with identical values — a long-lived `serve` process
+    /// cannot grow memory without bound.
+    #[test]
+    fn memo_cap_bounds_the_cache_and_evicted_rows_reexecute() {
+        let rt = runtime();
+        let mut sur = predictor(&rt);
+        sur.set_memo_cap(4);
+        let sur = sur;
+        let all = rows(6, 21);
+        let first = sur.predict_batch(&all[..4]).unwrap();
+        assert_eq!(sur.cache_len(), 4);
+        // committing two more rows would exceed the cap: coarse clear
+        sur.predict_batch(&all[4..]).unwrap();
+        assert_eq!(sur.cache_len(), 2);
+        assert_eq!(sur.executions(), 2);
+        // evicted rows re-execute and reproduce the identical estimates
+        let again = sur.predict_batch(&all[..4]).unwrap();
+        assert_eq!(sur.executions(), 3);
+        assert_eq!(first, again);
+    }
+
+    /// `predict` is a one-row batch: it shares the memo with
+    /// `predict_batch` and never re-executes a covered genome.
+    #[test]
+    fn predict_shares_the_batch_memo() {
+        let rt = runtime();
+        let sur = predictor(&rt);
+        let space = SearchSpace::table1();
+        let genome = space.baseline();
+        let single = sur.predict(&genome, &space, 8, 0.5).unwrap();
+        assert_eq!(sur.executions(), 1);
+        let batched = sur.predict_genomes(&[genome.clone()], &space, 8, 0.5).unwrap()[0];
+        assert_eq!(sur.executions(), 1, "memo hit — no second execution");
+        assert_eq!(single, batched);
+        // a different deployment point is a different feature vector
+        sur.predict(&genome, &space, 4, 0.0).unwrap();
+        assert_eq!(sur.executions(), 2);
     }
 }

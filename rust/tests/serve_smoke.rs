@@ -1,0 +1,157 @@
+//! Acceptance smoke for the estimation service: a real `snac-pack
+//! serve` process (ephemeral port, HLO-fixture runtime) must answer
+//! concurrent mixed single/batch `/estimate` requests with values
+//! exactly equal to an in-process `SurrogatePredictor` trained under the
+//! identical protocol, and shut down cleanly on `POST /shutdown`.
+//!
+//! This is the process-level complement to the in-process tests in
+//! `src/serve/`: it exercises the actual binary — CLI flags, surrogate
+//! training from the preset seed, the listener line the smoke clients
+//! scrape, and the drain-on-shutdown path.
+
+use std::io::{BufRead, BufReader};
+use std::process::{Child, Command, Stdio};
+
+use snac_pack::config::Preset;
+use snac_pack::hls::{FpgaDevice, HlsConfig};
+use snac_pack::nn::{Genome, SearchSpace};
+use snac_pack::runtime::Runtime;
+use snac_pack::serve::http;
+use snac_pack::surrogate::{train_surrogate, SurrogatePredictor};
+use snac_pack::util::{Json, Rng};
+
+/// Kill the server if the test panics before the clean shutdown.
+struct Reap(Child);
+
+impl Drop for Reap {
+    fn drop(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
+
+fn f64_field(j: &Json, k: &str) -> f64 {
+    j.get(k).and_then(Json::as_f64).unwrap_or(f64::NAN)
+}
+
+#[test]
+fn concurrent_estimates_match_the_offline_predictor() {
+    // micro surrogate budget so the smoke trains in seconds; the preset
+    // seed makes the server's surrogate bit-identical to ours below
+    let mut child = Command::new(env!("CARGO_BIN_EXE_snac-pack"))
+        .args([
+            "serve",
+            "--preset",
+            "quickstart",
+            "--set",
+            "surrogate_size=256",
+            "--set",
+            "surrogate_epochs=10",
+            "--port",
+            "0",
+            "--batch-deadline-ms",
+            "5",
+        ])
+        .stdout(Stdio::piped())
+        .spawn()
+        .expect("spawn snac-pack serve");
+    let stdout = child.stdout.take().expect("piped stdout");
+    let mut child = Reap(child);
+
+    // the server prints `listening on http://ADDR` once bound
+    let mut addr = String::new();
+    for line in BufReader::new(stdout).lines() {
+        let line = line.expect("server stdout");
+        if let Some(rest) = line.split("listening on http://").nth(1) {
+            addr = rest.trim().to_string();
+            break;
+        }
+    }
+    assert!(!addr.is_empty(), "server never printed its address");
+
+    // in-process reference: same fixtures, same training protocol
+    let art = snac_pack::runtime::artifact_dir().expect("no artifact manifest found");
+    let rt = Runtime::load(&art).unwrap();
+    let space = SearchSpace::table1();
+    let device = FpgaDevice::vu13p();
+    let mut preset = Preset::by_name("quickstart").unwrap();
+    preset.set("surrogate_size", "256").unwrap();
+    preset.set("surrogate_epochs", "10").unwrap();
+    let (params, _mse) =
+        train_surrogate(&rt, &space, &preset.surrogate, &HlsConfig::default(), &device).unwrap();
+    let reference = SurrogatePredictor::new(&rt, params);
+
+    let (status, body) = http::request(&addr, "GET", "/healthz", None).unwrap();
+    assert_eq!(status, 200, "{body}");
+
+    let mut rng = Rng::new(99);
+    let genomes: Vec<Genome> = (0..8).map(|_| space.sample(&mut rng)).collect();
+    let bits = preset.local.bits;
+    let sparsity = preset.local.target_sparsity;
+
+    // concurrent fan-out: one thread per single estimate, plus a batch
+    // thread re-estimating the whole set at once
+    let addr_ref = addr.as_str();
+    let genomes_ref = genomes.as_slice();
+    let (singles, batch) = std::thread::scope(|s| {
+        let singles: Vec<_> = genomes_ref
+            .iter()
+            .map(|g| {
+                s.spawn(move || {
+                    let req = Json::obj(vec![("genome", g.to_json())]).to_string();
+                    http::request(addr_ref, "POST", "/estimate", Some(&req)).unwrap()
+                })
+            })
+            .collect();
+        let batch = s.spawn(move || {
+            let req = Json::obj(vec![(
+                "requests",
+                Json::Arr(
+                    genomes_ref
+                        .iter()
+                        .map(|g| Json::obj(vec![("genome", g.to_json())]))
+                        .collect(),
+                ),
+            )])
+            .to_string();
+            http::request(addr_ref, "POST", "/estimate/batch", Some(&req)).unwrap()
+        });
+        (
+            singles
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .collect::<Vec<_>>(),
+            batch.join().unwrap(),
+        )
+    });
+
+    // every response is a 200 whose values equal the offline predictor's
+    for (g, (status, body)) in genomes.iter().zip(&singles) {
+        assert_eq!(*status, 200, "{body}");
+        let j = Json::parse(body).unwrap();
+        let want = reference.predict(g, &space, bits, sparsity).unwrap();
+        assert_eq!(f64_field(&j, "bram"), want.bram);
+        assert_eq!(f64_field(&j, "dsp"), want.dsp);
+        assert_eq!(f64_field(&j, "ff"), want.ff);
+        assert_eq!(f64_field(&j, "lut"), want.lut);
+        assert_eq!(f64_field(&j, "latency_cc"), want.latency_cc);
+        assert_eq!(f64_field(&j, "ii_cc"), want.ii_cc);
+        assert_eq!(f64_field(&j, "avg_resources"), want.avg_resources(&device));
+    }
+    let (status, body) = &batch;
+    assert_eq!(*status, 200, "{body}");
+    let parsed = Json::parse(body).unwrap();
+    let results = parsed.get("results").unwrap().items();
+    assert_eq!(results.len(), genomes.len());
+    for (g, j) in genomes.iter().zip(results) {
+        let want = reference.predict(g, &space, bits, sparsity).unwrap();
+        assert_eq!(f64_field(j, "lut"), want.lut);
+        assert_eq!(f64_field(j, "latency_cc"), want.latency_cc);
+    }
+
+    // clean shutdown: 200, then the process exits successfully
+    let (status, _) = http::request(&addr, "POST", "/shutdown", None).unwrap();
+    assert_eq!(status, 200);
+    let exit = child.0.wait().expect("server exit status");
+    assert!(exit.success(), "server exited with {exit:?}");
+}
