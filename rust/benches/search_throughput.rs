@@ -18,7 +18,10 @@
 //! 4. **Interpreter execute throughput** — loads the PJRT runtime against
 //!    the checked-in HLO fixtures (or real AOT artifacts when built) and
 //!    times `surrogate_predict`/`train_step` executions through the
-//!    `rust/xla` HLO interpreter.
+//!    `rust/xla` HLO interpreter: the compiled execution plans vs the
+//!    retained naive reference evaluator (speedup measured in-run), plus
+//!    the blocked dot-general kernel's GFLOP/s and the buffer arena's
+//!    allocations-per-execution.
 //! 5. **Sharded dispatch** — the same search through the multi-process
 //!    shard protocol (file-based queue + lease claims, worker loops on
 //!    threads), verifying the trial stream stays identical and recording
@@ -395,11 +398,74 @@ fn bench_interpreter() -> anyhow::Result<Json> {
     ];
     const TRAIN_EXECS: usize = 32;
     rt.run("train_step", &train_args)?; // warm-up
+    xla::reset_alloc_stats();
     let t0 = Instant::now();
     for _ in 0..TRAIN_EXECS {
         std::hint::black_box(rt.run("train_step", &train_args)?);
     }
     let train_secs = t0.elapsed().as_secs_f64();
+    let (fresh, reused) = xla::alloc_stats();
+    let fresh_per_exec = fresh as f64 / TRAIN_EXECS as f64;
+    let reused_per_exec = reused as f64 / TRAIN_EXECS as f64;
+
+    // the retained naive evaluator on the same executables: the planned
+    // path's speedup is measured inside one run, so the comparison never
+    // depends on a checkout of the pre-plan revision
+    const REF_EXECS: usize = 4;
+    xla::set_reference_mode(true);
+    let ref_result = (|| -> anyhow::Result<(f64, f64)> {
+        rt.run("surrogate_predict", &predict_args)?; // warm-up
+        let t0 = Instant::now();
+        for _ in 0..REF_EXECS {
+            std::hint::black_box(rt.run("surrogate_predict", &predict_args)?);
+        }
+        let ref_predict_secs = t0.elapsed().as_secs_f64();
+        rt.run("train_step", &train_args)?; // warm-up
+        let t0 = Instant::now();
+        for _ in 0..REF_EXECS {
+            std::hint::black_box(rt.run("train_step", &train_args)?);
+        }
+        Ok((ref_predict_secs, t0.elapsed().as_secs_f64()))
+    })();
+    xla::set_reference_mode(false);
+    let (ref_predict_secs, ref_train_secs) = ref_result?;
+    let predict_eps = PREDICT_EXECS as f64 / predict_secs;
+    let train_eps = TRAIN_EXECS as f64 / train_secs;
+    let ref_predict_eps = REF_EXECS as f64 / ref_predict_secs;
+    let ref_train_eps = REF_EXECS as f64 / ref_train_secs;
+
+    // blocked dot-general in isolation: a square f32 matmul big enough
+    // that kernel time dwarfs dispatch
+    const DOT_N: usize = 256;
+    const DOT_EXECS: usize = 8;
+    let dot_text = format!(
+        "HloModule bench_dot\n\nENTRY %main (a: f32[{n},{n}], b: f32[{n},{n}]) \
+         -> f32[{n},{n}] {{\n  %a = f32[{n},{n}] parameter(0)\n  \
+         %b = f32[{n},{n}] parameter(1)\n  \
+         ROOT %d = f32[{n},{n}] dot(%a, %b), lhs_contracting_dims={{1}}, \
+         rhs_contracting_dims={{0}}\n}}\n",
+        n = DOT_N
+    );
+    let client = xla::PjRtClient::cpu()?;
+    let dot_exe = client.compile(&xla::XlaComputation::from_proto(
+        &xla::HloModuleProto::from_text(&dot_text)?,
+    ))?;
+    let mut da = vec![0.0f32; DOT_N * DOT_N];
+    let mut db = vec![0.0f32; DOT_N * DOT_N];
+    rng.fill_normal(&mut da, 1.0);
+    rng.fill_normal(&mut db, 1.0);
+    let dot_args = [
+        client.buffer_from_host_buffer::<f32>(&da, &[DOT_N, DOT_N], None)?,
+        client.buffer_from_host_buffer::<f32>(&db, &[DOT_N, DOT_N], None)?,
+    ];
+    dot_exe.execute_b(&dot_args)?; // warm-up
+    let t0 = Instant::now();
+    for _ in 0..DOT_EXECS {
+        std::hint::black_box(dot_exe.execute_b(&dot_args)?);
+    }
+    let dot_secs = t0.elapsed().as_secs_f64();
+    let dot_gflops =
+        (2.0 * (DOT_N as f64).powi(3) * DOT_EXECS as f64) / dot_secs / 1e9;
 
     println!(
         "bench search/interpreter_load   {:>10}  (platform `{}`, {} artifacts)",
@@ -408,27 +474,51 @@ fn bench_interpreter() -> anyhow::Result<Json> {
         rt.manifest().artifacts.len()
     );
     println!(
-        "bench search/interpreter_pred   {:>10}  {:>7.1} execs/s (surrogate_predict)",
+        "bench search/interpreter_pred   {:>10}  {:>7.1} execs/s (surrogate_predict, \
+         {:.2}x over reference {ref_predict_eps:.1})",
         common::fmt(predict_secs / PREDICT_EXECS as f64),
-        PREDICT_EXECS as f64 / predict_secs
+        predict_eps,
+        predict_eps / ref_predict_eps
     );
     println!(
-        "bench search/interpreter_train  {:>10}  {:>7.1} execs/s (train_step)",
+        "bench search/interpreter_train  {:>10}  {:>7.1} execs/s (train_step, \
+         {:.2}x over reference {ref_train_eps:.1})",
         common::fmt(train_secs / TRAIN_EXECS as f64),
-        TRAIN_EXECS as f64 / train_secs
+        train_eps,
+        train_eps / ref_train_eps
+    );
+    println!(
+        "bench search/interpreter_dot    {:>10}  {dot_gflops:>7.2} GFLOP/s \
+         ({DOT_N}^3 f32 matmul, {} thread(s))",
+        common::fmt(dot_secs / DOT_EXECS as f64),
+        xla::dot_threads().max(1)
+    );
+    println!(
+        "bench search/interpreter_allocs  fresh {fresh_per_exec:.1}/exec, \
+         reused {reused_per_exec:.1}/exec (train_step, warm arena)"
     );
     Ok(Json::obj(vec![
         ("platform", Json::Str(rt.platform())),
         ("artifact_dir", Json::Str(dir.display().to_string())),
         ("load_seconds", Json::Num(load_secs)),
+        ("surrogate_predict_execs_per_sec", Json::Num(predict_eps)),
+        ("train_step_execs_per_sec", Json::Num(train_eps)),
         (
-            "surrogate_predict_execs_per_sec",
-            Json::Num(PREDICT_EXECS as f64 / predict_secs),
+            "reference_surrogate_predict_execs_per_sec",
+            Json::Num(ref_predict_eps),
+        ),
+        ("reference_train_step_execs_per_sec", Json::Num(ref_train_eps)),
+        (
+            "surrogate_predict_speedup_vs_reference",
+            Json::Num(predict_eps / ref_predict_eps),
         ),
         (
-            "train_step_execs_per_sec",
-            Json::Num(TRAIN_EXECS as f64 / train_secs),
+            "train_step_speedup_vs_reference",
+            Json::Num(train_eps / ref_train_eps),
         ),
+        ("dot_general_gflops", Json::Num(dot_gflops)),
+        ("train_step_fresh_allocs_per_exec", Json::Num(fresh_per_exec)),
+        ("train_step_reused_allocs_per_exec", Json::Num(reused_per_exec)),
     ]))
 }
 

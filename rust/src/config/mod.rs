@@ -47,6 +47,12 @@ pub struct SearchBudget {
     /// processes over `run_dir`. Genomes, objectives, and selection are
     /// identical for every shard count; only timings change.
     pub shards: usize,
+    /// Interpreter threads for the blocked dot-general kernels
+    /// (`--threads`; `0` = all available parallelism, `1` = serial, the
+    /// default). Accumulation order is partitioned over independent output
+    /// rows, so results are bit-identical for every value; only wall-clock
+    /// changes.
+    pub threads: usize,
 }
 
 /// `snac-pack serve` — the estimation service's knobs.
@@ -120,6 +126,7 @@ impl Preset {
                     epochs: 5,
                     workers: 0,
                     shards: 0,
+                    threads: 1,
                 },
                 surrogate: SurrogateTrainConfig::default(),
                 local: LocalSearchConfig::default(),
@@ -143,6 +150,7 @@ impl Preset {
                     epochs: 5,
                     workers: 0,
                     shards: 0,
+                    threads: 1,
                 },
                 surrogate: SurrogateTrainConfig::default(),
                 local: LocalSearchConfig {
@@ -171,6 +179,7 @@ impl Preset {
                     epochs: 2,
                     workers: 0,
                     shards: 0,
+                    threads: 1,
                 },
                 surrogate: SurrogateTrainConfig {
                     dataset_size: 1024,
@@ -226,6 +235,7 @@ impl Preset {
                     value.parse().context("batch_deadline_ms expects an integer")?
             }
             "shards" => self.search.shards = uint()?,
+            "threads" => self.search.threads = uint()?,
             "run_dir" => self.run_dir = Some(value.to_string()),
             "spawn_workers" => {
                 self.spawn_workers = if value == "auto" {
@@ -244,7 +254,7 @@ impl Preset {
     /// over `by_name` — so the codec's surface is the override surface by
     /// construction, and fields outside it (e.g. surrogate learning rate)
     /// stay pinned to the named preset on both ends.
-    const OVERRIDE_KEYS: [&str; 20] = [
+    const OVERRIDE_KEYS: [&str; 21] = [
         "trials",
         "population",
         "epochs",
@@ -263,6 +273,7 @@ impl Preset {
         "port",
         "batch_deadline_ms",
         "shards",
+        "threads",
         "run_dir",
         "spawn_workers",
     ];
@@ -288,6 +299,7 @@ impl Preset {
             "port" => Some(self.serve.port.to_string()),
             "batch_deadline_ms" => Some(self.serve.batch_deadline_ms.to_string()),
             "shards" => s(self.search.shards),
+            "threads" => s(self.search.threads),
             "run_dir" => self.run_dir.clone(),
             "spawn_workers" => self.spawn_workers.map(|v| v.to_string()),
             _ => None,
@@ -359,6 +371,7 @@ mod tests {
         p.set("workers", "4").unwrap();
         p.set("cache_path", "results/eval_cache.json").unwrap();
         p.set("shards", "3").unwrap();
+        p.set("threads", "2").unwrap();
         p.set("run_dir", "/tmp/run").unwrap();
         p.set("spawn_workers", "2").unwrap();
         assert_eq!(p.search.trials, 99);
@@ -366,6 +379,7 @@ mod tests {
         assert_eq!(p.search.workers, 4);
         assert_eq!(p.cache_path.as_deref(), Some("results/eval_cache.json"));
         assert_eq!(p.search.shards, 3);
+        assert_eq!(p.search.threads, 2);
         assert_eq!(p.run_dir.as_deref(), Some("/tmp/run"));
         assert_eq!(p.spawn_workers, Some(2));
         p.set("spawn_workers", "auto").unwrap();
@@ -394,6 +408,7 @@ mod tests {
         p.set("seed", "99").unwrap();
         p.set("cache_path", "/tmp/c.json").unwrap();
         p.set("shards", "2").unwrap();
+        p.set("threads", "4").unwrap();
         p.set("run_dir", "/tmp/rd").unwrap();
         p.set("port", "9191").unwrap();
         p.set("batch_deadline_ms", "7").unwrap();
@@ -405,6 +420,7 @@ mod tests {
         assert_eq!(back.search.epochs, 3);
         assert_eq!(back.search.workers, 2);
         assert_eq!(back.search.shards, 2);
+        assert_eq!(back.search.threads, 4);
         assert_eq!(back.data.n_train, 777);
         assert_eq!(back.data.n_val, 384, "untouched fields come from the base preset");
         assert_eq!(back.data.seed, 7, "data seed is preset-fixed");

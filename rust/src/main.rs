@@ -67,11 +67,15 @@ fn parse_cli() -> Result<Cli> {
         bail!(
             "usage: snac-pack <pipeline|search|worker|serve|surrogate|synth|info> \
              [--preset paper|ci|quickstart] [--out DIR] [--artifacts DIR] \
-             [--objectives acc,bops] [--workers N] [--cache-path FILE] \
+             [--objectives acc,bops] [--workers N] [--threads N] \
+             [--cache-path FILE] \
              [--shards N] [--run-dir DIR] [--port N] [--batch-deadline-ms N] \
              [--set key=value ...]\n\
              --preset picks the base regardless of position; \
              --workers/--cache-path/--set overrides then apply left to right\n\
+             --threads N runs the interpreter's dot-general kernels on N \
+             threads (0 = all cores, 1 = serial default); results are \
+             bit-identical for every value\n\
              --cache-path persists the evaluation cache across runs: a \
              re-run never retrains a previously evaluated genome\n\
              --shards N dispatches each generation to N shard files served \
@@ -121,6 +125,9 @@ fn parse_cli() -> Result<Cli> {
                     .context("--workers expects a count")?;
                 workers_flag = v.parse().ok();
             }
+            "--threads" => preset
+                .set("threads", value()?)
+                .context("--threads expects a count")?,
             "--cache-path" => preset
                 .set("cache_path", value()?)
                 .context("--cache-path expects a file path")?,
@@ -282,6 +289,9 @@ fn worker_main(run_dir: &Path, workers_flag: Option<usize>) -> Result<()> {
             .context("run.json missing `artifacts`")?,
     );
 
+    // worker processes inherit the driver's kernel threading through the
+    // manifest, so a sharded run behaves like the in-process one
+    xla::set_dot_threads(preset.search.threads);
     let rt = Runtime::load(&artifacts)?;
     let space = SearchSpace::table1();
     let device = FpgaDevice::vu13p();
@@ -378,6 +388,11 @@ fn main() -> Result<()> {
         cli.preset.run_dir = Some(cli.out.join("shard-run").display().to_string());
     }
     let cli = cli;
+    // one global knob for the interpreter's blocked dot-general kernels;
+    // bit-identical results at every setting, so it is safe to default
+    // from the preset for every subcommand (`worker` re-applies the
+    // manifest's value in worker_main)
+    xla::set_dot_threads(cli.preset.search.threads);
     match cli.command.as_str() {
         "worker" => {
             let run_dir = cli

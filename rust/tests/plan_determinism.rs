@@ -1,0 +1,92 @@
+//! End-to-end planning determinism: the micro pipeline's trial databases
+//! must be **bit-identical** (modulo the recorded wall-clock timings)
+//! whether HLO executes through the naive reference evaluator, the
+//! compiled execution plans, or the plans with multithreaded dot-general
+//! kernels.
+//!
+//! This is the system-level counterpart of `rust/xla/tests/differential.rs`:
+//! if any planned kernel, arena recycle, or thread partition perturbed a
+//! single bit anywhere in training or search, the trial records (losses,
+//! accuracies, selection order) would diverge and this test would fail.
+//!
+//! Lives in its own test binary on purpose: it toggles the process-global
+//! `xla::set_reference_mode` / `xla::set_dot_threads` knobs, which must
+//! not race the other integration tests.
+
+use std::path::{Path, PathBuf};
+
+use snac_pack::config::Preset;
+use snac_pack::coordinator::{run_pipeline, TrialRecord};
+use snac_pack::nn::SearchSpace;
+use snac_pack::runtime::Runtime;
+use snac_pack::util::Json;
+
+fn micro_preset() -> Preset {
+    let mut preset = Preset::by_name("quickstart").unwrap();
+    // even smaller than pipeline_integration's budget: three runs back to
+    // back, and only the DB bytes matter here
+    preset.set("trials", "4").unwrap();
+    preset.set("population", "2").unwrap();
+    preset.set("epochs", "1").unwrap();
+    preset.set("n_train", "384").unwrap();
+    preset.set("n_val", "128").unwrap();
+    preset.set("n_test", "128").unwrap();
+    preset.set("surrogate_size", "256").unwrap();
+    preset.set("surrogate_epochs", "8").unwrap();
+    preset.set("imp_iterations", "2").unwrap();
+    preset.set("imp_epochs", "1").unwrap();
+    preset.set("warmup_epochs", "1").unwrap();
+    preset
+}
+
+fn run_once(rt: &Runtime, tag: &str) -> PathBuf {
+    let out = std::env::temp_dir().join(format!("snac_plan_det_{tag}"));
+    let _ = std::fs::remove_dir_all(&out);
+    run_pipeline(rt, &micro_preset(), &out).unwrap();
+    out
+}
+
+/// The trial DB with its one legitimately nondeterministic field
+/// (wall-clock `train_seconds`) zeroed, re-serialised canonically. Every
+/// other float — losses, accuracies, BOPs, surrogate estimates, objective
+/// vectors — compares at full serialised precision.
+fn canonical_db(out: &Path, file: &str, space: &SearchSpace) -> String {
+    let mut records = TrialRecord::load_all(&out.join(file), space)
+        .unwrap_or_else(|e| panic!("loading {file}: {e}"));
+    for r in &mut records {
+        r.train_seconds = 0.0;
+    }
+    Json::Arr(records.iter().map(TrialRecord::to_json).collect()).to_string()
+}
+
+#[test]
+fn pipeline_trial_dbs_identical_across_reference_planned_and_threaded() {
+    let dir = snac_pack::runtime::artifact_dir()
+        .expect("no artifacts/ and no xla/tests/fixtures/ manifest in this tree");
+    let rt = Runtime::load(&dir).unwrap();
+
+    xla::set_reference_mode(true);
+    xla::set_dot_threads(1);
+    let reference = run_once(&rt, "reference");
+    xla::set_reference_mode(false);
+
+    let planned = run_once(&rt, "planned");
+    xla::set_dot_threads(2);
+    let threaded = run_once(&rt, "threaded");
+    xla::set_dot_threads(1);
+
+    let space = SearchSpace::table1();
+    for db in ["trials_nac.json", "trials_snac.json"] {
+        let base = canonical_db(&reference, db, &space);
+        assert_eq!(
+            base,
+            canonical_db(&planned, db, &space),
+            "{db}: planned execution must reproduce the reference run bit for bit"
+        );
+        assert_eq!(
+            base,
+            canonical_db(&threaded, db, &space),
+            "{db}: threaded dot-general must reproduce the reference run bit for bit"
+        );
+    }
+}

@@ -1,4 +1,4 @@
-//! Evaluator for parsed HLO modules.
+//! Reference evaluator for parsed HLO modules.
 //!
 //! Values are host-side `f32` buffers (`pred` is stored as 0.0/1.0,
 //! integers as their rounded value — exact below 2^24, far beyond anything
@@ -7,25 +7,51 @@
 //! topologically sorted by construction), so evaluation is a single linear
 //! pass with no recursion except `reduce`'s `to_apply` regions.
 //!
-//! Performance notes: `dot` is the only hot operation. It is implemented
-//! as a general dot-general (batch + contracting + free dims) using
-//! additive offset tables, with the innermost loop running over the rhs
-//! free dimensions so the accumulator row and the rhs row are both walked
-//! contiguously for the row-major rank-2 matmuls the artifacts consist of.
+//! Performance notes: since the execution-plan refactor this module is the
+//! **naive reference evaluator**, not the hot path. `PjRtClient::compile`
+//! lowers the module into a cached [`crate::plan::ExecPlan`] that
+//! precomputes per executable what this file re-derives per call (output
+//! shapes, offset tables, `fast_reducer` recognition, last-use liveness)
+//! and executes through the blocked kernels in [`crate::kernels`].
+//! `evaluate` is retained on purpose, with its per-op loops unchanged:
+//!
+//! * the differential harness (`tests/differential.rs`) asserts the
+//!   planned kernels are **bit-exact** against this evaluator, so keep the
+//!   two implementations independent — do not "share" kernel loops between
+//!   them or the comparison stops meaning anything;
+//! * `PjRtLoadedExecutable::execute_b_reference` (and the
+//!   `SNAC_XLA_REFERENCE=1` escape hatch) route production executions
+//!   through here when auditing a planned-kernel result.
+//!
+//! Accumulation-order contract shared with the planned kernels: for every
+//! output element of `dot`/`reduce`, terms are folded left-to-right in
+//! row-major order of the contracted coordinates, and `dot` skips lhs
+//! terms that are exactly `0.0` (documented deviation: XLA would propagate
+//! `0·inf`/`0·NaN`). The planned kernels preserve both properties exactly,
+//! at every `threads` setting — see `plan.rs` for how.
+
+use std::sync::Arc;
 
 use crate::parser::{BinaryOp, CmpDir, Computation, DType, Module, Op, Shape, UnaryOp};
 use crate::{Error, Result};
 
-/// A host-side array value.
+/// A host-side array value. The payload is `Arc`-shared so that parameter
+/// passing, `reshape`/`copy`/same-width `convert`, and tuple construction
+/// are refcount bumps instead of deep copies.
 #[derive(Debug, Clone)]
 pub struct ArrayValue {
     pub shape: Shape,
-    pub data: Vec<f32>,
+    pub data: Arc<Vec<f32>>,
 }
 
 impl ArrayValue {
     /// New array, validating the element count.
     pub fn new(shape: Shape, data: Vec<f32>) -> Result<ArrayValue> {
+        ArrayValue::from_arc(shape, Arc::new(data))
+    }
+
+    /// New array over shared storage, validating the element count.
+    pub fn from_arc(shape: Shape, data: Arc<Vec<f32>>) -> Result<ArrayValue> {
         if shape.elems() != data.len() {
             return Err(Error::msg(format!(
                 "shape {:?} holds {} elements, got {}",
@@ -37,10 +63,10 @@ impl ArrayValue {
         Ok(ArrayValue { shape, data })
     }
 
-    fn scalar(v: f32, dtype: DType) -> ArrayValue {
+    pub(crate) fn scalar(v: f32, dtype: DType) -> ArrayValue {
         ArrayValue {
             shape: Shape { dtype, dims: vec![] },
-            data: vec![v],
+            data: Arc::new(vec![v]),
         }
     }
 
@@ -161,21 +187,7 @@ fn eval_instr(
         Op::Compare { dir, lhs, rhs } => {
             let (a, b) = (get_array(slots, *lhs)?, get_array(slots, *rhs)?);
             let shape = out_shape(comp, idx)?.clone();
-            let out = zip_broadcast(a, b, shape, |x, y| {
-                let r = match dir {
-                    CmpDir::Eq => x == y,
-                    CmpDir::Ne => x != y,
-                    CmpDir::Lt => x < y,
-                    CmpDir::Le => x <= y,
-                    CmpDir::Gt => x > y,
-                    CmpDir::Ge => x >= y,
-                };
-                if r {
-                    1.0
-                } else {
-                    0.0
-                }
-            })?;
+            let out = zip_broadcast(a, b, shape, |x, y| compare_scalar(*dir, x, y))?;
             Ok(Value::Array(out))
         }
         Op::Select {
@@ -190,22 +202,19 @@ fn eval_instr(
                 return Err(Error::msg("select branches have mismatched sizes"));
             }
             let shape = out_shape(comp, idx)?.clone();
-            let data: Vec<f32> = if p.is_scalar() {
-                if p.data[0] != 0.0 {
-                    t.data.clone()
-                } else {
-                    f.data.clone()
-                }
-            } else {
-                if p.data.len() != t.data.len() {
-                    return Err(Error::msg("select predicate has mismatched size"));
-                }
-                p.data
-                    .iter()
-                    .zip(t.data.iter().zip(&f.data))
-                    .map(|(&p, (&t, &f))| if p != 0.0 { t } else { f })
-                    .collect()
-            };
+            if p.is_scalar() {
+                let picked = if p.data[0] != 0.0 { t } else { f };
+                return ArrayValue::from_arc(shape, Arc::clone(&picked.data)).map(Value::Array);
+            }
+            if p.data.len() != t.data.len() {
+                return Err(Error::msg("select predicate has mismatched size"));
+            }
+            let data: Vec<f32> = p
+                .data
+                .iter()
+                .zip(t.data.iter().zip(f.data.iter()))
+                .map(|(&p, (&t, &f))| if p != 0.0 { t } else { f })
+                .collect();
             Ok(Value::Array(ArrayValue::new(shape, data)?))
         }
         Op::Broadcast { operand, dims } => {
@@ -216,22 +225,25 @@ fn eval_instr(
         Op::Reshape(operand) | Op::Copy(operand) => {
             let a = get_array(slots, *operand)?;
             let shape = out_shape(comp, idx)?.clone();
-            ArrayValue::new(shape, a.data.clone()).map(Value::Array)
+            ArrayValue::from_arc(shape, Arc::clone(&a.data)).map(Value::Array)
         }
         Op::Convert(operand) => {
             let a = get_array(slots, *operand)?;
             let shape = out_shape(comp, idx)?.clone();
-            let data = if shape.dtype.is_integer() {
-                a.data.iter().map(|v| v.trunc()).collect()
+            if shape.dtype.is_integer() {
+                let data = a.data.iter().map(|v| v.trunc()).collect();
+                ArrayValue::new(shape, data).map(Value::Array)
             } else if shape.dtype == DType::Pred {
-                a.data
+                let data = a
+                    .data
                     .iter()
                     .map(|&v| if v != 0.0 { 1.0 } else { 0.0 })
-                    .collect()
+                    .collect();
+                ArrayValue::new(shape, data).map(Value::Array)
             } else {
-                a.data.clone()
-            };
-            ArrayValue::new(shape, data).map(Value::Array)
+                // host storage is f32 either way: width-only conversion
+                ArrayValue::from_arc(shape, Arc::clone(&a.data)).map(Value::Array)
+            }
         }
         Op::Transpose { operand, perm } => {
             let a = get_array(slots, *operand)?;
@@ -326,7 +338,23 @@ fn eval_instr(
     }
 }
 
-fn unary(op: UnaryOp, v: f32) -> f32 {
+pub(crate) fn compare_scalar(dir: CmpDir, x: f32, y: f32) -> f32 {
+    let r = match dir {
+        CmpDir::Eq => x == y,
+        CmpDir::Ne => x != y,
+        CmpDir::Lt => x < y,
+        CmpDir::Le => x <= y,
+        CmpDir::Gt => x > y,
+        CmpDir::Ge => x >= y,
+    };
+    if r {
+        1.0
+    } else {
+        0.0
+    }
+}
+
+pub(crate) fn unary(op: UnaryOp, v: f32) -> f32 {
     match op {
         UnaryOp::Negate => -v,
         UnaryOp::Abs => v.abs(),
@@ -373,7 +401,7 @@ fn unary(op: UnaryOp, v: f32) -> f32 {
     }
 }
 
-fn binary_scalar(op: BinaryOp, x: f32, y: f32) -> f32 {
+pub(crate) fn binary_scalar(op: BinaryOp, x: f32, y: f32) -> f32 {
     match op {
         BinaryOp::Add => x + y,
         BinaryOp::Sub => x - y,
@@ -419,7 +447,11 @@ fn zip_broadcast(
     f: impl Fn(f32, f32) -> f32,
 ) -> Result<ArrayValue> {
     let data: Vec<f32> = if a.data.len() == b.data.len() {
-        a.data.iter().zip(&b.data).map(|(&x, &y)| f(x, y)).collect()
+        a.data
+            .iter()
+            .zip(b.data.iter())
+            .map(|(&x, &y)| f(x, y))
+            .collect()
     } else if a.is_scalar() {
         let x = a.data[0];
         b.data.iter().map(|&y| f(x, y)).collect()
@@ -445,6 +477,31 @@ fn binary_elementwise(
     zip_broadcast(a, b, shape, |x, y| binary_scalar(op, x, y))
 }
 
+/// Reject duplicate entries in an op's dimension list with an error naming
+/// the op: duplicates would double-count strides in the offset tables
+/// (`reduce` used to panic with index-out-of-bounds, `broadcast` silently
+/// computed a wrong operand index).
+pub(crate) fn check_unique_dims(op: &str, list: &str, dims: &[usize]) -> Result<()> {
+    for (i, &d) in dims.iter().enumerate() {
+        if dims[..i].contains(&d) {
+            return Err(Error::msg(format!(
+                "{op} {list} {dims:?} contain dimension {d} more than once"
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// XLA's broadcast rule: `dimensions={...}` must be strictly increasing.
+pub(crate) fn check_broadcast_dims_increasing(dims: &[usize]) -> Result<()> {
+    if dims.windows(2).any(|w| w[0] >= w[1]) {
+        return Err(Error::msg(format!(
+            "broadcast dimensions {dims:?} must be strictly increasing"
+        )));
+    }
+    Ok(())
+}
+
 /// `broadcast(operand), dimensions={...}`: `dims[i]` is the output
 /// dimension that operand dimension `i` maps to.
 fn broadcast(a: &ArrayValue, dims: &[usize], shape: Shape) -> Result<ArrayValue> {
@@ -455,6 +512,7 @@ fn broadcast(a: &ArrayValue, dims: &[usize], shape: Shape) -> Result<ArrayValue>
             a.shape.dims.len()
         )));
     }
+    check_broadcast_dims_increasing(dims)?;
     let out_strides = shape.strides();
     for (i, &d) in dims.iter().enumerate() {
         if d >= shape.dims.len() || shape.dims[d] != a.shape.dims[i] {
@@ -599,7 +657,7 @@ fn concat(parts: &[&ArrayValue], dim: usize, shape: Shape) -> Result<ArrayValue>
 /// Additive offset table for a subset of dimensions: enumerates the
 /// coordinates of `dims` (by size) in row-major order and returns each
 /// combination's contribution Σ coord·stride to a flat index.
-fn offset_table(sizes: &[usize], strides: &[usize]) -> Vec<usize> {
+pub(crate) fn offset_table(sizes: &[usize], strides: &[usize]) -> Vec<usize> {
     let total: usize = sizes.iter().product();
     let mut out = Vec::with_capacity(total.max(1));
     out.push(0);
@@ -628,6 +686,7 @@ fn dot_general(
     if lhs_c.len() != rhs_c.len() || lhs_b.len() != rhs_b.len() {
         return Err(Error::msg("dot contracting/batch dimension arity mismatch"));
     }
+    check_dot_dims(lhs_c, rhs_c, lhs_b, rhs_b)?;
     for &d in lhs_c.iter().chain(lhs_b) {
         if d >= a.shape.dims.len() {
             return Err(Error::msg(format!("dot lhs dimension {d} out of range")));
@@ -719,11 +778,40 @@ fn dot_general(
     ArrayValue::new(shape, data)
 }
 
+/// Duplicate / overlap validation shared by both evaluators: every dim may
+/// appear at most once across an operand's batch + contracting lists.
+pub(crate) fn check_dot_dims(
+    lhs_c: &[usize],
+    rhs_c: &[usize],
+    lhs_b: &[usize],
+    rhs_b: &[usize],
+) -> Result<()> {
+    check_unique_dims("dot", "lhs_contracting_dims", lhs_c)?;
+    check_unique_dims("dot", "rhs_contracting_dims", rhs_c)?;
+    check_unique_dims("dot", "lhs_batch_dims", lhs_b)?;
+    check_unique_dims("dot", "rhs_batch_dims", rhs_b)?;
+    for &d in lhs_b {
+        if lhs_c.contains(&d) {
+            return Err(Error::msg(format!(
+                "dot lhs dimension {d} appears in both batch and contracting lists"
+            )));
+        }
+    }
+    for &d in rhs_b {
+        if rhs_c.contains(&d) {
+            return Err(Error::msg(format!(
+                "dot rhs dimension {d} appears in both batch and contracting lists"
+            )));
+        }
+    }
+    Ok(())
+}
+
 /// A `to_apply` region recognised as a plain scalar binary op. The
 /// swapped-operand form (`op(%p1, %p0)`) only qualifies when `op` is
 /// commutative — `subtract(%p1, %p0)` must fall through to the general
 /// interpreter, which evaluates the region as written.
-fn fast_reducer(module: &Module, comp_idx: usize) -> Option<BinaryOp> {
+pub(crate) fn fast_reducer(module: &Module, comp_idx: usize) -> Option<BinaryOp> {
     let comp = module.computations.get(comp_idx)?;
     if comp.params.len() != 2 {
         return None;
@@ -765,6 +853,7 @@ fn reduce(
             return Err(Error::msg("reduce dimension out of range"));
         }
     }
+    check_unique_dims("reduce", "dimensions", dims)?;
     let kept: Vec<usize> = (0..rank).filter(|d| !dims.contains(d)).collect();
     let kept_sizes: Vec<usize> = kept.iter().map(|&d| a.shape.dims[d]).collect();
     let out_elems: usize = kept_sizes.iter().product();

@@ -1,0 +1,437 @@
+//! Hot kernels behind the execution plans in [`crate::plan`].
+//!
+//! Everything here is written against flat `&[f32]` slices with all shape
+//! work done once at plan time:
+//!
+//! * [`Arena`] — per-execution buffer recycling. Plans know each slot's
+//!   last use, so intermediates are returned here the moment they die and
+//!   the next allocation of any size reuses the storage
+//!   (`Arc::try_unwrap` guarantees we never recycle a buffer the caller —
+//!   or an aliasing `reshape` — still holds).
+//! * [`GatherPlan`] — one strided-copy engine for broadcast / transpose /
+//!   slice. The per-element `div`/`mod` coordinate math of the reference
+//!   evaluator is replaced by an odometer walk with precomputed per-dim
+//!   steps, and the innermost contiguous run is `copy_from_slice` /
+//!   `fill`.
+//! * [`DotPlan`] — cache-blocked dot-general with optional deterministic
+//!   multithreading. Work is partitioned over *output rows only*
+//!   (batch × lhs-free), so every output element is accumulated by exactly
+//!   one thread in exactly the reference order, including the lhs
+//!   zero-skip. Results are bit-identical at every thread count.
+//!
+//! The process-wide knobs ([`set_dot_threads`], [`alloc_stats`]) live here
+//! and are re-exported from the crate root.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Requested dot-general thread count: 1 = serial (the default),
+/// 0 = one per available core, n = exactly n.
+static DOT_THREADS: AtomicUsize = AtomicUsize::new(1);
+
+/// Process-wide buffer-allocation counters (fresh, reused) across every
+/// arena; benches snapshot these around a run to report allocs-per-exec.
+static FRESH_ALLOCS: AtomicU64 = AtomicU64::new(0);
+static REUSED_ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+/// Set the dot-general thread count for subsequent executions
+/// (0 = one per available core). Plumbed from the `threads` preset knob.
+pub fn set_dot_threads(n: usize) {
+    DOT_THREADS.store(n, Ordering::Relaxed);
+}
+
+/// The currently requested dot-general thread count (as set, 0 = auto).
+pub fn dot_threads() -> usize {
+    DOT_THREADS.load(Ordering::Relaxed)
+}
+
+/// The thread count to actually use (auto resolved to the core count).
+pub(crate) fn resolve_dot_threads() -> usize {
+    match DOT_THREADS.load(Ordering::Relaxed) {
+        0 => std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1),
+        n => n,
+    }
+}
+
+/// Cumulative (fresh, arena-reused) buffer allocation counts across all
+/// executables in this process.
+pub fn alloc_stats() -> (u64, u64) {
+    (
+        FRESH_ALLOCS.load(Ordering::Relaxed),
+        REUSED_ALLOCS.load(Ordering::Relaxed),
+    )
+}
+
+/// Reset [`alloc_stats`] to zero (bench bookkeeping).
+pub fn reset_alloc_stats() {
+    FRESH_ALLOCS.store(0, Ordering::Relaxed);
+    REUSED_ALLOCS.store(0, Ordering::Relaxed);
+}
+
+/// A free-list of `f32` buffers scoped to one execution, seeded from (and
+/// drained back into) the owning executable's pool so back-to-back
+/// `execute_b` calls reuse each other's intermediates.
+#[derive(Debug, Default)]
+pub struct Arena {
+    free: Vec<Vec<f32>>,
+    fresh: u64,
+    reused: u64,
+}
+
+impl Arena {
+    /// Arena seeded with previously recycled buffers.
+    pub fn with_free(free: Vec<Vec<f32>>) -> Arena {
+        Arena {
+            free,
+            fresh: 0,
+            reused: 0,
+        }
+    }
+
+    /// A zero-filled buffer of `n` elements, recycled when possible.
+    pub fn alloc(&mut self, n: usize) -> Vec<f32> {
+        match self.free.pop() {
+            Some(mut buf) => {
+                self.reused += 1;
+                buf.clear();
+                buf.resize(n, 0.0);
+                buf
+            }
+            None => {
+                self.fresh += 1;
+                vec![0.0f32; n]
+            }
+        }
+    }
+
+    /// Return a dead buffer to the free list — a no-op unless this arena
+    /// holds the last reference (parameters and aliased buffers survive).
+    pub fn recycle(&mut self, data: Arc<Vec<f32>>) {
+        if let Ok(buf) = Arc::try_unwrap(data) {
+            if buf.capacity() > 0 {
+                self.free.push(buf);
+            }
+        }
+    }
+
+    /// Tear down into (free list, fresh count, reused count), publishing
+    /// the counts to the process-wide [`alloc_stats`].
+    pub fn into_parts(self) -> (Vec<Vec<f32>>, u64, u64) {
+        FRESH_ALLOCS.fetch_add(self.fresh, Ordering::Relaxed);
+        REUSED_ALLOCS.fetch_add(self.reused, Ordering::Relaxed);
+        (self.free, self.fresh, self.reused)
+    }
+}
+
+/// A strided copy `out[o] = a[walk(o)]` with the walk precomputed as an
+/// odometer: per output dimension a step into the operand, plus one
+/// innermost run that is contiguous (`step == 1`), a splat (`step == 0`)
+/// or a fixed stride. Covers broadcast, transpose and slice.
+#[derive(Debug)]
+pub struct GatherPlan {
+    base: usize,
+    outer_sizes: Vec<usize>,
+    outer_steps: Vec<usize>,
+    inner_len: usize,
+    inner_step: usize,
+    out_len: usize,
+}
+
+impl GatherPlan {
+    /// From output dims and the operand-index step of each output dim
+    /// (step 0 for dims the operand does not vary along).
+    pub fn new(out_dims: &[usize], steps: &[usize], base: usize) -> GatherPlan {
+        let out_len: usize = out_dims.iter().product();
+        // size-1 dims contribute nothing to the walk
+        let mut dims: Vec<(usize, usize)> = out_dims
+            .iter()
+            .zip(steps)
+            .map(|(&s, &p)| (s, p))
+            .filter(|&(s, _)| s != 1)
+            .collect();
+        let (mut inner_len, mut inner_step) = (1usize, 1usize);
+        if let Some((s, p)) = dims.pop() {
+            inner_len = s;
+            inner_step = p;
+        }
+        // grow the innermost run while the next dim out continues the same
+        // arithmetic sequence (fills require the step to stay 0)
+        while let Some(&(s, p)) = dims.last() {
+            let contiguous = if inner_step == 0 {
+                p == 0
+            } else {
+                p == inner_len * inner_step
+            };
+            if !contiguous {
+                break;
+            }
+            inner_len *= s;
+            dims.pop();
+        }
+        let (outer_sizes, outer_steps) = dims.into_iter().unzip();
+        GatherPlan {
+            base,
+            outer_sizes,
+            outer_steps,
+            inner_len,
+            inner_step,
+            out_len,
+        }
+    }
+
+    /// Number of output elements this plan produces.
+    pub fn out_len(&self) -> usize {
+        self.out_len
+    }
+
+    /// Execute the gather into `out` (`out.len() == self.out_len()`).
+    pub fn run(&self, a: &[f32], out: &mut [f32]) {
+        if self.out_len == 0 {
+            return;
+        }
+        let nd = self.outer_sizes.len();
+        let mut counters = vec![0usize; nd];
+        let mut idx = self.base;
+        let runs = self.out_len / self.inner_len;
+        let mut o = 0usize;
+        for _ in 0..runs {
+            match self.inner_step {
+                0 => out[o..o + self.inner_len].fill(a[idx]),
+                1 => out[o..o + self.inner_len].copy_from_slice(&a[idx..idx + self.inner_len]),
+                s => {
+                    let mut k = idx;
+                    for v in &mut out[o..o + self.inner_len] {
+                        *v = a[k];
+                        k += s;
+                    }
+                }
+            }
+            o += self.inner_len;
+            for d in (0..nd).rev() {
+                counters[d] += 1;
+                idx += self.outer_steps[d];
+                if counters[d] < self.outer_sizes[d] {
+                    break;
+                }
+                counters[d] = 0;
+                idx -= self.outer_sizes[d] * self.outer_steps[d];
+            }
+        }
+    }
+}
+
+/// `iota` along one dimension: value = the middle coordinate, layout
+/// `prefix × size × suffix`.
+pub fn iota_fill(out: &mut [f32], size: usize, suffix: usize) {
+    if suffix == 0 || size == 0 {
+        return;
+    }
+    let period = size * suffix;
+    let mut o = 0usize;
+    while o < out.len() {
+        for v in 0..size {
+            out[o..o + suffix].fill(v as f32);
+            o += suffix;
+        }
+        debug_assert!(o % period == 0);
+    }
+}
+
+/// Dot-general lowered to offset tables over flat storage, plus the block
+/// sizes the executor tiles with. Built once per instruction at plan time.
+#[derive(Debug)]
+pub struct DotPlan {
+    /// Batch offset tables (lhs / rhs), walked in lockstep.
+    pub bl: Vec<usize>,
+    pub br: Vec<usize>,
+    /// Contraction offset tables (lhs / rhs), walked in lockstep — this
+    /// order IS the accumulation order and must match the reference
+    /// evaluator exactly.
+    pub cl: Vec<usize>,
+    pub cr: Vec<usize>,
+    /// Free-dimension offset tables (lhs rows / rhs columns).
+    pub lf: Vec<usize>,
+    pub rf: Vec<usize>,
+    /// Whether the rhs free offsets are 0,1,2,… (trailing free dims).
+    pub rf_contiguous: bool,
+    /// Total output elements (`bl.len() * lf.len() * rf.len()`).
+    pub out_len: usize,
+    /// 2·b·m·n·k — used to size the thread pool to the work.
+    pub flops: usize,
+}
+
+/// lhs rows sharing one rhs element load in the blocked microkernel.
+const ROW_TILE: usize = 4;
+/// Accumulator/rhs row segment length per pass (f32s; 2 KiB ≪ L1).
+const COL_BLOCK: usize = 512;
+/// Don't engage an extra thread below this many flops of work for it.
+const MIN_FLOPS_PER_THREAD: usize = 1 << 18;
+
+impl DotPlan {
+    /// Execute into a zero-initialised `out` of `self.out_len` elements.
+    ///
+    /// Determinism contract: each output element is owned by exactly one
+    /// thread and accumulated serially over the contraction table in
+    /// order, skipping lhs terms that are exactly `0.0` — the same order
+    /// and the same skips as the reference evaluator, at every `threads`.
+    pub fn execute(&self, a: &[f32], b: &[f32], out: &mut [f32], threads: usize) {
+        let nrf = self.rf.len();
+        let nlf = self.lf.len();
+        let rows = self.bl.len() * nlf;
+        if rows == 0 || nrf == 0 {
+            return;
+        }
+        let threads = self.effective_threads(threads, rows);
+        if threads <= 1 {
+            self.run_rows(a, b, out, 0, rows);
+            return;
+        }
+        let per = rows.div_ceil(threads);
+        std::thread::scope(|scope| {
+            let mut rest = out;
+            let mut start = 0usize;
+            while start < rows {
+                let end = (start + per).min(rows);
+                let (chunk, tail) = rest.split_at_mut((end - start) * nrf);
+                rest = tail;
+                scope.spawn(move || self.run_rows(a, b, chunk, start, end));
+                start = end;
+            }
+        });
+    }
+
+    fn effective_threads(&self, requested: usize, rows: usize) -> usize {
+        if requested <= 1 || rows <= 1 {
+            return 1;
+        }
+        let by_work = (self.flops / MIN_FLOPS_PER_THREAD).max(1);
+        requested.min(rows).min(by_work)
+    }
+
+    /// Global output rows `g0..g1`; `out` holds exactly those rows.
+    fn run_rows(&self, a: &[f32], b: &[f32], out: &mut [f32], g0: usize, g1: usize) {
+        let nlf = self.lf.len();
+        let nrf = self.rf.len();
+        let mut g = g0;
+        while g < g1 {
+            let bi = g / nlf;
+            let li = g - bi * nlf;
+            let run = ((bi + 1) * nlf).min(g1) - g;
+            let base = (g - g0) * nrf;
+            self.run_batch_rows(a, b, &mut out[base..base + run * nrf], bi, li, run);
+            g += run;
+        }
+    }
+
+    /// `run` consecutive lhs-free rows of batch `bi`, starting at `li0`.
+    fn run_batch_rows(
+        &self,
+        a: &[f32],
+        b: &[f32],
+        out: &mut [f32],
+        bi: usize,
+        li0: usize,
+        run: usize,
+    ) {
+        let nrf = self.rf.len();
+        let bl_off = self.bl[bi];
+        let br_off = self.br[bi];
+        if !self.rf_contiguous {
+            // rare layout (rhs free dims not trailing): plain rows, still
+            // in reference accumulation order
+            for t in 0..run {
+                let row = &mut out[t * nrf..(t + 1) * nrf];
+                let lbase = bl_off + self.lf[li0 + t];
+                for (&cl_off, &cr_off) in self.cl.iter().zip(&self.cr) {
+                    let x = a[lbase + cl_off];
+                    if x == 0.0 {
+                        continue;
+                    }
+                    let rbase = br_off + cr_off;
+                    for (acc, &roff) in row.iter_mut().zip(&self.rf) {
+                        *acc += x * b[rbase + roff];
+                    }
+                }
+            }
+            return;
+        }
+        // blocked microkernel: tiles of ROW_TILE accumulator rows share
+        // each rhs row segment (still hot in L1 across the tile), and the
+        // inner j-loop over a COL_BLOCK segment autovectorises
+        let mut t0 = 0usize;
+        while t0 < run {
+            let tl = ROW_TILE.min(run - t0);
+            let tile = &mut out[t0 * nrf..(t0 + tl) * nrf];
+            let mut j0 = 0usize;
+            while j0 < nrf {
+                let j1 = (j0 + COL_BLOCK).min(nrf);
+                for (&cl_off, &cr_off) in self.cl.iter().zip(&self.cr) {
+                    let rrow = &b[br_off + cr_off + j0..br_off + cr_off + j1];
+                    for t in 0..tl {
+                        let x = a[bl_off + self.lf[li0 + t0 + t] + cl_off];
+                        if x == 0.0 {
+                            continue;
+                        }
+                        let acc = &mut tile[t * nrf + j0..t * nrf + j1];
+                        for (o, &y) in acc.iter_mut().zip(rrow) {
+                            *o += x * y;
+                        }
+                    }
+                }
+                j0 = j1;
+            }
+            t0 += tl;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arena_reuses_unshared_buffers() {
+        let mut arena = Arena::default();
+        let a = arena.alloc(16);
+        assert_eq!(a.len(), 16);
+        arena.recycle(Arc::new(a));
+        let b = arena.alloc(4);
+        assert!(b.iter().all(|&v| v == 0.0));
+        let shared = Arc::new(vec![1.0f32; 8]);
+        let keep = Arc::clone(&shared);
+        arena.recycle(shared); // refcount 2: must NOT enter the free list
+        let (free, fresh, reused) = arena.into_parts();
+        assert_eq!(free.len(), 0, "shared buffer was not recycled");
+        assert_eq!((fresh, reused), (1, 1));
+        assert_eq!(keep.len(), 8);
+    }
+
+    #[test]
+    fn gather_merges_contiguous_runs() {
+        // transpose-free identity: one big run
+        let plan = GatherPlan::new(&[2, 3], &[3, 1], 0);
+        let a = [0.0, 1.0, 2.0, 3.0, 4.0, 5.0];
+        let mut out = [0.0f32; 6];
+        plan.run(&a, &mut out);
+        assert_eq!(out, a);
+        // transpose [2,3] -> [3,2]
+        let plan = GatherPlan::new(&[3, 2], &[1, 3], 0);
+        let mut out = [0.0f32; 6];
+        plan.run(&a, &mut out);
+        assert_eq!(out, [0.0, 3.0, 1.0, 4.0, 2.0, 5.0]);
+        // broadcast a scalar-ish run: step-0 inner
+        let plan = GatherPlan::new(&[2, 2], &[1, 0], 0);
+        let mut out = [0.0f32; 4];
+        plan.run(&[7.0, 9.0], &mut out);
+        assert_eq!(out, [7.0, 7.0, 9.0, 9.0]);
+    }
+
+    #[test]
+    fn iota_fill_matches_definition() {
+        let mut out = [0.0f32; 12]; // dims [2,3,2], iota dim 1
+        iota_fill(&mut out, 3, 2);
+        assert_eq!(out, [0.0, 0.0, 1.0, 1.0, 2.0, 2.0, 0.0, 0.0, 1.0, 1.0, 2.0, 2.0]);
+    }
+}

@@ -19,21 +19,55 @@
 //!   thread-safety contract `snac_pack::eval::ParallelEvaluator` relies on —
 //!   real PJRT clients are thread-safe for concurrent `Execute` calls, so a
 //!   drop-in replacement keeps that contract;
-//! * execution happens in-process: `compile` finishes parsing/validation,
-//!   `execute_b` runs the interpreter. No native XLA, no JAX.
+//! * execution happens in-process: `compile` lowers the module into a
+//!   cached execution plan ([`plan`]) and `execute_b` runs the blocked
+//!   kernels ([`kernels`]) over it, recycling intermediate buffers through
+//!   a per-executable arena. The naive evaluator ([`interp`]) is retained
+//!   as the bit-exact reference ([`PjRtLoadedExecutable::execute_b_reference`],
+//!   [`set_reference_mode`], `SNAC_XLA_REFERENCE=1`). No native XLA, no JAX.
+//!
+//! Process-wide knobs: [`set_dot_threads`] sizes the deterministic
+//! dot-general thread pool (results are bit-identical at every setting —
+//! see `kernels.rs` for the contract), [`alloc_stats`] counts fresh vs
+//! arena-recycled buffer allocations for the benches.
 //!
 //! See `README.md` in this directory for the supported op set and for how
 //! the real PJRT bindings still swap in.
 
 use std::fmt;
 use std::path::Path;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
 
 pub mod interp;
+pub mod kernels;
 pub mod parser;
+pub mod plan;
 
 use interp::{ArrayValue, Value};
+use kernels::Arena;
 use parser::{DType, Module, Shape};
+
+pub use kernels::{alloc_stats, dot_threads, reset_alloc_stats, set_dot_threads};
+
+/// When set (or when `SNAC_XLA_REFERENCE=1` is in the environment),
+/// `execute_b` routes through the retained naive reference evaluator
+/// instead of the compiled execution plan. Used by the differential CI
+/// runs that assert the two paths produce byte-identical outputs.
+static FORCE_REFERENCE: AtomicBool = AtomicBool::new(false);
+static ENV_REFERENCE: OnceLock<bool> = OnceLock::new();
+
+/// Force (or stop forcing) the reference evaluator for this process.
+pub fn set_reference_mode(on: bool) {
+    FORCE_REFERENCE.store(on, Ordering::Relaxed);
+}
+
+/// Whether `execute_b` currently uses the reference evaluator.
+pub fn reference_mode() -> bool {
+    FORCE_REFERENCE.load(Ordering::Relaxed)
+        || *ENV_REFERENCE
+            .get_or_init(|| std::env::var("SNAC_XLA_REFERENCE").is_ok_and(|v| v == "1"))
+}
 
 /// Interpreter/facade error.
 #[derive(Debug)]
@@ -206,17 +240,82 @@ impl Literal {
     }
 }
 
-/// A compiled, loaded executable: the parsed module plus its entry
-/// parameter signature for argument validation.
+/// A compiled, loaded executable: the parsed module, its cached execution
+/// plan, and a pool of recycled intermediate buffers.
 #[derive(Debug)]
 pub struct PjRtLoadedExecutable {
     module: Arc<Module>,
+    plan: plan::ExecPlan,
+    pool: BufferPool,
+}
+
+/// Recycled intermediate buffers shared by this executable's executions:
+/// each `execute_b` seeds its arena from here and drains it back after,
+/// so back-to-back calls allocate almost nothing. Concurrent calls simply
+/// split the pool (or run fresh) — never block on each other.
+#[derive(Debug, Default)]
+struct BufferPool {
+    free: Mutex<Vec<Vec<f32>>>,
+    fresh: AtomicU64,
+    reused: AtomicU64,
+}
+
+/// Keep at most this many recycled buffers per executable.
+const POOL_CAP: usize = 256;
+
+impl BufferPool {
+    fn take(&self) -> Vec<Vec<f32>> {
+        let mut guard = self.free.lock().unwrap_or_else(|e| e.into_inner());
+        std::mem::take(&mut *guard)
+    }
+
+    fn put(&self, arena: Arena) {
+        let (mut free, fresh, reused) = arena.into_parts();
+        self.fresh.fetch_add(fresh, Ordering::Relaxed);
+        self.reused.fetch_add(reused, Ordering::Relaxed);
+        let mut guard = self.free.lock().unwrap_or_else(|e| e.into_inner());
+        if guard.is_empty() {
+            free.truncate(POOL_CAP);
+            *guard = free;
+        } else {
+            while guard.len() < POOL_CAP {
+                match free.pop() {
+                    Some(buf) => guard.push(buf),
+                    None => break,
+                }
+            }
+        }
+    }
 }
 
 impl PjRtLoadedExecutable {
     /// Execute against borrowed input buffers (the leak-free path: inputs
-    /// stay owned by the caller and are freed on drop).
+    /// stay owned by the caller and are freed on drop). Runs the compiled
+    /// execution plan unless [`reference_mode`] is on.
     pub fn execute_b(&self, args: &[PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        if reference_mode() {
+            return self.execute_b_reference(args);
+        }
+        let entry = self.module.entry_computation();
+        if args.len() != entry.params.len() {
+            return Err(Error::msg(format!(
+                "executable takes {} arguments, got {}",
+                entry.params.len(),
+                args.len()
+            )));
+        }
+        // refcount bumps, not copies: parameters share the caller's storage
+        let values: Vec<Value> = args.iter().map(|b| b.value.clone()).collect();
+        let mut arena = Arena::with_free(self.pool.take());
+        let result = self.plan.execute_entry(&values, &mut arena);
+        self.pool.put(arena);
+        Ok(vec![vec![PjRtBuffer { value: result? }]])
+    }
+
+    /// Execute through the retained naive reference evaluator
+    /// ([`interp::evaluate`]) — the bit-exactness oracle for the planned
+    /// kernels. Slow; for tests, benches and audits.
+    pub fn execute_b_reference(&self, args: &[PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
         let entry = self.module.entry_computation();
         if args.len() != entry.params.len() {
             return Err(Error::msg(format!(
@@ -227,8 +326,16 @@ impl PjRtLoadedExecutable {
         }
         let values: Vec<Value> = args.iter().map(|b| b.value.clone()).collect();
         let result = interp::evaluate(&self.module, self.module.entry, &values)?;
-        // single replica, single result buffer (possibly a tuple)
         Ok(vec![vec![PjRtBuffer { value: result }]])
+    }
+
+    /// (fresh, arena-reused) intermediate-buffer allocation counts across
+    /// this executable's planned executions.
+    pub fn arena_alloc_stats(&self) -> (u64, u64) {
+        (
+            self.pool.fresh.load(Ordering::Relaxed),
+            self.pool.reused.load(Ordering::Relaxed),
+        )
     }
 }
 
@@ -249,11 +356,15 @@ impl PjRtClient {
         "interpreter".to_string()
     }
 
-    /// "Compile" a computation: validation happened at parse time, so this
-    /// just pins the module for execution.
+    /// Compile a computation: lower the parsed module into a cached
+    /// execution plan (shape/stride tables, liveness, kernel selection).
+    /// Malformed modules fail here, naming the offending instruction.
     pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        let plan = plan::ExecPlan::new(Arc::clone(&comp.module))?;
         Ok(PjRtLoadedExecutable {
             module: Arc::clone(&comp.module),
+            plan,
+            pool: BufferPool::default(),
         })
     }
 

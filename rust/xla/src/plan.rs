@@ -1,0 +1,1013 @@
+//! Compile-time lowering of parsed HLO modules into execution plans.
+//!
+//! `PjRtClient::compile` calls [`ExecPlan::new`] once per executable. The
+//! plan precomputes everything the reference evaluator re-derives on every
+//! `execute_b`:
+//!
+//! * each instruction's resolved output [`Shape`] and all shape/stride
+//!   validation (a malformed module now fails at compile time, naming the
+//!   instruction, instead of on first execution);
+//! * offset tables and odometer walkers for broadcast / transpose /
+//!   slice / iota / reduce / dot-general ([`GatherPlan`] / [`DotPlan`]);
+//! * [`fast_reducer`] recognition for `reduce` regions;
+//! * per-slot **last-use liveness**: after the last step that reads a
+//!   slot, its buffer is handed back to the [`Arena`] and recycled by
+//!   later allocations, instead of every intermediate living to the end;
+//! * the entry parameter signature, so `execute` validates argument dims
+//!   up front and `Op::Parameter` becomes a refcount bump.
+//!
+//! Execution then walks the step list with no per-call `div`/`mod`
+//! coordinate math and no per-op re-validation. The numerics contract is
+//! bit-exactness against [`crate::interp::evaluate`] — asserted by
+//! `tests/differential.rs` — including the dot-general accumulation order
+//! at every `threads` setting.
+
+use std::sync::Arc;
+
+use crate::interp::{self, ArrayValue, Value};
+use crate::kernels::{self, Arena, DotPlan, GatherPlan};
+use crate::parser::{BinaryOp, CmpDir, Computation, Module, Op, Shape, UnaryOp};
+use crate::{Error, Result};
+
+/// A compiled module: one [`CompPlan`] per computation.
+#[derive(Debug)]
+pub struct ExecPlan {
+    module: Arc<Module>,
+    comps: Vec<CompPlan>,
+}
+
+#[derive(Debug)]
+struct CompPlan {
+    name: String,
+    steps: Vec<Step>,
+    /// Slots whose last use is step `i` (never includes the root).
+    free_after: Vec<Vec<usize>>,
+    root: usize,
+    n_params: usize,
+    /// Declared array shape per parameter (`None` for tuple-shaped).
+    param_shapes: Vec<Option<Shape>>,
+}
+
+#[derive(Debug)]
+struct Step {
+    name: String,
+    kind: StepKind,
+}
+
+/// How a binary/compare step pairs its operands (resolved at plan time
+/// from the declared shapes; mirrors `interp::zip_broadcast`).
+#[derive(Debug, Clone, Copy)]
+enum EwForm {
+    Equal,
+    AScalar,
+    BScalar,
+}
+
+#[derive(Debug)]
+enum StepKind {
+    Parameter(usize),
+    /// Constant materialised once at plan time; execution is an Arc bump.
+    Constant(Value),
+    Unary {
+        op: UnaryOp,
+        a: usize,
+        shape: Shape,
+    },
+    Binary {
+        op: BinaryOp,
+        a: usize,
+        b: usize,
+        form: EwForm,
+        shape: Shape,
+    },
+    Compare {
+        dir: CmpDir,
+        a: usize,
+        b: usize,
+        form: EwForm,
+        shape: Shape,
+    },
+    Select {
+        pred: usize,
+        on_true: usize,
+        on_false: usize,
+        pred_scalar: bool,
+        shape: Shape,
+    },
+    /// Broadcast of a single-element operand.
+    Fill {
+        a: usize,
+        shape: Shape,
+    },
+    /// Broadcast / transpose / slice as one precomputed strided copy.
+    Gather {
+        a: usize,
+        plan: GatherPlan,
+        shape: Shape,
+    },
+    /// Reshape / copy / width-only convert: same storage, new shape.
+    Alias {
+        a: usize,
+        shape: Shape,
+    },
+    ConvertInt {
+        a: usize,
+        shape: Shape,
+    },
+    ConvertPred {
+        a: usize,
+        shape: Shape,
+    },
+    Concat {
+        parts: Vec<usize>,
+        /// `dims[dim] * inner` per part.
+        chunks: Vec<usize>,
+        outer: usize,
+        shape: Shape,
+    },
+    Iota {
+        size: usize,
+        suffix: usize,
+        shape: Shape,
+    },
+    Dot {
+        lhs: usize,
+        rhs: usize,
+        plan: DotPlan,
+        shape: Shape,
+    },
+    Reduce {
+        a: usize,
+        init: usize,
+        kept_offsets: Vec<usize>,
+        red_offsets: Vec<usize>,
+        fast: Option<BinaryOp>,
+        to_apply: usize,
+        shape: Shape,
+    },
+    MakeTuple(Vec<usize>),
+    Gte {
+        a: usize,
+        index: usize,
+    },
+}
+
+impl ExecPlan {
+    /// Lower every computation of `module` into planned steps.
+    pub fn new(module: Arc<Module>) -> Result<ExecPlan> {
+        let comps = module
+            .computations
+            .iter()
+            .map(|comp| plan_computation(&module, comp))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ExecPlan { module, comps })
+    }
+
+    /// Run the entry computation against `args`, recycling intermediates
+    /// through `arena`.
+    pub fn execute_entry(&self, args: &[Value], arena: &mut Arena) -> Result<Value> {
+        self.execute(self.module.entry, args, arena)
+    }
+
+    fn execute(&self, comp_idx: usize, args: &[Value], arena: &mut Arena) -> Result<Value> {
+        let comp = &self.comps[comp_idx];
+        if args.len() != comp.n_params {
+            return Err(Error::msg(format!(
+                "computation `{}` takes {} parameters, got {} arguments",
+                comp.name,
+                comp.n_params,
+                args.len()
+            )));
+        }
+        for (n, decl) in comp.param_shapes.iter().enumerate() {
+            if let (Some(decl), Value::Array(a)) = (decl, &args[n]) {
+                if decl.elems() != a.data.len() {
+                    return Err(Error::msg(format!(
+                        "parameter {n} expects shape {:?} ({} elements), argument has {}",
+                        decl.dims,
+                        decl.elems(),
+                        a.data.len()
+                    )));
+                }
+                if decl.dims != a.shape.dims {
+                    return Err(Error::msg(format!(
+                        "parameter {n} expects dims {:?}, argument uploaded as {:?}",
+                        decl.dims, a.shape.dims
+                    )));
+                }
+            }
+        }
+        let mut slots: Vec<Option<Value>> = vec![None; comp.steps.len()];
+        for (idx, step) in comp.steps.iter().enumerate() {
+            let value = self
+                .run_step(step, &slots, args, arena)
+                .map_err(|e| {
+                    Error::msg(format!(
+                        "evaluating `%{}` in computation `{}`: {e}",
+                        step.name, comp.name
+                    ))
+                })?;
+            slots[idx] = Some(value);
+            for &dead in &comp.free_after[idx] {
+                if let Some(v) = slots[dead].take() {
+                    recycle_value(arena, v);
+                }
+            }
+        }
+        slots[comp.root]
+            .take()
+            .ok_or_else(|| Error::msg("root instruction produced no value"))
+    }
+
+    fn run_step(
+        &self,
+        step: &Step,
+        slots: &[Option<Value>],
+        args: &[Value],
+        arena: &mut Arena,
+    ) -> Result<Value> {
+        match &step.kind {
+            StepKind::Parameter(n) => args
+                .get(*n)
+                .cloned()
+                .ok_or_else(|| Error::msg(format!("missing argument {n}"))),
+            StepKind::Constant(value) => Ok(value.clone()),
+            StepKind::Unary { op, a, shape } => {
+                let a = get_array(slots, *a)?;
+                let mut out = arena.alloc(shape.elems());
+                for (o, &v) in out.iter_mut().zip(a.data.iter()) {
+                    *o = interp::unary(*op, v);
+                }
+                ArrayValue::new(shape.clone(), out).map(Value::Array)
+            }
+            StepKind::Binary {
+                op,
+                a,
+                b,
+                form,
+                shape,
+            } => {
+                let (a, b) = (get_array(slots, *a)?, get_array(slots, *b)?);
+                let mut out = arena.alloc(shape.elems());
+                ew_binary(|x, y| interp::binary_scalar(*op, x, y), a, b, *form, &mut out);
+                ArrayValue::new(shape.clone(), out).map(Value::Array)
+            }
+            StepKind::Compare {
+                dir,
+                a,
+                b,
+                form,
+                shape,
+            } => {
+                let (a, b) = (get_array(slots, *a)?, get_array(slots, *b)?);
+                let mut out = arena.alloc(shape.elems());
+                ew_binary(|x, y| interp::compare_scalar(*dir, x, y), a, b, *form, &mut out);
+                ArrayValue::new(shape.clone(), out).map(Value::Array)
+            }
+            StepKind::Select {
+                pred,
+                on_true,
+                on_false,
+                pred_scalar,
+                shape,
+            } => {
+                let p = get_array(slots, *pred)?;
+                let t = get_array(slots, *on_true)?;
+                let f = get_array(slots, *on_false)?;
+                if *pred_scalar {
+                    let picked = if p.data[0] != 0.0 { t } else { f };
+                    return ArrayValue::from_arc(shape.clone(), Arc::clone(&picked.data))
+                        .map(Value::Array);
+                }
+                let mut out = arena.alloc(shape.elems());
+                for ((o, &p), (&t, &f)) in out
+                    .iter_mut()
+                    .zip(p.data.iter())
+                    .zip(t.data.iter().zip(f.data.iter()))
+                {
+                    *o = if p != 0.0 { t } else { f };
+                }
+                ArrayValue::new(shape.clone(), out).map(Value::Array)
+            }
+            StepKind::Fill { a, shape } => {
+                let a = get_array(slots, *a)?;
+                let mut out = arena.alloc(shape.elems());
+                out.fill(a.data[0]);
+                ArrayValue::new(shape.clone(), out).map(Value::Array)
+            }
+            StepKind::Gather { a, plan, shape } => {
+                let a = get_array(slots, *a)?;
+                let mut out = arena.alloc(plan.out_len());
+                plan.run(&a.data, &mut out);
+                ArrayValue::new(shape.clone(), out).map(Value::Array)
+            }
+            StepKind::Alias { a, shape } => {
+                let a = get_array(slots, *a)?;
+                ArrayValue::from_arc(shape.clone(), Arc::clone(&a.data)).map(Value::Array)
+            }
+            StepKind::ConvertInt { a, shape } => {
+                let a = get_array(slots, *a)?;
+                let mut out = arena.alloc(shape.elems());
+                for (o, &v) in out.iter_mut().zip(a.data.iter()) {
+                    *o = v.trunc();
+                }
+                ArrayValue::new(shape.clone(), out).map(Value::Array)
+            }
+            StepKind::ConvertPred { a, shape } => {
+                let a = get_array(slots, *a)?;
+                let mut out = arena.alloc(shape.elems());
+                for (o, &v) in out.iter_mut().zip(a.data.iter()) {
+                    *o = if v != 0.0 { 1.0 } else { 0.0 };
+                }
+                ArrayValue::new(shape.clone(), out).map(Value::Array)
+            }
+            StepKind::Concat {
+                parts,
+                chunks,
+                outer,
+                shape,
+            } => {
+                let values = parts
+                    .iter()
+                    .map(|&i| get_array(slots, i))
+                    .collect::<Result<Vec<_>>>()?;
+                let mut out = arena.alloc(shape.elems());
+                let mut o = 0usize;
+                for oidx in 0..*outer {
+                    for (p, &chunk) in values.iter().zip(chunks) {
+                        out[o..o + chunk]
+                            .copy_from_slice(&p.data[oidx * chunk..(oidx + 1) * chunk]);
+                        o += chunk;
+                    }
+                }
+                ArrayValue::new(shape.clone(), out).map(Value::Array)
+            }
+            StepKind::Iota { size, suffix, shape } => {
+                let mut out = arena.alloc(shape.elems());
+                kernels::iota_fill(&mut out, *size, *suffix);
+                ArrayValue::new(shape.clone(), out).map(Value::Array)
+            }
+            StepKind::Dot {
+                lhs,
+                rhs,
+                plan,
+                shape,
+            } => {
+                let (a, b) = (get_array(slots, *lhs)?, get_array(slots, *rhs)?);
+                let mut out = arena.alloc(plan.out_len);
+                plan.execute(&a.data, &b.data, &mut out, kernels::resolve_dot_threads());
+                ArrayValue::new(shape.clone(), out).map(Value::Array)
+            }
+            StepKind::Reduce {
+                a,
+                init,
+                kept_offsets,
+                red_offsets,
+                fast,
+                to_apply,
+                shape,
+            } => {
+                let arr = get_array(slots, *a)?;
+                let init = get_array(slots, *init)?;
+                if init.data.len() != 1 {
+                    return Err(Error::msg("reduce init value must be a scalar"));
+                }
+                let init = init.data[0];
+                let mut out = arena.alloc(shape.elems());
+                out.fill(init);
+                match fast {
+                    Some(op) => {
+                        for (o, &ko) in out.iter_mut().zip(kept_offsets) {
+                            let mut acc = *o;
+                            for &ro in red_offsets {
+                                acc = interp::binary_scalar(*op, acc, arr.data[ko + ro]);
+                            }
+                            *o = acc;
+                        }
+                    }
+                    None => {
+                        // rare: interpret the region per element, exactly
+                        // like the reference evaluator
+                        let dtype = arr.shape.dtype;
+                        for (o, &ko) in out.iter_mut().zip(kept_offsets) {
+                            let mut acc = *o;
+                            for &ro in red_offsets {
+                                let r = interp::evaluate(
+                                    &self.module,
+                                    *to_apply,
+                                    &[
+                                        Value::Array(ArrayValue::scalar(acc, dtype)),
+                                        Value::Array(ArrayValue::scalar(arr.data[ko + ro], dtype)),
+                                    ],
+                                )?;
+                                acc = r.array()?.data[0];
+                            }
+                            *o = acc;
+                        }
+                    }
+                }
+                ArrayValue::new(shape.clone(), out).map(Value::Array)
+            }
+            StepKind::MakeTuple(parts) => {
+                let elems = parts
+                    .iter()
+                    .map(|&i| get(slots, i).cloned())
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(Value::Tuple(elems))
+            }
+            StepKind::Gte { a, index } => match get(slots, *a)? {
+                Value::Tuple(elems) => elems
+                    .get(*index)
+                    .cloned()
+                    .ok_or_else(|| Error::msg(format!("tuple has no element {index}"))),
+                Value::Array(_) => Err(Error::msg("get-tuple-element of a non-tuple")),
+            },
+        }
+    }
+}
+
+fn get<'a>(slots: &'a [Option<Value>], idx: usize) -> Result<&'a Value> {
+    slots
+        .get(idx)
+        .and_then(|v| v.as_ref())
+        .ok_or_else(|| Error::msg("operand evaluated out of order (or freed early)"))
+}
+
+fn get_array<'a>(slots: &'a [Option<Value>], idx: usize) -> Result<&'a ArrayValue> {
+    get(slots, idx)?.array()
+}
+
+fn ew_binary(
+    f: impl Fn(f32, f32) -> f32,
+    a: &ArrayValue,
+    b: &ArrayValue,
+    form: EwForm,
+    out: &mut [f32],
+) {
+    match form {
+        EwForm::Equal => {
+            for ((o, &x), &y) in out.iter_mut().zip(a.data.iter()).zip(b.data.iter()) {
+                *o = f(x, y);
+            }
+        }
+        EwForm::AScalar => {
+            let x = a.data[0];
+            for (o, &y) in out.iter_mut().zip(b.data.iter()) {
+                *o = f(x, y);
+            }
+        }
+        EwForm::BScalar => {
+            let y = b.data[0];
+            for (o, &x) in out.iter_mut().zip(a.data.iter()) {
+                *o = f(x, y);
+            }
+        }
+    }
+}
+
+/// Drop a dead slot value, recycling any uniquely-owned array storage.
+fn recycle_value(arena: &mut Arena, value: Value) {
+    match value {
+        Value::Array(a) => arena.recycle(a.data),
+        Value::Tuple(elems) => {
+            for e in elems {
+                recycle_value(arena, e);
+            }
+        }
+    }
+}
+
+/// Slot indices an op reads, in evaluation order.
+fn op_operands(op: &Op) -> Vec<usize> {
+    match op {
+        Op::Parameter(_) | Op::Constant(_) | Op::Iota { .. } => vec![],
+        Op::Unary(_, a) | Op::Reshape(a) | Op::Copy(a) | Op::Convert(a) => vec![*a],
+        Op::Binary(_, a, b) => vec![*a, *b],
+        Op::Compare { lhs, rhs, .. } => vec![*lhs, *rhs],
+        Op::Select {
+            pred,
+            on_true,
+            on_false,
+        } => vec![*pred, *on_true, *on_false],
+        Op::Broadcast { operand, .. }
+        | Op::Transpose { operand, .. }
+        | Op::Slice { operand, .. }
+        | Op::GetTupleElement { operand, .. } => vec![*operand],
+        Op::Concat { operands, .. } => operands.clone(),
+        Op::Tuple(operands) => operands.clone(),
+        Op::Dot { lhs, rhs, .. } => vec![*lhs, *rhs],
+        Op::Reduce { operand, init, .. } => vec![*operand, *init],
+    }
+}
+
+fn plan_computation(module: &Module, comp: &Computation) -> Result<CompPlan> {
+    let mut steps = Vec::with_capacity(comp.instrs.len());
+    for (idx, instr) in comp.instrs.iter().enumerate() {
+        let kind = plan_instr(module, comp, idx).map_err(|e| {
+            Error::msg(format!(
+                "planning `%{}` in computation `{}`: {e}",
+                instr.name, comp.name
+            ))
+        })?;
+        steps.push(Step {
+            name: instr.name.clone(),
+            kind,
+        });
+    }
+    // last-use liveness: slot s may be freed right after the last step
+    // that reads it (a never-read slot dies at its own step)
+    let n = comp.instrs.len();
+    let mut last_use: Vec<usize> = (0..n).collect();
+    for (idx, instr) in comp.instrs.iter().enumerate() {
+        for operand in op_operands(&instr.op) {
+            last_use[operand] = idx;
+        }
+    }
+    let mut free_after: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (slot, &at) in last_use.iter().enumerate() {
+        if slot != comp.root {
+            free_after[at].push(slot);
+        }
+    }
+    let param_shapes = comp
+        .params
+        .iter()
+        .map(|&i| comp.instrs[i].shape.array().ok().cloned())
+        .collect();
+    Ok(CompPlan {
+        name: comp.name.clone(),
+        steps,
+        free_after,
+        root: comp.root,
+        n_params: comp.params.len(),
+        param_shapes,
+    })
+}
+
+fn arr_shape<'a>(comp: &'a Computation, idx: usize) -> Result<&'a Shape> {
+    comp.instrs[idx].shape.array()
+}
+
+/// Binary/compare operand pairing from declared element counts (mirrors
+/// the implicit-scalar-broadcast liberty of `interp::zip_broadcast`).
+fn ew_form(a: &Shape, b: &Shape) -> Result<EwForm> {
+    let (na, nb) = (a.elems(), b.elems());
+    if na == nb {
+        Ok(EwForm::Equal)
+    } else if na == 1 {
+        Ok(EwForm::AScalar)
+    } else if nb == 1 {
+        Ok(EwForm::BScalar)
+    } else {
+        Err(Error::msg(format!(
+            "elementwise operands have mismatched sizes {na} vs {nb}"
+        )))
+    }
+}
+
+fn check_elems(what: &str, got: usize, shape: &Shape) -> Result<()> {
+    if shape.elems() != got {
+        return Err(Error::msg(format!(
+            "{what}: declared shape {:?} holds {} elements, computation produces {got}",
+            shape.dims,
+            shape.elems()
+        )));
+    }
+    Ok(())
+}
+
+fn plan_instr(module: &Module, comp: &Computation, idx: usize) -> Result<StepKind> {
+    let instr = &comp.instrs[idx];
+    match &instr.op {
+        Op::Parameter(n) => Ok(StepKind::Parameter(*n)),
+        Op::Constant(data) => {
+            let shape = instr.shape.array()?.clone();
+            let value = ArrayValue::new(shape, data.clone())?;
+            Ok(StepKind::Constant(Value::Array(value)))
+        }
+        Op::Unary(op, a) => {
+            let shape = instr.shape.array()?.clone();
+            check_elems("unary", arr_shape(comp, *a)?.elems(), &shape)?;
+            Ok(StepKind::Unary {
+                op: *op,
+                a: *a,
+                shape,
+            })
+        }
+        Op::Binary(op, a, b) => {
+            let shape = instr.shape.array()?.clone();
+            let form = ew_form(arr_shape(comp, *a)?, arr_shape(comp, *b)?)?;
+            check_elems(
+                "binary",
+                arr_shape(comp, *a)?.elems().max(arr_shape(comp, *b)?.elems()),
+                &shape,
+            )?;
+            Ok(StepKind::Binary {
+                op: *op,
+                a: *a,
+                b: *b,
+                form,
+                shape,
+            })
+        }
+        Op::Compare { dir, lhs, rhs } => {
+            let shape = instr.shape.array()?.clone();
+            let form = ew_form(arr_shape(comp, *lhs)?, arr_shape(comp, *rhs)?)?;
+            check_elems(
+                "compare",
+                arr_shape(comp, *lhs)?
+                    .elems()
+                    .max(arr_shape(comp, *rhs)?.elems()),
+                &shape,
+            )?;
+            Ok(StepKind::Compare {
+                dir: *dir,
+                a: *lhs,
+                b: *rhs,
+                form,
+                shape,
+            })
+        }
+        Op::Select {
+            pred,
+            on_true,
+            on_false,
+        } => {
+            let shape = instr.shape.array()?.clone();
+            let (pt, pf) = (arr_shape(comp, *on_true)?, arr_shape(comp, *on_false)?);
+            if pt.elems() != pf.elems() {
+                return Err(Error::msg("select branches have mismatched sizes"));
+            }
+            let p = arr_shape(comp, *pred)?;
+            let pred_scalar = p.elems() == 1;
+            if !pred_scalar && p.elems() != pt.elems() {
+                return Err(Error::msg("select predicate has mismatched size"));
+            }
+            check_elems("select", pt.elems(), &shape)?;
+            Ok(StepKind::Select {
+                pred: *pred,
+                on_true: *on_true,
+                on_false: *on_false,
+                pred_scalar,
+                shape,
+            })
+        }
+        Op::Broadcast { operand, dims } => {
+            let shape = instr.shape.array()?.clone();
+            let a = arr_shape(comp, *operand)?;
+            if dims.len() != a.dims.len() {
+                return Err(Error::msg(format!(
+                    "broadcast dimensions {:?} do not match operand rank {}",
+                    dims,
+                    a.dims.len()
+                )));
+            }
+            interp::check_broadcast_dims_increasing(dims)?;
+            for (i, &d) in dims.iter().enumerate() {
+                if d >= shape.dims.len() || shape.dims[d] != a.dims[i] {
+                    return Err(Error::msg(format!(
+                        "broadcast maps operand dim {i} (size {}) to output dim {d} of {:?}",
+                        a.dims[i], shape.dims
+                    )));
+                }
+            }
+            if a.elems() == 1 {
+                return Ok(StepKind::Fill {
+                    a: *operand,
+                    shape,
+                });
+            }
+            let a_strides = a.strides();
+            let mut steps = vec![0usize; shape.dims.len()];
+            for (i, &d) in dims.iter().enumerate() {
+                steps[d] = a_strides[i];
+            }
+            let plan = GatherPlan::new(&shape.dims, &steps, 0);
+            Ok(StepKind::Gather {
+                a: *operand,
+                plan,
+                shape,
+            })
+        }
+        Op::Reshape(operand) | Op::Copy(operand) => {
+            let shape = instr.shape.array()?.clone();
+            check_elems("reshape/copy", arr_shape(comp, *operand)?.elems(), &shape)?;
+            Ok(StepKind::Alias {
+                a: *operand,
+                shape,
+            })
+        }
+        Op::Convert(operand) => {
+            let shape = instr.shape.array()?.clone();
+            check_elems("convert", arr_shape(comp, *operand)?.elems(), &shape)?;
+            if shape.dtype.is_integer() {
+                Ok(StepKind::ConvertInt {
+                    a: *operand,
+                    shape,
+                })
+            } else if shape.dtype == crate::parser::DType::Pred {
+                Ok(StepKind::ConvertPred {
+                    a: *operand,
+                    shape,
+                })
+            } else {
+                Ok(StepKind::Alias {
+                    a: *operand,
+                    shape,
+                })
+            }
+        }
+        Op::Transpose { operand, perm } => {
+            let shape = instr.shape.array()?.clone();
+            let a = arr_shape(comp, *operand)?;
+            if perm.len() != a.dims.len() {
+                return Err(Error::msg("transpose permutation rank mismatch"));
+            }
+            let mut seen = vec![false; perm.len()];
+            for (i, &p) in perm.iter().enumerate() {
+                if p >= a.dims.len() || std::mem::replace(&mut seen[p], true) {
+                    return Err(Error::msg(format!(
+                        "transpose dimensions {perm:?} are not a permutation"
+                    )));
+                }
+                if shape.dims.get(i) != Some(&a.dims[p]) {
+                    return Err(Error::msg(format!(
+                        "transpose output dim {i} should be {} (operand dim {p}), declared {:?}",
+                        a.dims[p], shape.dims
+                    )));
+                }
+            }
+            let a_strides = a.strides();
+            let steps: Vec<usize> = perm.iter().map(|&p| a_strides[p]).collect();
+            let plan = GatherPlan::new(&shape.dims, &steps, 0);
+            Ok(StepKind::Gather {
+                a: *operand,
+                plan,
+                shape,
+            })
+        }
+        Op::Slice {
+            operand,
+            starts,
+            limits,
+            strides,
+        } => {
+            let shape = instr.shape.array()?.clone();
+            let a = arr_shape(comp, *operand)?;
+            let rank = a.dims.len();
+            if starts.len() != rank || limits.len() != rank || strides.len() != rank {
+                return Err(Error::msg("slice spec rank mismatch"));
+            }
+            for d in 0..rank {
+                if limits[d] > a.dims[d] || starts[d] > limits[d] || strides[d] == 0 {
+                    return Err(Error::msg(format!(
+                        "slice [{}:{}:{}] out of bounds for dim {d} (size {})",
+                        starts[d], limits[d], strides[d], a.dims[d]
+                    )));
+                }
+                let produced = (limits[d] - starts[d]).div_ceil(strides[d]);
+                if shape.dims.get(d) != Some(&produced) {
+                    return Err(Error::msg(format!(
+                        "slice [{}:{}:{}] produces {produced} elements along dim {d}, \
+                         declared shape says {:?}",
+                        starts[d], limits[d], strides[d], shape.dims
+                    )));
+                }
+            }
+            let a_strides = a.strides();
+            let base: usize = starts.iter().zip(&a_strides).map(|(&s, &st)| s * st).sum();
+            let steps: Vec<usize> = strides
+                .iter()
+                .zip(&a_strides)
+                .map(|(&s, &st)| s * st)
+                .collect();
+            let plan = GatherPlan::new(&shape.dims, &steps, base);
+            Ok(StepKind::Gather {
+                a: *operand,
+                plan,
+                shape,
+            })
+        }
+        Op::Concat { operands, dim } => {
+            let shape = instr.shape.array()?.clone();
+            if operands.is_empty() {
+                return Err(Error::msg("concatenate of zero operands"));
+            }
+            let first = arr_shape(comp, operands[0])?;
+            let rank = first.dims.len();
+            if *dim >= rank {
+                return Err(Error::msg("concatenate dimension out of range"));
+            }
+            for (i, &oi) in operands.iter().enumerate() {
+                let p = arr_shape(comp, oi)?;
+                if p.dims.len() != rank
+                    || p.dims
+                        .iter()
+                        .zip(&first.dims)
+                        .enumerate()
+                        .any(|(d, (a, b))| d != *dim && a != b)
+                {
+                    return Err(Error::msg(format!(
+                        "concatenate operand {i} has shape {:?}, incompatible with {:?} along dim {dim}",
+                        p.dims, first.dims
+                    )));
+                }
+            }
+            let outer: usize = first.dims[..*dim].iter().product();
+            let inner: usize = first.dims[*dim + 1..].iter().product();
+            let mut chunks = Vec::with_capacity(operands.len());
+            let mut total = 0usize;
+            for &oi in operands {
+                let chunk = arr_shape(comp, oi)?.dims[*dim] * inner;
+                total += chunk;
+                chunks.push(chunk);
+            }
+            check_elems("concatenate", outer * total, &shape)?;
+            Ok(StepKind::Concat {
+                parts: operands.clone(),
+                chunks,
+                outer,
+                shape,
+            })
+        }
+        Op::Iota { dim } => {
+            let shape = instr.shape.array()?.clone();
+            if *dim >= shape.dims.len() {
+                return Err(Error::msg(format!(
+                    "iota_dimension {dim} out of range for shape {:?}",
+                    shape.dims
+                )));
+            }
+            let strides = shape.strides();
+            Ok(StepKind::Iota {
+                size: shape.dims[*dim],
+                suffix: strides[*dim],
+                shape,
+            })
+        }
+        Op::Dot {
+            lhs,
+            rhs,
+            lhs_contracting,
+            rhs_contracting,
+            lhs_batch,
+            rhs_batch,
+        } => {
+            let shape = instr.shape.array()?.clone();
+            let a = arr_shape(comp, *lhs)?;
+            let b = arr_shape(comp, *rhs)?;
+            let plan = build_dot_plan(
+                a,
+                b,
+                lhs_contracting,
+                rhs_contracting,
+                lhs_batch,
+                rhs_batch,
+                &shape,
+            )?;
+            Ok(StepKind::Dot {
+                lhs: *lhs,
+                rhs: *rhs,
+                plan,
+                shape,
+            })
+        }
+        Op::Reduce {
+            operand,
+            init,
+            dims,
+            to_apply,
+        } => {
+            let shape = instr.shape.array()?.clone();
+            let a = arr_shape(comp, *operand)?;
+            let init_shape = arr_shape(comp, *init)?;
+            if init_shape.elems() != 1 {
+                return Err(Error::msg("reduce init value must be a scalar"));
+            }
+            let rank = a.dims.len();
+            for &d in dims {
+                if d >= rank {
+                    return Err(Error::msg("reduce dimension out of range"));
+                }
+            }
+            interp::check_unique_dims("reduce", "dimensions", dims)?;
+            let kept: Vec<usize> = (0..rank).filter(|d| !dims.contains(d)).collect();
+            let kept_sizes: Vec<usize> = kept.iter().map(|&d| a.dims[d]).collect();
+            let out_elems: usize = kept_sizes.iter().product();
+            if out_elems != shape.elems() {
+                return Err(Error::msg(format!(
+                    "reduce output shape {:?} does not match kept dimensions {kept_sizes:?}",
+                    shape.dims
+                )));
+            }
+            let a_strides = a.strides();
+            let kept_strides: Vec<usize> = kept.iter().map(|&d| a_strides[d]).collect();
+            let kept_offsets = interp::offset_table(&kept_sizes, &kept_strides);
+            let red_sizes: Vec<usize> = dims.iter().map(|&d| a.dims[d]).collect();
+            let red_strides: Vec<usize> = dims.iter().map(|&d| a_strides[d]).collect();
+            let red_offsets = interp::offset_table(&red_sizes, &red_strides);
+            if *to_apply >= module.computations.len() {
+                return Err(Error::msg("reduce to_apply region out of range"));
+            }
+            Ok(StepKind::Reduce {
+                a: *operand,
+                init: *init,
+                kept_offsets,
+                red_offsets,
+                fast: interp::fast_reducer(module, *to_apply),
+                to_apply: *to_apply,
+                shape,
+            })
+        }
+        Op::Tuple(operands) => Ok(StepKind::MakeTuple(operands.clone())),
+        Op::GetTupleElement { operand, index } => Ok(StepKind::Gte {
+            a: *operand,
+            index: *index,
+        }),
+    }
+}
+
+/// Validate a dot-general and build its offset tables (mirrors the
+/// reference evaluator's checks, plus the shared duplicate-dim rules).
+#[allow(clippy::too_many_arguments)]
+fn build_dot_plan(
+    a: &Shape,
+    b: &Shape,
+    lhs_c: &[usize],
+    rhs_c: &[usize],
+    lhs_b: &[usize],
+    rhs_b: &[usize],
+    out: &Shape,
+) -> Result<DotPlan> {
+    if lhs_c.len() != rhs_c.len() || lhs_b.len() != rhs_b.len() {
+        return Err(Error::msg("dot contracting/batch dimension arity mismatch"));
+    }
+    interp::check_dot_dims(lhs_c, rhs_c, lhs_b, rhs_b)?;
+    for &d in lhs_c.iter().chain(lhs_b) {
+        if d >= a.dims.len() {
+            return Err(Error::msg(format!("dot lhs dimension {d} out of range")));
+        }
+    }
+    for &d in rhs_c.iter().chain(rhs_b) {
+        if d >= b.dims.len() {
+            return Err(Error::msg(format!("dot rhs dimension {d} out of range")));
+        }
+    }
+    for (&l, &r) in lhs_c.iter().zip(rhs_c) {
+        if a.dims[l] != b.dims[r] {
+            return Err(Error::msg(format!(
+                "dot contracting sizes differ: lhs dim {l} = {}, rhs dim {r} = {}",
+                a.dims[l], b.dims[r]
+            )));
+        }
+    }
+    for (&l, &r) in lhs_b.iter().zip(rhs_b) {
+        if a.dims[l] != b.dims[r] {
+            return Err(Error::msg("dot batch sizes differ"));
+        }
+    }
+    let a_strides = a.strides();
+    let b_strides = b.strides();
+    let pick = |dims: &[usize], from: &[usize]| -> Vec<usize> {
+        dims.iter().map(|&d| from[d]).collect()
+    };
+    let lhs_free: Vec<usize> = (0..a.dims.len())
+        .filter(|d| !lhs_c.contains(d) && !lhs_b.contains(d))
+        .collect();
+    let rhs_free: Vec<usize> = (0..b.dims.len())
+        .filter(|d| !rhs_c.contains(d) && !rhs_b.contains(d))
+        .collect();
+    let batch_sizes = pick(lhs_b, &a.dims);
+    let contract_sizes = pick(lhs_c, &a.dims);
+    let lf_sizes = pick(&lhs_free, &a.dims);
+    let rf_sizes = pick(&rhs_free, &b.dims);
+    let bl = interp::offset_table(&batch_sizes, &pick(lhs_b, &a_strides));
+    let br = interp::offset_table(&batch_sizes, &pick(rhs_b, &b_strides));
+    let cl = interp::offset_table(&contract_sizes, &pick(lhs_c, &a_strides));
+    let cr = interp::offset_table(&contract_sizes, &pick(rhs_c, &b_strides));
+    let lf = interp::offset_table(&lf_sizes, &pick(&lhs_free, &a_strides));
+    let rf = interp::offset_table(&rf_sizes, &pick(&rhs_free, &b_strides));
+    let expected = bl.len() * lf.len() * rf.len();
+    if expected != out.elems() {
+        return Err(Error::msg(format!(
+            "dot output shape {:?} has {} elements, computation produces {expected}",
+            out.dims,
+            out.elems()
+        )));
+    }
+    let rf_contiguous = rf.iter().enumerate().all(|(i, &o)| o == i);
+    let flops = 2usize
+        .saturating_mul(expected)
+        .saturating_mul(cl.len().max(1));
+    Ok(DotPlan {
+        bl,
+        br,
+        cl,
+        cr,
+        lf,
+        rf,
+        rf_contiguous,
+        out_len: expected,
+        flops,
+    })
+}

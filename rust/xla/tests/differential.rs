@@ -1,0 +1,461 @@
+//! Seeded differential harness: randomized shapes and dim-specs run
+//! through both the compiled execution plans (`execute_b`) and the
+//! retained naive reference evaluator (`execute_b_reference`), asserting
+//! **bit-exact** equality — including the threaded dot-general at
+//! `threads ∈ {1, 2, 4}` — plus arena-reuse regression tests.
+//!
+//! Everything is deterministic: a fixed-seed xorshift PRNG drives shape
+//! and value generation, so a failure reproduces exactly.
+
+use xla::{HloModuleProto, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+/// Fixed-seed xorshift64 — no external crates, fully reproducible.
+struct Rng(u64);
+
+impl Rng {
+    fn new(seed: u64) -> Rng {
+        Rng(seed.max(1))
+    }
+    fn next(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.0 = x;
+        x
+    }
+    fn below(&mut self, n: usize) -> usize {
+        (self.next() % n as u64) as usize
+    }
+    /// Small exact-in-f32 values with a healthy share of exact zeros so
+    /// the dot-general zero-skip fast path is exercised.
+    fn val(&mut self) -> f32 {
+        match self.below(4) {
+            0 => 0.0,
+            _ => (self.below(33) as f32 - 16.0) * 0.25,
+        }
+    }
+    fn fill(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.val()).collect()
+    }
+}
+
+fn compile(text: &str) -> (PjRtClient, PjRtLoadedExecutable) {
+    let proto = HloModuleProto::from_text(text).expect("parse");
+    let client = PjRtClient::cpu().expect("client");
+    let exe = client
+        .compile(&XlaComputation::from_proto(&proto))
+        .unwrap_or_else(|e| panic!("compile failed: {e}\n{text}"));
+    (client, exe)
+}
+
+fn buffers(client: &PjRtClient, args: &[(Vec<f32>, Vec<usize>)]) -> Vec<PjRtBuffer> {
+    args.iter()
+        .map(|(data, dims)| {
+            client
+                .buffer_from_host_buffer::<f32>(data, dims, None)
+                .expect("buffer")
+        })
+        .collect()
+}
+
+/// Flatten a (possibly tuple) result to the raw bit patterns of every
+/// leaf, so comparisons are exact even around -0.0.
+fn result_bits(out: Vec<Vec<PjRtBuffer>>) -> Vec<u32> {
+    fn walk(lit: xla::Literal, bits: &mut Vec<u32>) {
+        if let Ok(v) = lit.to_vec::<f32>() {
+            bits.extend(v.iter().map(|x| x.to_bits()));
+            return;
+        }
+        for leaf in lit.to_tuple().expect("array or tuple literal") {
+            walk(leaf, bits);
+        }
+    }
+    let mut bits = Vec::new();
+    walk(out[0][0].to_literal_sync().expect("literal"), &mut bits);
+    bits
+}
+
+/// Execute planned and reference paths on identical inputs and assert
+/// bit-identical results.
+fn assert_bit_exact(text: &str, args: &[(Vec<f32>, Vec<usize>)], what: &str) {
+    let (client, exe) = compile(text);
+    let bufs = buffers(&client, args);
+    let planned = result_bits(exe.execute_b(&bufs).expect("planned execute"));
+    let reference = result_bits(exe.execute_b_reference(&bufs).expect("reference execute"));
+    assert_eq!(planned, reference, "planned vs reference mismatch: {what}\n{text}");
+}
+
+fn shape(dims: &[usize]) -> String {
+    let strs: Vec<String> = dims.iter().map(|d| d.to_string()).collect();
+    format!("f32[{}]", strs.join(","))
+}
+
+#[test]
+fn dot_general_randomized_bit_exact_at_1_2_4_threads() {
+    let mut rng = Rng::new(0x5eed_d07);
+    // (m, k, n) triples: tiny, ROW_TILE remainders, and sizes big enough
+    // to cross the COL_BLOCK boundary and engage real threads
+    let mut cases: Vec<(usize, usize, usize)> = vec![
+        (1, 1, 1),
+        (5, 3, 7),
+        (4, 8, 513),
+        (9, 7, 700),
+        (128, 64, 64),
+    ];
+    for _ in 0..10 {
+        cases.push((1 + rng.below(9), 1 + rng.below(9), 1 + rng.below(9)));
+    }
+    for &(m, k, n) in &cases {
+        let variants = [
+            // standard [m,k]·[k,n]
+            (
+                vec![m, k],
+                vec![k, n],
+                "lhs_contracting_dims={1}, rhs_contracting_dims={0}",
+                vec![m, n],
+            ),
+            // transposed lhs [k,m]·[k,n]
+            (
+                vec![k, m],
+                vec![k, n],
+                "lhs_contracting_dims={0}, rhs_contracting_dims={0}",
+                vec![m, n],
+            ),
+            // rhs free dim leading: [m,k]·[n,k] — non-contiguous rhs walk
+            (
+                vec![m, k],
+                vec![n, k],
+                "lhs_contracting_dims={1}, rhs_contracting_dims={1}",
+                vec![m, n],
+            ),
+        ];
+        for (adims, bdims, spec, odims) in variants {
+            let text = format!(
+                "HloModule t\n\nENTRY %main (a: {sa}, b: {sb}) -> {so} {{\n  \
+                 %a = {sa} parameter(0)\n  %b = {sb} parameter(1)\n  \
+                 ROOT %d = {so} dot(%a, %b), {spec}\n}}\n",
+                sa = shape(&adims),
+                sb = shape(&bdims),
+                so = shape(&odims),
+            );
+            let na: usize = adims.iter().product();
+            let nb: usize = bdims.iter().product();
+            let args = vec![(rng.fill(na), adims), (rng.fill(nb), bdims)];
+            let (client, exe) = compile(&text);
+            let bufs = buffers(&client, &args);
+            let reference = result_bits(exe.execute_b_reference(&bufs).expect("reference"));
+            for threads in [1usize, 2, 4] {
+                xla::set_dot_threads(threads);
+                let planned = result_bits(exe.execute_b(&bufs).expect("planned"));
+                assert_eq!(
+                    planned, reference,
+                    "dot [{m},{k}]x[{k},{n}] spec `{spec}` at threads={threads}"
+                );
+            }
+            xla::set_dot_threads(1);
+        }
+    }
+}
+
+#[test]
+fn batched_dot_general_randomized_bit_exact() {
+    let mut rng = Rng::new(0xbadc_0de);
+    for _ in 0..12 {
+        let (b, m, k, n) = (
+            1 + rng.below(4),
+            1 + rng.below(7),
+            1 + rng.below(7),
+            1 + rng.below(7),
+        );
+        let adims = vec![b, m, k];
+        let bdims = vec![b, k, n];
+        let odims = vec![b, m, n];
+        let text = format!(
+            "HloModule t\n\nENTRY %main (a: {sa}, b: {sb}) -> {so} {{\n  \
+             %a = {sa} parameter(0)\n  %b = {sb} parameter(1)\n  \
+             ROOT %d = {so} dot(%a, %b), lhs_batch_dims={{0}}, rhs_batch_dims={{0}}, \
+             lhs_contracting_dims={{2}}, rhs_contracting_dims={{1}}\n}}\n",
+            sa = shape(&adims),
+            sb = shape(&bdims),
+            so = shape(&odims),
+        );
+        let na: usize = adims.iter().product();
+        let nb: usize = bdims.iter().product();
+        let args = vec![(rng.fill(na), adims), (rng.fill(nb), bdims)];
+        for threads in [1usize, 2, 4] {
+            xla::set_dot_threads(threads);
+            assert_bit_exact(&text, &args, &format!("batched dot b={b} threads={threads}"));
+        }
+        xla::set_dot_threads(1);
+    }
+}
+
+#[test]
+fn elementwise_chains_randomized_bit_exact() {
+    let mut rng = Rng::new(0xe1e);
+    for _ in 0..20 {
+        let n = 1 + rng.below(40);
+        let text = format!(
+            "HloModule t\n\nENTRY %main (a: f32[{n}], b: f32[{n}]) -> f32[{n}] {{\n  \
+             %a = f32[{n}] parameter(0)\n  %b = f32[{n}] parameter(1)\n  \
+             %s = f32[{n}] add(%a, %b)\n  %m = f32[{n}] multiply(%s, %b)\n  \
+             %t = f32[{n}] subtract(%m, %a)\n  %e = f32[{n}] exponential(%t)\n  \
+             %mx = f32[{n}] maximum(%e, %a)\n  \
+             %p = pred[{n}] compare(%mx, %b), direction=GT\n  \
+             %pf = f32[{n}] convert(%p)\n  \
+             ROOT %r = f32[{n}] select(%p, %mx, %pf)\n}}\n"
+        );
+        let args = vec![(rng.fill(n), vec![n]), (rng.fill(n), vec![n])];
+        assert_bit_exact(&text, &args, &format!("elementwise chain n={n}"));
+    }
+}
+
+#[test]
+fn broadcast_transpose_slice_randomized_bit_exact() {
+    let mut rng = Rng::new(0x90a7);
+    for _ in 0..25 {
+        // broadcast a rank-1/2 operand into a rank-2/3 output along a
+        // random strictly-increasing dim mapping
+        let out_rank = 2 + rng.below(2);
+        let odims: Vec<usize> = (0..out_rank).map(|_| 1 + rng.below(5)).collect();
+        let op_rank = 1 + rng.below(out_rank);
+        // choose op_rank distinct output dims, increasing
+        let mut picks: Vec<usize> = (0..out_rank).collect();
+        while picks.len() > op_rank {
+            let i = rng.below(picks.len());
+            picks.remove(i);
+        }
+        let adims: Vec<usize> = picks.iter().map(|&d| odims[d]).collect();
+        let dim_list: Vec<String> = picks.iter().map(|d| d.to_string()).collect();
+        let na: usize = adims.iter().product();
+        let text = format!(
+            "HloModule t\n\nENTRY %main (a: {sa}) -> {so} {{\n  \
+             %a = {sa} parameter(0)\n  \
+             ROOT %r = {so} broadcast(%a), dimensions={{{dl}}}\n}}\n",
+            sa = shape(&adims),
+            so = shape(&odims),
+            dl = dim_list.join(","),
+        );
+        let args = vec![(rng.fill(na), adims.clone())];
+        assert_bit_exact(&text, &args, &format!("broadcast {adims:?}->{odims:?}"));
+    }
+    for _ in 0..25 {
+        // random rank-2/3 transpose
+        let rank = 2 + rng.below(2);
+        let adims: Vec<usize> = (0..rank).map(|_| 1 + rng.below(5)).collect();
+        let mut perm: Vec<usize> = (0..rank).collect();
+        for i in (1..rank).rev() {
+            perm.swap(i, rng.below(i + 1));
+        }
+        let odims: Vec<usize> = perm.iter().map(|&p| adims[p]).collect();
+        let perm_list: Vec<String> = perm.iter().map(|p| p.to_string()).collect();
+        let na: usize = adims.iter().product();
+        let text = format!(
+            "HloModule t\n\nENTRY %main (a: {sa}) -> {so} {{\n  \
+             %a = {sa} parameter(0)\n  \
+             ROOT %r = {so} transpose(%a), dimensions={{{pl}}}\n}}\n",
+            sa = shape(&adims),
+            so = shape(&odims),
+            pl = perm_list.join(","),
+        );
+        let args = vec![(rng.fill(na), adims.clone())];
+        assert_bit_exact(&text, &args, &format!("transpose {adims:?} perm {perm:?}"));
+    }
+    for _ in 0..25 {
+        // random strided slice of a rank-2 operand (may be empty)
+        let adims = vec![1 + rng.below(7), 1 + rng.below(7)];
+        let mut spec = Vec::new();
+        let mut odims = Vec::new();
+        for &size in &adims {
+            let start = rng.below(size + 1);
+            let limit = start + rng.below(size - start + 1);
+            let stride = 1 + rng.below(3);
+            odims.push((limit - start).div_ceil(stride));
+            spec.push(format!("[{start}:{limit}:{stride}]"));
+        }
+        let na: usize = adims.iter().product();
+        let text = format!(
+            "HloModule t\n\nENTRY %main (a: {sa}) -> {so} {{\n  \
+             %a = {sa} parameter(0)\n  \
+             ROOT %r = {so} slice(%a), slice={{{sp}}}\n}}\n",
+            sa = shape(&adims),
+            so = shape(&odims),
+            sp = spec.join(", "),
+        );
+        let args = vec![(rng.fill(na), adims.clone())];
+        assert_bit_exact(&text, &args, &format!("slice {adims:?} spec {spec:?}"));
+    }
+}
+
+#[test]
+fn concat_iota_reshape_randomized_bit_exact() {
+    let mut rng = Rng::new(0xc047);
+    for _ in 0..15 {
+        let rank = 2;
+        let common = 1 + rng.below(4);
+        let dim = rng.below(rank);
+        let sizes = [1 + rng.below(4), 1 + rng.below(4), 1 + rng.below(4)];
+        let part_dims = |s: usize| -> Vec<usize> {
+            if dim == 0 {
+                vec![s, common]
+            } else {
+                vec![common, s]
+            }
+        };
+        let mut odims = part_dims(sizes[0]);
+        odims[dim] = sizes.iter().sum();
+        let (d0, d1, d2) = (
+            part_dims(sizes[0]),
+            part_dims(sizes[1]),
+            part_dims(sizes[2]),
+        );
+        let text = format!(
+            "HloModule t\n\nENTRY %main (a: {s0}, b: {s1}, c: {s2}) -> {so} {{\n  \
+             %a = {s0} parameter(0)\n  %b = {s1} parameter(1)\n  %c = {s2} parameter(2)\n  \
+             ROOT %r = {so} concatenate(%a, %b, %c), dimensions={{{dim}}}\n}}\n",
+            s0 = shape(&d0),
+            s1 = shape(&d1),
+            s2 = shape(&d2),
+            so = shape(&odims),
+        );
+        let args = vec![
+            (rng.fill(d0.iter().product()), d0.clone()),
+            (rng.fill(d1.iter().product()), d1.clone()),
+            (rng.fill(d2.iter().product()), d2.clone()),
+        ];
+        assert_bit_exact(&text, &args, &format!("concat dim {dim} sizes {sizes:?}"));
+    }
+    for _ in 0..10 {
+        let dims = vec![1 + rng.below(4), 1 + rng.below(4), 1 + rng.below(4)];
+        let dim = rng.below(3);
+        let n: usize = dims.iter().product();
+        let text = format!(
+            "HloModule t\n\nENTRY %main (a: {sa}) -> {sa} {{\n  \
+             %a = {sa} parameter(0)\n  %i = {sa} iota(), iota_dimension={dim}\n  \
+             ROOT %r = {sa} add(%a, %i)\n}}\n",
+            sa = shape(&dims),
+        );
+        let args = vec![(rng.fill(n), dims.clone())];
+        assert_bit_exact(&text, &args, &format!("iota dim {dim} of {dims:?}"));
+    }
+    for _ in 0..10 {
+        let (a, b) = (1 + rng.below(6), 1 + rng.below(6));
+        let n = a * b;
+        let text = format!(
+            "HloModule t\n\nENTRY %main (a: f32[{a},{b}]) -> f32[{n}] {{\n  \
+             %a = f32[{a},{b}] parameter(0)\n  \
+             %f = f32[{n}] reshape(%a)\n  \
+             ROOT %r = f32[{n}] add(%f, %f)\n}}\n"
+        );
+        let args = vec![(rng.fill(n), vec![a, b])];
+        assert_bit_exact(&text, &args, &format!("reshape [{a},{b}]"));
+    }
+}
+
+#[test]
+fn reduce_randomized_bit_exact_fast_and_general_paths() {
+    let mut rng = Rng::new(0x4ed);
+    let regions = "%add_f32 (p0: f32[], p1: f32[]) -> f32[] {\n  \
+                   %p0 = f32[] parameter(0)\n  %p1 = f32[] parameter(1)\n  \
+                   ROOT %r = f32[] add(%p0, %p1)\n}\n\n\
+                   %max_f32 (q0: f32[], q1: f32[]) -> f32[] {\n  \
+                   %q0 = f32[] parameter(0)\n  %q1 = f32[] parameter(1)\n  \
+                   ROOT %m = f32[] maximum(%q0, %q1)\n}\n\n\
+                   %sub_rev (r0: f32[], r1: f32[]) -> f32[] {\n  \
+                   %r0 = f32[] parameter(0)\n  %r1 = f32[] parameter(1)\n  \
+                   ROOT %s = f32[] subtract(%r1, %r0)\n}\n\n";
+    for _ in 0..20 {
+        let dims = vec![1 + rng.below(5), 1 + rng.below(5), 1 + rng.below(5)];
+        let n: usize = dims.iter().product();
+        // random non-empty subset of dims to reduce
+        let mut red: Vec<usize> = (0..3).filter(|_| rng.below(2) == 1).collect();
+        if red.is_empty() {
+            red.push(rng.below(3));
+        }
+        let kept_dims: Vec<usize> = (0..3usize)
+            .filter(|d| !red.contains(d))
+            .map(|d| dims[d])
+            .collect();
+        let red_list: Vec<String> = red.iter().map(|d| d.to_string()).collect();
+        // `subtract(%p1, %p0)` is non-commutative swapped: general path
+        for region in ["add_f32", "max_f32", "sub_rev"] {
+            let text = format!(
+                "HloModule t\n\n{regions}ENTRY %main (a: {sa}) -> {so} {{\n  \
+                 %a = {sa} parameter(0)\n  %z = f32[] constant(0.5)\n  \
+                 ROOT %r = {so} reduce(%a, %z), dimensions={{{rl}}}, to_apply=%{region}\n}}\n",
+                sa = shape(&dims),
+                so = shape(&kept_dims),
+                rl = red_list.join(","),
+            );
+            let args = vec![(rng.fill(n), dims.clone())];
+            assert_bit_exact(&text, &args, &format!("reduce {region} dims {red:?} of {dims:?}"));
+        }
+    }
+}
+
+#[test]
+fn tuple_roots_bit_exact() {
+    let mut rng = Rng::new(0x70b1e);
+    let text = "HloModule t\n\nENTRY %main (a: f32[3,4], b: f32[4,2]) -> (f32[3,2], f32[3,4]) {\n  \
+                %a = f32[3,4] parameter(0)\n  %b = f32[4,2] parameter(1)\n  \
+                %d = f32[3,2] dot(%a, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}\n  \
+                %s = f32[3,4] add(%a, %a)\n  \
+                ROOT %t = (f32[3,2], f32[3,4]) tuple(%d, %s)\n}\n";
+    let args = vec![(rng.fill(12), vec![3, 4]), (rng.fill(8), vec![4, 2])];
+    assert_bit_exact(text, &args, "tuple root");
+}
+
+#[test]
+fn arena_reuse_two_back_to_back_executions() {
+    // chain with intermediates whose last uses free them mid-run: the
+    // second execution must be served almost entirely from the pool and
+    // produce bit-identical results
+    let text = "HloModule t\n\nENTRY %main (a: f32[256], b: f32[256]) -> f32[256] {\n  \
+                %a = f32[256] parameter(0)\n  %b = f32[256] parameter(1)\n  \
+                %s = f32[256] add(%a, %b)\n  \
+                %m = f32[256] multiply(%s, %b)\n  \
+                %t = f32[256] subtract(%m, %a)\n  \
+                ROOT %r = f32[256] multiply(%t, %m)\n}\n";
+    let mut rng = Rng::new(0xa4e4a);
+    let args = vec![(rng.fill(256), vec![256]), (rng.fill(256), vec![256])];
+    let (client, exe) = compile(text);
+    let bufs = buffers(&client, &args);
+
+    let first = result_bits(exe.execute_b(&bufs).expect("first run"));
+    let (fresh1, _reused1) = exe.arena_alloc_stats();
+    assert!(fresh1 > 0, "first run allocates fresh buffers");
+
+    let second = result_bits(exe.execute_b(&bufs).expect("second run"));
+    let (fresh2, reused2) = exe.arena_alloc_stats();
+    assert_eq!(first, second, "recycled buffers must not change results");
+    assert!(
+        fresh2 - fresh1 <= 1,
+        "second run reuses pooled intermediates (fresh {fresh1} -> {fresh2})"
+    );
+    assert!(reused2 > 0, "second run reused at least one pooled buffer");
+
+    let third = result_bits(exe.execute_b(&bufs).expect("third run"));
+    assert_eq!(first, third);
+}
+
+#[test]
+fn intermediates_freed_eagerly_within_one_execution() {
+    // %s dies once %m is computed, so %t's buffer must come from the
+    // arena even on the very first execution
+    let text = "HloModule t\n\nENTRY %main (a: f32[64]) -> f32[64] {\n  \
+                %a = f32[64] parameter(0)\n  \
+                %s = f32[64] add(%a, %a)\n  \
+                %m = f32[64] multiply(%s, %s)\n  \
+                %t = f32[64] add(%m, %a)\n  \
+                ROOT %r = f32[64] multiply(%t, %m)\n}\n";
+    let mut rng = Rng::new(0xf4ee);
+    let args = vec![(rng.fill(64), vec![64])];
+    let (client, exe) = compile(text);
+    let bufs = buffers(&client, &args);
+    let planned = result_bits(exe.execute_b(&bufs).expect("planned"));
+    let (_, reused) = exe.arena_alloc_stats();
+    assert!(reused >= 1, "dead %s must be recycled for %t within one run");
+    let reference = result_bits(exe.execute_b_reference(&bufs).expect("reference"));
+    assert_eq!(planned, reference);
+}

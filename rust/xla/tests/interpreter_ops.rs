@@ -381,12 +381,16 @@ fn power_and_tanh() {
 }
 
 /// Compile and execute expecting failure; returns the error message.
+/// Since the execution-plan refactor, shape/stride validation runs at
+/// `compile` time; this helper accepts a clean failure from either phase
+/// (never a panic) and returns its message.
 fn run_err(text: &str, args: &[(&[f32], &[usize])]) -> String {
     let proto = HloModuleProto::from_text(text).expect("parse");
     let client = PjRtClient::cpu().expect("client");
-    let exe = client
-        .compile(&XlaComputation::from_proto(&proto))
-        .expect("compile");
+    let exe = match client.compile(&XlaComputation::from_proto(&proto)) {
+        Ok(exe) => exe,
+        Err(e) => return e.to_string(),
+    };
     let buffers: Vec<xla::PjRtBuffer> = args
         .iter()
         .map(|(data, dims)| {
@@ -520,4 +524,86 @@ fn out_of_range_strided_slice_is_an_error_naming_the_op() {
         run(&text, &[(&[0.0, 1.0, 2.0, 3.0, 4.0, 5.0], &[6])]),
         vec![0.0, 2.0, 4.0]
     );
+}
+
+#[test]
+fn reduce_with_duplicate_dimensions_is_a_typed_error() {
+    // used to build a double-counted offset table and panic with
+    // index-out-of-bounds; must be a clean error naming the op
+    let text = "HloModule t\n\n\
+                %sum (p0: f32[], p1: f32[]) -> f32[] {\n  \
+                %p0 = f32[] parameter(0)\n  %p1 = f32[] parameter(1)\n  \
+                ROOT %s = f32[] add(%p0, %p1)\n}\n\n\
+                ENTRY %main (a: f32[2,3]) -> f32[3] {\n  \
+                %a = f32[2,3] parameter(0)\n  %z = f32[] constant(0)\n  \
+                ROOT %r = f32[3] reduce(%a, %z), dimensions={0,0}, to_apply=%sum\n}\n";
+    let err = run_err(text, &[(&[0.0; 6], &[2, 3])]);
+    assert!(err.contains("%r"), "error names the op: {err}");
+    assert!(err.contains("reduce") && err.contains("more than once"), "{err}");
+}
+
+#[test]
+fn dot_with_duplicate_dimensions_is_a_typed_error() {
+    let text = entry(
+        "  %a = f32[2,2] parameter(0)\n  %b = f32[2,2] parameter(1)\n  \
+         ROOT %d = f32[4] dot(%a, %b), lhs_contracting_dims={0,0}, \
+         rhs_contracting_dims={0,1}\n",
+        "a: f32[2,2], b: f32[2,2]",
+        "f32[4]",
+    );
+    let err = run_err(&text, &[(&[0.0; 4], &[2, 2]), (&[0.0; 4], &[2, 2])]);
+    assert!(err.contains("%d"), "error names the op: {err}");
+    assert!(err.contains("dot") && err.contains("more than once"), "{err}");
+}
+
+#[test]
+fn broadcast_dimensions_must_be_strictly_increasing() {
+    // duplicate entries used to silently compute a wrong operand index
+    let text = entry(
+        "  %a = f32[2,2] parameter(0)\n  \
+         ROOT %b = f32[2,2] broadcast(%a), dimensions={0,0}\n",
+        "a: f32[2,2]",
+        "f32[2,2]",
+    );
+    let err = run_err(&text, &[(&[1.0, 2.0, 3.0, 4.0], &[2, 2])]);
+    assert!(err.contains("%b"), "error names the op: {err}");
+    assert!(err.contains("strictly increasing"), "{err}");
+
+    // permuted (transpose-like) mappings are rejected too — XLA requires
+    // an explicit transpose for that
+    let text = entry(
+        "  %a = f32[2,3] parameter(0)\n  \
+         ROOT %b = f32[3,2] broadcast(%a), dimensions={1,0}\n",
+        "a: f32[2,3]",
+        "f32[3,2]",
+    );
+    let err = run_err(&text, &[(&[0.0; 6], &[2, 3])]);
+    assert!(err.contains("strictly increasing"), "{err}");
+}
+
+#[test]
+fn duplicate_dim_validation_also_guards_the_reference_evaluator() {
+    // the naive evaluator (the differential oracle) must reject the same
+    // malformed modules instead of panicking
+    let text = "HloModule t\n\n\
+                %sum (p0: f32[], p1: f32[]) -> f32[] {\n  \
+                %p0 = f32[] parameter(0)\n  %p1 = f32[] parameter(1)\n  \
+                ROOT %s = f32[] add(%p0, %p1)\n}\n\n\
+                ENTRY %main (a: f32[2,3]) -> f32[3] {\n  \
+                %a = f32[2,3] parameter(0)\n  %z = f32[] constant(0)\n  \
+                ROOT %r = f32[3] reduce(%a, %z), dimensions={0,0}, to_apply=%sum\n}\n";
+    let module = xla::parser::parse_module(text).expect("parse");
+    let arg = xla::interp::Value::Array(
+        xla::interp::ArrayValue::new(
+            xla::parser::Shape {
+                dtype: xla::parser::DType::F32,
+                dims: vec![2, 3],
+            },
+            vec![0.0; 6],
+        )
+        .unwrap(),
+    );
+    let err = xla::interp::evaluate(&module, module.entry, &[arg])
+        .expect_err("must error, not panic");
+    assert!(err.to_string().contains("more than once"), "{err}");
 }
