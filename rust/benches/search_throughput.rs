@@ -467,6 +467,31 @@ fn bench_interpreter() -> anyhow::Result<Json> {
     let dot_gflops =
         (2.0 * (DOT_N as f64).powi(3) * DOT_EXECS as f64) / dot_secs / 1e9;
 
+    // static plan verification in isolation: compile every manifest
+    // artifact once (benches run release, where the verifier is off by
+    // default) and time `verify()` on its own, so BENCH_search.json
+    // shows what `--verify-plans 1` costs per compiled module
+    const VERIFY_REPS: usize = 16;
+    let mut verify_exes = Vec::new();
+    for spec in rt.manifest().artifacts.values() {
+        let proto = xla::HloModuleProto::from_text_file(&dir.join(&spec.file))?;
+        verify_exes.push(client.compile(&xla::XlaComputation::from_proto(&proto))?);
+    }
+    for exe in &verify_exes {
+        exe.verify()?; // warm-up, and proof the shipped artifacts are sound
+    }
+    let t0 = Instant::now();
+    for _ in 0..VERIFY_REPS {
+        for exe in &verify_exes {
+            std::hint::black_box(exe.verify())?;
+        }
+    }
+    let verify_secs = t0.elapsed().as_secs_f64();
+    let verify_micros_per_module =
+        verify_secs / (VERIFY_REPS * verify_exes.len()) as f64 * 1e6;
+    let train_exec_micros = train_secs / TRAIN_EXECS as f64 * 1e6;
+    let verify_overhead_vs_train_exec = verify_micros_per_module / train_exec_micros;
+
     println!(
         "bench search/interpreter_load   {:>10}  (platform `{}`, {} artifacts)",
         common::fmt(load_secs),
@@ -497,6 +522,13 @@ fn bench_interpreter() -> anyhow::Result<Json> {
         "bench search/interpreter_allocs  fresh {fresh_per_exec:.1}/exec, \
          reused {reused_per_exec:.1}/exec (train_step, warm arena)"
     );
+    println!(
+        "bench search/interpreter_verify {:>10}  per module \
+         ({:.4}x of one train_step exec, {} modules)",
+        common::fmt(verify_micros_per_module / 1e6),
+        verify_overhead_vs_train_exec,
+        verify_exes.len()
+    );
     Ok(Json::obj(vec![
         ("platform", Json::Str(rt.platform())),
         ("artifact_dir", Json::Str(dir.display().to_string())),
@@ -519,6 +551,11 @@ fn bench_interpreter() -> anyhow::Result<Json> {
         ("dot_general_gflops", Json::Num(dot_gflops)),
         ("train_step_fresh_allocs_per_exec", Json::Num(fresh_per_exec)),
         ("train_step_reused_allocs_per_exec", Json::Num(reused_per_exec)),
+        ("verify_micros_per_module", Json::Num(verify_micros_per_module)),
+        (
+            "verify_overhead_vs_train_exec",
+            Json::Num(verify_overhead_vs_train_exec),
+        ),
     ]))
 }
 

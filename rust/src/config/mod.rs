@@ -53,6 +53,12 @@ pub struct SearchBudget {
     /// rows, so results are bit-identical for every value; only wall-clock
     /// changes.
     pub threads: usize,
+    /// Statically verify every compiled execution plan
+    /// (`--verify-plans`; also `SNAC_XLA_VERIFY=1`). Debug builds always
+    /// verify; this knob turns the verifier on in release builds, where it
+    /// is off by default. Purely a checking layer: results are identical
+    /// either way.
+    pub verify_plans: bool,
 }
 
 /// `snac-pack serve` — the estimation service's knobs.
@@ -127,6 +133,7 @@ impl Preset {
                     workers: 0,
                     shards: 0,
                     threads: 1,
+                    verify_plans: false,
                 },
                 surrogate: SurrogateTrainConfig::default(),
                 local: LocalSearchConfig::default(),
@@ -151,6 +158,7 @@ impl Preset {
                     workers: 0,
                     shards: 0,
                     threads: 1,
+                    verify_plans: false,
                 },
                 surrogate: SurrogateTrainConfig::default(),
                 local: LocalSearchConfig {
@@ -180,6 +188,7 @@ impl Preset {
                     workers: 0,
                     shards: 0,
                     threads: 1,
+                    verify_plans: false,
                 },
                 surrogate: SurrogateTrainConfig {
                     dataset_size: 1024,
@@ -236,6 +245,13 @@ impl Preset {
             }
             "shards" => self.search.shards = uint()?,
             "threads" => self.search.threads = uint()?,
+            "verify_plans" => {
+                self.search.verify_plans = match value {
+                    "1" | "true" => true,
+                    "0" | "false" => false,
+                    other => bail!("verify_plans expects 0/1/true/false, got `{other}`"),
+                }
+            }
             "run_dir" => self.run_dir = Some(value.to_string()),
             "spawn_workers" => {
                 self.spawn_workers = if value == "auto" {
@@ -254,7 +270,7 @@ impl Preset {
     /// over `by_name` — so the codec's surface is the override surface by
     /// construction, and fields outside it (e.g. surrogate learning rate)
     /// stay pinned to the named preset on both ends.
-    const OVERRIDE_KEYS: [&str; 21] = [
+    const OVERRIDE_KEYS: [&str; 22] = [
         "trials",
         "population",
         "epochs",
@@ -274,6 +290,7 @@ impl Preset {
         "batch_deadline_ms",
         "shards",
         "threads",
+        "verify_plans",
         "run_dir",
         "spawn_workers",
     ];
@@ -300,6 +317,7 @@ impl Preset {
             "batch_deadline_ms" => Some(self.serve.batch_deadline_ms.to_string()),
             "shards" => s(self.search.shards),
             "threads" => s(self.search.threads),
+            "verify_plans" => Some(if self.search.verify_plans { "1" } else { "0" }.to_string()),
             "run_dir" => self.run_dir.clone(),
             "spawn_workers" => self.spawn_workers.map(|v| v.to_string()),
             _ => None,
@@ -384,6 +402,12 @@ mod tests {
         assert_eq!(p.spawn_workers, Some(2));
         p.set("spawn_workers", "auto").unwrap();
         assert_eq!(p.spawn_workers, None);
+        assert!(!p.search.verify_plans, "plan verification is opt-in");
+        p.set("verify_plans", "1").unwrap();
+        assert!(p.search.verify_plans);
+        p.set("verify_plans", "false").unwrap();
+        assert!(!p.search.verify_plans);
+        assert!(p.set("verify_plans", "maybe").is_err());
         p.set("port", "0").unwrap();
         p.set("batch_deadline_ms", "25").unwrap();
         assert_eq!(p.serve.port, 0);
@@ -409,6 +433,7 @@ mod tests {
         p.set("cache_path", "/tmp/c.json").unwrap();
         p.set("shards", "2").unwrap();
         p.set("threads", "4").unwrap();
+        p.set("verify_plans", "1").unwrap();
         p.set("run_dir", "/tmp/rd").unwrap();
         p.set("port", "9191").unwrap();
         p.set("batch_deadline_ms", "7").unwrap();
@@ -421,6 +446,7 @@ mod tests {
         assert_eq!(back.search.workers, 2);
         assert_eq!(back.search.shards, 2);
         assert_eq!(back.search.threads, 4);
+        assert!(back.search.verify_plans, "verify_plans survives the run.json round trip");
         assert_eq!(back.data.n_train, 777);
         assert_eq!(back.data.n_val, 384, "untouched fields come from the base preset");
         assert_eq!(back.data.seed, 7, "data seed is preset-fixed");

@@ -17,7 +17,11 @@
 //! run-dir/
 //!   run.json    # written by the CLI driver: preset + artifact dir +
 //!               # timing knobs, everything a worker needs to rebuild
-//!               # the evaluator stack (see main.rs)
+//!               # the evaluator stack (see main.rs). Interpreter knobs
+//!               # ride the preset too — `threads` and `verify_plans`
+//!               # are re-applied by every worker, so a sharded run
+//!               # executes (and statically verifies) plans exactly like
+//!               # the in-process run would
 //!   queue/      # pending shard task files (complete JSON; published
 //!               # via tmp/ + atomic rename)
 //!   claims/     # claimed shards (claim = rename queue/X -> claims/X;

@@ -68,7 +68,7 @@ fn parse_cli() -> Result<Cli> {
             "usage: snac-pack <pipeline|search|worker|serve|surrogate|synth|info> \
              [--preset paper|ci|quickstart] [--out DIR] [--artifacts DIR] \
              [--objectives acc,bops] [--workers N] [--threads N] \
-             [--cache-path FILE] \
+             [--verify-plans 0|1] [--cache-path FILE] \
              [--shards N] [--run-dir DIR] [--port N] [--batch-deadline-ms N] \
              [--set key=value ...]\n\
              --preset picks the base regardless of position; \
@@ -76,6 +76,9 @@ fn parse_cli() -> Result<Cli> {
              --threads N runs the interpreter's dot-general kernels on N \
              threads (0 = all cores, 1 = serial default); results are \
              bit-identical for every value\n\
+             --verify-plans 1 statically verifies every compiled execution \
+             plan (bounds/liveness/partition/dataflow) before it runs; \
+             always on in debug builds, also via SNAC_XLA_VERIFY=1\n\
              --cache-path persists the evaluation cache across runs: a \
              re-run never retrains a previously evaluated genome\n\
              --shards N dispatches each generation to N shard files served \
@@ -128,6 +131,9 @@ fn parse_cli() -> Result<Cli> {
             "--threads" => preset
                 .set("threads", value()?)
                 .context("--threads expects a count")?,
+            "--verify-plans" => preset
+                .set("verify_plans", value()?)
+                .context("--verify-plans expects 0/1/true/false")?,
             "--cache-path" => preset
                 .set("cache_path", value()?)
                 .context("--cache-path expects a file path")?,
@@ -289,9 +295,11 @@ fn worker_main(run_dir: &Path, workers_flag: Option<usize>) -> Result<()> {
             .context("run.json missing `artifacts`")?,
     );
 
-    // worker processes inherit the driver's kernel threading through the
-    // manifest, so a sharded run behaves like the in-process one
+    // worker processes inherit the driver's kernel threading and plan
+    // verification through the manifest, so a sharded run behaves like
+    // the in-process one
     xla::set_dot_threads(preset.search.threads);
+    xla::set_verify_plans(preset.search.verify_plans);
     let rt = Runtime::load(&artifacts)?;
     let space = SearchSpace::table1();
     let device = FpgaDevice::vu13p();
@@ -388,11 +396,13 @@ fn main() -> Result<()> {
         cli.preset.run_dir = Some(cli.out.join("shard-run").display().to_string());
     }
     let cli = cli;
-    // one global knob for the interpreter's blocked dot-general kernels;
-    // bit-identical results at every setting, so it is safe to default
-    // from the preset for every subcommand (`worker` re-applies the
-    // manifest's value in worker_main)
+    // global interpreter knobs: dot-general threading and static plan
+    // verification; both are bit-identical in their results at every
+    // setting, so it is safe to default them from the preset for every
+    // subcommand (`worker` re-applies the manifest's values in
+    // worker_main)
     xla::set_dot_threads(cli.preset.search.threads);
+    xla::set_verify_plans(cli.preset.search.verify_plans);
     match cli.command.as_str() {
         "worker" => {
             let run_dir = cli

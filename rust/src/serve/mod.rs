@@ -203,6 +203,10 @@ fn handle(ctx: &ServeContext<'_>, req: &http::Request) -> Handled {
             ("platform", Json::Str(ctx.platform.clone())),
             ("device", Json::Str(ctx.device.name.clone())),
             ("sur_batch", Json::Num(SUR_BATCH as f64)),
+            (
+                "plan_verifier",
+                Json::Str(if xla::verify_plans() { "on" } else { "off" }.to_string()),
+            ),
             ("flushes", Json::Num(ctx.engine.flushes() as f64)),
             ("rows_flushed", Json::Num(ctx.engine.rows_flushed() as f64)),
             (
@@ -377,6 +381,9 @@ mod tests {
             let health = Json::parse(&body).unwrap();
             assert_eq!(health.get("status").and_then(Json::as_str), Some("ok"));
             assert_eq!(f64_field(&health, "sur_batch") as usize, SUR_BATCH);
+            // test builds carry debug_assertions, so the static plan
+            // verifier is unconditionally on
+            assert_eq!(health.get("plan_verifier").and_then(Json::as_str), Some("on"));
 
             // concurrent single-genome estimates
             let singles: Vec<_> = genomes

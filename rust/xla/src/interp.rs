@@ -657,6 +657,12 @@ fn concat(parts: &[&ArrayValue], dim: usize, shape: Shape) -> Result<ArrayValue>
 /// Additive offset table for a subset of dimensions: enumerates the
 /// coordinates of `dims` (by size) in row-major order and returns each
 /// combination's contribution Σ coord·stride to a flat index.
+///
+/// Shared dim-math contract with [`crate::plan`] and [`crate::verify`]:
+/// every entry is bounded by `Σ (size_i − 1)·stride_i` (the value the
+/// static verifier proves in-bounds), a zero size anywhere yields an
+/// *empty* table (nothing is ever read), and all-empty `sizes` yield the
+/// single offset `0`.
 pub(crate) fn offset_table(sizes: &[usize], strides: &[usize]) -> Vec<usize> {
     let total: usize = sizes.iter().product();
     let mut out = Vec::with_capacity(total.max(1));

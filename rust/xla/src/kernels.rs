@@ -131,12 +131,12 @@ impl Arena {
 /// or a fixed stride. Covers broadcast, transpose and slice.
 #[derive(Debug)]
 pub struct GatherPlan {
-    base: usize,
-    outer_sizes: Vec<usize>,
-    outer_steps: Vec<usize>,
-    inner_len: usize,
-    inner_step: usize,
-    out_len: usize,
+    pub(crate) base: usize,
+    pub(crate) outer_sizes: Vec<usize>,
+    pub(crate) outer_steps: Vec<usize>,
+    pub(crate) inner_len: usize,
+    pub(crate) inner_step: usize,
+    pub(crate) out_len: usize,
 }
 
 impl GatherPlan {
@@ -184,6 +184,25 @@ impl GatherPlan {
     /// Number of output elements this plan produces.
     pub fn out_len(&self) -> usize {
         self.out_len
+    }
+
+    /// The largest operand offset [`run`](GatherPlan::run) can read —
+    /// `base + Σ (size_i − 1)·step_i` over the outer odometer dims plus
+    /// the innermost run — or `None` when the plan reads nothing at all
+    /// (a zero-size output). The static verifier proves this lies inside
+    /// the source buffer; merged runs and step-0 fills fall out of the
+    /// same formula because merging preserves `len·step` products.
+    pub fn max_reachable_offset(&self) -> Option<usize> {
+        if self.out_len == 0 {
+            return None;
+        }
+        let outer: usize = self
+            .outer_sizes
+            .iter()
+            .zip(&self.outer_steps)
+            .map(|(&s, &p)| (s - 1) * p)
+            .sum();
+        Some(self.base + outer + (self.inner_len - 1) * self.inner_step)
     }
 
     /// Execute the gather into `out` (`out.len() == self.out_len()`).
@@ -262,6 +281,26 @@ pub struct DotPlan {
     pub flops: usize,
 }
 
+/// Split `0..rows` into one contiguous chunk per engaged thread.
+///
+/// This is the *single* definition of the dot-general work partition: the
+/// executor spawns one scoped thread per returned `(start, end)` range,
+/// and the static verifier ([`crate::verify`]) re-checks that the ranges
+/// tile the row space exactly — every row covered once, no overlap, no
+/// gap — at every thread count, which is the precondition for the
+/// bit-identical `--threads` determinism contract.
+pub(crate) fn partition_rows(rows: usize, threads: usize) -> Vec<(usize, usize)> {
+    let per = rows.div_ceil(threads.max(1)).max(1);
+    let mut parts = Vec::new();
+    let mut start = 0usize;
+    while start < rows {
+        let end = (start + per).min(rows);
+        parts.push((start, end));
+        start = end;
+    }
+    parts
+}
+
 /// lhs rows sharing one rhs element load in the blocked microkernel.
 const ROW_TILE: usize = 4;
 /// Accumulator/rhs row segment length per pass (f32s; 2 KiB ≪ L1).
@@ -288,21 +327,20 @@ impl DotPlan {
             self.run_rows(a, b, out, 0, rows);
             return;
         }
-        let per = rows.div_ceil(threads);
         std::thread::scope(|scope| {
             let mut rest = out;
-            let mut start = 0usize;
-            while start < rows {
-                let end = (start + per).min(rows);
+            for (start, end) in partition_rows(rows, threads) {
                 let (chunk, tail) = rest.split_at_mut((end - start) * nrf);
                 rest = tail;
                 scope.spawn(move || self.run_rows(a, b, chunk, start, end));
-                start = end;
             }
         });
     }
 
-    fn effective_threads(&self, requested: usize, rows: usize) -> usize {
+    /// Threads actually engaged for `requested` over `rows` output rows
+    /// (crate-visible so the static verifier checks the partition at the
+    /// thread counts execution would really use).
+    pub(crate) fn effective_threads(&self, requested: usize, rows: usize) -> usize {
         if requested <= 1 || rows <= 1 {
             return 1;
         }
@@ -426,6 +464,40 @@ mod tests {
         let mut out = [0.0f32; 4];
         plan.run(&[7.0, 9.0], &mut out);
         assert_eq!(out, [7.0, 7.0, 9.0, 9.0]);
+    }
+
+    #[test]
+    fn partition_rows_tiles_exactly_at_every_thread_count() {
+        for rows in [1usize, 2, 3, 7, 64, 1000] {
+            for threads in 1..=12 {
+                let parts = partition_rows(rows, threads);
+                assert!(parts.len() <= threads.max(1));
+                let mut next = 0usize;
+                for &(start, end) in &parts {
+                    assert_eq!(start, next, "gap or overlap at {rows}x{threads}");
+                    assert!(end > start, "empty chunk at {rows}x{threads}");
+                    next = end;
+                }
+                assert_eq!(next, rows, "rows uncovered at {rows}x{threads}");
+            }
+        }
+        assert!(partition_rows(0, 4).is_empty());
+    }
+
+    #[test]
+    fn gather_max_offset_covers_merged_and_zero_size_plans() {
+        // transpose [2,3] -> [3,2]: last read is element 5
+        let plan = GatherPlan::new(&[3, 2], &[1, 3], 0);
+        assert_eq!(plan.max_reachable_offset(), Some(5));
+        // merged contiguous identity: one run of 6 from base 0
+        let plan = GatherPlan::new(&[2, 3], &[3, 1], 0);
+        assert_eq!(plan.max_reachable_offset(), Some(5));
+        // step-0 fill never moves past its base
+        let plan = GatherPlan::new(&[2, 2], &[1, 0], 0);
+        assert_eq!(plan.max_reachable_offset(), Some(1));
+        // zero-size output reads nothing at all
+        let plan = GatherPlan::new(&[0, 3], &[3, 1], 0);
+        assert_eq!(plan.max_reachable_offset(), None);
     }
 
     #[test]

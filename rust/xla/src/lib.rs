@@ -29,7 +29,11 @@
 //! Process-wide knobs: [`set_dot_threads`] sizes the deterministic
 //! dot-general thread pool (results are bit-identical at every setting —
 //! see `kernels.rs` for the contract), [`alloc_stats`] counts fresh vs
-//! arena-recycled buffer allocations for the benches.
+//! arena-recycled buffer allocations for the benches, and
+//! [`set_verify_plans`] (`SNAC_XLA_VERIFY=1`, always on in debug builds)
+//! makes `compile` statically verify every plan's bounds / liveness /
+//! thread-partition / dataflow invariants ([`verify`]) before handing
+//! out an executable.
 //!
 //! See `README.md` in this directory for the supported op set and for how
 //! the real PJRT bindings still swap in.
@@ -43,12 +47,14 @@ pub mod interp;
 pub mod kernels;
 pub mod parser;
 pub mod plan;
+pub mod verify;
 
 use interp::{ArrayValue, Value};
 use kernels::Arena;
 use parser::{DType, Module, Shape};
 
 pub use kernels::{alloc_stats, dot_threads, reset_alloc_stats, set_dot_threads};
+pub use verify::{set_verify_plans, verify_plans, PlanVerifyError};
 
 /// When set (or when `SNAC_XLA_REFERENCE=1` is in the environment),
 /// `execute_b` routes through the retained naive reference evaluator
@@ -329,6 +335,15 @@ impl PjRtLoadedExecutable {
         Ok(vec![vec![PjRtBuffer { value: result }]])
     }
 
+    /// Statically re-verify this executable's compiled plan (bounds,
+    /// liveness, thread-partition and dataflow soundness) without
+    /// executing it. `compile` already runs this when [`verify_plans`]
+    /// is on; this entry point exists for audits and the benches that
+    /// measure verification cost per module.
+    pub fn verify(&self) -> std::result::Result<(), verify::PlanVerifyError> {
+        self.plan.verify()
+    }
+
     /// (fresh, arena-reused) intermediate-buffer allocation counts across
     /// this executable's planned executions.
     pub fn arena_alloc_stats(&self) -> (u64, u64) {
@@ -359,8 +374,16 @@ impl PjRtClient {
     /// Compile a computation: lower the parsed module into a cached
     /// execution plan (shape/stride tables, liveness, kernel selection).
     /// Malformed modules fail here, naming the offending instruction.
+    ///
+    /// When [`verify_plans`] is on (always in debug builds, opt-in via
+    /// [`set_verify_plans`] / `SNAC_XLA_VERIFY=1` in release), the plan
+    /// is also statically verified — bounds, liveness, thread-partition
+    /// and dataflow invariants — before an executable is handed out.
     pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
         let plan = plan::ExecPlan::new(Arc::clone(&comp.module))?;
+        if verify::verify_plans() {
+            plan.verify().map_err(|e| Error::msg(e.to_string()))?;
+        }
         Ok(PjRtLoadedExecutable {
             module: Arc::clone(&comp.module),
             plan,

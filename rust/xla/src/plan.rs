@@ -30,41 +30,45 @@ use crate::parser::{BinaryOp, CmpDir, Computation, Module, Op, Shape, UnaryOp};
 use crate::{Error, Result};
 
 /// A compiled module: one [`CompPlan`] per computation.
+///
+/// Fields are crate-visible so the static analyzer in [`crate::verify`]
+/// (and its mutation hooks) can inspect — and, under test, corrupt —
+/// compiled plans without an execution-side API.
 #[derive(Debug)]
 pub struct ExecPlan {
-    module: Arc<Module>,
-    comps: Vec<CompPlan>,
+    pub(crate) module: Arc<Module>,
+    pub(crate) comps: Vec<CompPlan>,
 }
 
 #[derive(Debug)]
-struct CompPlan {
-    name: String,
-    steps: Vec<Step>,
+pub(crate) struct CompPlan {
+    pub(crate) name: String,
+    pub(crate) steps: Vec<Step>,
     /// Slots whose last use is step `i` (never includes the root).
-    free_after: Vec<Vec<usize>>,
-    root: usize,
-    n_params: usize,
+    pub(crate) free_after: Vec<Vec<usize>>,
+    pub(crate) root: usize,
+    pub(crate) n_params: usize,
     /// Declared array shape per parameter (`None` for tuple-shaped).
-    param_shapes: Vec<Option<Shape>>,
+    pub(crate) param_shapes: Vec<Option<Shape>>,
 }
 
 #[derive(Debug)]
-struct Step {
-    name: String,
-    kind: StepKind,
+pub(crate) struct Step {
+    pub(crate) name: String,
+    pub(crate) kind: StepKind,
 }
 
 /// How a binary/compare step pairs its operands (resolved at plan time
 /// from the declared shapes; mirrors `interp::zip_broadcast`).
 #[derive(Debug, Clone, Copy)]
-enum EwForm {
+pub(crate) enum EwForm {
     Equal,
     AScalar,
     BScalar,
 }
 
 #[derive(Debug)]
-enum StepKind {
+pub(crate) enum StepKind {
     Parameter(usize),
     /// Constant materialised once at plan time; execution is an Arc bump.
     Constant(Value),
@@ -473,6 +477,37 @@ fn recycle_value(arena: &mut Arena, value: Value) {
             for e in elems {
                 recycle_value(arena, e);
             }
+        }
+    }
+}
+
+impl StepKind {
+    /// Slot indices this planned step reads at execution time, in
+    /// evaluation order. This is the step-level mirror of [`op_operands`]
+    /// and is what the verifier's liveness/dataflow checks are defined
+    /// over — a plan mutation that redirects an operand is judged by what
+    /// execution would actually read, not by the source module.
+    pub(crate) fn operands(&self) -> Vec<usize> {
+        match self {
+            StepKind::Parameter(_) | StepKind::Constant(_) | StepKind::Iota { .. } => vec![],
+            StepKind::Unary { a, .. }
+            | StepKind::Fill { a, .. }
+            | StepKind::Gather { a, .. }
+            | StepKind::Alias { a, .. }
+            | StepKind::ConvertInt { a, .. }
+            | StepKind::ConvertPred { a, .. }
+            | StepKind::Gte { a, .. } => vec![*a],
+            StepKind::Binary { a, b, .. } | StepKind::Compare { a, b, .. } => vec![*a, *b],
+            StepKind::Select {
+                pred,
+                on_true,
+                on_false,
+                ..
+            } => vec![*pred, *on_true, *on_false],
+            StepKind::Concat { parts, .. } => parts.clone(),
+            StepKind::Dot { lhs, rhs, .. } => vec![*lhs, *rhs],
+            StepKind::Reduce { a, init, .. } => vec![*a, *init],
+            StepKind::MakeTuple(parts) => parts.clone(),
         }
     }
 }

@@ -1,0 +1,915 @@
+//! Static verification of compiled execution plans.
+//!
+//! [`crate::plan`] buys its speed with manually-computed stride/offset
+//! tables, last-use liveness and thread-partitioned kernels — exactly the
+//! class of logical invariants safe Rust cannot check for us and that, if
+//! silently wrong, corrupt every objective the search optimizes. This
+//! module proves those invariants per [`ExecPlan`], **without executing
+//! anything**:
+//!
+//! * **Bounds soundness** — for every gather/stride table and kernel
+//!   access pattern, the maximal reachable offset
+//!   (`base + Σ (dim_i − 1)·stride_i`) lies inside the source buffer,
+//!   including zero-size-dim and merged-run edge cases, and every
+//!   elementwise/concat/iota/reduce step produces exactly the element
+//!   count its output buffer holds.
+//! * **Liveness soundness** — the def/last-use schedule frees every arena
+//!   slot exactly once, never before a reader, and never the root; alias
+//!   chains (reshape/copy/convert/scalar-pred-select refcount bumps) read
+//!   their source slot while it is still live.
+//! * **Partition soundness** — the multithreaded dot-general row
+//!   partitioning ([`kernels::partition_rows`]) covers each output row
+//!   exactly once, with no overlap and no gap, at every thread count —
+//!   the precondition for the bit-identical `--threads` determinism
+//!   contract.
+//! * **Dataflow well-formedness** — operands defined before use, tuple
+//!   arities match, the root is a real step, and no parameter slot is
+//!   dead.
+//!
+//! Violations surface as a typed [`PlanVerifyError`] naming the
+//! offending instruction and the invariant. The verifier runs
+//! unconditionally inside `PjRtClient::compile` in debug builds (so every
+//! test exercises it) and opt-in in release via [`set_verify_plans`], the
+//! `verify_plans` preset key, or `SNAC_XLA_VERIFY=1`.
+//!
+//! The [`mutate`] hooks let `tests/verifier.rs` prove the verifier has
+//! teeth: each corruption class (off-by-one stride, premature free,
+//! double free, overlapping thread rows, dangling alias) is applied to a
+//! valid plan and must be rejected with an error naming the corrupted
+//! instruction.
+
+use std::fmt;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::OnceLock;
+
+use crate::interp::Value;
+use crate::kernels;
+use crate::parser::ShapeDecl;
+use crate::plan::{CompPlan, ExecPlan, EwForm, Step, StepKind};
+
+/// When set (or when `SNAC_XLA_VERIFY=1` is in the environment),
+/// `PjRtClient::compile` statically verifies every plan it produces even
+/// in release builds. Debug builds always verify.
+static FORCE_VERIFY: AtomicBool = AtomicBool::new(false);
+static ENV_VERIFY: OnceLock<bool> = OnceLock::new();
+
+/// Force (or stop forcing) plan verification at compile time for this
+/// process. Plumbed from the `verify_plans` preset knob.
+pub fn set_verify_plans(on: bool) {
+    FORCE_VERIFY.store(on, Ordering::Relaxed);
+}
+
+/// Whether `PjRtClient::compile` currently verifies compiled plans.
+pub fn verify_plans() -> bool {
+    cfg!(debug_assertions)
+        || FORCE_VERIFY.load(Ordering::Relaxed)
+        || *ENV_VERIFY.get_or_init(|| std::env::var("SNAC_XLA_VERIFY").is_ok_and(|v| v == "1"))
+}
+
+/// The invariant class a [`PlanVerifyError`] violates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Invariant {
+    /// An offset table or access pattern can reach outside its buffer,
+    /// or a step's element accounting disagrees with its output size.
+    Bounds,
+    /// The free schedule drops a slot too early, twice, never, or drops
+    /// the root.
+    Liveness,
+    /// The dot-general thread partition would not cover each output row
+    /// exactly once.
+    Partition,
+    /// Operand ordering, tuple arity, root or parameter wiring is broken.
+    Dataflow,
+}
+
+impl fmt::Display for Invariant {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Invariant::Bounds => "bounds",
+            Invariant::Liveness => "liveness",
+            Invariant::Partition => "partition",
+            Invariant::Dataflow => "dataflow",
+        })
+    }
+}
+
+/// A static-verification failure: which instruction, which invariant, and
+/// what exactly would have gone wrong at execution time.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PlanVerifyError {
+    /// Computation the offending instruction belongs to.
+    pub computation: String,
+    /// Name of the offending instruction (without the leading `%`).
+    pub instruction: String,
+    /// Invariant class that failed.
+    pub invariant: Invariant,
+    /// Human-readable specifics.
+    pub detail: String,
+}
+
+impl fmt::Display for PlanVerifyError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "plan verification failed [{}] at `%{}` in computation `{}`: {}",
+            self.invariant, self.instruction, self.computation, self.detail
+        )
+    }
+}
+
+impl std::error::Error for PlanVerifyError {}
+
+type VResult = std::result::Result<(), PlanVerifyError>;
+
+/// What a slot holds at execution time, as far as sizes are concerned.
+#[derive(Debug, Clone)]
+enum VKind {
+    Arr(usize),
+    Tup(Vec<VKind>),
+}
+
+fn decl_kind(decl: &ShapeDecl) -> VKind {
+    match decl {
+        ShapeDecl::Array(s) => VKind::Arr(s.elems()),
+        ShapeDecl::Tuple(parts) => VKind::Tup(parts.iter().map(decl_kind).collect()),
+    }
+}
+
+fn value_kind(v: &Value) -> VKind {
+    match v {
+        Value::Array(a) => VKind::Arr(a.data.len()),
+        Value::Tuple(parts) => VKind::Tup(parts.iter().map(value_kind).collect()),
+    }
+}
+
+fn table_max(table: &[usize]) -> usize {
+    table.iter().copied().max().unwrap_or(0)
+}
+
+impl ExecPlan {
+    /// Statically prove this plan's bounds, liveness, partition and
+    /// dataflow invariants, without executing it. `Ok(())` means every
+    /// computation in the module passed every check; the first violation
+    /// is returned as a typed [`PlanVerifyError`] naming the instruction.
+    pub fn verify(&self) -> VResult {
+        for comp in &self.comps {
+            let cv = CompVerifier { plan: self, comp };
+            cv.verify()?;
+        }
+        Ok(())
+    }
+}
+
+struct CompVerifier<'a> {
+    plan: &'a ExecPlan,
+    comp: &'a CompPlan,
+}
+
+impl CompVerifier<'_> {
+    fn fail(&self, instruction: &str, invariant: Invariant, detail: String) -> PlanVerifyError {
+        PlanVerifyError {
+            computation: self.comp.name.clone(),
+            instruction: instruction.to_string(),
+            invariant,
+            detail,
+        }
+    }
+
+    fn step_name(&self, slot: usize) -> &str {
+        self.comp
+            .steps
+            .get(slot)
+            .map(|s| s.name.as_str())
+            .unwrap_or("<undefined>")
+    }
+
+    fn verify(&self) -> VResult {
+        let n = self.comp.steps.len();
+        if self.comp.root >= n {
+            return Err(self.fail(
+                &self.comp.name,
+                Invariant::Dataflow,
+                format!("root slot {} out of range ({n} steps)", self.comp.root),
+            ));
+        }
+        let mut kinds: Vec<VKind> = Vec::with_capacity(n);
+        let mut params_seen = vec![false; self.comp.n_params];
+        for (idx, step) in self.comp.steps.iter().enumerate() {
+            for o in step.kind.operands() {
+                if o >= idx {
+                    return Err(self.fail(
+                        &step.name,
+                        Invariant::Dataflow,
+                        format!("operand slot {o} is not defined before this step (index {idx})"),
+                    ));
+                }
+            }
+            let kind = self.check_step(idx, step, &kinds, &mut params_seen)?;
+            kinds.push(kind);
+        }
+        if let Some(p) = params_seen.iter().position(|&seen| !seen) {
+            return Err(self.fail(
+                &self.comp.name,
+                Invariant::Dataflow,
+                format!("parameter {p} has no defining step (dead parameter slot)"),
+            ));
+        }
+        self.check_liveness()
+    }
+
+    /// The free schedule must drop every non-root slot exactly once, at
+    /// or after its last reader; the root must outlive the computation.
+    fn check_liveness(&self) -> VResult {
+        let n = self.comp.steps.len();
+        if self.comp.free_after.len() != n {
+            return Err(self.fail(
+                &self.comp.name,
+                Invariant::Liveness,
+                format!(
+                    "free schedule covers {} steps, plan has {n}",
+                    self.comp.free_after.len()
+                ),
+            ));
+        }
+        // recompute last use from what each step actually reads, so a
+        // corrupted operand and a corrupted free point disagree loudly
+        let mut last_use: Vec<usize> = (0..n).collect();
+        for (idx, step) in self.comp.steps.iter().enumerate() {
+            for o in step.kind.operands() {
+                last_use[o] = last_use[o].max(idx);
+            }
+        }
+        let mut freed_at: Vec<Option<usize>> = vec![None; n];
+        for (at, dead) in self.comp.free_after.iter().enumerate() {
+            for &d in dead {
+                if d >= n {
+                    return Err(self.fail(
+                        self.step_name(at),
+                        Invariant::Liveness,
+                        format!("free schedule drops undefined slot {d}"),
+                    ));
+                }
+                if let Some(prev) = freed_at[d] {
+                    return Err(self.fail(
+                        self.step_name(d),
+                        Invariant::Liveness,
+                        format!(
+                            "slot is freed twice: after `%{}` and again after `%{}`",
+                            self.step_name(prev),
+                            self.step_name(at)
+                        ),
+                    ));
+                }
+                freed_at[d] = Some(at);
+                if d == self.comp.root {
+                    return Err(self.fail(
+                        self.step_name(d),
+                        Invariant::Liveness,
+                        "the root slot must outlive the computation but is freed".to_string(),
+                    ));
+                }
+                if at < d {
+                    return Err(self.fail(
+                        self.step_name(d),
+                        Invariant::Liveness,
+                        format!("freed after step {at}, before it is even defined"),
+                    ));
+                }
+                if at < last_use[d] {
+                    return Err(self.fail(
+                        self.step_name(d),
+                        Invariant::Liveness,
+                        format!(
+                            "freed after `%{}` but still read by `%{}`",
+                            self.step_name(at),
+                            self.step_name(last_use[d])
+                        ),
+                    ));
+                }
+            }
+        }
+        for (slot, fa) in freed_at.iter().enumerate() {
+            if slot != self.comp.root && fa.is_none() {
+                return Err(self.fail(
+                    self.step_name(slot),
+                    Invariant::Liveness,
+                    "slot is never freed (arena slot leak)".to_string(),
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// The operand's slot kind, which must be an array; returns its
+    /// element count.
+    fn arr(
+        &self,
+        step: &Step,
+        kinds: &[VKind],
+        o: usize,
+        role: &str,
+    ) -> Result<usize, PlanVerifyError> {
+        match &kinds[o] {
+            VKind::Arr(len) => Ok(*len),
+            VKind::Tup(_) => Err(self.fail(
+                &step.name,
+                Invariant::Dataflow,
+                format!("{role} operand `%{}` is a tuple, expected an array", self.step_name(o)),
+            )),
+        }
+    }
+
+    /// Per-step checks; returns what the slot will hold.
+    fn check_step(
+        &self,
+        idx: usize,
+        step: &Step,
+        kinds: &[VKind],
+        params_seen: &mut [bool],
+    ) -> Result<VKind, PlanVerifyError> {
+        match &step.kind {
+            StepKind::Parameter(p) => self.check_parameter(idx, step, *p, params_seen),
+            StepKind::Constant(value) => Ok(value_kind(value)),
+            StepKind::Unary { a, shape, .. } => {
+                let na = self.arr(step, kinds, *a, "unary")?;
+                self.expect_elems(step, "unary", na, shape.elems())?;
+                Ok(VKind::Arr(shape.elems()))
+            }
+            StepKind::Binary { a, b, form, shape, .. }
+            | StepKind::Compare { a, b, form, shape, .. } => {
+                let na = self.arr(step, kinds, *a, "lhs")?;
+                let nb = self.arr(step, kinds, *b, "rhs")?;
+                let out = shape.elems();
+                let ok = match form {
+                    EwForm::Equal => na == out && nb == out,
+                    EwForm::AScalar => na == 1 && nb == out,
+                    EwForm::BScalar => nb == 1 && na == out,
+                };
+                if !ok {
+                    return Err(self.fail(
+                        &step.name,
+                        Invariant::Bounds,
+                        format!(
+                            "elementwise form {form:?} inconsistent with operand sizes \
+                             {na}/{nb} and output size {out}"
+                        ),
+                    ));
+                }
+                Ok(VKind::Arr(out))
+            }
+            StepKind::Select {
+                pred,
+                on_true,
+                on_false,
+                pred_scalar,
+                shape,
+            } => {
+                let pp = self.arr(step, kinds, *pred, "predicate")?;
+                let pt = self.arr(step, kinds, *on_true, "on-true")?;
+                let pf = self.arr(step, kinds, *on_false, "on-false")?;
+                let out = shape.elems();
+                if pt != out || pf != out {
+                    return Err(self.fail(
+                        &step.name,
+                        Invariant::Bounds,
+                        format!("select branches hold {pt}/{pf} elements, output holds {out}"),
+                    ));
+                }
+                let want = if *pred_scalar { 1 } else { out };
+                if pp != want {
+                    return Err(self.fail(
+                        &step.name,
+                        Invariant::Bounds,
+                        format!("select predicate holds {pp} elements, expected {want}"),
+                    ));
+                }
+                Ok(VKind::Arr(out))
+            }
+            StepKind::Fill { a, shape } => {
+                let na = self.arr(step, kinds, *a, "fill")?;
+                if na != 1 {
+                    return Err(self.fail(
+                        &step.name,
+                        Invariant::Bounds,
+                        format!("fill source holds {na} elements, expected a scalar"),
+                    ));
+                }
+                Ok(VKind::Arr(shape.elems()))
+            }
+            StepKind::Gather { a, plan, shape } => {
+                let na = self.arr(step, kinds, *a, "gather")?;
+                self.check_gather(step, plan, na, shape.elems())?;
+                Ok(VKind::Arr(shape.elems()))
+            }
+            StepKind::Alias { a, shape } => {
+                let na = self.arr(step, kinds, *a, "alias")?;
+                self.expect_elems(step, "alias", na, shape.elems())?;
+                Ok(VKind::Arr(shape.elems()))
+            }
+            StepKind::ConvertInt { a, shape } | StepKind::ConvertPred { a, shape } => {
+                let na = self.arr(step, kinds, *a, "convert")?;
+                self.expect_elems(step, "convert", na, shape.elems())?;
+                Ok(VKind::Arr(shape.elems()))
+            }
+            StepKind::Concat {
+                parts,
+                chunks,
+                outer,
+                shape,
+            } => {
+                if parts.len() != chunks.len() {
+                    return Err(self.fail(
+                        &step.name,
+                        Invariant::Bounds,
+                        format!("{} parts but {} chunk sizes", parts.len(), chunks.len()),
+                    ));
+                }
+                let per_outer: usize = chunks.iter().sum();
+                self.expect_elems(step, "concatenate", outer * per_outer, shape.elems())?;
+                for (&p, &chunk) in parts.iter().zip(chunks) {
+                    let np = self.arr(step, kinds, p, "concatenate")?;
+                    if np != outer * chunk {
+                        return Err(self.fail(
+                            &step.name,
+                            Invariant::Bounds,
+                            format!(
+                                "part `%{}` holds {np} elements, the copy pattern reads {}",
+                                self.step_name(p),
+                                outer * chunk
+                            ),
+                        ));
+                    }
+                }
+                Ok(VKind::Arr(shape.elems()))
+            }
+            StepKind::Iota { size, suffix, shape } => {
+                let out = shape.elems();
+                if out > 0 && (*size == 0 || *suffix == 0 || out % (size * suffix) != 0) {
+                    return Err(self.fail(
+                        &step.name,
+                        Invariant::Bounds,
+                        format!("iota period {size}·{suffix} does not tile {out} elements"),
+                    ));
+                }
+                Ok(VKind::Arr(out))
+            }
+            StepKind::Dot { lhs, rhs, plan, shape } => {
+                let na = self.arr(step, kinds, *lhs, "dot lhs")?;
+                let nb = self.arr(step, kinds, *rhs, "dot rhs")?;
+                self.check_dot(step, plan, na, nb, shape.elems())?;
+                Ok(VKind::Arr(shape.elems()))
+            }
+            StepKind::Reduce {
+                a,
+                init,
+                kept_offsets,
+                red_offsets,
+                fast,
+                to_apply,
+                shape,
+            } => {
+                let na = self.arr(step, kinds, *a, "reduce")?;
+                let ni = self.arr(step, kinds, *init, "reduce init")?;
+                if ni != 1 {
+                    return Err(self.fail(
+                        &step.name,
+                        Invariant::Bounds,
+                        format!("reduce init holds {ni} elements, expected a scalar"),
+                    ));
+                }
+                let out = shape.elems();
+                if kept_offsets.len() != out {
+                    return Err(self.fail(
+                        &step.name,
+                        Invariant::Bounds,
+                        format!(
+                            "kept-offset table has {} entries for {out} outputs",
+                            kept_offsets.len()
+                        ),
+                    ));
+                }
+                if out > 0 && !red_offsets.is_empty() {
+                    let max = table_max(kept_offsets) + table_max(red_offsets);
+                    if max >= na {
+                        return Err(self.fail(
+                            &step.name,
+                            Invariant::Bounds,
+                            format!(
+                                "maximal reachable offset {max} is out of bounds for the \
+                                 {na}-element operand"
+                            ),
+                        ));
+                    }
+                }
+                if *to_apply >= self.plan.module.computations.len() {
+                    return Err(self.fail(
+                        &step.name,
+                        Invariant::Dataflow,
+                        format!("to_apply region {to_apply} does not exist"),
+                    ));
+                }
+                if fast.is_none() {
+                    let region = &self.plan.module.computations[*to_apply];
+                    if region.params.len() != 2 {
+                        return Err(self.fail(
+                            &step.name,
+                            Invariant::Dataflow,
+                            format!(
+                                "reduce region `{}` takes {} parameters, needs 2",
+                                region.name,
+                                region.params.len()
+                            ),
+                        ));
+                    }
+                }
+                Ok(VKind::Arr(out))
+            }
+            StepKind::MakeTuple(parts) => {
+                Ok(VKind::Tup(parts.iter().map(|&p| kinds[p].clone()).collect()))
+            }
+            StepKind::Gte { a, index } => match &kinds[*a] {
+                VKind::Tup(parts) => parts.get(*index).cloned().ok_or_else(|| {
+                    self.fail(
+                        &step.name,
+                        Invariant::Dataflow,
+                        format!(
+                            "get-tuple-element {index} of `%{}`, a tuple of {} elements",
+                            self.step_name(*a),
+                            parts.len()
+                        ),
+                    )
+                }),
+                VKind::Arr(_) => Err(self.fail(
+                    &step.name,
+                    Invariant::Dataflow,
+                    format!("get-tuple-element of `%{}`, which is not a tuple", self.step_name(*a)),
+                )),
+            },
+        }
+    }
+
+    /// A parameter step must point at a declared slot and agree with the
+    /// argument signature `execute` validates against.
+    fn check_parameter(
+        &self,
+        idx: usize,
+        step: &Step,
+        p: usize,
+        params_seen: &mut [bool],
+    ) -> Result<VKind, PlanVerifyError> {
+        if p >= self.comp.n_params {
+            return Err(self.fail(
+                &step.name,
+                Invariant::Dataflow,
+                format!("parameter index {p} out of range ({} declared)", self.comp.n_params),
+            ));
+        }
+        params_seen[p] = true;
+        let decl = self
+            .plan
+            .module
+            .computations
+            .iter()
+            .find(|c| c.name == self.comp.name)
+            .and_then(|c| c.instrs.get(idx))
+            .map(|instr| &instr.shape);
+        let Some(decl) = decl else {
+            return Err(self.fail(
+                &step.name,
+                Invariant::Dataflow,
+                "plan step does not correspond to a module instruction".to_string(),
+            ));
+        };
+        let kind = decl_kind(decl);
+        // the signature `execute` validates arguments against must agree
+        // with what downstream steps assume this slot holds
+        let sig = self.comp.param_shapes.get(p).and_then(|s| s.as_ref());
+        match (&kind, sig) {
+            (VKind::Arr(len), Some(s)) if s.elems() == *len => {}
+            (VKind::Tup(_), None) => {}
+            _ => {
+                return Err(self.fail(
+                    &step.name,
+                    Invariant::Dataflow,
+                    format!("parameter {p} signature disagrees with its declared shape"),
+                ));
+            }
+        }
+        Ok(kind)
+    }
+
+    fn expect_elems(&self, step: &Step, what: &str, got: usize, out: usize) -> VResult {
+        if got != out {
+            return Err(self.fail(
+                &step.name,
+                Invariant::Bounds,
+                format!("{what} reads {got} elements into a {out}-element output"),
+            ));
+        }
+        Ok(())
+    }
+
+    /// Gather: the odometer walk must stay inside the operand and its run
+    /// accounting must produce exactly the output length.
+    fn check_gather(
+        &self,
+        step: &Step,
+        plan: &kernels::GatherPlan,
+        operand_len: usize,
+        out: usize,
+    ) -> VResult {
+        if plan.out_len != out {
+            return Err(self.fail(
+                &step.name,
+                Invariant::Bounds,
+                format!("gather produces {} elements, output holds {out}", plan.out_len),
+            ));
+        }
+        if out == 0 {
+            return Ok(()); // reads nothing at all
+        }
+        let runs: usize = plan.outer_sizes.iter().product();
+        if plan.inner_len == 0 || runs * plan.inner_len != out {
+            return Err(self.fail(
+                &step.name,
+                Invariant::Bounds,
+                format!(
+                    "run accounting {} runs × {} inner elements does not tile the \
+                     {out}-element output",
+                    runs, plan.inner_len
+                ),
+            ));
+        }
+        if plan.outer_sizes.len() != plan.outer_steps.len() {
+            return Err(self.fail(
+                &step.name,
+                Invariant::Bounds,
+                "gather odometer sizes/steps length mismatch".to_string(),
+            ));
+        }
+        match plan.max_reachable_offset() {
+            Some(max) if max >= operand_len => Err(self.fail(
+                &step.name,
+                Invariant::Bounds,
+                format!(
+                    "maximal reachable offset {max} is out of bounds for the \
+                     {operand_len}-element operand"
+                ),
+            )),
+            _ => Ok(()),
+        }
+    }
+
+    /// Dot-general: offset tables in bounds, and the row partition tiles
+    /// the output exactly at every thread count execution could use.
+    fn check_dot(
+        &self,
+        step: &Step,
+        plan: &kernels::DotPlan,
+        lhs_len: usize,
+        rhs_len: usize,
+        out: usize,
+    ) -> VResult {
+        if plan.out_len != out {
+            return Err(self.fail(
+                &step.name,
+                Invariant::Bounds,
+                format!("dot produces {} elements, output holds {out}", plan.out_len),
+            ));
+        }
+        if plan.bl.len() != plan.br.len() || plan.cl.len() != plan.cr.len() {
+            return Err(self.fail(
+                &step.name,
+                Invariant::Bounds,
+                format!(
+                    "lockstep tables diverge: batch {}/{}, contraction {}/{}",
+                    plan.bl.len(),
+                    plan.br.len(),
+                    plan.cl.len(),
+                    plan.cr.len()
+                ),
+            ));
+        }
+        if plan.rf_contiguous && !plan.rf.iter().enumerate().all(|(i, &o)| o == i) {
+            return Err(self.fail(
+                &step.name,
+                Invariant::Bounds,
+                "rf_contiguous is set but the rhs free offsets are not 0,1,2,…".to_string(),
+            ));
+        }
+        let nrf = plan.rf.len();
+        let rows = plan.bl.len() * plan.lf.len();
+        if rows.saturating_mul(nrf) != out {
+            return Err(self.fail(
+                &step.name,
+                Invariant::Partition,
+                format!(
+                    "{rows} partitioned rows × {nrf} columns would not cover the \
+                     {out}-element output exactly — thread chunks would overlap or overrun"
+                ),
+            ));
+        }
+        if rows == 0 || nrf == 0 {
+            return Ok(()); // execution returns before touching anything
+        }
+        if !plan.cl.is_empty() {
+            let lmax = table_max(&plan.bl) + table_max(&plan.lf) + table_max(&plan.cl);
+            if lmax >= lhs_len {
+                return Err(self.fail(
+                    &step.name,
+                    Invariant::Bounds,
+                    format!(
+                        "maximal reachable lhs offset {lmax} is out of bounds for the \
+                         {lhs_len}-element operand"
+                    ),
+                ));
+            }
+            let rmax = table_max(&plan.br) + table_max(&plan.cr) + table_max(&plan.rf);
+            if rmax >= rhs_len {
+                return Err(self.fail(
+                    &step.name,
+                    Invariant::Bounds,
+                    format!(
+                        "maximal reachable rhs offset {rmax} is out of bounds for the \
+                         {rhs_len}-element operand"
+                    ),
+                ));
+            }
+        }
+        // re-check the partition at every thread count execution could
+        // engage (plus a spread of fixed counts, so the check does not
+        // depend on the machine it runs on)
+        let mut counts = vec![1usize, 2, 3, 4, 5, 8];
+        counts.push(kernels::resolve_dot_threads());
+        for requested in counts {
+            let threads = plan.effective_threads(requested, rows);
+            let parts = kernels::partition_rows(rows, threads);
+            let mut next = 0usize;
+            for &(start, end) in &parts {
+                if start != next || end <= start || end > rows {
+                    return Err(self.fail(
+                        &step.name,
+                        Invariant::Partition,
+                        format!(
+                            "thread partition at {threads} threads emits chunk \
+                             {start}..{end} after row {next} — rows would be skipped \
+                             or written twice"
+                        ),
+                    ));
+                }
+                next = end;
+            }
+            if next != rows {
+                return Err(self.fail(
+                    &step.name,
+                    Invariant::Partition,
+                    format!("thread partition at {threads} threads covers {next} of {rows} rows"),
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Test-only corruption hooks for the mutation harness
+/// (`tests/verifier.rs`). Not part of the public API.
+#[doc(hidden)]
+pub mod mutate {
+    use std::sync::Arc;
+
+    use crate::plan::{ExecPlan, StepKind};
+
+    /// A class of plan corruption the verifier must reject.
+    #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+    pub enum Corruption {
+        /// Bump a gather's innermost stride by one, walking it past the
+        /// end of its operand.
+        GatherStrideOffByOne,
+        /// Move a slot's free point up to its defining step, before
+        /// readers that still need it.
+        PrematureFree,
+        /// Free an already-freed slot a second time.
+        DoubleFree,
+        /// Duplicate a dot row so the thread partition would overrun the
+        /// output.
+        OverlappingThreadRows,
+        /// Point an alias at a slot that does not exist.
+        DanglingAlias,
+    }
+
+    /// Apply `c` to the first eligible instruction of the entry
+    /// computation. Returns the corrupted instruction's name (the one a
+    /// verify error must report), or `None` if the plan has no eligible
+    /// site.
+    pub fn corrupt(plan: &mut ExecPlan, c: Corruption) -> Option<String> {
+        let module = Arc::clone(&plan.module);
+        let entry = module.entry;
+        let comp = &mut plan.comps[entry];
+        match c {
+            Corruption::GatherStrideOffByOne => {
+                for step in &mut comp.steps {
+                    if let StepKind::Gather { plan: g, .. } = &mut step.kind {
+                        if g.out_len == 0 {
+                            continue;
+                        }
+                        g.inner_step += 1;
+                        return Some(step.name.clone());
+                    }
+                }
+                None
+            }
+            Corruption::PrematureFree => {
+                let n = comp.steps.len();
+                let mut last_use: Vec<usize> = (0..n).collect();
+                for (idx, step) in comp.steps.iter().enumerate() {
+                    for o in step.kind.operands() {
+                        last_use[o] = last_use[o].max(idx);
+                    }
+                }
+                for slot in 0..n {
+                    let at = last_use[slot];
+                    if slot == comp.root || at <= slot {
+                        continue;
+                    }
+                    let pos = comp.free_after[at].iter().position(|&d| d == slot);
+                    if let Some(pos) = pos {
+                        comp.free_after[at].remove(pos);
+                        comp.free_after[slot].push(slot);
+                        return Some(comp.steps[slot].name.clone());
+                    }
+                }
+                None
+            }
+            Corruption::DoubleFree => {
+                let root = comp.root;
+                for at in 0..comp.free_after.len() {
+                    let first = comp.free_after[at].first().copied();
+                    if let Some(d) = first {
+                        comp.free_after[root].push(d);
+                        return Some(comp.steps[d].name.clone());
+                    }
+                }
+                None
+            }
+            Corruption::OverlappingThreadRows => {
+                for step in &mut comp.steps {
+                    if let StepKind::Dot { plan: d, .. } = &mut step.kind {
+                        if d.lf.is_empty() {
+                            continue;
+                        }
+                        let dup = d.lf[0];
+                        d.lf.push(dup);
+                        return Some(step.name.clone());
+                    }
+                }
+                None
+            }
+            Corruption::DanglingAlias => {
+                for step in &mut comp.steps {
+                    if let StepKind::Alias { a, .. } = &mut step.kind {
+                        *a = usize::MAX;
+                        return Some(step.name.clone());
+                    }
+                }
+                None
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use crate::plan::ExecPlan;
+
+    const SMOKE: &str = "HloModule vsmoke\n\nENTRY %main (x: f32[2,3]) -> f32[3,2] {\n  \
+                         %x = f32[2,3]{1,0} parameter(0)\n  \
+                         ROOT %t = f32[3,2]{1,0} transpose(f32[2,3] %x), dimensions={1,0}\n}\n";
+
+    #[test]
+    fn clean_plan_verifies() {
+        let module = Arc::new(crate::parser::parse_module(SMOKE).unwrap());
+        let plan = ExecPlan::new(module).unwrap();
+        plan.verify().unwrap();
+    }
+
+    #[test]
+    fn debug_builds_always_verify() {
+        // tests compile with debug_assertions, so compile-time
+        // verification must be on regardless of the knob
+        assert!(super::verify_plans());
+    }
+
+    #[test]
+    fn error_display_names_instruction_and_invariant() {
+        let err = super::PlanVerifyError {
+            computation: "main".to_string(),
+            instruction: "dot.1".to_string(),
+            invariant: super::Invariant::Partition,
+            detail: "boom".to_string(),
+        };
+        let msg = err.to_string();
+        assert!(msg.contains("%dot.1") && msg.contains("[partition]") && msg.contains("boom"));
+    }
+}

@@ -1,0 +1,155 @@
+//! Property-style robustness harness: feed randomized *malformed* HLO
+//! text through the full parse → compile → verify pipeline and assert the
+//! whole stack degrades to typed errors — it must never panic, whatever
+//! garbage comes in.
+//!
+//! Deterministic by construction: a fixed-seed xorshift PRNG drives every
+//! mutation, so any failure names the exact (seed, round) pair and
+//! reproduces bit-for-bit. Mutations are length-preserving single-byte
+//! replacements (from a small HLO-flavored alphabet), byte swaps, line
+//! drops, line duplications and truncations — shapes in the corpus keep
+//! at most two digits per dimension, so a mutated module can never
+//! request a pathologically large allocation.
+
+use xla::{HloModuleProto, PjRtClient, XlaComputation};
+
+/// Fixed-seed xorshift64 — no external crates, fully reproducible.
+struct Rng(u64);
+
+impl Rng {
+    fn new(seed: u64) -> Rng {
+        Rng(seed.max(1))
+    }
+    fn next(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.0 = x;
+        x
+    }
+    fn below(&mut self, n: usize) -> usize {
+        (self.next() % n as u64) as usize
+    }
+}
+
+/// Valid modules to corrupt: between them they cover parameters, dot,
+/// transpose, reduce regions, reshape aliasing, tuples, broadcast,
+/// compare/select and constants.
+const CORPUS: [&str; 2] = [
+    "HloModule robust_a\n\n%add (p0: f32[], p1: f32[]) -> f32[] {\n  \
+     %p0 = f32[] parameter(0)\n  \
+     %p1 = f32[] parameter(1)\n  \
+     ROOT %s = f32[] add(%p0, %p1)\n}\n\n\
+     ENTRY %main (x: f32[4,3], w: f32[3,5]) -> (f32[5,4], f32[4]) {\n  \
+     %x = f32[4,3]{1,0} parameter(0)\n  \
+     %w = f32[3,5]{1,0} parameter(1)\n  \
+     %d = f32[4,5]{1,0} dot(f32[4,3] %x, f32[3,5] %w), \
+     lhs_contracting_dims={1}, rhs_contracting_dims={0}\n  \
+     %t = f32[5,4]{1,0} transpose(f32[4,5] %d), dimensions={1,0}\n  \
+     %zero = f32[] constant(0)\n  \
+     %sum = f32[4]{0} reduce(f32[4,3] %x, f32[] %zero), dimensions={1}, to_apply=%add\n  \
+     ROOT %out = (f32[5,4], f32[4]) tuple(%t, %sum)\n}\n",
+    "HloModule robust_b\n\nENTRY %main (x: f32[6,4]) -> f32[3,4] {\n  \
+     %x = f32[6,4]{1,0} parameter(0)\n  \
+     %s = f32[3,4]{1,0} slice(%x), slice={[0:6:2], [0:4]}\n  \
+     %zero = f32[] constant(0)\n  \
+     %zb = f32[3,4]{1,0} broadcast(%zero), dimensions={}\n  \
+     %m = pred[3,4]{1,0} compare(%s, %zb), direction=GT\n  \
+     %r = f32[3,4]{1,0} select(%m, %s, %zb)\n  \
+     ROOT %f = f32[3,4]{1,0} reshape(%r)\n}\n",
+];
+
+/// Bytes a mutation may write: enough HLO structure to keep many mutants
+/// parseable (the interesting ones), no way to grow a dimension past two
+/// digits because replacements are length-preserving.
+const ALPHABET: &[u8] = b"0123456789fspu%[]{}(),=:.-> abcdexyz";
+
+fn mutate(rng: &mut Rng, text: &str) -> String {
+    let mut bytes = text.as_bytes().to_vec();
+    match rng.below(5) {
+        // single-byte replacement
+        0 | 1 => {
+            let i = rng.below(bytes.len());
+            bytes[i] = ALPHABET[rng.below(ALPHABET.len())];
+        }
+        // swap two bytes
+        2 => {
+            let (i, j) = (rng.below(bytes.len()), rng.below(bytes.len()));
+            bytes.swap(i, j);
+        }
+        // drop or duplicate a whole line
+        3 => {
+            let mut lines: Vec<&str> = text.lines().collect();
+            let i = rng.below(lines.len());
+            if rng.below(2) == 0 {
+                lines.remove(i);
+            } else {
+                lines.insert(i, lines[i]);
+            }
+            return lines.join("\n");
+        }
+        // truncate mid-stream
+        _ => {
+            let at = rng.below(bytes.len());
+            bytes.truncate(at.max(1));
+        }
+    }
+    // length-preserving byte edits can split a multi-byte char; the parser
+    // must survive lossy text too
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+/// Every mutant must come out of parse → compile → verify as either a
+/// clean success or a typed error — never a panic. Compile runs the
+/// static plan verifier in test builds, so surviving mutants get their
+/// plans proved sound; that is also asserted explicitly.
+#[test]
+fn malformed_hlo_yields_typed_errors_never_panics() {
+    let client = PjRtClient::cpu().expect("client");
+    let mut rng = Rng::new(0x5eed_cafe_f00d_0001);
+    let (mut parsed, mut compiled) = (0usize, 0usize);
+    for round in 0..400 {
+        let base = CORPUS[round % CORPUS.len()];
+        let mutant = mutate(&mut rng, base);
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let proto = match HloModuleProto::from_text(&mutant) {
+                Ok(proto) => proto,
+                Err(_) => return (false, false),
+            };
+            match client.compile(&XlaComputation::from_proto(&proto)) {
+                Ok(exe) => {
+                    // a compiled mutant passed the verifier inside
+                    // compile; re-verifying must agree
+                    exe.verify().expect("compiled plan must re-verify clean");
+                    (true, true)
+                }
+                Err(_) => (true, false),
+            }
+        }));
+        match outcome {
+            Ok((p, c)) => {
+                parsed += usize::from(p);
+                compiled += usize::from(c);
+            }
+            Err(_) => panic!("panic on round {round}; mutant was:\n{mutant}"),
+        }
+    }
+    // the corpus must actually exercise the deep end of the pipeline, not
+    // just bounce off the tokenizer
+    assert!(parsed > 20, "only {parsed}/400 mutants parsed — mutations too destructive");
+    assert!(compiled > 5, "only {compiled}/400 mutants compiled — corpus too brittle");
+}
+
+/// The same stream of mutants, replayed from the same seed, makes the
+/// exact same decisions — the harness itself is deterministic.
+#[test]
+fn mutation_stream_is_deterministic() {
+    let run = || {
+        let mut rng = Rng::new(0x5eed_cafe_f00d_0001);
+        (0..50)
+            .map(|i| mutate(&mut rng, CORPUS[i % CORPUS.len()]))
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(run(), run());
+}

@@ -1,0 +1,52 @@
+#!/usr/bin/env bash
+# Panic-lint ratchet: non-test library code must not grow new panicking
+# call sites (`unwrap()`, `expect(`, `panic!(`, `unreachable!(`).
+#
+# The recorded baseline (tools/panic_baseline.txt) is the current count;
+# this script fails if the count *increases* and asks you to lower the
+# baseline when it decreases, so the number only ratchets down. Test
+# code is exempt: counting stops at the first `#[cfg(test)]` in each
+# file (the repo convention keeps the test module last), and files under
+# tests/ or benches/ are never scanned.
+#
+# Usage: tools/lint_panics.sh            # check against the baseline
+#        tools/lint_panics.sh --counts   # print the per-file breakdown
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+baseline_file="tools/panic_baseline.txt"
+pattern='\.unwrap\(\)|\.expect\(|panic!\(|unreachable!\('
+
+total=0
+breakdown=""
+for f in $(find rust/src rust/xla/src -name '*.rs' | sort); do
+  # strip everything from the first `#[cfg(test)]` onward, then count
+  n=$(awk '/^[[:space:]]*#\[cfg\(test\)\]/{exit} {print}' "$f" \
+    | grep -cE "$pattern" || true)
+  total=$((total + n))
+  if [ "$n" -gt 0 ]; then
+    breakdown="${breakdown}  ${n}	${f}
+"
+  fi
+done
+
+if [ "${1:-}" = "--counts" ]; then
+  printf 'panic-lint: %d panicking call sites in non-test library code\n%s' \
+    "$total" "$breakdown"
+  exit 0
+fi
+
+baseline=$(cat "$baseline_file")
+if [ "$total" -gt "$baseline" ]; then
+  echo "panic-lint FAILED: $total panicking call sites in non-test library" >&2
+  echo "code, baseline is $baseline. New library code must propagate typed" >&2
+  echo "errors (anyhow::Result / PlanVerifyError) instead of panicking." >&2
+  printf 'Per-file counts:\n%s' "$breakdown" >&2
+  exit 1
+fi
+if [ "$total" -lt "$baseline" ]; then
+  echo "panic-lint: count dropped to $total (baseline $baseline) — nice!" >&2
+  echo "Ratchet it: echo $total > $baseline_file" >&2
+  exit 1
+fi
+echo "panic-lint ok: $total panicking call sites (== baseline)"
