@@ -66,6 +66,7 @@ fn main() -> anyhow::Result<()> {
                     accuracy_threshold: 0.0,
                     progress: None,
                     cache_path: None,
+                    checkpoint: None,
                 },
             )?
             .records)

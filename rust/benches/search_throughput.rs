@@ -25,7 +25,10 @@
 //! 5. **Sharded dispatch** — the same search through the multi-process
 //!    shard protocol (file-based queue + lease claims, worker loops on
 //!    threads), verifying the trial stream stays identical and recording
-//!    the protocol's throughput next to the in-process numbers.
+//!    the protocol's throughput next to the in-process numbers; then the
+//!    identical budget over the TCP transport (in-process task server,
+//!    workers claiming over loopback HTTP), recording the fs-vs-tcp
+//!    throughput side by side.
 //! 6. **Surrogate batching + serving** — rows/sec of the per-trial
 //!    (one padded execution per genome) vs generation-batched
 //!    (⌈N/`SUR_BATCH`⌉ executions) surrogate paths, and requests/sec of
@@ -37,12 +40,14 @@
 mod common;
 
 use std::path::Path;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use snac_pack::coordinator::{global_search_with, SearchLoopConfig, SearchOutcome};
 use snac_pack::eval::{
-    run_worker, EvalCache, EvalRequest, ParallelEvaluator, RunDir, ShardDriver, ShardTimings,
-    StageSpec, TrialEvaluation, TrialEvaluator, WorkerOptions,
+    run_worker_on, EvalCache, EvalRequest, FsTransport, ParallelEvaluator, ShardDriver,
+    ShardTimings, ShardTransport, StageSpec, TcpHost, TcpWorker, TrialEvaluation, TrialEvaluator,
+    WorkerOptions,
 };
 use snac_pack::hls::{synthesize, FpgaDevice, HlsConfig, NetworkSpec};
 use snac_pack::nn::{self, Genome, SearchSpace};
@@ -160,6 +165,7 @@ fn run_with_cache(workers: usize, cache: EvalCache) -> (SearchOutcome, f64) {
             seed: SEED,
             accuracy_threshold: 0.0,
             progress: None,
+            checkpoint: None,
         },
     )
     .expect("simulated search");
@@ -218,19 +224,49 @@ fn dispatch_streaming(pool: &ParallelEvaluator<SkewedTrainer>, reqs: Vec<EvalReq
     accs
 }
 
+/// The dispatch medium for [`run_sharded`]: the rename-based file
+/// protocol over a run directory, or HTTP to an in-process task server
+/// over loopback. The protocol core and the driver merge are identical
+/// either way, so the trial stream must be too.
+enum Transport {
+    Fs,
+    Tcp,
+}
+
 /// Phase 5: the identical search budget dispatched through the shard
-/// protocol — driver partitions each generation into `shards` files,
+/// protocol — driver partitions each generation into `shards` tasks,
 /// `workers` worker loops (threads here; separate processes in
 /// production) claim and evaluate them with the same simulated trainer.
-fn run_sharded(shards: usize, workers: usize) -> (SearchOutcome, f64) {
+fn run_sharded(transport: Transport, shards: usize, workers: usize) -> (SearchOutcome, f64) {
     let space = SearchSpace::table1();
     let run_dir = std::env::temp_dir().join(format!(
         "snac_bench_shard_{}_{shards}_{workers}",
         std::process::id()
     ));
     let _ = std::fs::remove_dir_all(&run_dir);
-    let driver = ShardDriver::new(
-        &run_dir,
+    let (driver_t, worker_ts): (Arc<dyn ShardTransport>, Vec<Arc<dyn ShardTransport>>) =
+        match transport {
+            Transport::Fs => {
+                let mk = || -> Arc<dyn ShardTransport> {
+                    Arc::new(FsTransport::new(&run_dir).expect("fs transport"))
+                };
+                (mk(), (0..workers).map(|_| mk()).collect())
+            }
+            Transport::Tcp => {
+                let host =
+                    Arc::new(TcpHost::listen("127.0.0.1:0", None).expect("tcp task server"));
+                let addr = host.addr().to_string();
+                let ws = (0..workers)
+                    .map(|_| {
+                        Arc::new(TcpWorker::connect(&addr, Duration::from_secs(5)))
+                            as Arc<dyn ShardTransport>
+                    })
+                    .collect();
+                (host as Arc<dyn ShardTransport>, ws)
+            }
+        };
+    let driver = ShardDriver::with_transport(
+        Arc::clone(&driver_t),
         "bench",
         StageSpec {
             objectives: ObjectiveKind::nac_set(),
@@ -251,7 +287,7 @@ fn run_sharded(shards: usize, workers: usize) -> (SearchOutcome, f64) {
     };
     // always request shutdown — even when the driver panics — so worker
     // threads exit and the scope can join instead of hanging the bench
-    struct ShutdownOnDrop(RunDir);
+    struct ShutdownOnDrop(Arc<dyn ShardTransport>);
     impl Drop for ShutdownOnDrop {
         fn drop(&mut self) {
             let _ = self.0.request_shutdown();
@@ -259,13 +295,12 @@ fn run_sharded(shards: usize, workers: usize) -> (SearchOutcome, f64) {
     }
     let t0 = Instant::now();
     let outcome = std::thread::scope(|s| {
-        let _guard = ShutdownOnDrop(RunDir::new(&run_dir));
-        for _ in 0..workers {
-            let rd = run_dir.as_path();
+        let _guard = ShutdownOnDrop(Arc::clone(&driver_t));
+        for wt in worker_ts {
             let opts = opts.clone();
             s.spawn(move || {
                 let trainer = simulated_trainer();
-                run_worker(rd, &opts, |_stage, reqs| {
+                run_worker_on(wt, &opts, |_stage, reqs| {
                     reqs.iter()
                         .map(|req| {
                             let mut rng = req.rng.clone();
@@ -288,6 +323,7 @@ fn run_sharded(shards: usize, workers: usize) -> (SearchOutcome, f64) {
                 seed: SEED,
                 accuracy_threshold: 0.0,
                 progress: None,
+                checkpoint: None,
             },
         )
         .expect("sharded search")
@@ -832,13 +868,17 @@ fn main() -> anyhow::Result<()> {
     // ---- phase 5: sharded dispatch over the file-based work queue ----
     let serial_genomes = serial_genomes.expect("phase 1 ran");
     let mut sharded_results = Vec::new();
+    let mut fs_2x2_secs = f64::NAN;
     for (shards, workers) in [(2usize, 2usize), (4, 4)] {
-        let (outcome, secs) = run_sharded(shards, workers);
+        let (outcome, secs) = run_sharded(Transport::Fs, shards, workers);
         let genomes: Vec<Genome> = outcome.records.iter().map(|r| r.genome.clone()).collect();
         assert_eq!(
             serial_genomes, genomes,
             "sharded dispatch must not change the trial stream"
         );
+        if shards == 2 {
+            fs_2x2_secs = secs;
+        }
         let tps = TRIALS as f64 / secs;
         println!(
             "bench search/sharded_{shards}x{workers:<2}  {:>10}  {tps:>7.1} trials/s  \
@@ -857,6 +897,34 @@ fn main() -> anyhow::Result<()> {
         ]));
     }
     println!("determinism: sharded trial streams identical to the in-process pool");
+
+    // ---- phase 5b: the same budget over the TCP transport ----
+    // Same shard protocol, different medium: HTTP task claims over
+    // loopback instead of rename-based files. The trial stream must be
+    // bit-identical; the throughput delta is the wire cost.
+    let (tcp_outcome, tcp_secs) = run_sharded(Transport::Tcp, 2, 2);
+    let tcp_genomes: Vec<Genome> =
+        tcp_outcome.records.iter().map(|r| r.genome.clone()).collect();
+    assert_eq!(
+        serial_genomes, tcp_genomes,
+        "TCP dispatch must not change the trial stream"
+    );
+    println!(
+        "bench search/transport_tcp_2x2  {:>10}  {:>7.1} trials/s  \
+         (fs {:.1} trials/s over the same 2x2 budget)",
+        common::fmt(tcp_secs),
+        TRIALS as f64 / tcp_secs,
+        TRIALS as f64 / fs_2x2_secs
+    );
+    println!("determinism: TCP trial stream identical to the in-process pool");
+    let transport_throughput = Json::obj(vec![
+        ("shards", Json::Num(2.0)),
+        ("workers", Json::Num(2.0)),
+        ("fs_seconds", Json::Num(fs_2x2_secs)),
+        ("fs_trials_per_sec", Json::Num(TRIALS as f64 / fs_2x2_secs)),
+        ("tcp_seconds", Json::Num(tcp_secs)),
+        ("tcp_trials_per_sec", Json::Num(TRIALS as f64 / tcp_secs)),
+    ]);
 
     // ---- phase 6: surrogate batching + the estimation service ----
     let surrogate_batching = bench_surrogate_batching()?;
@@ -900,6 +968,7 @@ fn main() -> anyhow::Result<()> {
             ]),
         ),
         ("sharded", Json::Arr(sharded_results)),
+        ("transport_throughput", transport_throughput),
         ("surrogate_batching", surrogate_batching),
         ("serve", serve),
     ]);

@@ -59,6 +59,12 @@ pub struct SearchBudget {
     /// is off by default. Purely a checking layer: results are identical
     /// either way.
     pub verify_plans: bool,
+    /// Driver checkpointing (`--checkpoint-interval`): snapshot the
+    /// search state every N generations so a killed driver resumes
+    /// mid-run instead of restarting from trial 0. `0` = off (the
+    /// default). Resumed runs produce bit-identical trial databases
+    /// (modulo live timings), so this is purely a fault-tolerance knob.
+    pub checkpoint_interval: usize,
 }
 
 /// `snac-pack serve` — the estimation service's knobs.
@@ -108,8 +114,17 @@ pub struct Preset {
     /// How many local `snac-pack worker` processes the CLI driver spawns
     /// for a sharded run. `None` = auto (one per shard); `Some(0)` =
     /// spawn none (workers are managed externally, e.g. on other
-    /// terminals or — in the future — other machines).
+    /// terminals or other machines).
     pub spawn_workers: Option<usize>,
+    /// Driver-hosted TCP task server (`--listen HOST:PORT`). When set on
+    /// a sharded run, the driver serves its shard queue over TCP instead
+    /// of a shared run directory, and workers join with
+    /// `snac-pack worker --connect HOST:PORT` — no shared filesystem
+    /// needed. `HOST:0` binds an ephemeral port (printed on startup).
+    pub listen: Option<String>,
+    /// Worker-side peer (`--connect HOST:PORT`): serve shards for a
+    /// driver listening on this address instead of over `--run-dir`.
+    pub connect: Option<String>,
     /// Estimation-service settings (`snac-pack serve`).
     pub serve: ServeConfig,
 }
@@ -134,6 +149,7 @@ impl Preset {
                     shards: 0,
                     threads: 1,
                     verify_plans: false,
+                    checkpoint_interval: 0,
                 },
                 surrogate: SurrogateTrainConfig::default(),
                 local: LocalSearchConfig::default(),
@@ -141,6 +157,8 @@ impl Preset {
                 cache_path: None,
                 run_dir: None,
                 spawn_workers: None,
+                listen: None,
+                connect: None,
                 serve: ServeConfig::default(),
             }),
             "ci" => Ok(Preset {
@@ -159,6 +177,7 @@ impl Preset {
                     shards: 0,
                     threads: 1,
                     verify_plans: false,
+                    checkpoint_interval: 0,
                 },
                 surrogate: SurrogateTrainConfig::default(),
                 local: LocalSearchConfig {
@@ -171,6 +190,8 @@ impl Preset {
                 cache_path: None,
                 run_dir: None,
                 spawn_workers: None,
+                listen: None,
+                connect: None,
                 serve: ServeConfig::default(),
             }),
             "quickstart" => Ok(Preset {
@@ -189,6 +210,7 @@ impl Preset {
                     shards: 0,
                     threads: 1,
                     verify_plans: false,
+                    checkpoint_interval: 0,
                 },
                 surrogate: SurrogateTrainConfig {
                     dataset_size: 1024,
@@ -205,6 +227,8 @@ impl Preset {
                 cache_path: None,
                 run_dir: None,
                 spawn_workers: None,
+                listen: None,
+                connect: None,
                 serve: ServeConfig::default(),
             }),
             other => bail!("unknown preset `{other}` (paper | ci | quickstart)"),
@@ -253,6 +277,9 @@ impl Preset {
                 }
             }
             "run_dir" => self.run_dir = Some(value.to_string()),
+            "checkpoint_interval" => self.search.checkpoint_interval = uint()?,
+            "listen" => self.listen = Some(value.to_string()),
+            "connect" => self.connect = Some(value.to_string()),
             "spawn_workers" => {
                 self.spawn_workers = if value == "auto" {
                     None
@@ -270,7 +297,7 @@ impl Preset {
     /// over `by_name` — so the codec's surface is the override surface by
     /// construction, and fields outside it (e.g. surrogate learning rate)
     /// stay pinned to the named preset on both ends.
-    const OVERRIDE_KEYS: [&str; 22] = [
+    const OVERRIDE_KEYS: [&str; 25] = [
         "trials",
         "population",
         "epochs",
@@ -292,6 +319,9 @@ impl Preset {
         "threads",
         "verify_plans",
         "run_dir",
+        "checkpoint_interval",
+        "listen",
+        "connect",
         "spawn_workers",
     ];
 
@@ -319,6 +349,9 @@ impl Preset {
             "threads" => s(self.search.threads),
             "verify_plans" => Some(if self.search.verify_plans { "1" } else { "0" }.to_string()),
             "run_dir" => self.run_dir.clone(),
+            "checkpoint_interval" => s(self.search.checkpoint_interval),
+            "listen" => self.listen.clone(),
+            "connect" => self.connect.clone(),
             "spawn_workers" => self.spawn_workers.map(|v| v.to_string()),
             _ => None,
         }
@@ -392,6 +425,9 @@ mod tests {
         p.set("threads", "2").unwrap();
         p.set("run_dir", "/tmp/run").unwrap();
         p.set("spawn_workers", "2").unwrap();
+        p.set("checkpoint_interval", "5").unwrap();
+        p.set("listen", "127.0.0.1:0").unwrap();
+        p.set("connect", "10.0.0.2:7979").unwrap();
         assert_eq!(p.search.trials, 99);
         assert_eq!(p.local.target_sparsity, 0.7);
         assert_eq!(p.search.workers, 4);
@@ -400,6 +436,10 @@ mod tests {
         assert_eq!(p.search.threads, 2);
         assert_eq!(p.run_dir.as_deref(), Some("/tmp/run"));
         assert_eq!(p.spawn_workers, Some(2));
+        assert_eq!(p.search.checkpoint_interval, 5);
+        assert_eq!(p.listen.as_deref(), Some("127.0.0.1:0"));
+        assert_eq!(p.connect.as_deref(), Some("10.0.0.2:7979"));
+        assert!(p.set("checkpoint_interval", "often").is_err());
         p.set("spawn_workers", "auto").unwrap();
         assert_eq!(p.spawn_workers, None);
         assert!(!p.search.verify_plans, "plan verification is opt-in");
@@ -437,6 +477,9 @@ mod tests {
         p.set("run_dir", "/tmp/rd").unwrap();
         p.set("port", "9191").unwrap();
         p.set("batch_deadline_ms", "7").unwrap();
+        p.set("checkpoint_interval", "3").unwrap();
+        p.set("listen", "0.0.0.0:7979").unwrap();
+        p.set("connect", "driver.local:7979").unwrap();
         let text = p.to_json().to_string();
         let back = Preset::from_json(&crate::util::Json::parse(&text).unwrap()).unwrap();
         assert_eq!(back.name, "quickstart");
@@ -457,6 +500,9 @@ mod tests {
         assert_eq!(back.run_dir.as_deref(), Some("/tmp/rd"));
         assert_eq!(back.serve.port, 9191);
         assert_eq!(back.serve.batch_deadline_ms, 7);
+        assert_eq!(back.search.checkpoint_interval, 3);
+        assert_eq!(back.listen.as_deref(), Some("0.0.0.0:7979"));
+        assert_eq!(back.connect.as_deref(), Some("driver.local:7979"));
         // garbage is rejected with context
         assert!(Preset::from_json(&crate::util::Json::parse("{}").unwrap()).is_err());
     }

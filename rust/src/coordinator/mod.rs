@@ -17,9 +17,9 @@ pub mod pipeline;
 pub mod search_loop;
 pub mod trial_db;
 
-pub use pipeline::{run_pipeline, PipelineSummary, ProcessedModel};
+pub use pipeline::{run_pipeline, run_pipeline_with, PipelineSummary, ProcessedModel};
 pub use search_loop::{
-    global_search, global_search_sharded, global_search_with, GlobalSearchConfig,
-    SearchLoopConfig, SearchOutcome, ShardedDispatch,
+    global_search, global_search_sharded, global_search_with, CheckpointConfig, DispatchBackend,
+    GlobalSearchConfig, SearchLoopConfig, SearchOutcome, ShardedDispatch,
 };
 pub use trial_db::TrialRecord;

@@ -16,12 +16,14 @@
 //! `--workers` knob controls the pipeline's parallelism end to end.
 
 use std::path::Path;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
 use super::search_loop::{
-    global_search, global_search_sharded, GlobalSearchConfig, SearchOutcome, ShardedDispatch,
+    global_search, global_search_sharded, CheckpointConfig, DispatchBackend, GlobalSearchConfig,
+    SearchOutcome, ShardedDispatch,
 };
 use super::trial_db::TrialRecord;
 use crate::compress::{local_search, synthesis_nnz, LocalSearchResult};
@@ -29,7 +31,7 @@ use crate::config::Preset;
 use crate::data::{Dataset, Split};
 use crate::eval::{
     parallel_map, resolve_workers, EvalCache, EvalRequest, ParallelEvaluator, ShardDriver,
-    ShardTimings, StageSpec, SupernetEvaluator,
+    ShardTimings, ShardTransport, StageSpec, SupernetEvaluator,
 };
 use crate::hls::{synthesize, FpgaDevice, HlsConfig, NetworkSpec, SynthReport};
 use crate::nn::{bops, Genome, SearchSpace, SupernetInputs};
@@ -87,9 +89,61 @@ fn timed<T>(
     Ok(out)
 }
 
+/// How the sharded stages dispatch their trial batches.
+enum ShardBackend {
+    /// Shared run directory, rename-based protocol (`--run-dir`).
+    Fs(std::path::PathBuf),
+    /// Driver-hosted TCP task queue (`--listen` / `--connect`).
+    Tcp(Arc<dyn ShardTransport>),
+}
+
+impl ShardBackend {
+    fn driver(
+        &self,
+        label: &str,
+        stage: StageSpec,
+        shards: usize,
+        cache: EvalCache,
+    ) -> Result<ShardDriver> {
+        match self {
+            ShardBackend::Fs(dir) => {
+                ShardDriver::new(dir, label, stage, shards, cache, ShardTimings::default())
+            }
+            ShardBackend::Tcp(t) => ShardDriver::with_transport(
+                Arc::clone(t),
+                label,
+                stage,
+                shards,
+                cache,
+                ShardTimings::default(),
+            ),
+        }
+    }
+
+    fn dispatch(&self) -> DispatchBackend<'_> {
+        match self {
+            ShardBackend::Fs(dir) => DispatchBackend::RunDir(dir),
+            ShardBackend::Tcp(t) => DispatchBackend::Transport(Arc::clone(t)),
+        }
+    }
+}
+
 /// Run the full pipeline. Writes reports under `out_dir` and returns the
 /// in-memory summary.
 pub fn run_pipeline(rt: &Runtime, preset: &Preset, out_dir: &Path) -> Result<PipelineSummary> {
+    run_pipeline_with(rt, preset, out_dir, None)
+}
+
+/// [`run_pipeline`] with an explicit shard transport: when the CLI hosts
+/// a TCP task server (`--listen`), the sharded stages dispatch over it
+/// instead of a shared run directory. `None` keeps the run-directory
+/// (or in-process) behaviour.
+pub fn run_pipeline_with(
+    rt: &Runtime,
+    preset: &Preset,
+    out_dir: &Path,
+    transport: Option<Arc<dyn ShardTransport>>,
+) -> Result<PipelineSummary> {
     std::fs::create_dir_all(out_dir)?;
     let mut timings = Vec::new();
     let space = SearchSpace::table1();
@@ -105,20 +159,31 @@ pub fn run_pipeline(rt: &Runtime, preset: &Preset, out_dir: &Path) -> Result<Pip
     }
     // Sharded dispatch: with `shards > 0` the baseline training and both
     // global searches hand their trial batches to `snac-pack worker`
-    // processes over the shared run directory (one directory, three
-    // sequential stages under distinct labels). Results are bit-identical
-    // to the in-process path; only timings change. Local search + synthesis
+    // processes — over the shared run directory, or over the driver's TCP
+    // task server when one was passed in (one medium, three sequential
+    // stages under distinct labels). Results are bit-identical to the
+    // in-process path; only timings change. Local search + synthesis
     // stay in-process — they are three fixed models, not a generation.
-    let shard_run: Option<std::path::PathBuf> = if preset.search.shards > 0 {
-        let dir = preset.run_dir.as_ref().context(
-            "sharded dispatch (shards > 0) needs a run directory — pass --run-dir \
-             (the CLI defaults it to <out>/shard-run)",
-        )?;
+    let shard_backend: Option<ShardBackend> = if preset.search.shards > 0 {
+        let backend = match transport {
+            Some(t) => ShardBackend::Tcp(t),
+            None => {
+                let dir = preset.run_dir.as_ref().context(
+                    "sharded dispatch (shards > 0) needs a run directory — pass --run-dir \
+                     (the CLI defaults it to <out>/shard-run)",
+                )?;
+                ShardBackend::Fs(std::path::PathBuf::from(dir))
+            }
+        };
+        let medium = match &backend {
+            ShardBackend::Fs(dir) => dir.display().to_string(),
+            ShardBackend::Tcp(t) => t.describe(),
+        };
         eprintln!(
-            "[pipeline] sharded dispatch: {} shards/generation over {dir}",
+            "[pipeline] sharded dispatch: {} shards/generation over {medium}",
             preset.search.shards
         );
-        Some(std::path::PathBuf::from(dir))
+        Some(backend)
     } else {
         None
     };
@@ -160,11 +225,10 @@ pub fn run_pipeline(rt: &Runtime, preset: &Preset, out_dir: &Path) -> Result<Pip
             rng: Rng::new(preset.seed ^ 0xba5e_11),
         };
         let cache = EvalCache::open(cache_path.as_deref(), &space, &scope);
-        let trial = if let Some(run_dir) = &shard_run {
+        let trial = if let Some(backend) = &shard_backend {
             // same protocol, dispatched through the worker fleet (a
             // single-trial generation → a single shard)
-            let driver = ShardDriver::new(
-                run_dir,
+            let driver = backend.driver(
                 "baseline",
                 StageSpec {
                     objectives,
@@ -172,7 +236,6 @@ pub fn run_pipeline(rt: &Runtime, preset: &Preset, out_dir: &Path) -> Result<Pip
                 },
                 preset.search.shards,
                 cache,
-                ShardTimings::default(),
             )?;
             let mut out = None;
             driver.evaluate_stream(vec![request], |t| out = Some(t))?;
@@ -244,17 +307,24 @@ pub fn run_pipeline(rt: &Runtime, preset: &Preset, out_dir: &Path) -> Result<Pip
                     }
                 })),
                 cache_path: cache_path.clone(),
+                // one checkpoint file per stage: the two searches run in
+                // sequence over distinct budgets, so a shared path would
+                // let one stage's snapshot shadow the other's
+                checkpoint: (preset.search.checkpoint_interval > 0).then(|| CheckpointConfig {
+                    path: out_dir.join(format!("checkpoint-{stage}.json")),
+                    interval: preset.search.checkpoint_interval,
+                }),
             };
-            match &shard_run {
+            match &shard_backend {
                 // workers rebuild the evaluator stack (and, for SNAC, the
                 // surrogate — deterministically from the same preset seed,
                 // so its estimates match the driver's bit for bit)
-                Some(run_dir) => global_search_sharded(
+                Some(backend) => global_search_sharded(
                     &ds,
                     &space,
                     cfg,
                     &ShardedDispatch {
-                        run_dir,
+                        backend: backend.dispatch(),
                         label: stage,
                         shards: preset.search.shards,
                         timings: ShardTimings::default(),

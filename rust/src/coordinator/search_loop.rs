@@ -10,25 +10,32 @@
 //! identical for every worker count under a fixed seed, in everything
 //! except the recorded wall-clock timings (`train_seconds` is live
 //! measurement and varies run to run).
+//!
+//! With a [`CheckpointConfig`] the loop additionally snapshots its full
+//! generational state (committed records, master RNG, breeding population,
+//! NSGA-II elite pool) to disk at generation boundaries, so a killed
+//! driver resumes where it left off instead of restarting from trial 0;
+//! mid-generation work survives through the persistent [`EvalCache`].
 
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use super::trial_db::TrialRecord;
 use crate::data::{Dataset, Split};
 use crate::eval::{
-    EvalCache, EvalPool, EvalRequest, ParallelEvaluator, ShardDriver, ShardTimings, StageSpec,
-    SupernetEvaluator,
+    manifest_fingerprint, EvalCache, EvalPool, EvalRequest, ParallelEvaluator, ShardDriver,
+    ShardTimings, ShardTransport, StageSpec, SupernetEvaluator,
 };
-use crate::nn::SearchSpace;
+use crate::nn::{Genome, SearchSpace};
 use crate::objectives::{ObjectiveContext, ObjectiveKind};
 use crate::pareto;
 use crate::runtime::Runtime;
 use crate::search::{EvaluatedIndividual, Nsga2, Nsga2Config};
 use crate::trainer::TrainConfig;
-use crate::util::Rng;
+use crate::util::{Json, Rng};
 
 /// Global-search configuration.
 pub struct GlobalSearchConfig<'a> {
@@ -58,6 +65,32 @@ pub struct GlobalSearchConfig<'a> {
     /// on start so previously evaluated genomes are never retrained.
     /// `None` keeps the cache in-memory for this run only.
     pub cache_path: Option<PathBuf>,
+    /// Snapshot the generational search state so a killed driver can
+    /// resume mid-run. `None` disables checkpointing.
+    pub checkpoint: Option<CheckpointConfig>,
+}
+
+/// Driver checkpointing: where and how often [`global_search_with`]
+/// snapshots its generational state.
+///
+/// A snapshot captures everything the loop needs to restart at a
+/// generation boundary — committed trial records, the master RNG (whose
+/// per-trial fork points derive from it), the bred-but-unevaluated
+/// population, and the NSGA-II elite pool — plus a configuration
+/// fingerprint so a checkpoint from a different seed or budget is
+/// ignored rather than replayed. Trials evaluated *after* the snapshot
+/// but *before* the kill are not lost either: they sit in the persistent
+/// evaluation cache (`--cache-path`), so the resumed driver replays them
+/// as cache hits and the final trial database is bit-identical to an
+/// uninterrupted run (modulo live `train_seconds`).
+pub struct CheckpointConfig {
+    /// Snapshot file: atomically replaced (write-temp-then-rename) on
+    /// every save, removed when the search completes so a later run with
+    /// the same configuration starts fresh.
+    pub path: PathBuf,
+    /// Snapshot every `interval` generations (`0` behaves as `1`: every
+    /// generation boundary).
+    pub interval: usize,
 }
 
 /// The evaluator-independent slice of the search configuration, used by
@@ -120,6 +153,131 @@ fn open_scoped_cache(cache_path: Option<&Path>, space: &SearchSpace, scope: &str
     cache
 }
 
+/// Everything a checkpoint restores (the loop state at one generation
+/// boundary).
+struct CheckpointState {
+    generation: usize,
+    rng: Rng,
+    population: Vec<Genome>,
+    parents: Vec<EvaluatedIndividual>,
+    records: Vec<TrialRecord>,
+}
+
+/// Pin a checkpoint to the exact configuration that wrote it: resuming
+/// under a different seed, budget, or breeding schedule would replay a
+/// foreign trial stream, so such checkpoints are ignored instead.
+fn checkpoint_fingerprint(cfg: &SearchLoopConfig) -> String {
+    manifest_fingerprint(&format!(
+        "checkpoint|seed={}|trials={}|population={}|p_mutation={}|p_crossover={}",
+        cfg.seed, cfg.trials, cfg.nsga2.population, cfg.nsga2.p_mutation, cfg.nsga2.p_crossover
+    ))
+}
+
+/// Atomically snapshot the loop state (write-temp-then-rename, so a kill
+/// mid-save leaves the previous checkpoint intact).
+fn save_checkpoint(
+    path: &Path,
+    fingerprint: &str,
+    generation: usize,
+    rng: &Rng,
+    population: &[Genome],
+    parents: &[EvaluatedIndividual],
+    records: &[TrialRecord],
+) -> Result<()> {
+    let doc = Json::obj(vec![
+        ("fingerprint", Json::Str(fingerprint.to_string())),
+        ("generation", Json::Num(generation as f64)),
+        ("rng", rng.to_json()),
+        (
+            "population",
+            Json::Arr(population.iter().map(Genome::to_json).collect()),
+        ),
+        (
+            "parents",
+            Json::Arr(parents.iter().map(EvaluatedIndividual::to_json).collect()),
+        ),
+        (
+            "records",
+            Json::Arr(records.iter().map(TrialRecord::to_json).collect()),
+        ),
+    ]);
+    if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating checkpoint directory {}", dir.display()))?;
+    }
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, doc.to_string())
+        .with_context(|| format!("writing checkpoint {}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("publishing checkpoint {}", path.display()))?;
+    Ok(())
+}
+
+/// Load a checkpoint if one exists and matches this configuration; any
+/// mismatch or corruption logs a warning and starts fresh (a stale
+/// checkpoint must never poison a new run).
+fn load_checkpoint(path: &Path, fingerprint: &str, space: &SearchSpace) -> Option<CheckpointState> {
+    let text = std::fs::read_to_string(path).ok()?;
+    match parse_checkpoint(&text, fingerprint, space) {
+        Ok(state) => Some(state),
+        Err(err) => {
+            eprintln!(
+                "[search] ignoring checkpoint {} ({err:#}) — starting fresh",
+                path.display()
+            );
+            None
+        }
+    }
+}
+
+fn parse_checkpoint(text: &str, fingerprint: &str, space: &SearchSpace) -> Result<CheckpointState> {
+    let j = Json::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let found = j
+        .get("fingerprint")
+        .and_then(Json::as_str)
+        .context("checkpoint missing fingerprint")?;
+    anyhow::ensure!(
+        found == fingerprint,
+        "configuration fingerprint mismatch ({found} vs {fingerprint})"
+    );
+    let generation = j
+        .get("generation")
+        .and_then(Json::as_usize)
+        .context("checkpoint missing generation")?;
+    let rng = Rng::from_json(j.get("rng").context("checkpoint missing rng")?)?;
+    let population: Vec<Genome> = j
+        .get("population")
+        .context("checkpoint missing population")?
+        .items()
+        .iter()
+        .map(Genome::from_json)
+        .collect::<Result<_>>()?;
+    let parents: Vec<EvaluatedIndividual> = j
+        .get("parents")
+        .context("checkpoint missing parents")?
+        .items()
+        .iter()
+        .map(EvaluatedIndividual::from_json)
+        .collect::<Result<_>>()?;
+    for g in population.iter().chain(parents.iter().map(|e| &e.genome)) {
+        anyhow::ensure!(space.contains(g), "checkpoint genome outside search space");
+    }
+    let records: Vec<TrialRecord> = j
+        .get("records")
+        .context("checkpoint missing records")?
+        .items()
+        .iter()
+        .map(|r| TrialRecord::from_json(r, space))
+        .collect::<Result<_>>()?;
+    Ok(CheckpointState {
+        generation,
+        rng,
+        population,
+        parents,
+        records,
+    })
+}
+
 /// Run the paper's global search stage: train-and-score evaluation over
 /// the supernet runtime, parallelised and memoised per
 /// [`crate::eval::ParallelEvaluator`].
@@ -140,6 +298,7 @@ pub fn global_search(
         accuracy_threshold,
         progress,
         cache_path,
+        checkpoint,
     } = cfg;
     // objective slot 0 is always (negated) accuracy by construction
     debug_assert_eq!(objectives[0], ObjectiveKind::Accuracy);
@@ -160,21 +319,33 @@ pub fn global_search(
             seed,
             accuracy_threshold,
             progress,
+            checkpoint,
         },
     )
 }
 
 /// Where a sharded search dispatches its generations.
 pub struct ShardedDispatch<'a> {
-    /// The shared run directory served by `snac-pack worker` processes.
-    pub run_dir: &'a Path,
+    /// The medium shard tasks travel over.
+    pub backend: DispatchBackend<'a>,
     /// File-name namespace for this search's shards (the pipeline runs
-    /// several sharded stages over one run directory, in sequence).
+    /// several sharded stages over one backend, in sequence).
     pub label: &'a str,
     /// Shards per generation.
     pub shards: usize,
     /// Lease/poll/stall knobs.
     pub timings: ShardTimings,
+}
+
+/// The dispatch medium for a sharded search.
+pub enum DispatchBackend<'a> {
+    /// A shared run directory served by `snac-pack worker --run-dir`
+    /// processes (the rename-based `FsTransport`).
+    RunDir(&'a Path),
+    /// An explicit [`ShardTransport`] — e.g. a driver-hosted
+    /// [`crate::eval::TcpHost`] serving `snac-pack worker --connect`
+    /// fleets with no shared filesystem.
+    Transport(Arc<dyn ShardTransport>),
 }
 
 /// Run a global search whose trial evaluation is sharded across
@@ -204,19 +375,30 @@ pub fn global_search_sharded(
         accuracy_threshold,
         progress,
         cache_path,
+        checkpoint,
     } = cfg;
     debug_assert_eq!(objectives[0], ObjectiveKind::Accuracy);
     let scope = search_scope(&objectives, epochs, seed, ds);
     let cache = open_scoped_cache(cache_path.as_deref(), space, &scope);
     let stage = StageSpec { objectives, epochs };
-    let driver = ShardDriver::new(
-        dispatch.run_dir,
-        dispatch.label,
-        stage,
-        dispatch.shards,
-        cache,
-        dispatch.timings.clone(),
-    )?;
+    let driver = match &dispatch.backend {
+        DispatchBackend::RunDir(run_dir) => ShardDriver::new(
+            run_dir,
+            dispatch.label,
+            stage,
+            dispatch.shards,
+            cache,
+            dispatch.timings.clone(),
+        )?,
+        DispatchBackend::Transport(transport) => ShardDriver::with_transport(
+            Arc::clone(transport),
+            dispatch.label,
+            stage,
+            dispatch.shards,
+            cache,
+            dispatch.timings.clone(),
+        )?,
+    };
     let outcome = global_search_with(
         &driver,
         space,
@@ -226,13 +408,14 @@ pub fn global_search_sharded(
             seed,
             accuracy_threshold,
             progress,
+            checkpoint,
         },
     )?;
     eprintln!(
         "[{}] sharded dispatch: {} shards/generation over {}, {} lease reclaims",
         dispatch.label,
         driver.shards(),
-        dispatch.run_dir.display(),
+        driver.transport().describe(),
         driver.reclaims()
     );
     Ok(outcome)
@@ -259,7 +442,45 @@ pub fn global_search_with<P: EvalPool>(
     // commit ordering.
     let mut completed = 0usize;
 
+    let fingerprint = cfg.checkpoint.as_ref().map(|_| checkpoint_fingerprint(&cfg));
+    if let (Some(cp), Some(fp)) = (cfg.checkpoint.as_ref(), fingerprint.as_deref()) {
+        if let Some(state) = load_checkpoint(&cp.path, fp, space) {
+            eprintln!(
+                "[search] resuming from checkpoint {} (generation {}, {} trials committed)",
+                cp.path.display(),
+                state.generation,
+                state.records.len()
+            );
+            records = state.records;
+            rng = state.rng;
+            population = state.population;
+            engine.restore(state.parents);
+            generation = state.generation;
+            completed = records.len();
+        }
+    }
+
     while records.len() < cfg.trials {
+        // Snapshot at generation boundaries: records are committed, the
+        // next generation is bred but unevaluated, and the master RNG has
+        // not yet forked this generation's trial streams — exactly the
+        // state a resumed driver replays. A failed save is a warning, not
+        // a run-killer: the search itself needs no checkpoint to finish.
+        if let (Some(cp), Some(fp)) = (cfg.checkpoint.as_ref(), fingerprint.as_deref()) {
+            if generation % cp.interval.max(1) == 0 {
+                if let Err(err) = save_checkpoint(
+                    &cp.path,
+                    fp,
+                    generation,
+                    &rng,
+                    &population,
+                    engine.parents(),
+                    &records,
+                ) {
+                    eprintln!("[search] checkpoint save failed ({err:#}) — continuing without");
+                }
+            }
+        }
         // Fork every trial's RNG serially, in trial-id order, from the
         // master stream — the exact per-trial streams the serial loop
         // produced — then let the pool schedule freely.
@@ -314,6 +535,12 @@ pub fn global_search_with<P: EvalPool>(
         })?;
         population = engine.next_generation(evaluated, &mut rng);
         generation += 1;
+    }
+
+    // The run completed: retire the checkpoint so a later run with the
+    // same configuration starts fresh instead of short-circuiting here.
+    if let Some(cp) = cfg.checkpoint.as_ref() {
+        let _ = std::fs::remove_file(&cp.path);
     }
 
     let points: Vec<Vec<f64>> = records.iter().map(|r| r.objectives.clone()).collect();
@@ -380,6 +607,7 @@ mod tests {
                 seed,
                 accuracy_threshold: 0.0,
                 progress: None,
+                checkpoint: None,
             },
         )
         .unwrap()
@@ -446,6 +674,7 @@ mod tests {
                     assert_eq!(i, r.id + 1, "completed count stays truthful");
                     sink.borrow_mut().push(i);
                 })),
+                checkpoint: None,
             },
         )
         .unwrap();
@@ -486,6 +715,7 @@ mod tests {
                     seed: 13,
                     accuracy_threshold: 0.0,
                     progress: None,
+                    checkpoint: None,
                 },
             )
             .unwrap()
@@ -511,6 +741,140 @@ mod tests {
         }
         assert_eq!(cold.front, warm.front);
         assert_eq!(cold.selected, warm.selected);
+    }
+
+    /// Acceptance criterion: a driver killed mid-generation resumes from
+    /// its checkpoint (plus the persistent evaluation cache) and finishes
+    /// with a trial database bit-identical to an uninterrupted run.
+    #[test]
+    fn killed_search_resumes_from_checkpoint_to_an_identical_db() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+
+        /// Simulates the driver dying mid-run: every evaluation after the
+        /// budget fails, so `global_search_with` errors out partway
+        /// through a generation with some of its trials already committed
+        /// to the write-through cache — exactly what a kill leaves behind.
+        struct DyingEvaluator {
+            inner: ToyEvaluator,
+            budget: AtomicUsize,
+        }
+        impl TrialEvaluator for DyingEvaluator {
+            fn evaluate(&self, genome: &Genome, rng: &mut Rng) -> Result<TrialEvaluation> {
+                anyhow::ensure!(
+                    self.budget
+                        .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |n| n.checked_sub(1))
+                        .is_ok(),
+                    "evaluation budget exhausted (simulated driver kill)"
+                );
+                self.inner.evaluate(genome, rng)
+            }
+        }
+
+        let space = SearchSpace::table1();
+        let dir = std::env::temp_dir().join("snac_checkpoint_resume_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let cache_path = dir.join("eval_cache.json");
+        let cp_path = dir.join("checkpoint.json");
+        let cfg = || SearchLoopConfig {
+            nsga2: Nsga2Config {
+                population: 6,
+                ..Default::default()
+            },
+            trials: 30,
+            seed: 42,
+            accuracy_threshold: 0.0,
+            progress: None,
+            checkpoint: Some(CheckpointConfig {
+                path: cp_path.clone(),
+                interval: 1,
+            }),
+        };
+
+        // reference: one uninterrupted run (in-memory cache, no checkpoint)
+        let reference = toy_outcome(1, 30, 42);
+
+        // run 1 dies after 13 evaluations, mid-generation
+        let dying = ParallelEvaluator::with_cache(
+            DyingEvaluator {
+                inner: ToyEvaluator {
+                    space: space.clone(),
+                },
+                budget: AtomicUsize::new(13),
+            },
+            1,
+            crate::eval::EvalCache::load(&cache_path, &space, "toy"),
+        );
+        let err = global_search_with(&dying, &space, cfg()).unwrap_err();
+        assert!(format!("{err:#}").contains("budget exhausted"), "{err:#}");
+        assert!(cp_path.exists(), "the killed run left a checkpoint behind");
+
+        // run 2: same checkpoint + cache, healthy evaluator
+        let healthy = ParallelEvaluator::with_cache(
+            ToyEvaluator {
+                space: space.clone(),
+            },
+            1,
+            crate::eval::EvalCache::load(&cache_path, &space, "toy"),
+        );
+        let resumed = global_search_with(&healthy, &space, cfg()).unwrap();
+
+        let db = |outcome: &SearchOutcome| -> String {
+            let rows: Vec<Json> = outcome
+                .records
+                .iter()
+                .map(|r| {
+                    let mut r = r.clone();
+                    r.train_seconds = 0.0;
+                    r.to_json()
+                })
+                .collect();
+            Json::Arr(rows).to_string()
+        };
+        assert_eq!(
+            db(&resumed),
+            db(&reference),
+            "a resumed search must reproduce the uninterrupted trial database"
+        );
+        assert_eq!(resumed.front, reference.front);
+        assert_eq!(resumed.selected, reference.selected);
+        assert!(
+            resumed.evaluations < reference.evaluations,
+            "resume must reuse the killed run's work ({} vs {} trained)",
+            resumed.evaluations,
+            reference.evaluations
+        );
+        assert!(
+            !cp_path.exists(),
+            "a completed run retires its checkpoint"
+        );
+
+        // a checkpoint from a different configuration is ignored, not
+        // replayed: rerunning with another seed starts from trial 0
+        std::fs::remove_file(&cache_path).unwrap();
+        let fresh = ParallelEvaluator::with_cache(
+            ToyEvaluator {
+                space: space.clone(),
+            },
+            1,
+            crate::eval::EvalCache::load(&cache_path, &space, "toy"),
+        );
+        let mut other = cfg();
+        other.seed = 43;
+        // plant the *old* run's checkpoint back to prove it gets rejected
+        save_checkpoint(
+            &cp_path,
+            &checkpoint_fingerprint(&cfg()),
+            1,
+            &Rng::new(42),
+            &[],
+            &[],
+            &[],
+        )
+        .unwrap();
+        let outcome = global_search_with(&fresh, &space, other).unwrap();
+        assert_eq!(outcome.records.len(), 30);
+        assert_eq!(outcome.records[0].generation, 0, "fresh start, not a resume");
     }
 
     /// The driver records every trial (cache hits included) and keeps ids
@@ -594,6 +958,7 @@ mod tests {
                 seed: 42,
                 accuracy_threshold: 0.0,
                 progress: None,
+                checkpoint: None,
             };
             let outcome = if batched {
                 let pool = ParallelEvaluator::new(evaluator, 2);
@@ -690,6 +1055,7 @@ mod tests {
             accuracy_threshold: 0.0,
             progress: None,
             cache_path: None,
+            checkpoint: None,
         };
         let outcome = global_search(&rt, &ds, &space, cfg).unwrap();
         assert_eq!(outcome.records.len(), 8);
@@ -731,6 +1097,7 @@ mod tests {
             accuracy_threshold: 0.0,
             progress: None,
             cache_path: None,
+            checkpoint: None,
         };
         let outcome2 = global_search(&rt, &ds, &space, cfg2).unwrap();
         let g1: Vec<_> = outcome.records.iter().map(|r| r.genome.clone()).collect();

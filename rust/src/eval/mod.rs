@@ -24,11 +24,14 @@
 //!   work instead of retraining identical genomes.
 //! * [`ShardDriver`] / [`run_worker`] — the multi-process seam
 //!   (`eval/shard.rs`): a driver partitions each generation into a
-//!   file-based work queue under a shared `--run-dir`, `snac-pack
-//!   worker` processes claim shards by atomic rename (lease +
-//!   heartbeat, reclaimed on worker death), and the driver merges the
-//!   per-shard results back under the same determinism contract.
-//!   [`EvalPool`] abstracts over both dispatch backends so the search
+//!   shard work queue, `snac-pack worker` processes claim shards
+//!   (lease + heartbeat, reclaimed on worker death), and the driver
+//!   merges the per-shard results back under the same determinism
+//!   contract. The protocol is medium-agnostic behind [`ShardTransport`]
+//!   (`eval/transport.rs`): [`FsTransport`] serves a shared `--run-dir`
+//!   by atomic rename, [`TcpHost`]/[`TcpWorker`] (`eval/tcp.rs`) serve a
+//!   driver-hosted TCP task queue for fleets with no shared filesystem.
+//!   [`EvalPool`] abstracts over the dispatch backends so the search
 //!   loop cannot tell them apart.
 //!
 //! # Determinism
@@ -63,19 +66,24 @@ mod cache;
 mod parallel;
 mod shard;
 mod supernet;
+mod tcp;
+mod transport;
 
 use anyhow::{Context, Result};
 
 use crate::nn::Genome;
 use crate::util::{Json, Rng};
 
+pub(crate) use cache::lock_unpoisoned;
 pub use cache::EvalCache;
 pub use parallel::{parallel_map, resolve_workers, EvaluatedTrial, ParallelEvaluator};
 pub use shard::{
-    manifest_fingerprint, run_worker, RunDir, ShardDriver, ShardError, ShardTimings, StageSpec,
-    WorkerOptions, WorkerSummary,
+    manifest_fingerprint, run_worker, run_worker_on, ShardDriver, ShardError, ShardTimings,
+    StageSpec, WorkerOptions, WorkerSummary,
 };
 pub use supernet::SupernetEvaluator;
+pub use tcp::{TcpHost, TcpWorker};
+pub use transport::{ClaimedTask, FsTransport, LeaseStatus, RunDir, ShardTransport};
 
 /// Everything a single trial evaluation produces.
 #[derive(Debug, Clone)]

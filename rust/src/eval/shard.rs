@@ -1,57 +1,45 @@
-//! Multi-process generation sharding: a file-based work queue over a
-//! shared run directory.
+//! Multi-process generation sharding: the transport-agnostic protocol
+//! core of the distributed work queue.
 //!
 //! The search loop's throughput ceiling is trial evaluation, and one
 //! process only holds so many cores. This module scales the
 //! [`super::ParallelEvaluator`] batch seam past a single process: a
 //! **driver** ([`ShardDriver`]) partitions each generation's
-//! `Vec<EvalRequest>` into shard task files under a shared run directory,
-//! N `snac-pack worker` processes ([`run_worker`]) pull shards, evaluate
-//! them with their local thread pools, and publish per-shard result files
+//! `Vec<EvalRequest>` into shard task files, N `snac-pack worker`
+//! processes ([`run_worker`] / [`run_worker_on`]) pull shards, evaluate
+//! them with their local thread pools, and publish per-shard results
 //! that the driver merges back — in dispatch order — into the shared
 //! [`EvalCache`] and the caller's trial-ordered stream.
 //!
-//! # Run-directory layout
-//!
-//! ```text
-//! run-dir/
-//!   run.json    # written by the CLI driver: preset + artifact dir +
-//!               # timing knobs, everything a worker needs to rebuild
-//!               # the evaluator stack (see main.rs). Interpreter knobs
-//!               # ride the preset too — `threads` and `verify_plans`
-//!               # are re-applied by every worker, so a sharded run
-//!               # executes (and statically verifies) plans exactly like
-//!               # the in-process run would
-//!   queue/      # pending shard task files (complete JSON; published
-//!               # via tmp/ + atomic rename)
-//!   claims/     # claimed shards (claim = rename queue/X -> claims/X;
-//!               # exactly one winner) + X.hb heartbeat sidecars
-//!   results/    # per-shard result files (tmp/ + atomic rename)
-//!   tmp/        # staging for atomic publishes
-//!   shutdown    # sentinel: workers exit when they see it
-//! ```
+//! Everything here — task encoding, the lease/heartbeat state machine,
+//! exactly-once reclaim, manifest fingerprinting, the dispatch-order
+//! merge — is medium-agnostic: drivers and workers touch the outside
+//! world only through the [`ShardTransport`] trait
+//! ([`super::transport`]). Two transports exist: [`FsTransport`] (the
+//! original shared-run-directory protocol, whose on-disk layout is
+//! documented on the trait) and [`super::tcp`] (a driver-hosted TCP
+//! task server for fleets with no shared filesystem).
 //!
 //! # Lease protocol
 //!
-//! A worker *claims* a shard by renaming it from `queue/` into `claims/`
-//! — rename is atomic within a filesystem, so exactly one claimant wins
-//! and the task file travels with the claim (a reclaim needs no other
-//! state). Immediately after claiming, and then every
-//! [`WorkerOptions::heartbeat`], the worker rewrites `claims/X.hb`; the
-//! driver treats a claim whose heartbeat is older than
+//! A worker *claims* a shard through the transport — exactly one
+//! claimant wins, and the task travels with the claim (a reclaim needs
+//! no other state). Immediately after claiming, and then every
+//! [`WorkerOptions::heartbeat`], the worker refreshes the claim's
+//! heartbeat; the driver treats a claim whose heartbeat is older than
 //! [`ShardTimings::lease_timeout`] (or that never produced one within a
-//! lease of being first observed) as dead and *reclaims* it by renaming
-//! the claim back into `queue/`, where the next live worker picks it up.
-//! A zombie worker that later publishes its result anyway is harmless:
-//! results are deterministic, publishes are atomic renames, and the
-//! driver consumes exactly one result per shard.
+//! lease of being first observed) as dead and *reclaims* it back into
+//! the queue, where the next live worker picks it up. A zombie worker
+//! that later publishes its result anyway is harmless: results are
+//! deterministic, publishes are first-writer-wins, and the driver
+//! consumes exactly one result per shard.
 //!
 //! # Determinism
 //!
 //! The merged outcome is bit-identical to a single-process
-//! [`super::ParallelEvaluator`] run for any shard/worker count, because
-//! every decision that affects numbers is made driver-side before
-//! dispatch, exactly as the in-process pool makes it:
+//! [`super::ParallelEvaluator`] run for any shard/worker count — over
+//! any transport — because every decision that affects numbers is made
+//! driver-side before dispatch, exactly as the in-process pool makes it:
 //!
 //! 1. per-trial RNGs are forked in trial-id order *before* partitioning
 //!    and travel inside the shard files (exact state, hex-encoded);
@@ -63,13 +51,11 @@
 //!    in-process pool ([`super::parallel::drain_ready`]): the caller (and
 //!    its non-`Send` progress sinks) observes the identical stream.
 //!
-//! Only wall-clock timings differ. This single-machine/multi-process
-//! protocol is the seam later multi-machine scale-out builds on: nothing
-//! in it assumes a shared process, only a shared filesystem.
+//! Only wall-clock timings differ.
 
 use std::collections::HashSet;
 use std::fmt;
-use std::path::{Path, PathBuf};
+use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
@@ -81,6 +67,7 @@ use crate::objectives::ObjectiveKind;
 use crate::util::Json;
 
 use super::parallel::drain_ready;
+use super::transport::{FsTransport, LeaseStatus, ShardTransport};
 use super::{EvalCache, EvalPool, EvalRequest, EvaluatedTrial, TrialEvaluation};
 
 /// What a worker must reproduce to evaluate a shard: the training
@@ -132,7 +119,7 @@ pub struct ShardTimings {
     pub poll: Duration,
     /// No result, no live claim, and no fresh heartbeat for this long →
     /// the batch fails with [`ShardError::Stalled`] instead of hanging a
-    /// search forever on a run directory nobody serves.
+    /// search forever on a queue nobody serves.
     pub stall_timeout: Duration,
 }
 
@@ -150,7 +137,7 @@ impl Default for ShardTimings {
 /// downcast to branch on them).
 #[derive(Debug)]
 pub enum ShardError {
-    /// A per-shard result file existed but could not be parsed or did not
+    /// A per-shard result existed but could not be parsed or did not
     /// match the shard's request list. Sibling shards' results are still
     /// committed to the cache before this propagates.
     CorruptResult {
@@ -169,8 +156,10 @@ pub enum ShardError {
     },
     /// No worker served the queue for the whole stall timeout.
     Stalled {
-        /// The run directory nobody is serving.
-        run_dir: PathBuf,
+        /// The queue endpoint nobody is serving
+        /// ([`ShardTransport::describe`]): a run directory for the
+        /// filesystem transport, a listen address for TCP.
+        endpoint: String,
         /// How long the driver waited.
         waited: Duration,
     },
@@ -185,130 +174,15 @@ impl fmt::Display for ShardError {
             ShardError::WorkerFailed { shard, detail } => {
                 write!(f, "worker failed on shard `{shard}`: {detail}")
             }
-            ShardError::Stalled { run_dir, waited } => write!(
+            ShardError::Stalled { endpoint, waited } => write!(
                 f,
-                "no worker served {} for {:.0?} — start one with `snac-pack worker --run-dir {}`",
-                run_dir.display(),
-                waited,
-                run_dir.display()
+                "no worker served {endpoint} for {waited:.0?} — start one with `snac-pack worker`"
             ),
         }
     }
 }
 
 impl std::error::Error for ShardError {}
-
-/// The shared run directory: path helpers + the shutdown sentinel.
-#[derive(Debug, Clone)]
-pub struct RunDir {
-    root: PathBuf,
-}
-
-impl RunDir {
-    /// Wrap a root path (no I/O; see [`RunDir::ensure`]).
-    pub fn new(root: impl Into<PathBuf>) -> RunDir {
-        RunDir { root: root.into() }
-    }
-
-    /// Create the protocol subdirectories (idempotent; both driver and
-    /// workers call this so startup order does not matter).
-    pub fn ensure(&self) -> Result<()> {
-        for dir in [self.queue(), self.claims(), self.results(), self.tmp()] {
-            std::fs::create_dir_all(&dir)
-                .with_context(|| format!("creating {}", dir.display()))?;
-        }
-        Ok(())
-    }
-
-    /// The run-dir root.
-    pub fn root(&self) -> &Path {
-        &self.root
-    }
-
-    /// Pending shard task files.
-    pub fn queue(&self) -> PathBuf {
-        self.root.join("queue")
-    }
-
-    /// Claimed shards + heartbeat sidecars.
-    pub fn claims(&self) -> PathBuf {
-        self.root.join("claims")
-    }
-
-    /// Completed per-shard result files.
-    pub fn results(&self) -> PathBuf {
-        self.root.join("results")
-    }
-
-    /// Staging area for atomic publishes.
-    pub fn tmp(&self) -> PathBuf {
-        self.root.join("tmp")
-    }
-
-    /// The run manifest the CLI driver writes for its workers.
-    pub fn manifest_path(&self) -> PathBuf {
-        self.root.join("run.json")
-    }
-
-    fn shutdown_path(&self) -> PathBuf {
-        self.root.join("shutdown")
-    }
-
-    /// Tell every worker on this run directory to exit.
-    pub fn request_shutdown(&self) -> Result<()> {
-        std::fs::write(self.shutdown_path(), b"shutdown\n")
-            .with_context(|| format!("writing {}", self.shutdown_path().display()))
-    }
-
-    /// Has a shutdown been requested?
-    pub fn is_shutdown(&self) -> bool {
-        self.shutdown_path().exists()
-    }
-
-    /// Remove a stale shutdown sentinel (a fresh driver reusing the run
-    /// directory of a finished run must not stop its new workers).
-    pub fn clear_shutdown(&self) {
-        let _ = std::fs::remove_file(self.shutdown_path());
-    }
-
-    /// Write `text` to `dest` atomically (staged in `tmp/`, renamed into
-    /// place), so queue/result consumers never observe a partial file.
-    /// Overwrites an existing `dest`.
-    pub fn publish(&self, dest: &Path, text: &str) -> Result<()> {
-        let tmp = self.stage(dest, text)?;
-        std::fs::rename(&tmp, dest)
-            .with_context(|| format!("publishing {}", dest.display()))
-    }
-
-    /// Atomic **first-writer-wins** publish: links the staged file into
-    /// place and reports `false` (without touching `dest`) when another
-    /// publisher already won — there is no exists-then-rename window in
-    /// which a late writer could clobber a consumed result.
-    pub fn publish_new(&self, dest: &Path, text: &str) -> Result<bool> {
-        let tmp = self.stage(dest, text)?;
-        let outcome = match std::fs::hard_link(&tmp, dest) {
-            Ok(()) => Ok(true),
-            Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => Ok(false),
-            Err(e) => {
-                Err(anyhow::Error::new(e).context(format!("publishing {}", dest.display())))
-            }
-        };
-        let _ = std::fs::remove_file(&tmp);
-        outcome
-    }
-
-    fn stage(&self, dest: &Path, text: &str) -> Result<PathBuf> {
-        let base = dest
-            .file_name()
-            .map(|n| n.to_string_lossy().into_owned())
-            .unwrap_or_else(|| "file".to_string());
-        let tmp = self
-            .tmp()
-            .join(format!("{base}.{}.tmp", std::process::id()));
-        std::fs::write(&tmp, text).with_context(|| format!("writing {}", tmp.display()))?;
-        Ok(tmp)
-    }
-}
 
 /// Cheap content fingerprint (FNV-1a) of a run manifest. The driver
 /// stamps its expectation from `run.json`; workers echo the fingerprint
@@ -324,15 +198,6 @@ pub fn manifest_fingerprint(text: &str) -> String {
         h = h.wrapping_mul(0x100_0000_01b3);
     }
     format!("{h:016x}")
-}
-
-/// Age of a file's mtime. `None` strictly means the file is missing (or
-/// unstattable); an mtime in the future — clock skew, NTP steps — reads
-/// as age zero, so a live worker's lease can never look stale because of
-/// a clock adjustment.
-fn mtime_age(path: &Path) -> Option<Duration> {
-    let modified = std::fs::metadata(path).ok()?.modified().ok()?;
-    Some(modified.elapsed().unwrap_or(Duration::ZERO))
 }
 
 // ---------------------------------------------------------------------------
@@ -488,18 +353,18 @@ struct ShardState {
     requests: Vec<EvalRequest>,
     resolved: bool,
     /// When the driver first observed the current claim with no heartbeat
-    /// file — on initial claim *or* after a transient sidecar deletion —
-    /// the claimant gets one full lease of grace from this instant before
+    /// — on initial claim *or* after a transient heartbeat loss — the
+    /// claimant gets one full lease of grace from this instant before
     /// being declared dead.
     no_hb_since: Option<Instant>,
 }
 
 /// The driver side of the shard protocol: an [`EvalPool`] whose batches
-/// are evaluated by `snac-pack worker` processes over a shared run
-/// directory, merged back into the shared [`EvalCache`] under the same
-/// determinism contract as the in-process pool.
+/// are evaluated by `snac-pack worker` processes over a
+/// [`ShardTransport`], merged back into the shared [`EvalCache`] under
+/// the same determinism contract as the in-process pool.
 pub struct ShardDriver {
-    dir: RunDir,
+    transport: Arc<dyn ShardTransport>,
     label: String,
     /// Per-driver-instance uniquifier baked into every shard file name
     /// (pid + wall-clock millis): a reused run directory can never serve
@@ -507,9 +372,9 @@ pub struct ShardDriver {
     /// simply never match (file names carry no determinism; results are
     /// matched to requests positionally).
     run_tag: String,
-    /// Fingerprint of `run.json` as it stood when this driver started
-    /// (`None` when the run directory has no manifest, e.g. in-process
-    /// protocol tests). Every result file must echo it.
+    /// Fingerprint of the run manifest as it stood when this driver
+    /// started (`None` when the transport carries no manifest, e.g.
+    /// in-process protocol tests). Every result file must echo it.
     manifest: Option<String>,
     stage: StageSpec,
     shards: usize,
@@ -522,11 +387,13 @@ pub struct ShardDriver {
 }
 
 impl ShardDriver {
-    /// New driver over `run_dir`. `label` namespaces this driver's shard
-    /// files (the pipeline runs several drivers over one run directory —
-    /// `baseline`, `search-nac`, `search-snac` — strictly in sequence).
-    /// `shards` is the per-generation partition count (clamped to the
-    /// batch size at dispatch; `0` behaves as `1`).
+    /// New driver over the filesystem transport rooted at `run_dir` (the
+    /// common case; see [`ShardDriver::with_transport`] for the general
+    /// form). `label` namespaces this driver's shard files (the pipeline
+    /// runs several drivers over one run directory — `baseline`,
+    /// `search-nac`, `search-snac` — strictly in sequence). `shards` is
+    /// the per-generation partition count (clamped to the batch size at
+    /// dispatch; `0` behaves as `1`).
     pub fn new(
         run_dir: &Path,
         label: &str,
@@ -535,17 +402,34 @@ impl ShardDriver {
         cache: EvalCache,
         timings: ShardTimings,
     ) -> Result<ShardDriver> {
-        let dir = RunDir::new(run_dir);
-        dir.ensure()?;
+        Self::with_transport(
+            Arc::new(FsTransport::new(run_dir)?),
+            label,
+            stage,
+            shards,
+            cache,
+            timings,
+        )
+    }
+
+    /// New driver over an arbitrary transport.
+    pub fn with_transport(
+        transport: Arc<dyn ShardTransport>,
+        label: &str,
+        stage: StageSpec,
+        shards: usize,
+        cache: EvalCache,
+        timings: ShardTimings,
+    ) -> Result<ShardDriver> {
         let millis = SystemTime::now()
             .duration_since(UNIX_EPOCH)
             .map(|d| d.as_millis())
             .unwrap_or(0);
-        let manifest = std::fs::read_to_string(dir.manifest_path())
-            .ok()
+        let manifest = transport
+            .manifest()?
             .map(|text| manifest_fingerprint(&text));
         Ok(ShardDriver {
-            dir,
+            transport,
             label: label.to_string(),
             run_tag: format!("{:x}-{millis:x}", std::process::id()),
             manifest,
@@ -570,9 +454,9 @@ impl ShardDriver {
         self.shards
     }
 
-    /// The run directory.
-    pub fn run_dir(&self) -> &RunDir {
-        &self.dir
+    /// The transport this driver dispatches over.
+    pub fn transport(&self) -> &Arc<dyn ShardTransport> {
+        &self.transport
     }
 
     /// Evaluate one generation through the worker fleet, streaming
@@ -602,21 +486,9 @@ impl ShardDriver {
             // sweep this driver's stragglers before dispatching: a
             // reclaimed zombie may have re-published a result *after*
             // the consumed copy was deleted — nothing will ever read it,
-            // and without the sweep such orphans would accumulate in
-            // results/ across generations
-            for entry in std::fs::read_dir(self.dir.results())
-                .into_iter()
-                .flatten()
-                .flatten()
-            {
-                if entry
-                    .file_name()
-                    .to_string_lossy()
-                    .contains(&self.run_tag)
-                {
-                    let _ = std::fs::remove_file(entry.path());
-                }
-            }
+            // and without the sweep such orphans would accumulate
+            // across generations
+            self.transport.sweep_results(&self.run_tag);
             let mut shards = self.partition(batch, pending);
             self.dispatch(&shards)?;
             self.collect(
@@ -661,7 +533,7 @@ impl ShardDriver {
         out
     }
 
-    /// Publish every shard's task file into the queue.
+    /// Publish every shard's task into the queue.
     fn dispatch(&self, shards: &[ShardState]) -> Result<()> {
         for s in shards {
             let task = ShardTask {
@@ -669,8 +541,8 @@ impl ShardDriver {
                 stage: self.stage.clone(),
                 requests: s.requests.clone(),
             };
-            self.dir
-                .publish(&self.dir.queue().join(&s.name), &task.to_json().to_string())?;
+            self.transport
+                .publish_task(&s.name, &task.to_json().to_string())?;
         }
         Ok(())
     }
@@ -691,8 +563,7 @@ impl ShardDriver {
         loop {
             let mut progressed = false;
             for s in shards.iter_mut().filter(|s| !s.resolved) {
-                let result_path = self.dir.results().join(&s.name);
-                let Ok(text) = std::fs::read_to_string(&result_path) else {
+                let Some(text) = self.transport.take_result(&s.name)? else {
                     continue;
                 };
                 match parse_result_file(&text, &s.requests, self.manifest.as_deref()) {
@@ -726,18 +597,15 @@ impl ShardDriver {
                 }
                 s.resolved = true;
                 progressed = true;
-                // Tidy every protocol file this shard leaves behind: the
-                // consumed result (names are run-unique, nothing else
-                // will ever read it — without this, results/ grows by
-                // shards × generations over a long run), a stray claim
-                // from a worker that crashed between publishing and
-                // cleanup, and the re-queued task file a reclaimed
-                // zombie's late result would otherwise leave for a live
-                // worker to re-train pointlessly.
-                let _ = std::fs::remove_file(&result_path);
-                let _ = std::fs::remove_file(self.dir.queue().join(&s.name));
-                let _ = std::fs::remove_file(self.dir.claims().join(&s.name));
-                let _ = std::fs::remove_file(self.dir.claims().join(format!("{}.hb", s.name)));
+                // Tidy every protocol artifact this shard leaves behind:
+                // the consumed result (names are run-unique, nothing
+                // else will ever read it — without this, results
+                // accumulate shards × generations over a long run), a
+                // stray claim from a worker that crashed between
+                // publishing and cleanup, and the re-queued task a
+                // reclaimed zombie's late result would otherwise leave
+                // for a live worker to re-train pointlessly.
+                self.transport.scrub(&s.name);
             }
 
             drain_ready(&self.cache, &self.hits, requests, fresh, next, &mut *on_trial);
@@ -748,33 +616,32 @@ impl ShardDriver {
             // ---- lease bookkeeping for the shards still in flight ----
             let mut live = false;
             for s in shards.iter_mut().filter(|s| !s.resolved) {
-                let claim = self.dir.claims().join(&s.name);
-                let hb = self.dir.claims().join(format!("{}.hb", s.name));
-                if !claim.exists() {
+                let stale = match self.transport.lease(&s.name) {
                     // still queued (or between reclaim and re-claim)
-                    s.no_hb_since = None;
-                    continue;
-                }
-                let stale = match mtime_age(&hb) {
-                    Some(age) => {
+                    LeaseStatus::Unclaimed => {
+                        s.no_hb_since = None;
+                        continue;
+                    }
+                    LeaseStatus::Claimed {
+                        heartbeat_age: Some(age),
+                    } => {
                         if age <= self.timings.lease_timeout {
                             s.no_hb_since = None;
                         }
                         age > self.timings.lease_timeout
                     }
-                    // claimed with no heartbeat file — either freshly
-                    // claimed, or the sidecar transiently vanished: one
-                    // full lease of grace from first observation
-                    None => {
+                    // claimed with no heartbeat — either freshly claimed,
+                    // or the heartbeat transiently vanished: one full
+                    // lease of grace from first observation
+                    LeaseStatus::Claimed { heartbeat_age: None } => {
                         let since = *s.no_hb_since.get_or_insert_with(Instant::now);
                         since.elapsed() > self.timings.lease_timeout
                     }
                 };
                 if stale {
-                    // claim-by-rename in reverse: only one reclaimer can
-                    // win, and the task file travels back intact
-                    if std::fs::rename(&claim, self.dir.queue().join(&s.name)).is_ok() {
-                        let _ = std::fs::remove_file(&hb);
+                    // exactly-once: of all concurrent reclaimers at most
+                    // one wins, and the task travels back intact
+                    if self.transport.reclaim(&s.name) {
                         self.reclaims.fetch_add(1, Ordering::Relaxed);
                         s.no_hb_since = None;
                         eprintln!(
@@ -792,7 +659,7 @@ impl ShardDriver {
                 last_progress = Instant::now();
             } else if last_progress.elapsed() > self.timings.stall_timeout {
                 return Err(anyhow::Error::new(ShardError::Stalled {
-                    run_dir: self.dir.root().to_path_buf(),
+                    endpoint: self.transport.describe(),
                     waited: last_progress.elapsed(),
                 }));
             }
@@ -832,13 +699,13 @@ impl EvalPool for ShardDriver {
 pub struct WorkerOptions {
     /// Queue poll cadence while idle.
     pub poll: Duration,
-    /// Heartbeat rewrite cadence while evaluating a claim (keep this well
+    /// Heartbeat refresh cadence while evaluating a claim (keep this well
     /// under the driver's lease timeout).
     pub heartbeat: Duration,
-    /// [`manifest_fingerprint`] of the `run.json` this worker's evaluator
-    /// stack was built from, echoed in every result file so the driver
-    /// rejects results computed under a stale configuration. `None` for
-    /// manifest-less harnesses (in-process tests, benches).
+    /// [`manifest_fingerprint`] of the run manifest this worker's
+    /// evaluator stack was built from, echoed in every result file so the
+    /// driver rejects results computed under a stale configuration.
+    /// `None` for manifest-less harnesses (in-process tests, benches).
     pub manifest: Option<String>,
 }
 
@@ -871,15 +738,19 @@ struct Heartbeat {
 }
 
 impl Heartbeat {
-    fn start(hb: PathBuf, interval: Duration) -> Heartbeat {
-        let _ = std::fs::write(&hb, b"hb\n");
+    fn start(
+        transport: Arc<dyn ShardTransport>,
+        name: String,
+        interval: Duration,
+    ) -> Heartbeat {
+        transport.heartbeat(&name);
         let stop = Arc::new(AtomicBool::new(false));
         let thread = {
             let stop = Arc::clone(&stop);
             std::thread::spawn(move || {
                 while !stop.load(Ordering::Relaxed) {
                     std::thread::sleep(interval);
-                    let _ = std::fs::write(&hb, b"hb\n");
+                    transport.heartbeat(&name);
                 }
             })
         };
@@ -899,7 +770,20 @@ impl Drop for Heartbeat {
     }
 }
 
-/// Serve shards from `run_dir` until a shutdown is requested.
+/// Serve shards from the run directory at `run_dir` until a shutdown is
+/// requested — [`run_worker_on`] over an [`FsTransport`].
+pub fn run_worker<F>(
+    run_dir: &Path,
+    opts: &WorkerOptions,
+    eval_shard: F,
+) -> Result<WorkerSummary>
+where
+    F: FnMut(&StageSpec, &[EvalRequest]) -> Vec<Result<TrialEvaluation>>,
+{
+    run_worker_on(Arc::new(FsTransport::new(run_dir)?), opts, eval_shard)
+}
+
+/// Serve shards from `transport` until a shutdown is requested.
 ///
 /// `eval_shard` scores one claimed shard: it receives the stage spec and
 /// the shard's requests and must return one `Result` per request, in
@@ -908,78 +792,56 @@ impl Drop for Heartbeat {
 /// successful sibling). The claim/heartbeat/publish machinery lives here;
 /// the binary's `worker` subcommand supplies an `eval_shard` that
 /// rebuilds the full train-and-score stack, tests supply mocks.
-pub fn run_worker<F>(
-    run_dir: &Path,
+pub fn run_worker_on<F>(
+    transport: Arc<dyn ShardTransport>,
     opts: &WorkerOptions,
     mut eval_shard: F,
 ) -> Result<WorkerSummary>
 where
     F: FnMut(&StageSpec, &[EvalRequest]) -> Vec<Result<TrialEvaluation>>,
 {
-    let dir = RunDir::new(run_dir);
-    dir.ensure()?;
     let mut summary = WorkerSummary::default();
     loop {
-        if dir.is_shutdown() {
+        if transport.is_shutdown() {
             return Ok(summary);
         }
-        let names = queue_names(&dir);
         let mut claimed_any = false;
-        for name in names {
-            let claim = dir.claims().join(&name);
-            // claim-by-rename: exactly one worker wins this shard
-            if std::fs::rename(dir.queue().join(&name), &claim).is_err() {
-                continue;
-            }
+        while let Some(claimed) = transport.claim_next()? {
             claimed_any = true;
-            let hb = dir.claims().join(format!("{name}.hb"));
+            let name = claimed.name;
             // heartbeat thread: keeps the lease alive however long the
             // shard trains; the guard stops it even if eval_shard panics
-            let beat = Heartbeat::start(hb.clone(), opts.heartbeat);
-            let result_path = dir.results().join(&name);
-            let text = match std::fs::read_to_string(&claim) {
-                Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
-                    // the claim vanished under us: the driver resolved
-                    // this shard through another worker's result (our
-                    // lease was reclaimed while we stalled) — the shard
-                    // is no longer ours, so publish nothing
-                    drop(beat);
-                    let _ = std::fs::remove_file(&hb);
-                    continue;
-                }
-                Err(e) => Err(anyhow::Error::new(e).context(format!(
-                    "reading shard task {}",
-                    claim.display()
-                ))),
-                Ok(text) => Ok(text),
-            }
-            .and_then(|text| {
-                ShardTask::from_json(&Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?)
-            })
-            .map(|task| {
-                let outcomes = eval_shard(&task.stage, &task.requests);
-                summary.trials += outcomes.len();
-                let rows: Vec<(usize, Result<TrialEvaluation, String>)> = task
-                    .requests
-                    .iter()
-                    .zip(outcomes)
-                    .map(|(req, outcome)| (req.trial_id, outcome.map_err(|e| format!("{e:#}"))))
-                    .collect();
-                result_to_json(&task.shard, &rows, opts.manifest.as_deref()).to_string()
-            })
-            .unwrap_or_else(|e| {
-                worker_failure_to_json(&name, &format!("{e:#}"), opts.manifest.as_deref())
-                    .to_string()
-            });
+            let beat = Heartbeat::start(Arc::clone(&transport), name.clone(), opts.heartbeat);
+            let text = claimed
+                .task
+                .and_then(|text| {
+                    ShardTask::from_json(&Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?)
+                })
+                .map(|task| {
+                    let outcomes = eval_shard(&task.stage, &task.requests);
+                    summary.trials += outcomes.len();
+                    let rows: Vec<(usize, Result<TrialEvaluation, String>)> = task
+                        .requests
+                        .iter()
+                        .zip(outcomes)
+                        .map(|(req, outcome)| {
+                            (req.trial_id, outcome.map_err(|e| format!("{e:#}")))
+                        })
+                        .collect();
+                    result_to_json(&task.shard, &rows, opts.manifest.as_deref()).to_string()
+                })
+                .unwrap_or_else(|e| {
+                    worker_failure_to_json(&name, &format!("{e:#}"), opts.manifest.as_deref())
+                        .to_string()
+                });
             // first-writer-wins publish: a result someone else already
             // published (our lease was reclaimed and the replacement
             // finished first) is never clobbered — in particular a late
             // failure report cannot overwrite a consumed success
-            let published = dir.publish_new(&result_path, &text);
+            let published = transport.publish_result(&name, &text);
             drop(beat);
             published?;
-            let _ = std::fs::remove_file(&claim);
-            let _ = std::fs::remove_file(&hb);
+            transport.finish_claim(&name);
             summary.shards += 1;
         }
         if !claimed_any {
@@ -988,28 +850,16 @@ where
     }
 }
 
-/// Sorted shard file names currently queued (a missing or unreadable
-/// queue directory reads as empty — `ensure()` recreates it).
-fn queue_names(dir: &RunDir) -> Vec<String> {
-    let mut names: Vec<String> = std::fs::read_dir(dir.queue())
-        .into_iter()
-        .flatten()
-        .flatten()
-        .filter_map(|e| e.file_name().into_string().ok())
-        .filter(|n| n.ends_with(".json"))
-        .collect();
-    names.sort();
-    names
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::coordinator::{global_search_with, SearchLoopConfig, SearchOutcome};
+    use crate::eval::transport::{queue_names, RunDir};
     use crate::eval::{ParallelEvaluator, TrialEvaluator};
     use crate::nn::SearchSpace;
     use crate::search::Nsga2Config;
     use crate::util::Rng;
+    use std::path::PathBuf;
 
     fn toy_stage() -> StageSpec {
         StageSpec {
@@ -1217,6 +1067,7 @@ mod tests {
                     seed,
                     accuracy_threshold: 0.0,
                     progress: None,
+                    checkpoint: None,
                 },
             )
             .unwrap()
@@ -1250,6 +1101,7 @@ mod tests {
                 seed: 42,
                 accuracy_threshold: 0.0,
                 progress: None,
+                checkpoint: None,
             },
         )
         .unwrap();

@@ -1,0 +1,737 @@
+//! The TCP shard transport: a driver-hosted task server for worker
+//! fleets with no shared filesystem.
+//!
+//! The [`super::shard`] protocol core is medium-agnostic; this module
+//! supplies the network medium. The **driver** hosts a [`TcpHost`]: the
+//! whole queue/claims/results state lives in its memory, an accept loop
+//! serves it over the shared [`crate::net`] HTTP framing, and the
+//! driver's own [`super::ShardTransport`] calls touch that state
+//! directly (no self-request round trips). **Workers** anywhere on the
+//! network join with `snac-pack worker --connect HOST:PORT`, which wraps
+//! a [`TcpWorker`] — a thin HTTP client — in the same
+//! [`super::run_worker_on`] loop the filesystem transport uses.
+//!
+//! Endpoints (all JSON, one request per connection):
+//!
+//! | method+path        | body                 | response                           |
+//! |--------------------|----------------------|------------------------------------|
+//! | `POST /shard/claim`| `{}`                 | `{"status":"task","name","task"}` \| `{"status":"empty"}` \| `{"status":"shutdown"}` |
+//! | `POST /shard/heartbeat` | `{"name"}`      | `{}`                               |
+//! | `POST /shard/result`    | `{"name","result"}` | `{"published":bool}`            |
+//! | `POST /shard/done` | `{"name"}`           | `{}`                               |
+//! | `GET /run.json`    | —                    | manifest text (404 when none)      |
+//!
+//! The exactly-once properties the protocol core relies on fall out of
+//! one mutex over the host state: a claim atomically moves the task from
+//! the queue into the claims table (so the task travels with the claim,
+//! and a reclaim needs no other state), and a result insert is
+//! first-writer-wins. Lease ages are tracked host-side from the last
+//! claim/heartbeat request, so worker clocks never matter.
+//!
+//! A worker whose driver dies does not hang: every request runs under
+//! [`crate::net::request_with_timeout`], and after
+//! [`MAX_CONSECUTIVE_FAILURES`] straight connection failures the worker
+//! treats the run as over and exits cleanly.
+
+use std::collections::{BTreeMap, HashMap};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::net;
+use crate::util::Json;
+
+use super::cache::lock_unpoisoned;
+use super::transport::{ClaimedTask, LeaseStatus, ShardTransport};
+
+/// Consecutive connection-level failures after which a [`TcpWorker`]
+/// declares the driver dead and reports shutdown to its worker loop.
+pub const MAX_CONSECUTIVE_FAILURES: usize = 8;
+
+/// One claimed shard on the host: the task travels with the claim so a
+/// reclaim can requeue it from host state alone.
+struct Claim {
+    task: String,
+    last_hb: Instant,
+}
+
+#[derive(Default)]
+struct HostInner {
+    /// Pending tasks, iterated in name order (the sorted-queue contract
+    /// workers see from the filesystem transport too).
+    queue: BTreeMap<String, String>,
+    claims: HashMap<String, Claim>,
+    results: HashMap<String, String>,
+}
+
+struct HostShared {
+    inner: Mutex<HostInner>,
+    shutdown: AtomicBool,
+    manifest: Option<String>,
+}
+
+impl HostShared {
+    /// Atomically move the first queued task into the claims table.
+    fn claim(&self) -> Option<(String, String)> {
+        let mut inner = lock_unpoisoned(&self.inner);
+        let name = inner.queue.keys().next().cloned()?;
+        let task = inner.queue.remove(&name)?;
+        inner.claims.insert(
+            name.clone(),
+            Claim {
+                task: task.clone(),
+                last_hb: Instant::now(),
+            },
+        );
+        Some((name, task))
+    }
+
+    fn heartbeat(&self, name: &str) {
+        if let Some(claim) = lock_unpoisoned(&self.inner).claims.get_mut(name) {
+            claim.last_hb = Instant::now();
+        }
+    }
+
+    /// First-writer-wins result insert.
+    fn publish_result(&self, name: &str, text: &str) -> bool {
+        let mut inner = lock_unpoisoned(&self.inner);
+        if inner.results.contains_key(name) {
+            return false;
+        }
+        inner.results.insert(name.to_string(), text.to_string());
+        true
+    }
+
+    fn finish_claim(&self, name: &str) {
+        lock_unpoisoned(&self.inner).claims.remove(name);
+    }
+}
+
+/// Route one parsed request against the host state.
+fn route(shared: &HostShared, req: &net::Request) -> (u16, String) {
+    let with_name = |handler: &dyn Fn(&str) -> (u16, String)| -> (u16, String) {
+        match Json::parse(&req.body)
+            .ok()
+            .as_ref()
+            .and_then(|doc| doc.get("name").and_then(Json::as_str).map(str::to_string))
+        {
+            Some(name) => handler(&name),
+            None => (400, r#"{"error":"body missing `name`"}"#.to_string()),
+        }
+    };
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/run.json") => match &shared.manifest {
+            Some(text) => (200, text.clone()),
+            None => (404, r#"{"error":"this run has no manifest"}"#.to_string()),
+        },
+        ("POST", "/shard/claim") => {
+            if shared.shutdown.load(Ordering::SeqCst) {
+                return (200, r#"{"status":"shutdown"}"#.to_string());
+            }
+            match shared.claim() {
+                Some((name, task)) => (
+                    200,
+                    Json::obj(vec![
+                        ("status", Json::Str("task".to_string())),
+                        ("name", Json::Str(name)),
+                        ("task", Json::Str(task)),
+                    ])
+                    .to_string(),
+                ),
+                None => (200, r#"{"status":"empty"}"#.to_string()),
+            }
+        }
+        ("POST", "/shard/heartbeat") => with_name(&|name| {
+            shared.heartbeat(name);
+            (200, "{}".to_string())
+        }),
+        ("POST", "/shard/result") => {
+            let doc = match Json::parse(&req.body) {
+                Ok(doc) => doc,
+                Err(e) => return (400, format!(r#"{{"error":"unparseable body: {e}"}}"#)),
+            };
+            let (Some(name), Some(result)) = (
+                doc.get("name").and_then(Json::as_str),
+                doc.get("result").and_then(Json::as_str),
+            ) else {
+                return (400, r#"{"error":"body missing `name`/`result`"}"#.to_string());
+            };
+            let published = shared.publish_result(name, result);
+            (
+                200,
+                Json::obj(vec![("published", Json::Bool(published))]).to_string(),
+            )
+        }
+        ("POST", "/shard/done") => with_name(&|name| {
+            shared.finish_claim(name);
+            (200, "{}".to_string())
+        }),
+        (method, path) => (404, format!(r#"{{"error":"no such endpoint {method} {path}"}}"#)),
+    }
+}
+
+/// Serve one connection: read, route, respond, close.
+fn serve_connection(shared: &HostShared, mut stream: TcpStream) {
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(10)));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(10)));
+    let (status, body) = match net::read_request(&mut stream) {
+        Ok(req) => route(shared, &req),
+        Err(e) => (400, format!(r#"{{"error":"bad request: {e:#}"}}"#)),
+    };
+    let _ = net::write_response(&mut stream, status, &body);
+}
+
+/// The driver side of the TCP transport: owns the queue state and the
+/// accept loop serving it. The driver's own protocol calls go straight
+/// to memory; only workers cross the network.
+pub struct TcpHost {
+    shared: Arc<HostShared>,
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl TcpHost {
+    /// Bind `bind` (e.g. `127.0.0.1:0` for an ephemeral port) and start
+    /// serving the task queue. `manifest` is the `run.json` text served
+    /// to joining workers, when the run has one.
+    pub fn listen(bind: &str, manifest: Option<String>) -> Result<TcpHost> {
+        let listener =
+            TcpListener::bind(bind).with_context(|| format!("binding task server on {bind}"))?;
+        listener
+            .set_nonblocking(true)
+            .context("setting the task listener non-blocking")?;
+        let addr = listener.local_addr().context("reading the bound address")?;
+        let shared = Arc::new(HostShared {
+            inner: Mutex::new(HostInner::default()),
+            shutdown: AtomicBool::new(false),
+            manifest,
+        });
+        let stop = Arc::new(AtomicBool::new(false));
+        let accept_thread = {
+            let shared = Arc::clone(&shared);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                while !stop.load(Ordering::SeqCst) {
+                    match listener.accept() {
+                        Ok((stream, _peer)) => {
+                            let shared = Arc::clone(&shared);
+                            // requests are tiny and bounded by stream
+                            // timeouts; a detached thread per connection
+                            // keeps one stalled client from wedging the
+                            // fleet
+                            std::thread::spawn(move || serve_connection(&shared, stream));
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(2));
+                        }
+                        // transient accept errors (ECONNABORTED, EINTR)
+                        // must not take the queue down
+                        Err(_) => std::thread::sleep(Duration::from_millis(2)),
+                    }
+                }
+            })
+        };
+        Ok(TcpHost {
+            shared,
+            addr,
+            stop,
+            accept_thread: Some(accept_thread),
+        })
+    }
+
+    /// The address workers connect to (`--connect HOST:PORT`).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+}
+
+impl Drop for TcpHost {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(thread) = self.accept_thread.take() {
+            let _ = thread.join();
+        }
+    }
+}
+
+impl ShardTransport for TcpHost {
+    fn describe(&self) -> String {
+        format!("tcp://{}", self.addr)
+    }
+
+    fn manifest(&self) -> Result<Option<String>> {
+        Ok(self.shared.manifest.clone())
+    }
+
+    fn is_shutdown(&self) -> bool {
+        self.shared.shutdown.load(Ordering::SeqCst)
+    }
+
+    fn request_shutdown(&self) -> Result<()> {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        Ok(())
+    }
+
+    fn publish_task(&self, name: &str, text: &str) -> Result<()> {
+        lock_unpoisoned(&self.shared.inner)
+            .queue
+            .insert(name.to_string(), text.to_string());
+        Ok(())
+    }
+
+    fn take_result(&self, name: &str) -> Result<Option<String>> {
+        Ok(lock_unpoisoned(&self.shared.inner).results.get(name).cloned())
+    }
+
+    fn scrub(&self, name: &str) {
+        let mut inner = lock_unpoisoned(&self.shared.inner);
+        inner.results.remove(name);
+        inner.queue.remove(name);
+        inner.claims.remove(name);
+    }
+
+    fn lease(&self, name: &str) -> LeaseStatus {
+        match lock_unpoisoned(&self.shared.inner).claims.get(name) {
+            Some(claim) => LeaseStatus::Claimed {
+                heartbeat_age: Some(claim.last_hb.elapsed()),
+            },
+            None => LeaseStatus::Unclaimed,
+        }
+    }
+
+    fn reclaim(&self, name: &str) -> bool {
+        let mut inner = lock_unpoisoned(&self.shared.inner);
+        match inner.claims.remove(name) {
+            Some(claim) => {
+                inner.queue.insert(name.to_string(), claim.task);
+                true
+            }
+            None => false,
+        }
+    }
+
+    fn sweep_results(&self, run_tag: &str) {
+        lock_unpoisoned(&self.shared.inner)
+            .results
+            .retain(|name, _| !name.contains(run_tag));
+    }
+
+    fn claim_next(&self) -> Result<Option<ClaimedTask>> {
+        if self.is_shutdown() {
+            return Ok(None);
+        }
+        Ok(self.shared.claim().map(|(name, task)| ClaimedTask {
+            name,
+            task: Ok(task),
+        }))
+    }
+
+    fn heartbeat(&self, name: &str) {
+        self.shared.heartbeat(name);
+    }
+
+    fn publish_result(&self, name: &str, text: &str) -> Result<bool> {
+        Ok(self.shared.publish_result(name, text))
+    }
+
+    fn finish_claim(&self, name: &str) {
+        self.shared.finish_claim(name);
+    }
+}
+
+/// The worker side of the TCP transport: a thin HTTP client over the
+/// shared framing. All requests are bounded by the configured timeout,
+/// and [`MAX_CONSECUTIVE_FAILURES`] straight connection failures flip
+/// the transport into a shutdown state — a worker never hangs on (or
+/// spins against) a dead driver.
+pub struct TcpWorker {
+    addr: String,
+    timeout: Duration,
+    failures: AtomicUsize,
+    dead: AtomicBool,
+}
+
+impl TcpWorker {
+    /// A client for the task server at `addr` (`HOST:PORT`). `timeout`
+    /// bounds every request round trip; keep it under the driver's lease
+    /// timeout so a retried heartbeat still lands in time.
+    pub fn connect(addr: &str, timeout: Duration) -> TcpWorker {
+        TcpWorker {
+            addr: addr.to_string(),
+            timeout,
+            failures: AtomicUsize::new(0),
+            dead: AtomicBool::new(false),
+        }
+    }
+
+    fn note_failure(&self, err: &anyhow::Error) {
+        let n = self.failures.fetch_add(1, Ordering::SeqCst) + 1;
+        if n >= MAX_CONSECUTIVE_FAILURES && !self.dead.swap(true, Ordering::SeqCst) {
+            eprintln!(
+                "[worker] driver at {} unreachable ({n} consecutive failures, last: {err:#}) — \
+                 treating the run as over",
+                self.addr
+            );
+        }
+    }
+
+    /// POST returning the parsed response. `Ok(None)` = connection-level
+    /// failure (counted toward the dead-driver threshold; the caller
+    /// retries on its poll cadence). `Err` = the driver answered but
+    /// violated the protocol — that never resolves itself, so it
+    /// propagates and fails the worker loudly.
+    fn post(&self, path: &str, body: &str) -> Result<Option<Json>> {
+        match net::request_with_timeout(&self.addr, "POST", path, Some(body), self.timeout) {
+            Err(e) => {
+                self.note_failure(&e);
+                Ok(None)
+            }
+            Ok((status, text)) => {
+                self.failures.store(0, Ordering::SeqCst);
+                anyhow::ensure!(
+                    status == 200,
+                    "driver at {} answered {path} with HTTP {status}: {text}",
+                    self.addr
+                );
+                let doc = Json::parse(&text).map_err(|e| {
+                    anyhow::anyhow!("unparseable response from driver at {}: {e}", self.addr)
+                })?;
+                Ok(Some(doc))
+            }
+        }
+    }
+
+    fn named_body(name: &str) -> String {
+        Json::obj(vec![("name", Json::Str(name.to_string()))]).to_string()
+    }
+}
+
+impl ShardTransport for TcpWorker {
+    fn describe(&self) -> String {
+        format!("tcp://{}", self.addr)
+    }
+
+    fn manifest(&self) -> Result<Option<String>> {
+        let (status, body) =
+            net::request_with_timeout(&self.addr, "GET", "/run.json", None, self.timeout)
+                .with_context(|| format!("fetching run manifest from {}", self.addr))?;
+        match status {
+            200 => Ok(Some(body)),
+            404 => Ok(None),
+            _ => bail!(
+                "driver at {} answered /run.json with HTTP {status}: {body}",
+                self.addr
+            ),
+        }
+    }
+
+    fn is_shutdown(&self) -> bool {
+        self.dead.load(Ordering::SeqCst)
+    }
+
+    fn request_shutdown(&self) -> Result<()> {
+        bail!("a TCP worker cannot request a fleet shutdown (the driver owns the queue)")
+    }
+
+    fn publish_task(&self, _name: &str, _text: &str) -> Result<()> {
+        bail!("publish_task is a driver-side operation; this is a worker transport")
+    }
+
+    fn take_result(&self, _name: &str) -> Result<Option<String>> {
+        bail!("take_result is a driver-side operation; this is a worker transport")
+    }
+
+    fn scrub(&self, _name: &str) {}
+
+    fn lease(&self, _name: &str) -> LeaseStatus {
+        LeaseStatus::Unclaimed
+    }
+
+    fn reclaim(&self, _name: &str) -> bool {
+        false
+    }
+
+    fn sweep_results(&self, _run_tag: &str) {}
+
+    fn claim_next(&self) -> Result<Option<ClaimedTask>> {
+        if self.is_shutdown() {
+            return Ok(None);
+        }
+        let Some(doc) = self.post("/shard/claim", "{}")? else {
+            return Ok(None);
+        };
+        match doc.get("status").and_then(Json::as_str) {
+            Some("task") => {
+                let name = doc
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .context("claim response missing `name`")?
+                    .to_string();
+                let task = doc
+                    .get("task")
+                    .and_then(Json::as_str)
+                    .context("claim response missing `task`")?
+                    .to_string();
+                Ok(Some(ClaimedTask {
+                    name,
+                    task: Ok(task),
+                }))
+            }
+            Some("empty") => Ok(None),
+            Some("shutdown") => {
+                self.dead.store(true, Ordering::SeqCst);
+                Ok(None)
+            }
+            other => bail!(
+                "malformed claim response from driver at {} (status {other:?})",
+                self.addr
+            ),
+        }
+    }
+
+    fn heartbeat(&self, name: &str) {
+        // best-effort, like the filesystem heartbeat write: a missed beat
+        // costs at worst a spurious reclaim, which the protocol absorbs
+        let _ = self.post("/shard/heartbeat", &Self::named_body(name));
+    }
+
+    fn publish_result(&self, name: &str, text: &str) -> Result<bool> {
+        let body = Json::obj(vec![
+            ("name", Json::Str(name.to_string())),
+            ("result", Json::Str(text.to_string())),
+        ])
+        .to_string();
+        let doc = self
+            .post("/shard/result", &body)?
+            .with_context(|| format!("publishing shard result to dead driver at {}", self.addr))?;
+        doc.get("published")
+            .and_then(Json::as_bool)
+            .with_context(|| format!("malformed publish response from driver at {}", self.addr))
+    }
+
+    fn finish_claim(&self, name: &str) {
+        let _ = self.post("/shard/done", &Self::named_body(name));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::shard::{run_worker_on, ShardDriver, ShardTimings, StageSpec, WorkerOptions};
+    use super::super::{EvalCache, ParallelEvaluator, TrialEvaluation, TrialEvaluator};
+    use super::*;
+    use crate::coordinator::{global_search_with, SearchLoopConfig};
+    use crate::nn::{Genome, SearchSpace};
+    use crate::objectives::ObjectiveKind;
+    use crate::search::Nsga2Config;
+    use crate::util::Rng;
+
+    fn toy_score(space: &SearchSpace, genome: &Genome, rng: &mut Rng) -> TrialEvaluation {
+        let weights = genome.num_weights(space) as f64;
+        let accuracy = (1.0 - (-weights / 4000.0).exp()) * (0.95 + 0.05 * rng.uniform());
+        TrialEvaluation {
+            accuracy,
+            bops: weights,
+            est_avg_resources: None,
+            est_clock_cycles: None,
+            objectives: vec![-accuracy, weights],
+            train_seconds: 0.001,
+        }
+    }
+
+    struct ToyEvaluator {
+        space: SearchSpace,
+    }
+
+    impl TrialEvaluator for ToyEvaluator {
+        fn evaluate(&self, genome: &Genome, rng: &mut Rng) -> anyhow::Result<TrialEvaluation> {
+            Ok(toy_score(&self.space, genome, rng))
+        }
+    }
+
+    fn fast_timings() -> ShardTimings {
+        ShardTimings {
+            lease_timeout: Duration::from_millis(300),
+            poll: Duration::from_millis(5),
+            stall_timeout: Duration::from_secs(30),
+        }
+    }
+
+    fn worker_opts() -> WorkerOptions {
+        WorkerOptions {
+            poll: Duration::from_millis(5),
+            heartbeat: Duration::from_millis(50),
+            manifest: None,
+        }
+    }
+
+    fn micro_config(trials: usize, seed: u64) -> SearchLoopConfig {
+        SearchLoopConfig {
+            nsga2: Nsga2Config {
+                population: 6,
+                ..Default::default()
+            },
+            trials,
+            seed,
+            accuracy_threshold: 0.0,
+            progress: None,
+            checkpoint: None,
+        }
+    }
+
+    /// The wire protocol round-trips through real sockets: manifest
+    /// fetch, claim, heartbeat, first-writer-wins result, done.
+    #[test]
+    fn host_and_worker_speak_the_wire_protocol() {
+        let host = TcpHost::listen("127.0.0.1:0", Some("{\"preset\":\"x\"}".to_string())).unwrap();
+        let worker = TcpWorker::connect(&host.addr().to_string(), Duration::from_secs(5));
+
+        assert_eq!(worker.manifest().unwrap().as_deref(), Some("{\"preset\":\"x\"}"));
+
+        // empty queue → no claim
+        assert!(worker.claim_next().unwrap().is_none());
+
+        // publish a task with JSON-hostile content; it survives embedding
+        let task_text = "{\"shard\":\"a\",\"note\":\"quotes \\\" and\\nnewlines\"}";
+        host.publish_task("toy-b0000-s00.json", task_text).unwrap();
+        let claimed = worker.claim_next().unwrap().expect("one queued task");
+        assert_eq!(claimed.name, "toy-b0000-s00.json");
+        assert_eq!(claimed.task.unwrap(), task_text);
+
+        // claimed: the host tracks the lease from the claim request
+        assert!(matches!(
+            host.lease("toy-b0000-s00.json"),
+            LeaseStatus::Claimed { heartbeat_age: Some(_) }
+        ));
+        worker.heartbeat("toy-b0000-s00.json");
+
+        // first-writer-wins over the wire
+        assert!(worker.publish_result("toy-b0000-s00.json", "{\"results\":[]}").unwrap());
+        assert!(!worker.publish_result("toy-b0000-s00.json", "{\"late\":true}").unwrap());
+        assert_eq!(
+            host.take_result("toy-b0000-s00.json").unwrap().as_deref(),
+            Some("{\"results\":[]}")
+        );
+        worker.finish_claim("toy-b0000-s00.json");
+        assert_eq!(host.lease("toy-b0000-s00.json"), LeaseStatus::Unclaimed);
+
+        // reclaim requeues the task intact (exactly-once: second loses)
+        host.publish_task("toy-b0000-s01.json", "t").unwrap();
+        let _ = worker.claim_next().unwrap().expect("claimable");
+        assert!(host.reclaim("toy-b0000-s01.json"));
+        assert!(!host.reclaim("toy-b0000-s01.json"));
+        let back = host.claim_next().unwrap().expect("requeued");
+        assert_eq!(back.task.unwrap(), "t");
+
+        // shutdown propagates to polling workers
+        host.request_shutdown().unwrap();
+        assert!(worker.claim_next().unwrap().is_none());
+        assert!(worker.is_shutdown());
+    }
+
+    /// The acceptance matrix over TCP: the micro search at
+    /// `shards ∈ {1,2,4} × workers ∈ {1,2}` — with workers talking to the
+    /// driver through real sockets — produces bit-identical records to
+    /// the single-process pool. The determinism contract is transport-
+    /// independent.
+    #[test]
+    fn tcp_sharded_search_matches_single_process_for_every_shard_and_worker_count() {
+        let space = SearchSpace::table1();
+        let pool = ParallelEvaluator::new(
+            ToyEvaluator {
+                space: space.clone(),
+            },
+            1,
+        );
+        let reference = global_search_with(&pool, &space, micro_config(24, 42)).unwrap();
+
+        for shards in [1usize, 2, 4] {
+            for workers in [1usize, 2] {
+                let host: Arc<TcpHost> = Arc::new(TcpHost::listen("127.0.0.1:0", None).unwrap());
+                let addr = host.addr().to_string();
+                let stage = StageSpec {
+                    objectives: ObjectiveKind::nac_set(),
+                    epochs: 1,
+                };
+                let driver = ShardDriver::with_transport(
+                    Arc::clone(&host) as Arc<dyn ShardTransport>,
+                    "toy",
+                    stage,
+                    shards,
+                    EvalCache::in_memory(),
+                    fast_timings(),
+                )
+                .unwrap();
+                let outcome = std::thread::scope(|s| {
+                    for _ in 0..workers {
+                        let space = space.clone();
+                        let addr = addr.clone();
+                        s.spawn(move || {
+                            let client: Arc<dyn ShardTransport> =
+                                Arc::new(TcpWorker::connect(&addr, Duration::from_secs(5)));
+                            run_worker_on(client, &worker_opts(), |_stage, reqs| {
+                                reqs.iter()
+                                    .map(|req| {
+                                        let mut rng = req.rng.clone();
+                                        Ok(toy_score(&space, &req.genome, &mut rng))
+                                    })
+                                    .collect()
+                            })
+                            .unwrap();
+                        });
+                    }
+                    let outcome = global_search_with(&driver, &space, micro_config(24, 42));
+                    // stop the worker threads whether or not the search
+                    // succeeded, or a failed assertion would hang the scope
+                    host.request_shutdown().unwrap();
+                    outcome.unwrap()
+                });
+
+                assert_eq!(
+                    outcome.records.len(),
+                    reference.records.len(),
+                    "tcp shards={shards} workers={workers}"
+                );
+                for (a, b) in reference.records.iter().zip(&outcome.records) {
+                    assert_eq!(a.id, b.id, "tcp shards={shards} workers={workers}");
+                    assert_eq!(a.genome, b.genome, "tcp shards={shards} workers={workers}");
+                    assert_eq!(a.accuracy, b.accuracy, "tcp shards={shards} workers={workers}");
+                    assert_eq!(
+                        a.objectives, b.objectives,
+                        "tcp shards={shards} workers={workers}"
+                    );
+                }
+                assert_eq!(outcome.front, reference.front);
+                assert_eq!(outcome.selected, reference.selected);
+                assert_eq!(outcome.evaluations, reference.evaluations);
+                assert_eq!(outcome.cache_hits, reference.cache_hits);
+            }
+        }
+    }
+
+    /// A worker whose driver vanishes exits cleanly (typed timeouts +
+    /// the dead-driver threshold) instead of hanging forever.
+    #[test]
+    fn worker_survives_a_dead_driver() {
+        let addr = {
+            // bind, learn the port, and close the listener again: nothing
+            // serves this address afterwards
+            let host = TcpHost::listen("127.0.0.1:0", None).unwrap();
+            host.addr().to_string()
+        };
+        let client: Arc<dyn ShardTransport> =
+            Arc::new(TcpWorker::connect(&addr, Duration::from_millis(50)));
+        let t0 = Instant::now();
+        let summary = run_worker_on(client, &worker_opts(), |_stage, _reqs| Vec::new()).unwrap();
+        assert_eq!(summary.shards, 0);
+        assert!(
+            t0.elapsed() < Duration::from_secs(20),
+            "worker exited promptly, took {:?}",
+            t0.elapsed()
+        );
+    }
+}

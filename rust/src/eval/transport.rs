@@ -1,0 +1,387 @@
+//! The shard-protocol transport seam.
+//!
+//! [`super::shard`] holds the transport-agnostic protocol core — task
+//! encoding, the lease/heartbeat state machine, exactly-once reclaim,
+//! dispatch-order merge — and talks to the outside world only through
+//! the [`ShardTransport`] trait defined here: publish/claim/heartbeat/
+//! result/sentinel operations over *some* shared medium. Two media
+//! exist:
+//!
+//! * [`FsTransport`] (this module) — the original shared-run-directory
+//!   protocol: claims are atomic renames, heartbeats are sidecar files,
+//!   results are hard-link first-writer-wins publishes. Bit-for-bit the
+//!   same on-disk layout as before the trait existed, so drivers and
+//!   workers of mixed vintage interoperate on one run directory.
+//! * [`super::tcp`] — a driver-hosted TCP task server speaking the
+//!   shared [`crate::net`] HTTP framing, for worker fleets with no
+//!   shared filesystem.
+//!
+//! Every operation is keyed by the shard *name*; names are unique per
+//! driver instance (label + run tag + batch + index), so transports
+//! never need to understand their contents.
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+/// The shared run directory: path helpers + the shutdown sentinel.
+#[derive(Debug, Clone)]
+pub struct RunDir {
+    root: PathBuf,
+}
+
+impl RunDir {
+    /// Wrap a root path (no I/O; see [`RunDir::ensure`]).
+    pub fn new(root: impl Into<PathBuf>) -> RunDir {
+        RunDir { root: root.into() }
+    }
+
+    /// Create the protocol subdirectories (idempotent; both driver and
+    /// workers call this so startup order does not matter).
+    pub fn ensure(&self) -> Result<()> {
+        for dir in [self.queue(), self.claims(), self.results(), self.tmp()] {
+            std::fs::create_dir_all(&dir)
+                .with_context(|| format!("creating {}", dir.display()))?;
+        }
+        Ok(())
+    }
+
+    /// The run-dir root.
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Pending shard task files.
+    pub fn queue(&self) -> PathBuf {
+        self.root.join("queue")
+    }
+
+    /// Claimed shards + heartbeat sidecars.
+    pub fn claims(&self) -> PathBuf {
+        self.root.join("claims")
+    }
+
+    /// Completed per-shard result files.
+    pub fn results(&self) -> PathBuf {
+        self.root.join("results")
+    }
+
+    /// Staging area for atomic publishes.
+    pub fn tmp(&self) -> PathBuf {
+        self.root.join("tmp")
+    }
+
+    /// The run manifest the CLI driver writes for its workers.
+    pub fn manifest_path(&self) -> PathBuf {
+        self.root.join("run.json")
+    }
+
+    fn shutdown_path(&self) -> PathBuf {
+        self.root.join("shutdown")
+    }
+
+    /// Tell every worker on this run directory to exit.
+    pub fn request_shutdown(&self) -> Result<()> {
+        std::fs::write(self.shutdown_path(), b"shutdown\n")
+            .with_context(|| format!("writing {}", self.shutdown_path().display()))
+    }
+
+    /// Has a shutdown been requested?
+    pub fn is_shutdown(&self) -> bool {
+        self.shutdown_path().exists()
+    }
+
+    /// Remove a stale shutdown sentinel (a fresh driver reusing the run
+    /// directory of a finished run must not stop its new workers).
+    pub fn clear_shutdown(&self) {
+        let _ = std::fs::remove_file(self.shutdown_path());
+    }
+
+    /// Write `text` to `dest` atomically (staged in `tmp/`, renamed into
+    /// place), so queue/result consumers never observe a partial file.
+    /// Overwrites an existing `dest`.
+    pub fn publish(&self, dest: &Path, text: &str) -> Result<()> {
+        let tmp = self.stage(dest, text)?;
+        std::fs::rename(&tmp, dest)
+            .with_context(|| format!("publishing {}", dest.display()))
+    }
+
+    /// Atomic **first-writer-wins** publish: links the staged file into
+    /// place and reports `false` (without touching `dest`) when another
+    /// publisher already won — there is no exists-then-rename window in
+    /// which a late writer could clobber a consumed result.
+    pub fn publish_new(&self, dest: &Path, text: &str) -> Result<bool> {
+        let tmp = self.stage(dest, text)?;
+        let outcome = match std::fs::hard_link(&tmp, dest) {
+            Ok(()) => Ok(true),
+            Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => Ok(false),
+            Err(e) => {
+                Err(anyhow::Error::new(e).context(format!("publishing {}", dest.display())))
+            }
+        };
+        let _ = std::fs::remove_file(&tmp);
+        outcome
+    }
+
+    fn stage(&self, dest: &Path, text: &str) -> Result<PathBuf> {
+        let base = dest
+            .file_name()
+            .map(|n| n.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "file".to_string());
+        let tmp = self
+            .tmp()
+            .join(format!("{base}.{}.tmp", std::process::id()));
+        std::fs::write(&tmp, text).with_context(|| format!("writing {}", tmp.display()))?;
+        Ok(tmp)
+    }
+}
+
+/// Age of a file's mtime. `None` strictly means the file is missing (or
+/// unstattable); an mtime in the future — clock skew, NTP steps — reads
+/// as age zero, so a live worker's lease can never look stale because of
+/// a clock adjustment.
+fn mtime_age(path: &Path) -> Option<Duration> {
+    let modified = std::fs::metadata(path).ok()?.modified().ok()?;
+    Some(modified.elapsed().unwrap_or(Duration::ZERO))
+}
+
+/// Sorted shard file names currently queued (a missing or unreadable
+/// queue directory reads as empty — `ensure()` recreates it).
+pub(crate) fn queue_names(dir: &RunDir) -> Vec<String> {
+    let mut names: Vec<String> = std::fs::read_dir(dir.queue())
+        .into_iter()
+        .flatten()
+        .flatten()
+        .filter_map(|e| e.file_name().into_string().ok())
+        .filter(|n| n.ends_with(".json"))
+        .collect();
+    names.sort();
+    names
+}
+
+/// Driver-side view of one shard's claim.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LeaseStatus {
+    /// Not claimed: still queued, or between a reclaim and a re-claim.
+    Unclaimed,
+    /// Claimed by some worker. `heartbeat_age` is `None` when the
+    /// claimant has not yet produced a heartbeat (the driver grants one
+    /// full lease of grace from first observation).
+    Claimed {
+        /// Age of the freshest heartbeat, if any exists.
+        heartbeat_age: Option<Duration>,
+    },
+}
+
+/// A task handed to a worker by [`ShardTransport::claim_next`].
+#[derive(Debug)]
+pub struct ClaimedTask {
+    /// The shard name (claim is already held; the worker must publish a
+    /// result or die and be reclaimed).
+    pub name: String,
+    /// The task text, or why it could not be fetched — the worker
+    /// publishes the failure so the driver fails the shard loudly
+    /// instead of waiting out the lease.
+    pub task: Result<String>,
+}
+
+/// The medium the shard protocol runs over. Implementations must make
+/// [`claim_next`](ShardTransport::claim_next) hand each queued shard to
+/// exactly one caller and [`publish_result`](ShardTransport::publish_result)
+/// first-writer-wins; everything else (lease accounting, reclaim policy,
+/// dispatch-order merge, determinism) lives in the protocol core.
+pub trait ShardTransport: Send + Sync {
+    /// Human-readable endpoint for logs and [`super::ShardError::Stalled`].
+    fn describe(&self) -> String;
+
+    /// The run manifest text, if this transport carries one.
+    fn manifest(&self) -> Result<Option<String>>;
+
+    /// Has a shutdown been requested?
+    fn is_shutdown(&self) -> bool;
+
+    /// Tell every worker on this transport to exit.
+    fn request_shutdown(&self) -> Result<()>;
+
+    // ---- driver side ----
+
+    /// Publish a shard task into the queue (atomic: a worker sees the
+    /// whole task or nothing).
+    fn publish_task(&self, name: &str, text: &str) -> Result<()>;
+
+    /// The shard's published result text, if one has landed. `None`
+    /// simply means "not yet" — the driver polls.
+    fn take_result(&self, name: &str) -> Result<Option<String>>;
+
+    /// Drop every protocol artifact of a resolved shard (task, claim,
+    /// heartbeat, result). Best-effort; names are run-unique so leftover
+    /// artifacts are garbage, never a hazard.
+    fn scrub(&self, name: &str);
+
+    /// Claim + heartbeat status for the lease state machine.
+    fn lease(&self, name: &str) -> LeaseStatus;
+
+    /// Return a dead claim to the queue. Exactly-once: of all concurrent
+    /// reclaimers (and the claim holder's own completion) at most one
+    /// wins; returns whether this caller was it.
+    fn reclaim(&self, name: &str) -> bool;
+
+    /// Remove straggler results carrying this driver's run tag (a
+    /// reclaimed zombie may publish after the consumed copy was
+    /// scrubbed; nothing will ever read it).
+    fn sweep_results(&self, run_tag: &str);
+
+    // ---- worker side ----
+
+    /// Claim the next queued shard, if any. The claim is held (and its
+    /// lease running) from the moment this returns `Some`.
+    fn claim_next(&self) -> Result<Option<ClaimedTask>>;
+
+    /// Refresh the claim's lease.
+    fn heartbeat(&self, name: &str);
+
+    /// First-writer-wins result publish; `false` means another worker's
+    /// result already landed (this one is discarded, which is safe:
+    /// results are deterministic).
+    fn publish_result(&self, name: &str, text: &str) -> Result<bool>;
+
+    /// Release a completed claim (best-effort tidy-up; the driver's
+    /// scrub covers crashed workers).
+    fn finish_claim(&self, name: &str);
+}
+
+/// The original shared-filesystem transport: every operation is a file
+/// operation under a [`RunDir`], with atomicity from rename/hard-link.
+/// On-disk layout and semantics are bit-for-bit the pre-trait protocol.
+#[derive(Debug, Clone)]
+pub struct FsTransport {
+    dir: RunDir,
+}
+
+impl FsTransport {
+    /// Open (and create) the protocol directories under `run_dir`.
+    pub fn new(run_dir: impl Into<PathBuf>) -> Result<FsTransport> {
+        let dir = RunDir::new(run_dir);
+        dir.ensure()?;
+        Ok(FsTransport { dir })
+    }
+
+    /// The underlying run directory.
+    pub fn dir(&self) -> &RunDir {
+        &self.dir
+    }
+
+    fn hb_path(&self, name: &str) -> PathBuf {
+        self.dir.claims().join(format!("{name}.hb"))
+    }
+}
+
+impl ShardTransport for FsTransport {
+    fn describe(&self) -> String {
+        self.dir.root().display().to_string()
+    }
+
+    fn manifest(&self) -> Result<Option<String>> {
+        Ok(std::fs::read_to_string(self.dir.manifest_path()).ok())
+    }
+
+    fn is_shutdown(&self) -> bool {
+        self.dir.is_shutdown()
+    }
+
+    fn request_shutdown(&self) -> Result<()> {
+        self.dir.request_shutdown()
+    }
+
+    fn publish_task(&self, name: &str, text: &str) -> Result<()> {
+        self.dir.publish(&self.dir.queue().join(name), text)
+    }
+
+    fn take_result(&self, name: &str) -> Result<Option<String>> {
+        // any read failure reads as "not yet": the file may be missing,
+        // mid-rename, or transiently unreadable — the driver polls
+        Ok(std::fs::read_to_string(self.dir.results().join(name)).ok())
+    }
+
+    fn scrub(&self, name: &str) {
+        let _ = std::fs::remove_file(self.dir.results().join(name));
+        let _ = std::fs::remove_file(self.dir.queue().join(name));
+        let _ = std::fs::remove_file(self.dir.claims().join(name));
+        let _ = std::fs::remove_file(self.hb_path(name));
+    }
+
+    fn lease(&self, name: &str) -> LeaseStatus {
+        if !self.dir.claims().join(name).exists() {
+            return LeaseStatus::Unclaimed;
+        }
+        LeaseStatus::Claimed {
+            heartbeat_age: mtime_age(&self.hb_path(name)),
+        }
+    }
+
+    fn reclaim(&self, name: &str) -> bool {
+        // claim-by-rename in reverse: only one reclaimer can win, and
+        // the task file travels back into the queue intact
+        let won = std::fs::rename(
+            self.dir.claims().join(name),
+            self.dir.queue().join(name),
+        )
+        .is_ok();
+        if won {
+            let _ = std::fs::remove_file(self.hb_path(name));
+        }
+        won
+    }
+
+    fn sweep_results(&self, run_tag: &str) {
+        for entry in std::fs::read_dir(self.dir.results())
+            .into_iter()
+            .flatten()
+            .flatten()
+        {
+            if entry.file_name().to_string_lossy().contains(run_tag) {
+                let _ = std::fs::remove_file(entry.path());
+            }
+        }
+    }
+
+    fn claim_next(&self) -> Result<Option<ClaimedTask>> {
+        for name in queue_names(&self.dir) {
+            let claim = self.dir.claims().join(&name);
+            // claim-by-rename: exactly one worker wins this shard
+            if std::fs::rename(self.dir.queue().join(&name), &claim).is_err() {
+                continue;
+            }
+            self.heartbeat(&name);
+            let task = match std::fs::read_to_string(&claim) {
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                    // the claim vanished under us: the driver resolved
+                    // this shard through another worker's result (our
+                    // lease was reclaimed while we stalled) — the shard
+                    // is no longer ours, so hand back nothing
+                    let _ = std::fs::remove_file(self.hb_path(&name));
+                    continue;
+                }
+                Err(e) => Err(anyhow::Error::new(e)
+                    .context(format!("reading shard task {}", claim.display()))),
+                Ok(text) => Ok(text),
+            };
+            return Ok(Some(ClaimedTask { name, task }));
+        }
+        Ok(None)
+    }
+
+    fn heartbeat(&self, name: &str) {
+        let _ = std::fs::write(self.hb_path(name), b"hb\n");
+    }
+
+    fn publish_result(&self, name: &str, text: &str) -> Result<bool> {
+        self.dir.publish_new(&self.dir.results().join(name), text)
+    }
+
+    fn finish_claim(&self, name: &str) {
+        let _ = std::fs::remove_file(self.dir.claims().join(name));
+        let _ = std::fs::remove_file(self.hb_path(name));
+    }
+}

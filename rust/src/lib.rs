@@ -26,6 +26,7 @@ pub mod coordinator;
 pub mod data;
 pub mod eval;
 pub mod hls;
+pub mod net;
 pub mod nn;
 pub mod objectives;
 pub mod pareto;

@@ -7,7 +7,9 @@
 //! snac-pack pipeline  --preset ci --out results          # full paper flow
 //! snac-pack search    --preset ci --objectives acc,bops  # one global search
 //! snac-pack search    --shards 4 --run-dir /tmp/run      # multi-process dispatch
+//! snac-pack search    --shards 4 --listen 0.0.0.0:7979   # TCP dispatch, no shared fs
 //! snac-pack worker    --run-dir /tmp/run                 # serve shards for a driver
+//! snac-pack worker    --connect HOST:7979                # join a TCP driver
 //! snac-pack serve     --preset ci --port 7878            # surrogate estimation service
 //! snac-pack surrogate --preset ci                        # surrogate train/eval
 //! snac-pack synth                                        # Table-3 style synthesis demo
@@ -16,16 +18,19 @@
 
 use std::net::TcpListener;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
 use snac_pack::config::Preset;
-use snac_pack::coordinator::{self, GlobalSearchConfig, ShardedDispatch, TrialRecord};
+use snac_pack::coordinator::{
+    self, CheckpointConfig, DispatchBackend, GlobalSearchConfig, ShardedDispatch, TrialRecord,
+};
 use snac_pack::data::Dataset;
 use snac_pack::eval::{
-    parallel_map, resolve_workers, run_worker, RunDir, ShardTimings, SupernetEvaluator,
-    TrialEvaluator, WorkerOptions,
+    parallel_map, resolve_workers, run_worker_on, FsTransport, RunDir, ShardTimings,
+    ShardTransport, SupernetEvaluator, TcpHost, TcpWorker, TrialEvaluator, WorkerOptions,
 };
 use snac_pack::hls::{synthesize, FpgaDevice, HlsConfig, NetworkSpec};
 use snac_pack::nn::{Genome, SearchSpace};
@@ -69,8 +74,9 @@ fn parse_cli() -> Result<Cli> {
              [--preset paper|ci|quickstart] [--out DIR] [--artifacts DIR] \
              [--objectives acc,bops] [--workers N] [--threads N] \
              [--verify-plans 0|1] [--cache-path FILE] \
-             [--shards N] [--run-dir DIR] [--port N] [--batch-deadline-ms N] \
-             [--set key=value ...]\n\
+             [--shards N] [--run-dir DIR] [--listen HOST:PORT] \
+             [--connect HOST:PORT] [--checkpoint-interval N] \
+             [--port N] [--batch-deadline-ms N] [--set key=value ...]\n\
              --preset picks the base regardless of position; \
              --workers/--cache-path/--set overrides then apply left to right\n\
              --threads N runs the interpreter's dot-general kernels on N \
@@ -85,6 +91,13 @@ fn parse_cli() -> Result<Cli> {
              by `snac-pack worker` processes over --run-dir (auto-spawned \
              locally unless --set spawn_workers=0); results are \
              bit-identical to the in-process run\n\
+             --listen HOST:PORT serves the shard queue over TCP instead of \
+             a shared run directory; workers on any machine join with \
+             `snac-pack worker --connect HOST:PORT` (HOST:0 binds an \
+             ephemeral port, printed on startup)\n\
+             --checkpoint-interval N snapshots the search state every N \
+             generations so a killed driver resumes mid-run with a \
+             bit-identical trial database (0 = off)\n\
              serve exposes the trained surrogate as an HTTP estimation \
              service on 127.0.0.1:--port (0 = ephemeral), micro-batching \
              concurrent requests with a --batch-deadline-ms flush deadline"
@@ -143,6 +156,15 @@ fn parse_cli() -> Result<Cli> {
             "--run-dir" => preset
                 .set("run_dir", value()?)
                 .context("--run-dir expects a directory path")?,
+            "--listen" => preset
+                .set("listen", value()?)
+                .context("--listen expects HOST:PORT")?,
+            "--connect" => preset
+                .set("connect", value()?)
+                .context("--connect expects HOST:PORT")?,
+            "--checkpoint-interval" => preset
+                .set("checkpoint_interval", value()?)
+                .context("--checkpoint-interval expects a generation count")?,
             "--port" => preset
                 .set("port", value()?)
                 .context("--port expects a TCP port")?,
@@ -170,40 +192,30 @@ fn parse_cli() -> Result<Cli> {
     })
 }
 
+/// The medium a sharded driver dispatches over: a shared run directory
+/// (rename-based file protocol) or an in-process TCP task server.
+enum FleetBackend {
+    Fs(RunDir),
+    Tcp(Arc<TcpHost>),
+}
+
 /// A fleet of locally spawned `snac-pack worker` processes serving one
-/// run directory. Created by the driver before a sharded run; on drop —
-/// success or error — it requests shutdown and reaps the children, so
-/// workers never outlive their driver.
+/// driver. Created before a sharded run; on drop — success or error —
+/// it requests shutdown and reaps the children, so workers never
+/// outlive their driver. With `--listen` the fleet hosts a TCP task
+/// server instead of a run directory, and external workers on other
+/// machines may join alongside (or instead of) the local children.
 struct ShardFleet {
-    dir: RunDir,
+    backend: FleetBackend,
     children: Vec<std::process::Child>,
 }
 
 impl ShardFleet {
-    /// Prepare `run_dir` (directories + `run.json` manifest) and spawn
-    /// the local workers. `preset.spawn_workers`: `None` = one worker per
+    /// Prepare the dispatch medium (run directory + `run.json`, or a TCP
+    /// task server with the manifest served over HTTP) and spawn the
+    /// local workers. `preset.spawn_workers`: `None` = one worker per
     /// shard; `Some(0)` = none (externally managed workers).
     fn launch(preset: &Preset, artifacts: &Path) -> Result<ShardFleet> {
-        let run_dir = PathBuf::from(
-            preset
-                .run_dir
-                .as_ref()
-                .expect("caller resolves run_dir before launching the fleet"),
-        );
-        let dir = RunDir::new(&run_dir);
-        dir.ensure()?;
-        // Clear leftovers from a previous run on this directory before
-        // any worker exists: a stale shutdown sentinel would stop the
-        // fresh workers immediately, and stale queue/result files would
-        // burn worker time on shards no driver is waiting for (this
-        // run's shard names carry a fresh per-run tag, so stale files
-        // could never be *consumed* — only wastefully served).
-        dir.clear_shutdown();
-        for proto_dir in [dir.queue(), dir.claims(), dir.results(), dir.tmp()] {
-            for entry in std::fs::read_dir(&proto_dir).into_iter().flatten().flatten() {
-                let _ = std::fs::remove_file(entry.path());
-            }
-        }
         // absolute artifacts path: externally started workers may run
         // from any cwd, so a relative fixture-fallback path must not
         // leak into the manifest verbatim
@@ -214,12 +226,51 @@ impl ShardFleet {
             ("preset", preset.to_json()),
             ("artifacts", Json::Str(artifacts.display().to_string())),
         ]);
-        // atomic publish (tmp + rename): an externally started worker
-        // polling for run.json can never read a torn manifest, and the
-        // stale one from a previous run is gone before any worker of
-        // this run could load it
-        let _ = std::fs::remove_file(dir.manifest_path());
-        dir.publish(&dir.manifest_path(), &manifest.to_string())?;
+
+        let (backend, join_args, medium) = if let Some(bind) = preset.listen.as_deref() {
+            let host = Arc::new(TcpHost::listen(bind, Some(manifest.to_string()))?);
+            // external workers (and the TCP-fleet test) scrape this line
+            // for the bound address — HOST:0 binds an ephemeral port
+            eprintln!("[driver] task server listening on tcp://{}", host.addr());
+            let addr = host.addr().to_string();
+            let join = format!("snac-pack worker --connect {addr}");
+            (
+                FleetBackend::Tcp(host),
+                vec!["--connect".to_string(), addr],
+                join,
+            )
+        } else {
+            let run_dir = PathBuf::from(preset.run_dir.as_ref().context(
+                "sharded dispatch needs --run-dir DIR (shared filesystem) or \
+                 --listen HOST:PORT (TCP)",
+            )?);
+            let dir = RunDir::new(&run_dir);
+            dir.ensure()?;
+            // Clear leftovers from a previous run on this directory before
+            // any worker exists: a stale shutdown sentinel would stop the
+            // fresh workers immediately, and stale queue/result files would
+            // burn worker time on shards no driver is waiting for (this
+            // run's shard names carry a fresh per-run tag, so stale files
+            // could never be *consumed* — only wastefully served).
+            dir.clear_shutdown();
+            for proto_dir in [dir.queue(), dir.claims(), dir.results(), dir.tmp()] {
+                for entry in std::fs::read_dir(&proto_dir).into_iter().flatten().flatten() {
+                    let _ = std::fs::remove_file(entry.path());
+                }
+            }
+            // atomic publish (tmp + rename): an externally started worker
+            // polling for run.json can never read a torn manifest, and the
+            // stale one from a previous run is gone before any worker of
+            // this run could load it
+            let _ = std::fs::remove_file(dir.manifest_path());
+            dir.publish(&dir.manifest_path(), &manifest.to_string())?;
+            let join = format!("snac-pack worker --run-dir {}", run_dir.display());
+            (
+                FleetBackend::Fs(dir),
+                vec!["--run-dir".to_string(), run_dir.display().to_string()],
+                join,
+            )
+        };
 
         let spawn = preset.spawn_workers.unwrap_or(preset.search.shards);
         let mut children = Vec::new();
@@ -233,8 +284,7 @@ impl ShardFleet {
                 children.push(
                     std::process::Command::new(&exe)
                         .arg("worker")
-                        .arg("--run-dir")
-                        .arg(&run_dir)
+                        .args(&join_args)
                         .arg("--workers")
                         .arg(per_worker.to_string())
                         .spawn()
@@ -242,34 +292,48 @@ impl ShardFleet {
                 );
             }
             eprintln!(
-                "[driver] spawned {spawn} local worker(s), {per_worker} eval thread(s) each, \
-                 over {}",
-                run_dir.display()
+                "[driver] spawned {spawn} local worker(s), {per_worker} eval thread(s) each"
             );
         } else {
             eprintln!(
-                "[driver] expecting externally managed workers: start them with \
-                 `snac-pack worker --run-dir {}`",
-                run_dir.display()
+                "[driver] expecting externally managed workers: start them with `{medium}`"
             );
         }
-        Ok(ShardFleet { dir, children })
+        Ok(ShardFleet { backend, children })
+    }
+
+    /// The dispatch transport when this fleet hosts a TCP task server;
+    /// `None` means the driver talks the run-directory file protocol.
+    fn transport(&self) -> Option<Arc<dyn ShardTransport>> {
+        match &self.backend {
+            FleetBackend::Fs(_) => None,
+            FleetBackend::Tcp(host) => {
+                let t: Arc<dyn ShardTransport> = Arc::clone(host);
+                Some(t)
+            }
+        }
     }
 }
 
 impl Drop for ShardFleet {
     fn drop(&mut self) {
-        let _ = self.dir.request_shutdown();
+        match &self.backend {
+            FleetBackend::Fs(dir) => {
+                let _ = dir.request_shutdown();
+            }
+            FleetBackend::Tcp(host) => {
+                let _ = host.request_shutdown();
+            }
+        }
         for child in &mut self.children {
             let _ = child.wait();
         }
     }
 }
 
-/// The `worker` subcommand: rebuild the evaluation stack from the run
-/// manifest and serve shards until the driver requests shutdown.
+/// The `worker` subcommand over a shared run directory: wait for the
+/// driver's `run.json`, then serve shards until shutdown.
 fn worker_main(run_dir: &Path, workers_flag: Option<usize>) -> Result<()> {
-    let wid = std::process::id();
     let manifest_path = run_dir.join("run.json");
     // externally started workers may race the driver's manifest write:
     // wait for it briefly instead of failing on startup order
@@ -285,8 +349,44 @@ fn worker_main(run_dir: &Path, workers_flag: Option<usize>) -> Result<()> {
             manifest_path.display()
         )
     })?;
-    let manifest = Json::parse(&text)
-        .map_err(|e| anyhow::anyhow!("parsing {}: {e}", manifest_path.display()))?;
+    worker_serve(Arc::new(FsTransport::new(run_dir)?), &text, workers_flag)
+}
+
+/// The `worker --connect` subcommand: fetch the run manifest from a TCP
+/// driver, then serve shards over the wire until shutdown. No shared
+/// filesystem is needed — only the driver's artifacts path must also
+/// resolve on this machine.
+fn worker_connect(addr: &str, workers_flag: Option<usize>) -> Result<()> {
+    let transport = Arc::new(TcpWorker::connect(addr, Duration::from_secs(10)));
+    // externally started workers may race the driver's startup: poll for
+    // the manifest briefly instead of failing on connection order
+    let mut text = None;
+    for _ in 0..600 {
+        if let Ok(Some(m)) = transport.manifest() {
+            text = Some(m);
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    let text = text.with_context(|| {
+        format!("no run manifest served at {addr} — is a driver running with --listen?")
+    })?;
+    worker_serve(transport, &text, workers_flag)
+}
+
+/// Shared worker body: rebuild the evaluation stack from the run
+/// manifest and serve shards over `transport` until the driver requests
+/// shutdown. Identical for both transports — the protocol core decides
+/// shard order and the driver merges in dispatch order, so results are
+/// bit-identical however the shards travelled.
+fn worker_serve(
+    transport: Arc<dyn ShardTransport>,
+    text: &str,
+    workers_flag: Option<usize>,
+) -> Result<()> {
+    let wid = std::process::id();
+    let manifest =
+        Json::parse(text).map_err(|e| anyhow::anyhow!("parsing the run manifest: {e}"))?;
     let preset = Preset::from_json(manifest.get("preset").context("run.json missing `preset`")?)?;
     let artifacts = PathBuf::from(
         manifest
@@ -313,22 +413,22 @@ fn worker_main(run_dir: &Path, workers_flag: Option<usize>) -> Result<()> {
     let workers = workers_flag.unwrap_or(preset.search.workers);
     eprintln!(
         "[worker {wid}] serving {} with {} eval thread(s)",
-        run_dir.display(),
+        transport.describe(),
         resolve_workers(workers)
     );
 
     // every result this worker publishes echoes the fingerprint of the
     // manifest its evaluator stack was built from — the driver rejects
-    // results computed under a stale run.json instead of merging them
+    // results computed under a stale manifest instead of merging them
     let opts = WorkerOptions {
-        manifest: Some(snac_pack::eval::manifest_fingerprint(&text)),
+        manifest: Some(snac_pack::eval::manifest_fingerprint(text)),
         ..Default::default()
     };
     // trained lazily, once, when a stage's objective set first needs it —
     // deterministically from the preset seed, so every worker (and the
     // driver's reporting pass) derives the identical surrogate
     let mut sur_params: Option<SurrogateParams> = None;
-    let summary = run_worker(run_dir, &opts, |stage, requests| {
+    let summary = run_worker_on(transport, &opts, |stage, requests| {
         let needs = ObjectiveKind::needs_surrogate(&stage.objectives);
         if needs && sur_params.is_none() {
             match train_surrogate(&rt, &space, &preset.surrogate, &hls, &device) {
@@ -390,9 +490,13 @@ fn worker_main(run_dir: &Path, workers_flag: Option<usize>) -> Result<()> {
 
 fn main() -> Result<()> {
     let mut cli = parse_cli()?;
-    // sharded runs need a concrete run directory before the preset is
-    // shared with the pipeline and the worker manifest
-    if cli.preset.search.shards > 0 && cli.preset.run_dir.is_none() {
+    // sharded file-protocol runs need a concrete run directory before
+    // the preset is shared with the pipeline and the worker manifest;
+    // --listen dispatches over TCP and needs no directory at all
+    if cli.preset.search.shards > 0
+        && cli.preset.run_dir.is_none()
+        && cli.preset.listen.is_none()
+    {
         cli.preset.run_dir = Some(cli.out.join("shard-run").display().to_string());
     }
     let cli = cli;
@@ -405,12 +509,15 @@ fn main() -> Result<()> {
     xla::set_verify_plans(cli.preset.search.verify_plans);
     match cli.command.as_str() {
         "worker" => {
-            let run_dir = cli
-                .preset
-                .run_dir
-                .clone()
-                .context("the worker subcommand needs --run-dir DIR")?;
-            worker_main(Path::new(&run_dir), cli.workers_flag)?;
+            if let Some(addr) = cli.preset.connect.clone() {
+                worker_connect(&addr, cli.workers_flag)?;
+            } else {
+                let run_dir = cli.preset.run_dir.clone().context(
+                    "the worker subcommand needs --run-dir DIR (shared filesystem) \
+                     or --connect HOST:PORT (TCP driver)",
+                )?;
+                worker_main(Path::new(&run_dir), cli.workers_flag)?;
+            }
         }
         "info" => {
             let rt = Runtime::load(&cli.artifacts_dir())?;
@@ -429,10 +536,12 @@ fn main() -> Result<()> {
             let rt = Runtime::load(&artifacts)?;
             // dropped (= shutdown + reap) when this arm finishes, success
             // or error — workers never outlive the driver
-            let _fleet = (cli.preset.search.shards > 0)
+            let fleet = (cli.preset.search.shards > 0)
                 .then(|| ShardFleet::launch(&cli.preset, &artifacts))
                 .transpose()?;
-            let summary = coordinator::run_pipeline(&rt, &cli.preset, &cli.out)?;
+            let transport = fleet.as_ref().and_then(|f| f.transport());
+            let summary =
+                coordinator::run_pipeline_with(&rt, &cli.preset, &cli.out, transport)?;
             println!("{}", summary.table2);
             println!("{}", summary.table3);
             println!("stage timings:");
@@ -504,17 +613,28 @@ fn main() -> Result<()> {
                     eprintln!("trial {i}/{n}: {} acc={:.4}", r.label, r.accuracy);
                 })),
                 cache_path: cli.preset.cache_path.as_ref().map(PathBuf::from),
+                checkpoint: (cli.preset.search.checkpoint_interval > 0).then(|| {
+                    CheckpointConfig {
+                        path: cli.out.join("checkpoint-search.json"),
+                        interval: cli.preset.search.checkpoint_interval,
+                    }
+                }),
             };
             let outcome = if sharded {
-                let run_dir = PathBuf::from(
-                    cli.preset.run_dir.as_ref().expect("run_dir resolved above"),
-                );
+                let run_dir = cli.preset.run_dir.as_ref().map(PathBuf::from);
+                let backend = match (fleet.as_ref().and_then(|f| f.transport()), &run_dir) {
+                    (Some(t), _) => DispatchBackend::Transport(t),
+                    (None, Some(dir)) => DispatchBackend::RunDir(dir),
+                    (None, None) => bail!(
+                        "sharded dispatch needs --run-dir DIR or --listen HOST:PORT"
+                    ),
+                };
                 coordinator::global_search_sharded(
                     &ds,
                     &space,
                     cfg,
                     &ShardedDispatch {
-                        run_dir: &run_dir,
+                        backend,
                         label: "search",
                         shards: cli.preset.search.shards,
                         timings: ShardTimings::default(),

@@ -1,0 +1,269 @@
+//! Shared std-only HTTP/1.1 framing.
+//!
+//! Extracted from `serve/http.rs` so the estimation service (`serve/`)
+//! and the TCP shard transport (`eval/tcp.rs`) speak one wire format:
+//! a blocking request reader, a response writer, and a one-shot client.
+//! One request per connection (`Connection: close`), bodies framed by
+//! `Content-Length` — exactly what a JSON endpoint needs and nothing
+//! more. The request reader is generic over any [`Read`] source, so the
+//! framing parser is fuzzable without sockets (`tests/net_robustness.rs`
+//! drives it with truncated, oversized, and split-read inputs).
+
+use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+/// Largest request body the server will read (a full `/estimate/batch`
+/// of a few thousand genomes — or a shard task file of forked RNG
+/// states — fits in well under this).
+pub const MAX_BODY: usize = 8 << 20;
+
+/// Largest request line + header block the server will read. Bounding
+/// the whole pre-body region (rather than per line) also caps header
+/// count, so a client streaming endless bytes cannot grow server
+/// memory or pin a connection thread.
+pub const MAX_HEAD: usize = 64 << 10;
+
+/// Read timeout the convenience [`request`] client uses; callers with a
+/// liveness requirement (shard workers probing a possibly-dead driver)
+/// pass their own via [`request_with_timeout`].
+pub const DEFAULT_CLIENT_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// One parsed HTTP request.
+#[derive(Debug)]
+pub struct Request {
+    /// Upper-case method (`GET`, `POST`, …).
+    pub method: String,
+    /// Path without query string.
+    pub path: String,
+    /// Raw body (empty when no `Content-Length`).
+    pub body: String,
+}
+
+/// Typed client-side failures (carried inside `anyhow::Error`; downcast
+/// to branch on them).
+#[derive(Debug)]
+pub enum NetError {
+    /// The peer accepted (or never completed) the exchange but went
+    /// quiet past the configured timeout. Workers downcast to this to
+    /// tell a dead driver from a malformed response.
+    Timeout {
+        /// The address the request was sent to.
+        addr: String,
+        /// How long the client waited before giving up.
+        waited: Duration,
+    },
+}
+
+impl std::fmt::Display for NetError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            NetError::Timeout { addr, waited } => {
+                write!(f, "request to {addr} timed out after {waited:.1?}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for NetError {}
+
+/// Read one request from a connection. Fails on malformed framing, an
+/// over-long body, or a source that goes quiet mid-request (on a socket
+/// the caller sets the stream's read timeout). Generic over the byte
+/// source so the parser is testable against in-memory and split reads.
+pub fn read_request<R: Read>(stream: R) -> Result<Request> {
+    // hard cap on the pre-body region: an over-long request line or
+    // header block exhausts the budget (read_line hits EOF) and fails
+    // the request instead of ballooning `line` without bound
+    let mut reader = BufReader::new(stream.take(MAX_HEAD as u64));
+    let mut line = String::new();
+    reader.read_line(&mut line).context("reading request line")?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().context("empty request line")?.to_ascii_uppercase();
+    let target = parts.next().context("request line has no path")?;
+    let path = target.split('?').next().unwrap_or(target).to_string();
+
+    let mut content_length = 0usize;
+    loop {
+        let mut header = String::new();
+        reader.read_line(&mut header).context("reading header")?;
+        let header = header.trim_end();
+        if header.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = header.split_once(':') {
+            if name.trim().eq_ignore_ascii_case("content-length") {
+                content_length = value.trim().parse().context("unparseable Content-Length")?;
+            }
+        }
+    }
+    if content_length > MAX_BODY {
+        bail!("request body of {content_length} bytes exceeds the {MAX_BODY}-byte limit");
+    }
+    // headers consumed: widen the read budget to admit exactly the body
+    // (bytes the BufReader already buffered are paid for, so this is
+    // never under-generous)
+    reader.get_mut().set_limit(content_length as u64);
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body).context("reading request body")?;
+    Ok(Request {
+        method,
+        path,
+        body: String::from_utf8(body).context("request body is not UTF-8")?,
+    })
+}
+
+/// Reason phrase for the status codes the services emit.
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        500 => "Internal Server Error",
+        _ => "Unknown",
+    }
+}
+
+/// Write a full JSON response and flush.
+pub fn write_response<W: Write>(stream: &mut W, status: u16, body: &str) -> Result<()> {
+    let head = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        reason(status),
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// One-shot HTTP client: send `method path` with an optional JSON body
+/// to `addr` (e.g. `127.0.0.1:7878`) and return `(status, body)`. Reads
+/// time out after [`DEFAULT_CLIENT_TIMEOUT`].
+pub fn request(addr: &str, method: &str, path: &str, body: Option<&str>) -> Result<(u16, String)> {
+    request_with_timeout(addr, method, path, body, DEFAULT_CLIENT_TIMEOUT)
+}
+
+/// [`request`] with an explicit timeout bounding connect, write, and
+/// read. A peer that goes quiet past the deadline fails with a typed
+/// [`NetError::Timeout`] instead of hanging the caller forever — shard
+/// workers rely on this to survive a dead driver.
+pub fn request_with_timeout(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+    timeout: Duration,
+) -> Result<(u16, String)> {
+    // a zero timeout means "disable timeouts" to the socket API — clamp
+    // so the caller's intent (fail fast) is preserved
+    let timeout = timeout.max(Duration::from_millis(1));
+    let t0 = Instant::now();
+    let timed = |e: std::io::Error, what: &'static str| -> anyhow::Error {
+        if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) {
+            anyhow::Error::new(NetError::Timeout {
+                addr: addr.to_string(),
+                waited: t0.elapsed(),
+            })
+        } else {
+            anyhow::Error::new(e).context(what)
+        }
+    };
+    let sock = addr
+        .to_socket_addrs()
+        .with_context(|| format!("resolving {addr}"))?
+        .next()
+        .with_context(|| format!("{addr} resolves to no address"))?;
+    let mut stream =
+        TcpStream::connect_timeout(&sock, timeout).map_err(|e| timed(e, "connecting"))?;
+    stream.set_read_timeout(Some(timeout))?;
+    stream.set_write_timeout(Some(timeout))?;
+    let body = body.unwrap_or("");
+    let head = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream
+        .write_all(head.as_bytes())
+        .map_err(|e| timed(e, "writing request head"))?;
+    stream
+        .write_all(body.as_bytes())
+        .map_err(|e| timed(e, "writing request body"))?;
+    stream.flush().map_err(|e| timed(e, "flushing request"))?;
+
+    let mut response = String::new();
+    stream
+        .read_to_string(&mut response)
+        .map_err(|e| timed(e, "reading response"))?;
+    let (head, payload) = response
+        .split_once("\r\n\r\n")
+        .context("response has no header/body separator")?;
+    let status_line = head.lines().next().context("empty response")?;
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .context("status line has no code")?
+        .parse()
+        .context("unparseable status code")?;
+    Ok((status, payload.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn request_parses_from_any_reader() {
+        let raw = b"POST /estimate?x=1 HTTP/1.1\r\nHost: h\r\nContent-Length: 4\r\n\r\nbody";
+        let req = read_request(Cursor::new(raw.to_vec())).unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/estimate");
+        assert_eq!(req.body, "body");
+
+        // no Content-Length: empty body
+        let req = read_request(Cursor::new(b"GET / HTTP/1.1\r\n\r\n".to_vec())).unwrap();
+        assert_eq!(req.method, "GET");
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn oversized_and_truncated_requests_are_typed_errors() {
+        let big = format!("POST / HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY + 1);
+        let err = read_request(Cursor::new(big.into_bytes())).unwrap_err();
+        assert!(format!("{err:#}").contains("exceeds"), "{err:#}");
+
+        // promised body never arrives
+        let err = read_request(Cursor::new(
+            b"POST / HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc".to_vec(),
+        ))
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("request body"), "{err:#}");
+    }
+
+    #[test]
+    fn quiet_peer_times_out_with_a_typed_error() {
+        // a listener that accepts and never responds
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let hold = std::thread::spawn(move || listener.accept());
+        let err = request_with_timeout(
+            &addr,
+            "GET",
+            "/healthz",
+            None,
+            Duration::from_millis(50),
+        )
+        .unwrap_err();
+        let net = err
+            .downcast_ref::<NetError>()
+            .expect("typed NetError, not a stringly error");
+        let NetError::Timeout { addr: got, waited } = net;
+        assert_eq!(*got, addr);
+        assert!(*waited >= Duration::from_millis(50));
+        drop(hold.join());
+    }
+}

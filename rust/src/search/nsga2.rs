@@ -7,9 +7,11 @@
 //! All randomness flows through the injected [`Rng`].
 
 
+use anyhow::{Context, Result};
+
 use crate::nn::{Genome, SearchSpace};
 use crate::pareto::{crowding_distance, non_dominated_sort};
-use crate::util::Rng;
+use crate::util::{Json, Rng};
 
 /// A genome with its (minimised) objective vector.
 #[derive(Debug, Clone)]
@@ -18,6 +20,33 @@ pub struct EvaluatedIndividual {
     pub genome: Genome,
     /// Minimised objectives (accuracy enters negated).
     pub objectives: Vec<f64>,
+}
+
+impl EvaluatedIndividual {
+    /// Serialise for the search-loop checkpoint (non-finite objectives
+    /// follow the `util::Json` `null` convention).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("genome", self.genome.to_json()),
+            ("objectives", Json::nums(self.objectives.iter().copied())),
+        ])
+    }
+
+    /// Parse back from a checkpoint.
+    pub fn from_json(j: &Json) -> Result<EvaluatedIndividual> {
+        let objectives: Vec<f64> = j
+            .get("objectives")
+            .context("individual missing objectives")?
+            .items()
+            .iter()
+            .filter_map(Json::as_f64_or_nan)
+            .collect();
+        anyhow::ensure!(!objectives.is_empty(), "individual has an empty objective vector");
+        Ok(EvaluatedIndividual {
+            genome: Genome::from_json(j.get("genome").context("individual missing genome")?)?,
+            objectives,
+        })
+    }
 }
 
 /// Evolution parameters.
@@ -150,6 +179,13 @@ impl Nsga2 {
     /// Current elite pool (after the last `next_generation` call).
     pub fn parents(&self) -> &[EvaluatedIndividual] {
         &self.parents
+    }
+
+    /// Replace the elite pool wholesale — the checkpoint/resume path
+    /// restores the exact pool a snapshot captured, so selection pressure
+    /// continues from where the killed run stopped.
+    pub fn restore(&mut self, parents: Vec<EvaluatedIndividual>) {
+        self.parents = parents;
     }
 }
 

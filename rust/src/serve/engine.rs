@@ -22,11 +22,12 @@
 
 use std::collections::HashSet;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Condvar, Mutex, PoisonError};
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
+use crate::eval::lock_unpoisoned;
 use crate::nn::SUR_FEATS;
 use crate::surrogate::predictor::feature_key;
 use crate::surrogate::{ResourceEstimate, SurrogatePredictor};
@@ -149,7 +150,7 @@ impl<'a> SurrogateEngine<'a> {
 
         // ---- submit ----
         {
-            let mut st = self.state.lock().unwrap();
+            let mut st = lock_unpoisoned(&self.state);
             anyhow::ensure!(!st.stopping, "surrogate engine is shut down");
             let mut added = false;
             for (i, key) in keys.iter().enumerate() {
@@ -175,7 +176,7 @@ impl<'a> SurrogateEngine<'a> {
         }
 
         // ---- await ----
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_unpoisoned(&self.state);
         let mut resubmits = 0usize;
         loop {
             let mut waiting = false;
@@ -212,9 +213,14 @@ impl<'a> SurrogateEngine<'a> {
                 }
             }
             if !waiting {
-                return Ok(out.into_iter().map(|e| e.expect("resolved")).collect());
+                // every row either hit the memo or was awaited above, so
+                // an unresolved slot is a typed error, not a panic
+                return out
+                    .into_iter()
+                    .map(|e| e.context("surrogate estimate left a row unresolved"))
+                    .collect();
             }
-            st = self.completed.wait(st).unwrap();
+            st = self.completed.wait(st).unwrap_or_else(PoisonError::into_inner);
         }
     }
 
@@ -222,19 +228,22 @@ impl<'a> SurrogateEngine<'a> {
     /// the engine. Returns once [`shutdown`](Self::shutdown) is called
     /// and the pending rows have drained.
     pub fn run_flusher(&self) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_unpoisoned(&self.state);
         loop {
             if st.rows.is_empty() {
                 if st.stopping {
                     break;
                 }
-                st = self.submitted.wait(st).unwrap();
+                st = self.submitted.wait(st).unwrap_or_else(PoisonError::into_inner);
                 continue;
             }
             let age = st.first_at.map(|t| t.elapsed()).unwrap_or(Duration::ZERO);
             if st.rows.len() < self.cfg.max_rows && age < self.cfg.deadline && !st.stopping {
                 let remaining = self.cfg.deadline - age;
-                let (guard, _) = self.submitted.wait_timeout(st, remaining).unwrap();
+                let (guard, _) = self
+                    .submitted
+                    .wait_timeout(st, remaining)
+                    .unwrap_or_else(PoisonError::into_inner);
                 st = guard;
                 continue;
             }
@@ -244,7 +253,7 @@ impl<'a> SurrogateEngine<'a> {
             st.first_at = None;
             drop(st);
             let result = self.predictor.predict_batch(&rows);
-            st = self.state.lock().unwrap();
+            st = lock_unpoisoned(&self.state);
             st.in_flight.clear();
             self.flushes.fetch_add(1, Ordering::Relaxed);
             self.rows_flushed.fetch_add(rows.len(), Ordering::Relaxed);
@@ -264,7 +273,7 @@ impl<'a> SurrogateEngine<'a> {
     /// Stop accepting new requests and let the flusher drain and exit.
     /// Safe to call more than once.
     pub fn shutdown(&self) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_unpoisoned(&self.state);
         st.stopping = true;
         drop(st);
         self.submitted.notify_all();

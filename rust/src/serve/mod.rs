@@ -32,7 +32,10 @@
 //! `{"features": [72 floats]}` body bypasses genome encoding entirely.
 
 pub mod engine;
-pub mod http;
+/// HTTP framing now lives in the shared [`crate::net`] module (the TCP
+/// shard transport speaks the same wire format); re-exported here so
+/// `serve::http::request` keeps working for clients and tests.
+pub use crate::net as http;
 
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};

@@ -1,0 +1,224 @@
+//! Property-style fuzz of the shared HTTP framing parser (`net/`).
+//!
+//! Both services — the estimation server and the TCP shard transport —
+//! read untrusted bytes through `net::read_request`, so the parser must
+//! hold two properties against arbitrary input:
+//!
+//! 1. **No panics.** Malformed framing (truncated heads, bodies that
+//!    never arrive, binary garbage) surfaces as a typed `anyhow` error,
+//!    never an unwind.
+//! 2. **Bounded admission.** A parsed request never carries a body over
+//!    `MAX_BODY`, however large the declared `Content-Length`.
+//!
+//! Everything is seeded (xorshift64), so a failure reproduces exactly;
+//! the reader delivers bytes in randomly sized chunks to exercise split
+//! reads across the request line / header / body boundaries.
+
+use std::io::Read;
+
+use snac_pack::net::{read_request, MAX_BODY, MAX_HEAD};
+
+/// Tiny deterministic PRNG — the test must not depend on hash ordering
+/// or OS entropy, so a failing seed can be replayed verbatim.
+struct XorShift(u64);
+
+impl XorShift {
+    fn new(seed: u64) -> XorShift {
+        XorShift(seed.max(1))
+    }
+
+    fn next(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.0 = x;
+        x
+    }
+
+    /// Uniform in `0..n` (n > 0).
+    fn below(&mut self, n: usize) -> usize {
+        (self.next() % n as u64) as usize
+    }
+}
+
+/// A `Read` source that returns the payload in randomly sized chunks, so
+/// every parser state can land on a read boundary.
+struct SplitReader {
+    data: Vec<u8>,
+    pos: usize,
+    rng: XorShift,
+}
+
+impl SplitReader {
+    fn new(data: Vec<u8>, seed: u64) -> SplitReader {
+        SplitReader {
+            data,
+            pos: 0,
+            rng: XorShift::new(seed),
+        }
+    }
+}
+
+impl Read for SplitReader {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        if self.pos >= self.data.len() || buf.is_empty() {
+            return Ok(0);
+        }
+        let max = (self.data.len() - self.pos).min(buf.len());
+        let n = 1 + self.rng.below(max);
+        buf[..n].copy_from_slice(&self.data[self.pos..self.pos + n]);
+        self.pos += n;
+        Ok(n)
+    }
+}
+
+/// A syntactically valid request with randomised method, path, header
+/// noise, and body. Returns the raw bytes and the offset where the body
+/// starts (= length of the head incl. the blank line).
+fn valid_request(rng: &mut XorShift) -> (Vec<u8>, usize, String, String, String) {
+    let methods = ["GET", "POST", "PUT", "DELETE", "patch"];
+    let method = methods[rng.below(methods.len())];
+    let path = format!("/endpoint/{}", rng.below(1000));
+    let query = if rng.below(2) == 0 { "?q=1&r=2" } else { "" };
+    let body: String = (0..rng.below(4096))
+        .map(|_| char::from(b'a' + (rng.below(26) as u8)))
+        .collect();
+    let mut head = format!("{method} {path}{query} HTTP/1.1\r\n");
+    for i in 0..rng.below(8) {
+        head.push_str(&format!("X-Noise-{i}: {}\r\n", rng.below(100_000)));
+    }
+    head.push_str(&format!("Content-Length: {}\r\n\r\n", body.len()));
+    let body_start = head.len();
+    let mut raw = head.into_bytes();
+    raw.extend_from_slice(body.as_bytes());
+    (
+        raw,
+        body_start,
+        method.to_ascii_uppercase(),
+        path,
+        body,
+    )
+}
+
+/// Valid requests parse back to their fields through arbitrarily split
+/// reads.
+#[test]
+fn valid_requests_survive_split_reads() {
+    let mut rng = XorShift::new(0x5eed_0001);
+    for round in 0..200u64 {
+        let (raw, _, method, path, body) = valid_request(&mut rng);
+        let req = read_request(SplitReader::new(raw, 0xc0ffee ^ round))
+            .unwrap_or_else(|e| panic!("round {round}: valid request rejected: {e:#}"));
+        assert_eq!(req.method, method, "round {round}");
+        assert_eq!(req.path, path, "round {round}");
+        assert_eq!(req.body, body, "round {round}");
+    }
+}
+
+/// Truncating a request inside its body region is a typed framing error
+/// — the promised bytes never arrive, and the parser must say so rather
+/// than hang or panic.
+#[test]
+fn body_truncation_is_a_typed_error() {
+    let mut rng = XorShift::new(0x5eed_0002);
+    let mut exercised = 0usize;
+    for round in 0..300u64 {
+        let (raw, body_start, ..) = valid_request(&mut rng);
+        if raw.len() == body_start {
+            continue; // empty body: nothing to truncate
+        }
+        // cut strictly inside the body region
+        let cut = body_start + rng.below(raw.len() - body_start);
+        let err = read_request(SplitReader::new(raw[..cut].to_vec(), round))
+            .expect_err("a short body must not parse");
+        assert!(
+            format!("{err:#}").contains("request body"),
+            "round {round}: unexpected error: {err:#}"
+        );
+        exercised += 1;
+    }
+    assert!(exercised > 100, "the generator kept producing empty bodies");
+}
+
+/// Head-region truncation (mid request-line or mid-headers) never
+/// panics; when it parses at all, the admitted body stays bounded.
+#[test]
+fn head_truncation_never_panics() {
+    let mut rng = XorShift::new(0x5eed_0003);
+    for round in 0..300u64 {
+        let (raw, body_start, ..) = valid_request(&mut rng);
+        let cut = rng.below(body_start);
+        match read_request(SplitReader::new(raw[..cut].to_vec(), round)) {
+            Ok(req) => assert!(req.body.len() <= MAX_BODY),
+            Err(err) => {
+                let msg = format!("{err:#}");
+                assert!(!msg.is_empty(), "errors must carry context");
+            }
+        }
+    }
+}
+
+/// A `Content-Length` past the admission cap is refused up front —
+/// before any allocation of that size.
+#[test]
+fn oversized_content_length_is_refused() {
+    for declared in [MAX_BODY + 1, MAX_BODY * 16, usize::MAX / 2] {
+        let raw = format!("POST /big HTTP/1.1\r\nContent-Length: {declared}\r\n\r\n");
+        let err = read_request(SplitReader::new(raw.into_bytes(), 7)).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("exceeds"),
+            "declared {declared}: {err:#}"
+        );
+    }
+    // a non-numeric length is a parse error, not a zero default
+    let raw = b"POST / HTTP/1.1\r\nContent-Length: lots\r\n\r\n".to_vec();
+    let err = read_request(SplitReader::new(raw, 7)).unwrap_err();
+    assert!(format!("{err:#}").contains("Content-Length"), "{err:#}");
+}
+
+/// A head region larger than `MAX_HEAD` cannot pin memory: the parser
+/// stops reading at the cap and fails (or degrades to a body-less
+/// parse) instead of buffering the flood.
+#[test]
+fn header_floods_are_capped() {
+    // one giant request line, no terminator — the head budget exhausts
+    let raw = vec![b'A'; MAX_HEAD * 2];
+    let err = read_request(SplitReader::new(raw, 11)).unwrap_err();
+    assert!(format!("{err:#}").contains("path"), "{err:#}");
+
+    // endless headers after a valid request line: the cap truncates the
+    // flood; whatever parses must still respect the body bound
+    let mut raw = b"GET / HTTP/1.1\r\n".to_vec();
+    while raw.len() < MAX_HEAD * 2 {
+        raw.extend_from_slice(b"X-Flood: yes\r\n");
+    }
+    match read_request(SplitReader::new(raw, 11)) {
+        Ok(req) => assert!(req.body.len() <= MAX_BODY),
+        Err(err) => assert!(!format!("{err:#}").is_empty()),
+    }
+}
+
+/// A declared body that arrives as non-UTF-8 bytes is a typed error.
+#[test]
+fn non_utf8_bodies_are_typed_errors() {
+    let mut raw = b"POST /estimate HTTP/1.1\r\nContent-Length: 4\r\n\r\n".to_vec();
+    raw.extend_from_slice(&[0xff, 0xfe, 0x80, 0x81]);
+    let err = read_request(SplitReader::new(raw, 13)).unwrap_err();
+    assert!(format!("{err:#}").contains("UTF-8"), "{err:#}");
+}
+
+/// Pure seeded garbage — binary noise, control bytes, stray CRLFs —
+/// must never panic the parser, whatever it decides.
+#[test]
+fn random_garbage_never_panics() {
+    let mut rng = XorShift::new(0x5eed_0004);
+    for round in 0..500u64 {
+        let len = rng.below(2048);
+        let data: Vec<u8> = (0..len).map(|_| (rng.next() & 0xff) as u8).collect();
+        match read_request(SplitReader::new(data, round)) {
+            Ok(req) => assert!(req.body.len() <= MAX_BODY),
+            Err(_) => {}
+        }
+    }
+}

@@ -1,0 +1,166 @@
+//! Acceptance test for TCP-transport sharding: a driver hosting the
+//! task queue over `--listen`, served by real `snac-pack worker
+//! --connect` *processes* with no shared run directory, must produce a
+//! bit-identical trial database to the single-process run — only
+//! wall-clock timings may differ.
+//!
+//! This is the process-level complement to the in-process transport
+//! tests in `src/eval/tcp.rs`: it exercises the actual binary (ephemeral
+//! port binding, address scraping from the driver log, manifest fetch
+//! over HTTP, worker-side artifact resolution) over real sockets.
+
+use std::io::{BufRead, BufReader, Read};
+use std::path::{Path, PathBuf};
+use std::process::{Command, Stdio};
+
+use snac_pack::coordinator::TrialRecord;
+use snac_pack::nn::SearchSpace;
+
+fn out_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join("snac_tcp_fleet_itest")
+        .join(format!("{name}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// The micro search budget shared by both runs (quickstart preset, NAC
+/// objectives — no surrogate, so workers need no training detour).
+fn micro_args(out: &Path) -> Vec<String> {
+    [
+        "search",
+        "--preset",
+        "quickstart",
+        "--set",
+        "trials=6",
+        "--set",
+        "population=3",
+        "--set",
+        "epochs=1",
+        "--set",
+        "n_train=640",
+        "--set",
+        "n_val=256",
+        "--set",
+        "n_test=256",
+        "--out",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .chain([out.display().to_string()])
+    .collect()
+}
+
+/// The trial database with live timings zeroed — everything else must
+/// be bit-identical across dispatch transports.
+fn canonical_trials(path: &Path, space: &SearchSpace) -> String {
+    let records = TrialRecord::load_all(path, space)
+        .unwrap_or_else(|e| panic!("loading {}: {e:#}", path.display()));
+    assert!(!records.is_empty(), "{} is empty", path.display());
+    let rows: Vec<snac_pack::util::Json> = records
+        .into_iter()
+        .map(|mut r| {
+            r.train_seconds = 0.0;
+            r.to_json()
+        })
+        .collect();
+    snac_pack::util::Json::Arr(rows).to_string()
+}
+
+#[test]
+fn tcp_fleet_search_is_bit_identical_to_single_process() {
+    let single = out_dir("single");
+    let fleet = out_dir("fleet");
+
+    // reference: the same budget in one process
+    let reference = Command::new(env!("CARGO_BIN_EXE_snac-pack"))
+        .args(micro_args(&single))
+        .output()
+        .expect("spawn single-process search");
+    assert!(
+        reference.status.success(),
+        "single-process search failed:\n{}",
+        String::from_utf8_lossy(&reference.stderr)
+    );
+
+    // driver: TCP task server on an ephemeral port, zero local workers —
+    // every shard must travel over the wire to the external fleet
+    let mut driver = Command::new(env!("CARGO_BIN_EXE_snac-pack"))
+        .args(micro_args(&fleet))
+        .args([
+            "--shards",
+            "2",
+            "--listen",
+            "127.0.0.1:0",
+            "--set",
+            "spawn_workers=0",
+            "--workers",
+            "2",
+        ])
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawn TCP driver");
+
+    // scrape the bound address from the driver's startup log
+    let mut reader = BufReader::new(driver.stderr.take().expect("driver stderr piped"));
+    let mut log = String::new();
+    let addr = loop {
+        let mut line = String::new();
+        let n = reader.read_line(&mut line).expect("reading driver log");
+        log.push_str(&line);
+        if n == 0 {
+            let _ = driver.kill();
+            panic!("driver exited before announcing its address:\n{log}");
+        }
+        if let Some(rest) = line.split("tcp://").nth(1) {
+            break rest.trim().to_string();
+        }
+    };
+
+    // two external workers join over loopback — no shared filesystem
+    // state beyond the artifacts the manifest points at
+    let workers: Vec<_> = (0..2)
+        .map(|_| {
+            Command::new(env!("CARGO_BIN_EXE_snac-pack"))
+                .args(["worker", "--connect", &addr, "--workers", "1"])
+                .stderr(Stdio::piped())
+                .spawn()
+                .expect("spawn TCP worker")
+        })
+        .collect();
+
+    // drain the driver to completion (EOF = stderr closed = exit imminent)
+    reader.read_to_string(&mut log).expect("draining driver log");
+    let status = driver.wait().expect("driver exit status");
+    assert!(status.success(), "TCP driver failed:\n{log}");
+
+    let mut served = 0usize;
+    for w in workers {
+        let out = w.wait_with_output().expect("worker exit status");
+        let wlog = String::from_utf8_lossy(&out.stderr);
+        assert!(out.status.success(), "worker failed:\n{wlog}");
+        if wlog.contains("shutdown: served") {
+            served += 1;
+        }
+    }
+    assert_eq!(served, 2, "both workers reported serving on shutdown");
+
+    // the determinism contract holds across the wire: identical trial
+    // databases modulo wall-clock timings
+    let space = SearchSpace::table1();
+    assert_eq!(
+        canonical_trials(&single.join("trials.json"), &space),
+        canonical_trials(&fleet.join("trials.json"), &space),
+        "TCP-dispatched trial database must be bit-identical (timings excluded)"
+    );
+
+    // the dispatch genuinely ran over TCP
+    assert!(
+        log.contains("sharded dispatch:") && log.contains("tcp://"),
+        "driver log missing the TCP dispatch summary:\n{log}"
+    );
+
+    for dir in [&single, &fleet] {
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}
