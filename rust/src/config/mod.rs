@@ -77,6 +77,15 @@ pub struct ServeConfig {
     /// (`--batch-deadline-ms`): how long the first queued estimate waits
     /// for co-travellers before a partial batch executes.
     pub batch_deadline_ms: u64,
+    /// Connection-worker threads (`--pool-size`; `0` = auto: the
+    /// available parallelism, clamped to 2..=32). Each worker owns one
+    /// connection at a time, so this bounds concurrently-served
+    /// keep-alive clients.
+    pub pool_size: usize,
+    /// Admission-queue capacity (`--queue-depth`; `0` = auto: four per
+    /// worker). Accepted connections wait here for a free worker; when
+    /// the queue is full the server sheds with a fast `503`.
+    pub queue_depth: usize,
 }
 
 impl Default for ServeConfig {
@@ -84,6 +93,8 @@ impl Default for ServeConfig {
         ServeConfig {
             port: 7878,
             batch_deadline_ms: 2,
+            pool_size: 0,
+            queue_depth: 0,
         }
     }
 }
@@ -267,6 +278,8 @@ impl Preset {
                 self.serve.batch_deadline_ms =
                     value.parse().context("batch_deadline_ms expects an integer")?
             }
+            "pool_size" => self.serve.pool_size = uint()?,
+            "queue_depth" => self.serve.queue_depth = uint()?,
             "shards" => self.search.shards = uint()?,
             "threads" => self.search.threads = uint()?,
             "verify_plans" => {
@@ -297,7 +310,7 @@ impl Preset {
     /// over `by_name` — so the codec's surface is the override surface by
     /// construction, and fields outside it (e.g. surrogate learning rate)
     /// stay pinned to the named preset on both ends.
-    const OVERRIDE_KEYS: [&str; 25] = [
+    const OVERRIDE_KEYS: [&str; 27] = [
         "trials",
         "population",
         "epochs",
@@ -315,6 +328,8 @@ impl Preset {
         "cache_path",
         "port",
         "batch_deadline_ms",
+        "pool_size",
+        "queue_depth",
         "shards",
         "threads",
         "verify_plans",
@@ -345,6 +360,8 @@ impl Preset {
             "cache_path" => self.cache_path.clone(),
             "port" => Some(self.serve.port.to_string()),
             "batch_deadline_ms" => Some(self.serve.batch_deadline_ms.to_string()),
+            "pool_size" => s(self.serve.pool_size),
+            "queue_depth" => s(self.serve.queue_depth),
             "shards" => s(self.search.shards),
             "threads" => s(self.search.threads),
             "verify_plans" => Some(if self.search.verify_plans { "1" } else { "0" }.to_string()),
@@ -452,6 +469,13 @@ mod tests {
         p.set("batch_deadline_ms", "25").unwrap();
         assert_eq!(p.serve.port, 0);
         assert_eq!(p.serve.batch_deadline_ms, 25);
+        assert_eq!(p.serve.pool_size, 0, "pool sizing defaults to auto");
+        assert_eq!(p.serve.queue_depth, 0, "queue sizing defaults to auto");
+        p.set("pool_size", "3").unwrap();
+        p.set("queue_depth", "9").unwrap();
+        assert_eq!(p.serve.pool_size, 3);
+        assert_eq!(p.serve.queue_depth, 9);
+        assert!(p.set("pool_size", "many").is_err());
         assert!(p.set("bogus", "1").is_err());
         assert!(p.set("spawn_workers", "lots").is_err());
         assert!(p.set("port", "70000").is_err(), "port must fit a u16");
@@ -477,6 +501,8 @@ mod tests {
         p.set("run_dir", "/tmp/rd").unwrap();
         p.set("port", "9191").unwrap();
         p.set("batch_deadline_ms", "7").unwrap();
+        p.set("pool_size", "4").unwrap();
+        p.set("queue_depth", "16").unwrap();
         p.set("checkpoint_interval", "3").unwrap();
         p.set("listen", "0.0.0.0:7979").unwrap();
         p.set("connect", "driver.local:7979").unwrap();
@@ -500,6 +526,8 @@ mod tests {
         assert_eq!(back.run_dir.as_deref(), Some("/tmp/rd"));
         assert_eq!(back.serve.port, 9191);
         assert_eq!(back.serve.batch_deadline_ms, 7);
+        assert_eq!(back.serve.pool_size, 4);
+        assert_eq!(back.serve.queue_depth, 16);
         assert_eq!(back.search.checkpoint_interval, 3);
         assert_eq!(back.listen.as_deref(), Some("0.0.0.0:7979"));
         assert_eq!(back.connect.as_deref(), Some("driver.local:7979"));

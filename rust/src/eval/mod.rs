@@ -82,7 +82,7 @@ pub use shard::{
     StageSpec, WorkerOptions, WorkerSummary,
 };
 pub use supernet::SupernetEvaluator;
-pub use tcp::{TcpHost, TcpWorker};
+pub use tcp::{ShardAuthError, TcpHost, TcpWorker};
 pub use transport::{ClaimedTask, FsTransport, LeaseStatus, RunDir, ShardTransport};
 
 /// Everything a single trial evaluation produces.

@@ -11,7 +11,8 @@
 //! a [`TcpWorker`] — a thin HTTP client — in the same
 //! [`super::run_worker_on`] loop the filesystem transport uses.
 //!
-//! Endpoints (all JSON, one request per connection):
+//! Endpoints (all JSON, served over persistent keep-alive connections —
+//! a worker claims, heartbeats, and publishes over one socket):
 //!
 //! | method+path        | body                 | response                           |
 //! |--------------------|----------------------|------------------------------------|
@@ -21,6 +22,13 @@
 //! | `POST /shard/done` | `{"name"}`           | `{}`                               |
 //! | `GET /run.json`    | —                    | manifest text (404 when none)      |
 //!
+//! **Admission control:** every `/shard/*` request must carry the run's
+//! shared token as an `Authorization: Bearer` header. The driver mints
+//! the token at launch and prints it with the join command; a mismatch
+//! is a `403` that the worker surfaces as a typed [`ShardAuthError`]
+//! (fail loudly — a wrong token never fixes itself). `GET /run.json`
+//! stays open so `curl` can inspect a run zero-setup.
+//!
 //! The exactly-once properties the protocol core relies on fall out of
 //! one mutex over the host state: a claim atomically moves the task from
 //! the queue into the claims table (so the task travels with the claim,
@@ -29,7 +37,7 @@
 //! claim/heartbeat request, so worker clocks never matter.
 //!
 //! A worker whose driver dies does not hang: every request runs under
-//! [`crate::net::request_with_timeout`], and after
+//! an overall [`crate::net::HttpClient`] deadline, and after
 //! [`MAX_CONSECUTIVE_FAILURES`] straight connection failures the worker
 //! treats the run as over and exits cleanly.
 
@@ -71,6 +79,9 @@ struct HostShared {
     inner: Mutex<HostInner>,
     shutdown: AtomicBool,
     manifest: Option<String>,
+    /// The run's shared bearer token; `/shard/*` requests without it
+    /// are refused with `403`.
+    token: String,
 }
 
 impl HostShared {
@@ -110,8 +121,44 @@ impl HostShared {
     }
 }
 
+/// A worker's run token was refused by the driver. This never resolves
+/// by retrying, so worker loops propagate it and fail loudly instead of
+/// polling forever against a fleet they cannot join.
+#[derive(Debug)]
+pub struct ShardAuthError {
+    /// The driver that refused the token.
+    pub addr: String,
+    /// The driver's error body.
+    pub detail: String,
+}
+
+impl std::fmt::Display for ShardAuthError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "driver at {} refused this worker's run token (HTTP 403): {} — start the worker \
+             with the `--token` value the driver printed at launch",
+            self.addr, self.detail
+        )
+    }
+}
+
+impl std::error::Error for ShardAuthError {}
+
 /// Route one parsed request against the host state.
 fn route(shared: &HostShared, req: &net::Request) -> (u16, String) {
+    // admission control: shard mutations require this run's token
+    if req.path.starts_with("/shard/") && req.bearer.as_deref() != Some(shared.token.as_str()) {
+        let detail = if req.bearer.is_some() { "token mismatch" } else { "missing bearer token" };
+        return (
+            403,
+            Json::obj(vec![(
+                "error",
+                Json::Str(format!("shard endpoints require this run's token ({detail})")),
+            )])
+            .to_string(),
+        );
+    }
     let with_name = |handler: &dyn Fn(&str) -> (u16, String)| -> (u16, String) {
         match Json::parse(&req.body)
             .ok()
@@ -173,16 +220,40 @@ fn route(shared: &HostShared, req: &net::Request) -> (u16, String) {
     }
 }
 
-/// Serve one connection: read, route, respond, close.
-fn serve_connection(shared: &HostShared, mut stream: TcpStream) {
+/// Serve one connection for its whole life: a worker claims,
+/// heartbeats, and publishes over one persistent socket (closed on
+/// `Connection: close`, a 10s idle, or a framing fault).
+fn serve_connection(shared: &HostShared, stream: TcpStream) {
     let _ = stream.set_nonblocking(false);
     let _ = stream.set_read_timeout(Some(Duration::from_secs(10)));
     let _ = stream.set_write_timeout(Some(Duration::from_secs(10)));
-    let (status, body) = match net::read_request(&mut stream) {
-        Ok(req) => route(shared, &req),
-        Err(e) => (400, format!(r#"{{"error":"bad request: {e:#}"}}"#)),
-    };
-    let _ = net::write_response(&mut stream, status, &body);
+    let _ = stream.set_nodelay(true);
+    let mut reader = net::RequestReader::new(&stream);
+    loop {
+        match reader.next_request() {
+            Ok(req) => {
+                let (status, body) = route(shared, &req);
+                let mut w = &stream;
+                if net::write_response(&mut w, status, &body, req.keep_alive).is_err()
+                    || !req.keep_alive
+                {
+                    return;
+                }
+            }
+            Err(e) => {
+                if !net::quiet_close(&e) {
+                    let body = Json::obj(vec![(
+                        "error",
+                        Json::Str(format!("bad request: {e:#}")),
+                    )])
+                    .to_string();
+                    let mut w = &stream;
+                    let _ = net::write_response(&mut w, 400, &body, false);
+                }
+                return;
+            }
+        }
+    }
 }
 
 /// The driver side of the TCP transport: owns the queue state and the
@@ -198,8 +269,10 @@ pub struct TcpHost {
 impl TcpHost {
     /// Bind `bind` (e.g. `127.0.0.1:0` for an ephemeral port) and start
     /// serving the task queue. `manifest` is the `run.json` text served
-    /// to joining workers, when the run has one.
-    pub fn listen(bind: &str, manifest: Option<String>) -> Result<TcpHost> {
+    /// to joining workers, when the run has one; `token` is the run's
+    /// shared bearer token — only workers presenting it may claim,
+    /// heartbeat, or publish.
+    pub fn listen(bind: &str, manifest: Option<String>, token: &str) -> Result<TcpHost> {
         let listener =
             TcpListener::bind(bind).with_context(|| format!("binding task server on {bind}"))?;
         listener
@@ -210,6 +283,7 @@ impl TcpHost {
             inner: Mutex::new(HostInner::default()),
             shutdown: AtomicBool::new(false),
             manifest,
+            token: token.to_string(),
         });
         let stop = Arc::new(AtomicBool::new(false));
         let accept_thread = {
@@ -344,26 +418,33 @@ impl ShardTransport for TcpHost {
     }
 }
 
-/// The worker side of the TCP transport: a thin HTTP client over the
-/// shared framing. All requests are bounded by the configured timeout,
-/// and [`MAX_CONSECUTIVE_FAILURES`] straight connection failures flip
-/// the transport into a shutdown state — a worker never hangs on (or
-/// spins against) a dead driver.
+/// The worker side of the TCP transport: a persistent keep-alive
+/// [`net::HttpClient`] over the shared framing (claims, heartbeats, and
+/// results ride one socket). All requests are bounded by the configured
+/// overall deadline, and [`MAX_CONSECUTIVE_FAILURES`] straight
+/// connection failures flip the transport into a shutdown state — a
+/// worker never hangs on (or spins against) a dead driver. A `403`
+/// (wrong run token) is a typed [`ShardAuthError`] instead: that never
+/// resolves by retrying.
 pub struct TcpWorker {
     addr: String,
-    timeout: Duration,
+    /// The persistent connection, shared by the worker loop and its
+    /// heartbeat thread (requests are tiny; serializing them on one
+    /// socket costs less than a connection per call).
+    client: Mutex<net::HttpClient>,
     failures: AtomicUsize,
     dead: AtomicBool,
 }
 
 impl TcpWorker {
-    /// A client for the task server at `addr` (`HOST:PORT`). `timeout`
-    /// bounds every request round trip; keep it under the driver's lease
-    /// timeout so a retried heartbeat still lands in time.
-    pub fn connect(addr: &str, timeout: Duration) -> TcpWorker {
+    /// A client for the task server at `addr` (`HOST:PORT`) presenting
+    /// `token` on every shard request. `timeout` bounds every request
+    /// round trip; keep it under the driver's lease timeout so a
+    /// retried heartbeat still lands in time.
+    pub fn connect(addr: &str, timeout: Duration, token: &str) -> TcpWorker {
         TcpWorker {
             addr: addr.to_string(),
-            timeout,
+            client: Mutex::new(net::HttpClient::new(addr, timeout).bearer(token)),
             failures: AtomicUsize::new(0),
             dead: AtomicBool::new(false),
         }
@@ -383,14 +464,20 @@ impl TcpWorker {
     /// POST returning the parsed response. `Ok(None)` = connection-level
     /// failure (counted toward the dead-driver threshold; the caller
     /// retries on its poll cadence). `Err` = the driver answered but
-    /// violated the protocol — that never resolves itself, so it
-    /// propagates and fails the worker loudly.
+    /// refused the run token ([`ShardAuthError`]) or violated the
+    /// protocol — neither resolves itself, so they propagate and fail
+    /// the worker loudly.
     fn post(&self, path: &str, body: &str) -> Result<Option<Json>> {
-        match net::request_with_timeout(&self.addr, "POST", path, Some(body), self.timeout) {
+        let outcome = lock_unpoisoned(&self.client).request("POST", path, Some(body));
+        match outcome {
             Err(e) => {
                 self.note_failure(&e);
                 Ok(None)
             }
+            Ok((403, text)) => Err(anyhow::Error::new(ShardAuthError {
+                addr: self.addr.clone(),
+                detail: text,
+            })),
             Ok((status, text)) => {
                 self.failures.store(0, Ordering::SeqCst);
                 anyhow::ensure!(
@@ -417,9 +504,9 @@ impl ShardTransport for TcpWorker {
     }
 
     fn manifest(&self) -> Result<Option<String>> {
-        let (status, body) =
-            net::request_with_timeout(&self.addr, "GET", "/run.json", None, self.timeout)
-                .with_context(|| format!("fetching run manifest from {}", self.addr))?;
+        let (status, body) = lock_unpoisoned(&self.client)
+            .request("GET", "/run.json", None)
+            .with_context(|| format!("fetching run manifest from {}", self.addr))?;
         match status {
             200 => Ok(Some(body)),
             404 => Ok(None),
@@ -587,10 +674,18 @@ mod tests {
     /// fetch, claim, heartbeat, first-writer-wins result, done.
     #[test]
     fn host_and_worker_speak_the_wire_protocol() {
-        let host = TcpHost::listen("127.0.0.1:0", Some("{\"preset\":\"x\"}".to_string())).unwrap();
-        let worker = TcpWorker::connect(&host.addr().to_string(), Duration::from_secs(5));
+        let host =
+            TcpHost::listen("127.0.0.1:0", Some("{\"preset\":\"x\"}".to_string()), "tok-wire")
+                .unwrap();
+        let worker = TcpWorker::connect(&host.addr().to_string(), Duration::from_secs(5), "tok-wire");
 
         assert_eq!(worker.manifest().unwrap().as_deref(), Some("{\"preset\":\"x\"}"));
+
+        // the manifest stays open (zero-setup inspection needs no token)
+        let (status, body) =
+            net::request(&host.addr().to_string(), "GET", "/run.json", None).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, "{\"preset\":\"x\"}");
 
         // empty queue → no claim
         assert!(worker.claim_next().unwrap().is_none());
@@ -633,6 +728,36 @@ mod tests {
         assert!(worker.is_shutdown());
     }
 
+    /// Admission control: a worker with the wrong run token is refused
+    /// with a typed [`ShardAuthError`] on every shard endpoint, the
+    /// queue state is untouched, and the right token still claims.
+    #[test]
+    fn mismatched_run_token_is_a_typed_rejection() {
+        let host = TcpHost::listen("127.0.0.1:0", None, "right-token").unwrap();
+        let addr = host.addr().to_string();
+        host.publish_task("tok-b0000-s00.json", "t").unwrap();
+
+        let wrong = TcpWorker::connect(&addr, Duration::from_secs(5), "wrong-token");
+        let err = wrong.claim_next().unwrap_err();
+        let auth = err
+            .downcast_ref::<ShardAuthError>()
+            .unwrap_or_else(|| panic!("expected ShardAuthError, got {err:#}"));
+        assert_eq!(auth.addr, addr);
+        let err = wrong.publish_result("tok-b0000-s00.json", "{}").unwrap_err();
+        assert!(err.downcast_ref::<ShardAuthError>().is_some(), "{err:#}");
+
+        // a tokenless client is refused too (heartbeat shares the gate)
+        let (status, body) =
+            net::request(&addr, "POST", "/shard/heartbeat", Some("{\"name\":\"x\"}")).unwrap();
+        assert_eq!(status, 403, "{body}");
+        assert!(body.contains("missing bearer token"), "{body}");
+
+        // the rejected claim consumed nothing: the right token gets it
+        let right = TcpWorker::connect(&addr, Duration::from_secs(5), "right-token");
+        let claimed = right.claim_next().unwrap().expect("task still queued");
+        assert_eq!(claimed.name, "tok-b0000-s00.json");
+    }
+
     /// The acceptance matrix over TCP: the micro search at
     /// `shards ∈ {1,2,4} × workers ∈ {1,2}` — with workers talking to the
     /// driver through real sockets — produces bit-identical records to
@@ -651,7 +776,8 @@ mod tests {
 
         for shards in [1usize, 2, 4] {
             for workers in [1usize, 2] {
-                let host: Arc<TcpHost> = Arc::new(TcpHost::listen("127.0.0.1:0", None).unwrap());
+                let host: Arc<TcpHost> =
+                    Arc::new(TcpHost::listen("127.0.0.1:0", None, "tok-matrix").unwrap());
                 let addr = host.addr().to_string();
                 let stage = StageSpec {
                     objectives: ObjectiveKind::nac_set(),
@@ -671,8 +797,11 @@ mod tests {
                         let space = space.clone();
                         let addr = addr.clone();
                         s.spawn(move || {
-                            let client: Arc<dyn ShardTransport> =
-                                Arc::new(TcpWorker::connect(&addr, Duration::from_secs(5)));
+                            let client: Arc<dyn ShardTransport> = Arc::new(TcpWorker::connect(
+                                &addr,
+                                Duration::from_secs(5),
+                                "tok-matrix",
+                            ));
                             run_worker_on(client, &worker_opts(), |_stage, reqs| {
                                 reqs.iter()
                                     .map(|req| {
@@ -720,11 +849,11 @@ mod tests {
         let addr = {
             // bind, learn the port, and close the listener again: nothing
             // serves this address afterwards
-            let host = TcpHost::listen("127.0.0.1:0", None).unwrap();
+            let host = TcpHost::listen("127.0.0.1:0", None, "tok-dead").unwrap();
             host.addr().to_string()
         };
         let client: Arc<dyn ShardTransport> =
-            Arc::new(TcpWorker::connect(&addr, Duration::from_millis(50)));
+            Arc::new(TcpWorker::connect(&addr, Duration::from_millis(50), "tok-dead"));
         let t0 = Instant::now();
         let summary = run_worker_on(client, &worker_opts(), |_stage, _reqs| Vec::new()).unwrap();
         assert_eq!(summary.shards, 0);

@@ -36,7 +36,7 @@ use snac_pack::hls::{synthesize, FpgaDevice, HlsConfig, NetworkSpec};
 use snac_pack::nn::{Genome, SearchSpace};
 use snac_pack::objectives::{ObjectiveContext, ObjectiveKind};
 use snac_pack::runtime::Runtime;
-use snac_pack::serve::{self, EngineConfig, ServeContext, SurrogateEngine};
+use snac_pack::serve::{self, EngineConfig, ServeContext, ServeMetrics, ServeTuning, SurrogateEngine};
 use snac_pack::surrogate::{train_surrogate, SurrogateParams, SurrogatePredictor};
 use snac_pack::trainer::TrainConfig;
 use snac_pack::util::Json;
@@ -54,6 +54,12 @@ struct Cli {
     /// Raw `--workers` value when one was passed (the `worker`
     /// subcommand overrides the manifest's preset with it).
     workers_flag: Option<usize>,
+    /// `--token TOK`: the shared bearer token gating `/shard/*` on a TCP
+    /// run. The driver mints one when the flag is absent and prints it;
+    /// `worker --connect` requires it. Deliberately not a preset key —
+    /// the manifest is served unauthenticated, so the token must travel
+    /// out-of-band.
+    token: Option<String>,
 }
 
 impl Cli {
@@ -75,8 +81,9 @@ fn parse_cli() -> Result<Cli> {
              [--objectives acc,bops] [--workers N] [--threads N] \
              [--verify-plans 0|1] [--cache-path FILE] \
              [--shards N] [--run-dir DIR] [--listen HOST:PORT] \
-             [--connect HOST:PORT] [--checkpoint-interval N] \
-             [--port N] [--batch-deadline-ms N] [--set key=value ...]\n\
+             [--connect HOST:PORT] [--token TOK] [--checkpoint-interval N] \
+             [--port N] [--batch-deadline-ms N] [--pool-size N] \
+             [--queue-depth N] [--set key=value ...]\n\
              --preset picks the base regardless of position; \
              --workers/--cache-path/--set overrides then apply left to right\n\
              --threads N runs the interpreter's dot-general kernels on N \
@@ -93,14 +100,20 @@ fn parse_cli() -> Result<Cli> {
              bit-identical to the in-process run\n\
              --listen HOST:PORT serves the shard queue over TCP instead of \
              a shared run directory; workers on any machine join with \
-             `snac-pack worker --connect HOST:PORT` (HOST:0 binds an \
-             ephemeral port, printed on startup)\n\
+             `snac-pack worker --connect HOST:PORT --token TOK` (HOST:0 \
+             binds an ephemeral port, printed on startup; the driver \
+             mints TOK unless --token pins it, and prints the exact join \
+             command)\n\
              --checkpoint-interval N snapshots the search state every N \
              generations so a killed driver resumes mid-run with a \
              bit-identical trial database (0 = off)\n\
              serve exposes the trained surrogate as an HTTP estimation \
              service on 127.0.0.1:--port (0 = ephemeral), micro-batching \
-             concurrent requests with a --batch-deadline-ms flush deadline"
+             concurrent requests with a --batch-deadline-ms flush \
+             deadline; --pool-size bounds the connection workers and \
+             --queue-depth the admission queue (0 = auto for both; a \
+             full queue sheds with a fast 503), with live counters on \
+             GET /metrics"
         );
     };
     let mut preset = Preset::by_name("ci")?;
@@ -112,6 +125,7 @@ fn parse_cli() -> Result<Cli> {
     let mut artifacts: Option<PathBuf> = None;
     let mut objectives = ObjectiveKind::nac_set();
     let mut workers_flag = None;
+    let mut token = None;
     // --preset resolves first so `--workers 8 --preset paper` keeps the 8:
     // the preset is the base, every other flag is an override on top.
     let mut i = 1;
@@ -162,6 +176,7 @@ fn parse_cli() -> Result<Cli> {
             "--connect" => preset
                 .set("connect", value()?)
                 .context("--connect expects HOST:PORT")?,
+            "--token" => token = Some(value()?.clone()),
             "--checkpoint-interval" => preset
                 .set("checkpoint_interval", value()?)
                 .context("--checkpoint-interval expects a generation count")?,
@@ -171,6 +186,12 @@ fn parse_cli() -> Result<Cli> {
             "--batch-deadline-ms" => preset
                 .set("batch_deadline_ms", value()?)
                 .context("--batch-deadline-ms expects milliseconds")?,
+            "--pool-size" => preset
+                .set("pool_size", value()?)
+                .context("--pool-size expects a worker count (0 = auto)")?,
+            "--queue-depth" => preset
+                .set("queue_depth", value()?)
+                .context("--queue-depth expects a connection count (0 = auto)")?,
             "--set" => {
                 let kv = value()?;
                 let (k, v) = kv
@@ -189,6 +210,7 @@ fn parse_cli() -> Result<Cli> {
         artifacts,
         objectives,
         workers_flag,
+        token,
     })
 }
 
@@ -214,8 +236,10 @@ impl ShardFleet {
     /// Prepare the dispatch medium (run directory + `run.json`, or a TCP
     /// task server with the manifest served over HTTP) and spawn the
     /// local workers. `preset.spawn_workers`: `None` = one worker per
-    /// shard; `Some(0)` = none (externally managed workers).
-    fn launch(preset: &Preset, artifacts: &Path) -> Result<ShardFleet> {
+    /// shard; `Some(0)` = none (externally managed workers). For a TCP
+    /// run, `token` pins the shared bearer token (`--token`); `None`
+    /// mints a fresh per-run one, printed with the join command.
+    fn launch(preset: &Preset, artifacts: &Path, token: Option<&str>) -> Result<ShardFleet> {
         // absolute artifacts path: externally started workers may run
         // from any cwd, so a relative fixture-fallback path must not
         // leak into the manifest verbatim
@@ -228,15 +252,37 @@ impl ShardFleet {
         ]);
 
         let (backend, join_args, medium) = if let Some(bind) = preset.listen.as_deref() {
-            let host = Arc::new(TcpHost::listen(bind, Some(manifest.to_string()))?);
-            // external workers (and the TCP-fleet test) scrape this line
-            // for the bound address — HOST:0 binds an ephemeral port
+            let minted;
+            let token = match token {
+                Some(t) => t,
+                None => {
+                    // pid+millis, the run_tag scheme: unguessable tokens
+                    // are not the goal (use --token for that) — keeping
+                    // a stray worker from a *previous* run out is
+                    let millis = std::time::SystemTime::now()
+                        .duration_since(std::time::UNIX_EPOCH)
+                        .map(|d| d.as_millis())
+                        .unwrap_or(0);
+                    minted = format!("{:x}-{millis:x}", std::process::id());
+                    &minted
+                }
+            };
+            let host = Arc::new(TcpHost::listen(bind, Some(manifest.to_string()), token)?);
+            // external workers (and the TCP-fleet test) scrape these two
+            // lines: the token first, then the bound address on its own
+            // line — HOST:0 binds an ephemeral port
+            eprintln!("[driver] run token: {token}");
             eprintln!("[driver] task server listening on tcp://{}", host.addr());
             let addr = host.addr().to_string();
-            let join = format!("snac-pack worker --connect {addr}");
+            let join = format!("snac-pack worker --connect {addr} --token {token}");
             (
                 FleetBackend::Tcp(host),
-                vec!["--connect".to_string(), addr],
+                vec![
+                    "--connect".to_string(),
+                    addr,
+                    "--token".to_string(),
+                    token.to_string(),
+                ],
                 join,
             )
         } else {
@@ -355,9 +401,10 @@ fn worker_main(run_dir: &Path, workers_flag: Option<usize>) -> Result<()> {
 /// The `worker --connect` subcommand: fetch the run manifest from a TCP
 /// driver, then serve shards over the wire until shutdown. No shared
 /// filesystem is needed — only the driver's artifacts path must also
-/// resolve on this machine.
-fn worker_connect(addr: &str, workers_flag: Option<usize>) -> Result<()> {
-    let transport = Arc::new(TcpWorker::connect(addr, Duration::from_secs(10)));
+/// resolve on this machine, and `--token` must carry the run token the
+/// driver printed at launch.
+fn worker_connect(addr: &str, workers_flag: Option<usize>, token: &str) -> Result<()> {
+    let transport = Arc::new(TcpWorker::connect(addr, Duration::from_secs(10), token));
     // externally started workers may race the driver's startup: poll for
     // the manifest briefly instead of failing on connection order
     let mut text = None;
@@ -510,7 +557,11 @@ fn main() -> Result<()> {
     match cli.command.as_str() {
         "worker" => {
             if let Some(addr) = cli.preset.connect.clone() {
-                worker_connect(&addr, cli.workers_flag)?;
+                let token = cli.token.as_deref().context(
+                    "worker --connect needs --token TOK — use the run token the \
+                     driver printed at launch (`[driver] run token: ...`)",
+                )?;
+                worker_connect(&addr, cli.workers_flag, token)?;
             } else {
                 let run_dir = cli.preset.run_dir.clone().context(
                     "the worker subcommand needs --run-dir DIR (shared filesystem) \
@@ -537,7 +588,7 @@ fn main() -> Result<()> {
             // dropped (= shutdown + reap) when this arm finishes, success
             // or error — workers never outlive the driver
             let fleet = (cli.preset.search.shards > 0)
-                .then(|| ShardFleet::launch(&cli.preset, &artifacts))
+                .then(|| ShardFleet::launch(&cli.preset, &artifacts, cli.token.as_deref()))
                 .transpose()?;
             let transport = fleet.as_ref().and_then(|f| f.transport());
             let summary =
@@ -575,13 +626,13 @@ fn main() -> Result<()> {
                 cli.preset.data.seed,
             );
             let fleet = sharded
-                .then(|| ShardFleet::launch(&cli.preset, &artifacts))
+                .then(|| ShardFleet::launch(&cli.preset, &artifacts, cli.token.as_deref()))
                 .transpose()?;
             // in sharded mode the workers train the surrogate themselves
             // (deterministically, from the same preset seed), so the
             // driver skips it
             let sur = if !sharded && ObjectiveKind::needs_surrogate(&cli.objectives) {
-                let rt = rt.as_ref().expect("runtime loaded for non-sharded search");
+                let rt = rt.as_ref().context("runtime loaded for non-sharded search")?;
                 let (p, mse) = train_surrogate(
                     rt,
                     &space,
@@ -641,7 +692,7 @@ fn main() -> Result<()> {
                     },
                 )?
             } else {
-                let rt = rt.as_ref().expect("runtime loaded for non-sharded search");
+                let rt = rt.as_ref().context("runtime loaded for non-sharded search")?;
                 coordinator::global_search(rt, &ds, &space, cfg)?
             };
             drop(fleet);
@@ -700,6 +751,12 @@ fn main() -> Result<()> {
                 bits: cli.preset.local.bits,
                 sparsity: cli.preset.local.target_sparsity,
                 platform: rt.platform(),
+                metrics: ServeMetrics::new(),
+            };
+            let tuning = ServeTuning {
+                pool_size: cli.preset.serve.pool_size,
+                queue_depth: cli.preset.serve.queue_depth,
+                ..Default::default()
             };
             // the smoke client scrapes this line for the ephemeral port —
             // flush it through before blocking in the accept loop
@@ -707,14 +764,20 @@ fn main() -> Result<()> {
             use std::io::Write as _;
             std::io::stdout().flush().ok();
             eprintln!(
-                "[serve] endpoints: GET /healthz | POST /estimate | \
+                "[serve] endpoints: GET /healthz | GET /metrics | POST /estimate | \
                  POST /estimate/batch | POST /shutdown \
-                 (batch deadline {}ms, device {})",
-                cli.preset.serve.batch_deadline_ms, device.name
+                 (batch deadline {}ms, {} workers, queue depth {}, device {})",
+                cli.preset.serve.batch_deadline_ms,
+                tuning.resolved_pool(),
+                tuning.resolved_depth(),
+                device.name
             );
-            serve::serve(&ctx, listener)?;
+            serve::serve(&ctx, listener, &tuning)?;
             eprintln!(
-                "[serve] shutdown: {} flushes, {} rows, {} interpreter executions",
+                "[serve] shutdown: {} requests ({} shed), {} flushes, {} rows, \
+                 {} interpreter executions",
+                ctx.metrics.requests(),
+                ctx.metrics.shed_count(),
                 engine.flushes(),
                 engine.rows_flushed(),
                 predictor.executions()

@@ -1,13 +1,16 @@
 //! Shared std-only HTTP/1.1 framing.
 //!
 //! Extracted from `serve/http.rs` so the estimation service (`serve/`)
-//! and the TCP shard transport (`eval/tcp.rs`) speak one wire format:
-//! a blocking request reader, a response writer, and a one-shot client.
-//! One request per connection (`Connection: close`), bodies framed by
-//! `Content-Length` — exactly what a JSON endpoint needs and nothing
-//! more. The request reader is generic over any [`Read`] source, so the
-//! framing parser is fuzzable without sockets (`tests/net_robustness.rs`
-//! drives it with truncated, oversized, and split-read inputs).
+//! and the TCP shard transport (`eval/tcp.rs`) speak one wire format.
+//! Connections are persistent: [`RequestReader`] parses many requests
+//! per socket (honoring `Connection: keep-alive`/`close`), responses
+//! carry explicit `Content-Length` framing, and [`HttpClient`] reuses
+//! one connection across requests with an overall per-request deadline.
+//! Bodies are framed by `Content-Length` only — exactly what a JSON
+//! endpoint needs and nothing more. The request reader is generic over
+//! any [`Read`] source, so the framing parser is fuzzable without
+//! sockets (`tests/net_robustness.rs` drives it with truncated,
+//! pipelined, oversized, and split-read inputs).
 
 use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
 use std::net::{TcpStream, ToSocketAddrs};
@@ -15,20 +18,20 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
-/// Largest request body the server will read (a full `/estimate/batch`
-/// of a few thousand genomes — or a shard task file of forked RNG
-/// states — fits in well under this).
+/// Largest request or response body either side will read (a full
+/// `/estimate/batch` of a few thousand genomes — or a shard task file
+/// of forked RNG states — fits in well under this).
 pub const MAX_BODY: usize = 8 << 20;
 
-/// Largest request line + header block the server will read. Bounding
+/// Largest request line + header block either side will read. Bounding
 /// the whole pre-body region (rather than per line) also caps header
-/// count, so a client streaming endless bytes cannot grow server
-/// memory or pin a connection thread.
+/// count, so a peer streaming endless bytes cannot grow memory or pin
+/// a connection thread.
 pub const MAX_HEAD: usize = 64 << 10;
 
-/// Read timeout the convenience [`request`] client uses; callers with a
+/// Deadline the convenience [`request`] client uses; callers with a
 /// liveness requirement (shard workers probing a possibly-dead driver)
-/// pass their own via [`request_with_timeout`].
+/// pass their own via [`request_with_timeout`] or [`HttpClient`].
 pub const DEFAULT_CLIENT_TIMEOUT: Duration = Duration::from_secs(60);
 
 /// One parsed HTTP request.
@@ -40,20 +43,38 @@ pub struct Request {
     pub path: String,
     /// Raw body (empty when no `Content-Length`).
     pub body: String,
+    /// Whether the peer asked to keep the connection open after this
+    /// request (HTTP/1.1 default; `Connection: close` or HTTP/1.0 turn
+    /// it off).
+    pub keep_alive: bool,
+    /// Token from an `Authorization: Bearer …` header, if any.
+    pub bearer: Option<String>,
 }
 
-/// Typed client-side failures (carried inside `anyhow::Error`; downcast
-/// to branch on them).
+/// Typed framing failures (carried inside `anyhow::Error`; downcast to
+/// branch on them).
 #[derive(Debug)]
 pub enum NetError {
     /// The peer accepted (or never completed) the exchange but went
-    /// quiet past the configured timeout. Workers downcast to this to
+    /// quiet past the configured deadline. Workers downcast to this to
     /// tell a dead driver from a malformed response.
     Timeout {
         /// The address the request was sent to.
         addr: String,
         /// How long the client waited before giving up.
         waited: Duration,
+    },
+    /// The peer closed the connection cleanly at a request boundary —
+    /// the normal end of a persistent connection, not a fault.
+    Closed,
+    /// Nothing arrived within the socket's read timeout while waiting
+    /// for the *start* of a request — the keep-alive idle timeout.
+    Idle,
+    /// The source ended (EOF or went quiet) *inside* a request or
+    /// response — a truncated exchange, never silently accepted.
+    Truncated {
+        /// Which framing region was cut short.
+        what: &'static str,
     },
 }
 
@@ -63,56 +84,244 @@ impl std::fmt::Display for NetError {
             NetError::Timeout { addr, waited } => {
                 write!(f, "request to {addr} timed out after {waited:.1?}")
             }
+            NetError::Closed => write!(f, "peer closed the connection between requests"),
+            NetError::Idle => write!(f, "connection idle past the keep-alive timeout"),
+            NetError::Truncated { what } => {
+                write!(f, "connection truncated inside the {what}")
+            }
         }
     }
 }
 
 impl std::error::Error for NetError {}
 
-/// Read one request from a connection. Fails on malformed framing, an
-/// over-long body, or a source that goes quiet mid-request (on a socket
-/// the caller sets the stream's read timeout). Generic over the byte
-/// source so the parser is testable against in-memory and split reads.
-pub fn read_request<R: Read>(stream: R) -> Result<Request> {
-    // hard cap on the pre-body region: an over-long request line or
-    // header block exhausts the budget (read_line hits EOF) and fails
-    // the request instead of ballooning `line` without bound
-    let mut reader = BufReader::new(stream.take(MAX_HEAD as u64));
-    let mut line = String::new();
-    reader.read_line(&mut line).context("reading request line")?;
-    let mut parts = line.split_whitespace();
-    let method = parts.next().context("empty request line")?.to_ascii_uppercase();
-    let target = parts.next().context("request line has no path")?;
-    let path = target.split('?').next().unwrap_or(target).to_string();
+/// True when a reader error only means the peer is done with the
+/// connection (clean close, or idle past the keep-alive timeout) —
+/// servers drop the socket without logging or replying.
+pub fn quiet_close(err: &anyhow::Error) -> bool {
+    matches!(
+        err.downcast_ref::<NetError>(),
+        Some(NetError::Closed | NetError::Idle)
+    )
+}
 
-    let mut content_length = 0usize;
+/// How a capped line read ended.
+enum LineRead {
+    /// A complete line (terminator stripped).
+    Line(String),
+    /// The source ended before the line terminator arrived.
+    Ended {
+        /// Whether any byte of this line had already arrived.
+        started: bool,
+        /// Ended by a read timeout (the source went quiet) rather than
+        /// EOF.
+        timed_out: bool,
+    },
+}
+
+/// Read one `\n`-terminated line, consuming at most `*budget` bytes
+/// across calls. EOF and read timeouts are reported as [`LineRead::Ended`]
+/// so callers can distinguish a clean between-requests close from a
+/// truncated exchange; exhausting the budget is a hard error.
+fn read_line_capped<R: Read>(
+    reader: &mut BufReader<R>,
+    budget: &mut usize,
+    what: &'static str,
+) -> Result<LineRead> {
+    let mut line: Vec<u8> = Vec::new();
     loop {
-        let mut header = String::new();
-        reader.read_line(&mut header).context("reading header")?;
-        let header = header.trim_end();
-        if header.is_empty() {
-            break;
+        if *budget == 0 {
+            bail!("{what} exceeds the {MAX_HEAD}-byte head cap");
         }
-        if let Some((name, value)) = header.split_once(':') {
-            if name.trim().eq_ignore_ascii_case("content-length") {
-                content_length = value.trim().parse().context("unparseable Content-Length")?;
+        let (used, done) = {
+            let buf = match reader.fill_buf() {
+                Ok(buf) => buf,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                    return Ok(LineRead::Ended { started: !line.is_empty(), timed_out: true });
+                }
+                Err(e) => return Err(anyhow::Error::new(e).context(format!("reading {what}"))),
+            };
+            if buf.is_empty() {
+                return Ok(LineRead::Ended { started: !line.is_empty(), timed_out: false });
+            }
+            let take = buf.len().min(*budget);
+            match buf[..take].iter().position(|&b| b == b'\n') {
+                Some(i) => {
+                    line.extend_from_slice(&buf[..i]);
+                    (i + 1, true)
+                }
+                None => {
+                    line.extend_from_slice(&buf[..take]);
+                    (take, false)
+                }
+            }
+        };
+        reader.consume(used);
+        *budget -= used;
+        if done {
+            if line.last() == Some(&b'\r') {
+                line.pop();
+            }
+            let text =
+                String::from_utf8(line).with_context(|| format!("{what} is not UTF-8"))?;
+            return Ok(LineRead::Line(text));
+        }
+    }
+}
+
+/// How an exact-length body read ended short.
+enum FrameEnd {
+    /// EOF before the promised byte count arrived.
+    Eof,
+    /// The source went quiet past its read timeout mid-body.
+    TimedOut,
+    /// A real I/O failure.
+    Io(std::io::Error),
+}
+
+/// Read exactly `n` bytes, classifying every way the framing contract
+/// can break so callers map it to the right typed error.
+fn read_exact_framed<R: Read>(reader: &mut R, n: usize) -> std::result::Result<Vec<u8>, FrameEnd> {
+    let mut buf = vec![0u8; n];
+    let mut filled = 0usize;
+    while filled < n {
+        match reader.read(&mut buf[filled..]) {
+            Ok(0) => return Err(FrameEnd::Eof),
+            Ok(k) => filled += k,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                return Err(FrameEnd::TimedOut)
+            }
+            Err(e) => return Err(FrameEnd::Io(e)),
+        }
+    }
+    Ok(buf)
+}
+
+/// Record a `Content-Length` value, rejecting a second conflicting one
+/// (duplicate-but-equal headers are tolerated; last-wins smuggling is
+/// not).
+fn note_content_length(slot: &mut Option<usize>, value: &str) -> Result<()> {
+    let n: usize = value.trim().parse().context("unparseable Content-Length")?;
+    match *slot {
+        Some(prev) if prev != n => {
+            bail!("conflicting Content-Length headers ({prev} then {n})")
+        }
+        _ => {
+            *slot = Some(n);
+            Ok(())
+        }
+    }
+}
+
+/// Connection-lifetime request parser: feeds many requests off one byte
+/// source. On a socket, set the stream's read timeout to the desired
+/// keep-alive idle timeout before constructing — going quiet *between*
+/// requests surfaces as [`NetError::Idle`], a clean close as
+/// [`NetError::Closed`], and an EOF or stall *inside* a request as
+/// [`NetError::Truncated`].
+pub struct RequestReader<R: Read> {
+    reader: BufReader<R>,
+}
+
+impl<R: Read> RequestReader<R> {
+    /// Wrap a byte source (socket, cursor, split reader, …).
+    pub fn new(source: R) -> Self {
+        RequestReader { reader: BufReader::new(source) }
+    }
+
+    /// Parse the next request. Fails on malformed framing, an over-long
+    /// head or body, or a source that ends mid-request; see the type
+    /// docs for how connection endings are classified.
+    pub fn next_request(&mut self) -> Result<Request> {
+        // hard cap on this request's pre-body region: an over-long
+        // request line or header block exhausts the budget and fails
+        // the request instead of ballooning memory without bound
+        let mut budget = MAX_HEAD;
+        let line = loop {
+            match read_line_capped(&mut self.reader, &mut budget, "request line")? {
+                // tolerate stray blank lines between pipelined requests
+                LineRead::Line(l) if l.is_empty() => continue,
+                LineRead::Line(l) => break l,
+                LineRead::Ended { started: false, timed_out } => {
+                    return Err(anyhow::Error::new(if timed_out {
+                        NetError::Idle
+                    } else {
+                        NetError::Closed
+                    }));
+                }
+                LineRead::Ended { started: true, .. } => {
+                    return Err(anyhow::Error::new(NetError::Truncated { what: "request line" }));
+                }
+            }
+        };
+        let mut parts = line.split_whitespace();
+        let method = parts.next().context("empty request line")?.to_ascii_uppercase();
+        let target = parts.next().context("request line has no path")?;
+        let path = target.split('?').next().unwrap_or(target).to_string();
+        // HTTP/1.1 defaults to keep-alive; 1.0 (or a missing version) to close
+        let mut keep_alive = parts.next().is_some_and(|v| v.eq_ignore_ascii_case("HTTP/1.1"));
+
+        let mut content_length: Option<usize> = None;
+        let mut bearer: Option<String> = None;
+        loop {
+            let header = match read_line_capped(&mut self.reader, &mut budget, "headers")? {
+                LineRead::Line(l) => l,
+                // EOF mid-headers is truncation, never end-of-headers
+                LineRead::Ended { .. } => {
+                    return Err(anyhow::Error::new(NetError::Truncated { what: "headers" }));
+                }
+            };
+            if header.is_empty() {
+                break;
+            }
+            let Some((name, value)) = header.split_once(':') else { continue };
+            let (name, value) = (name.trim(), value.trim());
+            if name.eq_ignore_ascii_case("content-length") {
+                note_content_length(&mut content_length, value)?;
+            } else if name.eq_ignore_ascii_case("connection") {
+                if value.eq_ignore_ascii_case("close") {
+                    keep_alive = false;
+                } else if value.eq_ignore_ascii_case("keep-alive") {
+                    keep_alive = true;
+                }
+            } else if name.eq_ignore_ascii_case("authorization") {
+                if let Some((scheme, token)) = value.split_once(' ') {
+                    if scheme.eq_ignore_ascii_case("bearer") {
+                        bearer = Some(token.trim().to_string());
+                    }
+                }
             }
         }
+
+        let content_length = content_length.unwrap_or(0);
+        if content_length > MAX_BODY {
+            bail!("request body of {content_length} bytes exceeds the {MAX_BODY}-byte limit");
+        }
+        let body = match read_exact_framed(&mut self.reader, content_length) {
+            Ok(b) => b,
+            Err(FrameEnd::Eof | FrameEnd::TimedOut) => {
+                return Err(anyhow::Error::new(NetError::Truncated { what: "request body" }));
+            }
+            Err(FrameEnd::Io(e)) => {
+                return Err(anyhow::Error::new(e).context("reading request body"))
+            }
+        };
+        Ok(Request {
+            method,
+            path,
+            body: String::from_utf8(body).context("request body is not UTF-8")?,
+            keep_alive,
+            bearer,
+        })
     }
-    if content_length > MAX_BODY {
-        bail!("request body of {content_length} bytes exceeds the {MAX_BODY}-byte limit");
-    }
-    // headers consumed: widen the read budget to admit exactly the body
-    // (bytes the BufReader already buffered are paid for, so this is
-    // never under-generous)
-    reader.get_mut().set_limit(content_length as u64);
-    let mut body = vec![0u8; content_length];
-    reader.read_exact(&mut body).context("reading request body")?;
-    Ok(Request {
-        method,
-        path,
-        body: String::from_utf8(body).context("request body is not UTF-8")?,
-    })
+}
+
+/// Read a single request from a one-request source (compatibility shim
+/// over [`RequestReader`] — fuzz tests and simple callers).
+pub fn read_request<R: Read>(stream: R) -> Result<Request> {
+    RequestReader::new(stream).next_request()
 }
 
 /// Reason phrase for the status codes the services emit.
@@ -120,19 +329,30 @@ fn reason(status: u16) -> &'static str {
     match status {
         200 => "OK",
         400 => "Bad Request",
+        403 => "Forbidden",
         404 => "Not Found",
         405 => "Method Not Allowed",
+        408 => "Request Timeout",
         500 => "Internal Server Error",
+        503 => "Service Unavailable",
         _ => "Unknown",
     }
 }
 
-/// Write a full JSON response and flush.
-pub fn write_response<W: Write>(stream: &mut W, status: u16, body: &str) -> Result<()> {
+/// Write a full JSON response and flush. `keep_alive` picks the
+/// `Connection` header; the caller decides whether the socket actually
+/// stays open.
+pub fn write_response<W: Write>(
+    stream: &mut W,
+    status: u16,
+    body: &str,
+    keep_alive: bool,
+) -> Result<()> {
     let head = format!(
-        "HTTP/1.1 {status} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        "HTTP/1.1 {status} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
         reason(status),
-        body.len()
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
     );
     stream.write_all(head.as_bytes())?;
     stream.write_all(body.as_bytes())?;
@@ -140,17 +360,282 @@ pub fn write_response<W: Write>(stream: &mut W, status: u16, body: &str) -> Resu
     Ok(())
 }
 
+/// A [`TcpStream`] whose reads and writes all count against one
+/// deadline: before every socket operation the remaining time is
+/// re-armed as the socket timeout, so a peer trickling one byte per
+/// interval cannot hold the caller past the overall deadline.
+struct DeadlineStream {
+    stream: TcpStream,
+    end: Instant,
+}
+
+impl DeadlineStream {
+    fn arm(&self) -> std::io::Result<Duration> {
+        let now = Instant::now();
+        if now >= self.end {
+            return Err(std::io::Error::new(
+                ErrorKind::TimedOut,
+                "overall request deadline exceeded",
+            ));
+        }
+        Ok(self.end - now)
+    }
+}
+
+impl Read for DeadlineStream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let left = self.arm()?;
+        self.stream.set_read_timeout(Some(left))?;
+        self.stream.read(buf)
+    }
+}
+
+impl Write for DeadlineStream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        let left = self.arm()?;
+        self.stream.set_write_timeout(Some(left))?;
+        self.stream.write(buf)
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.stream.flush()
+    }
+}
+
+/// Map an I/O failure from the client path to a typed timeout when the
+/// socket (or the overall deadline) ran out of time.
+fn client_io_error(
+    e: std::io::Error,
+    what: &'static str,
+    addr: &str,
+    t0: Instant,
+) -> anyhow::Error {
+    if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) {
+        anyhow::Error::new(NetError::Timeout { addr: addr.to_string(), waited: t0.elapsed() })
+    } else {
+        anyhow::Error::new(e).context(what)
+    }
+}
+
+/// Persistent HTTP client: keeps one connection open across requests
+/// (`Connection: keep-alive`), frames responses by their
+/// `Content-Length` (never read-to-EOF), and bounds every request by an
+/// overall deadline across connect, write, and read. If a reused
+/// connection turns out to have been closed by the server's idle
+/// timeout, the request is retried exactly once on a fresh connection
+/// (timeouts are never retried — the wait is already spent).
+pub struct HttpClient {
+    addr: String,
+    timeout: Duration,
+    bearer: Option<String>,
+    one_shot: bool,
+    conn: Option<BufReader<DeadlineStream>>,
+}
+
+impl HttpClient {
+    /// A keep-alive client for `addr` (e.g. `127.0.0.1:7878`) with a
+    /// per-request deadline.
+    pub fn new(addr: impl Into<String>, timeout: Duration) -> Self {
+        HttpClient {
+            addr: addr.into(),
+            timeout,
+            bearer: None,
+            one_shot: false,
+            conn: None,
+        }
+    }
+
+    /// Attach an `Authorization: Bearer …` token to every request.
+    pub fn bearer(mut self, token: impl Into<String>) -> Self {
+        self.bearer = Some(token.into());
+        self
+    }
+
+    /// The server address this client talks to.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    fn open(addr: &str, deadline: Duration, t0: Instant) -> Result<BufReader<DeadlineStream>> {
+        let sock = addr
+            .to_socket_addrs()
+            .with_context(|| format!("resolving {addr}"))?
+            .next()
+            .with_context(|| format!("{addr} resolves to no address"))?;
+        let stream = TcpStream::connect_timeout(&sock, deadline)
+            .map_err(|e| client_io_error(e, "connecting", addr, t0))?;
+        // each request is one small write; don't wait for coalescing
+        let _ = stream.set_nodelay(true);
+        Ok(BufReader::new(DeadlineStream { stream, end: t0 + deadline }))
+    }
+
+    /// Send `method path` with an optional JSON body and return
+    /// `(status, body)`. A peer that goes quiet past the deadline fails
+    /// with a typed [`NetError::Timeout`] instead of hanging the caller
+    /// forever — shard workers rely on this to survive a dead driver.
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+    ) -> Result<(u16, String)> {
+        let reused = self.conn.is_some();
+        match self.try_request(method, path, body) {
+            Ok(out) => Ok(out),
+            Err(e) => {
+                self.conn = None;
+                // a reused connection may have been idle-closed by the
+                // server between requests; one fresh retry covers that
+                // race without retrying genuine fresh-connection errors
+                let timed_out = matches!(
+                    e.downcast_ref::<NetError>(),
+                    Some(NetError::Timeout { .. })
+                );
+                if !reused || timed_out {
+                    return Err(e);
+                }
+                let out = self.try_request(method, path, body);
+                if out.is_err() {
+                    self.conn = None;
+                }
+                out
+            }
+        }
+    }
+
+    fn try_request(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+    ) -> Result<(u16, String)> {
+        // a zero timeout means "disable timeouts" to the socket API —
+        // clamp so the caller's intent (fail fast) is preserved
+        let deadline = self.timeout.max(Duration::from_millis(1));
+        let t0 = Instant::now();
+        if self.conn.is_none() {
+            self.conn = Some(Self::open(&self.addr, deadline, t0)?);
+        }
+        let Some(conn) = self.conn.as_mut() else {
+            bail!("no connection to {}", self.addr);
+        };
+        conn.get_mut().end = t0 + deadline;
+
+        let body = body.unwrap_or("");
+        let auth = match &self.bearer {
+            Some(token) => format!("Authorization: Bearer {token}\r\n"),
+            None => String::new(),
+        };
+        let head = format!(
+            "{method} {path} HTTP/1.1\r\nHost: {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n{auth}Connection: {}\r\n\r\n",
+            self.addr,
+            body.len(),
+            if self.one_shot { "close" } else { "keep-alive" },
+        );
+        let stream = conn.get_mut();
+        stream
+            .write_all(head.as_bytes())
+            .and_then(|()| stream.write_all(body.as_bytes()))
+            .and_then(|()| stream.flush())
+            .map_err(|e| client_io_error(e, "writing request", &self.addr, t0))?;
+
+        let (status, payload, server_keep) = read_response(conn, &self.addr, t0)?;
+        if self.one_shot || !server_keep {
+            self.conn = None;
+        }
+        Ok((status, payload))
+    }
+}
+
+/// Parse one framed response: status line, headers, exactly
+/// `Content-Length` body bytes. Returns `(status, body, keep_alive)`.
+fn read_response(
+    reader: &mut BufReader<DeadlineStream>,
+    addr: &str,
+    t0: Instant,
+) -> Result<(u16, String, bool)> {
+    let mut budget = MAX_HEAD;
+    let timeout = |t0: Instant| NetError::Timeout { addr: addr.to_string(), waited: t0.elapsed() };
+    let status_line = match read_line_capped(reader, &mut budget, "response status line")? {
+        LineRead::Line(l) => l,
+        LineRead::Ended { timed_out: true, .. } => return Err(anyhow::Error::new(timeout(t0))),
+        LineRead::Ended { started: false, .. } => return Err(anyhow::Error::new(NetError::Closed)),
+        LineRead::Ended { started: true, .. } => {
+            return Err(anyhow::Error::new(NetError::Truncated { what: "response status line" }));
+        }
+    };
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .context("status line has no code")?
+        .parse()
+        .context("unparseable status code")?;
+    let mut keep_alive = status_line
+        .split_whitespace()
+        .next()
+        .is_some_and(|v| v.eq_ignore_ascii_case("HTTP/1.1"));
+
+    let mut content_length: Option<usize> = None;
+    loop {
+        let header = match read_line_capped(reader, &mut budget, "response headers")? {
+            LineRead::Line(l) => l,
+            LineRead::Ended { timed_out: true, .. } => {
+                return Err(anyhow::Error::new(timeout(t0)))
+            }
+            LineRead::Ended { .. } => {
+                return Err(anyhow::Error::new(NetError::Truncated { what: "response headers" }));
+            }
+        };
+        if header.is_empty() {
+            break;
+        }
+        let Some((name, value)) = header.split_once(':') else { continue };
+        let (name, value) = (name.trim(), value.trim());
+        if name.eq_ignore_ascii_case("content-length") {
+            note_content_length(&mut content_length, value)?;
+        } else if name.eq_ignore_ascii_case("connection") {
+            if value.eq_ignore_ascii_case("close") {
+                keep_alive = false;
+            } else if value.eq_ignore_ascii_case("keep-alive") {
+                keep_alive = true;
+            }
+        }
+    }
+
+    // read-to-EOF parsing is gone: persistent connections need explicit
+    // framing, and every server in this workspace emits it
+    let Some(n) = content_length else {
+        bail!("response has no Content-Length (persistent connections require framed responses)");
+    };
+    if n > MAX_BODY {
+        bail!("response body of {n} bytes exceeds the {MAX_BODY}-byte limit");
+    }
+    let payload = match read_exact_framed(reader, n) {
+        Ok(b) => b,
+        Err(FrameEnd::TimedOut) => return Err(anyhow::Error::new(timeout(t0))),
+        Err(FrameEnd::Eof) => {
+            return Err(anyhow::Error::new(NetError::Truncated { what: "response body" }));
+        }
+        Err(FrameEnd::Io(e)) => return Err(anyhow::Error::new(e).context("reading response body")),
+    };
+    Ok((
+        status,
+        String::from_utf8(payload).context("response body is not UTF-8")?,
+        keep_alive,
+    ))
+}
+
 /// One-shot HTTP client: send `method path` with an optional JSON body
-/// to `addr` (e.g. `127.0.0.1:7878`) and return `(status, body)`. Reads
-/// time out after [`DEFAULT_CLIENT_TIMEOUT`].
+/// to `addr` (e.g. `127.0.0.1:7878`) and return `(status, body)`. The
+/// whole exchange is bounded by [`DEFAULT_CLIENT_TIMEOUT`].
 pub fn request(addr: &str, method: &str, path: &str, body: Option<&str>) -> Result<(u16, String)> {
     request_with_timeout(addr, method, path, body, DEFAULT_CLIENT_TIMEOUT)
 }
 
-/// [`request`] with an explicit timeout bounding connect, write, and
-/// read. A peer that goes quiet past the deadline fails with a typed
-/// [`NetError::Timeout`] instead of hanging the caller forever — shard
-/// workers rely on this to survive a dead driver.
+/// [`request`] with an explicit overall deadline across connect, write,
+/// and read — not a per-socket-read timeout, so a peer trickling bytes
+/// cannot stretch the wait. Sends `Connection: close` (one request per
+/// connection); use [`HttpClient`] for keep-alive.
 pub fn request_with_timeout(
     addr: &str,
     method: &str,
@@ -158,57 +643,14 @@ pub fn request_with_timeout(
     body: Option<&str>,
     timeout: Duration,
 ) -> Result<(u16, String)> {
-    // a zero timeout means "disable timeouts" to the socket API — clamp
-    // so the caller's intent (fail fast) is preserved
-    let timeout = timeout.max(Duration::from_millis(1));
-    let t0 = Instant::now();
-    let timed = |e: std::io::Error, what: &'static str| -> anyhow::Error {
-        if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) {
-            anyhow::Error::new(NetError::Timeout {
-                addr: addr.to_string(),
-                waited: t0.elapsed(),
-            })
-        } else {
-            anyhow::Error::new(e).context(what)
-        }
+    let mut client = HttpClient {
+        addr: addr.to_string(),
+        timeout,
+        bearer: None,
+        one_shot: true,
+        conn: None,
     };
-    let sock = addr
-        .to_socket_addrs()
-        .with_context(|| format!("resolving {addr}"))?
-        .next()
-        .with_context(|| format!("{addr} resolves to no address"))?;
-    let mut stream =
-        TcpStream::connect_timeout(&sock, timeout).map_err(|e| timed(e, "connecting"))?;
-    stream.set_read_timeout(Some(timeout))?;
-    stream.set_write_timeout(Some(timeout))?;
-    let body = body.unwrap_or("");
-    let head = format!(
-        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
-        body.len()
-    );
-    stream
-        .write_all(head.as_bytes())
-        .map_err(|e| timed(e, "writing request head"))?;
-    stream
-        .write_all(body.as_bytes())
-        .map_err(|e| timed(e, "writing request body"))?;
-    stream.flush().map_err(|e| timed(e, "flushing request"))?;
-
-    let mut response = String::new();
-    stream
-        .read_to_string(&mut response)
-        .map_err(|e| timed(e, "reading response"))?;
-    let (head, payload) = response
-        .split_once("\r\n\r\n")
-        .context("response has no header/body separator")?;
-    let status_line = head.lines().next().context("empty response")?;
-    let status: u16 = status_line
-        .split_whitespace()
-        .nth(1)
-        .context("status line has no code")?
-        .parse()
-        .context("unparseable status code")?;
-    Ok((status, payload.to_string()))
+    client.request(method, path, body)
 }
 
 #[cfg(test)]
@@ -223,11 +665,72 @@ mod tests {
         assert_eq!(req.method, "POST");
         assert_eq!(req.path, "/estimate");
         assert_eq!(req.body, "body");
+        assert!(req.keep_alive, "HTTP/1.1 defaults to keep-alive");
+        assert!(req.bearer.is_none());
 
-        // no Content-Length: empty body
-        let req = read_request(Cursor::new(b"GET / HTTP/1.1\r\n\r\n".to_vec())).unwrap();
+        // no Content-Length: empty body; Connection: close honored
+        let req =
+            read_request(Cursor::new(b"GET / HTTP/1.1\r\nConnection: close\r\n\r\n".to_vec()))
+                .unwrap();
         assert_eq!(req.method, "GET");
         assert!(req.body.is_empty());
+        assert!(!req.keep_alive);
+
+        // bearer tokens parse regardless of scheme case
+        let raw = b"POST /shard/claim HTTP/1.1\r\nAuthorization: bearer tok-123\r\n\r\n";
+        let req = read_request(Cursor::new(raw.to_vec())).unwrap();
+        assert_eq!(req.bearer.as_deref(), Some("tok-123"));
+    }
+
+    #[test]
+    fn reader_serves_many_requests_per_connection() {
+        let raw = b"POST /a HTTP/1.1\r\nContent-Length: 2\r\n\r\nhiGET /b HTTP/1.1\r\n\r\nGET /c HTTP/1.1\r\nConnection: close\r\n\r\n";
+        let mut reader = RequestReader::new(Cursor::new(raw.to_vec()));
+        let a = reader.next_request().unwrap();
+        assert_eq!((a.path.as_str(), a.body.as_str(), a.keep_alive), ("/a", "hi", true));
+        let b = reader.next_request().unwrap();
+        assert_eq!((b.path.as_str(), b.keep_alive), ("/b", true));
+        let c = reader.next_request().unwrap();
+        assert_eq!((c.path.as_str(), c.keep_alive), ("/c", false));
+        let end = reader.next_request().unwrap_err();
+        assert!(
+            matches!(end.downcast_ref::<NetError>(), Some(NetError::Closed)),
+            "clean EOF at a request boundary must be NetError::Closed, got {end:#}"
+        );
+    }
+
+    #[test]
+    fn truncation_inside_headers_is_a_typed_error() {
+        // regression: EOF mid-headers used to read as end-of-headers and
+        // silently serve the truncated request as a body-less one
+        let err = read_request(Cursor::new(b"GET / HTTP/1.1\r\nHost: h".to_vec())).unwrap_err();
+        assert!(
+            matches!(
+                err.downcast_ref::<NetError>(),
+                Some(NetError::Truncated { what: "headers" })
+            ),
+            "EOF mid-headers must be a typed truncation, got {err:#}"
+        );
+
+        // EOF mid-request-line is the same class of fault
+        let err = read_request(Cursor::new(b"GET / HT".to_vec())).unwrap_err();
+        assert!(
+            matches!(err.downcast_ref::<NetError>(), Some(NetError::Truncated { .. })),
+            "{err:#}"
+        );
+    }
+
+    #[test]
+    fn conflicting_content_length_headers_are_rejected() {
+        // regression: last-wins parsing accepted smuggled lengths
+        let raw = b"POST / HTTP/1.1\r\nContent-Length: 4\r\nContent-Length: 2\r\n\r\nbody";
+        let err = read_request(Cursor::new(raw.to_vec())).unwrap_err();
+        assert!(format!("{err:#}").contains("conflicting Content-Length"), "{err:#}");
+
+        // duplicate-but-equal headers are tolerated
+        let raw = b"POST / HTTP/1.1\r\nContent-Length: 4\r\nContent-Length: 4\r\n\r\nbody";
+        let req = read_request(Cursor::new(raw.to_vec())).unwrap();
+        assert_eq!(req.body, "body");
     }
 
     #[test]
@@ -261,9 +764,107 @@ mod tests {
         let net = err
             .downcast_ref::<NetError>()
             .expect("typed NetError, not a stringly error");
-        let NetError::Timeout { addr: got, waited } = net;
-        assert_eq!(*got, addr);
-        assert!(*waited >= Duration::from_millis(50));
+        assert!(matches!(net, NetError::Timeout { .. }), "{net}");
+        if let NetError::Timeout { addr: got, waited } = net {
+            assert_eq!(*got, addr);
+            assert!(*waited >= Duration::from_millis(50));
+        }
         drop(hold.join());
+    }
+
+    #[test]
+    fn trickling_peer_cannot_stretch_the_deadline() {
+        // regression: the timeout used to re-arm per socket read, so a
+        // peer dripping one byte per interval held the client far past
+        // the configured wait
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let trickle = std::thread::spawn(move || {
+            let Ok((mut s, _)) = listener.accept() else { return };
+            for _ in 0..300 {
+                if s.write_all(b"x").is_err() {
+                    break;
+                }
+                let _ = s.flush();
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        });
+        let t0 = Instant::now();
+        let err =
+            request_with_timeout(&addr, "GET", "/", None, Duration::from_millis(100)).unwrap_err();
+        let elapsed = t0.elapsed();
+        assert!(
+            matches!(err.downcast_ref::<NetError>(), Some(NetError::Timeout { .. })),
+            "trickled bytes must still end in a typed timeout, got {err:#}"
+        );
+        assert!(
+            elapsed < Duration::from_millis(1500),
+            "deadline must bound the whole exchange, waited {elapsed:?}"
+        );
+        drop(trickle.join());
+    }
+
+    #[test]
+    fn client_honors_response_framing_without_a_server_close() {
+        // regression: the client used to read to EOF, which hangs the
+        // moment the server keeps the connection open after responding
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            let Ok((stream, _)) = listener.accept() else { return };
+            let mut reader = RequestReader::new(&stream);
+            let _ = reader.next_request();
+            let mut w = &stream;
+            let _ = write_response(&mut w, 200, "{\"ok\":true}", true);
+            // hold the connection open well past the client's deadline
+            std::thread::sleep(Duration::from_millis(1500));
+        });
+        let t0 = Instant::now();
+        let (status, body) =
+            request_with_timeout(&addr, "GET", "/healthz", None, Duration::from_millis(1000))
+                .expect("framed response must parse without waiting for EOF");
+        assert_eq!(status, 200);
+        assert_eq!(body, "{\"ok\":true}");
+        assert!(
+            t0.elapsed() < Duration::from_millis(900),
+            "client must return as soon as the framed body arrives"
+        );
+        drop(server.join());
+    }
+
+    #[test]
+    fn keep_alive_client_reuses_one_connection() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            let mut accepted = 0usize;
+            let Ok((stream, _)) = listener.accept() else { return 0 };
+            accepted += 1;
+            let _ = stream.set_read_timeout(Some(Duration::from_millis(500)));
+            let mut reader = RequestReader::new(&stream);
+            loop {
+                match reader.next_request() {
+                    Ok(req) => {
+                        let mut w = &stream;
+                        let body = format!("{{\"echo\":\"{}\"}}", req.path);
+                        if write_response(&mut w, 200, &body, req.keep_alive).is_err()
+                            || !req.keep_alive
+                        {
+                            break;
+                        }
+                    }
+                    Err(_) => break,
+                }
+            }
+            accepted
+        });
+        let mut client = HttpClient::new(addr, Duration::from_secs(5));
+        for path in ["/a", "/b", "/c"] {
+            let (status, body) = client.request("GET", path, None).unwrap();
+            assert_eq!(status, 200);
+            assert_eq!(body, format!("{{\"echo\":\"{path}\"}}"));
+        }
+        drop(client);
+        assert_eq!(server.join().unwrap(), 1, "three requests over one connection");
     }
 }

@@ -89,6 +89,15 @@ pub struct SurrogateEngine<'a> {
     completed: Condvar,
     flushes: AtomicUsize,
     rows_flushed: AtomicUsize,
+    /// Rows ever submitted through [`estimate_many`](Self::estimate_many)
+    /// (memo hits included) — the denominator of the memo hit rate.
+    rows_requested: AtomicUsize,
+    /// Rows answered straight from the memo at submit time, costing no
+    /// batch slot.
+    memo_hits: AtomicUsize,
+    /// Largest single flush so far (how close traffic gets to the
+    /// interpreter's native batch).
+    max_flush_rows: AtomicUsize,
 }
 
 impl<'a> SurrogateEngine<'a> {
@@ -109,6 +118,9 @@ impl<'a> SurrogateEngine<'a> {
             completed: Condvar::new(),
             flushes: AtomicUsize::new(0),
             rows_flushed: AtomicUsize::new(0),
+            rows_requested: AtomicUsize::new(0),
+            memo_hits: AtomicUsize::new(0),
+            max_flush_rows: AtomicUsize::new(0),
         }
     }
 
@@ -125,6 +137,21 @@ impl<'a> SurrogateEngine<'a> {
     /// Unique rows executed across all flushes so far.
     pub fn rows_flushed(&self) -> usize {
         self.rows_flushed.load(Ordering::Relaxed)
+    }
+
+    /// Rows ever submitted (memo hits included).
+    pub fn rows_requested(&self) -> usize {
+        self.rows_requested.load(Ordering::Relaxed)
+    }
+
+    /// Rows answered straight from the memo at submit time.
+    pub fn memo_hits(&self) -> usize {
+        self.memo_hits.load(Ordering::Relaxed)
+    }
+
+    /// Largest single flush so far.
+    pub fn max_flush_rows(&self) -> usize {
+        self.max_flush_rows.load(Ordering::Relaxed)
     }
 
     /// Estimate one feature vector, blocking until its flush completes
@@ -147,6 +174,7 @@ impl<'a> SurrogateEngine<'a> {
         }
         let keys: Vec<Vec<u32>> = feats.iter().map(|f| feature_key(f)).collect();
         let mut out: Vec<Option<ResourceEstimate>> = vec![None; feats.len()];
+        self.rows_requested.fetch_add(feats.len(), Ordering::Relaxed);
 
         // ---- submit ----
         {
@@ -158,6 +186,7 @@ impl<'a> SurrogateEngine<'a> {
                 // rows never touch the batch
                 if let Some(hit) = self.predictor.cached_by_key(key) {
                     out[i] = Some(hit);
+                    self.memo_hits.fetch_add(1, Ordering::Relaxed);
                     continue;
                 }
                 // rows someone else already queued (or that are mid-
@@ -257,6 +286,7 @@ impl<'a> SurrogateEngine<'a> {
             st.in_flight.clear();
             self.flushes.fetch_add(1, Ordering::Relaxed);
             self.rows_flushed.fetch_add(rows.len(), Ordering::Relaxed);
+            self.max_flush_rows.fetch_max(rows.len(), Ordering::Relaxed);
             // a success clears the error so waiters can tell "my flush
             // failed" apart from "my row was evicted at the memo cap"
             st.last_error = match result {

@@ -1,0 +1,264 @@
+//! Serving observability: lock-free counters and latency histograms
+//! behind `GET /metrics`.
+//!
+//! Everything here is a relaxed atomic — connection workers record into
+//! the histograms on the request path with no shared lock, and the
+//! `/metrics` endpoint renders a consistent-enough snapshot (each value
+//! is individually atomic; the report as a whole is not a transaction,
+//! which is the standard contract for scrape-style metrics).
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::time::Duration;
+
+use crate::serve::SurrogateEngine;
+use crate::util::Json;
+
+/// Latency bucket upper bounds in microseconds; one overflow bucket is
+/// appended. Spans 50µs (memo hit on loopback) to 250ms (a cold flush
+/// behind a long batching deadline).
+const BUCKET_US: [u64; 12] =
+    [50, 100, 250, 500, 1_000, 2_500, 5_000, 10_000, 25_000, 50_000, 100_000, 250_000];
+
+/// One fixed-bucket latency histogram.
+pub struct Histogram {
+    counts: [AtomicU64; BUCKET_US.len() + 1],
+    sum_us: AtomicU64,
+}
+
+impl Histogram {
+    fn new() -> Self {
+        Histogram {
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum_us: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one request latency.
+    pub fn observe(&self, elapsed: Duration) {
+        let us = u64::try_from(elapsed.as_micros()).unwrap_or(u64::MAX);
+        let idx = BUCKET_US.iter().position(|&b| us <= b).unwrap_or(BUCKET_US.len());
+        self.counts[idx].fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    /// Total observations.
+    pub fn count(&self) -> u64 {
+        self.counts.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Mean latency in milliseconds (0 when empty).
+    pub fn mean_ms(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.sum_us.load(Ordering::Relaxed) as f64 / n as f64 / 1_000.0
+    }
+
+    /// Conservative quantile in milliseconds: the upper bound of the
+    /// bucket holding the q-th observation (the overflow bucket reports
+    /// four times the last bound). 0 when empty.
+    pub fn quantile_ms(&self, q: f64) -> f64 {
+        let snapshot: Vec<u64> = self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect();
+        let total: u64 = snapshot.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut seen = 0u64;
+        for (i, &n) in snapshot.iter().enumerate() {
+            seen += n;
+            if seen >= rank {
+                let bound_us = BUCKET_US.get(i).copied().unwrap_or(BUCKET_US[BUCKET_US.len() - 1] * 4);
+                return bound_us as f64 / 1_000.0;
+            }
+        }
+        BUCKET_US[BUCKET_US.len() - 1] as f64 * 4.0 / 1_000.0
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::Num(self.count() as f64)),
+            ("mean_ms", Json::Num(self.mean_ms())),
+            ("p50_ms", Json::Num(self.quantile_ms(0.50))),
+            ("p99_ms", Json::Num(self.quantile_ms(0.99))),
+        ])
+    }
+}
+
+/// The endpoints tracked individually; everything else lands in `other`.
+const ENDPOINTS: [&str; 6] =
+    ["/healthz", "/metrics", "/estimate", "/estimate/batch", "/shutdown", "other"];
+
+/// Decrements a gauge when dropped — pairs an increment with every exit
+/// path of a connection handler.
+pub struct GaugeGuard<'a>(&'a AtomicUsize);
+
+impl Drop for GaugeGuard<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// All serving metrics, shared by reference across connection workers.
+pub struct ServeMetrics {
+    endpoints: [Histogram; ENDPOINTS.len()],
+    /// Connections currently being served by a worker.
+    in_flight: AtomicUsize,
+    /// Connections accepted but not yet picked up by a worker.
+    queued: AtomicUsize,
+    accepted: AtomicU64,
+    shed: AtomicU64,
+}
+
+impl Default for ServeMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ServeMetrics {
+    /// Fresh, all-zero metrics.
+    pub fn new() -> Self {
+        ServeMetrics {
+            endpoints: std::array::from_fn(|_| Histogram::new()),
+            in_flight: AtomicUsize::new(0),
+            queued: AtomicUsize::new(0),
+            accepted: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+        }
+    }
+
+    fn endpoint(&self, path: &str) -> &Histogram {
+        let idx = ENDPOINTS.iter().position(|&e| e == path).unwrap_or(ENDPOINTS.len() - 1);
+        &self.endpoints[idx]
+    }
+
+    /// Record one served request's latency against its endpoint.
+    pub fn observe(&self, path: &str, elapsed: Duration) {
+        self.endpoint(path).observe(elapsed);
+    }
+
+    /// A connection entered the admission queue.
+    pub fn enqueued(&self) {
+        self.accepted.fetch_add(1, Ordering::Relaxed);
+        self.queued.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A worker took a connection off the queue; the guard holds the
+    /// in-flight gauge up until the connection finishes.
+    pub fn serving(&self) -> GaugeGuard<'_> {
+        self.queued.fetch_sub(1, Ordering::Relaxed);
+        self.in_flight.fetch_add(1, Ordering::Relaxed);
+        GaugeGuard(&self.in_flight)
+    }
+
+    /// A connection was refused with a fast 503 (queue full).
+    pub fn note_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Load-shed count so far.
+    pub fn shed_count(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
+    }
+
+    /// Total requests observed across all endpoints.
+    pub fn requests(&self) -> u64 {
+        self.endpoints.iter().map(Histogram::count).sum()
+    }
+
+    /// Render the full `/metrics` document.
+    pub fn render(&self, engine: &SurrogateEngine<'_>) -> Json {
+        let endpoints = ENDPOINTS
+            .iter()
+            .zip(&self.endpoints)
+            .map(|(&name, hist)| (name, hist.to_json()))
+            .collect();
+        let flushes = engine.flushes();
+        let rows_flushed = engine.rows_flushed();
+        let requested = engine.rows_requested();
+        let hits = engine.memo_hits();
+        Json::obj(vec![
+            ("requests", Json::Num(self.requests() as f64)),
+            ("endpoints", Json::obj(endpoints)),
+            (
+                "connections",
+                Json::obj(vec![
+                    ("accepted", Json::Num(self.accepted.load(Ordering::Relaxed) as f64)),
+                    ("in_flight", Json::Num(self.in_flight.load(Ordering::Relaxed) as f64)),
+                    ("queued", Json::Num(self.queued.load(Ordering::Relaxed) as f64)),
+                    ("shed", Json::Num(self.shed_count() as f64)),
+                ]),
+            ),
+            (
+                "engine",
+                Json::obj(vec![
+                    ("flushes", Json::Num(flushes as f64)),
+                    ("rows_flushed", Json::Num(rows_flushed as f64)),
+                    (
+                        "mean_flush_rows",
+                        Json::Num(if flushes == 0 {
+                            0.0
+                        } else {
+                            rows_flushed as f64 / flushes as f64
+                        }),
+                    ),
+                    ("max_flush_rows", Json::Num(engine.max_flush_rows() as f64)),
+                    ("rows_requested", Json::Num(requested as f64)),
+                    ("memo_hits", Json::Num(hits as f64)),
+                    (
+                        "memo_hit_rate",
+                        Json::Num(if requested == 0 { 0.0 } else { hits as f64 / requested as f64 }),
+                    ),
+                    ("surrogate_executions", Json::Num(engine.predictor().executions() as f64)),
+                    ("memo_rows", Json::Num(engine.predictor().cache_len() as f64)),
+                ]),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_are_conservative_bucket_bounds() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile_ms(0.5), 0.0, "empty histogram reports zero");
+        for _ in 0..99 {
+            h.observe(Duration::from_micros(80)); // second bucket (≤100µs)
+        }
+        h.observe(Duration::from_millis(40)); // ≤50ms bucket
+        assert_eq!(h.count(), 100);
+        assert_eq!(h.quantile_ms(0.5), 0.1, "p50 lands in the ≤100µs bucket");
+        assert_eq!(h.quantile_ms(0.99), 0.1);
+        assert_eq!(h.quantile_ms(1.0), 50.0, "max lands in the ≤50ms bucket");
+        assert!(h.mean_ms() > 0.0);
+
+        // overflow bucket: far past the last bound
+        let h = Histogram::new();
+        h.observe(Duration::from_secs(2));
+        assert_eq!(h.quantile_ms(0.5), 1_000.0, "overflow reports 4x the last bound");
+    }
+
+    #[test]
+    fn gauges_and_counters_track_connection_lifecycles() {
+        let m = ServeMetrics::new();
+        m.enqueued();
+        m.enqueued();
+        let guard = m.serving();
+        assert_eq!(m.queued.load(Ordering::Relaxed), 1);
+        assert_eq!(m.in_flight.load(Ordering::Relaxed), 1);
+        drop(guard);
+        assert_eq!(m.in_flight.load(Ordering::Relaxed), 0);
+        m.note_shed();
+        assert_eq!(m.shed_count(), 1);
+        m.observe("/estimate", Duration::from_micros(300));
+        m.observe("/nope", Duration::from_micros(300)); // lands in `other`
+        assert_eq!(m.requests(), 2);
+        assert_eq!(m.endpoint("/estimate").count(), 1);
+        assert_eq!(m.endpoint("anything-unknown").count(), 1);
+    }
+}

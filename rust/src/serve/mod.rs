@@ -7,18 +7,31 @@
 //! HTTP/1.1 JSON service (`snac-pack serve`):
 //!
 //! * `GET  /healthz` — liveness + batching/cache counters;
+//! * `GET  /metrics` — request-latency histograms per endpoint,
+//!   connection gauges, flush sizes, memo hit rate, shed count;
 //! * `POST /estimate` — one genome (or raw feature vector) →
 //!   [`ResourceEstimate`] + `avg_resources` on the serving device;
 //! * `POST /estimate/batch` — `{"requests": [...]}` → `{"results": [...]}`;
 //! * `POST /shutdown` — drain and exit cleanly.
 //!
-//! A thread-per-connection front parses requests and blocks on the
-//! shared [`SurrogateEngine`] (`serve/engine.rs`), which coalesces all
+//! Connections are persistent (`Connection: keep-alive`, with an idle
+//! timeout) and served by a **fixed-size worker pool** fed from a
+//! **bounded admission queue**: the accept loop never spawns, and when
+//! every worker is busy and the queue is full it sheds the connection
+//! with a fast `503` instead of letting latency grow without bound
+//! ([`ServeTuning`] holds the knobs). Workers block on the shared
+//! [`SurrogateEngine`] (`serve/engine.rs`), which coalesces all
 //! concurrent requests into full `SUR_BATCH`-row interpreter executions
 //! and shares the predictor's memo cache — so the service returns
 //! bit-identical numbers to an in-process
 //! [`SurrogatePredictor`](crate::surrogate::SurrogatePredictor) call
 //! for the same inputs, at batch throughput under concurrency.
+//!
+//! One sizing caveat worth knowing: a keep-alive connection owns its
+//! worker until it closes or idles out, so `pool_size` bounds the
+//! number of *concurrently connected* keep-alive clients, not just
+//! concurrent requests. Size the pool for the client fleet, or have
+//! clients close when done (the one-shot [`http::request`] path does).
 //!
 //! Request schema (`POST /estimate`; batch wraps a list of these):
 //!
@@ -32,19 +45,24 @@
 //! `{"features": [72 floats]}` body bypasses genome encoding entirely.
 
 pub mod engine;
+pub mod metrics;
 /// HTTP framing now lives in the shared [`crate::net`] module (the TCP
 /// shard transport speaks the same wire format); re-exported here so
 /// `serve::http::request` keeps working for clients and tests.
 pub use crate::net as http;
 
+use std::collections::VecDeque;
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::time::Duration;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 pub use engine::{EngineConfig, SurrogateEngine};
+pub use metrics::ServeMetrics;
 
+use crate::eval::lock_unpoisoned;
 use crate::hls::FpgaDevice;
 use crate::nn::{Genome, SearchSpace, NUM_LAYERS, SUR_BATCH, SUR_FEATS};
 use crate::surrogate::{genome_features, ResourceEstimate};
@@ -66,6 +84,8 @@ pub struct ServeContext<'a> {
     pub sparsity: f64,
     /// Runtime platform name (health diagnostics).
     pub platform: String,
+    /// Request/connection observability, rendered by `GET /metrics`.
+    pub metrics: ServeMetrics,
 }
 
 impl ServeContext<'_> {
@@ -245,43 +265,201 @@ fn handle(ctx: &ServeContext<'_>, req: &http::Request) -> Handled {
                 },
             }
         }
+        ("GET", "/metrics") => ok(ctx.metrics.render(ctx.engine)),
         ("POST", "/shutdown") => Handled {
             status: 200,
             body: Json::obj(vec![("status", Json::Str("shutting down".to_string()))]),
             shutdown: true,
         },
-        (_, "/healthz") | (_, "/estimate") | (_, "/estimate/batch") | (_, "/shutdown") => {
-            error(405, format!("method {} not allowed here", req.method))
-        }
+        (_, "/healthz") | (_, "/metrics") | (_, "/estimate") | (_, "/estimate/batch")
+        | (_, "/shutdown") => error(405, format!("method {} not allowed here", req.method)),
         (_, path) => error(404, format!("no such endpoint `{path}`")),
     }
 }
 
-/// Serve one connection: read, route, respond, close.
-fn handle_connection(ctx: &ServeContext<'_>, mut stream: TcpStream, stop: &AtomicBool) {
-    let _ = stream.set_nonblocking(false);
-    let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
-    let _ = stream.set_write_timeout(Some(Duration::from_secs(30)));
-    let handled = match http::read_request(&mut stream) {
-        Ok(req) => handle(ctx, &req),
-        Err(e) => error(400, format!("{e:#}")),
-    };
-    let _ = http::write_response(&mut stream, handled.status, &handled.body.to_string());
-    if handled.shutdown {
-        stop.store(true, Ordering::SeqCst);
+/// Concurrency and keep-alive knobs for [`serve`].
+#[derive(Debug, Clone)]
+pub struct ServeTuning {
+    /// Connection worker threads (`--pool-size`; 0 = auto-size to the
+    /// machine's available parallelism, clamped to a sane band).
+    pub pool_size: usize,
+    /// Accepted connections allowed to wait for a worker before the
+    /// accept loop sheds with `503` (`--queue-depth`; 0 = 4x the pool).
+    pub queue_depth: usize,
+    /// How long a keep-alive connection may sit idle between requests
+    /// before the server closes it.
+    pub idle_timeout: Duration,
+}
+
+impl Default for ServeTuning {
+    fn default() -> Self {
+        ServeTuning { pool_size: 0, queue_depth: 0, idle_timeout: Duration::from_secs(30) }
     }
 }
 
+impl ServeTuning {
+    /// The worker count after auto-sizing.
+    pub fn resolved_pool(&self) -> usize {
+        if self.pool_size > 0 {
+            return self.pool_size;
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).clamp(2, 32)
+    }
+
+    /// The queue capacity after auto-sizing.
+    pub fn resolved_depth(&self) -> usize {
+        if self.queue_depth > 0 {
+            return self.queue_depth;
+        }
+        4 * self.resolved_pool()
+    }
+}
+
+/// The bounded admission queue between the accept loop and the worker
+/// pool.
+struct ConnQueue {
+    inner: Mutex<ConnQueueState>,
+    ready: Condvar,
+    capacity: usize,
+}
+
+struct ConnQueueState {
+    waiting: VecDeque<TcpStream>,
+    closed: bool,
+}
+
+impl ConnQueue {
+    fn new(capacity: usize) -> Self {
+        ConnQueue {
+            inner: Mutex::new(ConnQueueState { waiting: VecDeque::new(), closed: false }),
+            ready: Condvar::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// Admit a connection, or hand it back when the queue is full (the
+    /// caller sheds it) or closed.
+    fn push(&self, stream: TcpStream) -> Option<TcpStream> {
+        let mut st = lock_unpoisoned(&self.inner);
+        if st.closed || st.waiting.len() >= self.capacity {
+            return Some(stream);
+        }
+        st.waiting.push_back(stream);
+        drop(st);
+        self.ready.notify_one();
+        None
+    }
+
+    /// Block for the next connection; `None` once the queue is closed
+    /// *and* drained (workers finish queued connections on shutdown).
+    fn pop(&self) -> Option<TcpStream> {
+        let mut st = lock_unpoisoned(&self.inner);
+        loop {
+            if let Some(stream) = st.waiting.pop_front() {
+                return Some(stream);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.ready.wait(st).unwrap_or_else(std::sync::PoisonError::into_inner);
+        }
+    }
+
+    fn close(&self) {
+        lock_unpoisoned(&self.inner).closed = true;
+        self.ready.notify_all();
+    }
+}
+
+/// Serve one connection for its whole life: many requests per socket
+/// until the peer closes, asks for `Connection: close`, idles out, or
+/// the server is stopping.
+fn handle_connection(
+    ctx: &ServeContext<'_>,
+    stream: TcpStream,
+    stop: &AtomicBool,
+    idle_timeout: Duration,
+) {
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_read_timeout(Some(idle_timeout.max(Duration::from_millis(1))));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(30)));
+    let _ = stream.set_nodelay(true);
+    let mut reader = http::RequestReader::new(&stream);
+    loop {
+        let (handled, requested_keep) = match reader.next_request() {
+            Ok(req) => {
+                let t0 = Instant::now();
+                let handled = handle(ctx, &req);
+                ctx.metrics.observe(&req.path, t0.elapsed());
+                (handled, req.keep_alive)
+            }
+            Err(e) => {
+                // a clean close or idle expiry between requests is the
+                // normal end of a keep-alive connection; a framing fault
+                // gets a best-effort 400 (the peer may already be gone)
+                if !http::quiet_close(&e) {
+                    let body =
+                        Json::obj(vec![("error", Json::Str(format!("{e:#}")))]).to_string();
+                    let mut w = &stream;
+                    let _ = http::write_response(&mut w, 400, &body, false);
+                }
+                return;
+            }
+        };
+        if handled.shutdown {
+            stop.store(true, Ordering::SeqCst);
+        }
+        let keep = requested_keep && !handled.shutdown && !stop.load(Ordering::SeqCst);
+        let mut w = &stream;
+        if http::write_response(&mut w, handled.status, &handled.body.to_string(), keep).is_err()
+            || !keep
+        {
+            return;
+        }
+    }
+}
+
+/// A worker: pull connections off the admission queue until it closes.
+fn worker_loop(ctx: &ServeContext<'_>, queue: &ConnQueue, stop: &AtomicBool, idle: Duration) {
+    while let Some(stream) = queue.pop() {
+        let _guard = ctx.metrics.serving();
+        handle_connection(ctx, stream, stop, idle);
+    }
+}
+
+/// Refuse a connection with a fast `503` — the admission queue is full
+/// and letting it wait would only grow tail latency unbounded.
+fn shed(ctx: &ServeContext<'_>, stream: TcpStream) {
+    ctx.metrics.note_shed();
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(1)));
+    let body = Json::obj(vec![(
+        "error",
+        Json::Str("server saturated: worker pool and admission queue are full; retry".to_string()),
+    )])
+    .to_string();
+    let mut w = &stream;
+    let _ = http::write_response(&mut w, 503, &body, false);
+}
+
 /// Run the service on an already-bound listener until a client POSTs
-/// `/shutdown`. Owns the whole lifecycle: spawns the engine's flusher,
-/// accepts with a thread per connection, and drains the engine on the
-/// way out. Returns once every in-flight connection has been served.
-pub fn serve(ctx: &ServeContext<'_>, listener: TcpListener) -> Result<()> {
+/// `/shutdown`. Owns the whole lifecycle: spawns the engine's flusher
+/// and a fixed-size worker pool, admits connections through a bounded
+/// queue (shedding with `503` when full), and drains the queue and the
+/// engine on the way out. Returns once every admitted connection has
+/// been served.
+pub fn serve(ctx: &ServeContext<'_>, listener: TcpListener, tuning: &ServeTuning) -> Result<()> {
     listener.set_nonblocking(true).context("setting the listener non-blocking")?;
     let stop = AtomicBool::new(false);
     let stop = &stop;
+    let queue = ConnQueue::new(tuning.resolved_depth());
+    let queue = &queue;
+    let idle = tuning.idle_timeout;
     std::thread::scope(|s| -> Result<()> {
         s.spawn(|| ctx.engine.run_flusher());
+        let workers: Vec<_> = (0..tuning.resolved_pool())
+            .map(|_| s.spawn(|| worker_loop(ctx, queue, stop, idle)))
+            .collect();
         // transient accept() errors (ECONNABORTED from a client RST in
         // the backlog, EMFILE under a connection burst, EINTR) must not
         // take the whole service down; only a persistently failing
@@ -295,7 +473,10 @@ pub fn serve(ctx: &ServeContext<'_>, listener: TcpListener) -> Result<()> {
             match listener.accept() {
                 Ok((stream, _peer)) => {
                     accept_errors = 0;
-                    s.spawn(move || handle_connection(ctx, stream, stop));
+                    match queue.push(stream) {
+                        None => ctx.metrics.enqueued(),
+                        Some(refused) => shed(ctx, refused),
+                    }
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                     std::thread::sleep(Duration::from_millis(2));
@@ -314,8 +495,12 @@ pub fn serve(ctx: &ServeContext<'_>, listener: TcpListener) -> Result<()> {
                 }
             }
         };
-        // stop the engine so its flusher drains and exits; connection
-        // threads still in flight are joined by the scope below
+        // drain: workers finish every admitted connection before the
+        // engine stops, so queued requests still get real answers
+        queue.close();
+        for w in workers {
+            let _ = w.join();
+        }
         ctx.engine.shutdown();
         result
     })
@@ -364,6 +549,7 @@ mod tests {
             bits: 8,
             sparsity: 0.5,
             platform: rt.platform(),
+            metrics: ServeMetrics::new(),
         };
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap().to_string();
@@ -375,8 +561,9 @@ mod tests {
 
         let ctx_ref = &ctx;
         let addr_ref = addr.as_str();
+        let tuning = ServeTuning::default();
         std::thread::scope(|s| {
-            let server = s.spawn(move || serve(ctx_ref, listener));
+            let server = s.spawn(|| serve(ctx_ref, listener, &tuning));
 
             // health first (also waits out any accept-loop startup)
             let (status, body) = http::request(addr_ref, "GET", "/healthz", None).unwrap();
@@ -450,6 +637,34 @@ mod tests {
             let want = reference.predict(&genomes[0], &space, 8, 0.5).unwrap();
             assert_eq!(f64_field(&j, "bram"), want.bram);
 
+            // a keep-alive client sees identical numbers over one
+            // persistent connection
+            let mut ka = http::HttpClient::new(addr_ref.to_string(), Duration::from_secs(30));
+            for g in &genomes {
+                let (status, body) =
+                    ka.request("POST", "/estimate", Some(&genome_request(g, 8, 0.5))).unwrap();
+                assert_eq!(status, 200, "{body}");
+                let j = Json::parse(&body).unwrap();
+                let want = reference.predict(g, &space, 8, 0.5).unwrap();
+                assert_eq!(f64_field(&j, "lut"), want.lut);
+                assert_eq!(f64_field(&j, "ii_cc"), want.ii_cc);
+            }
+            drop(ka);
+
+            // /metrics reflects the traffic served so far
+            let (status, body) = http::request(addr_ref, "GET", "/metrics", None).unwrap();
+            assert_eq!(status, 200, "{body}");
+            let m = Json::parse(&body).unwrap();
+            assert!(f64_field(&m, "requests") >= 2.0 * genomes.len() as f64, "{body}");
+            let est = m.get("endpoints").and_then(|e| e.get("/estimate")).unwrap().clone();
+            assert!(f64_field(&est, "count") >= genomes.len() as f64, "{body}");
+            assert!(f64_field(&est, "p99_ms") >= f64_field(&est, "p50_ms"), "{body}");
+            let eng = m.get("engine").unwrap().clone();
+            // the keep-alive pass re-requested rows the first pass
+            // computed, so some submissions were pure memo hits
+            assert!(f64_field(&eng, "memo_hit_rate") > 0.0, "{body}");
+            assert!(f64_field(&eng, "rows_requested") >= f64_field(&eng, "rows_flushed"), "{body}");
+
             // clean shutdown
             let (status, _) = http::request(addr_ref, "POST", "/shutdown", None).unwrap();
             assert_eq!(status, 200);
@@ -479,6 +694,7 @@ mod tests {
             bits: 8,
             sparsity: 0.5,
             platform: "test".to_string(),
+            metrics: ServeMetrics::new(),
         };
         let post = |path: &str, body: &str| {
             handle(
@@ -487,6 +703,8 @@ mod tests {
                     method: "POST".to_string(),
                     path: path.to_string(),
                     body: body.to_string(),
+                    keep_alive: true,
+                    bearer: None,
                 },
             )
         };
@@ -542,15 +760,30 @@ mod tests {
                 method: "GET".to_string(),
                 path: "/nope".to_string(),
                 body: String::new(),
+                keep_alive: true,
+                bearer: None,
             },
         );
         assert_eq!(miss.status, 404);
         let wrong = handle(
             &ctx,
             &http::Request {
+                method: "POST".to_string(),
+                path: "/metrics".to_string(),
+                body: String::new(),
+                keep_alive: true,
+                bearer: None,
+            },
+        );
+        assert_eq!(wrong.status, 405);
+        let wrong = handle(
+            &ctx,
+            &http::Request {
                 method: "GET".to_string(),
                 path: "/estimate".to_string(),
                 body: String::new(),
+                keep_alive: true,
+                bearer: None,
             },
         );
         assert_eq!(wrong.status, 405);
@@ -558,5 +791,92 @@ mod tests {
         let empty = post("/estimate/batch", r#"{"requests": []}"#);
         assert_eq!(empty.status, 200);
         assert_eq!(empty.body.get("results").unwrap().items().len(), 0);
+    }
+
+    /// Admission control: with one worker and a one-deep queue, a third
+    /// concurrent connection is shed with a fast `503` while the two
+    /// admitted requests complete with estimates bit-identical to the
+    /// reference predictor — saturation degrades availability, never
+    /// correctness.
+    #[test]
+    fn saturated_queue_sheds_503_while_admitted_requests_complete() {
+        let rt = runtime();
+        let sur = predictor(&rt);
+        // a long batching deadline pins the lone worker on the first
+        // request while the queue fills behind it
+        let engine = SurrogateEngine::new(
+            &sur,
+            EngineConfig { deadline: Duration::from_millis(1500), max_rows: SUR_BATCH },
+        );
+        let space = SearchSpace::table1();
+        let device = FpgaDevice::vu13p();
+        let ctx = ServeContext {
+            engine: &engine,
+            space: &space,
+            device: &device,
+            bits: 8,
+            sparsity: 0.5,
+            platform: rt.platform(),
+            metrics: ServeMetrics::new(),
+        };
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let reference = predictor(&rt);
+        let mut rng = Rng::new(11);
+        let g1 = space.sample(&mut rng);
+        let g2 = space.sample(&mut rng);
+        let tuning =
+            ServeTuning { pool_size: 1, queue_depth: 1, idle_timeout: Duration::from_secs(5) };
+
+        let ctx_ref = &ctx;
+        let addr_ref = addr.as_str();
+        std::thread::scope(|s| {
+            let server = s.spawn(|| serve(ctx_ref, listener, &tuning));
+
+            // A occupies the lone worker for ~the batching deadline
+            let body_a = genome_request(&g1, 8, 0.5);
+            let a = s.spawn(move || {
+                http::request(addr_ref, "POST", "/estimate", Some(&body_a)).unwrap()
+            });
+            std::thread::sleep(Duration::from_millis(400));
+            // B fills the one queue slot
+            let body_b = genome_request(&g2, 8, 0.5);
+            let b = s.spawn(move || {
+                http::request(addr_ref, "POST", "/estimate", Some(&body_b)).unwrap()
+            });
+            std::thread::sleep(Duration::from_millis(400));
+
+            // C finds pool and queue full: fast 503, not a slow wait
+            let t0 = Instant::now();
+            let (status, body) = http::request(addr_ref, "GET", "/healthz", None).unwrap();
+            assert_eq!(status, 503, "{body}");
+            assert!(body.contains("saturated"), "{body}");
+            assert!(
+                t0.elapsed() < Duration::from_millis(1000),
+                "load shedding must be immediate, took {:?}",
+                t0.elapsed()
+            );
+
+            // the admitted requests still complete, bit-identical
+            let (status, body) = a.join().unwrap();
+            assert_eq!(status, 200, "{body}");
+            let want = reference.predict(&g1, &space, 8, 0.5).unwrap();
+            assert_eq!(f64_field(&Json::parse(&body).unwrap(), "lut"), want.lut);
+            let (status, body) = b.join().unwrap();
+            assert_eq!(status, 200, "{body}");
+            let want = reference.predict(&g2, &space, 8, 0.5).unwrap();
+            assert_eq!(f64_field(&Json::parse(&body).unwrap(), "lut"), want.lut);
+
+            // the shed is visible on /metrics
+            let (status, body) = http::request(addr_ref, "GET", "/metrics", None).unwrap();
+            assert_eq!(status, 200, "{body}");
+            let m = Json::parse(&body).unwrap();
+            let conns = m.get("connections").unwrap().clone();
+            assert!(f64_field(&conns, "shed") >= 1.0, "{body}");
+
+            let (status, _) = http::request(addr_ref, "POST", "/shutdown", None).unwrap();
+            assert_eq!(status, 200);
+            server.join().unwrap().unwrap();
+        });
     }
 }

@@ -1,14 +1,19 @@
 //! Property-style fuzz of the shared HTTP framing parser (`net/`).
 //!
 //! Both services — the estimation server and the TCP shard transport —
-//! read untrusted bytes through `net::read_request`, so the parser must
-//! hold two properties against arbitrary input:
+//! read untrusted bytes through `net::RequestReader`, so the parser must
+//! hold three properties against arbitrary input:
 //!
 //! 1. **No panics.** Malformed framing (truncated heads, bodies that
 //!    never arrive, binary garbage) surfaces as a typed `anyhow` error,
 //!    never an unwind.
 //! 2. **Bounded admission.** A parsed request never carries a body over
 //!    `MAX_BODY`, however large the declared `Content-Length`.
+//! 3. **Typed connection lifecycle.** On a persistent connection the
+//!    parser distinguishes a clean close between requests
+//!    (`NetError::Closed`), an idle keep-alive expiry (`NetError::Idle`),
+//!    and a truncation inside a request (`NetError::Truncated`) — the
+//!    server's decision to log, shed, or silently reclaim hangs on it.
 //!
 //! Everything is seeded (xorshift64), so a failure reproduces exactly;
 //! the reader delivers bytes in randomly sized chunks to exercise split
@@ -16,7 +21,7 @@
 
 use std::io::Read;
 
-use snac_pack::net::{read_request, MAX_BODY, MAX_HEAD};
+use snac_pack::net::{read_request, NetError, RequestReader, MAX_BODY, MAX_HEAD};
 
 /// Tiny deterministic PRNG — the test must not depend on hash ordering
 /// or OS entropy, so a failing seed can be replayed verbatim.
@@ -185,7 +190,7 @@ fn header_floods_are_capped() {
     // one giant request line, no terminator — the head budget exhausts
     let raw = vec![b'A'; MAX_HEAD * 2];
     let err = read_request(SplitReader::new(raw, 11)).unwrap_err();
-    assert!(format!("{err:#}").contains("path"), "{err:#}");
+    assert!(format!("{err:#}").contains("head cap"), "{err:#}");
 
     // endless headers after a valid request line: the cap truncates the
     // flood; whatever parses must still respect the body bound
@@ -221,4 +226,157 @@ fn random_garbage_never_panics() {
             Err(_) => {}
         }
     }
+}
+
+/// A pipelined connection — many requests back-to-back on one byte
+/// stream — parses each request intact through arbitrarily split reads,
+/// then reports the EOF between requests as a clean [`NetError::Closed`].
+#[test]
+fn pipelined_requests_parse_in_order_through_split_reads() {
+    let mut rng = XorShift::new(0x5eed_0005);
+    for round in 0..50u64 {
+        let mut raw = Vec::new();
+        let mut expected = Vec::new();
+        for _ in 0..1 + rng.below(6) {
+            let (bytes, _, method, path, body) = valid_request(&mut rng);
+            raw.extend_from_slice(&bytes);
+            expected.push((method, path, body));
+        }
+        let mut reader = RequestReader::new(SplitReader::new(raw, 0x9199 ^ round));
+        for (i, (method, path, body)) in expected.iter().enumerate() {
+            let req = reader
+                .next_request()
+                .unwrap_or_else(|e| panic!("round {round} request {i}: {e:#}"));
+            assert_eq!(&req.method, method, "round {round} request {i}");
+            assert_eq!(&req.path, path, "round {round} request {i}");
+            assert_eq!(&req.body, body, "round {round} request {i}");
+        }
+        let err = reader.next_request().expect_err("the stream is exhausted");
+        assert!(
+            matches!(err.downcast_ref::<NetError>(), Some(NetError::Closed)),
+            "round {round}: EOF between requests must be Closed, got {err:#}"
+        );
+    }
+}
+
+/// The same truncation point means two different things depending on
+/// where it lands: *between* requests it is a clean close (the peer was
+/// simply done), *inside* a request it is a typed `Truncated` framing
+/// error (the peer promised bytes that never came).
+#[test]
+fn truncation_between_requests_closes_but_inside_a_request_is_typed() {
+    let mut rng = XorShift::new(0x5eed_0006);
+    let mut inside = 0usize;
+    for round in 0..200u64 {
+        let (first, ..) = valid_request(&mut rng);
+        let (second, ..) = valid_request(&mut rng);
+        let boundary = first.len();
+        let mut raw = first;
+        raw.extend_from_slice(&second);
+
+        // cut at the boundary: request 1 parses, then a clean close
+        let mut reader = RequestReader::new(SplitReader::new(raw[..boundary].to_vec(), round));
+        reader.next_request().expect("the complete first request parses");
+        let err = reader.next_request().unwrap_err();
+        assert!(
+            matches!(err.downcast_ref::<NetError>(), Some(NetError::Closed)),
+            "round {round}: boundary cut must be Closed, got {err:#}"
+        );
+
+        // cut strictly inside request 2: request 1 parses, then Truncated
+        if second.len() > 1 {
+            let cut = boundary + 1 + rng.below(second.len() - 1);
+            let mut reader = RequestReader::new(SplitReader::new(raw[..cut].to_vec(), round));
+            reader.next_request().expect("the complete first request parses");
+            let err = reader.next_request().unwrap_err();
+            assert!(
+                matches!(err.downcast_ref::<NetError>(), Some(NetError::Truncated { .. })),
+                "round {round}: mid-request cut must be Truncated, got {err:#}"
+            );
+            inside += 1;
+        }
+    }
+    assert!(inside > 100, "the generator kept producing 1-byte requests");
+}
+
+/// A keep-alive connection that goes quiet *between* requests expires as
+/// [`NetError::Idle`] once the socket's read timeout elapses — the
+/// server-side signal to reclaim the worker without logging an error.
+#[test]
+fn idle_keep_alive_connections_expire_with_a_typed_idle_error() {
+    use std::io::Write as _;
+    use std::net::TcpListener;
+    use std::time::Duration;
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    std::thread::scope(|s| {
+        s.spawn(move || {
+            let mut stream = std::net::TcpStream::connect(addr).unwrap();
+            stream
+                .write_all(b"GET /one HTTP/1.1\r\n\r\n")
+                .unwrap();
+            // then go quiet, holding the socket open past the timeout
+            std::thread::sleep(Duration::from_millis(600));
+        });
+        let (stream, _) = listener.accept().unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_millis(100)))
+            .unwrap();
+        let mut reader = RequestReader::new(stream);
+        let req = reader.next_request().expect("the first request parses");
+        assert_eq!(req.path, "/one");
+        let err = reader.next_request().expect_err("the peer went quiet");
+        assert!(
+            matches!(err.downcast_ref::<NetError>(), Some(NetError::Idle)),
+            "idle between requests must be Idle, got {err:#}"
+        );
+        assert!(snac_pack::net::quiet_close(&err), "Idle closes quietly");
+    });
+}
+
+/// A server trickling its response one byte at a time cannot stretch a
+/// client past its overall deadline: `request_with_timeout` bounds the
+/// whole exchange, not each socket read.
+#[test]
+fn trickled_responses_hit_the_overall_client_deadline() {
+    use std::io::{Read as _, Write as _};
+    use std::net::TcpListener;
+    use std::time::{Duration, Instant};
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    std::thread::scope(|s| {
+        s.spawn(|| {
+            let (mut stream, _) = listener.accept().unwrap();
+            let mut scratch = [0u8; 1024];
+            let _ = stream.read(&mut scratch); // swallow the request head
+            // 100 bytes at 20ms each: far slower than the 250ms deadline,
+            // but each individual read makes progress
+            for b in b"HTTP/1.1 200 OK\r\nContent-Length: 1000\r\n\r\n".iter().cycle().take(100) {
+                if stream.write_all(&[*b]).is_err() {
+                    return;
+                }
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        });
+        let t0 = Instant::now();
+        let err = snac_pack::net::request_with_timeout(
+            &addr,
+            "GET",
+            "/slow",
+            None,
+            Duration::from_millis(250),
+        )
+        .expect_err("a trickled response must time out");
+        let elapsed = t0.elapsed();
+        assert!(
+            matches!(err.downcast_ref::<NetError>(), Some(NetError::Timeout { .. })),
+            "expected a typed Timeout, got {err:#}"
+        );
+        assert!(
+            elapsed < Duration::from_millis(1500),
+            "deadline must be overall, not per-read: waited {elapsed:?}"
+        );
+    });
 }

@@ -101,9 +101,11 @@ fn tcp_fleet_search_is_bit_identical_to_single_process() {
         .spawn()
         .expect("spawn TCP driver");
 
-    // scrape the bound address from the driver's startup log
+    // scrape the run token and the bound address from the driver's
+    // startup log (the token line precedes the listening line)
     let mut reader = BufReader::new(driver.stderr.take().expect("driver stderr piped"));
     let mut log = String::new();
+    let mut token = None;
     let addr = loop {
         let mut line = String::new();
         let n = reader.read_line(&mut line).expect("reading driver log");
@@ -112,17 +114,22 @@ fn tcp_fleet_search_is_bit_identical_to_single_process() {
             let _ = driver.kill();
             panic!("driver exited before announcing its address:\n{log}");
         }
+        if let Some(rest) = line.split("run token: ").nth(1) {
+            token = Some(rest.trim().to_string());
+        }
         if let Some(rest) = line.split("tcp://").nth(1) {
             break rest.trim().to_string();
         }
     };
+    let token = token.unwrap_or_else(|| panic!("driver never printed its run token:\n{log}"));
 
-    // two external workers join over loopback — no shared filesystem
-    // state beyond the artifacts the manifest points at
+    // two external workers join over loopback with the scraped token —
+    // no shared filesystem state beyond the artifacts the manifest
+    // points at
     let workers: Vec<_> = (0..2)
         .map(|_| {
             Command::new(env!("CARGO_BIN_EXE_snac-pack"))
-                .args(["worker", "--connect", &addr, "--workers", "1"])
+                .args(["worker", "--connect", &addr, "--token", &token, "--workers", "1"])
                 .stderr(Stdio::piped())
                 .spawn()
                 .expect("spawn TCP worker")
