@@ -7,7 +7,9 @@
 //! anywhere and stays comparable across PRs). Three phases:
 //!
 //! 1. **Worker scaling** — trials/sec at `workers ∈ {1, 2, 4}`, verifying
-//!    the identical trial stream for every worker count.
+//!    the identical trial stream for every worker count; then the same
+//!    4-worker budget with the tracer live (`telemetry::init`), asserting
+//!    an identical trial stream and recording the tracing overhead.
 //! 2. **Streaming vs chunked dispatch** — under heavy per-trial cost
 //!    skew, compares the streaming completion queue against the old
 //!    chunked-barrier dispatch (reproduced here), asserting the stream
@@ -61,6 +63,8 @@ use snac_pack::runtime::Runtime;
 use snac_pack::search::Nsga2Config;
 use snac_pack::serve::{http, EngineConfig, ServeContext, ServeMetrics, ServeTuning, SurrogateEngine};
 use snac_pack::surrogate::{genome_features, SurrogateParams, SurrogatePredictor};
+use snac_pack::telemetry;
+use snac_pack::util::stats::sorted_quantile;
 use snac_pack::util::{Json, Rng};
 
 const TRIALS: usize = 48;
@@ -657,15 +661,6 @@ fn bench_surrogate_batching() -> anyhow::Result<Json> {
     ]))
 }
 
-/// Exact sample quantile (ceil-rank) over an ascending-sorted slice.
-fn sample_quantile(sorted_ms: &[f64], q: f64) -> f64 {
-    if sorted_ms.is_empty() {
-        return 0.0;
-    }
-    let rank = ((q * sorted_ms.len() as f64).ceil() as usize).clamp(1, sorted_ms.len());
-    sorted_ms[rank - 1]
-}
-
 /// Phase 6b (`serve_load`): sustained `/estimate` throughput and latency
 /// quantiles under concurrent clients, one-shot vs keep-alive.
 ///
@@ -832,14 +827,14 @@ fn bench_serve_load() -> anyhow::Result<Json> {
              p50 {:.2}ms p99 {:.2}ms  ({CLIENTS} clients)",
             common::fmt(*secs),
             requests as f64 / secs,
-            sample_quantile(lat, 0.50),
-            sample_quantile(lat, 0.99),
+            sorted_quantile(lat, 0.50),
+            sorted_quantile(lat, 0.99),
         );
         Json::obj(vec![
             ("seconds", Json::Num(*secs)),
             ("requests_per_sec", Json::Num(requests as f64 / secs)),
-            ("p50_ms", Json::Num(sample_quantile(lat, 0.50))),
-            ("p99_ms", Json::Num(sample_quantile(lat, 0.99))),
+            ("p50_ms", Json::Num(sorted_quantile(lat, 0.50))),
+            ("p99_ms", Json::Num(sorted_quantile(lat, 0.99))),
         ])
     };
     let one_shot_json = mode("one_shot", &one_shot);
@@ -881,6 +876,7 @@ fn main() -> anyhow::Result<()> {
     let mut results = Vec::new();
     let mut serial_genomes: Option<Vec<Genome>> = None;
     let mut serial_secs = 0.0f64;
+    let mut untraced4_secs = f64::NAN;
     for workers in [1usize, 2, 4] {
         // warm-up + best-of-3, matching the in-repo harness style
         run(workers);
@@ -897,6 +893,9 @@ fn main() -> anyhow::Result<()> {
                 expected, &genomes,
                 "worker count must not change the trial stream"
             ),
+        }
+        if workers == 4 {
+            untraced4_secs = secs;
         }
         let tps = TRIALS as f64 / secs;
         let speedup = serial_secs / secs;
@@ -917,6 +916,46 @@ fn main() -> anyhow::Result<()> {
         ]));
     }
     println!("determinism: trial streams identical across worker counts");
+
+    // ---- phase 1b: tracing overhead ----
+    // The same 4-worker budget with the tracer live: generation, trial,
+    // and dispatch spans all record. The trial stream must stay
+    // bit-identical and the throughput cost marginal (CI asserts the
+    // recorded overhead_pct stays under its budget).
+    telemetry::init(None);
+    run(4); // traced warm-up
+    telemetry::drain();
+    let mut traced_secs = f64::INFINITY;
+    let mut traced_spans = 0usize;
+    for _ in 0..3 {
+        let (outcome, secs) = run(4);
+        let spans = telemetry::drain().len();
+        let genomes: Vec<Genome> = outcome.records.iter().map(|r| r.genome.clone()).collect();
+        assert_eq!(
+            serial_genomes.as_ref().expect("phase 1 ran"),
+            &genomes,
+            "tracing must not change the trial stream"
+        );
+        if secs < traced_secs {
+            traced_secs = secs;
+            traced_spans = spans;
+        }
+    }
+    telemetry::disable();
+    let overhead_pct = (traced_secs - untraced4_secs) / untraced4_secs * 100.0;
+    println!(
+        "bench search/tracing_overhead   {:>10}  {overhead_pct:>+6.2}% vs untraced  \
+         ({traced_spans} spans/run)",
+        common::fmt(traced_secs)
+    );
+    println!("determinism: traced trial stream identical to untraced");
+    let tracing_overhead = Json::obj(vec![
+        ("workers", Json::Num(4.0)),
+        ("untraced_seconds", Json::Num(untraced4_secs)),
+        ("traced_seconds", Json::Num(traced_secs)),
+        ("overhead_pct", Json::Num(overhead_pct)),
+        ("spans_per_run", Json::Num(traced_spans as f64)),
+    ]);
 
     // ---- phase 2: streaming vs chunked dispatch under cost skew ----
     let skew_genomes = distinct_genomes(SKEW_TRIALS, 23);
@@ -1067,6 +1106,7 @@ fn main() -> anyhow::Result<()> {
             ]),
         ),
         ("results", Json::Arr(results)),
+        ("tracing_overhead", tracing_overhead),
         (
             "streaming_vs_chunked",
             Json::obj(vec![

@@ -138,6 +138,18 @@ pub struct Preset {
     pub connect: Option<String>,
     /// Estimation-service settings (`snac-pack serve`).
     pub serve: ServeConfig,
+    /// Structured-trace output (`--trace-out PATH`): write a Chrome-trace
+    /// `trace.json` (plus a JSONL flight-recorder log beside it) covering
+    /// the whole run. `None` = tracing off (the default). Tracing is
+    /// observational only — trial databases are bit-identical with it on
+    /// or off — and the path rides `run.json` so shard workers of a
+    /// traced run enable their tracers too (each worker exports through
+    /// its result publications, not to this path).
+    pub trace_out: Option<String>,
+    /// Per-op interpreter timing sample rate (`--trace-ops N`): record a
+    /// span for every Nth executed plan step. `0` = off (the default) so
+    /// kernels stay fast; only meaningful when `trace_out` is set.
+    pub trace_ops: u64,
 }
 
 impl Preset {
@@ -171,6 +183,8 @@ impl Preset {
                 listen: None,
                 connect: None,
                 serve: ServeConfig::default(),
+                trace_out: None,
+                trace_ops: 0,
             }),
             "ci" => Ok(Preset {
                 name: name.into(),
@@ -204,6 +218,8 @@ impl Preset {
                 listen: None,
                 connect: None,
                 serve: ServeConfig::default(),
+                trace_out: None,
+                trace_ops: 0,
             }),
             "quickstart" => Ok(Preset {
                 name: name.into(),
@@ -241,6 +257,8 @@ impl Preset {
                 listen: None,
                 connect: None,
                 serve: ServeConfig::default(),
+                trace_out: None,
+                trace_ops: 0,
             }),
             other => bail!("unknown preset `{other}` (paper | ci | quickstart)"),
         }
@@ -291,6 +309,10 @@ impl Preset {
             }
             "run_dir" => self.run_dir = Some(value.to_string()),
             "checkpoint_interval" => self.search.checkpoint_interval = uint()?,
+            "trace_out" => self.trace_out = Some(value.to_string()),
+            "trace_ops" => {
+                self.trace_ops = value.parse().context("trace_ops expects a sample rate")?
+            }
             "listen" => self.listen = Some(value.to_string()),
             "connect" => self.connect = Some(value.to_string()),
             "spawn_workers" => {
@@ -310,7 +332,7 @@ impl Preset {
     /// over `by_name` — so the codec's surface is the override surface by
     /// construction, and fields outside it (e.g. surrogate learning rate)
     /// stay pinned to the named preset on both ends.
-    const OVERRIDE_KEYS: [&str; 27] = [
+    const OVERRIDE_KEYS: [&str; 29] = [
         "trials",
         "population",
         "epochs",
@@ -338,6 +360,8 @@ impl Preset {
         "listen",
         "connect",
         "spawn_workers",
+        "trace_out",
+        "trace_ops",
     ];
 
     fn get(&self, key: &str) -> Option<String> {
@@ -370,6 +394,14 @@ impl Preset {
             "listen" => self.listen.clone(),
             "connect" => self.connect.clone(),
             "spawn_workers" => self.spawn_workers.map(|v| v.to_string()),
+            "trace_out" => self.trace_out.clone(),
+            "trace_ops" => {
+                if self.trace_ops == 0 {
+                    None
+                } else {
+                    Some(self.trace_ops.to_string())
+                }
+            }
             _ => None,
         }
     }
@@ -476,6 +508,13 @@ mod tests {
         assert_eq!(p.serve.pool_size, 3);
         assert_eq!(p.serve.queue_depth, 9);
         assert!(p.set("pool_size", "many").is_err());
+        assert_eq!(p.trace_out, None, "tracing is opt-in");
+        assert_eq!(p.trace_ops, 0, "per-op sampling is opt-in");
+        p.set("trace_out", "results/trace.json").unwrap();
+        p.set("trace_ops", "16").unwrap();
+        assert_eq!(p.trace_out.as_deref(), Some("results/trace.json"));
+        assert_eq!(p.trace_ops, 16);
+        assert!(p.set("trace_ops", "every").is_err());
         assert!(p.set("bogus", "1").is_err());
         assert!(p.set("spawn_workers", "lots").is_err());
         assert!(p.set("port", "70000").is_err(), "port must fit a u16");
@@ -506,6 +545,8 @@ mod tests {
         p.set("checkpoint_interval", "3").unwrap();
         p.set("listen", "0.0.0.0:7979").unwrap();
         p.set("connect", "driver.local:7979").unwrap();
+        p.set("trace_out", "/tmp/trace.json").unwrap();
+        p.set("trace_ops", "8").unwrap();
         let text = p.to_json().to_string();
         let back = Preset::from_json(&crate::util::Json::parse(&text).unwrap()).unwrap();
         assert_eq!(back.name, "quickstart");
@@ -531,6 +572,8 @@ mod tests {
         assert_eq!(back.search.checkpoint_interval, 3);
         assert_eq!(back.listen.as_deref(), Some("0.0.0.0:7979"));
         assert_eq!(back.connect.as_deref(), Some("driver.local:7979"));
+        assert_eq!(back.trace_out.as_deref(), Some("/tmp/trace.json"));
+        assert_eq!(back.trace_ops, 8, "trace knobs ride run.json like threads does");
         // garbage is rejected with context
         assert!(Preset::from_json(&crate::util::Json::parse("{}").unwrap()).is_err());
     }

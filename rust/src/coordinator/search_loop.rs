@@ -34,6 +34,7 @@ use crate::objectives::{ObjectiveContext, ObjectiveKind};
 use crate::pareto;
 use crate::runtime::Runtime;
 use crate::search::{EvaluatedIndividual, Nsga2, Nsga2Config};
+use crate::telemetry;
 use crate::trainer::TrainConfig;
 use crate::util::{Json, Rng};
 
@@ -503,6 +504,9 @@ pub fn global_search_with<P: EvalPool>(
         // above, emission preserves trial order, and a duplicate genome
         // reuses exactly the evaluation its first occurrence produced.
         let mut evaluated = Vec::with_capacity(take);
+        let mut gen_span = telemetry::span("generation", "search");
+        gen_span.arg("generation", Json::Num(generation as f64));
+        gen_span.arg("trials", Json::Num(take as f64));
         pool.evaluate_stream_dyn(requests, &mut |trial| {
             let record = TrialRecord {
                 id: trial.trial_id,

@@ -16,7 +16,8 @@ use std::sync::{mpsc, Mutex};
 use anyhow::Result;
 
 use crate::nn::Genome;
-use crate::util::Rng;
+use crate::telemetry;
+use crate::util::{Json, Rng};
 
 use super::cache::{lock_unpoisoned, EvalCache};
 use super::{EvalPool, EvalRequest, TrialEvaluation, TrialEvaluator};
@@ -218,7 +219,11 @@ impl<E: TrialEvaluator> ParallelEvaluator<E> {
             // thread, interleaving evaluation with in-order emission (so a
             // progress sink streams even at `--workers 1`).
             while let Some((idx, genome, mut rng)) = pending.pop_front() {
-                match self.inner.evaluate(&genome, &mut rng) {
+                let mut span = telemetry::span("trial", "eval");
+                span.arg("dispatch", Json::Num(idx as f64));
+                let outcome = self.inner.evaluate(&genome, &mut rng);
+                drop(span);
+                match outcome {
                     Ok(evaluation) => {
                         self.commit(genome, evaluation);
                         self.drain_ready(&requests, &mut fresh, &mut next, &mut on_trial);
@@ -236,13 +241,22 @@ impl<E: TrialEvaluator> ParallelEvaluator<E> {
             std::thread::scope(|s| {
                 for _ in 0..workers {
                     let tx = tx.clone();
-                    s.spawn(move || loop {
-                        let item = lock_unpoisoned(queue).pop_front();
-                        let Some((idx, genome, mut rng)) = item else { break };
-                        let result = self.inner.evaluate(&genome, &mut rng);
-                        if tx.send((idx, genome, result)).is_err() {
-                            break;
+                    s.spawn(move || {
+                        loop {
+                            let item = lock_unpoisoned(queue).pop_front();
+                            let Some((idx, genome, mut rng)) = item else { break };
+                            let mut span = telemetry::span("trial", "eval");
+                            span.arg("dispatch", Json::Num(idx as f64));
+                            let result = self.inner.evaluate(&genome, &mut rng);
+                            drop(span);
+                            if tx.send((idx, genome, result)).is_err() {
+                                break;
+                            }
                         }
+                        // pool threads die with the scope: hand any
+                        // buffered spans to the global sink now rather
+                        // than relying on thread-exit destructors
+                        telemetry::flush_thread();
                     });
                 }
                 // the workers hold the only remaining senders, so the

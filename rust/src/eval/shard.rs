@@ -64,6 +64,7 @@ use anyhow::{Context, Result};
 
 use crate::nn::Genome;
 use crate::objectives::ObjectiveKind;
+use crate::telemetry;
 use crate::util::Json;
 
 use super::parallel::drain_ready;
@@ -252,6 +253,7 @@ fn result_to_json(
     shard: &str,
     rows: &[(usize, Result<TrialEvaluation, String>)],
     manifest: Option<&str>,
+    spans: Option<Json>,
 ) -> Json {
     let rows = rows
         .iter()
@@ -266,13 +268,16 @@ fn result_to_json(
             ]),
         })
         .collect();
-    with_manifest(
-        Json::obj(vec![
-            ("shard", Json::Str(shard.to_string())),
-            ("results", Json::Arr(rows)),
-        ]),
-        manifest,
-    )
+    let mut doc = Json::obj(vec![
+        ("shard", Json::Str(shard.to_string())),
+        ("results", Json::Arr(rows)),
+    ]);
+    // the worker's span buffer rides the publication under a key the
+    // row parser never reads — tracing cannot perturb trial numbers
+    if let (Json::Obj(map), Some(spans)) = (&mut doc, spans) {
+        map.insert("spans".to_string(), spans);
+    }
+    with_manifest(doc, manifest)
 }
 
 fn worker_failure_to_json(shard: &str, detail: &str, manifest: Option<&str>) -> Json {
@@ -483,6 +488,10 @@ impl ShardDriver {
 
         if !pending.is_empty() {
             let batch = self.batch.fetch_add(1, Ordering::Relaxed);
+            let mut span = telemetry::span("dispatch", "shard");
+            span.arg("batch", Json::Num(batch as f64));
+            span.arg("pending", Json::Num(pending.len() as f64));
+            span.arg("shards", Json::Num(self.shards.min(pending.len()) as f64));
             // sweep this driver's stragglers before dispatching: a
             // reclaimed zombie may have re-published a result *after*
             // the consumed copy was deleted — nothing will ever read it,
@@ -566,6 +575,14 @@ impl ShardDriver {
                 let Some(text) = self.transport.take_result(&s.name)? else {
                     continue;
                 };
+                // stitch the worker's attached span buffer into this
+                // process's trace before the rows are judged — even a
+                // corrupt-row result keeps its timeline
+                if telemetry::enabled() {
+                    if let Ok(doc) = Json::parse(&text) {
+                        telemetry::ingest_remote(&doc);
+                    }
+                }
                 match parse_result_file(&text, &s.requests, self.manifest.as_deref()) {
                     Ok(Ok(rows)) => {
                         for (k, (req, outcome)) in s.requests.iter().zip(rows).enumerate() {
@@ -818,8 +835,12 @@ where
                     ShardTask::from_json(&Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?)
                 })
                 .map(|task| {
+                    let mut span = telemetry::span("shard", "eval");
+                    span.arg("shard", Json::Str(task.shard.clone()));
+                    span.arg("trials", Json::Num(task.requests.len() as f64));
                     let outcomes = eval_shard(&task.stage, &task.requests);
                     summary.trials += outcomes.len();
+                    drop(span);
                     let rows: Vec<(usize, Result<TrialEvaluation, String>)> = task
                         .requests
                         .iter()
@@ -828,7 +849,13 @@ where
                             (req.trial_id, outcome.map_err(|e| format!("{e:#}")))
                         })
                         .collect();
-                    result_to_json(&task.shard, &rows, opts.manifest.as_deref()).to_string()
+                    // attach this worker's span buffer to the publication
+                    // (drained here; pool threads flush every few records,
+                    // so a straggler span rides the *next* publication —
+                    // same trace, just a later attach)
+                    let spans = telemetry::enabled().then(telemetry::local_spans_json);
+                    result_to_json(&task.shard, &rows, opts.manifest.as_deref(), spans)
+                        .to_string()
                 })
                 .unwrap_or_else(|e| {
                     worker_failure_to_json(&name, &format!("{e:#}"), opts.manifest.as_deref())
@@ -990,7 +1017,7 @@ mod tests {
             (1, Err("mock trial failure".to_string())),
             (2, Ok(toy_score(&space, &genomes[2], &mut rng))),
         ];
-        let text = result_to_json(&task.shard, &rows, Some("fp-1")).to_string();
+        let text = result_to_json(&task.shard, &rows, Some("fp-1"), None).to_string();
         let parsed = parse_result_file(&text, &task.requests, Some("fp-1"))
             .unwrap()
             .unwrap();

@@ -50,6 +50,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use crate::net;
+use crate::telemetry;
 use crate::util::Json;
 
 use super::cache::lock_unpoisoned;
@@ -147,6 +148,11 @@ impl std::error::Error for ShardAuthError {}
 
 /// Route one parsed request against the host state.
 fn route(shared: &HostShared, req: &net::Request) -> (u16, String) {
+    // a traced worker echoes the run's trace ID on every request; mark
+    // the arrival on the driver timeline (instant event, no duration)
+    if req.trace.is_some() && telemetry::enabled() {
+        telemetry::event("rpc", "net", vec![("path", Json::Str(req.path.clone()))]);
+    }
     // admission control: shard mutations require this run's token
     if req.path.starts_with("/shard/") && req.bearer.as_deref() != Some(shared.token.as_str()) {
         let detail = if req.bearer.is_some() { "token mismatch" } else { "missing bearer token" };
@@ -603,6 +609,10 @@ impl ShardTransport for TcpWorker {
 
     fn finish_claim(&self, name: &str) {
         let _ = self.post("/shard/done", &Self::named_body(name));
+    }
+
+    fn set_trace(&self, id: &str) {
+        lock_unpoisoned(&self.client).set_trace(id);
     }
 }
 

@@ -249,6 +249,13 @@ pub trait ShardTransport: Send + Sync {
     /// Release a completed claim (best-effort tidy-up; the driver's
     /// scrub covers crashed workers).
     fn finish_claim(&self, name: &str);
+
+    /// Adopt a trace ID for span propagation: networked transports echo
+    /// it on every subsequent request (the `X-Snac-Trace` header) so the
+    /// driver can attribute protocol traffic to the run's trace. Default
+    /// no-op — file transports have no request to tag, and tracing never
+    /// changes protocol behaviour.
+    fn set_trace(&self, _id: &str) {}
 }
 
 /// The original shared-filesystem transport: every operation is a file

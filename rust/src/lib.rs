@@ -35,5 +35,6 @@ pub mod runtime;
 pub mod search;
 pub mod serve;
 pub mod surrogate;
+pub mod telemetry;
 pub mod trainer;
 pub mod util;

@@ -38,6 +38,7 @@ use snac_pack::objectives::{ObjectiveContext, ObjectiveKind};
 use snac_pack::runtime::Runtime;
 use snac_pack::serve::{self, EngineConfig, ServeContext, ServeMetrics, ServeTuning, SurrogateEngine};
 use snac_pack::surrogate::{train_surrogate, SurrogateParams, SurrogatePredictor};
+use snac_pack::telemetry;
 use snac_pack::trainer::TrainConfig;
 use snac_pack::util::Json;
 
@@ -83,7 +84,8 @@ fn parse_cli() -> Result<Cli> {
              [--shards N] [--run-dir DIR] [--listen HOST:PORT] \
              [--connect HOST:PORT] [--token TOK] [--checkpoint-interval N] \
              [--port N] [--batch-deadline-ms N] [--pool-size N] \
-             [--queue-depth N] [--set key=value ...]\n\
+             [--queue-depth N] [--trace-out PATH] [--trace-ops N] \
+             [--set key=value ...]\n\
              --preset picks the base regardless of position; \
              --workers/--cache-path/--set overrides then apply left to right\n\
              --threads N runs the interpreter's dot-general kernels on N \
@@ -107,6 +109,14 @@ fn parse_cli() -> Result<Cli> {
              --checkpoint-interval N snapshots the search state every N \
              generations so a killed driver resumes mid-run with a \
              bit-identical trial database (0 = off)\n\
+             --trace-out PATH records structured spans across every layer \
+             (generations, trials, shards, surrogate flushes) and writes \
+             a Chrome-trace trace.json + JSONL flight log at exit; shard \
+             workers of a traced run stitch their spans into the same \
+             trace. Purely observational: the trial database is \
+             bit-identical with tracing on or off\n\
+             --trace-ops N additionally times every Nth interpreter plan \
+             step (0 = off; sampled so kernels stay fast)\n\
              serve exposes the trained surrogate as an HTTP estimation \
              service on 127.0.0.1:--port (0 = ephemeral), micro-batching \
              concurrent requests with a --batch-deadline-ms flush \
@@ -192,6 +202,12 @@ fn parse_cli() -> Result<Cli> {
             "--queue-depth" => preset
                 .set("queue_depth", value()?)
                 .context("--queue-depth expects a connection count (0 = auto)")?,
+            "--trace-out" => preset
+                .set("trace_out", value()?)
+                .context("--trace-out expects a file path")?,
+            "--trace-ops" => preset
+                .set("trace_ops", value()?)
+                .context("--trace-ops expects a sample rate (0 = off)")?,
             "--set" => {
                 let kv = value()?;
                 let (k, v) = kv
@@ -246,10 +262,16 @@ impl ShardFleet {
         let artifacts = artifacts
             .canonicalize()
             .unwrap_or_else(|_| artifacts.to_path_buf());
-        let manifest = Json::obj(vec![
+        let mut manifest_pairs = vec![
             ("preset", preset.to_json()),
             ("artifacts", Json::Str(artifacts.display().to_string())),
-        ]);
+        ];
+        // a traced driver stamps its trace ID so every worker's spans
+        // stitch into one logical run
+        if let Some(id) = telemetry::trace_id() {
+            manifest_pairs.push(("trace", Json::Str(id)));
+        }
+        let manifest = Json::obj(manifest_pairs);
 
         let (backend, join_args, medium) = if let Some(bind) = preset.listen.as_deref() {
             let minted;
@@ -447,6 +469,17 @@ fn worker_serve(
     // the in-process one
     xla::set_dot_threads(preset.search.threads);
     xla::set_verify_plans(preset.search.verify_plans);
+    // a traced run: adopt the driver's trace ID so this worker's spans
+    // (drained into each result publication) stitch into the driver's
+    // trace, and echo it on every shard request
+    if preset.trace_out.is_some() {
+        let id = telemetry::init(
+            manifest.get("trace").and_then(Json::as_str).map(str::to_string),
+        );
+        transport.set_trace(&id);
+        xla::set_op_trace(preset.trace_ops, Some(telemetry::xla_op_sink));
+        eprintln!("[worker {wid}] tracing under run {id}");
+    }
     let rt = Runtime::load(&artifacts)?;
     let space = SearchSpace::table1();
     let device = FpgaDevice::vu13p();
@@ -554,6 +587,17 @@ fn main() -> Result<()> {
     // worker_main)
     xla::set_dot_threads(cli.preset.search.threads);
     xla::set_verify_plans(cli.preset.search.verify_plans);
+    // driver-side tracing: mint the run's trace ID up front so a sharded
+    // fleet's manifest carries it. Workers adopt theirs from the manifest
+    // in worker_serve; serve is excluded (long-running, and /metrics
+    // already covers it).
+    if let (Some(path), "pipeline" | "search") =
+        (cli.preset.trace_out.as_deref(), cli.command.as_str())
+    {
+        let id = telemetry::init(None);
+        xla::set_op_trace(cli.preset.trace_ops, Some(telemetry::xla_op_sink));
+        eprintln!("[trace] run {id} -> {path}");
+    }
     match cli.command.as_str() {
         "worker" => {
             if let Some(addr) = cli.preset.connect.clone() {
@@ -832,6 +876,19 @@ fn main() -> Result<()> {
             }
         }
         other => bail!("unknown command `{other}`"),
+    }
+    if let (true, Some(path)) = (telemetry::enabled(), cli.preset.trace_out.as_deref()) {
+        let path = Path::new(path);
+        if let Some(parent) = path.parent().filter(|p| !p.as_os_str().is_empty()) {
+            let _ = std::fs::create_dir_all(parent);
+        }
+        match telemetry::export(path) {
+            Ok(summary) => {
+                eprintln!("[trace] wrote {} (+ .jsonl flight log)", path.display());
+                eprint!("{summary}");
+            }
+            Err(e) => eprintln!("[trace] export failed: {e}"),
+        }
     }
     Ok(())
 }

@@ -49,6 +49,9 @@ pub struct Request {
     pub keep_alive: bool,
     /// Token from an `Authorization: Bearer …` header, if any.
     pub bearer: Option<String>,
+    /// Trace ID from an `X-Snac-Trace` header, if any — cross-process
+    /// span propagation for the shard transport (`telemetry`).
+    pub trace: Option<String>,
 }
 
 /// Typed framing failures (carried inside `anyhow::Error`; downcast to
@@ -265,6 +268,7 @@ impl<R: Read> RequestReader<R> {
 
         let mut content_length: Option<usize> = None;
         let mut bearer: Option<String> = None;
+        let mut trace: Option<String> = None;
         loop {
             let header = match read_line_capped(&mut self.reader, &mut budget, "headers")? {
                 LineRead::Line(l) => l,
@@ -292,6 +296,8 @@ impl<R: Read> RequestReader<R> {
                         bearer = Some(token.trim().to_string());
                     }
                 }
+            } else if name.eq_ignore_ascii_case("x-snac-trace") && !value.is_empty() {
+                trace = Some(value.to_string());
             }
         }
 
@@ -314,6 +320,7 @@ impl<R: Read> RequestReader<R> {
             body: String::from_utf8(body).context("request body is not UTF-8")?,
             keep_alive,
             bearer,
+            trace,
         })
     }
 }
@@ -428,6 +435,7 @@ pub struct HttpClient {
     addr: String,
     timeout: Duration,
     bearer: Option<String>,
+    trace: Option<String>,
     one_shot: bool,
     conn: Option<BufReader<DeadlineStream>>,
 }
@@ -440,6 +448,7 @@ impl HttpClient {
             addr: addr.into(),
             timeout,
             bearer: None,
+            trace: None,
             one_shot: false,
             conn: None,
         }
@@ -449,6 +458,12 @@ impl HttpClient {
     pub fn bearer(mut self, token: impl Into<String>) -> Self {
         self.bearer = Some(token.into());
         self
+    }
+
+    /// Attach an `X-Snac-Trace` header to every request so the peer can
+    /// stitch this client's spans into one cross-process trace.
+    pub fn set_trace(&mut self, id: impl Into<String>) {
+        self.trace = Some(id.into());
     }
 
     /// The server address this client talks to.
@@ -522,10 +537,13 @@ impl HttpClient {
         conn.get_mut().end = t0 + deadline;
 
         let body = body.unwrap_or("");
-        let auth = match &self.bearer {
+        let mut auth = match &self.bearer {
             Some(token) => format!("Authorization: Bearer {token}\r\n"),
             None => String::new(),
         };
+        if let Some(id) = &self.trace {
+            auth.push_str(&format!("X-Snac-Trace: {id}\r\n"));
+        }
         let head = format!(
             "{method} {path} HTTP/1.1\r\nHost: {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n{auth}Connection: {}\r\n\r\n",
             self.addr,
@@ -647,6 +665,7 @@ pub fn request_with_timeout(
         addr: addr.to_string(),
         timeout,
         bearer: None,
+        trace: None,
         one_shot: true,
         conn: None,
     };
@@ -680,6 +699,12 @@ mod tests {
         let raw = b"POST /shard/claim HTTP/1.1\r\nAuthorization: bearer tok-123\r\n\r\n";
         let req = read_request(Cursor::new(raw.to_vec())).unwrap();
         assert_eq!(req.bearer.as_deref(), Some("tok-123"));
+        assert!(req.trace.is_none());
+
+        // trace IDs ride a dedicated header, case-insensitively
+        let raw = b"POST /shard/claim HTTP/1.1\r\nx-snac-trace: 1a2b-3c4d\r\n\r\n";
+        let req = read_request(Cursor::new(raw.to_vec())).unwrap();
+        assert_eq!(req.trace.as_deref(), Some("1a2b-3c4d"));
     }
 
     #[test]

@@ -281,7 +281,10 @@ impl<'a> SurrogateEngine<'a> {
             st.in_flight = std::mem::take(&mut st.pending);
             st.first_at = None;
             drop(st);
+            let mut span = crate::telemetry::span("flush", "serve");
+            span.arg("rows", crate::util::Json::Num(rows.len() as f64));
             let result = self.predictor.predict_batch(&rows);
+            drop(span);
             st = lock_unpoisoned(&self.state);
             st.in_flight.clear();
             self.flushes.fetch_add(1, Ordering::Relaxed);

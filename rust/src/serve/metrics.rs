@@ -1,114 +1,35 @@
-//! Serving observability: lock-free counters and latency histograms
-//! behind `GET /metrics`.
+//! Serving observability: the serve-side instrument set behind
+//! `GET /metrics`, built on the unified [`crate::telemetry::registry`].
 //!
-//! Everything here is a relaxed atomic — connection workers record into
-//! the histograms on the request path with no shared lock, and the
-//! `/metrics` endpoint renders a consistent-enough snapshot (each value
-//! is individually atomic; the report as a whole is not a transaction,
-//! which is the standard contract for scrape-style metrics).
+//! `ServeMetrics` owns a [`Registry`] instance and records through `Arc`
+//! handles — connection workers hit relaxed atomics on the request path
+//! with no shared lock, exactly as before the registry refactor, and the
+//! rendered `/metrics` document keeps its original schema. The registry
+//! itself can additionally be attached to the trace exporter
+//! ([`crate::telemetry::attach_registry`]), so a traced serving run's
+//! `trace.json` snapshots the same instruments `/metrics` serves.
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
 use std::time::Duration;
 
 use crate::serve::SurrogateEngine;
+use crate::telemetry::registry::{Counter, Gauge, GaugeGuard, Histogram, Registry};
 use crate::util::Json;
-
-/// Latency bucket upper bounds in microseconds; one overflow bucket is
-/// appended. Spans 50µs (memo hit on loopback) to 250ms (a cold flush
-/// behind a long batching deadline).
-const BUCKET_US: [u64; 12] =
-    [50, 100, 250, 500, 1_000, 2_500, 5_000, 10_000, 25_000, 50_000, 100_000, 250_000];
-
-/// One fixed-bucket latency histogram.
-pub struct Histogram {
-    counts: [AtomicU64; BUCKET_US.len() + 1],
-    sum_us: AtomicU64,
-}
-
-impl Histogram {
-    fn new() -> Self {
-        Histogram {
-            counts: std::array::from_fn(|_| AtomicU64::new(0)),
-            sum_us: AtomicU64::new(0),
-        }
-    }
-
-    /// Record one request latency.
-    pub fn observe(&self, elapsed: Duration) {
-        let us = u64::try_from(elapsed.as_micros()).unwrap_or(u64::MAX);
-        let idx = BUCKET_US.iter().position(|&b| us <= b).unwrap_or(BUCKET_US.len());
-        self.counts[idx].fetch_add(1, Ordering::Relaxed);
-        self.sum_us.fetch_add(us, Ordering::Relaxed);
-    }
-
-    /// Total observations.
-    pub fn count(&self) -> u64 {
-        self.counts.iter().map(|c| c.load(Ordering::Relaxed)).sum()
-    }
-
-    /// Mean latency in milliseconds (0 when empty).
-    pub fn mean_ms(&self) -> f64 {
-        let n = self.count();
-        if n == 0 {
-            return 0.0;
-        }
-        self.sum_us.load(Ordering::Relaxed) as f64 / n as f64 / 1_000.0
-    }
-
-    /// Conservative quantile in milliseconds: the upper bound of the
-    /// bucket holding the q-th observation (the overflow bucket reports
-    /// four times the last bound). 0 when empty.
-    pub fn quantile_ms(&self, q: f64) -> f64 {
-        let snapshot: Vec<u64> = self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect();
-        let total: u64 = snapshot.iter().sum();
-        if total == 0 {
-            return 0.0;
-        }
-        let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
-        let mut seen = 0u64;
-        for (i, &n) in snapshot.iter().enumerate() {
-            seen += n;
-            if seen >= rank {
-                let bound_us = BUCKET_US.get(i).copied().unwrap_or(BUCKET_US[BUCKET_US.len() - 1] * 4);
-                return bound_us as f64 / 1_000.0;
-            }
-        }
-        BUCKET_US[BUCKET_US.len() - 1] as f64 * 4.0 / 1_000.0
-    }
-
-    fn to_json(&self) -> Json {
-        Json::obj(vec![
-            ("count", Json::Num(self.count() as f64)),
-            ("mean_ms", Json::Num(self.mean_ms())),
-            ("p50_ms", Json::Num(self.quantile_ms(0.50))),
-            ("p99_ms", Json::Num(self.quantile_ms(0.99))),
-        ])
-    }
-}
 
 /// The endpoints tracked individually; everything else lands in `other`.
 const ENDPOINTS: [&str; 6] =
     ["/healthz", "/metrics", "/estimate", "/estimate/batch", "/shutdown", "other"];
 
-/// Decrements a gauge when dropped — pairs an increment with every exit
-/// path of a connection handler.
-pub struct GaugeGuard<'a>(&'a AtomicUsize);
-
-impl Drop for GaugeGuard<'_> {
-    fn drop(&mut self) {
-        self.0.fetch_sub(1, Ordering::Relaxed);
-    }
-}
-
 /// All serving metrics, shared by reference across connection workers.
 pub struct ServeMetrics {
-    endpoints: [Histogram; ENDPOINTS.len()],
+    registry: Arc<Registry>,
+    endpoints: [Arc<Histogram>; ENDPOINTS.len()],
     /// Connections currently being served by a worker.
-    in_flight: AtomicUsize,
+    in_flight: Arc<Gauge>,
     /// Connections accepted but not yet picked up by a worker.
-    queued: AtomicUsize,
-    accepted: AtomicU64,
-    shed: AtomicU64,
+    queued: Arc<Gauge>,
+    accepted: Arc<Counter>,
+    shed: Arc<Counter>,
 }
 
 impl Default for ServeMetrics {
@@ -118,15 +39,24 @@ impl Default for ServeMetrics {
 }
 
 impl ServeMetrics {
-    /// Fresh, all-zero metrics.
+    /// Fresh, all-zero metrics on a private registry instance.
     pub fn new() -> Self {
+        let registry = Arc::new(Registry::new());
+        let endpoints = std::array::from_fn(|i| registry.histogram(ENDPOINTS[i]));
         ServeMetrics {
-            endpoints: std::array::from_fn(|_| Histogram::new()),
-            in_flight: AtomicUsize::new(0),
-            queued: AtomicUsize::new(0),
-            accepted: AtomicU64::new(0),
-            shed: AtomicU64::new(0),
+            endpoints,
+            in_flight: registry.gauge("in_flight"),
+            queued: registry.gauge("queued"),
+            accepted: registry.counter("accepted"),
+            shed: registry.counter("shed"),
+            registry,
         }
+    }
+
+    /// The backing registry (attach it to the trace exporter so the
+    /// Chrome-trace metadata carries the same instrument snapshot).
+    pub fn registry(&self) -> &Arc<Registry> {
+        &self.registry
     }
 
     fn endpoint(&self, path: &str) -> &Histogram {
@@ -141,31 +71,30 @@ impl ServeMetrics {
 
     /// A connection entered the admission queue.
     pub fn enqueued(&self) {
-        self.accepted.fetch_add(1, Ordering::Relaxed);
-        self.queued.fetch_add(1, Ordering::Relaxed);
+        self.accepted.inc();
+        self.queued.inc();
     }
 
     /// A worker took a connection off the queue; the guard holds the
     /// in-flight gauge up until the connection finishes.
     pub fn serving(&self) -> GaugeGuard<'_> {
-        self.queued.fetch_sub(1, Ordering::Relaxed);
-        self.in_flight.fetch_add(1, Ordering::Relaxed);
-        GaugeGuard(&self.in_flight)
+        self.queued.dec();
+        self.in_flight.guard()
     }
 
     /// A connection was refused with a fast 503 (queue full).
     pub fn note_shed(&self) {
-        self.shed.fetch_add(1, Ordering::Relaxed);
+        self.shed.inc();
     }
 
     /// Load-shed count so far.
     pub fn shed_count(&self) -> u64 {
-        self.shed.load(Ordering::Relaxed)
+        self.shed.get()
     }
 
     /// Total requests observed across all endpoints.
     pub fn requests(&self) -> u64 {
-        self.endpoints.iter().map(Histogram::count).sum()
+        self.endpoints.iter().map(|h| h.count()).sum()
     }
 
     /// Render the full `/metrics` document.
@@ -185,9 +114,9 @@ impl ServeMetrics {
             (
                 "connections",
                 Json::obj(vec![
-                    ("accepted", Json::Num(self.accepted.load(Ordering::Relaxed) as f64)),
-                    ("in_flight", Json::Num(self.in_flight.load(Ordering::Relaxed) as f64)),
-                    ("queued", Json::Num(self.queued.load(Ordering::Relaxed) as f64)),
+                    ("accepted", Json::Num(self.accepted.get() as f64)),
+                    ("in_flight", Json::Num(self.in_flight.get() as f64)),
+                    ("queued", Json::Num(self.queued.get() as f64)),
                     ("shed", Json::Num(self.shed_count() as f64)),
                 ]),
             ),
@@ -224,35 +153,15 @@ mod tests {
     use super::*;
 
     #[test]
-    fn histogram_quantiles_are_conservative_bucket_bounds() {
-        let h = Histogram::new();
-        assert_eq!(h.quantile_ms(0.5), 0.0, "empty histogram reports zero");
-        for _ in 0..99 {
-            h.observe(Duration::from_micros(80)); // second bucket (≤100µs)
-        }
-        h.observe(Duration::from_millis(40)); // ≤50ms bucket
-        assert_eq!(h.count(), 100);
-        assert_eq!(h.quantile_ms(0.5), 0.1, "p50 lands in the ≤100µs bucket");
-        assert_eq!(h.quantile_ms(0.99), 0.1);
-        assert_eq!(h.quantile_ms(1.0), 50.0, "max lands in the ≤50ms bucket");
-        assert!(h.mean_ms() > 0.0);
-
-        // overflow bucket: far past the last bound
-        let h = Histogram::new();
-        h.observe(Duration::from_secs(2));
-        assert_eq!(h.quantile_ms(0.5), 1_000.0, "overflow reports 4x the last bound");
-    }
-
-    #[test]
     fn gauges_and_counters_track_connection_lifecycles() {
         let m = ServeMetrics::new();
         m.enqueued();
         m.enqueued();
         let guard = m.serving();
-        assert_eq!(m.queued.load(Ordering::Relaxed), 1);
-        assert_eq!(m.in_flight.load(Ordering::Relaxed), 1);
+        assert_eq!(m.queued.get(), 1);
+        assert_eq!(m.in_flight.get(), 1);
         drop(guard);
-        assert_eq!(m.in_flight.load(Ordering::Relaxed), 0);
+        assert_eq!(m.in_flight.get(), 0);
         m.note_shed();
         assert_eq!(m.shed_count(), 1);
         m.observe("/estimate", Duration::from_micros(300));
@@ -260,5 +169,30 @@ mod tests {
         assert_eq!(m.requests(), 2);
         assert_eq!(m.endpoint("/estimate").count(), 1);
         assert_eq!(m.endpoint("anything-unknown").count(), 1);
+    }
+
+    /// The registry view and the direct handles agree — `/metrics` and
+    /// the trace exporter read one source of truth.
+    #[test]
+    fn registry_snapshot_matches_the_handles() {
+        let m = ServeMetrics::new();
+        m.enqueued();
+        m.observe("/estimate", Duration::from_micros(80));
+        let snap = m.registry().to_json();
+        assert_eq!(
+            snap.get("counters").and_then(|c| c.get("accepted")).and_then(Json::as_usize),
+            Some(1)
+        );
+        assert_eq!(
+            snap.get("gauges").and_then(|g| g.get("queued")).and_then(Json::as_usize),
+            Some(1)
+        );
+        assert_eq!(
+            snap.get("histograms")
+                .and_then(|h| h.get("/estimate"))
+                .and_then(|e| e.get("count"))
+                .and_then(Json::as_usize),
+            Some(1)
+        );
     }
 }

@@ -705,6 +705,7 @@ mod tests {
                     body: body.to_string(),
                     keep_alive: true,
                     bearer: None,
+                    trace: None,
                 },
             )
         };
@@ -762,6 +763,7 @@ mod tests {
                 body: String::new(),
                 keep_alive: true,
                 bearer: None,
+                trace: None,
             },
         );
         assert_eq!(miss.status, 404);
@@ -773,6 +775,7 @@ mod tests {
                 body: String::new(),
                 keep_alive: true,
                 bearer: None,
+                trace: None,
             },
         );
         assert_eq!(wrong.status, 405);
@@ -784,6 +787,7 @@ mod tests {
                 body: String::new(),
                 keep_alive: true,
                 bearer: None,
+                trace: None,
             },
         );
         assert_eq!(wrong.status, 405);

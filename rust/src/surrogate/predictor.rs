@@ -182,6 +182,9 @@ impl<'a> SurrogatePredictor<'a> {
         // one padded buffer reused across chunks; the tail rows of a
         // short final chunk are re-zeroed so a previous chunk's rows
         // never leak into the padding
+        let mut span = crate::telemetry::span("predict_batch", "surrogate");
+        span.arg("rows", crate::util::Json::Num(feats.len() as f64));
+        span.arg("unique", crate::util::Json::Num(unique.len() as f64));
         let mut fresh: Vec<ResourceEstimate> = Vec::with_capacity(unique.len());
         let mut xbuf = vec![0.0f32; SUR_BATCH * SUR_FEATS];
         for chunk in unique.chunks(SUR_BATCH) {

@@ -1,0 +1,616 @@
+//! Workspace-wide structured tracing: spans, instant events, Chrome-trace
+//! export, and cross-process stitching.
+//!
+//! The tracer is global and deliberately boring: one relaxed atomic gates
+//! every instrumentation site, so a run without `--trace-out` pays a
+//! single load per span — no clock read, no allocation, no lock. When
+//! enabled, spans buffer in a `thread_local` vector and flush to a shared
+//! sink in batches, so the hot path (per-trial evaluation, per-op kernel
+//! timing) still takes no shared lock per record.
+//!
+//! Tracing is **observational only**: nothing downstream reads a span, so
+//! trial databases are bit-identical with telemetry off, on, or sampled
+//! (asserted by `rust/tests/telemetry.rs`).
+//!
+//! Cross-process story: the driver mints a trace ID (`init`), stamps it
+//! into the run manifest, and shard workers adopt it. Workers drain their
+//! spans into each result publication (`local_spans_json`) and echo the
+//! ID on every `/shard/*` request via the `X-Snac-Trace` header; the
+//! driver folds remote spans back in (`ingest_remote`), tagging each with
+//! the worker's trace ID and process, so `export` writes one coherent
+//! multi-process `trace.json` (plus a JSONL flight-recorder log).
+//!
+//! Metrics live next door in [`registry`]: instrument collections are
+//! instances (see `ServeMetrics`), but a process can `attach_registry`
+//! them here so the exporter snapshots the same numbers `GET /metrics`
+//! serves.
+
+pub mod registry;
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock, PoisonError, Weak};
+use std::time::{Instant, SystemTime, UNIX_EPOCH};
+
+use crate::util::Json;
+use registry::Registry;
+
+/// Per-thread buffer capacity before a batch flush to the shared sink.
+const FLUSH_EVERY: usize = 64;
+
+/// Hard cap on retained records; beyond it new records are counted as
+/// dropped rather than growing without bound (flight-recorder semantics).
+const SINK_CAP: usize = 1 << 20;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+static DROPPED: AtomicU64 = AtomicU64::new(0);
+static SINK: Mutex<Vec<SpanRecord>> = Mutex::new(Vec::new());
+static TRACE_ID: Mutex<Option<String>> = Mutex::new(None);
+#[allow(clippy::type_complexity)]
+static REGISTRIES: Mutex<Vec<(String, Weak<Registry>)>> = Mutex::new(Vec::new());
+
+/// Monotonic anchor paired with the wall-clock microseconds at the anchor,
+/// so every record gets a wall-aligned timestamp from a monotonic read
+/// (Chrome-trace timelines from different processes line up on the wall
+/// clock without any process ever stepping backwards).
+static EPOCH: OnceLock<(Instant, u64)> = OnceLock::new();
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+fn epoch() -> &'static (Instant, u64) {
+    EPOCH.get_or_init(|| {
+        let wall = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| u64::try_from(d.as_micros()).unwrap_or(u64::MAX))
+            .unwrap_or(0);
+        (Instant::now(), wall)
+    })
+}
+
+fn wall_us_at(at: Instant) -> u64 {
+    let &(anchor, wall) = epoch();
+    wall.saturating_add(
+        u64::try_from(at.saturating_duration_since(anchor).as_micros()).unwrap_or(u64::MAX),
+    )
+}
+
+/// One recorded span (`dur_us: Some`) or instant event (`dur_us: None`).
+#[derive(Debug, Clone)]
+pub struct SpanRecord {
+    pub name: String,
+    pub cat: String,
+    /// Wall-aligned start time in microseconds since the Unix epoch.
+    pub ts_us: u64,
+    pub dur_us: Option<u64>,
+    pub pid: u32,
+    pub tid: u64,
+    pub args: Vec<(String, Json)>,
+}
+
+struct ThreadBuf {
+    tid: u64,
+    buf: Vec<SpanRecord>,
+}
+
+impl ThreadBuf {
+    fn flush(&mut self) {
+        if !self.buf.is_empty() {
+            push_all(self.buf.drain(..));
+        }
+    }
+}
+
+impl Drop for ThreadBuf {
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
+thread_local! {
+    static THREAD: RefCell<ThreadBuf> = RefCell::new(ThreadBuf {
+        tid: NEXT_TID.fetch_add(1, Ordering::Relaxed),
+        buf: Vec::new(),
+    });
+}
+
+fn push_all<I: IntoIterator<Item = SpanRecord>>(records: I) {
+    let mut sink = lock(&SINK);
+    for r in records {
+        if sink.len() >= SINK_CAP {
+            DROPPED.fetch_add(1, Ordering::Relaxed);
+        } else {
+            sink.push(r);
+        }
+    }
+}
+
+fn record(r: SpanRecord) {
+    // `try_with` + `try_borrow_mut` keep this callable from thread
+    // destructors and from Drop impls running inside a record call;
+    // the fallback pushes straight to the sink (tid 0).
+    let mut slot = Some(r);
+    THREAD
+        .try_with(|cell| {
+            if let Ok(mut tb) = cell.try_borrow_mut() {
+                if let Some(mut r) = slot.take() {
+                    r.tid = tb.tid;
+                    tb.buf.push(r);
+                    if tb.buf.len() >= FLUSH_EVERY {
+                        tb.flush();
+                    }
+                }
+            }
+        })
+        .ok();
+    if let Some(r) = slot.take() {
+        push_all(std::iter::once(r));
+    }
+}
+
+/// Is tracing on? One relaxed load — the only cost every instrumentation
+/// site pays when telemetry is disabled.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Mint a fresh trace ID: process ID and wall-clock millis, both hex.
+pub fn mint_trace_id() -> String {
+    let millis = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| u64::try_from(d.as_millis()).unwrap_or(u64::MAX))
+        .unwrap_or(0);
+    format!("{:x}-{millis:x}", std::process::id())
+}
+
+/// Turn tracing on under `trace_id` (minting one when `None`) and return
+/// the active ID. Drivers mint; workers adopt the driver's ID from the
+/// run manifest so the stitched trace is one logical run.
+pub fn init(trace_id: Option<String>) -> String {
+    let id = trace_id.unwrap_or_else(mint_trace_id);
+    *lock(&TRACE_ID) = Some(id.clone());
+    epoch();
+    ENABLED.store(true, Ordering::Relaxed);
+    id
+}
+
+/// Turn tracing off and discard all buffered state (test isolation and
+/// end-of-run cleanup).
+pub fn disable() {
+    ENABLED.store(false, Ordering::Relaxed);
+    THREAD.try_with(|cell| {
+        if let Ok(mut tb) = cell.try_borrow_mut() {
+            tb.buf.clear();
+        }
+    })
+    .ok();
+    lock(&SINK).clear();
+    *lock(&TRACE_ID) = None;
+    lock(&REGISTRIES).clear();
+    DROPPED.store(0, Ordering::Relaxed);
+}
+
+/// The active trace ID, if tracing is on.
+pub fn trace_id() -> Option<String> {
+    lock(&TRACE_ID).clone()
+}
+
+/// RAII span: records name/category/duration when dropped. Inert (no
+/// clock, no allocation) when tracing is off.
+pub struct SpanGuard {
+    live: Option<LiveSpan>,
+}
+
+struct LiveSpan {
+    name: &'static str,
+    cat: &'static str,
+    start: Instant,
+    args: Vec<(String, Json)>,
+}
+
+impl SpanGuard {
+    /// Attach an argument to a live span (no-op when tracing is off).
+    pub fn arg(&mut self, key: &str, value: Json) {
+        if let Some(live) = self.live.as_mut() {
+            live.args.push((key.to_string(), value));
+        }
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some(live) = self.live.take() {
+            let dur = u64::try_from(live.start.elapsed().as_micros()).unwrap_or(u64::MAX);
+            record(SpanRecord {
+                name: live.name.to_string(),
+                cat: live.cat.to_string(),
+                ts_us: wall_us_at(live.start),
+                dur_us: Some(dur),
+                pid: std::process::id(),
+                tid: 0,
+                args: live.args,
+            });
+        }
+    }
+}
+
+/// Open a span; it closes (and records) when the guard drops.
+pub fn span(name: &'static str, cat: &'static str) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard { live: None };
+    }
+    SpanGuard {
+        live: Some(LiveSpan { name, cat, start: Instant::now(), args: Vec::new() }),
+    }
+}
+
+/// Open a span with arguments attached up front.
+pub fn span_args(name: &'static str, cat: &'static str, args: Vec<(&str, Json)>) -> SpanGuard {
+    let mut g = span(name, cat);
+    if let Some(live) = g.live.as_mut() {
+        live.args = args.into_iter().map(|(k, v)| (k.to_string(), v)).collect();
+    }
+    g
+}
+
+/// Record an instant event (a point on the timeline, no duration).
+pub fn event(name: &'static str, cat: &'static str, args: Vec<(&str, Json)>) {
+    if !enabled() {
+        return;
+    }
+    record(SpanRecord {
+        name: name.to_string(),
+        cat: cat.to_string(),
+        ts_us: wall_us_at(Instant::now()),
+        dur_us: None,
+        pid: std::process::id(),
+        tid: 0,
+        args: args.into_iter().map(|(k, v)| (k.to_string(), v)).collect(),
+    });
+}
+
+/// Sink for sampled per-op timings from the `xla` interpreter (matches
+/// `xla::OpSink`, which cannot depend on this crate). The op already
+/// finished, so the span is backdated by its duration.
+pub fn xla_op_sink(kind: &'static str, comp: &str, dur_us: u64) {
+    if !enabled() {
+        return;
+    }
+    record(SpanRecord {
+        name: kind.to_string(),
+        cat: "xla".to_string(),
+        ts_us: wall_us_at(Instant::now()).saturating_sub(dur_us),
+        dur_us: Some(dur_us),
+        pid: std::process::id(),
+        tid: 0,
+        args: vec![("comp".to_string(), Json::Str(comp.to_string()))],
+    });
+}
+
+/// Flush the calling thread's buffer to the shared sink.
+pub fn flush_thread() {
+    THREAD.try_with(|cell| {
+        if let Ok(mut tb) = cell.try_borrow_mut() {
+            tb.flush();
+        }
+    })
+    .ok();
+}
+
+/// Flush the calling thread and take every record accumulated so far.
+pub fn drain() -> Vec<SpanRecord> {
+    flush_thread();
+    std::mem::take(&mut *lock(&SINK))
+}
+
+/// Register a metrics registry for export under `name`. Held weakly:
+/// a dropped registry silently leaves the export.
+pub fn attach_registry(name: &str, reg: &Arc<Registry>) {
+    lock(&REGISTRIES).push((name.to_string(), Arc::downgrade(reg)));
+}
+
+fn registries_json() -> Json {
+    let regs = lock(&REGISTRIES);
+    let mut out: Vec<(&str, Json)> = Vec::new();
+    for (name, weak) in regs.iter() {
+        if let Some(reg) = weak.upgrade() {
+            out.push((name, reg.to_json()));
+        }
+    }
+    Json::obj(out)
+}
+
+fn span_to_json(r: &SpanRecord) -> Json {
+    let mut fields = vec![
+        ("name", Json::Str(r.name.clone())),
+        ("cat", Json::Str(r.cat.clone())),
+        ("ts", Json::Num(r.ts_us as f64)),
+        ("pid", Json::Num(f64::from(r.pid))),
+        ("tid", Json::Num(r.tid as f64)),
+    ];
+    match r.dur_us {
+        Some(d) => fields.push(("dur", Json::Num(d as f64))),
+        None => fields.push(("dur", Json::Null)),
+    }
+    let args: Vec<(&str, Json)> = r.args.iter().map(|(k, v)| (k.as_str(), v.clone())).collect();
+    fields.push(("args", Json::obj(args)));
+    Json::obj(fields)
+}
+
+fn span_from_json(j: &Json) -> Option<SpanRecord> {
+    let mut args = Vec::new();
+    if let Some(Json::Obj(map)) = j.get("args") {
+        for (k, v) in map {
+            args.push((k.clone(), v.clone()));
+        }
+    }
+    Some(SpanRecord {
+        name: j.get("name")?.as_str()?.to_string(),
+        cat: j.get("cat")?.as_str()?.to_string(),
+        ts_us: j.get("ts")?.as_f64()? as u64,
+        dur_us: j.get("dur").and_then(Json::as_f64).map(|d| d as u64),
+        pid: j.get("pid")?.as_f64()? as u32,
+        tid: j.get("tid")?.as_f64()? as u64,
+        args,
+    })
+}
+
+/// Drain this process's spans into the wire shape a worker attaches to a
+/// result publication: `{pid, trace, spans: [...]}`.
+pub fn local_spans_json() -> Json {
+    let records = drain();
+    Json::obj(vec![
+        ("pid", Json::Num(f64::from(std::process::id()))),
+        ("trace", trace_id().map(Json::Str).unwrap_or(Json::Null)),
+        ("spans", Json::Arr(records.iter().map(span_to_json).collect())),
+    ])
+}
+
+/// Fold a worker's `local_spans_json` document back into this process's
+/// sink, tagging every span with the worker's trace ID so the stitched
+/// export proves which run each remote span belonged to.
+pub fn ingest_remote(doc: &Json) {
+    if !enabled() {
+        return;
+    }
+    let trace = doc.get("trace").and_then(Json::as_str).map(str::to_string);
+    let spans = match doc.get("spans") {
+        Some(Json::Arr(items)) => items,
+        _ => return,
+    };
+    let mut out = Vec::with_capacity(spans.len());
+    for item in spans {
+        if let Some(mut r) = span_from_json(item) {
+            if let Some(t) = &trace {
+                r.args.push(("trace".to_string(), Json::Str(t.clone())));
+            }
+            out.push(r);
+        }
+    }
+    push_all(out);
+}
+
+/// Build a Chrome-trace (`chrome://tracing` / Perfetto) document from
+/// `records`. Pure so tests can validate the schema without touching
+/// global state.
+pub fn chrome_trace(records: &[SpanRecord], trace_id: &str) -> Json {
+    let self_pid = std::process::id();
+    let mut events: Vec<Json> = Vec::with_capacity(records.len() + 4);
+    let mut pids: Vec<u32> = Vec::new();
+    for r in records {
+        if !pids.contains(&r.pid) {
+            pids.push(r.pid);
+        }
+    }
+    pids.sort_unstable();
+    for pid in &pids {
+        let label = if *pid == self_pid {
+            "driver".to_string()
+        } else {
+            format!("worker {pid}")
+        };
+        events.push(Json::obj(vec![
+            ("name", Json::Str("process_name".to_string())),
+            ("ph", Json::Str("M".to_string())),
+            ("pid", Json::Num(f64::from(*pid))),
+            ("tid", Json::Num(0.0)),
+            ("args", Json::obj(vec![("name", Json::Str(label))])),
+        ]));
+    }
+    for r in records {
+        let args: Vec<(&str, Json)> = r.args.iter().map(|(k, v)| (k.as_str(), v.clone())).collect();
+        let mut fields = vec![
+            ("name", Json::Str(r.name.clone())),
+            ("cat", Json::Str(r.cat.clone())),
+            ("ts", Json::Num(r.ts_us as f64)),
+            ("pid", Json::Num(f64::from(r.pid))),
+            ("tid", Json::Num(r.tid as f64)),
+            ("args", Json::obj(args)),
+        ];
+        match r.dur_us {
+            Some(d) => {
+                fields.push(("ph", Json::Str("X".to_string())));
+                fields.push(("dur", Json::Num(d as f64)));
+            }
+            None => fields.push(("ph", Json::Str("i".to_string()))),
+        }
+        events.push(Json::obj(fields));
+    }
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::Str("ms".to_string())),
+        (
+            "metadata",
+            Json::obj(vec![
+                ("trace_id", Json::Str(trace_id.to_string())),
+                ("dropped", Json::Num(DROPPED.load(Ordering::Relaxed) as f64)),
+                ("registries", registries_json()),
+            ]),
+        ),
+    ])
+}
+
+/// Render the end-of-run summary: top time sinks grouped by
+/// category/name, with call counts and total/mean duration.
+pub fn summary(records: &[SpanRecord]) -> String {
+    let mut agg: BTreeMap<(String, String), (u64, u64)> = BTreeMap::new();
+    for r in records {
+        if let Some(d) = r.dur_us {
+            let entry = agg.entry((r.cat.clone(), r.name.clone())).or_insert((0, 0));
+            entry.0 += 1;
+            entry.1 += d;
+        }
+    }
+    let mut rows: Vec<((String, String), (u64, u64))> = agg.into_iter().collect();
+    rows.sort_by(|a, b| b.1 .1.cmp(&a.1 .1));
+    let mut out = String::from("trace summary (top time sinks)\n");
+    out.push_str(&format!(
+        "  {:<28} {:>8} {:>12} {:>10}\n",
+        "stage", "count", "total_ms", "mean_ms"
+    ));
+    for ((cat, name), (count, total_us)) in rows.iter().take(12) {
+        let total_ms = *total_us as f64 / 1_000.0;
+        let mean_ms = total_ms / *count as f64;
+        out.push_str(&format!(
+            "  {:<28} {count:>8} {total_ms:>12.3} {mean_ms:>10.3}\n",
+            format!("{cat}/{name}")
+        ));
+    }
+    if rows.is_empty() {
+        out.push_str("  (no spans recorded)\n");
+    }
+    out
+}
+
+/// Drain everything and write the Chrome-trace JSON to `path` plus a
+/// JSONL flight-recorder log beside it (`path` with a `.jsonl`
+/// extension). Returns the rendered summary table.
+pub fn export(path: &std::path::Path) -> std::io::Result<String> {
+    let records = drain();
+    let id = trace_id().unwrap_or_default();
+    let doc = chrome_trace(&records, &id);
+    std::fs::write(path, doc.to_string())?;
+    let mut jsonl = String::new();
+    for r in &records {
+        jsonl.push_str(&span_to_json(r).to_string());
+        jsonl.push('\n');
+    }
+    std::fs::write(path.with_extension("jsonl"), jsonl)?;
+    Ok(summary(&records))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The tracer is process-global; tests in this binary serialise on
+    /// this gate so enable/disable phases don't interleave.
+    fn gate() -> MutexGuard<'static, ()> {
+        static GATE: Mutex<()> = Mutex::new(());
+        GATE.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let _g = gate();
+        disable();
+        {
+            let mut s = span("noop", "test");
+            s.arg("k", Json::Num(1.0));
+        }
+        event("e", "test", vec![]);
+        xla_op_sink("dot", "main", 10);
+        assert!(drain().is_empty());
+        assert!(trace_id().is_none());
+    }
+
+    #[test]
+    fn spans_events_and_remote_ingest_round_trip() {
+        let _g = gate();
+        disable();
+        let id = init(Some("test-trace".to_string()));
+        assert_eq!(id, "test-trace");
+        assert_eq!(trace_id().as_deref(), Some("test-trace"));
+
+        {
+            let mut s = span("generation", "search");
+            s.arg("gen", Json::Num(0.0));
+        }
+        event("checkpoint", "search", vec![("trials", Json::Num(4.0))]);
+
+        // Worker wire round trip: drain → wire JSON → parse → ingest.
+        let wire = local_spans_json();
+        assert!(drain().is_empty(), "local_spans_json drains the sink");
+        let parsed = Json::parse(&wire.to_string()).unwrap();
+        ingest_remote(&parsed);
+        let records = drain();
+        assert_eq!(records.len(), 2);
+        let gen = records.iter().find(|r| r.name == "generation").unwrap();
+        assert!(gen.dur_us.is_some(), "span keeps its duration through the wire");
+        assert!(
+            gen.args.iter().any(|(k, v)| k == "trace" && v.as_str() == Some("test-trace")),
+            "ingested spans are tagged with the remote trace id"
+        );
+        let ev = records.iter().find(|r| r.name == "checkpoint").unwrap();
+        assert!(ev.dur_us.is_none(), "instant events stay instant");
+        disable();
+    }
+
+    #[test]
+    fn chrome_trace_document_is_well_formed() {
+        let _g = gate();
+        let records = vec![
+            SpanRecord {
+                name: "generation".to_string(),
+                cat: "search".to_string(),
+                ts_us: 1_000,
+                dur_us: Some(500),
+                pid: std::process::id(),
+                tid: 1,
+                args: vec![("gen".to_string(), Json::Num(0.0))],
+            },
+            SpanRecord {
+                name: "shard".to_string(),
+                cat: "eval".to_string(),
+                ts_us: 1_100,
+                dur_us: Some(200),
+                pid: std::process::id().wrapping_add(1),
+                tid: 1,
+                args: vec![],
+            },
+            SpanRecord {
+                name: "mark".to_string(),
+                cat: "search".to_string(),
+                ts_us: 1_600,
+                dur_us: None,
+                pid: std::process::id(),
+                tid: 1,
+                args: vec![],
+            },
+        ];
+        let doc = chrome_trace(&records, "abc-123");
+        let parsed = Json::parse(&doc.to_string()).unwrap();
+        assert_eq!(
+            parsed.get("metadata").and_then(|m| m.get("trace_id")).and_then(Json::as_str),
+            Some("abc-123")
+        );
+        let events = parsed.get("traceEvents").unwrap().items();
+        // two process_name metadata events (two pids) + three records
+        assert_eq!(events.len(), 5);
+        let phases: Vec<&str> =
+            events.iter().filter_map(|e| e.get("ph").and_then(Json::as_str)).collect();
+        assert_eq!(phases.iter().filter(|p| **p == "M").count(), 2);
+        assert_eq!(phases.iter().filter(|p| **p == "X").count(), 2);
+        assert_eq!(phases.iter().filter(|p| **p == "i").count(), 1);
+        for e in events {
+            assert!(e.get("pid").is_some() && e.get("tid").is_some());
+        }
+        let text = summary(&records);
+        assert!(text.contains("search/generation"));
+        assert!(text.contains("eval/shard"));
+    }
+}

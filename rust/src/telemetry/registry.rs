@@ -1,0 +1,309 @@
+//! The unified metrics registry: counters, gauges, and latency
+//! histograms shared by `GET /metrics` and the trace exporter.
+//!
+//! Instruments are relaxed atomics — recording on a hot path takes no
+//! shared lock — and a [`Registry`] is an *instance*, not a global:
+//! every [`crate::serve::ServeMetrics`] (and any test) owns its own, so
+//! parallel test binaries never bleed counts into each other. The trace
+//! exporter reads attached registries through
+//! [`crate::telemetry::attach_registry`], so a run's `trace.json` and
+//! its `/metrics` endpoint report the same source of truth.
+//!
+//! Quantile math lives in [`crate::util::stats`] (ceil-rank, shared
+//! with the bench harness) — a histogram here only owns its buckets.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::util::stats::bucket_quantile_index;
+use crate::util::Json;
+
+/// Latency bucket upper bounds in microseconds; one overflow bucket is
+/// appended. Spans 50µs (memo hit on loopback) to 250ms (a cold flush
+/// behind a long batching deadline).
+pub const BUCKET_US: [u64; 12] =
+    [50, 100, 250, 500, 1_000, 2_500, 5_000, 10_000, 25_000, 50_000, 100_000, 250_000];
+
+/// A monotonically increasing counter.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    /// Add one.
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Add `n`.
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// An instantaneous up/down gauge.
+#[derive(Default)]
+pub struct Gauge(AtomicUsize);
+
+impl Gauge {
+    /// Add one.
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Subtract one (saturating at the atomic's wraparound is fine — a
+    /// balanced inc/dec discipline is the caller's contract).
+    pub fn dec(&self) {
+        self.0.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> usize {
+        self.0.load(Ordering::Relaxed)
+    }
+
+    /// Increment now, decrement when the guard drops — pairs the
+    /// decrement with every exit path of a scope.
+    pub fn guard(&self) -> GaugeGuard<'_> {
+        self.inc();
+        GaugeGuard(self)
+    }
+}
+
+/// Decrements its gauge when dropped (see [`Gauge::guard`]).
+pub struct GaugeGuard<'a>(&'a Gauge);
+
+impl Drop for GaugeGuard<'_> {
+    fn drop(&mut self) {
+        self.0.dec();
+    }
+}
+
+/// One fixed-bucket latency histogram (lock-free observe path).
+pub struct Histogram {
+    counts: [AtomicU64; BUCKET_US.len() + 1],
+    sum_us: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    /// Fresh, all-zero histogram.
+    pub fn new() -> Self {
+        Histogram {
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum_us: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one latency observation.
+    pub fn observe(&self, elapsed: Duration) {
+        self.observe_us(u64::try_from(elapsed.as_micros()).unwrap_or(u64::MAX));
+    }
+
+    /// Record one latency observation in microseconds.
+    pub fn observe_us(&self, us: u64) {
+        let idx = BUCKET_US.iter().position(|&b| us <= b).unwrap_or(BUCKET_US.len());
+        self.counts[idx].fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    /// Total observations.
+    pub fn count(&self) -> u64 {
+        self.counts.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Mean latency in milliseconds (0 when empty).
+    pub fn mean_ms(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.sum_us.load(Ordering::Relaxed) as f64 / n as f64 / 1_000.0
+    }
+
+    /// Conservative quantile in milliseconds: the upper bound of the
+    /// bucket holding the q-th observation (the overflow bucket reports
+    /// four times the last bound). 0 when empty. Rank selection is the
+    /// shared [`bucket_quantile_index`] ceil-rank.
+    pub fn quantile_ms(&self, q: f64) -> f64 {
+        let snapshot: Vec<u64> = self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect();
+        match bucket_quantile_index(&snapshot, q) {
+            None => 0.0,
+            Some(i) => {
+                let bound_us =
+                    BUCKET_US.get(i).copied().unwrap_or(BUCKET_US[BUCKET_US.len() - 1] * 4);
+                bound_us as f64 / 1_000.0
+            }
+        }
+    }
+
+    /// The scrape-document shape (`count`/`mean_ms`/`p50_ms`/`p99_ms`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::Num(self.count() as f64)),
+            ("mean_ms", Json::Num(self.mean_ms())),
+            ("p50_ms", Json::Num(self.quantile_ms(0.50))),
+            ("p99_ms", Json::Num(self.quantile_ms(0.99))),
+        ])
+    }
+}
+
+enum Instrument {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+/// A named collection of instruments. Handles are `Arc`s: register once,
+/// then record through the handle with no registry lookup on hot paths.
+#[derive(Default)]
+pub struct Registry {
+    entries: Mutex<Vec<(String, Instrument)>>,
+}
+
+fn lock_entries(
+    m: &Mutex<Vec<(String, Instrument)>>,
+) -> std::sync::MutexGuard<'_, Vec<(String, Instrument)>> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+impl Registry {
+    /// Empty registry.
+    pub fn new() -> Self {
+        Registry::default()
+    }
+
+    /// Get-or-create the counter named `name`.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut entries = lock_entries(&self.entries);
+        for (n, inst) in entries.iter() {
+            if let (true, Instrument::Counter(c)) = (n == name, inst) {
+                return Arc::clone(c);
+            }
+        }
+        let c = Arc::new(Counter::default());
+        entries.push((name.to_string(), Instrument::Counter(Arc::clone(&c))));
+        c
+    }
+
+    /// Get-or-create the gauge named `name`.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut entries = lock_entries(&self.entries);
+        for (n, inst) in entries.iter() {
+            if let (true, Instrument::Gauge(g)) = (n == name, inst) {
+                return Arc::clone(g);
+            }
+        }
+        let g = Arc::new(Gauge::default());
+        entries.push((name.to_string(), Instrument::Gauge(Arc::clone(&g))));
+        g
+    }
+
+    /// Get-or-create the histogram named `name`.
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut entries = lock_entries(&self.entries);
+        for (n, inst) in entries.iter() {
+            if let (true, Instrument::Histogram(h)) = (n == name, inst) {
+                return Arc::clone(h);
+            }
+        }
+        let h = Arc::new(Histogram::new());
+        entries.push((name.to_string(), Instrument::Histogram(Arc::clone(&h))));
+        h
+    }
+
+    /// Snapshot every instrument, grouped by kind (one consistent-enough
+    /// scrape: each value is individually atomic, the document is not a
+    /// transaction — the standard contract for scrape-style metrics).
+    pub fn to_json(&self) -> Json {
+        let entries = lock_entries(&self.entries);
+        let mut counters: Vec<(&str, Json)> = Vec::new();
+        let mut gauges: Vec<(&str, Json)> = Vec::new();
+        let mut histograms: Vec<(&str, Json)> = Vec::new();
+        for (name, inst) in entries.iter() {
+            match inst {
+                Instrument::Counter(c) => counters.push((name, Json::Num(c.get() as f64))),
+                Instrument::Gauge(g) => gauges.push((name, Json::Num(g.get() as f64))),
+                Instrument::Histogram(h) => histograms.push((name, h.to_json())),
+            }
+        }
+        Json::obj(vec![
+            ("counters", Json::obj(counters)),
+            ("gauges", Json::obj(gauges)),
+            ("histograms", Json::obj(histograms)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_are_conservative_bucket_bounds() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile_ms(0.5), 0.0, "empty histogram reports zero");
+        for _ in 0..99 {
+            h.observe(Duration::from_micros(80)); // second bucket (≤100µs)
+        }
+        h.observe(Duration::from_millis(40)); // ≤50ms bucket
+        assert_eq!(h.count(), 100);
+        assert_eq!(h.quantile_ms(0.5), 0.1, "p50 lands in the ≤100µs bucket");
+        assert_eq!(h.quantile_ms(0.99), 0.1);
+        assert_eq!(h.quantile_ms(1.0), 50.0, "max lands in the ≤50ms bucket");
+        assert!(h.mean_ms() > 0.0);
+
+        // overflow bucket: far past the last bound
+        let h = Histogram::new();
+        h.observe(Duration::from_secs(2));
+        assert_eq!(h.quantile_ms(0.5), 1_000.0, "overflow reports 4x the last bound");
+    }
+
+    #[test]
+    fn registry_hands_out_stable_named_handles() {
+        let reg = Registry::new();
+        let a = reg.counter("requests");
+        let b = reg.counter("requests");
+        a.inc();
+        b.add(2);
+        assert_eq!(a.get(), 3, "same name → same counter");
+
+        let g = reg.gauge("in_flight");
+        {
+            let _guard = g.guard();
+            assert_eq!(reg.gauge("in_flight").get(), 1);
+        }
+        assert_eq!(g.get(), 0, "guard decrements on drop");
+
+        reg.histogram("latency").observe(Duration::from_micros(40));
+        let snap = reg.to_json();
+        assert_eq!(
+            snap.get("counters").and_then(|c| c.get("requests")).and_then(Json::as_usize),
+            Some(3)
+        );
+        assert_eq!(
+            snap.get("gauges").and_then(|g| g.get("in_flight")).and_then(Json::as_usize),
+            Some(0)
+        );
+        assert_eq!(
+            snap.get("histograms")
+                .and_then(|h| h.get("latency"))
+                .and_then(|l| l.get("count"))
+                .and_then(Json::as_usize),
+            Some(1)
+        );
+
+        // registries are instances: a second one starts from zero
+        assert_eq!(Registry::new().counter("requests").get(), 0);
+    }
+}

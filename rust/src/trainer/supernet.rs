@@ -6,7 +6,7 @@
 //! bias-correction schedule (β^t is computed host-side and passed in `hp`),
 //! and the BatchNorm running statistics used by `eval_step`.
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::data::{Dataset, Split};
 use crate::nn::{
@@ -180,21 +180,34 @@ impl<'a> Trainer<'a> {
                     ],
                 )?;
                 let mut it = out.into_iter();
+                let mut take = |what: &'static str| {
+                    it.next().with_context(|| {
+                        format!("train_step returned too few outputs (missing {what})")
+                    })
+                };
                 // 7 params, 7 m, 7 v — same field order as PARAM_SHAPES
                 for field in model.params.fields_mut() {
-                    *field = it.next().unwrap();
+                    *field = take("a parameter tensor")?;
                 }
                 for field in model.adam_m.fields_mut() {
-                    *field = it.next().unwrap();
+                    *field = take("an Adam first-moment tensor")?;
                 }
                 for field in model.adam_v.fields_mut() {
-                    *field = it.next().unwrap();
+                    *field = take("an Adam second-moment tensor")?;
                 }
-                let loss = it.next().unwrap()[0] as f64;
-                let correct = it.next().unwrap()[0] as f64;
+                let loss = f64::from(
+                    *take("the loss scalar")?
+                        .first()
+                        .context("train_step loss output is empty")?,
+                );
+                let correct = f64::from(
+                    *take("the correct-count scalar")?
+                        .first()
+                        .context("train_step correct-count output is empty")?,
+                );
                 // BN running statistics: EMA computed in-graph
-                model.run_mean = it.next().unwrap();
-                model.run_var = it.next().unwrap();
+                model.run_mean = take("the BN running means")?;
+                model.run_var = take("the BN running variances")?;
                 loss_sum += loss;
                 correct_sum += correct;
                 rows += batch.rows;
@@ -255,11 +268,11 @@ impl<'a> Trainer<'a> {
                     .enumerate()
                     .max_by(|a, b| a.1.total_cmp(b.1))
                     .map(|(i, _)| i)
-                    .unwrap();
+                    .context("eval_step returned an empty logits row")?;
                 let label = tile.y1h[r * OUT_DIM..(r + 1) * OUT_DIM]
                     .iter()
                     .position(|&v| v == 1.0)
-                    .unwrap();
+                    .context("eval tile row carries no one-hot label")?;
                 if pred == label {
                     correct += 1;
                 }

@@ -1,4 +1,46 @@
-//! Streaming mean/variance (Welford) used by metrics and data normalisation.
+//! Streaming mean/variance (Welford) used by metrics and data
+//! normalisation, plus the workspace's one quantile implementation.
+//!
+//! Every latency quantile in the tree — the serving histogram's bucketed
+//! p50/p99, the bench harness's sorted-sample percentiles — routes
+//! through the ceil-rank helpers below, so "p99" means the same
+//! (conservative, never-interpolating) thing everywhere.
+
+/// 1-based conservative rank of quantile `q` in a population of `total`
+/// observations: the smallest rank whose cumulative share is ≥ `q`
+/// (`⌈q·total⌉`, clamped into `1..=total`). Never interpolates — the
+/// reported quantile is always a value that was actually observed (or,
+/// for bucketed data, a bucket bound that bounds it from above).
+pub fn ceil_rank(total: u64, q: f64) -> u64 {
+    ((q * total as f64).ceil() as u64).clamp(1, total.max(1))
+}
+
+/// Quantile of an ascending-sorted sample via [`ceil_rank`]. Returns
+/// `NaN` on an empty sample.
+pub fn sorted_quantile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    sorted[(ceil_rank(sorted.len() as u64, q) - 1) as usize]
+}
+
+/// Index of the bucket containing the [`ceil_rank`] of `q` over a
+/// snapshot of bucket counts. `None` when the histogram is empty.
+pub fn bucket_quantile_index(counts: &[u64], q: f64) -> Option<usize> {
+    let total: u64 = counts.iter().sum();
+    if total == 0 || counts.is_empty() {
+        return None;
+    }
+    let rank = ceil_rank(total, q);
+    let mut seen = 0u64;
+    for (i, &c) in counts.iter().enumerate() {
+        seen += c;
+        if seen >= rank {
+            return Some(i);
+        }
+    }
+    Some(counts.len() - 1)
+}
 
 /// Online mean/variance accumulator.
 #[derive(Debug, Clone, Default)]
@@ -90,5 +132,49 @@ mod tests {
         let s = OnlineStats::new();
         assert_eq!(s.mean(), 0.0);
         assert_eq!(s.variance(), 0.0);
+    }
+
+    /// The bench call site: ceil-rank over an ascending sorted sample —
+    /// p50 of [1..=4] is the 2nd value, p99 the last, and a singleton
+    /// answers every quantile with itself.
+    #[test]
+    fn sorted_quantiles_are_conservative_sample_values() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(sorted_quantile(&xs, 0.5), 2.0);
+        assert_eq!(sorted_quantile(&xs, 0.75), 3.0);
+        assert_eq!(sorted_quantile(&xs, 0.99), 4.0);
+        // q=0 still clamps to rank 1 (the minimum), never index -1
+        assert_eq!(sorted_quantile(&xs, 0.0), 1.0);
+        assert_eq!(sorted_quantile(&[7.5], 0.5), 7.5);
+        assert!(sorted_quantile(&[], 0.5).is_nan());
+    }
+
+    /// The serving-histogram call site: the rank lands in the first
+    /// bucket whose cumulative count reaches it, and an empty histogram
+    /// has no quantile at all.
+    #[test]
+    fn bucket_quantiles_pick_the_covering_bucket() {
+        // counts: 5 in bucket 0, 4 in bucket 1, 1 in bucket 3
+        let counts = [5u64, 4, 0, 1];
+        // rank(p50) = 5 → bucket 0; rank(p90) = 9 → bucket 1;
+        // rank(p99) = 10 → bucket 3
+        assert_eq!(bucket_quantile_index(&counts, 0.5), Some(0));
+        assert_eq!(bucket_quantile_index(&counts, 0.9), Some(1));
+        assert_eq!(bucket_quantile_index(&counts, 0.99), Some(3));
+        assert_eq!(bucket_quantile_index(&[0u64; 4], 0.5), None);
+        assert_eq!(bucket_quantile_index(&[], 0.5), None);
+        // a single observation answers every quantile from its bucket
+        assert_eq!(bucket_quantile_index(&[0, 1, 0], 0.01), Some(1));
+        assert_eq!(bucket_quantile_index(&[0, 1, 0], 0.99), Some(1));
+    }
+
+    /// Both call sites agree on the rank itself.
+    #[test]
+    fn ceil_rank_clamps_into_the_population() {
+        assert_eq!(ceil_rank(100, 0.5), 50);
+        assert_eq!(ceil_rank(100, 0.99), 99);
+        assert_eq!(ceil_rank(100, 1.0), 100);
+        assert_eq!(ceil_rank(1, 0.0), 1);
+        assert_eq!(ceil_rank(0, 0.5), 1, "degenerate population still yields a rank");
     }
 }

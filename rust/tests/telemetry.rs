@@ -1,0 +1,323 @@
+//! Observability acceptance: tracing must be provably inert, the
+//! exported artifacts must be schema-valid, and a sharded TCP fleet
+//! must stitch one cross-process trace under the driver's trace ID.
+//!
+//! Subprocess-driven (the actual `snac-pack` binary) so every phase
+//! gets a fresh process-global tracer and the real CLI wiring —
+//! `--trace-out`/`--trace-ops` parsing, driver init, manifest trace
+//! stamping, worker adoption, end-of-run export — is what's under test.
+
+use std::io::{BufRead, BufReader, Read};
+use std::path::{Path, PathBuf};
+use std::process::{Command, Stdio};
+
+use snac_pack::coordinator::TrialRecord;
+use snac_pack::nn::SearchSpace;
+use snac_pack::util::Json;
+
+fn out_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join("snac_telemetry_itest")
+        .join(format!("{name}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// The micro search budget shared by every run in this file (quickstart
+/// preset, NAC objectives — seconds per run, and deterministic modulo
+/// wall-clock timings).
+fn micro_args(out: &Path) -> Vec<String> {
+    [
+        "search",
+        "--preset",
+        "quickstart",
+        "--set",
+        "trials=6",
+        "--set",
+        "population=3",
+        "--set",
+        "epochs=1",
+        "--set",
+        "n_train=640",
+        "--set",
+        "n_val=256",
+        "--set",
+        "n_test=256",
+        "--out",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .chain([out.display().to_string()])
+    .collect()
+}
+
+/// The trial database with live timings zeroed — everything else must
+/// be bit-identical whether or not the run was traced.
+fn canonical_trials(path: &Path, space: &SearchSpace) -> String {
+    let records = TrialRecord::load_all(path, space)
+        .unwrap_or_else(|e| panic!("loading {}: {e:#}", path.display()));
+    assert!(!records.is_empty(), "{} is empty", path.display());
+    let rows: Vec<Json> = records
+        .into_iter()
+        .map(|mut r| {
+            r.train_seconds = 0.0;
+            r.to_json()
+        })
+        .collect();
+    Json::Arr(rows).to_string()
+}
+
+/// Run the binary to completion; panic (with its stderr) on failure.
+fn run_search(args: &[String], extra: &[&str]) -> String {
+    let out = Command::new(env!("CARGO_BIN_EXE_snac-pack"))
+        .args(args)
+        .args(extra)
+        .output()
+        .expect("spawn snac-pack");
+    let log = String::from_utf8_lossy(&out.stderr).into_owned();
+    assert!(out.status.success(), "search failed:\n{log}");
+    log
+}
+
+/// Validate the Chrome-trace shape and return `(trace_id, events)`:
+/// every event carries `name`/`ph`/`pid`/`tid`, durations carry
+/// `ts` + `dur`, instants carry `ts`, and the metadata names the run.
+fn chrome_trace_events(doc: &Json) -> (String, Vec<Json>) {
+    assert_eq!(
+        doc.get("displayTimeUnit").and_then(Json::as_str),
+        Some("ms"),
+        "displayTimeUnit"
+    );
+    let id = doc
+        .get("metadata")
+        .and_then(|m| m.get("trace_id"))
+        .and_then(Json::as_str)
+        .expect("metadata.trace_id")
+        .to_string();
+    assert!(!id.is_empty(), "trace_id must be non-empty");
+    let events = doc.get("traceEvents").expect("traceEvents").items().to_vec();
+    assert!(!events.is_empty(), "traceEvents must be non-empty");
+    for ev in &events {
+        let ph = ev.get("ph").and_then(Json::as_str).expect("event ph");
+        assert!(ev.get("name").and_then(Json::as_str).is_some(), "event name");
+        assert!(ev.get("pid").and_then(Json::as_f64).is_some(), "event pid");
+        assert!(ev.get("tid").and_then(Json::as_f64).is_some(), "event tid");
+        match ph {
+            "X" => {
+                assert!(ev.get("ts").and_then(Json::as_f64).is_some(), "X event ts");
+                assert!(ev.get("dur").and_then(Json::as_f64).is_some(), "X event dur");
+            }
+            "i" => assert!(ev.get("ts").and_then(Json::as_f64).is_some(), "i event ts"),
+            "M" => {}
+            other => panic!("unexpected event phase {other:?}"),
+        }
+    }
+    (id, events)
+}
+
+/// Does any duration/instant event match `cat`?
+fn has_cat(events: &[Json], cat: &str) -> bool {
+    events
+        .iter()
+        .any(|ev| ev.get("cat").and_then(Json::as_str) == Some(cat))
+}
+
+#[test]
+fn tracing_is_inert_and_exports_valid_artifacts() {
+    let base = out_dir("inert");
+    let off = base.join("off");
+    let on = base.join("on");
+    let sampled = base.join("sampled");
+    let trace_on = base.join("trace_on.json");
+    let trace_ops = base.join("trace_ops.json");
+
+    let trace_on_s = trace_on.display().to_string();
+    let trace_ops_s = trace_ops.display().to_string();
+    run_search(&micro_args(&off), &[]);
+    run_search(&micro_args(&on), &["--trace-out", trace_on_s.as_str()]);
+    run_search(
+        &micro_args(&sampled),
+        &["--trace-out", trace_ops_s.as_str(), "--trace-ops", "3"],
+    );
+
+    // tracing is provably inert: identical trial databases (modulo live
+    // wall-clock timings) across off / on / per-op-sampled
+    let space = SearchSpace::table1();
+    let want = canonical_trials(&off.join("trials.json"), &space);
+    assert_eq!(
+        want,
+        canonical_trials(&on.join("trials.json"), &space),
+        "tracing must not change the trial database"
+    );
+    assert_eq!(
+        want,
+        canonical_trials(&sampled.join("trials.json"), &space),
+        "per-op sampling must not change the trial database"
+    );
+
+    // the Chrome-trace export is schema-valid and carries the
+    // instrumented stages
+    let doc = Json::parse(&std::fs::read_to_string(&trace_on).expect("trace.json written"))
+        .expect("trace.json parses");
+    let (_, events) = chrome_trace_events(&doc);
+    for cat in ["search", "eval"] {
+        assert!(has_cat(&events, cat), "traced search must record `{cat}` spans");
+    }
+    assert!(
+        !has_cat(&events, "xla"),
+        "per-op spans must be off unless --trace-ops is set"
+    );
+
+    // the JSONL flight log beside it: one parseable span per line
+    let jsonl =
+        std::fs::read_to_string(trace_on.with_extension("jsonl")).expect("flight log written");
+    let mut lines = 0usize;
+    for line in jsonl.lines() {
+        let span = Json::parse(line).expect("flight-log line parses");
+        for key in ["name", "cat", "ts", "pid", "tid"] {
+            assert!(span.get(key).is_some(), "flight-log span missing `{key}`: {line}");
+        }
+        lines += 1;
+    }
+    assert!(lines > 0, "flight log must be non-empty");
+
+    // --trace-ops 3 samples interpreter ops into the same timeline
+    let doc = Json::parse(&std::fs::read_to_string(&trace_ops).expect("sampled trace written"))
+        .expect("sampled trace parses");
+    let (_, events) = chrome_trace_events(&doc);
+    assert!(has_cat(&events, "xla"), "--trace-ops must record interpreter op spans");
+
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+#[test]
+fn tcp_fleet_stitches_one_cross_process_trace() {
+    let single = out_dir("stitch-single");
+    let fleet = out_dir("stitch-fleet");
+    let trace_path = fleet.join("trace.json");
+
+    // untraced single-process reference for the bit-identity check
+    run_search(&micro_args(&single), &[]);
+
+    // traced driver: TCP task server, zero local workers — every shard
+    // travels over the wire to the external fleet
+    let trace_path_s = trace_path.display().to_string();
+    let mut driver = Command::new(env!("CARGO_BIN_EXE_snac-pack"))
+        .args(micro_args(&fleet))
+        .args([
+            "--shards",
+            "2",
+            "--listen",
+            "127.0.0.1:0",
+            "--set",
+            "spawn_workers=0",
+            "--workers",
+            "2",
+            "--trace-out",
+            trace_path_s.as_str(),
+        ])
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawn traced TCP driver");
+
+    // scrape the run token and the bound address from the driver log
+    let mut reader = BufReader::new(driver.stderr.take().expect("driver stderr piped"));
+    let mut log = String::new();
+    let mut token = None;
+    let addr = loop {
+        let mut line = String::new();
+        let n = reader.read_line(&mut line).expect("reading driver log");
+        log.push_str(&line);
+        if n == 0 {
+            let _ = driver.kill();
+            panic!("driver exited before announcing its address:\n{log}");
+        }
+        if let Some(rest) = line.split("run token: ").nth(1) {
+            token = Some(rest.trim().to_string());
+        }
+        if let Some(rest) = line.split("tcp://").nth(1) {
+            break rest.trim().to_string();
+        }
+    };
+    let token = token.unwrap_or_else(|| panic!("driver never printed its run token:\n{log}"));
+
+    // two external worker processes adopt the driver's trace ID from the
+    // manifest and attach their span buffers to result publications
+    let workers: Vec<_> = (0..2)
+        .map(|_| {
+            Command::new(env!("CARGO_BIN_EXE_snac-pack"))
+                .args(["worker", "--connect", &addr, "--token", &token, "--workers", "1"])
+                .stderr(Stdio::piped())
+                .spawn()
+                .expect("spawn TCP worker")
+        })
+        .collect();
+
+    reader.read_to_string(&mut log).expect("draining driver log");
+    let status = driver.wait().expect("driver exit status");
+    assert!(status.success(), "traced TCP driver failed:\n{log}");
+    let mut adopted = 0usize;
+    for w in workers {
+        let out = w.wait_with_output().expect("worker exit status");
+        let wlog = String::from_utf8_lossy(&out.stderr);
+        assert!(out.status.success(), "worker failed:\n{wlog}");
+        if wlog.contains("tracing under run ") {
+            adopted += 1;
+        }
+    }
+    assert_eq!(adopted, 2, "both workers adopted the driver's trace:\n{log}");
+
+    // tracing changes nothing about the result: bit-identical trial
+    // database (timings excluded) vs the untraced single-process run
+    let space = SearchSpace::table1();
+    assert_eq!(
+        canonical_trials(&single.join("trials.json"), &space),
+        canonical_trials(&fleet.join("trials.json"), &space),
+        "traced TCP-dispatched trial database must be bit-identical (timings excluded)"
+    );
+
+    // one stitched trace: the driver's export contains spans from other
+    // process IDs, and every remote span is tagged with the driver's
+    // trace ID
+    let doc = Json::parse(&std::fs::read_to_string(&trace_path).expect("stitched trace written"))
+        .expect("stitched trace parses");
+    let (trace_id, events) = chrome_trace_events(&doc);
+    let driver_pid = events
+        .iter()
+        .find(|ev| {
+            ev.get("ph").and_then(Json::as_str) == Some("M")
+                && ev.get("args").and_then(|a| a.get("name")).and_then(Json::as_str)
+                    == Some("driver")
+        })
+        .and_then(|ev| ev.get("pid"))
+        .and_then(Json::as_f64)
+        .expect("driver process_name metadata");
+    let remote: Vec<&Json> = events
+        .iter()
+        .filter(|ev| {
+            ev.get("ph").and_then(Json::as_str) == Some("X")
+                && ev.get("pid").and_then(Json::as_f64) != Some(driver_pid)
+        })
+        .collect();
+    assert!(
+        !remote.is_empty(),
+        "stitched trace must contain worker-process spans:\n{log}"
+    );
+    for ev in &remote {
+        assert_eq!(
+            ev.get("args").and_then(|a| a.get("trace")).and_then(Json::as_str),
+            Some(trace_id.as_str()),
+            "remote span must carry the driver's trace ID: {ev:?}"
+        );
+    }
+    assert!(
+        remote
+            .iter()
+            .any(|ev| ev.get("name").and_then(Json::as_str) == Some("shard")),
+        "worker shard spans must appear in the stitched trace"
+    );
+
+    for dir in [&single, &fleet] {
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

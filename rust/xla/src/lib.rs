@@ -68,6 +68,37 @@ pub fn set_reference_mode(on: bool) {
     FORCE_REFERENCE.store(on, Ordering::Relaxed);
 }
 
+/// Sink receiving sampled per-op timings from planned execution:
+/// `(step kind, computation name, duration in µs)`. A plain `fn` pointer
+/// so the host crate's tracer can plug in without this crate depending
+/// on it.
+pub type OpSink = fn(&'static str, &str, u64);
+
+/// Per-op sampling rate: record every Nth executed plan step. 0 = off.
+static OP_SAMPLE: AtomicU64 = AtomicU64::new(0);
+static OP_SINK: Mutex<Option<OpSink>> = Mutex::new(None);
+
+/// Configure sampled per-op timing: every `sample`-th executed plan step
+/// is timed and reported to `sink`. `sample == 0` (or `sink == None`)
+/// turns it off — the default, so kernels pay one relaxed load per
+/// execution, not per step. Timing is observational only: step results
+/// are bit-identical at every setting.
+pub fn set_op_trace(sample: u64, sink: Option<OpSink>) {
+    *OP_SINK.lock().unwrap_or_else(|e| e.into_inner()) = if sample == 0 { None } else { sink };
+    OP_SAMPLE.store(if sink.is_none() { 0 } else { sample }, Ordering::Relaxed);
+}
+
+/// The active (sample rate, sink) pair, if per-op tracing is on. Loaded
+/// once per plan execution, not per step.
+pub(crate) fn op_trace_config() -> Option<(u64, OpSink)> {
+    if OP_SAMPLE.load(Ordering::Relaxed) == 0 {
+        return None;
+    }
+    let sample = OP_SAMPLE.load(Ordering::Relaxed);
+    let sink = *OP_SINK.lock().unwrap_or_else(|e| e.into_inner());
+    sink.filter(|_| sample > 0).map(|s| (sample, s))
+}
+
 /// Whether `execute_b` currently uses the reference evaluator.
 pub fn reference_mode() -> bool {
     FORCE_REFERENCE.load(Ordering::Relaxed)

@@ -22,6 +22,7 @@
 //! `tests/differential.rs` — including the dot-general accumulation order
 //! at every `threads` setting.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use crate::interp::{self, ArrayValue, Value};
@@ -201,8 +202,16 @@ impl ExecPlan {
                 }
             }
         }
+        // Loaded once per execution: sampling off costs one relaxed load
+        // per `execute`, not per step.
+        let trace = crate::op_trace_config();
         let mut slots: Vec<Option<Value>> = vec![None; comp.steps.len()];
         for (idx, step) in comp.steps.iter().enumerate() {
+            let timed = match trace {
+                Some((sample, _)) => OP_COUNTER.fetch_add(1, Ordering::Relaxed) % sample == 0,
+                None => false,
+            };
+            let start = timed.then(std::time::Instant::now);
             let value = self
                 .run_step(step, &slots, args, arena)
                 .map_err(|e| {
@@ -211,6 +220,10 @@ impl ExecPlan {
                         step.name, comp.name
                     ))
                 })?;
+            if let (Some(start), Some((_, sink))) = (start, trace) {
+                let dur = u64::try_from(start.elapsed().as_micros()).unwrap_or(u64::MAX);
+                sink(step.kind.label(), &comp.name, dur);
+            }
             slots[idx] = Some(value);
             for &dead in &comp.free_after[idx] {
                 if let Some(v) = slots[dead].take() {
@@ -430,6 +443,11 @@ impl ExecPlan {
     }
 }
 
+/// Process-wide executed-step counter driving `every Nth step` sampling
+/// (see [`crate::set_op_trace`]): a per-execution counter would always
+/// sample the same leading steps of every short module.
+static OP_COUNTER: AtomicU64 = AtomicU64::new(0);
+
 fn get<'a>(slots: &'a [Option<Value>], idx: usize) -> Result<&'a Value> {
     slots
         .get(idx)
@@ -482,6 +500,29 @@ fn recycle_value(arena: &mut Arena, value: Value) {
 }
 
 impl StepKind {
+    /// Stable label for sampled per-op trace spans.
+    pub(crate) fn label(&self) -> &'static str {
+        match self {
+            StepKind::Parameter(_) => "parameter",
+            StepKind::Constant(_) => "constant",
+            StepKind::Unary { .. } => "unary",
+            StepKind::Binary { .. } => "binary",
+            StepKind::Compare { .. } => "compare",
+            StepKind::Select { .. } => "select",
+            StepKind::Fill { .. } => "fill",
+            StepKind::Gather { .. } => "gather",
+            StepKind::Alias { .. } => "alias",
+            StepKind::ConvertInt { .. } => "convert_int",
+            StepKind::ConvertPred { .. } => "convert_pred",
+            StepKind::Concat { .. } => "concat",
+            StepKind::Iota { .. } => "iota",
+            StepKind::Dot { .. } => "dot",
+            StepKind::Reduce { .. } => "reduce",
+            StepKind::MakeTuple(_) => "tuple",
+            StepKind::Gte { .. } => "gte",
+        }
+    }
+
     /// Slot indices this planned step reads at execution time, in
     /// evaluation order. This is the step-level mirror of [`op_operands`]
     /// and is what the verifier's liveness/dataflow checks are defined
